@@ -1,0 +1,12 @@
+// Verify the Rust synth-clip generator + PJRT runtime reproduce the JAX
+// build path's golden logit (artifact/runtime skew guard).
+fn main() -> anyhow::Result<()> {
+    let rt = evhc::runtime::ModelRuntime::load("artifacts", 1)?;
+    let err = rt.verify_golden()?;
+    println!("golden OK (|Δ|={err:.2e}); params={} classes={}",
+             rt.entry.param_count, rt.entry.n_classes);
+    let logits = rt.infer_file(7)?;
+    let top = evhc::runtime::ModelRuntime::top_k(&logits, 3);
+    println!("file 7 top-3: {top:?}");
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Perf probe: wall-clock of the full-scale DES replay and the figure
+//! exporters — the measurements behind EXPERIMENTS.md §Perf (L3).
+//!
+//!     cargo run --release --example perf_probe
+
+use evhc::cluster::{HybridCluster, RunConfig};
+
+fn main() {
+    let mut cfg = RunConfig::paper_usecase(1.0, 42);
+    cfg.inference_every = 0;
+    let t0 = std::time::Instant::now();
+    let report = HybridCluster::new(cfg).unwrap().run().unwrap();
+    let run_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = std::time::Instant::now();
+    let f10 = report.recorder.fig10_usage(120.0, report.makespan);
+    let fig10_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let t2 = std::time::Instant::now();
+    let f11 = report.recorder.fig11_states(120.0, report.makespan);
+    let fig11_ms = t2.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "run={run_ms:.1}ms ({:.0}x real time) fig10={fig10_ms:.1}ms \
+         ({} rows) fig11={fig11_ms:.1}ms ({} rows)",
+        report.makespan.0 / (run_ms / 1e3),
+        f10.len(),
+        f11.len()
+    );
+}

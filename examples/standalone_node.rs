@@ -1,0 +1,68 @@
+//! Stand-alone nodes (paper §3.5.4): joining machines that live in
+//! networks the vRouter cannot take over — a user's workstation and a
+//! node in a cloud without private-network support — directly into the
+//! deployment VPN.
+//!
+//!     cargo run --release --example standalone_node
+
+use evhc::cloudsim::SiteSpec;
+use evhc::netsim::{Cipher, LinkSpec, Network};
+use evhc::sim::SimTime;
+use evhc::vrouter::{Overlay, Role};
+
+fn main() -> anyhow::Result<()> {
+    evhc::util::logging::init(1);
+
+    let mut net = Network::new();
+    let cesnet = net.add_location("cesnet");
+    let aws = net.add_location("aws");
+    let home = net.add_location("home-isp");
+    let legacy = net.add_location("legacy-cloud");
+    net.set_link(cesnet, aws, LinkSpec::transatlantic());
+    net.set_link(cesnet, home,
+                 LinkSpec { latency_s: 0.012, bandwidth_bps: 1.25e7 });
+    net.set_link(cesnet, legacy, LinkSpec::wan());
+
+    // A site whose cloud will NOT let users create private networks —
+    // the §3.5.4 condition that forces stand-alone mode.
+    let mut spec = SiteSpec::opennebula("legacy-cloud");
+    spec.supports_private_networks = false;
+    let mut site = evhc::cloudsim::CloudSite::new(spec, 3, legacy, 9);
+    let err = site.create_network("dep-net").unwrap_err();
+    println!("legacy-cloud refuses private networks: {err}");
+
+    // Normal star with the CP at CESNET's front-end.
+    let mut ov = Overlay::new(Cipher::Aes128Gcm);
+    ov.add_central_point("front-end", cesnet, 0x0A00_0000, SimTime(0.0))?;
+    ov.add_site_router("vr-aws", aws, 0x0A01_0000, SimTime(1.0))?;
+
+    // 1. The user's workstation joins from home.
+    let secs = ov.add_standalone("laptop", home, SimTime(2.0))?;
+    println!("laptop joined the VPN in {secs:.1}s (client runs on the \
+              node itself)");
+
+    // 2. A worker in the legacy cloud joins as a stand-alone node too.
+    let secs = ov.add_standalone("legacy-wn", legacy, SimTime(3.0))?;
+    println!("legacy-wn joined the VPN in {secs:.1}s\n");
+
+    // Full visibility across the deployment, as the paper requires.
+    for (a, b) in [("laptop", "front-end"), ("laptop", "vr-aws"),
+                   ("legacy-wn", "vr-aws"), ("laptop", "legacy-wn")] {
+        let path = ov.element_path(a, b).unwrap();
+        let lat = ov.latency(&net, a, b).unwrap();
+        println!("{a:>10} → {b:<10}: {:.1} ms via {path:?}", lat * 1e3);
+        assert!(ov.is_connected(a, b));
+    }
+
+    // Stand-alone nodes own no subnet — the CP routes their /32 only.
+    assert_eq!(ov.element("laptop").unwrap().role, Role::Standalone);
+    assert_eq!(ov.element("laptop").unwrap().subnet_base, None);
+
+    // The trade-off from §3.5.4: the orchestration layer had to install
+    // the VPN client on the node itself (no "black-box" images), which
+    // the CA records as a directly-issued client certificate.
+    assert!(ov.ca.verify("laptop"));
+    println!("\nCA has {} live identities (CP + site router + 2 \
+              stand-alone clients)", ov.ca.issued_count());
+    Ok(())
+}

@@ -1,0 +1,104 @@
+"""AOT export: lower the L2 model to HLO *text* for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Parameters are baked into the lowered module as constants (the model is
+"pre-trained"; see model.PARAM_SEED), so the Rust side passes only the
+spectrogram batch and receives logits.
+
+Usage:  python -m compile.aot --outdir ../artifacts [--batches 1,8]
+
+Outputs (per batch size B):
+    artifacts/audio_classifier_b{B}.hlo.txt
+    artifacts/MANIFEST.txt       one line per artifact:
+        name path batch n_frames n_bins n_classes param_count golden0
+where golden0 is logits[0,0] for synth_clip(0) — the Rust integration test
+checks it to guard against artifact/runtime skew.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is load-bearing: the default elides folded
+    # weight tensors as `constant({...})`, which parses back as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_classifier(batch: int, params=None):
+    """jit-lower forward() for a fixed batch, params folded as constants."""
+    params = params or model.init_params()
+
+    def fwd(spec):
+        return (model.forward(params, spec),)
+
+    spec = jax.ShapeDtypeStruct((batch, model.N_FRAMES, model.N_BINS),
+                                jnp.float32)
+    return jax.jit(fwd).lower(spec)
+
+
+def export(outdir: str, batches: list[int]) -> list[dict]:
+    os.makedirs(outdir, exist_ok=True)
+    params = model.init_params()
+    entries = []
+    for b in batches:
+        lowered = lower_classifier(b, params)
+        text = to_hlo_text(lowered)
+        name = f"audio_classifier_b{b}"
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        # Golden value so Rust can verify it is running the same network.
+        clip = jnp.asarray(model.synth_clip(0, batch=b))
+        golden = float(model.forward(params, clip)[0, 0])
+        entries.append({
+            "name": name,
+            "path": os.path.basename(path),
+            "batch": b,
+            "n_frames": model.N_FRAMES,
+            "n_bins": model.N_BINS,
+            "n_classes": model.N_CLASSES,
+            "param_count": model.param_count(params),
+            "golden0": golden,
+        })
+        print(f"wrote {path} ({len(text)} chars), golden0={golden:.6f}")
+    manifest = os.path.join(outdir, "MANIFEST.txt")
+    with open(manifest, "w") as f:
+        for e in entries:
+            f.write(
+                f"{e['name']} {e['path']} {e['batch']} {e['n_frames']} "
+                f"{e['n_bins']} {e['n_classes']} {e['param_count']} "
+                f"{e['golden0']:.9e}\n")
+    print(f"wrote {manifest}")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--batches", default="1,8",
+                    help="comma-separated batch sizes to export")
+    args = ap.parse_args()
+    batches = [int(s) for s in args.batches.split(",") if s]
+    export(args.outdir, batches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (interpret=True) + their pure-jnp oracles."""
+
+from .matmul import (  # noqa: F401
+    ACTIVATIONS,
+    matmul_bias_act,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)

@@ -1,0 +1,185 @@
+"""L1 Pallas kernel: tiled GEMM with fused epilogue (bias + activation).
+
+This is the compute hot-spot of the audio-classifier model (every conv is
+lowered to an im2col GEMM, and the mel frontend and dense head are GEMMs
+too), written as a Pallas kernel so the whole model's FLOPs flow through
+one well-tiled primitive.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * the grid walks (M/bm, N/bn, K/bk); each (i, j) output tile lives in
+    VMEM for the whole K loop (grid revisiting semantics), accumulating
+    partial products in f32,
+  * block sizes default to 128 — MXU-systolic-array aligned,
+  * bias add + activation are fused into the epilogue on the *last* K step
+    so the activation never round-trips to HBM.
+
+CPU note: ``interpret=True`` is mandatory here — real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Interpret mode
+lowers to plain HLO, which is exactly what the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Epilogues available to callers. Kept as a dict of jnp-level functions so
+# the same table drives both the kernel and the pure-jnp oracle in ref.py.
+ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    # log-compression epilogue used by the mel frontend: log(max(x,0) + eps)
+    "log": lambda x: jnp.log(jnp.maximum(x, 0.0) + 1e-6),
+}
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str, n_k: int):
+    """One (bm, bn) output tile at one (i, j, k) grid step.
+
+    The output tile is revisited across the K grid dimension, so it acts as
+    the f32 accumulator; bias + activation are applied in place on the last
+    K step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped partial product, accumulated in f32 regardless of the
+    # input dtype (bf16 inputs still accumulate exactly).
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[...] = ACTIVATIONS[activation](acc)
+
+
+def _pad_to(a: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bm", "bn", "bk", "out_dtype"))
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    activation: str = "none",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=None,
+) -> jax.Array:
+    """Compute ``act(x @ w + b)`` with a tiled Pallas kernel.
+
+    Args:
+      x: (M, K) input.
+      w: (K, N) weights.
+      b: optional (N,) bias; zeros when omitted.
+      activation: one of ``ACTIVATIONS`` keys.
+      bm/bn/bk: tile sizes; inputs are zero-padded up to tile multiples and
+        the result is sliced back, so arbitrary shapes are accepted.
+      out_dtype: result dtype (defaults to x.dtype).
+
+    Returns:
+      (M, N) array equal to ``ACTIVATIONS[activation](x @ w + b)``.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(
+            f"matmul_bias_act expects 2-D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+
+    m, k = x.shape
+    _, n = w.shape
+    out_dtype = out_dtype or x.dtype
+    if b is None:
+        b = jnp.zeros((n,), dtype=jnp.float32)
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+
+    # Clamp tiles to the (padded) problem so small layers do not pay for
+    # full 128^2 tiles of zeros. For tall GEMMs (im2col of batched conv
+    # layers) grow the M tile: each grid step is a sequential while-loop
+    # iteration in the interpret-mode HLO (and a core dispatch on TPU), so
+    # fewer/larger steps amortize the per-step overhead. 512x128 f32
+    # tiles keep the working set < 1 MiB of VMEM (see
+    # vmem_footprint_bytes), well inside the double-buffering budget.
+    if bm == 128:
+        if m >= 32768:
+            bm = 2048
+        elif m >= 8192:
+            bm = 1024
+        elif m >= 2048:
+            bm = 512
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 128))
+    bk = min(bk, _round_up(k, 128))
+
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w, kp, np_)
+    bp = jnp.pad(b.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
+
+    n_k = kp // bk
+    grid = (mp // bm, np_ // bn, n_k)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, activation=activation, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+
+    return out[:m, :n].astype(out_dtype)
+
+
+def vmem_footprint_bytes(bm: int = 128, bn: int = 128, bk: int = 128,
+                         dtype_bytes: int = 4) -> int:
+    """Analytic VMEM working set for one grid step (see DESIGN §Perf)."""
+    x_tile = bm * bk * dtype_bytes
+    w_tile = bk * bn * dtype_bytes
+    o_tile = bm * bn * 4  # f32 accumulator tile (doubles as the output)
+    bias = bn * 4
+    return x_tile + w_tile + o_tile + bias
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, bm: int = 128,
+                             bn: int = 128, bk: int = 128) -> float:
+    """Fraction of MXU issue slots doing useful work (padding overhead).
+
+    The kernel pads every dim to its tile multiple; utilization is the ratio
+    of real FLOPs to FLOPs issued over the padded problem. Mirrors the
+    tile clamping done by matmul_bias_act.
+    """
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 128))
+    bk = min(bk, _round_up(k, 128))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    return (m * k * n) / float(mp * kp * np_)

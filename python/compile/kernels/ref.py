@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest (and the hypothesis sweep)
+asserts that every kernel matches its oracle to tight tolerances across
+shapes and dtypes. Nothing here is ever exported or run from Rust.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import ACTIVATIONS
+
+
+def matmul_bias_act_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    activation: str = "none",
+    out_dtype=None,
+) -> jax.Array:
+    """Reference for kernels.matmul.matmul_bias_act (f32 accumulation)."""
+    out_dtype = out_dtype or x.dtype
+    acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if b is not None:
+        acc = acc + b.astype(jnp.float32)
+    return ACTIVATIONS[activation](acc).astype(out_dtype)

@@ -1,0 +1,246 @@
+"""L2: JAX audio-classifier forward pass, built on the L1 Pallas GEMM.
+
+The paper's workload is the DEEP audio classifier (a TensorFlow model
+pre-trained on Google's AudioSet, 527 classes) run once per UrbanSound8K
+WAV file. We cannot ship that model, so we implement an equivalent
+AudioSet-style CNN from scratch:
+
+    power spectrogram (T=96 frames x F=257 bins)
+      -> log-mel frontend      (GEMM vs a precomputed mel filterbank, log
+                                epilogue fused in the kernel)
+      -> 3x [conv3x3 -> ReLU -> maxpool2x2]   (convs as im2col GEMMs)
+      -> global average pool
+      -> dense 1024 ReLU -> dense 527 logits  (AudioSet class count)
+
+Every FLOP-heavy op routes through ``kernels.matmul_bias_act`` so the
+whole network exercises the L1 kernel; the AOT export in aot.py lowers
+this exact function (with parameters baked in as constants) to the HLO
+text the Rust runtime serves.
+
+"Pre-training" is simulated: parameters are drawn from a fixed-seed
+initializer, so the classifier is deterministic across the build and the
+Rust side can golden-test logits.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import matmul_bias_act
+
+# --- Model geometry (AudioSet-style, scaled for a t2.medium-class CPU) ---
+N_FRAMES = 96        # spectrogram frames per clip (~1 s at 10 ms hop)
+N_BINS = 257         # |rfft| bins for a 512-point FFT
+N_MELS = 64          # mel bands
+N_CLASSES = 527      # AudioSet label space (paper §4.1)
+CONV_CHANNELS = (32, 64, 128)
+HIDDEN = 1024
+PARAM_SEED = 20210521  # fixed: the "pre-trained" weights
+
+
+# ----------------------------------------------------------------------
+# Mel filterbank (precomputed constant, folded into the HLO at export)
+# ----------------------------------------------------------------------
+
+def _hz_to_mel(f: np.ndarray | float) -> np.ndarray | float:
+    return 2595.0 * np.log10(1.0 + np.asarray(f) / 700.0)
+
+
+def _mel_to_hz(m: np.ndarray | float) -> np.ndarray | float:
+    return 700.0 * (10.0 ** (np.asarray(m) / 2595.0) - 1.0)
+
+
+def mel_filterbank(n_mels: int = N_MELS, n_bins: int = N_BINS,
+                   sample_rate: int = 16000) -> np.ndarray:
+    """Slaney-style triangular mel filterbank, shape (n_bins, n_mels)."""
+    f_max = sample_rate / 2.0
+    mels = np.linspace(_hz_to_mel(0.0), _hz_to_mel(f_max), n_mels + 2)
+    hz = _mel_to_hz(mels)
+    bin_freqs = np.linspace(0.0, f_max, n_bins)
+    fb = np.zeros((n_bins, n_mels), dtype=np.float32)
+    for m in range(n_mels):
+        lo, ctr, hi = hz[m], hz[m + 1], hz[m + 2]
+        up = (bin_freqs - lo) / max(ctr - lo, 1e-9)
+        down = (hi - bin_freqs) / max(hi - ctr, 1e-9)
+        fb[:, m] = np.maximum(0.0, np.minimum(up, down))
+    # Slaney normalization: each filter integrates to ~1.
+    enorm = 2.0 / (hz[2:] - hz[:-2])
+    fb *= enorm[np.newaxis, :]
+    return fb
+
+
+# ----------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------
+
+def init_params(seed: int = PARAM_SEED) -> Dict[str, jax.Array]:
+    """He-initialized parameters for the full network (fixed seed)."""
+    rng = np.random.default_rng(seed)
+    params: Dict[str, np.ndarray] = {}
+
+    def he(shape: Tuple[int, ...], fan_in: int) -> np.ndarray:
+        return rng.normal(0.0, math.sqrt(2.0 / fan_in),
+                          size=shape).astype(np.float32)
+
+    c_in = 1
+    for i, c_out in enumerate(CONV_CHANNELS):
+        # Weight rows are laid out in (c_in, kh, kw) order to match
+        # conv_general_dilated_patches' feature order (see _im2col).
+        params[f"conv{i}_w"] = he((3 * 3 * c_in, c_out), 3 * 3 * c_in)
+        params[f"conv{i}_b"] = np.zeros((c_out,), np.float32)
+        c_in = c_out
+    params["fc0_w"] = he((CONV_CHANNELS[-1], HIDDEN), CONV_CHANNELS[-1])
+    params["fc0_b"] = np.zeros((HIDDEN,), np.float32)
+    params["head_w"] = he((HIDDEN, N_CLASSES), HIDDEN)
+    params["head_b"] = np.zeros((N_CLASSES,), np.float32)
+    params["mel_fb"] = mel_filterbank()
+    return {k: jnp.asarray(v) for k, v in params.items()}
+
+
+def param_count(params: Dict[str, jax.Array]) -> int:
+    return sum(int(np.prod(p.shape)) for p in params.values())
+
+
+# ----------------------------------------------------------------------
+# Forward pass
+# ----------------------------------------------------------------------
+
+def _im2col(x: jax.Array, kh: int = 3, kw: int = 3) -> jax.Array:
+    """(B, H, W, C) -> (B*H*W, kh*kw*C) patches with SAME padding.
+
+    Uses conv_general_dilated_patches so patch extraction stays a cheap
+    data-movement op in HLO; the FLOPs land in the Pallas GEMM.
+    """
+    b, h, w, _ = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # patches: (B, H, W, C*kh*kw) with feature order (c, kh, kw). Weights
+    # are stored in the same (c, kh, kw) order (init_params), so no
+    # transpose/copy is needed before the GEMM — one less HBM round-trip
+    # per conv layer (DESIGN §Perf L2).
+    return patches.reshape(b * h * w, patches.shape[3])
+
+
+def _conv_block(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """conv3x3(SAME) + ReLU via im2col GEMM, then 2x2 max-pool."""
+    b, h, wd, _ = x.shape
+    c_out = w.shape[1]
+    cols = _im2col(x)
+    y = matmul_bias_act(cols, w, bias, activation="relu")
+    y = y.reshape(b, h, wd, c_out)
+    # 2x2 max pool, stride 2 (dims are powers of two by construction)
+    y = y.reshape(b, h // 2, 2, wd // 2, 2, c_out).max(axis=(2, 4))
+    return y
+
+
+def forward(params: Dict[str, jax.Array], spec: jax.Array) -> jax.Array:
+    """Classifier forward pass.
+
+    Args:
+      params: from init_params().
+      spec: (B, N_FRAMES, N_BINS) non-negative power spectrogram.
+
+    Returns:
+      (B, N_CLASSES) logits.
+    """
+    b = spec.shape[0]
+    # Frontend: log-mel = log(spec @ mel_fb + eps), log fused in-kernel.
+    x = matmul_bias_act(spec.reshape(b * N_FRAMES, N_BINS),
+                        params["mel_fb"], activation="log")
+    x = x.reshape(b, N_FRAMES, N_MELS, 1)
+
+    for i in range(len(CONV_CHANNELS)):
+        x = _conv_block(x, params[f"conv{i}_w"], params[f"conv{i}_b"])
+
+    # Global average pool over time x mel.
+    x = x.mean(axis=(1, 2))  # (B, C_last)
+
+    x = matmul_bias_act(x, params["fc0_w"], params["fc0_b"],
+                        activation="relu")
+    logits = matmul_bias_act(x, params["head_w"], params["head_b"],
+                             activation="none")
+    return logits
+
+
+def forward_ref(params: Dict[str, jax.Array], spec: jax.Array) -> jax.Array:
+    """Pure-jnp oracle for forward() (no Pallas), used by pytest."""
+    b = spec.shape[0]
+    x = jnp.log(jnp.maximum(
+        spec.reshape(b * N_FRAMES, N_BINS) @ params["mel_fb"], 0.0) + 1e-6)
+    x = x.reshape(b, N_FRAMES, N_MELS, 1)
+    for i in range(len(CONV_CHANNELS)):
+        w, bias = params[f"conv{i}_w"], params[f"conv{i}_b"]
+        bb, h, wd, _ = x.shape
+        cols = _im2col(x)
+        y = jnp.maximum(cols @ w + bias, 0.0)
+        y = y.reshape(bb, h, wd, w.shape[1])
+        x = y.reshape(bb, h // 2, 2, wd // 2, 2, w.shape[1]).max(axis=(2, 4))
+    x = x.mean(axis=(1, 2))
+    x = jnp.maximum(x @ params["fc0_w"] + params["fc0_b"], 0.0)
+    return x @ params["head_w"] + params["head_b"]
+
+
+# ----------------------------------------------------------------------
+# Synthetic "UrbanSound" clips (stand-in for the paper's WAV files)
+# ----------------------------------------------------------------------
+
+def synth_clip(file_id: int, batch: int = 1) -> np.ndarray:
+    """Deterministic synthetic power spectrogram for a given file id.
+
+    A mixture of harmonic stacks + noise floor, shaped like urban sound
+    classes; the same generator exists in Rust (workload::synth) so both
+    sides can golden-test logits against each other.
+    """
+    out = np.empty((batch, N_FRAMES, N_BINS), np.float32)
+    for bi in range(batch):
+        s = _spectrogram_for(file_id + bi)
+        out[bi] = s
+    return out
+
+
+def _spectrogram_for(file_id: int) -> np.ndarray:
+    # xorshift64* PRNG — bit-for-bit identical to evhc::util::prng in Rust.
+    state = (file_id * 2654435761 + 1) & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64() -> int:
+        nonlocal state
+        state ^= (state >> 12)
+        state &= 0xFFFFFFFFFFFFFFFF
+        state ^= (state << 25) & 0xFFFFFFFFFFFFFFFF
+        state ^= (state >> 27)
+        return (state * 0x2545F4914F6CDD1D) & 0xFFFFFFFFFFFFFFFF
+
+    def next_f32() -> float:
+        return (next_u64() >> 40) / float(1 << 24)
+
+    f0 = 50.0 + next_f32() * 450.0          # fundamental bin frequency
+    n_harm = 1 + int(next_f32() * 8)
+    noise = 0.01 + next_f32() * 0.05
+    am = 0.5 + next_f32() * 4.0             # amplitude modulation rate
+
+    t = np.arange(N_FRAMES, dtype=np.float32)[:, None]
+    f = np.arange(N_BINS, dtype=np.float32)[None, :]
+    spec = np.full((N_FRAMES, N_BINS), noise, np.float32)
+    env = (0.6 + 0.4 * np.sin(2.0 * np.pi * am * t / N_FRAMES)).astype(
+        np.float32)
+    for h in range(1, n_harm + 1):
+        centre = f0 * h / 8000.0 * (N_BINS - 1)
+        if centre >= N_BINS:
+            break
+        width = 1.5 + 0.5 * h
+        peak = np.exp(-0.5 * ((f - centre) / width) ** 2) / h
+        spec += env * peak.astype(np.float32)
+    return spec
+
+
+__all__: List[str] = [
+    "N_FRAMES", "N_BINS", "N_MELS", "N_CLASSES", "PARAM_SEED",
+    "init_params", "param_count", "forward", "forward_ref",
+    "mel_filterbank", "synth_clip",
+]

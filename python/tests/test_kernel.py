@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas GEMM kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer: hypothesis
+sweeps shapes/dtypes/activations and asserts allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import (
+    ACTIVATIONS,
+    matmul_bias_act,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import matmul_bias_act_ref
+
+RTOL = 1e-4  # blocked-K accumulation reassociates float sums
+ATOL = 1e-4
+
+def _tols(act):
+    """Per-activation tolerances.
+
+    The log epilogue is ill-conditioned right at its eps-clamp: a 1e-7
+    reassociation difference around x=0 moves log(max(x,0)+1e-6) by ~1e-1.
+    Real callers (the mel frontend) feed non-negative spectrogram x
+    filterbank products, far from the clamp; for the randomized sweep we
+    accept a looser absolute tolerance there.
+    """
+    if act == "log":
+        return dict(rtol=1e-3, atol=5e-3)
+    return dict(rtol=RTOL, atol=ATOL)
+
+
+def _rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1),
+    (4, 7, 9),
+    (8, 128, 128),
+    (128, 128, 128),
+    (96, 257, 64),      # the mel-frontend shape
+    (200, 300, 527),    # the classifier-head-ish shape
+    (130, 129, 131),    # just past one tile in every dim
+])
+@pytest.mark.parametrize("act", sorted(ACTIVATIONS))
+def test_matches_ref_fixed_shapes(m, k, n, act):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    x, w = _rand(rng, (m, k)), _rand(rng, (k, n))
+    b = _rand(rng, (n,))
+    got = matmul_bias_act(x, w, b, activation=act)
+    want = matmul_bias_act_ref(x, w, b, activation=act)
+    np.testing.assert_allclose(got, want, **_tols(act))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 160),
+    n=st.integers(1, 160),
+    act=st.sampled_from(sorted(ACTIVATIONS)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_hypothesis(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, (m, k)), _rand(rng, (k, n))
+    b = _rand(rng, (n,))
+    got = matmul_bias_act(x, w, b, activation=act)
+    want = matmul_bias_act_ref(x, w, b, activation=act)
+    np.testing.assert_allclose(got, want, **_tols(act))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bf16_inputs_f32_accumulation(m, k, n, seed):
+    """bf16 operands accumulate in f32 — matches a bf16-cast oracle."""
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), jnp.bfloat16)
+    w = _rand(rng, (k, n), jnp.bfloat16)
+    got = matmul_bias_act(x, w, activation="none", out_dtype=jnp.float32)
+    want = matmul_bias_act_ref(x, w, activation="none",
+                               out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_no_bias_means_zero_bias():
+    rng = np.random.default_rng(7)
+    x, w = _rand(rng, (16, 32)), _rand(rng, (32, 24))
+    got = matmul_bias_act(x, w)
+    want = matmul_bias_act_ref(x, w, jnp.zeros((24,), jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 128, 128), (64, 128, 256),
+                                      (8, 128, 128)])
+def test_tile_size_invariance(bm, bn, bk):
+    """Result must not depend on the tiling (up to float reassociation)."""
+    rng = np.random.default_rng(11)
+    x, w = _rand(rng, (100, 300)), _rand(rng, (300, 150))
+    b = _rand(rng, (150,))
+    base = matmul_bias_act(x, w, b, activation="relu")
+    tiled = matmul_bias_act(x, w, b, activation="relu", bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(base, tiled, rtol=RTOL, atol=ATOL)
+
+
+def test_relu_is_nonnegative():
+    rng = np.random.default_rng(3)
+    x, w = _rand(rng, (64, 64)), _rand(rng, (64, 64))
+    out = np.asarray(matmul_bias_act(x, w, activation="relu"))
+    assert (out >= 0).all()
+
+
+def test_log_epilogue_finite_on_zero_input():
+    """log epilogue clamps at eps — zero rows must stay finite."""
+    x = jnp.zeros((8, 16), jnp.float32)
+    w = jnp.ones((16, 8), jnp.float32)
+    out = np.asarray(matmul_bias_act(x, w, activation="log"))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, np.log(1e-6), rtol=1e-5)
+
+
+def test_shape_validation():
+    x = jnp.zeros((4, 5), jnp.float32)
+    w = jnp.zeros((6, 7), jnp.float32)
+    with pytest.raises(ValueError, match="inner dims"):
+        matmul_bias_act(x, w)
+    with pytest.raises(ValueError, match="unknown activation"):
+        matmul_bias_act(x, jnp.zeros((5, 7), jnp.float32),
+                        activation="gelu")
+    with pytest.raises(ValueError, match="bias shape"):
+        matmul_bias_act(x, jnp.zeros((5, 7), jnp.float32),
+                        jnp.zeros((8,), jnp.float32))
+    with pytest.raises(ValueError, match="2-D"):
+        matmul_bias_act(jnp.zeros((2, 3, 4), jnp.float32),
+                        jnp.zeros((4, 5), jnp.float32))
+
+
+def test_vmem_footprint_within_budget():
+    """Default tiling must fit comfortably in a 16 MiB VMEM (DESIGN §Perf)."""
+    fp = vmem_footprint_bytes(128, 128, 128, 4)
+    assert fp == 128 * 128 * 4 * 3 + 128 * 4
+    assert fp < 16 * 1024 * 1024 // 8  # < 1/8 of VMEM: double-buffer room
+
+
+def test_mxu_utilization_estimate():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    # 96x257x64 mel frontend: padding waste is bounded
+    u = mxu_utilization_estimate(96, 257, 64)
+    assert 0.3 < u < 1.0
+    assert mxu_utilization_estimate(1, 1, 1) == pytest.approx(
+        1.0 / (8 * 128 * 128))

@@ -1,0 +1,76 @@
+"""L2 correctness: audio-classifier forward pass, frontend, synth clips."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params()
+
+
+def test_param_count_reported(params):
+    # conv stacks + fc + head + the constant filterbank
+    n = model.param_count(params)
+    assert n > 500_000  # real network, not a stub
+    assert n == model.param_count(model.init_params())  # deterministic
+
+
+def test_forward_shapes(params):
+    for b in (1, 3):
+        spec = jnp.asarray(model.synth_clip(0, batch=b))
+        logits = model.forward(params, spec)
+        assert logits.shape == (b, model.N_CLASSES)
+
+
+def test_forward_matches_pure_jnp_oracle(params):
+    spec = jnp.asarray(model.synth_clip(42, batch=2))
+    got = model.forward(params, spec)
+    want = model.forward_ref(params, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_forward_deterministic(params):
+    spec = jnp.asarray(model.synth_clip(7))
+    a = np.asarray(model.forward(params, spec))
+    b = np.asarray(model.forward(params, spec))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_batch_consistency(params):
+    """Batched forward must equal per-item forward (batch invariance)."""
+    spec = jnp.asarray(model.synth_clip(5, batch=4))
+    batched = np.asarray(model.forward(params, spec))
+    for i in range(4):
+        single = np.asarray(model.forward(params, spec[i:i + 1]))
+        np.testing.assert_allclose(batched[i], single[0], rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_mel_filterbank_properties():
+    fb = model.mel_filterbank()
+    assert fb.shape == (model.N_BINS, model.N_MELS)
+    assert (fb >= 0).all()
+    # Every filter has support and band centres increase monotonically.
+    assert (fb.sum(axis=0) > 0).all()
+    centres = fb.argmax(axis=0)
+    assert (np.diff(centres) >= 0).all()
+
+
+def test_synth_clip_deterministic_and_distinct():
+    a = model.synth_clip(1)
+    b = model.synth_clip(1)
+    c = model.synth_clip(2)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert (a >= 0).all()  # power spectrogram is non-negative
+
+
+def test_different_clips_give_different_logits(params):
+    la = np.asarray(model.forward(params, jnp.asarray(model.synth_clip(1))))
+    lb = np.asarray(model.forward(params, jnp.asarray(model.synth_clip(2))))
+    assert np.abs(la - lb).max() > 1e-3

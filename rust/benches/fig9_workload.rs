@@ -1,0 +1,34 @@
+//! FIG9 — workload timeline (paper Figure 9).
+//!
+//! Regenerates the four-block submission timeline and benches the
+//! synthetic-clip generator that stands in for the UrbanSound8K files.
+
+use evhc::util::bench::{bench_case, section};
+use evhc::util::csv::Table;
+use evhc::workload::{synth_clip, Workload, TOTAL_FILES};
+
+fn main() {
+    section("FIG9: workload timeline (four blocks, Fig. 9)");
+    let w = Workload::paper(1.0);
+    let mut t = Table::new(vec!["block", "submit_at", "jobs"]);
+    for (i, b) in w.blocks.iter().enumerate() {
+        t.push(vec![format!("{}", i + 1), b.at.hms(),
+                    format!("{}", b.jobs)]);
+    }
+    print!("{}", t.to_text());
+    assert_eq!(w.total_jobs(), TOTAL_FILES);
+    println!("total jobs: {} (paper: 3,676 audio files, 2.8 GB)",
+             w.total_jobs());
+
+    section("synthetic audio generator (UrbanSound8K stand-in)");
+    let mut sink = 0f32;
+    bench_case("synth_clip (96x257 spectrogram)", 3, 20, || {
+        let c = synth_clip(123);
+        sink += c[0];
+    });
+    std::hint::black_box(sink);
+
+    let _ = std::fs::create_dir_all("results");
+    t.write("results/fig9_workload.csv").expect("write");
+    println!("\nwrote results/fig9_workload.csv");
+}

@@ -1,0 +1,80 @@
+//! X-INF — the PJRT hot path: real inference latency/throughput of the
+//! AOT-compiled Pallas/JAX audio classifier served from Rust, plus the
+//! DES engine's replay speed (the coordinator must never be the
+//! bottleneck — DESIGN §Perf L3 target).
+
+use evhc::cluster::{HybridCluster, RunConfig};
+use evhc::runtime::{artifacts_available, ModelRuntime};
+use evhc::util::bench::{bench_case, section};
+use evhc::util::csv::Table;
+use evhc::workload::synth_clip;
+
+fn main() {
+    let _ = std::fs::create_dir_all("results");
+
+    if artifacts_available() {
+        section("X-INF: PJRT inference latency (batch 1 vs batch 8)");
+        let rt1 = ModelRuntime::load("artifacts", 1).expect("b1");
+        let rt8 = ModelRuntime::load("artifacts", 8).expect("b8");
+        rt1.verify_golden().expect("golden b1");
+        println!("golden check OK — runtime serves the exact JAX network");
+
+        let clip = synth_clip(0);
+        let clips8: Vec<Vec<f32>> =
+            (0..8).map(|i| synth_clip(i as u64)).collect();
+
+        let mut t = Table::new(vec!["batch", "ms_per_exec",
+                                    "clips_per_sec"]);
+        let s1 = bench_case("infer b1", 3, 30, || {
+            let _ = rt1.infer(std::slice::from_ref(&clip)).unwrap();
+        });
+        t.push(vec!["1".into(), format!("{:.2}", s1.mean * 1e3),
+                    format!("{:.1}", 1.0 / s1.mean)]);
+        let s8 = bench_case("infer b8", 3, 30, || {
+            let _ = rt8.infer(&clips8).unwrap();
+        });
+        t.push(vec!["8".into(), format!("{:.2}", s8.mean * 1e3),
+                    format!("{:.1}", 8.0 / s8.mean)]);
+        print!("{}", t.to_text());
+        t.write("results/inference.csv").unwrap();
+
+        let speedup = (8.0 / s8.mean) / (1.0 / s1.mean);
+        println!("batched throughput gain: {speedup:.2}x over batch-1");
+
+        section("clip generation vs inference share");
+        bench_case("synth_clip only", 3, 30, || {
+            std::hint::black_box(synth_clip(17));
+        });
+    } else {
+        println!("artifacts/ missing — run `make artifacts` for the PJRT \
+                  section; continuing with DES benches only");
+    }
+
+    section("L3 coordinator: DES replay speed (full 5h40m use case)");
+    let s = bench_case("full-scale use case replay", 1, 5, || {
+        let mut cfg = RunConfig::paper_usecase(1.0, 42);
+        cfg.inference_every = 0;
+        let r = HybridCluster::new(cfg).unwrap().run().unwrap();
+        assert_eq!(r.jobs_completed, 3676);
+    });
+    let cfg = RunConfig::paper_usecase(1.0, 42);
+    let _ = cfg;
+    let speedup = (5.0 * 3600.0 + 40.0 * 60.0) / s.mean;
+    println!("replay speed: {speedup:.0}x real time \
+              (DESIGN §Perf target ≫1000x)");
+    assert!(speedup > 1000.0);
+
+    section("DES event-queue micro-benchmark");
+    bench_case("schedule+pop 100k events", 2, 10, || {
+        use evhc::sim::{EventQueue, SimTime};
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..100_000u64 {
+            q.schedule_at(SimTime(((i * 7919) % 100_000) as f64), i);
+        }
+        let mut n = 0;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 100_000);
+    });
+}

@@ -1,0 +1,126 @@
+//! X-TOPO — overlay topology study: simple star (Fig. 5), redundant star
+//! (Fig. 6), stand-alone nodes (Fig. 7), and the future-work
+//! shortest-path extension (§5).
+
+use evhc::netsim::{Cipher, LinkSpec, Network, NetId};
+use evhc::sim::SimTime;
+use evhc::util::bench::section;
+use evhc::util::csv::Table;
+use evhc::util::stats::mean;
+use evhc::vrouter::Overlay;
+
+/// Build an N-site mesh underlay.
+fn mesh(n: usize) -> (Network, Vec<NetId>) {
+    let mut net = Network::new();
+    let ids: Vec<NetId> = (0..n)
+        .map(|i| net.add_location(&format!("site{i}")))
+        .collect();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            // Mix of continental and transatlantic links.
+            let spec = if (i + j) % 3 == 0 {
+                LinkSpec::transatlantic()
+            } else {
+                LinkSpec::wan()
+            };
+            net.set_link(ids[i], ids[j], spec);
+        }
+    }
+    (net, ids)
+}
+
+/// All-pairs mean latency between site routers.
+fn mean_latency(ov: &Overlay, net: &Network, names: &[String]) -> f64 {
+    let mut lats = Vec::new();
+    for a in names {
+        for b in names {
+            if a != b {
+                lats.push(ov.latency(net, a, b).unwrap());
+            }
+        }
+    }
+    mean(&lats) * 1e3
+}
+
+fn main() {
+    let n_sites = 6;
+    let (net, ids) = mesh(n_sites);
+
+    section("X-TOPO: star vs redundant star vs shortest-path (6 sites)");
+    let mut t = Table::new(vec!["topology", "mean_pair_latency_ms",
+                                "public_ips", "survives_cp_failure"]);
+
+    // --- simple star (Fig. 5) -------------------------------------------
+    let mut star = Overlay::new(Cipher::Aes256Gcm);
+    star.add_central_point("cp0", ids[0], 0x0A000000, SimTime(0.0))
+        .unwrap();
+    let mut names = Vec::new();
+    for (i, &loc) in ids.iter().enumerate().skip(1) {
+        let name = format!("vr{i}");
+        star.add_site_router(&name, loc, 0x0A000000 + ((i as u32) << 8),
+                             SimTime(1.0)).unwrap();
+        names.push(name);
+    }
+    let star_lat = mean_latency(&star, &net, &names);
+    t.push(vec!["star (Fig. 5)".into(), format!("{star_lat:.1}"),
+                "1".into(), "no".into()]);
+
+    // --- redundant star (Fig. 6) -----------------------------------------
+    let mut red = Overlay::new(Cipher::Aes256Gcm);
+    red.add_central_point("cp0", ids[0], 0x0A000000, SimTime(0.0)).unwrap();
+    red.add_central_point("cp1", ids[1], 0x0A000100, SimTime(0.0)).unwrap();
+    let mut rnames = Vec::new();
+    for (i, &loc) in ids.iter().enumerate().skip(2) {
+        let name = format!("vr{i}");
+        red.add_site_router(&name, loc, 0x0A000000 + ((i as u32) << 8),
+                            SimTime(1.0)).unwrap();
+        rnames.push(name);
+    }
+    let red_lat = mean_latency(&red, &net, &rnames);
+    // Fail the primary: connectivity must survive via the backup.
+    let rehomed = red.fail_central_point("cp0", SimTime(100.0)).unwrap();
+    let survives = rnames.iter().all(|a| rnames.iter()
+        .all(|b| red.is_connected(a, b)));
+    t.push(vec!["redundant star (Fig. 6)".into(), format!("{red_lat:.1}"),
+                "2".into(),
+                format!("yes ({} re-homed)", rehomed.len())]);
+    assert!(survives);
+
+    // --- shortest-path extension (§5 future work) -------------------------
+    let mut sp = Overlay::new(Cipher::Aes256Gcm);
+    sp.add_central_point("cp0", ids[0], 0x0A000000, SimTime(0.0)).unwrap();
+    let mut snames = Vec::new();
+    for (i, &loc) in ids.iter().enumerate().skip(1) {
+        let name = format!("vr{i}");
+        sp.add_site_router(&name, loc, 0x0A000000 + ((i as u32) << 8),
+                           SimTime(1.0)).unwrap();
+        snames.push(name);
+    }
+    sp.shortest_path = true;
+    let sp_lat = mean_latency(&sp, &net, &snames);
+    t.push(vec!["star + shortest-path (§5)".into(), format!("{sp_lat:.1}"),
+                "1".into(), "no".into()]);
+
+    print!("{}", t.to_text());
+    let _ = std::fs::create_dir_all("results");
+    t.write("results/topology.csv").unwrap();
+
+    // Shape: direct tunnels strictly beat the star detour.
+    assert!(sp_lat < star_lat,
+            "shortest-path must cut latency ({sp_lat} !< {star_lat})");
+
+    section("stand-alone nodes (Fig. 7): star + 2 standalone clients");
+    let mut sa = Overlay::new(Cipher::Aes256Gcm);
+    sa.add_central_point("cp0", ids[0], 0x0A000000, SimTime(0.0)).unwrap();
+    sa.add_site_router("vr1", ids[1], 0x0A000100, SimTime(1.0)).unwrap();
+    sa.add_standalone("workstation", ids[2], SimTime(2.0)).unwrap();
+    sa.add_standalone("legacy-node", ids[3], SimTime(3.0)).unwrap();
+    for (a, b) in [("workstation", "vr1"), ("workstation", "legacy-node"),
+                   ("legacy-node", "cp0")] {
+        let lat = sa.latency(&net, a, b).unwrap() * 1e3;
+        println!("  {a:>12} → {b:<12} {lat:6.1} ms  via {:?}",
+                 sa.element_path(a, b).unwrap());
+        assert!(sa.is_connected(a, b));
+    }
+    println!("\nwrote results/topology.csv");
+}

@@ -1,0 +1,109 @@
+//! X-VPN — §3.5.6 performance–security trade-off.
+//!
+//! Sweeps the OpenVPN cipher choice and reports overlay throughput,
+//! end-to-end latency, CP CPU cost, and transfer time for the paper's
+//! 2.8 GB dataset — quantifying the advice that clusters whose software
+//! already encrypts natively can drop tunnel encryption.
+
+use evhc::netsim::{transfer_time, Cipher, LinkSpec, Network};
+use evhc::sim::SimTime;
+use evhc::util::bench::{bench_case, section};
+use evhc::util::csv::Table;
+use evhc::vrouter::Overlay;
+
+fn main() {
+    section("X-VPN: cipher sweep on the CESNET<->AWS overlay");
+    let mut net = Network::new();
+    let cesnet = net.add_location("cesnet");
+    let aws = net.add_location("aws");
+    net.set_link(cesnet, aws, LinkSpec::transatlantic());
+
+    let dataset_bytes = 2.8e9; // the paper's 2.8 GB of audio
+    let mut t = Table::new(vec!["cipher", "security", "throughput_mbps",
+                                "latency_ms", "cp_cpu_per_gb_s",
+                                "dataset_transfer_s"]);
+    let mut tputs = Vec::new();
+    for cipher in Cipher::ALL {
+        let mut ov = Overlay::new(cipher);
+        ov.add_central_point("fe", cesnet, 0x0A000000, SimTime(0.0))
+            .unwrap();
+        ov.add_site_router("vr-aws", aws, 0x0A010000, SimTime(1.0))
+            .unwrap();
+        let tput = ov.throughput(&net, "vr-aws", "fe", 1).unwrap();
+        let lat = ov.latency(&net, "vr-aws", "fe").unwrap();
+        let path = ov.element_path("vr-aws", "fe").unwrap();
+        let hops = ov.hops(&net, &path).unwrap();
+        let xfer = transfer_time(dataset_bytes, &hops);
+        let cpu_per_gb = cipher.cpu_cost_per_byte() * 1e9;
+        t.push(vec![
+            cipher.name().to_string(),
+            cipher.security().to_string(),
+            format!("{:.0}", tput * 8.0 / 1e6),
+            format!("{:.2}", lat * 1e3),
+            format!("{:.2}", cpu_per_gb),
+            format!("{:.1}", xfer),
+        ]);
+        tputs.push(tput);
+    }
+    print!("{}", t.to_text());
+    let _ = std::fs::create_dir_all("results");
+    t.write("results/vpn_tradeoff.csv").unwrap();
+
+    // Shape: monotone — weaker cipher, more throughput; BF-CBC worst.
+    assert!(tputs.windows(2).all(|w| w[0] >= w[1]),
+            "throughput must decrease with cipher cost: {tputs:?}");
+    assert!(tputs[0] / tputs[4] > 3.0,
+            "plaintext must beat BF-CBC by >3x");
+
+    section("CP fan-in: concurrent flows share the crypto budget");
+    let mut ov = Overlay::new(Cipher::Aes256Gcm);
+    ov.add_central_point("fe", cesnet, 0x0A000000, SimTime(0.0)).unwrap();
+    ov.add_site_router("vr-aws", aws, 0x0A010000, SimTime(1.0)).unwrap();
+    let extra = net.add_location("site3");
+    net.set_link(cesnet, extra, LinkSpec::wan());
+    net.set_link(aws, extra, LinkSpec::transatlantic());
+    ov.add_site_router("vr-3", extra, 0x0A020000, SimTime(2.0)).unwrap();
+    let mut fan = Table::new(vec!["concurrent_flows", "per_flow_mbps"]);
+    for flows in [1u32, 2, 4, 8] {
+        let tput = ov.throughput(&net, "vr-aws", "vr-3", flows).unwrap();
+        fan.push(vec![format!("{flows}"),
+                      format!("{:.0}", tput * 8.0 / 1e6)]);
+    }
+    print!("{}", fan.to_text());
+    fan.write("results/vpn_fanin.csv").unwrap();
+
+    section("staging ablation: node setup time vs tunnel cipher");
+    // The paper's one-time node setup (udocker + 1.3 GB image pull)
+    // expressed over the actual overlay path (workload::staging): cipher
+    // choice and CP fan-in directly change how fast a burst node becomes
+    // productive.
+    let mut st = Table::new(vec!["cipher", "setup_1_pull_s",
+                                 "setup_3_concurrent_s"]);
+    for cipher in Cipher::ALL {
+        let mut ovc = Overlay::new(cipher);
+        ovc.add_central_point("fe", cesnet, 0x0A000000, SimTime(0.0))
+            .unwrap();
+        ovc.add_site_router("vr-aws", aws, 0x0A010000, SimTime(1.0))
+            .unwrap();
+        let alone = evhc::workload::StagingPath::resolve(
+            &ovc, &net, "fe", "vr-aws", 1).unwrap();
+        let shared = evhc::workload::StagingPath::resolve(
+            &ovc, &net, "fe", "vr-aws", 3).unwrap();
+        st.push(vec![cipher.name().to_string(),
+                     format!("{:.0}", alone.setup_secs()),
+                     format!("{:.0}", shared.setup_secs())]);
+    }
+    print!("{}", st.to_text());
+    st.write("results/staging_ablation.csv").unwrap();
+
+    section("micro: route resolution cost (hot path)");
+    let mut sink = 0.0;
+    bench_case("overlay path + hops + transfer_time", 10, 100, || {
+        let path = ov.element_path("vr-aws", "vr-3").unwrap();
+        let hops = ov.hops(&net, &path).unwrap();
+        sink += transfer_time(1e6, &hops);
+    });
+    std::hint::black_box(sink);
+    println!("\nwrote results/vpn_tradeoff.csv, results/vpn_fanin.csv, \
+              results/staging_ablation.csv");
+}

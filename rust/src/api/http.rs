@@ -1,0 +1,108 @@
+//! Minimal HTTP/1.1 request parsing for the API server (std::net only).
+
+use std::io::Read;
+use std::net::TcpStream;
+
+use anyhow::{bail, Context};
+
+/// A parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Maximum accepted body (TOSCA templates are small).
+const MAX_BODY: usize = 1 << 20;
+
+/// Read and parse one request from the stream.
+pub fn read_request(stream: &mut TcpStream) -> anyhow::Result<Request> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    // Read until end of headers.
+    let header_end = loop {
+        let n = stream.read(&mut tmp).context("reading request")?;
+        if n == 0 {
+            bail!("connection closed before headers complete");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos + 4;
+        }
+        if buf.len() > MAX_BODY {
+            bail!("headers too large");
+        }
+    };
+
+    let head = std::str::from_utf8(&buf[..header_end])
+        .context("headers not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().context("empty request")?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path_full = parts.next().context("missing path")?.to_string();
+    let path = path_full.split('?').next().unwrap_or("/").to_string();
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+
+    // Body per Content-Length.
+    let content_length: usize = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap_or(0);
+    if content_length > MAX_BODY {
+        bail!("body too large ({content_length} bytes)");
+    }
+    let mut body_bytes = buf[header_end..].to_vec();
+    while body_bytes.len() < content_length {
+        let n = stream.read(&mut tmp).context("reading body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body_bytes.extend_from_slice(&tmp[..n]);
+    }
+    body_bytes.truncate(content_length);
+    let body = String::from_utf8(body_bytes).context("body not UTF-8")?;
+
+    Ok(Request { method, path, headers, body })
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack
+        .windows(needle.len())
+        .position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subslice_search() {
+        assert_eq!(find_subslice(b"abc\r\n\r\nxyz", b"\r\n\r\n"), Some(3));
+        assert_eq!(find_subslice(b"abc", b"\r\n\r\n"), None);
+    }
+
+    // Request parsing over real sockets is covered by api::tests.
+}

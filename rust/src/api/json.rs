@@ -1,0 +1,292 @@
+//! Hand-rolled JSON rendering + a small value parser (serde is not
+//! available offline). The server only needs rendering; the parser exists
+//! so tests and the orchent-style client can inspect responses.
+
+use anyhow::bail;
+
+/// JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<Json>),
+    Object(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Render to compact JSON text.
+    pub fn render(&self) -> String {
+        match self {
+            Json::Null => "null".into(),
+            Json::Bool(b) => b.to_string(),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    format!("{}", *n as i64)
+                } else {
+                    format!("{n}")
+                }
+            }
+            Json::Str(s) => escape(s),
+            Json::Array(items) => {
+                let inner: Vec<String> =
+                    items.iter().map(|i| i.render()).collect();
+                format!("[{}]", inner.join(","))
+            }
+            Json::Object(fields) => {
+                let inner: Vec<String> = fields
+                    .iter()
+                    .map(|(k, v)| format!("{}:{}", escape(k), v.render()))
+                    .collect();
+                format!("{{{}}}", inner.join(","))
+            }
+        }
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Object(fields) => fields
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Parse JSON text (full value grammar; no exotic escapes beyond \uXXXX).
+pub fn parse(src: &str) -> anyhow::Result<Json> {
+    let bytes: Vec<char> = src.chars().collect();
+    let mut pos = 0usize;
+    let v = parse_value(&bytes, &mut pos)?;
+    skip_ws(&bytes, &mut pos);
+    if pos != bytes.len() {
+        bail!("trailing characters at {pos}");
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[char], pos: &mut usize) {
+    while *pos < b.len() && b[*pos].is_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[char], pos: &mut usize) -> anyhow::Result<Json> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => bail!("unexpected end of input"),
+        Some('n') => {
+            expect(b, pos, "null")?;
+            Ok(Json::Null)
+        }
+        Some('t') => {
+            expect(b, pos, "true")?;
+            Ok(Json::Bool(true))
+        }
+        Some('f') => {
+            expect(b, pos, "false")?;
+            Ok(Json::Bool(false))
+        }
+        Some('"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some('[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&']') {
+                *pos += 1;
+                return Ok(Json::Array(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(',') => *pos += 1,
+                    Some(']') => {
+                        *pos += 1;
+                        return Ok(Json::Array(items));
+                    }
+                    other => bail!("expected , or ] got {other:?}"),
+                }
+            }
+        }
+        Some('{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&'}') {
+                *pos += 1;
+                return Ok(Json::Object(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&':') {
+                    bail!("expected : after key {key:?}");
+                }
+                *pos += 1;
+                let value = parse_value(b, pos)?;
+                fields.push((key, value));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(',') => *pos += 1,
+                    Some('}') => {
+                        *pos += 1;
+                        return Ok(Json::Object(fields));
+                    }
+                    other => bail!("expected , or }} got {other:?}"),
+                }
+            }
+        }
+        Some(c) if *c == '-' || c.is_ascii_digit() => {
+            let start = *pos;
+            *pos += 1;
+            while *pos < b.len()
+                && (b[*pos].is_ascii_digit()
+                    || matches!(b[*pos], '.' | 'e' | 'E' | '+' | '-'))
+            {
+                *pos += 1;
+            }
+            let text: String = b[start..*pos].iter().collect();
+            Ok(Json::Num(text.parse()?))
+        }
+        Some(c) => bail!("unexpected character {c:?}"),
+    }
+}
+
+fn expect(b: &[char], pos: &mut usize, word: &str) -> anyhow::Result<()> {
+    for w in word.chars() {
+        if b.get(*pos) != Some(&w) {
+            bail!("expected {word:?}");
+        }
+        *pos += 1;
+    }
+    Ok(())
+}
+
+fn parse_string(b: &[char], pos: &mut usize) -> anyhow::Result<String> {
+    if b.get(*pos) != Some(&'"') {
+        bail!("expected string");
+    }
+    *pos += 1;
+    let mut out = String::new();
+    while let Some(&c) = b.get(*pos) {
+        *pos += 1;
+        match c {
+            '"' => return Ok(out),
+            '\\' => {
+                let esc = b.get(*pos).copied()
+                    .ok_or_else(|| anyhow::anyhow!("dangling escape"))?;
+                *pos += 1;
+                match esc {
+                    '"' => out.push('"'),
+                    '\\' => out.push('\\'),
+                    '/' => out.push('/'),
+                    'n' => out.push('\n'),
+                    'r' => out.push('\r'),
+                    't' => out.push('\t'),
+                    'u' => {
+                        let hex: String =
+                            b[*pos..(*pos + 4).min(b.len())].iter()
+                                .collect();
+                        if hex.len() != 4 {
+                            bail!("short \\u escape");
+                        }
+                        *pos += 4;
+                        let code = u32::from_str_radix(&hex, 16)?;
+                        out.push(char::from_u32(code)
+                            .unwrap_or('\u{FFFD}'));
+                    }
+                    other => bail!("unknown escape \\{other}"),
+                }
+            }
+            c => out.push(c),
+        }
+    }
+    bail!("unterminated string")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_roundtrip() {
+        let v = Json::Object(vec![
+            ("id".into(), Json::Num(3.0)),
+            ("name".into(), Json::Str("fr\"ont\nend".into())),
+            ("sites".into(), Json::Array(vec![
+                Json::Str("CESNET".into()),
+                Json::Str("AWS".into()),
+            ])),
+            ("up".into(), Json::Bool(true)),
+            ("none".into(), Json::Null),
+            ("ratio".into(), Json::Num(0.66)),
+        ]);
+        let text = v.render();
+        let back = parse(&text).unwrap();
+        assert_eq!(back, v);
+        assert_eq!(back.get("id").unwrap().as_f64(), Some(3.0));
+        assert_eq!(back.get("sites").unwrap(),
+                   &Json::Array(vec![Json::Str("CESNET".into()),
+                                     Json::Str("AWS".into())]));
+    }
+
+    #[test]
+    fn integers_render_clean() {
+        assert_eq!(Json::Num(42.0).render(), "42");
+        assert_eq!(Json::Num(0.5).render(), "0.5");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        let v = parse("\"a\\u0041b\"").unwrap();
+        assert_eq!(v.as_str(), Some("aAb"));
+    }
+}

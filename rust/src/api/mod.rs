@@ -1,0 +1,352 @@
+//! REST API of the PaaS Orchestrator (§3.2: "users can interact with the
+//! PaaS Orchestrator via its REST API, also using the *orchent*
+//! command-line interface").
+//!
+//! A dependency-free HTTP/1.1 server over `std::net` (tokio is not
+//! available offline): one thread per connection, an in-memory deployment
+//! store, and hand-rolled JSON rendering. Endpoints:
+//!
+//! ```text
+//! GET    /templates              list built-in TOSCA templates
+//! GET    /deployments            list deployments
+//! POST   /deployments            body = TOSCA YAML → deploy + run
+//! GET    /deployments/{id}       one deployment's summary
+//! DELETE /deployments/{id}       undeploy (forget)
+//! GET    /health                 liveness probe
+//! ```
+
+pub mod http;
+pub mod json;
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::{HybridCluster, RunConfig};
+
+use http::{read_request, Request};
+use json::Json;
+
+/// Stored outcome of one deployment request.
+#[derive(Debug, Clone)]
+pub struct DeploymentRecord {
+    pub id: u64,
+    pub template_name: String,
+    pub status: String,
+    pub jobs_completed: u32,
+    pub makespan_secs: f64,
+    pub cost_usd: f64,
+    pub sites: Vec<String>,
+}
+
+impl DeploymentRecord {
+    fn to_json(&self) -> Json {
+        Json::Object(vec![
+            ("id".into(), Json::Num(self.id as f64)),
+            ("template".into(), Json::Str(self.template_name.clone())),
+            ("status".into(), Json::Str(self.status.clone())),
+            ("jobs_completed".into(),
+             Json::Num(self.jobs_completed as f64)),
+            ("makespan_secs".into(), Json::Num(self.makespan_secs)),
+            ("cost_usd".into(), Json::Num(self.cost_usd)),
+            ("sites".into(), Json::Array(
+                self.sites.iter().cloned().map(Json::Str).collect())),
+        ])
+    }
+}
+
+#[derive(Default)]
+struct Store {
+    deployments: BTreeMap<u64, DeploymentRecord>,
+}
+
+/// Handle to a running API server.
+pub struct ApiServer {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ApiServer {
+    /// Bind (`"127.0.0.1:0"` for an ephemeral port) and serve in
+    /// background threads until [`ApiServer::stop`] or drop.
+    pub fn start(bind: &str) -> anyhow::Result<ApiServer> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let store = Arc::new(Mutex::new(Store::default()));
+        let next_id = Arc::new(AtomicU64::new(1));
+
+        let sd = shutdown.clone();
+        let handle = std::thread::spawn(move || {
+            while !sd.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let store = store.clone();
+                        let next_id = next_id.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &store, &next_id);
+                        });
+                    }
+                    Err(ref e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(ApiServer { addr, shutdown, handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ApiServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: u16, body: &Json)
+    -> std::io::Result<()> {
+    let text = body.render();
+    let reason = match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{text}",
+        text.len()
+    )
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::Object(vec![("error".into(), Json::Str(msg.into()))])
+}
+
+fn handle_conn(mut stream: TcpStream, store: &Mutex<Store>,
+               next_id: &AtomicU64) -> anyhow::Result<()> {
+    let req: Request = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = respond(&mut stream, 400, &err_json(&e.to_string()));
+            return Ok(());
+        }
+    };
+    let segments: Vec<&str> =
+        req.path.trim_matches('/').split('/').collect();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["health"]) => {
+            respond(&mut stream, 200, &Json::Object(vec![(
+                "status".into(), Json::Str("up".into()))]))?;
+        }
+        ("GET", ["templates"]) => {
+            let list = Json::Array(
+                ["slurm", "htcondor"]
+                    .iter()
+                    .map(|n| {
+                        let t = crate::tosca::builtin(n).expect("builtin");
+                        Json::Object(vec![
+                            ("name".into(), Json::Str(n.to_string())),
+                            ("display_name".into(), Json::Str(t.name)),
+                            ("lrms".into(),
+                             Json::Str(t.lrms.name().into())),
+                            ("max_workers".into(),
+                             Json::Num(t.scalable.max_instances as f64)),
+                        ])
+                    })
+                    .collect(),
+            );
+            respond(&mut stream, 200, &list)?;
+        }
+        ("GET", ["deployments"]) => {
+            let store = store.lock().unwrap();
+            let list = Json::Array(
+                store.deployments.values().map(|d| d.to_json()).collect());
+            respond(&mut stream, 200, &list)?;
+        }
+        ("POST", ["deployments"]) => {
+            match deploy_from_body(&req.body, next_id) {
+                Ok(rec) => {
+                    let json = rec.to_json();
+                    store.lock().unwrap().deployments.insert(rec.id, rec);
+                    respond(&mut stream, 201, &json)?;
+                }
+                Err(e) => {
+                    respond(&mut stream, 400,
+                            &err_json(&format!("{e:#}")))?;
+                }
+            }
+        }
+        ("GET", ["deployments", id]) => {
+            let id: u64 = id.parse().unwrap_or(0);
+            let store = store.lock().unwrap();
+            match store.deployments.get(&id) {
+                Some(d) => respond(&mut stream, 200, &d.to_json())?,
+                None => respond(&mut stream, 404,
+                                &err_json("no such deployment"))?,
+            }
+        }
+        ("DELETE", ["deployments", id]) => {
+            let id: u64 = id.parse().unwrap_or(0);
+            let mut store = store.lock().unwrap();
+            match store.deployments.remove(&id) {
+                Some(_) => respond(&mut stream, 200, &Json::Object(vec![(
+                    "deleted".into(), Json::Num(id as f64))]))?,
+                None => respond(&mut stream, 404,
+                                &err_json("no such deployment"))?,
+            }
+        }
+        _ => {
+            respond(&mut stream, 405, &err_json("unsupported route"))?;
+        }
+    }
+    Ok(())
+}
+
+/// Parse the TOSCA body, run the deployment simulation, record results.
+fn deploy_from_body(body: &str, next_id: &AtomicU64)
+    -> anyhow::Result<DeploymentRecord> {
+    let template = if body.trim().is_empty() {
+        crate::tosca::builtin("slurm")?
+    } else {
+        crate::tosca::parse(body)?
+    };
+    let mut cfg = RunConfig::paper_usecase(0.02, 99);
+    cfg.template = template.clone();
+    let report = HybridCluster::new(cfg)?.run()?;
+    let mut sites: Vec<String> =
+        report.per_vm.iter().map(|r| r.site.clone()).collect();
+    sites.sort();
+    sites.dedup();
+    Ok(DeploymentRecord {
+        id: next_id.fetch_add(1, Ordering::SeqCst),
+        template_name: template.name,
+        status: "CREATE_COMPLETE".into(),
+        jobs_completed: report.jobs_completed,
+        makespan_secs: report.makespan.0,
+        cost_usd: report.total_cost_usd,
+        sites,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    fn request(addr: std::net::SocketAddr, raw: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let status: u16 = buf
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+        (status, body)
+    }
+
+    fn get(addr: std::net::SocketAddr, path: &str) -> (u16, String) {
+        request(addr, &format!(
+            "GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n"))
+    }
+
+    #[test]
+    fn health_and_templates() {
+        let srv = ApiServer::start("127.0.0.1:0").unwrap();
+        let (code, body) = get(srv.addr, "/health");
+        assert_eq!(code, 200);
+        assert!(body.contains("\"up\""));
+        let (code, body) = get(srv.addr, "/templates");
+        assert_eq!(code, 200);
+        assert!(body.contains("SLURM Elastic cluster"), "{body}");
+        assert!(body.contains("htcondor"));
+        srv.stop();
+    }
+
+    #[test]
+    fn deployment_lifecycle_over_http() {
+        let srv = ApiServer::start("127.0.0.1:0").unwrap();
+        // Create (empty body → default template).
+        let (code, body) = request(srv.addr,
+            "POST /deployments HTTP/1.1\r\nHost: x\r\nContent-Length: 0\
+             \r\nConnection: close\r\n\r\n");
+        assert_eq!(code, 201, "{body}");
+        assert!(body.contains("CREATE_COMPLETE"), "{body}");
+        assert!(body.contains("\"id\":1"), "{body}");
+
+        let (code, body) = get(srv.addr, "/deployments/1");
+        assert_eq!(code, 200);
+        assert!(body.contains("jobs_completed"));
+
+        let (code, body) = get(srv.addr, "/deployments");
+        assert_eq!(code, 200);
+        assert!(body.starts_with('['), "{body}");
+
+        let (code, _) = request(srv.addr,
+            "DELETE /deployments/1 HTTP/1.1\r\nHost: x\r\nConnection: \
+             close\r\n\r\n");
+        assert_eq!(code, 200);
+        let (code, _) = get(srv.addr, "/deployments/1");
+        assert_eq!(code, 404);
+        srv.stop();
+    }
+
+    #[test]
+    fn posting_tosca_body_uses_it() {
+        let srv = ApiServer::start("127.0.0.1:0").unwrap();
+        let tosca = crate::tosca::HTCONDOR_ELASTIC_TEMPLATE;
+        let raw = format!(
+            "POST /deployments HTTP/1.1\r\nHost: x\r\nContent-Length: {}\
+             \r\nConnection: close\r\n\r\n{tosca}",
+            tosca.len());
+        let (code, body) = request(srv.addr, &raw);
+        assert_eq!(code, 201, "{body}");
+        assert!(body.contains("HTCondor Elastic cluster"), "{body}");
+        srv.stop();
+    }
+
+    #[test]
+    fn malformed_tosca_is_400() {
+        let srv = ApiServer::start("127.0.0.1:0").unwrap();
+        let bad = "not: tosca\n";
+        let raw = format!(
+            "POST /deployments HTTP/1.1\r\nHost: x\r\nContent-Length: {}\
+             \r\nConnection: close\r\n\r\n{bad}", bad.len());
+        let (code, body) = request(srv.addr, &raw);
+        assert_eq!(code, 400);
+        assert!(body.contains("error"));
+        srv.stop();
+    }
+
+    #[test]
+    fn unknown_route_is_405() {
+        let srv = ApiServer::start("127.0.0.1:0").unwrap();
+        let (code, _) = get(srv.addr, "/nope");
+        assert_eq!(code, 405);
+        srv.stop();
+    }
+}

@@ -1,0 +1,148 @@
+//! Failure injection: boot failures, running-VM crashes, and transient
+//! "falsely reported down" glitches (the paper's vnode-5 incident, where
+//! SLURM briefly saw a healthy node as *off* and CLUES power-cycled it).
+
+use crate::sim::SimTime;
+use crate::util::prng::Prng;
+
+/// Stochastic failure knobs for a site.
+#[derive(Debug, Clone)]
+pub struct FailureModel {
+    /// Probability a VM request never reaches Running.
+    pub boot_failure_prob: f64,
+    /// Poisson rate of a running VM crashing, events per VM-hour.
+    pub crash_rate_per_hour: f64,
+    /// Probability that a *monitor reading* of a healthy node reports it
+    /// down (transient flap), per reading.
+    pub transient_down_prob: f64,
+    /// Duration of a transient flap, seconds.
+    pub transient_down_secs: f64,
+}
+
+impl FailureModel {
+    /// No failures (default for unit tests).
+    pub fn none() -> FailureModel {
+        FailureModel {
+            boot_failure_prob: 0.0,
+            crash_rate_per_hour: 0.0,
+            transient_down_prob: 0.0,
+            transient_down_secs: 0.0,
+        }
+    }
+
+    /// Mild real-world rates.
+    pub fn realistic() -> FailureModel {
+        FailureModel {
+            boot_failure_prob: 0.01,
+            crash_rate_per_hour: 0.002,
+            transient_down_prob: 0.002,
+            transient_down_secs: 240.0,
+        }
+    }
+
+    pub fn boot_fails(&self, rng: &mut Prng) -> bool {
+        self.boot_failure_prob > 0.0 && rng.chance(self.boot_failure_prob)
+    }
+
+    /// Sample time-to-crash for a VM entering Running (None = never).
+    pub fn sample_crash_in(&self, rng: &mut Prng) -> Option<f64> {
+        if self.crash_rate_per_hour <= 0.0 {
+            return None;
+        }
+        Some(rng.exponential(3600.0 / self.crash_rate_per_hour))
+    }
+}
+
+/// A scripted transient-down injection: node `node_name` is reported off
+/// by the LRMS monitor during [start, start+duration) even though the VM
+/// is healthy. Used to replay the vnode-5 incident deterministically.
+#[derive(Debug, Clone)]
+pub struct TransientDown {
+    pub node_name: String,
+    pub start: SimTime,
+    pub duration_secs: f64,
+}
+
+impl TransientDown {
+    pub fn active_at(&self, t: SimTime) -> bool {
+        t.0 >= self.start.0 && t.0 < self.start.0 + self.duration_secs
+    }
+}
+
+/// Deterministic injection plan for a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct InjectionPlan {
+    pub transient_downs: Vec<TransientDown>,
+}
+
+impl InjectionPlan {
+    /// Is `node` falsely reported down at time `t`?
+    pub fn node_reported_down(&self, node: &str, t: SimTime) -> bool {
+        self.transient_downs
+            .iter()
+            .any(|d| d.node_name == node && d.active_at(t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_fails() {
+        let m = FailureModel::none();
+        let mut rng = Prng::new(1);
+        for _ in 0..1000 {
+            assert!(!m.boot_fails(&mut rng));
+        }
+        assert!(m.sample_crash_in(&mut rng).is_none());
+    }
+
+    #[test]
+    fn boot_failure_rate_approximates_probability() {
+        let m = FailureModel { boot_failure_prob: 0.2,
+                               ..FailureModel::none() };
+        let mut rng = Prng::new(2);
+        let fails = (0..10_000).filter(|_| m.boot_fails(&mut rng)).count();
+        assert!((fails as f64 / 10_000.0 - 0.2).abs() < 0.02, "{fails}");
+    }
+
+    #[test]
+    fn crash_sampling_mean() {
+        let m = FailureModel { crash_rate_per_hour: 1.0,
+                               ..FailureModel::none() };
+        let mut rng = Prng::new(3);
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| m.sample_crash_in(&mut rng).unwrap())
+            .sum::<f64>() / n as f64;
+        assert!((mean - 3600.0).abs() < 100.0, "mean={mean}");
+    }
+
+    #[test]
+    fn transient_window() {
+        let d = TransientDown {
+            node_name: "vnode-5".into(),
+            start: SimTime(100.0),
+            duration_secs: 60.0,
+        };
+        assert!(!d.active_at(SimTime(99.9)));
+        assert!(d.active_at(SimTime(100.0)));
+        assert!(d.active_at(SimTime(159.9)));
+        assert!(!d.active_at(SimTime(160.0)));
+    }
+
+    #[test]
+    fn plan_matches_by_name() {
+        let plan = InjectionPlan {
+            transient_downs: vec![TransientDown {
+                node_name: "vnode-5".into(),
+                start: SimTime(10.0),
+                duration_secs: 5.0,
+            }],
+        };
+        assert!(plan.node_reported_down("vnode-5", SimTime(12.0)));
+        assert!(!plan.node_reported_down("vnode-4", SimTime(12.0)));
+        assert!(!plan.node_reported_down("vnode-5", SimTime(20.0)));
+    }
+}

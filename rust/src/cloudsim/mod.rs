@@ -1,0 +1,546 @@
+//! IaaS cloud-site simulator.
+//!
+//! Stands in for the paper's real back-ends (CESNET MetaCentrum OpenStack
+//! and AWS EC2 us-east-2): instance catalogs, quotas, private networks,
+//! public-IP scarcity, VM lifecycle latencies, per-second/per-hour
+//! billing, and failure injection. The Infrastructure Manager talks to
+//! sites exclusively through [`CloudSite`]'s methods, mirroring the
+//! provider-API surface the real IM wraps via Apache Libcloud.
+
+pub mod failure;
+pub mod network;
+pub mod pricing;
+pub mod vm;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context};
+
+use crate::netsim::NetId;
+use crate::sim::SimTime;
+use crate::util::prng::Prng;
+
+pub use failure::{FailureModel, InjectionPlan, TransientDown};
+pub use network::{ip_to_string, NetworkId, NetworkManager};
+pub use pricing::{Granularity, Ledger, Price};
+pub use vm::{Vm, VmId, VmState};
+
+/// Cloud management framework flavour (affects which IM connector is
+/// "used"; behaviourally identical in the simulator apart from feature
+/// flags like private-network support).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Provider {
+    OpenStack,
+    Aws,
+    OpenNebula,
+}
+
+/// One instance type in a site's catalog.
+#[derive(Debug, Clone)]
+pub struct InstanceType {
+    pub name: String,
+    pub vcpus: u32,
+    pub mem_gb: f64,
+    pub price: Price,
+}
+
+/// Resource quotas enforced per deployment user.
+#[derive(Debug, Clone)]
+pub struct Quota {
+    pub max_vms: usize,
+    pub max_vcpus: u32,
+    pub max_public_ips: usize,
+}
+
+/// Latency model for provider control-plane operations (seconds).
+#[derive(Debug, Clone)]
+pub struct OpLatency {
+    /// Median VM request→running time; log-normal sigma alongside.
+    pub vm_boot_median: f64,
+    pub vm_boot_sigma: f64,
+    pub network_create: f64,
+    pub terminate: f64,
+}
+
+/// Static description of a site.
+#[derive(Debug, Clone)]
+pub struct SiteSpec {
+    pub name: String,
+    pub provider: Provider,
+    pub region: String,
+    pub instance_types: Vec<InstanceType>,
+    pub quota: Quota,
+    pub op_latency: OpLatency,
+    pub failure: FailureModel,
+    /// Whether users may create private L2 networks (challenge v in §1;
+    /// sites without it force stand-alone-node deployments, §3.5.4).
+    pub supports_private_networks: bool,
+    /// Monitored availability in [0,1] (input to orchestrator ranking).
+    pub availability: f64,
+}
+
+impl SiteSpec {
+    /// CESNET MetaCentrum Cloud (OpenStack) as used in the paper's §4.
+    /// Quota sized so only the FE + 2 WNs fit — the paper's step 2.
+    pub fn cesnet_metacentrum() -> SiteSpec {
+        SiteSpec {
+            name: "CESNET-MCC".into(),
+            provider: Provider::OpenStack,
+            region: "prague".into(),
+            instance_types: vec![
+                InstanceType {
+                    name: "standard.medium".into(),
+                    vcpus: 2,
+                    mem_gb: 4.0,
+                    price: Price::free(),
+                },
+                InstanceType {
+                    name: "standard.small".into(),
+                    vcpus: 1,
+                    mem_gb: 2.0,
+                    price: Price::free(),
+                },
+            ],
+            quota: Quota { max_vms: 3, max_vcpus: 6, max_public_ips: 1 },
+            op_latency: OpLatency {
+                vm_boot_median: 95.0,
+                vm_boot_sigma: 0.20,
+                network_create: 8.0,
+                terminate: 60.0,
+            },
+            failure: FailureModel::none(),
+            supports_private_networks: true,
+            availability: 0.97,
+        }
+    }
+
+    /// AWS us-east-2 (Ohio) as used in the paper's §4: t2.medium WNs
+    /// billed per second, t2.micro for the site vRouter.
+    pub fn aws_us_east_2() -> SiteSpec {
+        SiteSpec {
+            name: "AWS".into(),
+            provider: Provider::Aws,
+            region: "us-east-2".into(),
+            instance_types: vec![
+                InstanceType {
+                    name: "t2.medium".into(),
+                    vcpus: 2,
+                    mem_gb: 4.0,
+                    price: Price {
+                        usd_per_hour: 0.0464,
+                        granularity: Granularity::PerSecond,
+                    },
+                },
+                InstanceType {
+                    name: "t2.micro".into(),
+                    vcpus: 1,
+                    mem_gb: 1.0,
+                    price: Price {
+                        usd_per_hour: 0.0116,
+                        granularity: Granularity::PerSecond,
+                    },
+                },
+            ],
+            quota: Quota { max_vms: 20, max_vcpus: 40, max_public_ips: 5 },
+            op_latency: OpLatency {
+                vm_boot_median: 140.0,
+                vm_boot_sigma: 0.25,
+                network_create: 12.0,
+                // Full decommission (drain + EC2 terminate + dereg).
+                // Five of these serialized behind the workflow engine are
+                // the paper's "twenty extra minutes ... to power off".
+                terminate: 160.0,
+            },
+            failure: FailureModel::none(),
+            supports_private_networks: true,
+            availability: 0.999,
+        }
+    }
+
+    /// A generic OpenNebula research site (for multi-site benches).
+    pub fn opennebula(name: &str) -> SiteSpec {
+        SiteSpec {
+            name: name.into(),
+            provider: Provider::OpenNebula,
+            region: "eu".into(),
+            instance_types: vec![InstanceType {
+                name: "medium".into(),
+                vcpus: 2,
+                mem_gb: 4.0,
+                price: Price::free(),
+            }],
+            quota: Quota { max_vms: 8, max_vcpus: 16, max_public_ips: 2 },
+            op_latency: OpLatency {
+                vm_boot_median: 110.0,
+                vm_boot_sigma: 0.3,
+                network_create: 10.0,
+                terminate: 30.0,
+            },
+            failure: FailureModel::none(),
+            supports_private_networks: true,
+            availability: 0.95,
+        }
+    }
+}
+
+/// A VM creation request, as issued by the Infrastructure Manager.
+#[derive(Debug, Clone)]
+pub struct VmRequest {
+    pub name: String,
+    pub instance_type: String,
+    pub network: Option<NetworkId>,
+    pub public_ip: bool,
+}
+
+/// Outcome of a VM request: the id plus how long until it is Running
+/// (or fails, per `will_fail`).
+#[derive(Debug, Clone)]
+pub struct VmTicket {
+    pub vm: VmId,
+    pub boot_secs: f64,
+    pub will_fail: bool,
+}
+
+/// Live state of one cloud site.
+pub struct CloudSite {
+    pub spec: SiteSpec,
+    /// Index used for subnet carving and netsim location mapping.
+    pub site_index: u8,
+    pub net_id: NetId,
+    pub networks: NetworkManager,
+    vms: HashMap<VmId, Vm>,
+    next_vm: u64,
+    pub ledger: Ledger,
+    rng: Prng,
+}
+
+impl CloudSite {
+    pub fn new(spec: SiteSpec, site_index: u8, net_id: NetId, seed: u64)
+        -> CloudSite {
+        let quota_ips = spec.quota.max_public_ips;
+        CloudSite {
+            spec,
+            site_index,
+            net_id,
+            networks: NetworkManager::new(site_index, quota_ips),
+            vms: HashMap::new(),
+            next_vm: 0,
+            ledger: Ledger::default(),
+            rng: Prng::new(seed ^ 0xC10D),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    fn instance_type(&self, name: &str) -> anyhow::Result<&InstanceType> {
+        self.spec
+            .instance_types
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!(
+                "site {}: unknown instance type {name:?}", self.spec.name))
+    }
+
+    /// vCPUs currently counted against quota (alive or pending VMs).
+    pub fn used_vcpus(&self) -> u32 {
+        self.vms
+            .values()
+            .filter(|v| !matches!(v.state,
+                VmState::Terminated | VmState::Failed))
+            .map(|v| {
+                self.instance_type(&v.instance_type)
+                    .map(|t| t.vcpus)
+                    .unwrap_or(0)
+            })
+            .sum()
+    }
+
+    /// VMs currently counted against quota.
+    pub fn used_vms(&self) -> usize {
+        self.vms
+            .values()
+            .filter(|v| !matches!(v.state,
+                VmState::Terminated | VmState::Failed))
+            .count()
+    }
+
+    /// Create a private network; returns (id, creation latency seconds).
+    pub fn create_network(&mut self, name: &str)
+        -> anyhow::Result<(NetworkId, f64)> {
+        if !self.spec.supports_private_networks {
+            bail!("site {} does not support user-created private networks",
+                  self.spec.name);
+        }
+        let id = self.networks.create_network(name)?;
+        Ok((id, self.spec.op_latency.network_create))
+    }
+
+    /// Request a VM. Checks quota, allocates addresses, opens billing,
+    /// and samples the boot latency (and whether the boot will fail).
+    /// The caller (IM) schedules `complete_boot` after `boot_secs`.
+    pub fn request_vm(&mut self, req: &VmRequest, t: SimTime)
+        -> anyhow::Result<VmTicket> {
+        let itype = self.instance_type(&req.instance_type)?.clone();
+        if self.used_vms() + 1 > self.spec.quota.max_vms {
+            bail!("site {}: VM quota exceeded ({} max)", self.spec.name,
+                  self.spec.quota.max_vms);
+        }
+        if self.used_vcpus() + itype.vcpus > self.spec.quota.max_vcpus {
+            bail!("site {}: vCPU quota exceeded ({} max)", self.spec.name,
+                  self.spec.quota.max_vcpus);
+        }
+
+        let id = VmId(self.next_vm);
+        self.next_vm += 1;
+        let mut vm = Vm::new(id, &req.name, &req.instance_type, t);
+
+        if let Some(netid) = req.network {
+            let net = self
+                .networks
+                .get_mut(netid)
+                .with_context(|| format!("no network {netid:?}"))?;
+            vm.private_ip = Some(net.allocate()?);
+            vm.network = Some(netid);
+        }
+        if req.public_ip {
+            vm.public_ip = Some(self.networks.public_pool.allocate()?);
+        }
+
+        vm.transition(VmState::Booting, t)?;
+        self.ledger.open(&req.name, &req.instance_type, &itype.price, t);
+
+        let boot_secs = self.rng.lognormal(
+            self.spec.op_latency.vm_boot_median,
+            self.spec.op_latency.vm_boot_sigma,
+        );
+        let will_fail = self.spec.failure.boot_fails(&mut self.rng);
+        self.vms.insert(id, vm);
+        Ok(VmTicket { vm: id, boot_secs, will_fail })
+    }
+
+    /// Finish booting: Running on success, Failed (billing closed) if the
+    /// ticket said the boot would fail.
+    pub fn complete_boot(&mut self, id: VmId, failed: bool, t: SimTime)
+        -> anyhow::Result<VmState> {
+        let vm = self.vm_mut(id)?;
+        if failed {
+            vm.transition(VmState::Failed, t)?;
+            let name = vm.name.clone();
+            self.release_addresses(id)?;
+            self.ledger.close(&name, t);
+            Ok(VmState::Failed)
+        } else {
+            vm.transition(VmState::Running, t)?;
+            Ok(VmState::Running)
+        }
+    }
+
+    /// Begin termination; returns the provider-side latency. The caller
+    /// schedules `complete_termination` after it.
+    pub fn terminate_vm(&mut self, id: VmId, t: SimTime)
+        -> anyhow::Result<f64> {
+        let vm = self.vm_mut(id)?;
+        vm.transition(VmState::Terminating, t)?;
+        Ok(self.spec.op_latency.terminate)
+    }
+
+    /// Finish termination: close billing, release addresses.
+    pub fn complete_termination(&mut self, id: VmId, t: SimTime)
+        -> anyhow::Result<()> {
+        let vm = self.vm_mut(id)?;
+        vm.transition(VmState::Terminated, t)?;
+        let name = vm.name.clone();
+        self.release_addresses(id)?;
+        self.ledger.close(&name, t);
+        Ok(())
+    }
+
+    /// Hard-crash a running VM (failure injection).
+    pub fn crash_vm(&mut self, id: VmId, t: SimTime) -> anyhow::Result<()> {
+        let vm = self.vm_mut(id)?;
+        vm.transition(VmState::Failed, t)?;
+        let name = vm.name.clone();
+        self.release_addresses(id)?;
+        self.ledger.close(&name, t);
+        Ok(())
+    }
+
+    fn release_addresses(&mut self, id: VmId) -> anyhow::Result<()> {
+        let (private_ip, public_ip, network) = {
+            let vm = self.vm_mut(id)?;
+            let out = (vm.private_ip, vm.public_ip, vm.network);
+            vm.private_ip = None;
+            vm.public_ip = None;
+            out
+        };
+        if let (Some(ip), Some(netid)) = (private_ip, network) {
+            if let Some(net) = self.networks.get_mut(netid) {
+                net.release(ip);
+            }
+        }
+        if let Some(ip) = public_ip {
+            self.networks.public_pool.release(ip);
+        }
+        Ok(())
+    }
+
+    pub fn vm(&self, id: VmId) -> anyhow::Result<&Vm> {
+        self.vms.get(&id).with_context(|| format!("no VM {id:?}"))
+    }
+
+    fn vm_mut(&mut self, id: VmId) -> anyhow::Result<&mut Vm> {
+        self.vms.get_mut(&id).with_context(|| format!("no VM {id:?}"))
+    }
+
+    pub fn vms(&self) -> impl Iterator<Item = &Vm> {
+        self.vms.values()
+    }
+
+    /// Total site cost as of `t`.
+    pub fn total_cost(&self, t: SimTime) -> f64 {
+        self.ledger.total_cost(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn aws() -> CloudSite {
+        CloudSite::new(SiteSpec::aws_us_east_2(), 1, NetId(1), 42)
+    }
+
+    fn t(s: f64) -> SimTime {
+        SimTime(s)
+    }
+
+    fn req(name: &str, net: Option<NetworkId>, public: bool) -> VmRequest {
+        VmRequest {
+            name: name.into(),
+            instance_type: "t2.medium".into(),
+            network: net,
+            public_ip: public,
+        }
+    }
+
+    #[test]
+    fn full_vm_lifecycle_with_network() {
+        let mut s = aws();
+        let (net, lat) = s.create_network("dep-net").unwrap();
+        assert!(lat > 0.0);
+        let ticket = s.request_vm(&req("wn1", Some(net), false), t(0.0))
+            .unwrap();
+        assert!(ticket.boot_secs > 30.0 && ticket.boot_secs < 600.0,
+                "{}", ticket.boot_secs);
+        assert!(!ticket.will_fail);
+        let st = s.complete_boot(ticket.vm, ticket.will_fail,
+                                 t(ticket.boot_secs)).unwrap();
+        assert_eq!(st, VmState::Running);
+        let vm = s.vm(ticket.vm).unwrap();
+        assert!(vm.private_ip.is_some());
+        assert!(vm.public_ip.is_none());
+
+        let term = s.terminate_vm(ticket.vm, t(1000.0)).unwrap();
+        s.complete_termination(ticket.vm, t(1000.0 + term)).unwrap();
+        assert_eq!(s.used_vms(), 0);
+        assert_eq!(s.networks.get(net).unwrap().allocated_count(), 0);
+        assert!(s.total_cost(t(2000.0)) > 0.0);
+    }
+
+    #[test]
+    fn vm_quota_enforced() {
+        let mut s = CloudSite::new(SiteSpec::cesnet_metacentrum(), 0,
+                                   NetId(0), 1);
+        let r = VmRequest {
+            name: "n".into(),
+            instance_type: "standard.medium".into(),
+            network: None,
+            public_ip: false,
+        };
+        for i in 0..3 {
+            let mut ri = r.clone();
+            ri.name = format!("n{i}");
+            s.request_vm(&ri, t(0.0)).unwrap();
+        }
+        // CESNET quota is 3 VMs — the paper's on-prem ceiling.
+        assert!(s.request_vm(&r, t(0.0)).is_err());
+    }
+
+    #[test]
+    fn public_ip_quota_enforced() {
+        let mut s = CloudSite::new(SiteSpec::cesnet_metacentrum(), 0,
+                                   NetId(0), 1);
+        let mk = |name: &str, public| VmRequest {
+            name: name.into(),
+            instance_type: "standard.small".into(),
+            network: None,
+            public_ip: public,
+        };
+        s.request_vm(&mk("fe", true), t(0.0)).unwrap();
+        // Only 1 public IP at CESNET (challenge iv in §1).
+        assert!(s.request_vm(&mk("fe2", true), t(0.0)).is_err());
+        // But private-only VMs still fit.
+        s.request_vm(&mk("wn", false), t(0.0)).unwrap();
+    }
+
+    #[test]
+    fn boot_failure_closes_billing_and_releases() {
+        let mut s = aws();
+        s.spec.failure = FailureModel { boot_failure_prob: 1.0,
+                                        ..FailureModel::none() };
+        let (net, _) = s.create_network("n").unwrap();
+        let ticket = s.request_vm(&req("doomed", Some(net), true), t(0.0))
+            .unwrap();
+        assert!(ticket.will_fail);
+        let st = s.complete_boot(ticket.vm, true, t(60.0)).unwrap();
+        assert_eq!(st, VmState::Failed);
+        assert_eq!(s.used_vms(), 0);
+        assert_eq!(s.networks.public_pool.in_use(), 0);
+        // Billing covers the 60 failed seconds only.
+        let cost = s.total_cost(t(7200.0));
+        let expect = 0.0464 * 60.0 / 3600.0;
+        assert!((cost - expect).abs() < 1e-9, "{cost}");
+    }
+
+    #[test]
+    fn crash_releases_resources() {
+        let mut s = aws();
+        let ticket = s.request_vm(&req("wn", None, false), t(0.0)).unwrap();
+        s.complete_boot(ticket.vm, false, t(100.0)).unwrap();
+        s.crash_vm(ticket.vm, t(200.0)).unwrap();
+        assert_eq!(s.used_vms(), 0);
+        assert_eq!(s.vm(ticket.vm).unwrap().state, VmState::Failed);
+    }
+
+    #[test]
+    fn unknown_instance_type_rejected() {
+        let mut s = aws();
+        let r = VmRequest {
+            name: "x".into(),
+            instance_type: "p5.48xlarge".into(),
+            network: None,
+            public_ip: false,
+        };
+        assert!(s.request_vm(&r, t(0.0)).is_err());
+    }
+
+    #[test]
+    fn boot_latency_is_lognormal_around_median() {
+        let mut s = aws();
+        let mut secs = Vec::new();
+        for i in 0..40 {
+            let ticket = s
+                .request_vm(&req(&format!("v{i}"), None, false), t(0.0))
+                .unwrap();
+            secs.push(ticket.boot_secs);
+            // Free quota again.
+            s.complete_boot(ticket.vm, false, t(1.0)).unwrap();
+            s.crash_vm(ticket.vm, t(2.0)).unwrap();
+        }
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = secs[20];
+        assert!((median - 140.0).abs() < 40.0, "median={median}");
+    }
+}

@@ -1,0 +1,270 @@
+//! Site-local virtual networking: private L2 networks with DHCP-style
+//! address allocation and a (scarce) public IPv4 pool.
+//!
+//! The paper emphasises minimising public-IPv4 usage (challenge iv in §1):
+//! only the front-end / vRouter CP needs one. The pool here enforces that
+//! scarcity so benches can show deployments fail when over-requesting.
+
+use std::collections::HashMap;
+
+use anyhow::bail;
+
+/// Site-local private network identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NetworkId(pub u64);
+
+/// Render an IPv4 address stored as u32.
+pub fn ip_to_string(ip: u32) -> String {
+    format!(
+        "{}.{}.{}.{}",
+        (ip >> 24) & 0xFF,
+        (ip >> 16) & 0xFF,
+        (ip >> 8) & 0xFF,
+        ip & 0xFF
+    )
+}
+
+/// A user-created private L2 network (one per deployment per site).
+#[derive(Debug, Clone)]
+pub struct PrivateNetwork {
+    pub id: NetworkId,
+    pub name: String,
+    /// Network base address (e.g. 10.e.d.0 for a /24).
+    pub cidr_base: u32,
+    pub prefix_len: u8,
+    next_host: u32,
+    allocated: Vec<u32>,
+}
+
+impl PrivateNetwork {
+    pub fn new(id: NetworkId, name: &str, cidr_base: u32, prefix_len: u8)
+        -> PrivateNetwork {
+        PrivateNetwork {
+            id,
+            name: name.to_string(),
+            cidr_base,
+            prefix_len,
+            // .0 is the network address, .1 is reserved for the gateway
+            // (the vRouter / front-end per the paper's Figure 1).
+            next_host: 2,
+            allocated: Vec::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> u32 {
+        (1u32 << (32 - self.prefix_len)) - 3 // network, gateway, broadcast
+    }
+
+    /// The gateway address (held by the local vRouter or the FE).
+    pub fn gateway_ip(&self) -> u32 {
+        self.cidr_base + 1
+    }
+
+    /// DHCP-style allocation of the next free host address.
+    pub fn allocate(&mut self) -> anyhow::Result<u32> {
+        if self.allocated.len() as u32 >= self.capacity() {
+            bail!("network {} exhausted ({} hosts)", self.name,
+                  self.capacity());
+        }
+        let ip = self.cidr_base + self.next_host;
+        self.next_host += 1;
+        self.allocated.push(ip);
+        Ok(ip)
+    }
+
+    pub fn release(&mut self, ip: u32) {
+        self.allocated.retain(|&a| a != ip);
+    }
+
+    pub fn allocated_count(&self) -> usize {
+        self.allocated.len()
+    }
+
+    pub fn cidr(&self) -> String {
+        format!("{}/{}", ip_to_string(self.cidr_base), self.prefix_len)
+    }
+
+    pub fn contains(&self, ip: u32) -> bool {
+        let mask = !0u32 << (32 - self.prefix_len);
+        (ip & mask) == self.cidr_base
+    }
+}
+
+/// Finite pool of public IPv4 addresses (floating IPs).
+#[derive(Debug, Clone)]
+pub struct PublicIpPool {
+    base: u32,
+    quota: usize,
+    in_use: Vec<u32>,
+    next: u32,
+}
+
+impl PublicIpPool {
+    pub fn new(base: u32, quota: usize) -> PublicIpPool {
+        PublicIpPool { base, quota, in_use: Vec::new(), next: 0 }
+    }
+
+    pub fn allocate(&mut self) -> anyhow::Result<u32> {
+        if self.in_use.len() >= self.quota {
+            bail!("public IPv4 quota exhausted ({} in use)", self.quota);
+        }
+        let ip = self.base + self.next;
+        self.next += 1;
+        self.in_use.push(ip);
+        Ok(ip)
+    }
+
+    pub fn release(&mut self, ip: u32) {
+        self.in_use.retain(|&a| a != ip);
+    }
+
+    pub fn available(&self) -> usize {
+        self.quota - self.in_use.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.in_use.len()
+    }
+}
+
+/// Manager for all networks in a site; hands out non-overlapping /24s
+/// from 10.X.0.0/16 where X is the site index (so subnets are unique
+/// across the whole hybrid deployment, as the vRouter CP requires when
+/// assigning ranges to clients).
+#[derive(Debug)]
+pub struct NetworkManager {
+    site_index: u8,
+    networks: HashMap<NetworkId, PrivateNetwork>,
+    next_id: u64,
+    next_subnet: u8,
+    pub public_pool: PublicIpPool,
+}
+
+impl NetworkManager {
+    pub fn new(site_index: u8, public_ip_quota: usize) -> NetworkManager {
+        // Public pool base: 198.51.N.0 (TEST-NET-2) per site.
+        let pub_base = (198u32 << 24) | (51 << 16) | ((site_index as u32) << 8);
+        NetworkManager {
+            site_index,
+            networks: HashMap::new(),
+            next_id: 0,
+            next_subnet: 0,
+            public_pool: PublicIpPool::new(pub_base, public_ip_quota),
+        }
+    }
+
+    /// Create a fresh private /24.
+    pub fn create_network(&mut self, name: &str)
+        -> anyhow::Result<NetworkId> {
+        if self.next_subnet == 255 {
+            bail!("site {}: subnet space exhausted", self.site_index);
+        }
+        let id = NetworkId(self.next_id);
+        self.next_id += 1;
+        let base = (10u32 << 24)
+            | ((self.site_index as u32) << 16)
+            | ((self.next_subnet as u32) << 8);
+        self.next_subnet += 1;
+        self.networks.insert(id, PrivateNetwork::new(id, name, base, 24));
+        Ok(id)
+    }
+
+    pub fn get(&self, id: NetworkId) -> Option<&PrivateNetwork> {
+        self.networks.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: NetworkId) -> Option<&mut PrivateNetwork> {
+        self.networks.get_mut(&id)
+    }
+
+    pub fn delete_network(&mut self, id: NetworkId) -> anyhow::Result<()> {
+        match self.networks.get(&id) {
+            None => bail!("no such network {id:?}"),
+            Some(n) if n.allocated_count() > 0 => {
+                bail!("network {} still has {} attached addresses",
+                      n.name, n.allocated_count())
+            }
+            Some(_) => {
+                self.networks.remove(&id);
+                Ok(())
+            }
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.networks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ip_rendering() {
+        assert_eq!(ip_to_string((10 << 24) | (1 << 16) | (2 << 8) | 3),
+                   "10.1.2.3");
+    }
+
+    #[test]
+    fn private_network_allocation() {
+        let mut n = PrivateNetwork::new(NetworkId(0), "net0",
+                                        (10 << 24) | (1 << 16), 24);
+        assert_eq!(n.cidr(), "10.1.0.0/24");
+        assert_eq!(ip_to_string(n.gateway_ip()), "10.1.0.1");
+        let a = n.allocate().unwrap();
+        let b = n.allocate().unwrap();
+        assert_eq!(ip_to_string(a), "10.1.0.2");
+        assert_eq!(ip_to_string(b), "10.1.0.3");
+        assert!(n.contains(a));
+        assert!(!n.contains((10 << 24) | (2 << 16) | 5));
+        n.release(a);
+        assert_eq!(n.allocated_count(), 1);
+    }
+
+    #[test]
+    fn network_exhaustion() {
+        let mut n = PrivateNetwork::new(NetworkId(0), "tiny",
+                                        (10 << 24) | (9 << 16), 30);
+        // /30 => 4 addresses - 3 reserved = 1 host
+        assert_eq!(n.capacity(), 1);
+        n.allocate().unwrap();
+        assert!(n.allocate().is_err());
+    }
+
+    #[test]
+    fn public_pool_quota() {
+        let mut p = PublicIpPool::new(198 << 24, 2);
+        let a = p.allocate().unwrap();
+        let _b = p.allocate().unwrap();
+        assert!(p.allocate().is_err());
+        assert_eq!(p.available(), 0);
+        p.release(a);
+        assert_eq!(p.available(), 1);
+        p.allocate().unwrap();
+    }
+
+    #[test]
+    fn manager_hands_out_disjoint_subnets() {
+        let mut m = NetworkManager::new(3, 1);
+        let a = m.create_network("a").unwrap();
+        let b = m.create_network("b").unwrap();
+        let na = m.get(a).unwrap().cidr();
+        let nb = m.get(b).unwrap().cidr();
+        assert_eq!(na, "10.3.0.0/24");
+        assert_eq!(nb, "10.3.1.0/24");
+        assert_eq!(m.count(), 2);
+    }
+
+    #[test]
+    fn delete_requires_empty() {
+        let mut m = NetworkManager::new(0, 1);
+        let id = m.create_network("x").unwrap();
+        m.get_mut(id).unwrap().allocate().unwrap();
+        assert!(m.delete_network(id).is_err());
+        let ip = m.get(id).unwrap().cidr_base + 2;
+        m.get_mut(id).unwrap().release(ip);
+        m.delete_network(id).unwrap();
+        assert_eq!(m.count(), 0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Virtual-machine lifecycle state machine.
+
+use crate::sim::SimTime;
+
+/// Site-local VM identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VmId(pub u64);
+
+impl std::fmt::Display for VmId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "vm-{}", self.0)
+    }
+}
+
+/// Lifecycle states. Transitions are enforced by [`Vm::transition`]:
+///
+/// ```text
+/// Requested -> Booting -> Running -> Terminating -> Terminated
+///      \           \          \-> Failed
+///       \           \-> Failed
+///        \-> Failed  (quota race / placement error)
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VmState {
+    Requested,
+    Booting,
+    Running,
+    Terminating,
+    Terminated,
+    Failed,
+}
+
+impl VmState {
+    /// Is the VM incurring cost in this state?
+    pub fn billable(self) -> bool {
+        matches!(self, VmState::Booting | VmState::Running
+                 | VmState::Terminating)
+    }
+
+    fn can_go(self, next: VmState) -> bool {
+        use VmState::*;
+        matches!(
+            (self, next),
+            (Requested, Booting)
+                | (Booting, Running)
+                | (Running, Terminating)
+                | (Terminating, Terminated)
+                | (Requested, Failed)
+                | (Booting, Failed)
+                | (Running, Failed)
+                | (Failed, Terminating) // cleanup of a failed VM
+        )
+    }
+}
+
+/// One simulated VM.
+#[derive(Debug, Clone)]
+pub struct Vm {
+    pub id: VmId,
+    /// Deployment-level name, e.g. "vnode-3" or "front-end".
+    pub name: String,
+    pub instance_type: String,
+    pub state: VmState,
+    pub requested_at: SimTime,
+    /// Billing start (set on Booting — providers bill from launch).
+    pub billing_start: Option<SimTime>,
+    /// Billing end (set on Terminated / Failed).
+    pub billing_end: Option<SimTime>,
+    /// Private IP within its site network.
+    pub private_ip: Option<u32>,
+    /// Public IP if one was allocated.
+    pub public_ip: Option<u32>,
+    /// Site-local network the VM is attached to.
+    pub network: Option<super::network::NetworkId>,
+    pub state_log: Vec<(SimTime, VmState)>,
+}
+
+impl Vm {
+    pub fn new(id: VmId, name: &str, instance_type: &str, t: SimTime) -> Vm {
+        Vm {
+            id,
+            name: name.to_string(),
+            instance_type: instance_type.to_string(),
+            state: VmState::Requested,
+            requested_at: t,
+            billing_start: None,
+            billing_end: None,
+            private_ip: None,
+            public_ip: None,
+            network: None,
+            state_log: vec![(t, VmState::Requested)],
+        }
+    }
+
+    /// Apply a lifecycle transition, maintaining billing timestamps.
+    pub fn transition(&mut self, next: VmState, t: SimTime)
+        -> anyhow::Result<()> {
+        if !self.state.can_go(next) {
+            anyhow::bail!(
+                "{}: illegal transition {:?} -> {:?}", self.name, self.state,
+                next
+            );
+        }
+        if next == VmState::Booting && self.billing_start.is_none() {
+            self.billing_start = Some(t);
+        }
+        if matches!(next, VmState::Terminated | VmState::Failed)
+            && self.billing_end.is_none()
+        {
+            self.billing_end = Some(t);
+        }
+        self.state = next;
+        self.state_log.push((t, next));
+        Ok(())
+    }
+
+    /// Billable seconds as of time `t` (or the full period if ended).
+    pub fn billable_secs(&self, now: SimTime) -> f64 {
+        match self.billing_start {
+            None => 0.0,
+            Some(s) => {
+                let end = self.billing_end.map(|e| e.0).unwrap_or(now.0);
+                (end - s.0).max(0.0)
+            }
+        }
+    }
+
+    pub fn is_alive(&self) -> bool {
+        matches!(self.state, VmState::Booting | VmState::Running)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime(s)
+    }
+
+    #[test]
+    fn happy_path_lifecycle() {
+        let mut vm = Vm::new(VmId(1), "wn1", "t2.medium", t(0.0));
+        vm.transition(VmState::Booting, t(1.0)).unwrap();
+        vm.transition(VmState::Running, t(120.0)).unwrap();
+        vm.transition(VmState::Terminating, t(500.0)).unwrap();
+        vm.transition(VmState::Terminated, t(530.0)).unwrap();
+        assert_eq!(vm.billable_secs(t(1000.0)), 529.0);
+        assert_eq!(vm.state_log.len(), 5);
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut vm = Vm::new(VmId(1), "x", "t", t(0.0));
+        assert!(vm.transition(VmState::Running, t(1.0)).is_err());
+        vm.transition(VmState::Booting, t(1.0)).unwrap();
+        assert!(vm.transition(VmState::Terminated, t(2.0)).is_err());
+        assert!(vm.transition(VmState::Requested, t(2.0)).is_err());
+    }
+
+    #[test]
+    fn failure_ends_billing() {
+        let mut vm = Vm::new(VmId(2), "y", "t", t(0.0));
+        vm.transition(VmState::Booting, t(10.0)).unwrap();
+        vm.transition(VmState::Running, t(100.0)).unwrap();
+        vm.transition(VmState::Failed, t(200.0)).unwrap();
+        assert_eq!(vm.billable_secs(t(999.0)), 190.0);
+        assert!(!vm.is_alive());
+        // Failed VMs can still be cleaned up.
+        vm.transition(VmState::Terminating, t(210.0)).unwrap();
+    }
+
+    #[test]
+    fn ongoing_billing_tracks_now() {
+        let mut vm = Vm::new(VmId(3), "z", "t", t(0.0));
+        vm.transition(VmState::Booting, t(5.0)).unwrap();
+        assert_eq!(vm.billable_secs(t(65.0)), 60.0);
+    }
+}

@@ -1,0 +1,396 @@
+//! CLUES elasticity engine (§3.4).
+//!
+//! CLUES monitors the LRMS job queue and node states and decides when to
+//! power worker nodes on (pending jobs, no free slots) and off (idle
+//! beyond a timeout). The decision function is pure over a snapshot, so
+//! it is unit-testable without the full simulation; the cluster world
+//! executes the returned [`Action`]s through the orchestrator.
+//!
+//! Behaviours reproduced from the paper's §4.2:
+//! * pending power-offs are **cancelled** when new jobs arrive early,
+//! * a node whose LRMS state reads *down* for consecutive polls is marked
+//!   **failed** and powered off "to avoid unnecessary costs by failed
+//!   VMs", then powered on again if jobs remain (the vnode-5 cycle).
+
+use std::collections::HashMap;
+
+use crate::lrms::{Lrms, NodeHealth};
+use crate::sim::SimTime;
+
+/// CLUES configuration (a subset of its real policy knobs).
+#[derive(Debug, Clone)]
+pub struct CluesConfig {
+    /// Monitor poll period, seconds.
+    pub poll_interval_s: f64,
+    /// Idle time before a node is powered off.
+    pub idle_timeout_s: f64,
+    /// Elasticity bounds on *worker* count.
+    pub min_workers: u32,
+    pub max_workers: u32,
+    /// Consecutive down polls before a node is declared failed.
+    pub down_polls_to_fail: u32,
+    /// Slots per worker (the paper's jobs take a whole node → 1).
+    pub slots_per_worker: u32,
+}
+
+impl Default for CluesConfig {
+    fn default() -> Self {
+        CluesConfig {
+            poll_interval_s: 60.0,
+            idle_timeout_s: 300.0,
+            min_workers: 0,
+            max_workers: 5,
+            down_polls_to_fail: 2,
+            slots_per_worker: 1,
+        }
+    }
+}
+
+/// Power state CLUES tracks per worker node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PowerState {
+    /// Requested from the orchestrator; not yet in the LRMS.
+    PoweringOn,
+    /// Alive and registered in the LRMS.
+    On,
+    /// Power-off requested (queued or executing at the orchestrator).
+    PoweringOff,
+    /// Declared failed (down too long).
+    Failed,
+    /// Gone.
+    Off,
+}
+
+/// Decisions CLUES emits; the cluster world executes them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Ask the orchestrator for `count` new worker nodes.
+    PowerOn { count: u32 },
+    /// Ask the orchestrator to decommission `node`.
+    PowerOff { node: String },
+    /// Revoke a still-queued power-off for `node`.
+    CancelPowerOff { node: String },
+    /// Declare `node` failed (world should power it off and may replace
+    /// it on a later tick).
+    MarkFailed { node: String },
+}
+
+#[derive(Debug, Clone)]
+struct Tracked {
+    state: PowerState,
+    consecutive_down: u32,
+}
+
+/// The elasticity engine.
+pub struct Clues {
+    pub cfg: CluesConfig,
+    nodes: HashMap<String, Tracked>,
+    /// Decision log for reports: (t, action).
+    pub log: Vec<(SimTime, Action)>,
+}
+
+impl Clues {
+    pub fn new(cfg: CluesConfig) -> Clues {
+        Clues { cfg, nodes: HashMap::new(), log: Vec::new() }
+    }
+
+    /// Register a node under CLUES management (e.g. initial workers, or
+    /// a node the orchestrator just started provisioning).
+    pub fn track(&mut self, name: &str, state: PowerState) {
+        self.nodes.insert(name.to_string(), Tracked {
+            state,
+            consecutive_down: 0,
+        });
+    }
+
+    pub fn set_state(&mut self, name: &str, state: PowerState) {
+        if let Some(n) = self.nodes.get_mut(name) {
+            n.state = state;
+            if state == PowerState::On {
+                n.consecutive_down = 0;
+            }
+        }
+    }
+
+    pub fn state(&self, name: &str) -> Option<PowerState> {
+        self.nodes.get(name).map(|n| n.state)
+    }
+
+    pub fn forget(&mut self, name: &str) {
+        self.nodes.remove(name);
+    }
+
+    fn count(&self, state: PowerState) -> u32 {
+        self.nodes.values().filter(|n| n.state == state).count() as u32
+    }
+
+    /// Workers that count against max (anything not Off/Failed).
+    fn active_workers(&self) -> u32 {
+        self.nodes
+            .values()
+            .filter(|n| !matches!(n.state,
+                PowerState::Off | PowerState::Failed))
+            .count() as u32
+    }
+
+    /// One monitor tick. `lrms` provides queue + node state; `is_down`
+    /// overrides health for transient-flap injection (it is what the
+    /// monitor *reads*, which may disagree with reality — vnode-5).
+    pub fn tick(
+        &mut self,
+        t: SimTime,
+        lrms: &dyn Lrms,
+        is_down: &dyn Fn(&str) -> bool,
+    ) -> Vec<Action> {
+        let mut actions = Vec::new();
+        let nodes = lrms.nodes();
+
+        // --- 1. Failure detection on On nodes ----------------------------
+        for info in &nodes {
+            let Some(tracked) = self.nodes.get_mut(&info.name) else {
+                continue;
+            };
+            if tracked.state != PowerState::On {
+                continue;
+            }
+            let down = is_down(&info.name)
+                || info.health == NodeHealth::Down;
+            if down {
+                tracked.consecutive_down += 1;
+                if tracked.consecutive_down >= self.cfg.down_polls_to_fail {
+                    tracked.state = PowerState::Failed;
+                    actions.push(Action::MarkFailed {
+                        node: info.name.clone(),
+                    });
+                }
+            } else {
+                tracked.consecutive_down = 0;
+            }
+        }
+
+        let pending = lrms.pending() as u32;
+
+        // --- 2. Cancel pending power-offs when work arrives ---------------
+        if pending > 0 {
+            for (name, tracked) in self.nodes.iter_mut() {
+                if tracked.state == PowerState::PoweringOff {
+                    actions.push(Action::CancelPowerOff {
+                        node: name.clone(),
+                    });
+                    // The world confirms the cancellation (set_state(On))
+                    // only if the orchestrator could still revoke it.
+                }
+            }
+        }
+
+        // --- 3. Scale up ---------------------------------------------------
+        let free_slots: u32 = nodes
+            .iter()
+            .filter(|n| {
+                n.health == NodeHealth::Up
+                    && !is_down(&n.name)
+                    && self.nodes.get(&n.name).map(|t| t.state
+                        == PowerState::On).unwrap_or(false)
+            })
+            .map(|n| n.slots - n.used_slots)
+            .sum();
+        let incoming = self.count(PowerState::PoweringOn)
+            * self.cfg.slots_per_worker;
+        // Nodes with a cancel in flight will come back too.
+        let returning = if pending > 0 {
+            self.count(PowerState::PoweringOff) * self.cfg.slots_per_worker
+        } else {
+            0
+        };
+        let deficit = pending.saturating_sub(free_slots + incoming
+                                             + returning);
+        if deficit > 0 {
+            let headroom = self
+                .cfg
+                .max_workers
+                .saturating_sub(self.active_workers());
+            let want = deficit.div_ceil(self.cfg.slots_per_worker)
+                .min(headroom);
+            if want > 0 {
+                actions.push(Action::PowerOn { count: want });
+            }
+        }
+
+        // --- 4. Scale down ---------------------------------------------------
+        if pending == 0 {
+            let mut on_workers: Vec<&crate::lrms::NodeInfo> = nodes
+                .iter()
+                .filter(|n| {
+                    self.nodes.get(&n.name).map(|t| t.state
+                        == PowerState::On).unwrap_or(false)
+                })
+                .collect();
+            // Power off the longest-idle nodes first.
+            on_workers.sort_by(|a, b| {
+                let ia = a.idle_since.map(|s| s.0).unwrap_or(f64::MAX);
+                let ib = b.idle_since.map(|s| s.0).unwrap_or(f64::MAX);
+                ia.partial_cmp(&ib).unwrap()
+            });
+            let mut removable = self
+                .active_workers()
+                .saturating_sub(self.cfg.min_workers);
+            for info in on_workers {
+                if removable == 0 {
+                    break;
+                }
+                let idle_long_enough = info
+                    .idle_since
+                    .map(|s| t.0 - s.0 >= self.cfg.idle_timeout_s)
+                    .unwrap_or(false);
+                if info.used_slots == 0 && idle_long_enough {
+                    if let Some(tr) = self.nodes.get_mut(&info.name) {
+                        tr.state = PowerState::PoweringOff;
+                    }
+                    actions.push(Action::PowerOff {
+                        node: info.name.clone(),
+                    });
+                    removable -= 1;
+                }
+            }
+        }
+
+        for a in &actions {
+            self.log.push((t, a.clone()));
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lrms::{Lrms, Slurm};
+
+    fn no_flap(_: &str) -> bool {
+        false
+    }
+
+    fn setup(workers: &[&str]) -> (Slurm, Clues) {
+        let mut lrms = Slurm::new();
+        let mut clues = Clues::new(CluesConfig {
+            idle_timeout_s: 300.0,
+            max_workers: 5,
+            ..CluesConfig::default()
+        });
+        for w in workers {
+            lrms.register_node(w, 1, SimTime(0.0));
+            clues.track(w, PowerState::On);
+        }
+        (lrms, clues)
+    }
+
+    #[test]
+    fn powers_on_for_pending_jobs_up_to_max() {
+        let (mut lrms, mut clues) = setup(&["vnode-1", "vnode-2"]);
+        for i in 0..50 {
+            lrms.submit(&format!("j{i}"), 1, SimTime(0.0));
+        }
+        lrms.schedule(SimTime(0.0)); // fills both nodes
+        let actions = clues.tick(SimTime(60.0), &lrms, &no_flap);
+        // 48 pending, max_workers 5, 2 active → 3 more (the paper's AWS 3)
+        assert_eq!(actions, vec![Action::PowerOn { count: 3 }]);
+    }
+
+    #[test]
+    fn no_power_on_while_enough_incoming() {
+        let (mut lrms, mut clues) = setup(&["vnode-1"]);
+        clues.track("vnode-2", PowerState::PoweringOn);
+        lrms.submit("a", 1, SimTime(0.0));
+        lrms.schedule(SimTime(0.0));
+        lrms.submit("b", 1, SimTime(1.0));
+        // 1 pending, 1 incoming → no action.
+        let actions = clues.tick(SimTime(60.0), &lrms, &no_flap);
+        assert!(actions.is_empty(), "{actions:?}");
+    }
+
+    #[test]
+    fn powers_off_idle_nodes_after_timeout() {
+        let (lrms, mut clues) = setup(&["vnode-1", "vnode-2"]);
+        // Everything idle since t=0.
+        let none = clues.tick(SimTime(100.0), &lrms, &no_flap);
+        assert!(none.is_empty()); // not idle long enough
+        let actions = clues.tick(SimTime(400.0), &lrms, &no_flap);
+        assert_eq!(actions.len(), 2);
+        assert!(actions.iter().all(|a| matches!(a,
+            Action::PowerOff { .. })));
+        assert_eq!(clues.state("vnode-1"), Some(PowerState::PoweringOff));
+    }
+
+    #[test]
+    fn min_workers_respected_on_scale_down() {
+        let (lrms, mut clues) = setup(&["vnode-1", "vnode-2"]);
+        clues.cfg.min_workers = 1;
+        let actions = clues.tick(SimTime(1000.0), &lrms, &no_flap);
+        assert_eq!(actions.len(), 1, "{actions:?}");
+    }
+
+    #[test]
+    fn cancels_pending_poweroff_when_jobs_arrive() {
+        let (mut lrms, mut clues) = setup(&["vnode-1"]);
+        clues.set_state("vnode-1", PowerState::PoweringOff);
+        lrms.submit("late-job", 1, SimTime(500.0));
+        let actions = clues.tick(SimTime(510.0), &lrms, &no_flap);
+        assert!(actions.contains(&Action::CancelPowerOff {
+            node: "vnode-1".into()
+        }), "{actions:?}");
+        // And it does NOT immediately also power on a new node, because
+        // the returning node covers the single pending job.
+        assert!(!actions.iter().any(|a| matches!(a,
+            Action::PowerOn { .. })), "{actions:?}");
+    }
+
+    #[test]
+    fn transient_down_marks_failed_after_threshold() {
+        let (lrms, mut clues) = setup(&["vnode-5"]);
+        let flap = |n: &str| n == "vnode-5";
+        let a1 = clues.tick(SimTime(60.0), &lrms, &flap);
+        assert!(a1.is_empty()); // first down poll: tolerated
+        let a2 = clues.tick(SimTime(120.0), &lrms, &flap);
+        assert_eq!(a2, vec![Action::MarkFailed { node: "vnode-5".into() }]);
+        assert_eq!(clues.state("vnode-5"), Some(PowerState::Failed));
+    }
+
+    #[test]
+    fn down_counter_resets_on_recovery() {
+        let (lrms, mut clues) = setup(&["vnode-5"]);
+        let flap = |n: &str| n == "vnode-5";
+        clues.tick(SimTime(60.0), &lrms, &flap);
+        clues.tick(SimTime(120.0), &lrms, &no_flap); // recovered
+        let a3 = clues.tick(SimTime(180.0), &lrms, &flap);
+        assert!(a3.is_empty()); // counter restarted
+    }
+
+    #[test]
+    fn failed_node_replaced_when_jobs_pending() {
+        let (mut lrms, mut clues) = setup(&["vnode-5"]);
+        for i in 0..3 {
+            lrms.submit(&format!("j{i}"), 1, SimTime(0.0));
+        }
+        lrms.schedule(SimTime(0.0));
+        let flap = |n: &str| n == "vnode-5";
+        clues.tick(SimTime(60.0), &lrms, &flap);
+        let a2 = clues.tick(SimTime(120.0), &lrms, &flap);
+        assert!(a2.contains(&Action::MarkFailed { node: "vnode-5".into() }));
+        // vnode-5 no longer counts as capacity → power-on for the queue
+        // (the paper: "since there are remaining jobs, CLUES powers it on
+        // again").
+        assert!(a2.iter().any(|a| matches!(a, Action::PowerOn { .. })),
+                "{a2:?}");
+    }
+
+    #[test]
+    fn respects_max_workers() {
+        let (mut lrms, mut clues) = setup(&["w1", "w2", "w3", "w4", "w5"]);
+        for i in 0..99 {
+            lrms.submit(&format!("j{i}"), 1, SimTime(0.0));
+        }
+        lrms.schedule(SimTime(0.0));
+        let actions = clues.tick(SimTime(60.0), &lrms, &no_flap);
+        assert!(actions.is_empty(), "at max: {actions:?}");
+    }
+}

@@ -1,0 +1,142 @@
+//! Ansible-like contextualization pipeline.
+//!
+//! The IM configures every VM from the front-end over SSH reverse
+//! tunnels. Each node role runs a sequence of stages (package installs,
+//! service config, NFS mounts, vRouter setup…); stage durations are
+//! sampled around realistic medians so a worker node lands at the paper's
+//! ~13–15 minutes of configuration time (which, plus VM boot and the
+//! orchestrator's serialized workflow, yields the observed ~19–20 min
+//! node power-on).
+
+use crate::tosca::LrmsKind;
+use crate::util::prng::Prng;
+
+/// Node roles the IM knows how to contextualize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeRole {
+    /// Cluster front-end: LRMS controller + NFS server + vRouter CP.
+    FrontEnd,
+    /// Worker node.
+    WorkerNode,
+    /// Per-site vRouter appliance.
+    SiteVRouter,
+}
+
+/// One contextualization stage (an Ansible role application).
+#[derive(Debug, Clone)]
+pub struct CtxStage {
+    pub name: &'static str,
+    pub secs: f64,
+}
+
+/// Median stage durations (seconds). Sampled log-normally with sigma 0.15
+/// per stage to model real Ansible-run variance.
+fn stage_medians(role: NodeRole, lrms: LrmsKind) -> Vec<(&'static str, f64)> {
+    let lrms_server: (&'static str, f64) = match lrms {
+        LrmsKind::Slurm => ("slurm-controller", 170.0),
+        LrmsKind::HtCondor => ("condor-collector", 150.0),
+    };
+    let lrms_worker: (&'static str, f64) = match lrms {
+        LrmsKind::Slurm => ("slurm-worker", 320.0),
+        LrmsKind::HtCondor => ("condor-startd", 280.0),
+    };
+    match role {
+        NodeRole::FrontEnd => vec![
+            ("apt-base-packages", 150.0),
+            ("ansible-bootstrap", 60.0),
+            ("nfs-server", 90.0),
+            lrms_server,
+            ("clues-install", 120.0),
+            ("vrouter-central-point", 110.0),
+            ("easy-rsa-ca-init", 30.0),
+        ],
+        NodeRole::WorkerNode => vec![
+            // Totals ~980 s median: with ~2.5 min VM boot this lands at
+            // the paper's ~19 minutes per AWS node (deploy+config+join).
+            ("apt-base-packages", 280.0),
+            ("nfs-client-mount", 60.0),
+            lrms_worker,
+            ("udocker-prereqs", 180.0),
+            ("dhcp-gateway-config", 20.0),
+            ("node-join", 120.0),
+        ],
+        NodeRole::SiteVRouter => vec![
+            ("apt-base-packages", 150.0),
+            ("openvpn-install", 70.0),
+            ("cert-retrieve-callback", 12.0),
+            ("vrouter-configure", 60.0),
+            ("dhcp-server-config", 25.0),
+        ],
+    }
+}
+
+/// Sample a contextualization plan for one node.
+pub fn plan(role: NodeRole, lrms: LrmsKind, rng: &mut Prng) -> Vec<CtxStage> {
+    stage_medians(role, lrms)
+        .into_iter()
+        .map(|(name, median)| CtxStage {
+            name,
+            secs: rng.lognormal(median, 0.15),
+        })
+        .collect()
+}
+
+/// Total duration of a plan.
+pub fn total_secs(stages: &[CtxStage]) -> f64 {
+    stages.iter().map(|s| s.secs).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_plan_lands_in_paper_range() {
+        let mut rng = Prng::new(77);
+        let mut totals = Vec::new();
+        for _ in 0..50 {
+            let p = plan(NodeRole::WorkerNode, LrmsKind::Slurm, &mut rng);
+            totals.push(total_secs(&p));
+        }
+        let mean = totals.iter().sum::<f64>() / totals.len() as f64;
+        // ~980 s median: boot (~2.5 min) + this ≈ the paper's ~19 min
+        // AWS node power-on.
+        assert!(mean > 800.0 && mean < 1250.0, "mean={mean}");
+    }
+
+    #[test]
+    fn frontend_has_cp_and_ca_stages() {
+        let mut rng = Prng::new(1);
+        let p = plan(NodeRole::FrontEnd, LrmsKind::Slurm, &mut rng);
+        let names: Vec<&str> = p.iter().map(|s| s.name).collect();
+        assert!(names.contains(&"vrouter-central-point"));
+        assert!(names.contains(&"easy-rsa-ca-init"));
+        assert!(names.contains(&"slurm-controller"));
+    }
+
+    #[test]
+    fn vrouter_plan_contains_cert_callback() {
+        let mut rng = Prng::new(2);
+        let p = plan(NodeRole::SiteVRouter, LrmsKind::Slurm, &mut rng);
+        assert!(p.iter().any(|s| s.name == "cert-retrieve-callback"));
+        assert!(total_secs(&p) > 120.0);
+    }
+
+    #[test]
+    fn lrms_kind_changes_stages() {
+        let mut rng = Prng::new(3);
+        let s = plan(NodeRole::WorkerNode, LrmsKind::Slurm, &mut rng);
+        let c = plan(NodeRole::WorkerNode, LrmsKind::HtCondor, &mut rng);
+        assert!(s.iter().any(|st| st.name == "slurm-worker"));
+        assert!(c.iter().any(|st| st.name == "condor-startd"));
+    }
+
+    #[test]
+    fn durations_positive_and_varied() {
+        let mut rng = Prng::new(4);
+        let a = plan(NodeRole::WorkerNode, LrmsKind::Slurm, &mut rng);
+        let b = plan(NodeRole::WorkerNode, LrmsKind::Slurm, &mut rng);
+        assert!(a.iter().all(|s| s.secs > 0.0));
+        assert_ne!(total_secs(&a), total_secs(&b));
+    }
+}

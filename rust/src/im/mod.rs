@@ -1,0 +1,327 @@
+//! Infrastructure Manager (IM) analogue.
+//!
+//! The IM is the multi-cloud provisioning arm of the stack (§3.3): it
+//! talks to each site's API (here: [`crate::cloudsim::CloudSite`]),
+//! creates networks *first*, boots VMs attached to them, wires SSH
+//! reverse tunnels so Ansible can reach private-IP nodes from the single
+//! public-IP front-end, runs contextualization, and exposes the
+//! certificate callback the vRouter CA uses.
+//!
+//! The IM itself is synchronous bookkeeping: it *plans* operations and
+//! returns their simulated durations; the cluster world schedules the
+//! completion events on the DES queue.
+
+pub mod contextualizer;
+pub mod radl;
+
+pub use contextualizer::{plan as ctx_plan, total_secs as ctx_total_secs,
+                         CtxStage, NodeRole};
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context};
+
+use crate::cloudsim::{CloudSite, NetworkId, VmId, VmRequest, VmTicket};
+use crate::sim::SimTime;
+use crate::tosca::LrmsKind;
+use crate::util::prng::Prng;
+
+/// SSH reverse-tunnel fabric: every private node keeps a reverse tunnel
+/// to the front-end so the Ansible control node can reach it without a
+/// public IP (the IM's signature trick).
+#[derive(Debug, Default)]
+pub struct SshTunnelFabric {
+    /// node name → established at
+    tunnels: HashMap<String, SimTime>,
+    pub master: Option<String>,
+}
+
+impl SshTunnelFabric {
+    pub fn set_master(&mut self, name: &str) {
+        self.master = Some(name.to_string());
+    }
+
+    pub fn open(&mut self, node: &str, t: SimTime) -> anyhow::Result<()> {
+        if self.master.is_none() {
+            bail!("no master node set for the tunnel fabric");
+        }
+        self.tunnels.insert(node.to_string(), t);
+        Ok(())
+    }
+
+    pub fn close(&mut self, node: &str) {
+        self.tunnels.remove(node);
+    }
+
+    pub fn reachable(&self, node: &str) -> bool {
+        self.tunnels.contains_key(node)
+            || self.master.as_deref() == Some(node)
+    }
+
+    pub fn count(&self) -> usize {
+        self.tunnels.len()
+    }
+}
+
+/// A fully-specified node provisioning operation, with every simulated
+/// latency the cluster world needs to schedule.
+#[derive(Debug)]
+pub struct NodeProvision {
+    pub site_idx: usize,
+    pub vm: VmId,
+    pub name: String,
+    pub role: NodeRole,
+    /// Seconds until the VM is Running (from request).
+    pub boot_secs: f64,
+    /// Whether the boot will fail (failure injection).
+    pub boot_fails: bool,
+    /// Contextualization stages to run once the VM is up.
+    pub ctx: Vec<CtxStage>,
+    /// Total contextualization seconds (sum of stages).
+    pub ctx_secs: f64,
+}
+
+/// The Infrastructure Manager.
+pub struct Im {
+    rng: Prng,
+    /// Per-deployment created networks: site index → network.
+    pub networks: HashMap<usize, NetworkId>,
+    pub tunnels: SshTunnelFabric,
+    /// Log of (site, vm name, stage) for reports.
+    pub ctx_log: Vec<(String, String, &'static str)>,
+}
+
+impl Im {
+    pub fn new(seed: u64) -> Im {
+        Im {
+            rng: Prng::new(seed ^ 0x1111),
+            networks: HashMap::new(),
+            tunnels: SshTunnelFabric::default(),
+            ctx_log: Vec::new(),
+        }
+    }
+
+    /// Step 1 of the paper's §3.1 flow: create the per-site private
+    /// network (idempotent per site). Returns (network, creation secs;
+    /// 0 if it already existed).
+    pub fn ensure_network(&mut self, sites: &mut [CloudSite],
+                          site_idx: usize, deployment: &str)
+        -> anyhow::Result<(NetworkId, f64)> {
+        if let Some(&net) = self.networks.get(&site_idx) {
+            return Ok((net, 0.0));
+        }
+        let site = sites
+            .get_mut(site_idx)
+            .context("site index out of range")?;
+        let (net, secs) =
+            site.create_network(&format!("{deployment}-net"))?;
+        self.networks.insert(site_idx, net);
+        Ok((net, secs))
+    }
+
+    /// Provision one node: network-first, then the VM (public IP only for
+    /// the front-end / CP), then plan its contextualization.
+    pub fn provision_node(
+        &mut self,
+        sites: &mut [CloudSite],
+        site_idx: usize,
+        deployment: &str,
+        name: &str,
+        role: NodeRole,
+        instance_type: &str,
+        lrms: LrmsKind,
+        t: SimTime,
+    ) -> anyhow::Result<NodeProvision> {
+        let (net, _net_secs) =
+            self.ensure_network(sites, site_idx, deployment)?;
+        let site = &mut sites[site_idx];
+        let public_ip = role == NodeRole::FrontEnd;
+        let ticket: VmTicket = site.request_vm(
+            &VmRequest {
+                name: name.to_string(),
+                instance_type: instance_type.to_string(),
+                network: Some(net),
+                public_ip,
+            },
+            t,
+        )?;
+        let ctx = ctx_plan(role, lrms, &mut self.rng);
+        let ctx_secs = ctx_total_secs(&ctx);
+        for s in &ctx {
+            self.ctx_log.push((site.name().to_string(), name.to_string(),
+                               s.name));
+        }
+        Ok(NodeProvision {
+            site_idx,
+            vm: ticket.vm,
+            name: name.to_string(),
+            role,
+            boot_secs: ticket.boot_secs,
+            boot_fails: ticket.will_fail,
+            ctx,
+            ctx_secs,
+        })
+    }
+
+    /// After the FE is Running: it becomes the Ansible master.
+    pub fn establish_master(&mut self, fe_name: &str) {
+        self.tunnels.set_master(fe_name);
+    }
+
+    /// After any other VM is Running: open its reverse tunnel.
+    pub fn connect_node(&mut self, node: &str, t: SimTime)
+        -> anyhow::Result<()> {
+        self.tunnels.open(node, t)
+    }
+
+    /// Certificate callback (§3.5.5): the orchestration layer retrieves
+    /// client certs generated at the CP. Returns the subject it issued.
+    pub fn retrieve_certificate(
+        &mut self,
+        overlay: &mut crate::vrouter::Overlay,
+        subject: &str,
+        t: SimTime,
+    ) -> anyhow::Result<String> {
+        // The IM only relays; issuance happens at the CP's CA.
+        if overlay.ca.verify(subject) {
+            return Ok(subject.to_string());
+        }
+        overlay.ca.issue(subject, t)?;
+        Ok(subject.to_string())
+    }
+
+    /// Tear down a node (terminate + close its tunnel). Returns the
+    /// provider termination latency.
+    pub fn decommission_node(&mut self, sites: &mut [CloudSite],
+                             site_idx: usize, vm: VmId, name: &str,
+                             t: SimTime) -> anyhow::Result<f64> {
+        let site = sites.get_mut(site_idx).context("site index")?;
+        let secs = site.terminate_vm(vm, t)?;
+        self.tunnels.close(name);
+        Ok(secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloudsim::SiteSpec;
+    use crate::netsim::NetId;
+
+    fn sites() -> Vec<CloudSite> {
+        vec![
+            CloudSite::new(SiteSpec::cesnet_metacentrum(), 0, NetId(0), 1),
+            CloudSite::new(SiteSpec::aws_us_east_2(), 1, NetId(1), 2),
+        ]
+    }
+
+    #[test]
+    fn network_first_then_vm() {
+        let mut s = sites();
+        let mut im = Im::new(9);
+        let p = im
+            .provision_node(&mut s, 0, "dep1", "front-end",
+                            NodeRole::FrontEnd, "standard.medium",
+                            LrmsKind::Slurm, SimTime(0.0))
+            .unwrap();
+        assert!(p.boot_secs > 0.0);
+        assert!(p.ctx_secs > 300.0); // FE has the long CP/CA stages
+        assert_eq!(im.networks.len(), 1);
+        let vm = s[0].vm(p.vm).unwrap();
+        assert!(vm.public_ip.is_some(), "FE needs the public IP");
+        assert!(vm.private_ip.is_some());
+    }
+
+    #[test]
+    fn network_reused_across_nodes_same_site() {
+        let mut s = sites();
+        let mut im = Im::new(9);
+        im.provision_node(&mut s, 1, "dep1", "vnode-3",
+                          NodeRole::WorkerNode, "t2.medium",
+                          LrmsKind::Slurm, SimTime(0.0))
+            .unwrap();
+        let (net1, secs1) = im.ensure_network(&mut s, 1, "dep1").unwrap();
+        assert_eq!(secs1, 0.0); // already created
+        let p2 = im
+            .provision_node(&mut s, 1, "dep1", "vnode-4",
+                            NodeRole::WorkerNode, "t2.medium",
+                            LrmsKind::Slurm, SimTime(5.0))
+            .unwrap();
+        assert_eq!(s[1].vm(p2.vm).unwrap().network, Some(net1));
+        assert_eq!(s[1].networks.count(), 1);
+    }
+
+    #[test]
+    fn workers_get_no_public_ip() {
+        let mut s = sites();
+        let mut im = Im::new(9);
+        let p = im
+            .provision_node(&mut s, 1, "dep1", "vnode-3",
+                            NodeRole::WorkerNode, "t2.medium",
+                            LrmsKind::Slurm, SimTime(0.0))
+            .unwrap();
+        assert!(s[1].vm(p.vm).unwrap().public_ip.is_none());
+    }
+
+    #[test]
+    fn tunnel_fabric_requires_master() {
+        let mut im = Im::new(1);
+        assert!(im.connect_node("wn1", SimTime(0.0)).is_err());
+        im.establish_master("front-end");
+        im.connect_node("wn1", SimTime(1.0)).unwrap();
+        assert!(im.tunnels.reachable("wn1"));
+        assert!(im.tunnels.reachable("front-end"));
+        assert!(!im.tunnels.reachable("wn2"));
+        im.tunnels.close("wn1");
+        assert!(!im.tunnels.reachable("wn1"));
+    }
+
+    #[test]
+    fn certificate_callback_issues_once() {
+        let mut im = Im::new(1);
+        let mut ov = crate::vrouter::Overlay::new(
+            crate::netsim::Cipher::Aes256Gcm);
+        im.retrieve_certificate(&mut ov, "vrouter-aws", SimTime(0.0))
+            .unwrap();
+        // Second retrieval is idempotent.
+        im.retrieve_certificate(&mut ov, "vrouter-aws", SimTime(1.0))
+            .unwrap();
+        assert_eq!(ov.ca.issued_count(), 1);
+    }
+
+    #[test]
+    fn decommission_terminates_and_closes_tunnel() {
+        let mut s = sites();
+        let mut im = Im::new(9);
+        im.establish_master("front-end");
+        let p = im
+            .provision_node(&mut s, 1, "dep1", "vnode-3",
+                            NodeRole::WorkerNode, "t2.medium",
+                            LrmsKind::Slurm, SimTime(0.0))
+            .unwrap();
+        s[1].complete_boot(p.vm, false, SimTime(120.0)).unwrap();
+        im.connect_node("vnode-3", SimTime(121.0)).unwrap();
+        let secs = im
+            .decommission_node(&mut s, 1, p.vm, "vnode-3", SimTime(500.0))
+            .unwrap();
+        assert!(secs > 0.0);
+        assert!(!im.tunnels.reachable("vnode-3"));
+    }
+
+    #[test]
+    fn quota_errors_propagate() {
+        let mut s = sites();
+        let mut im = Im::new(9);
+        // CESNET quota: 3 VMs.
+        for i in 0..3 {
+            im.provision_node(&mut s, 0, "dep1", &format!("n{i}"),
+                              NodeRole::WorkerNode, "standard.medium",
+                              LrmsKind::Slurm, SimTime(0.0))
+                .unwrap();
+        }
+        let err = im.provision_node(&mut s, 0, "dep1", "n3",
+                                    NodeRole::WorkerNode, "standard.medium",
+                                    LrmsKind::Slurm, SimTime(0.0));
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,341 @@
+//! RADL — the IM's native Resource and Application Description Language
+//! (§3.3: the IM accepts both TOSCA and RADL).
+//!
+//! Supports the subset the EC3/IM ecosystem actually uses for clusters:
+//!
+//! ```text
+//! network private ()
+//! network public (outbound = 'yes')
+//! system front (
+//!   cpu.count >= 2 and
+//!   memory.size >= 4g and
+//!   net_interface.0.connection = 'private' and
+//!   net_interface.1.connection = 'public'
+//! )
+//! system wn (
+//!   cpu.count >= 2 and
+//!   memory.size >= 4096m
+//! )
+//! deploy front 1
+//! deploy wn 2
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+/// A feature constraint value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Num(f64),
+    Str(String),
+}
+
+/// One `feature op value` constraint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Constraint {
+    pub feature: String,
+    /// One of `=`, `>=`, `<=`.
+    pub op: String,
+    pub value: Value,
+}
+
+/// A `system` block: named set of constraints.
+#[derive(Debug, Clone, Default)]
+pub struct System {
+    pub name: String,
+    pub constraints: Vec<Constraint>,
+}
+
+impl System {
+    fn constraint(&self, feature: &str) -> Option<&Constraint> {
+        self.constraints.iter().find(|c| c.feature == feature)
+    }
+
+    /// Required vCPUs (`cpu.count >= N`), defaulting to 1.
+    pub fn cpu_count(&self) -> u32 {
+        match self.constraint("cpu.count") {
+            Some(Constraint { value: Value::Num(n), .. }) => *n as u32,
+            _ => 1,
+        }
+    }
+
+    /// Required memory in GB (`memory.size >= Ng|Nm`), defaulting to 1.
+    pub fn memory_gb(&self) -> f64 {
+        match self.constraint("memory.size") {
+            Some(Constraint { value: Value::Num(n), .. }) => *n,
+            _ => 1.0,
+        }
+    }
+
+    /// Does this system ask for a public interface?
+    pub fn wants_public_ip(&self) -> bool {
+        self.constraints.iter().any(|c| {
+            c.feature.starts_with("net_interface.")
+                && c.feature.ends_with(".connection")
+                && c.value == Value::Str("public".into())
+        })
+    }
+}
+
+/// A parsed RADL document.
+#[derive(Debug, Clone, Default)]
+pub struct Radl {
+    /// network name → attributes.
+    pub networks: BTreeMap<String, BTreeMap<String, String>>,
+    pub systems: Vec<System>,
+    /// (system name, count) in order.
+    pub deploys: Vec<(String, u32)>,
+}
+
+impl Radl {
+    pub fn system(&self, name: &str) -> Option<&System> {
+        self.systems.iter().find(|s| s.name == name)
+    }
+
+    /// Total VMs the document deploys.
+    pub fn total_vms(&self) -> u32 {
+        self.deploys.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Semantic validation: deploys must reference defined systems and
+    /// referenced networks must exist.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, _) in &self.deploys {
+            if self.system(name).is_none() {
+                bail!("deploy of undefined system {name:?}");
+            }
+        }
+        for sys in &self.systems {
+            for c in &sys.constraints {
+                if c.feature.ends_with(".connection") {
+                    if let Value::Str(net) = &c.value {
+                        if !self.networks.contains_key(net) {
+                            bail!("system {:?} references undefined \
+                                   network {net:?}", sys.name);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a memory literal: `4g`, `4096m`, `4`, `512M` → GB.
+fn parse_mem(v: &str) -> Option<f64> {
+    let lower = v.to_ascii_lowercase();
+    if let Some(n) = lower.strip_suffix('g') {
+        n.trim().parse::<f64>().ok()
+    } else if let Some(n) = lower.strip_suffix('m') {
+        n.trim().parse::<f64>().ok().map(|x| x / 1024.0)
+    } else {
+        lower.trim().parse::<f64>().ok()
+    }
+}
+
+fn parse_value(feature: &str, raw: &str) -> Value {
+    let raw = raw.trim();
+    if raw.starts_with('\'') && raw.ends_with('\'') && raw.len() >= 2 {
+        return Value::Str(raw[1..raw.len() - 1].to_string());
+    }
+    if feature == "memory.size" {
+        if let Some(gb) = parse_mem(raw) {
+            return Value::Num(gb);
+        }
+    }
+    raw.parse::<f64>().map(Value::Num).unwrap_or_else(|_| {
+        Value::Str(raw.to_string())
+    })
+}
+
+fn parse_constraints(body: &str) -> anyhow::Result<Vec<Constraint>> {
+    let mut out = Vec::new();
+    for clause in body.split(" and ") {
+        let clause = clause.trim().trim_end_matches("and").trim();
+        if clause.is_empty() {
+            continue;
+        }
+        // Order matters: check >= / <= before =.
+        let (op, idx) = if let Some(i) = clause.find(">=") {
+            (">=", i)
+        } else if let Some(i) = clause.find("<=") {
+            ("<=", i)
+        } else if let Some(i) = clause.find('=') {
+            ("=", i)
+        } else {
+            bail!("constraint without operator: {clause:?}");
+        };
+        let feature = clause[..idx].trim().to_string();
+        let raw = clause[idx + op.len()..].trim();
+        out.push(Constraint {
+            value: parse_value(&feature, raw),
+            feature,
+            op: op.to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// Parse a RADL document.
+pub fn parse(src: &str) -> anyhow::Result<Radl> {
+    let mut radl = Radl::default();
+    // Normalize: join continued lines inside parentheses.
+    let mut joined = String::new();
+    let mut depth = 0i32;
+    for ch in src.chars() {
+        match ch {
+            '(' => {
+                depth += 1;
+                joined.push(ch);
+            }
+            ')' => {
+                depth -= 1;
+                joined.push(ch);
+            }
+            '\n' if depth > 0 => joined.push(' '),
+            _ => joined.push(ch),
+        }
+    }
+    if depth != 0 {
+        bail!("unbalanced parentheses");
+    }
+
+    for (lineno, line) in joined.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut words = line.split_whitespace();
+        match words.next() {
+            Some("network") => {
+                let name = words
+                    .next()
+                    .with_context(|| format!("line {}: network needs a \
+                                              name", lineno + 1))?;
+                let rest = line[line.find(name).unwrap() + name.len()..]
+                    .trim();
+                let mut attrs = BTreeMap::new();
+                if rest.starts_with('(') && rest.ends_with(')') {
+                    for kv in rest[1..rest.len() - 1].split(" and ") {
+                        if let Some((k, v)) = kv.split_once('=') {
+                            attrs.insert(
+                                k.trim().to_string(),
+                                v.trim().trim_matches('\'').to_string());
+                        }
+                    }
+                }
+                radl.networks.insert(name.to_string(), attrs);
+            }
+            Some("system") => {
+                let name = words
+                    .next()
+                    .with_context(|| format!("line {}: system needs a \
+                                              name", lineno + 1))?;
+                let open = line.find('(').with_context(|| {
+                    format!("line {}: system body missing", lineno + 1)
+                })?;
+                let close = line.rfind(')').context("missing )")?;
+                radl.systems.push(System {
+                    name: name.to_string(),
+                    constraints: parse_constraints(&line[open + 1..close])?,
+                });
+            }
+            Some("deploy") => {
+                let name = words.next().context("deploy needs a system")?;
+                let count: u32 = words
+                    .next()
+                    .context("deploy needs a count")?
+                    .parse()?;
+                radl.deploys.push((name.to_string(), count));
+            }
+            Some(other) => bail!("line {}: unknown directive {other:?}",
+                                 lineno + 1),
+            None => {}
+        }
+    }
+    radl.validate()?;
+    Ok(radl)
+}
+
+/// The EC3-style cluster RADL equivalent of the built-in SLURM template.
+pub const SLURM_CLUSTER_RADL: &str = "\
+network private ()
+network public (outbound = 'yes')
+system front (
+  cpu.count >= 2 and
+  memory.size >= 4g and
+  net_interface.0.connection = 'private' and
+  net_interface.1.connection = 'public'
+)
+system wn (
+  cpu.count >= 2 and
+  memory.size >= 4g and
+  net_interface.0.connection = 'private'
+)
+deploy front 1
+deploy wn 2
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_cluster_radl() {
+        let r = parse(SLURM_CLUSTER_RADL).unwrap();
+        assert_eq!(r.networks.len(), 2);
+        assert_eq!(r.networks["public"]["outbound"], "yes");
+        assert_eq!(r.systems.len(), 2);
+        assert_eq!(r.deploys, vec![("front".to_string(), 1),
+                                   ("wn".to_string(), 2)]);
+        assert_eq!(r.total_vms(), 3);
+    }
+
+    #[test]
+    fn system_accessors() {
+        let r = parse(SLURM_CLUSTER_RADL).unwrap();
+        let front = r.system("front").unwrap();
+        assert_eq!(front.cpu_count(), 2);
+        assert_eq!(front.memory_gb(), 4.0);
+        assert!(front.wants_public_ip());
+        let wn = r.system("wn").unwrap();
+        assert!(!wn.wants_public_ip());
+    }
+
+    #[test]
+    fn memory_units() {
+        let r = parse("system s (\n memory.size >= 4096m\n)\ndeploy s 1\n")
+            .unwrap();
+        assert_eq!(r.system("s").unwrap().memory_gb(), 4.0);
+        let r = parse("system s (\n memory.size >= 8g\n)\ndeploy s 1\n")
+            .unwrap();
+        assert_eq!(r.system("s").unwrap().memory_gb(), 8.0);
+    }
+
+    #[test]
+    fn validation_rejects_dangling_refs() {
+        assert!(parse("deploy ghost 2\n").is_err());
+        let bad = "\
+system s (
+  net_interface.0.connection = 'nowhere'
+)
+deploy s 1
+";
+        assert!(parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("system s (\n cpu.count ? 2\n)\n").is_err());
+        assert!(parse("system s (\n").is_err()); // unbalanced
+        assert!(parse("frobnicate x\n").is_err());
+        assert!(parse("deploy s notanumber\n").is_err());
+    }
+
+    #[test]
+    fn comments_ignored() {
+        let r = parse("# header\nnetwork private () # trailing\n").unwrap();
+        assert_eq!(r.networks.len(), 1);
+    }
+}

@@ -1,0 +1,52 @@
+//! # EVHC — Elastic Virtual Hybrid Clusters across cloud sites
+//!
+//! Reproduction of Caballer et al., *"Deployment of Elastic Virtual Hybrid
+//! Clusters Across Cloud Sites"*, Journal of Grid Computing, 2021
+//! (DOI 10.1007/s10723-021-09543-5).
+//!
+//! The crate implements the paper's full coordination stack plus every
+//! substrate it depends on (see `DESIGN.md`):
+//!
+//! * [`sim`] — discrete-event simulation engine (virtual clock).
+//! * [`netsim`] — flow-level inter-site network with cipher cost model.
+//! * [`cloudsim`] — IaaS cloud-site simulator (quotas, VMs, networks,
+//!   pricing, failure injection).
+//! * [`tosca`] — TOSCA YAML-subset templates describing cluster topology.
+//! * [`orchestrator`] — the INDIGO PaaS-Orchestrator analogue: SLA-driven
+//!   site ranking and the (serialized) deployment workflow engine.
+//! * [`im`] — the Infrastructure Manager analogue: network-first
+//!   multi-cloud provisioning + Ansible-like contextualization.
+//! * [`vrouter`] — the INDIGO Virtual Router analogue: OpenVPN-star
+//!   overlay networks, redundant central points, standalone nodes, CA.
+//! * [`lrms`] — SLURM-like batch system behind a plugin trait.
+//! * [`clues`] — the CLUES elasticity engine.
+//! * [`workload`] — the paper's §4 audio-classification workload.
+//! * [`runtime`] — PJRT executor for the AOT-compiled L2/L1 model.
+//! * [`cluster`] — the public façade tying everything together.
+//! * [`metrics`] — time-series recording + figure/table regeneration.
+//! * [`api`] — the Orchestrator's REST API (+ orchent-style client).
+//! * [`util`] — in-tree substrates for crates unavailable offline
+//!   (CLI parsing, YAML subset, CSV, PRNG, stats, property testing).
+//!
+//! Python/JAX/Pallas exist only on the build path (`make artifacts`); the
+//! compiled binary serves inference straight from `artifacts/*.hlo.txt`
+//! via the PJRT C API.
+
+pub mod api;
+pub mod util;
+pub mod sim;
+pub mod netsim;
+pub mod cloudsim;
+pub mod tosca;
+pub mod lrms;
+pub mod clues;
+pub mod vrouter;
+pub mod im;
+pub mod orchestrator;
+pub mod workload;
+pub mod runtime;
+pub mod metrics;
+pub mod cluster;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,101 @@
+//! HTCondor-flavoured LRMS plugin: matchmaking that spreads jobs across
+//! the pool (breadth-first), demonstrating the CLUES plugin architecture
+//! beyond SLURM.
+
+use super::core::{BatchCore, Placement};
+use super::{Assignment, Job, JobId, Lrms, NodeHealth, NodeInfo};
+use crate::sim::SimTime;
+
+/// HTCondor-like pool (`condor_collector`+`negotiator` analogue).
+#[derive(Debug)]
+pub struct HtCondor {
+    core: BatchCore,
+}
+
+impl HtCondor {
+    pub fn new() -> HtCondor {
+        HtCondor { core: BatchCore::new(Placement::SpreadMostFree) }
+    }
+}
+
+impl Default for HtCondor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Lrms for HtCondor {
+    fn kind(&self) -> &'static str {
+        "htcondor"
+    }
+
+    fn register_node(&mut self, name: &str, slots: u32, t: SimTime) {
+        self.core.register_node(name, slots, t)
+    }
+
+    fn deregister_node(&mut self, name: &str, t: SimTime)
+        -> anyhow::Result<Vec<JobId>> {
+        self.core.deregister_node(name, t)
+    }
+
+    fn set_node_health(&mut self, name: &str, health: NodeHealth, t: SimTime)
+        -> anyhow::Result<Vec<JobId>> {
+        self.core.set_node_health(name, health, t)
+    }
+
+    fn submit(&mut self, name: &str, slots: u32, t: SimTime) -> JobId {
+        self.core.submit(name, slots, t)
+    }
+
+    fn cancel(&mut self, id: JobId, t: SimTime) -> anyhow::Result<()> {
+        self.core.cancel(id, t)
+    }
+
+    fn schedule(&mut self, t: SimTime) -> Vec<Assignment> {
+        self.core.schedule(t)
+    }
+
+    fn on_job_finished(&mut self, id: JobId, ok: bool, t: SimTime)
+        -> anyhow::Result<()> {
+        self.core.on_job_finished(id, ok, t)
+    }
+
+    fn job(&self, id: JobId) -> Option<&Job> {
+        self.core.job(id)
+    }
+
+    fn jobs(&self) -> Vec<&Job> {
+        self.core.jobs()
+    }
+
+    fn nodes(&self) -> Vec<NodeInfo> {
+        self.core.nodes()
+    }
+
+    fn pending(&self) -> usize {
+        self.core.pending()
+    }
+
+    fn running(&self) -> usize {
+        self.core.running()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spreads_breadth_first() {
+        let mut c = HtCondor::new();
+        c.register_node("e1", 2, SimTime(0.0));
+        c.register_node("e2", 2, SimTime(0.0));
+        c.submit("a", 1, SimTime(0.0));
+        c.submit("b", 1, SimTime(0.0));
+        let assigned = c.schedule(SimTime(0.0));
+        let nodes: Vec<&str> =
+            assigned.iter().map(|(_, n)| n.as_str()).collect();
+        assert!(nodes.contains(&"e1") && nodes.contains(&"e2"),
+                "{nodes:?}");
+    }
+}

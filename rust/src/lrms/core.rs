@@ -1,0 +1,420 @@
+//! Shared batch-system core used by the SLURM and HTCondor plugins.
+//!
+//! The plugins differ in *placement policy* (which node a pending job is
+//! matched to) and queue ordering; everything else — job/node state
+//! machines, requeue-on-failure, idle tracking — is common and lives here.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context};
+
+use super::{Assignment, Job, JobId, JobState, NodeHealth, NodeInfo};
+use crate::sim::SimTime;
+
+/// Node placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Fill nodes in registration order (SLURM-ish depth-first packing).
+    PackFirstFit,
+    /// Prefer the node with the most free slots (HTCondor-ish
+    /// breadth-first matchmaking).
+    SpreadMostFree,
+}
+
+#[derive(Debug)]
+pub(super) struct NodeSlot {
+    pub name: String,
+    pub slots: u32,
+    pub used: u32,
+    pub health: NodeHealth,
+    pub registered_at: SimTime,
+    pub idle_since: Option<SimTime>,
+    /// Registration order (placement tiebreak).
+    pub order: u64,
+}
+
+/// The common engine.
+#[derive(Debug)]
+pub struct BatchCore {
+    placement: Placement,
+    jobs: HashMap<JobId, Job>,
+    /// Pending queue in submission order.
+    queue: Vec<JobId>,
+    nodes: Vec<NodeSlot>,
+    next_job: u64,
+    next_order: u64,
+}
+
+impl BatchCore {
+    pub fn new(placement: Placement) -> BatchCore {
+        BatchCore {
+            placement,
+            jobs: HashMap::new(),
+            queue: Vec::new(),
+            nodes: Vec::new(),
+            next_job: 0,
+            next_order: 0,
+        }
+    }
+
+    pub fn register_node(&mut self, name: &str, slots: u32, t: SimTime) {
+        if self.nodes.iter().any(|n| n.name == name) {
+            // Re-registration of a node that came back: mark Up.
+            if let Some(n) = self.nodes.iter_mut().find(|n| n.name == name) {
+                n.health = NodeHealth::Up;
+            }
+            return;
+        }
+        self.nodes.push(NodeSlot {
+            name: name.to_string(),
+            slots,
+            used: 0,
+            health: NodeHealth::Up,
+            registered_at: t,
+            idle_since: Some(t),
+            order: self.next_order,
+        });
+        self.next_order += 1;
+    }
+
+    pub fn deregister_node(&mut self, name: &str, t: SimTime)
+        -> anyhow::Result<Vec<JobId>> {
+        let idx = self
+            .nodes
+            .iter()
+            .position(|n| n.name == name)
+            .with_context(|| format!("no node {name:?}"))?;
+        let requeued = self.requeue_jobs_on(name, t);
+        self.nodes.remove(idx);
+        Ok(requeued)
+    }
+
+    pub fn set_node_health(&mut self, name: &str, health: NodeHealth,
+                           t: SimTime) -> anyhow::Result<Vec<JobId>> {
+        let node = self
+            .nodes
+            .iter_mut()
+            .find(|n| n.name == name)
+            .with_context(|| format!("no node {name:?}"))?;
+        let was = node.health;
+        node.health = health;
+        if health == NodeHealth::Down && was != NodeHealth::Down {
+            return Ok(self.requeue_jobs_on(name, t));
+        }
+        if health == NodeHealth::Up && was != NodeHealth::Up {
+            let node = self.nodes.iter_mut().find(|n| n.name == name)
+                .expect("node vanished");
+            if node.used == 0 {
+                node.idle_since = Some(t);
+            }
+        }
+        Ok(Vec::new())
+    }
+
+    /// Push back every running job on `name` into the front of the queue
+    /// (SLURM requeues preempted/failed-node jobs ahead of new work).
+    fn requeue_jobs_on(&mut self, name: &str, t: SimTime) -> Vec<JobId> {
+        let mut requeued = Vec::new();
+        for job in self.jobs.values_mut() {
+            if job.state == JobState::Running
+                && job.node.as_deref() == Some(name)
+            {
+                job.state = JobState::Pending;
+                job.node = None;
+                job.started_at = None;
+                job.requeues += 1;
+                requeued.push(job.id);
+            }
+        }
+        if let Some(n) = self.nodes.iter_mut().find(|n| n.name == name) {
+            n.used = 0;
+            n.idle_since = Some(t);
+        }
+        // Front of queue, preserving relative order.
+        let mut newq = requeued.clone();
+        newq.extend(self.queue.iter().copied());
+        self.queue = newq;
+        requeued
+    }
+
+    pub fn submit(&mut self, name: &str, slots: u32, t: SimTime) -> JobId {
+        let id = JobId(self.next_job);
+        self.next_job += 1;
+        self.jobs.insert(id, Job {
+            id,
+            name: name.to_string(),
+            slots,
+            state: JobState::Pending,
+            submitted_at: t,
+            started_at: None,
+            finished_at: None,
+            node: None,
+            requeues: 0,
+        });
+        self.queue.push(id);
+        id
+    }
+
+    pub fn cancel(&mut self, id: JobId, t: SimTime) -> anyhow::Result<()> {
+        let job = self.jobs.get_mut(&id).with_context(|| format!("{id}"))?;
+        if job.state != JobState::Pending {
+            bail!("{id} is {:?}, only Pending jobs can be cancelled",
+                  job.state);
+        }
+        job.state = JobState::Cancelled;
+        job.finished_at = Some(t);
+        self.queue.retain(|&q| q != id);
+        Ok(())
+    }
+
+    /// One scheduling sweep. Exits early once the cluster has no free
+    /// slot left: with thousands of queued jobs and one free node, the
+    /// naive sweep rescans the whole queue per dispatch and dominated the
+    /// full-scale replay profile (EXPERIMENTS §Perf L3).
+    pub fn schedule(&mut self, t: SimTime) -> Vec<Assignment> {
+        let mut out = Vec::new();
+        let mut remaining: Vec<JobId> = Vec::new();
+        let mut free: u32 = self
+            .nodes
+            .iter()
+            .filter(|n| n.health == NodeHealth::Up)
+            .map(|n| n.slots - n.used)
+            .sum();
+        let queue = std::mem::take(&mut self.queue);
+        let mut it = queue.into_iter();
+        for jid in it.by_ref() {
+            if free == 0 {
+                remaining.push(jid);
+                break;
+            }
+            let slots = match self.jobs.get(&jid) {
+                Some(j) if j.state == JobState::Pending => j.slots,
+                _ => continue,
+            };
+            // Pick a node per the placement policy.
+            let mut candidates: Vec<&mut NodeSlot> = self
+                .nodes
+                .iter_mut()
+                .filter(|n| {
+                    n.health == NodeHealth::Up && n.slots - n.used >= slots
+                })
+                .collect();
+            let pick = match self.placement {
+                Placement::PackFirstFit => candidates
+                    .iter_mut()
+                    .min_by_key(|n| n.order),
+                Placement::SpreadMostFree => candidates
+                    .iter_mut()
+                    .max_by_key(|n| ((n.slots - n.used) as u64) << 32
+                        | (u32::MAX as u64 - n.order.min(u32::MAX as u64))),
+            };
+            match pick {
+                Some(node) => {
+                    node.used += slots;
+                    node.idle_since = None;
+                    let name = node.name.clone();
+                    let job = self.jobs.get_mut(&jid).expect("job exists");
+                    job.state = JobState::Running;
+                    job.node = Some(name.clone());
+                    job.started_at = Some(t);
+                    free -= slots;
+                    out.push((jid, name));
+                }
+                None => remaining.push(jid),
+            }
+        }
+        // Anything after the early exit keeps its queue position.
+        remaining.extend(it);
+        self.queue = remaining;
+        out
+    }
+
+    pub fn on_job_finished(&mut self, id: JobId, ok: bool, t: SimTime)
+        -> anyhow::Result<()> {
+        let job = self.jobs.get_mut(&id).with_context(|| format!("{id}"))?;
+        if job.state != JobState::Running {
+            bail!("{id} is {:?}, not Running", job.state);
+        }
+        job.state = if ok { JobState::Completed } else { JobState::Failed };
+        job.finished_at = Some(t);
+        let node_name = job.node.clone();
+        if let Some(name) = node_name {
+            if let Some(n) = self.nodes.iter_mut().find(|n| n.name == name) {
+                n.used = n.used.saturating_sub(job.slots);
+                if n.used == 0 {
+                    n.idle_since = Some(t);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+
+    pub fn jobs(&self) -> Vec<&Job> {
+        let mut v: Vec<&Job> = self.jobs.values().collect();
+        v.sort_by_key(|j| j.id);
+        v
+    }
+
+    pub fn nodes(&self) -> Vec<NodeInfo> {
+        self.nodes
+            .iter()
+            .map(|n| NodeInfo {
+                name: n.name.clone(),
+                slots: n.slots,
+                used_slots: n.used,
+                health: n.health,
+                registered_at: n.registered_at,
+                idle_since: n.idle_since,
+            })
+            .collect()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.jobs
+            .values()
+            .filter(|j| j.state == JobState::Running)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime(s)
+    }
+
+    #[test]
+    fn pack_vs_spread_placement() {
+        // Two nodes with 2 slots each; two 1-slot jobs.
+        let mut pack = BatchCore::new(Placement::PackFirstFit);
+        let mut spread = BatchCore::new(Placement::SpreadMostFree);
+        for core in [&mut pack, &mut spread] {
+            core.register_node("n1", 2, t(0.0));
+            core.register_node("n2", 2, t(0.0));
+            core.submit("a", 1, t(0.0));
+            core.submit("b", 1, t(0.0));
+        }
+        let pa = pack.schedule(t(1.0));
+        assert_eq!(pa[0].1, "n1");
+        assert_eq!(pa[1].1, "n1"); // packs onto the first node
+        let sa = spread.schedule(t(1.0));
+        assert_eq!(sa[0].1, "n1");
+        assert_eq!(sa[1].1, "n2"); // spreads across nodes
+    }
+
+    #[test]
+    fn requeue_on_node_down_preserves_priority() {
+        let mut c = BatchCore::new(Placement::PackFirstFit);
+        c.register_node("n1", 1, t(0.0));
+        let a = c.submit("a", 1, t(0.0));
+        let b = c.submit("b", 1, t(0.0));
+        c.schedule(t(1.0));
+        assert_eq!(c.job(a).unwrap().state, JobState::Running);
+        let requeued = c.set_node_health("n1", NodeHealth::Down, t(5.0))
+            .unwrap();
+        assert_eq!(requeued, vec![a]);
+        assert_eq!(c.job(a).unwrap().requeues, 1);
+        // a must run again before b once a node is available.
+        c.register_node("n2", 1, t(6.0));
+        let assigned = c.schedule(t(6.0));
+        assert_eq!(assigned, vec![(a, "n2".to_string())]);
+        assert_eq!(c.job(b).unwrap().state, JobState::Pending);
+    }
+
+    #[test]
+    fn down_node_receives_no_work() {
+        let mut c = BatchCore::new(Placement::PackFirstFit);
+        c.register_node("n1", 4, t(0.0));
+        c.set_node_health("n1", NodeHealth::Down, t(0.0)).unwrap();
+        c.submit("a", 1, t(0.0));
+        assert!(c.schedule(t(1.0)).is_empty());
+        // Back up: work flows again.
+        c.set_node_health("n1", NodeHealth::Up, t(2.0)).unwrap();
+        assert_eq!(c.schedule(t(2.0)).len(), 1);
+    }
+
+    #[test]
+    fn drain_blocks_new_but_keeps_running() {
+        let mut c = BatchCore::new(Placement::PackFirstFit);
+        c.register_node("n1", 2, t(0.0));
+        let a = c.submit("a", 1, t(0.0));
+        c.schedule(t(0.0));
+        let requeued =
+            c.set_node_health("n1", NodeHealth::Drain, t(1.0)).unwrap();
+        assert!(requeued.is_empty());
+        assert_eq!(c.job(a).unwrap().state, JobState::Running);
+        c.submit("b", 1, t(1.0));
+        assert!(c.schedule(t(1.0)).is_empty());
+    }
+
+    #[test]
+    fn idle_since_tracking() {
+        let mut c = BatchCore::new(Placement::PackFirstFit);
+        c.register_node("n1", 1, t(0.0));
+        assert_eq!(c.nodes()[0].idle_since, Some(t(0.0)));
+        let a = c.submit("a", 1, t(0.0));
+        c.schedule(t(5.0));
+        assert_eq!(c.nodes()[0].idle_since, None);
+        c.on_job_finished(a, true, t(30.0)).unwrap();
+        assert_eq!(c.nodes()[0].idle_since, Some(t(30.0)));
+    }
+
+    #[test]
+    fn cancel_only_pending() {
+        let mut c = BatchCore::new(Placement::PackFirstFit);
+        c.register_node("n1", 1, t(0.0));
+        let a = c.submit("a", 1, t(0.0));
+        let b = c.submit("b", 1, t(0.0));
+        c.schedule(t(0.0));
+        assert!(c.cancel(a, t(1.0)).is_err()); // running
+        c.cancel(b, t(1.0)).unwrap();
+        assert_eq!(c.job(b).unwrap().state, JobState::Cancelled);
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn multi_slot_jobs_wait_for_room() {
+        let mut c = BatchCore::new(Placement::PackFirstFit);
+        c.register_node("n1", 2, t(0.0));
+        let small = c.submit("small", 1, t(0.0));
+        let big = c.submit("big", 2, t(0.0));
+        let assigned = c.schedule(t(0.0));
+        assert_eq!(assigned.len(), 1); // big doesn't fit next to small
+        c.on_job_finished(small, true, t(10.0)).unwrap();
+        let assigned = c.schedule(t(10.0));
+        assert_eq!(assigned, vec![(big, "n1".to_string())]);
+    }
+
+    #[test]
+    fn deregister_requeues_and_removes() {
+        let mut c = BatchCore::new(Placement::PackFirstFit);
+        c.register_node("n1", 1, t(0.0));
+        let a = c.submit("a", 1, t(0.0));
+        c.schedule(t(0.0));
+        let rq = c.deregister_node("n1", t(1.0)).unwrap();
+        assert_eq!(rq, vec![a]);
+        assert!(c.nodes().is_empty());
+        assert_eq!(c.pending(), 1);
+        assert!(c.deregister_node("n1", t(2.0)).is_err());
+    }
+
+    #[test]
+    fn reregistration_revives_node() {
+        let mut c = BatchCore::new(Placement::PackFirstFit);
+        c.register_node("n1", 1, t(0.0));
+        c.set_node_health("n1", NodeHealth::Down, t(1.0)).unwrap();
+        c.register_node("n1", 1, t(2.0));
+        assert_eq!(c.nodes()[0].health, NodeHealth::Up);
+        assert_eq!(c.nodes().len(), 1);
+    }
+}

@@ -1,0 +1,176 @@
+//! Local Resource Management System (LRMS) abstraction.
+//!
+//! The paper's cluster runs SLURM; CLUES supports several LRMS through
+//! plugins (HTCondor, SGE, Mesos, Kubernetes, Nomad…). We model that
+//! plugin architecture with the [`Lrms`] trait, a shared batch-system
+//! core ([`core::BatchCore`]), and two concrete plugins: [`slurm::Slurm`]
+//! (FIFO, depth-first packing) and [`condor::HtCondor`] (matchmaking,
+//! breadth-first spreading).
+
+pub mod condor;
+pub mod core;
+pub mod partition;
+pub mod slurm;
+
+pub use condor::HtCondor;
+pub use partition::PartitionedLrms;
+pub use slurm::Slurm;
+
+use crate::sim::SimTime;
+
+/// Cluster-wide job identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// Job lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Completed,
+    Failed,
+    Cancelled,
+}
+
+/// One batch job.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub name: String,
+    /// Slots consumed on its node (the paper's audio jobs take a whole
+    /// 2-vCPU node, i.e. 1 node-slot).
+    pub slots: u32,
+    pub state: JobState,
+    pub submitted_at: SimTime,
+    pub started_at: Option<SimTime>,
+    pub finished_at: Option<SimTime>,
+    pub node: Option<String>,
+    /// Times the job was requeued after a node failure.
+    pub requeues: u32,
+}
+
+/// Node health as seen by the LRMS controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeHealth {
+    Up,
+    /// Not responding (real failure or transient flap — the LRMS cannot
+    /// tell the difference, which is exactly the paper's vnode-5 story).
+    Down,
+    /// Administratively draining (no new jobs).
+    Drain,
+}
+
+/// Snapshot of one registered node.
+#[derive(Debug, Clone)]
+pub struct NodeInfo {
+    pub name: String,
+    pub slots: u32,
+    pub used_slots: u32,
+    pub health: NodeHealth,
+    pub registered_at: SimTime,
+    /// Last instant the node transitioned to fully idle.
+    pub idle_since: Option<SimTime>,
+}
+
+impl NodeInfo {
+    pub fn is_idle(&self) -> bool {
+        self.used_slots == 0 && self.health == NodeHealth::Up
+    }
+}
+
+/// Scheduling decision: job → node assignments made by one sweep.
+pub type Assignment = (JobId, String);
+
+/// The LRMS plugin interface (what CLUES and the cluster façade consume).
+pub trait Lrms {
+    /// Plugin name ("slurm", "htcondor").
+    fn kind(&self) -> &'static str;
+
+    /// Add a node with `slots` job slots (WN joined the cluster).
+    fn register_node(&mut self, name: &str, slots: u32, t: SimTime);
+
+    /// Remove a node entirely (it was terminated). Running jobs on it are
+    /// requeued. Returns requeued job ids.
+    fn deregister_node(&mut self, name: &str, t: SimTime)
+        -> anyhow::Result<Vec<JobId>>;
+
+    /// Update node health; `Down` requeues that node's running jobs.
+    /// Returns requeued job ids.
+    fn set_node_health(&mut self, name: &str, health: NodeHealth, t: SimTime)
+        -> anyhow::Result<Vec<JobId>>;
+
+    /// Submit a job; it starts Pending.
+    fn submit(&mut self, name: &str, slots: u32, t: SimTime) -> JobId;
+
+    /// Cancel a pending job.
+    fn cancel(&mut self, id: JobId, t: SimTime) -> anyhow::Result<()>;
+
+    /// One scheduling sweep: assign pending jobs to free slots.
+    fn schedule(&mut self, t: SimTime) -> Vec<Assignment>;
+
+    /// Mark a running job finished (ok) or failed.
+    fn on_job_finished(&mut self, id: JobId, ok: bool, t: SimTime)
+        -> anyhow::Result<()>;
+
+    fn job(&self, id: JobId) -> Option<&Job>;
+    fn jobs(&self) -> Vec<&Job>;
+    fn nodes(&self) -> Vec<NodeInfo>;
+
+    /// Pending-queue depth — the elasticity signal CLUES polls.
+    fn pending(&self) -> usize;
+    fn running(&self) -> usize;
+
+    /// Total free Up slots right now.
+    fn free_slots(&self) -> u32 {
+        self.nodes()
+            .iter()
+            .filter(|n| n.health == NodeHealth::Up)
+            .map(|n| n.slots - n.used_slots)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod trait_tests {
+    use super::*;
+
+    /// Exercise both plugins through the trait object to ensure the
+    /// plugin architecture actually abstracts them.
+    fn exercise(mut l: Box<dyn Lrms>) {
+        let t0 = SimTime(0.0);
+        l.register_node("n1", 1, t0);
+        l.register_node("n2", 1, t0);
+        let a = l.submit("job-a", 1, t0);
+        let b = l.submit("job-b", 1, t0);
+        let c = l.submit("job-c", 1, t0);
+        assert_eq!(l.pending(), 3);
+        let assigned = l.schedule(SimTime(1.0));
+        assert_eq!(assigned.len(), 2);
+        assert_eq!(l.pending(), 1);
+        assert_eq!(l.running(), 2);
+        l.on_job_finished(a, true, SimTime(10.0)).unwrap();
+        let again = l.schedule(SimTime(10.0));
+        assert_eq!(again.len(), 1);
+        assert_eq!(again[0].0, c);
+        l.on_job_finished(b, true, SimTime(11.0)).unwrap();
+        l.on_job_finished(c, true, SimTime(12.0)).unwrap();
+        assert_eq!(l.running(), 0);
+        assert!(l.nodes().iter().all(|n| n.is_idle()));
+    }
+
+    #[test]
+    fn slurm_through_trait() {
+        exercise(Box::new(Slurm::new()));
+    }
+
+    #[test]
+    fn condor_through_trait() {
+        exercise(Box::new(HtCondor::new()));
+    }
+}

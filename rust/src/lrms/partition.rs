@@ -1,0 +1,272 @@
+//! Multi-partition (multi-queue) batch scheduling — the paper's §5
+//! future work: "integration of both CPU and GPU based resources within
+//! the same virtual cluster entity pooled from multiple cloud sites and
+//! made available to users via different batch queues".
+//!
+//! [`PartitionedLrms`] composes any number of inner [`Lrms`] plugins, one
+//! per partition (SLURM partitions / HTCondor accounting groups), with a
+//! single submit/schedule surface. Nodes register into exactly one
+//! partition; jobs target a partition by name.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context};
+
+use super::{Assignment, Job, JobId, Lrms, NodeHealth, NodeInfo};
+use crate::sim::SimTime;
+
+/// A named partition wrapping its own LRMS scheduler instance.
+pub struct Partition {
+    pub name: String,
+    pub lrms: Box<dyn Lrms>,
+}
+
+/// Multi-queue façade.
+pub struct PartitionedLrms {
+    partitions: Vec<Partition>,
+    /// Global job id → (partition index, inner job id).
+    jobs: HashMap<u64, (usize, JobId)>,
+    /// node name → partition index (names are cluster-unique).
+    nodes: HashMap<String, usize>,
+    next_job: u64,
+}
+
+impl PartitionedLrms {
+    pub fn new() -> PartitionedLrms {
+        PartitionedLrms {
+            partitions: Vec::new(),
+            jobs: HashMap::new(),
+            nodes: HashMap::new(),
+            next_job: 0,
+        }
+    }
+
+    /// Add a partition backed by `lrms` (e.g. Slurm::new()).
+    pub fn add_partition(&mut self, name: &str, lrms: Box<dyn Lrms>)
+        -> anyhow::Result<()> {
+        if self.partitions.iter().any(|p| p.name == name) {
+            bail!("partition {name:?} already exists");
+        }
+        self.partitions.push(Partition { name: name.to_string(), lrms });
+        Ok(())
+    }
+
+    fn partition_idx(&self, name: &str) -> anyhow::Result<usize> {
+        self.partitions
+            .iter()
+            .position(|p| p.name == name)
+            .with_context(|| format!("no partition {name:?}"))
+    }
+
+    pub fn partition_names(&self) -> Vec<&str> {
+        self.partitions.iter().map(|p| p.name.as_str()).collect()
+    }
+
+    /// Register a node into a partition.
+    pub fn register_node(&mut self, partition: &str, node: &str,
+                         slots: u32, t: SimTime) -> anyhow::Result<()> {
+        let idx = self.partition_idx(partition)?;
+        if let Some(&existing) = self.nodes.get(node) {
+            if existing != idx {
+                bail!("node {node:?} already registered in partition \
+                       {:?}", self.partitions[existing].name);
+            }
+        }
+        self.partitions[idx].lrms.register_node(node, slots, t);
+        self.nodes.insert(node.to_string(), idx);
+        Ok(())
+    }
+
+    pub fn deregister_node(&mut self, node: &str, t: SimTime)
+        -> anyhow::Result<Vec<JobId>> {
+        let idx = *self
+            .nodes
+            .get(node)
+            .with_context(|| format!("unknown node {node:?}"))?;
+        let requeued = self.partitions[idx].lrms.deregister_node(node, t)?;
+        self.nodes.remove(node);
+        Ok(requeued)
+    }
+
+    pub fn set_node_health(&mut self, node: &str, health: NodeHealth,
+                           t: SimTime) -> anyhow::Result<Vec<JobId>> {
+        let idx = *self
+            .nodes
+            .get(node)
+            .with_context(|| format!("unknown node {node:?}"))?;
+        self.partitions[idx].lrms.set_node_health(node, health, t)
+    }
+
+    /// Submit a job to a partition; returns a *global* job id.
+    pub fn submit(&mut self, partition: &str, name: &str, slots: u32,
+                  t: SimTime) -> anyhow::Result<JobId> {
+        let idx = self.partition_idx(partition)?;
+        let inner = self.partitions[idx].lrms.submit(name, slots, t);
+        let gid = JobId(self.next_job);
+        self.jobs.insert(self.next_job, (idx, inner));
+        self.next_job += 1;
+        Ok(gid)
+    }
+
+    /// One sweep over every partition. Returns (global id, node).
+    pub fn schedule(&mut self, t: SimTime) -> Vec<(JobId, String)> {
+        let mut out = Vec::new();
+        for (pi, p) in self.partitions.iter_mut().enumerate() {
+            for (inner, node) in p.lrms.schedule(t) {
+                // Reverse-map to the global id.
+                let gid = self
+                    .jobs
+                    .iter()
+                    .find(|(_, &(qi, qj))| qi == pi && qj == inner)
+                    .map(|(&g, _)| JobId(g))
+                    .expect("scheduled job must be registered");
+                out.push((gid, node));
+            }
+        }
+        out
+    }
+
+    pub fn on_job_finished(&mut self, gid: JobId, ok: bool, t: SimTime)
+        -> anyhow::Result<()> {
+        let &(pi, inner) = self
+            .jobs
+            .get(&gid.0)
+            .with_context(|| format!("unknown job {gid}"))?;
+        self.partitions[pi].lrms.on_job_finished(inner, ok, t)
+    }
+
+    pub fn job(&self, gid: JobId) -> Option<&Job> {
+        let &(pi, inner) = self.jobs.get(&gid.0)?;
+        self.partitions[pi].lrms.job(inner)
+    }
+
+    /// Pending depth per partition — the per-queue elasticity signal, so
+    /// CLUES can scale CPU and GPU pools independently.
+    pub fn pending_per_partition(&self) -> Vec<(&str, usize)> {
+        self.partitions
+            .iter()
+            .map(|p| (p.name.as_str(), p.lrms.pending()))
+            .collect()
+    }
+
+    pub fn nodes_in(&self, partition: &str) -> Vec<NodeInfo> {
+        match self.partition_idx(partition) {
+            Ok(idx) => self.partitions[idx].lrms.nodes(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Total assignments view for callers that do not care about queues.
+    pub fn all_nodes(&self) -> Vec<(String, NodeInfo)> {
+        self.partitions
+            .iter()
+            .flat_map(|p| {
+                p.lrms
+                    .nodes()
+                    .into_iter()
+                    .map(move |n| (p.name.clone(), n))
+            })
+            .collect()
+    }
+}
+
+impl Default for PartitionedLrms {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Type alias documenting intent at call sites.
+pub type Queue<'a> = (&'a str, usize);
+
+#[allow(unused)]
+fn _assert_object_safe(_: &dyn Lrms) {}
+
+#[allow(unused)]
+type _AssignmentAlias = Assignment;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lrms::{HtCondor, Slurm};
+
+    fn cpu_gpu() -> PartitionedLrms {
+        let mut p = PartitionedLrms::new();
+        p.add_partition("cpu", Box::new(Slurm::new())).unwrap();
+        p.add_partition("gpu", Box::new(Slurm::new())).unwrap();
+        p.register_node("cpu", "cpu-1", 2, SimTime(0.0)).unwrap();
+        p.register_node("cpu", "cpu-2", 2, SimTime(0.0)).unwrap();
+        p.register_node("gpu", "gpu-1", 1, SimTime(0.0)).unwrap();
+        p
+    }
+
+    #[test]
+    fn jobs_route_to_their_partition() {
+        let mut p = cpu_gpu();
+        let a = p.submit("cpu", "preproc", 1, SimTime(0.0)).unwrap();
+        let b = p.submit("gpu", "train", 1, SimTime(0.0)).unwrap();
+        let assigned = p.schedule(SimTime(1.0));
+        let node_of = |id: JobId| assigned.iter()
+            .find(|(j, _)| *j == id).map(|(_, n)| n.clone()).unwrap();
+        assert!(node_of(a).starts_with("cpu-"));
+        assert_eq!(node_of(b), "gpu-1");
+    }
+
+    #[test]
+    fn gpu_queue_backlogs_independently() {
+        let mut p = cpu_gpu();
+        for i in 0..5 {
+            p.submit("gpu", &format!("g{i}"), 1, SimTime(0.0)).unwrap();
+        }
+        p.submit("cpu", "c0", 1, SimTime(0.0)).unwrap();
+        p.schedule(SimTime(1.0));
+        let pending: HashMap<&str, usize> =
+            p.pending_per_partition().into_iter().collect();
+        assert_eq!(pending["gpu"], 4); // 1 slot, 5 jobs
+        assert_eq!(pending["cpu"], 0);
+    }
+
+    #[test]
+    fn node_names_unique_across_partitions() {
+        let mut p = cpu_gpu();
+        assert!(p.register_node("gpu", "cpu-1", 1, SimTime(0.0)).is_err());
+        // Re-register into the same partition is fine (revival).
+        p.register_node("cpu", "cpu-1", 2, SimTime(1.0)).unwrap();
+    }
+
+    #[test]
+    fn mixed_plugin_partitions() {
+        let mut p = PartitionedLrms::new();
+        p.add_partition("batch", Box::new(Slurm::new())).unwrap();
+        p.add_partition("htc", Box::new(HtCondor::new())).unwrap();
+        p.register_node("batch", "b1", 1, SimTime(0.0)).unwrap();
+        p.register_node("htc", "h1", 1, SimTime(0.0)).unwrap();
+        let a = p.submit("batch", "x", 1, SimTime(0.0)).unwrap();
+        let b = p.submit("htc", "y", 1, SimTime(0.0)).unwrap();
+        assert_eq!(p.schedule(SimTime(1.0)).len(), 2);
+        p.on_job_finished(a, true, SimTime(5.0)).unwrap();
+        p.on_job_finished(b, true, SimTime(5.0)).unwrap();
+        assert_eq!(p.job(a).unwrap().state, crate::lrms::JobState::Completed);
+    }
+
+    #[test]
+    fn unknown_partition_rejected() {
+        let mut p = cpu_gpu();
+        assert!(p.submit("tpu", "z", 1, SimTime(0.0)).is_err());
+        assert!(p.add_partition("cpu", Box::new(Slurm::new())).is_err());
+    }
+
+    #[test]
+    fn health_and_deregistration_via_global_names() {
+        let mut p = cpu_gpu();
+        let a = p.submit("gpu", "g", 1, SimTime(0.0)).unwrap();
+        p.schedule(SimTime(0.0));
+        let requeued = p.set_node_health("gpu-1", NodeHealth::Down,
+                                         SimTime(1.0)).unwrap();
+        assert_eq!(requeued.len(), 1);
+        assert_eq!(p.job(a).unwrap().state, crate::lrms::JobState::Pending);
+        p.deregister_node("gpu-1", SimTime(2.0)).unwrap();
+        assert!(p.nodes_in("gpu").is_empty());
+        assert_eq!(p.all_nodes().len(), 2);
+    }
+}

@@ -1,0 +1,115 @@
+//! SLURM-flavoured LRMS plugin: FIFO queue, depth-first node packing —
+//! the batch system used in the paper's use case.
+
+use super::core::{BatchCore, Placement};
+use super::{Assignment, Job, JobId, Lrms, NodeHealth, NodeInfo};
+use crate::sim::SimTime;
+
+/// SLURM-like controller (`slurmctld` analogue).
+#[derive(Debug)]
+pub struct Slurm {
+    core: BatchCore,
+}
+
+impl Slurm {
+    pub fn new() -> Slurm {
+        Slurm { core: BatchCore::new(Placement::PackFirstFit) }
+    }
+}
+
+impl Default for Slurm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Lrms for Slurm {
+    fn kind(&self) -> &'static str {
+        "slurm"
+    }
+
+    fn register_node(&mut self, name: &str, slots: u32, t: SimTime) {
+        self.core.register_node(name, slots, t)
+    }
+
+    fn deregister_node(&mut self, name: &str, t: SimTime)
+        -> anyhow::Result<Vec<JobId>> {
+        self.core.deregister_node(name, t)
+    }
+
+    fn set_node_health(&mut self, name: &str, health: NodeHealth, t: SimTime)
+        -> anyhow::Result<Vec<JobId>> {
+        self.core.set_node_health(name, health, t)
+    }
+
+    fn submit(&mut self, name: &str, slots: u32, t: SimTime) -> JobId {
+        self.core.submit(name, slots, t)
+    }
+
+    fn cancel(&mut self, id: JobId, t: SimTime) -> anyhow::Result<()> {
+        self.core.cancel(id, t)
+    }
+
+    fn schedule(&mut self, t: SimTime) -> Vec<Assignment> {
+        self.core.schedule(t)
+    }
+
+    fn on_job_finished(&mut self, id: JobId, ok: bool, t: SimTime)
+        -> anyhow::Result<()> {
+        self.core.on_job_finished(id, ok, t)
+    }
+
+    fn job(&self, id: JobId) -> Option<&Job> {
+        self.core.job(id)
+    }
+
+    fn jobs(&self) -> Vec<&Job> {
+        self.core.jobs()
+    }
+
+    fn nodes(&self) -> Vec<NodeInfo> {
+        self.core.nodes()
+    }
+
+    fn pending(&self) -> usize {
+        self.core.pending()
+    }
+
+    fn running(&self) -> usize {
+        self.core.running()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_is_respected() {
+        let mut s = Slurm::new();
+        s.register_node("wn1", 1, SimTime(0.0));
+        let ids: Vec<JobId> = (0..5)
+            .map(|i| s.submit(&format!("j{i}"), 1, SimTime(i as f64)))
+            .collect();
+        let mut started = Vec::new();
+        for step in 0..5 {
+            let a = s.schedule(SimTime(10.0 + step as f64));
+            assert_eq!(a.len(), 1);
+            started.push(a[0].0);
+            s.on_job_finished(a[0].0, true, SimTime(10.5 + step as f64))
+                .unwrap();
+        }
+        assert_eq!(started, ids);
+    }
+
+    #[test]
+    fn packs_depth_first() {
+        let mut s = Slurm::new();
+        s.register_node("wn1", 2, SimTime(0.0));
+        s.register_node("wn2", 2, SimTime(0.0));
+        s.submit("a", 1, SimTime(0.0));
+        s.submit("b", 1, SimTime(0.0));
+        let a = s.schedule(SimTime(0.0));
+        assert!(a.iter().all(|(_, n)| n == "wn1"));
+    }
+}

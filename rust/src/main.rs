@@ -1,0 +1,272 @@
+//! `evhc` — CLI for the Elastic Virtual Hybrid Cluster reproduction.
+//!
+//! Subcommands:
+//!   usecase    run the paper's §4 scenario (figures + tables to results/)
+//!   deploy     deploy a cluster from a TOSCA template and run a workload
+//!   templates  list the built-in curated TOSCA templates
+//!   verify     golden-check the AOT artifacts against the PJRT runtime
+//!   infer      classify one synthetic audio file through the hot path
+
+use evhc::cloudsim::{InjectionPlan, TransientDown};
+use evhc::cluster::{HybridCluster, RunConfig};
+use evhc::sim::SimTime;
+use evhc::util::cli::Command;
+use evhc::util::csv::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let (sub, rest) = match args.split_first() {
+        Some((s, rest)) => (s.as_str(), rest),
+        None => ("help", &[][..]),
+    };
+    match sub {
+        "usecase" => usecase(rest),
+        "deploy" => deploy(rest),
+        "templates" => templates(),
+        "verify" => verify(rest),
+        "infer" => infer(rest),
+        "serve" => serve(rest),
+        "orchent" => orchent(rest),
+        "help" | "--help" | "-h" => {
+            println!(
+                "evhc — elastic virtual hybrid clusters across cloud sites\n\
+                 \nUSAGE:\n  evhc <usecase|deploy|templates|verify|infer|\
+serve|orchent> [options]\n\nRun `evhc <subcommand> --help` for details."
+            );
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown subcommand {other:?} (try `evhc help`)"),
+    }
+}
+
+fn usecase_cmd() -> Command {
+    Command::new("evhc usecase", "run the paper's §4 hybrid use case")
+        .opt("scale", "F", Some("1.0"), "workload scale (1.0 = 3,676 jobs)")
+        .opt("seed", "N", Some("42"), "simulation seed")
+        .opt("infer-every", "N", Some("0"),
+             "run real PJRT inference for 1/N jobs (0 = off)")
+        .opt("out", "DIR", Some("results"), "output directory for figures")
+        .flag("parallel", "parallel orchestrator updates (ablation)")
+        .flag("no-flap", "disable the vnode-5 transient failure injection")
+        .flag("verbose", "log milestones as they happen")
+}
+
+fn usecase(args: &[String]) -> anyhow::Result<()> {
+    let p = usecase_cmd().parse(args)?;
+    evhc::util::logging::init(if p.flag("verbose") { 1 } else { 0 });
+    let scale: f64 = p.get_parsed("scale")?;
+    let mut cfg = RunConfig::paper_usecase(scale, p.get_parsed("seed")?);
+    cfg.inference_every = p.get_parsed("infer-every")?;
+    cfg.serialized_orchestrator = !p.flag("parallel");
+    if !p.flag("no-flap") {
+        cfg.injections = InjectionPlan {
+            transient_downs: vec![TransientDown {
+                node_name: "vnode-5".into(),
+                start: SimTime(4800.0 * scale.max(0.02)),
+                duration_secs: 300.0,
+            }],
+        };
+    }
+    let total = cfg.workload.total_jobs();
+    let report = HybridCluster::new(cfg)?.run()?;
+
+    for (t, m) in &report.recorder.milestones {
+        println!("{t} {m}");
+    }
+    let outdir = p.get_or("out", "results");
+    std::fs::create_dir_all(outdir)?;
+    report
+        .recorder
+        .fig10_usage(120.0, report.makespan)
+        .write(format!("{outdir}/fig10_usage.csv"))?;
+    report
+        .recorder
+        .fig11_states(120.0, report.makespan)
+        .write(format!("{outdir}/fig11_states.csv"))?;
+    let mut cost = Table::new(vec!["vm", "site", "role", "hours",
+                                   "busy_hours", "cost_usd"]);
+    for r in &report.per_vm {
+        cost.push(vec![r.name.clone(), r.site.clone(),
+                       format!("{:?}", r.role), format!("{:.3}", r.hours),
+                       format!("{:.3}", r.busy_hours),
+                       format!("{:.4}", r.cost_usd)]);
+    }
+    cost.write(format!("{outdir}/cost_table.csv"))?;
+
+    println!("\njobs {}/{} | makespan {} | cost ${:.2} | paid util {:.0}% \
+              | {} events in {:.2}s",
+             report.jobs_completed, total, report.makespan,
+             report.total_cost_usd, report.paid_utilization() * 100.0,
+             report.events, report.wall_secs);
+    if report.inferences_run > 0 {
+        println!("PJRT: {} inferences, {:.1} ms mean",
+                 report.inferences_run,
+                 report.inference_wall_secs * 1e3
+                     / report.inferences_run as f64);
+    }
+    println!("figures written to {outdir}/");
+    Ok(())
+}
+
+fn deploy_cmd() -> Command {
+    Command::new("evhc deploy", "deploy a cluster from a TOSCA template")
+        .opt("template", "NAME|PATH", Some("slurm"),
+             "built-in template name or path to a TOSCA YAML file")
+        .opt("scale", "F", Some("0.1"), "workload scale")
+        .opt("seed", "N", Some("1"), "simulation seed")
+        .flag("verbose", "log milestones")
+}
+
+fn deploy(args: &[String]) -> anyhow::Result<()> {
+    let p = deploy_cmd().parse(args)?;
+    evhc::util::logging::init(if p.flag("verbose") { 1 } else { 0 });
+    let tpl_arg = p.get_or("template", "slurm");
+    let template = if std::path::Path::new(tpl_arg).exists() {
+        evhc::tosca::parse(&std::fs::read_to_string(tpl_arg)?)?
+    } else {
+        evhc::tosca::builtin(tpl_arg)?
+    };
+    println!("deploying {:?} ({} on {}, {} initial / {} max workers)",
+             template.name, template.description, template.lrms.name(),
+             template.scalable.count, template.scalable.max_instances);
+    let mut cfg = RunConfig::paper_usecase(p.get_parsed("scale")?,
+                                           p.get_parsed("seed")?);
+    cfg.template = template;
+    let report = HybridCluster::new(cfg)?.run()?;
+    for (t, m) in &report.recorder.milestones {
+        println!("{t} {m}");
+    }
+    println!("\njobs {} | makespan {} | cost ${:.2}",
+             report.jobs_completed, report.makespan,
+             report.total_cost_usd);
+    Ok(())
+}
+
+fn templates() -> anyhow::Result<()> {
+    for name in ["slurm", "htcondor"] {
+        let t = evhc::tosca::builtin(name)?;
+        println!("{name:<10} {} — {} (workers {}..{}, cipher {})",
+                 t.name, t.description, t.scalable.min_instances,
+                 t.scalable.max_instances, t.vpn_cipher.name());
+    }
+    Ok(())
+}
+
+fn verify(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("evhc verify",
+                           "golden-check artifacts against the runtime")
+        .opt("artifacts", "DIR", Some("artifacts"), "artifacts directory");
+    let p = cmd.parse(args)?;
+    let dir = p.get_or("artifacts", "artifacts");
+    for entry in evhc::runtime::read_manifest(std::path::Path::new(dir))? {
+        let rt = evhc::runtime::ModelRuntime::load(dir, entry.batch)?;
+        let err = rt.verify_golden()?;
+        println!("{}: OK (|Δ|={err:.2e}, {} params)", entry.name,
+                 entry.param_count);
+    }
+    Ok(())
+}
+
+fn infer(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("evhc infer",
+                           "classify one synthetic audio file")
+        .opt("file-id", "N", Some("0"), "synthetic file id")
+        .opt("artifacts", "DIR", Some("artifacts"), "artifacts directory")
+        .opt("top", "K", Some("5"), "show top-K classes");
+    let p = cmd.parse(args)?;
+    let rt = evhc::runtime::ModelRuntime::load(
+        p.get_or("artifacts", "artifacts"), 1)?;
+    let t0 = std::time::Instant::now();
+    let logits = rt.infer_file(p.get_parsed("file-id")?)?;
+    let dt = t0.elapsed();
+    let k: usize = p.get_parsed("top")?;
+    println!("inference in {dt:?}; top-{k} classes:");
+    for (cls, logit) in evhc::runtime::ModelRuntime::top_k(&logits, k) {
+        println!("  class {cls:>3}  logit {logit:>8.3}");
+    }
+    Ok(())
+}
+
+fn serve(args: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("evhc serve",
+                           "run the Orchestrator REST API server")
+        .opt("bind", "ADDR", Some("127.0.0.1:8080"), "listen address");
+    let p = cmd.parse(args)?;
+    evhc::util::logging::init(1);
+    let srv = evhc::api::ApiServer::start(p.get_or("bind",
+                                                   "127.0.0.1:8080"))?;
+    println!("orchestrator API listening on http://{}", srv.addr);
+    println!("endpoints: /health /templates /deployments");
+    println!("Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn orchent(args: &[String]) -> anyhow::Result<()> {
+    // orchent-style client: depls / show / create / delete over the API.
+    let cmd = Command::new("evhc orchent",
+                           "orchent-style client for the REST API")
+        .opt("url", "URL", Some("127.0.0.1:8080"), "server host:port")
+        .opt("template", "NAME", Some("slurm"),
+             "template for `create` (built-in name)")
+        .positional("action", "one of: depls, show, create, delete")
+        .positional("id", "deployment id (for show/delete)");
+    let p = cmd.parse(args)?;
+    let host = p.get_or("url", "127.0.0.1:8080");
+    let action = p.positional(0).unwrap_or("depls");
+    use std::io::{Read, Write};
+    let send = |req: String| -> anyhow::Result<String> {
+        let mut s = std::net::TcpStream::connect(host)?;
+        s.write_all(req.as_bytes())?;
+        let mut buf = String::new();
+        s.read_to_string(&mut buf)?;
+        Ok(buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string())
+    };
+    let body = match action {
+        "depls" => send(format!(
+            "GET /deployments HTTP/1.1\r\nHost: {host}\r\nConnection: \
+             close\r\n\r\n"))?,
+        "show" => {
+            let id = p.positional(1).unwrap_or("1");
+            send(format!(
+                "GET /deployments/{id} HTTP/1.1\r\nHost: {host}\r\n\
+                 Connection: close\r\n\r\n"))?
+        }
+        "create" => {
+            let tosca = match p.get_or("template", "slurm") {
+                "htcondor" => evhc::tosca::HTCONDOR_ELASTIC_TEMPLATE,
+                _ => evhc::tosca::SLURM_ELASTIC_TEMPLATE,
+            };
+            send(format!(
+                "POST /deployments HTTP/1.1\r\nHost: {host}\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n{tosca}",
+                tosca.len()))?
+        }
+        "delete" => {
+            let id = p.positional(1).unwrap_or("1");
+            send(format!(
+                "DELETE /deployments/{id} HTTP/1.1\r\nHost: {host}\r\n\
+                 Connection: close\r\n\r\n"))?
+        }
+        other => anyhow::bail!("unknown action {other:?}"),
+    };
+    // Pretty-print through the JSON parser.
+    match evhc::api::json::parse(&body) {
+        Ok(v) => println!("{}", v.render()),
+        Err(_) => println!("{body}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,292 @@
+//! Time-series recording and figure/table regeneration.
+//!
+//! The cluster world emits node display-state transitions and job events
+//! into a [`Recorder`]; exporters then rebuild the paper's Figure 10
+//! (per-node usage evolution), Figure 11 (node state counts evolution)
+//! and the §4.2 cost/utilization table from the recorded series.
+
+use std::collections::BTreeMap;
+
+use crate::sim::SimTime;
+use crate::util::csv::Table;
+
+/// Node display states — exactly the legend of the paper's Figure 11
+/// (blue=used, green=powering on, orange=idle, purple=powering off),
+/// plus Off/Failed for completeness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DisplayState {
+    Used,
+    PoweringOn,
+    Idle,
+    PoweringOff,
+    Off,
+    Failed,
+}
+
+impl DisplayState {
+    pub fn label(self) -> &'static str {
+        match self {
+            DisplayState::Used => "used",
+            DisplayState::PoweringOn => "powering_on",
+            DisplayState::Idle => "idle",
+            DisplayState::PoweringOff => "powering_off",
+            DisplayState::Off => "off",
+            DisplayState::Failed => "failed",
+        }
+    }
+}
+
+/// Recorder of everything the figures need.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    /// (t, node, new state) transitions, in time order.
+    pub transitions: Vec<(SimTime, String, DisplayState)>,
+    /// (t, event label) milestones for the narrative log.
+    pub milestones: Vec<(SimTime, String)>,
+    /// Completed job records: (node, start, end).
+    pub job_runs: Vec<(String, SimTime, SimTime)>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn node_state(&mut self, t: SimTime, node: &str, s: DisplayState) {
+        self.transitions.push((t, node.to_string(), s));
+    }
+
+    pub fn milestone(&mut self, t: SimTime, label: impl Into<String>) {
+        self.milestones.push((t, label.into()));
+    }
+
+    pub fn job_run(&mut self, node: &str, start: SimTime, end: SimTime) {
+        self.job_runs.push((node.to_string(), start, end));
+    }
+
+    /// All node names seen, in first-appearance order.
+    pub fn node_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for (_, n, _) in &self.transitions {
+            if !names.contains(n) {
+                names.push(n.clone());
+            }
+        }
+        names
+    }
+
+    /// State of each node at time `t` (replay of the transition log).
+    pub fn states_at(&self, t: SimTime) -> BTreeMap<String, DisplayState> {
+        let mut m = BTreeMap::new();
+        for (at, node, s) in &self.transitions {
+            if at.0 <= t.0 {
+                m.insert(node.clone(), *s);
+            }
+        }
+        m
+    }
+
+    /// Figure 10: one row per `bucket_secs`, one column per node, cell =
+    /// 1 when the node is executing a job in that bucket.
+    /// Pointer-sweep over per-node sorted intervals —
+    /// O(runs log runs + buckets x nodes) instead of rescanning every
+    /// job run per cell (EXPERIMENTS §Perf L3).
+    pub fn fig10_usage(&self, bucket_secs: f64, until: SimTime) -> Table {
+        let names = self.node_names();
+        let mut header = vec!["time".to_string()];
+        header.extend(names.iter().cloned());
+        let mut table = Table::new(header);
+
+        // Group + sort intervals per node.
+        let mut per_node: BTreeMap<&str, Vec<(f64, f64)>> = BTreeMap::new();
+        for (node, s, e) in &self.job_runs {
+            per_node.entry(node.as_str()).or_default().push((s.0, e.0));
+        }
+        for runs in per_node.values_mut() {
+            runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        }
+        let mut cursor: BTreeMap<&str, usize> = BTreeMap::new();
+
+        let mut t = 0.0;
+        while t <= until.0 {
+            let mut row = vec![SimTime(t).hms()];
+            for n in &names {
+                let busy = match per_node.get(n.as_str()) {
+                    None => false,
+                    Some(runs) => {
+                        let idx = cursor.entry(per_node
+                            .get_key_value(n.as_str()).unwrap().0)
+                            .or_insert(0);
+                        // Skip intervals that ended before this bucket.
+                        while *idx < runs.len() && runs[*idx].1 <= t {
+                            *idx += 1;
+                        }
+                        *idx < runs.len()
+                            && runs[*idx].0 < t + bucket_secs
+                            && runs[*idx].1 > t
+                    }
+                };
+                row.push(if busy { "1".into() } else { "0".into() });
+            }
+            table.push(row);
+            t += bucket_secs;
+        }
+        table
+    }
+
+    /// Figure 11: one row per bucket with counts of nodes per display
+    /// state (used / powering_on / idle / powering_off / failed).
+    ///
+    /// Single forward replay of the (time-ordered) transition log —
+    /// O(transitions + buckets) instead of a full scan per bucket, which
+    /// cost as much as the entire simulation (EXPERIMENTS §Perf L3).
+    pub fn fig11_states(&self, bucket_secs: f64, until: SimTime) -> Table {
+        let mut table = Table::new(vec![
+            "time", "used", "powering_on", "idle", "powering_off", "failed",
+        ]);
+        // DES dispatch order makes the log time-sorted already; the
+        // stable sort is a cheap guarantee for hand-built recorders.
+        let mut ordered: Vec<&(SimTime, String, DisplayState)> =
+            self.transitions.iter().collect();
+        ordered.sort_by(|a, b| a.0 .0.partial_cmp(&b.0 .0).unwrap());
+        let mut current: BTreeMap<&str, DisplayState> = BTreeMap::new();
+        let mut idx = 0usize;
+        let mut t = 0.0;
+        while t <= until.0 {
+            while idx < ordered.len() && ordered[idx].0 .0 <= t {
+                let (_, node, s) = ordered[idx];
+                current.insert(node.as_str(), *s);
+                idx += 1;
+            }
+            let count = |want: DisplayState| {
+                current.values().filter(|&&s| s == want).count().to_string()
+            };
+            table.push(vec![
+                SimTime(t).hms(),
+                count(DisplayState::Used),
+                count(DisplayState::PoweringOn),
+                count(DisplayState::Idle),
+                count(DisplayState::PoweringOff),
+                count(DisplayState::Failed),
+            ]);
+            t += bucket_secs;
+        }
+        table
+    }
+
+    /// Total busy seconds per node (Figure 10 integrals / §4.2 numbers).
+    pub fn busy_secs_per_node(&self) -> BTreeMap<String, f64> {
+        let mut m: BTreeMap<String, f64> = BTreeMap::new();
+        for (node, s, e) in &self.job_runs {
+            *m.entry(node.clone()).or_insert(0.0) += e.0 - s.0;
+        }
+        m
+    }
+
+    /// Seconds each node spent in each display state up to `until`.
+    pub fn state_durations(&self, until: SimTime)
+        -> BTreeMap<String, BTreeMap<&'static str, f64>> {
+        let mut per_node: BTreeMap<String,
+            Vec<(SimTime, DisplayState)>> = BTreeMap::new();
+        for (t, n, s) in &self.transitions {
+            per_node.entry(n.clone()).or_default().push((*t, *s));
+        }
+        let mut out = BTreeMap::new();
+        for (node, mut evs) in per_node {
+            evs.sort_by(|a, b| a.0 .0.partial_cmp(&b.0 .0).unwrap());
+            let mut durs: BTreeMap<&'static str, f64> = BTreeMap::new();
+            for (i, (t0, s)) in evs.iter().enumerate() {
+                let t1 = evs.get(i + 1).map(|(t, _)| t.0).unwrap_or(until.0);
+                if t1 > t0.0 {
+                    *durs.entry(s.label()).or_insert(0.0) += t1 - t0.0;
+                }
+            }
+            out.insert(node, durs);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime(s)
+    }
+
+    fn demo() -> Recorder {
+        let mut r = Recorder::new();
+        r.node_state(t(0.0), "vnode-1", DisplayState::Idle);
+        r.node_state(t(10.0), "vnode-1", DisplayState::Used);
+        r.node_state(t(50.0), "vnode-1", DisplayState::Idle);
+        r.node_state(t(0.0), "vnode-3", DisplayState::PoweringOn);
+        r.node_state(t(30.0), "vnode-3", DisplayState::Used);
+        r.job_run("vnode-1", t(10.0), t(50.0));
+        r.job_run("vnode-3", t(30.0), t(80.0));
+        r
+    }
+
+    #[test]
+    fn states_at_replays_log() {
+        let r = demo();
+        let s = r.states_at(t(5.0));
+        assert_eq!(s["vnode-1"], DisplayState::Idle);
+        assert_eq!(s["vnode-3"], DisplayState::PoweringOn);
+        let s = r.states_at(t(40.0));
+        assert_eq!(s["vnode-1"], DisplayState::Used);
+        assert_eq!(s["vnode-3"], DisplayState::Used);
+    }
+
+    #[test]
+    fn fig10_marks_busy_buckets() {
+        let r = demo();
+        let tab = r.fig10_usage(20.0, t(80.0));
+        let csv = tab.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "time,vnode-1,vnode-3");
+        // Bucket [20,40): vnode-1 busy (job 10-50), vnode-3 busy (30-80).
+        assert_eq!(lines[2], "00:00:20,1,1");
+        // Bucket [60,80): only vnode-3.
+        assert_eq!(lines[4], "00:01:00,0,1");
+    }
+
+    #[test]
+    fn fig11_counts_states() {
+        let r = demo();
+        let tab = r.fig11_states(30.0, t(60.0));
+        let lines: Vec<String> =
+            tab.to_csv().lines().map(String::from).collect();
+        // At t=0: one idle, one powering on.
+        assert_eq!(lines[1], "00:00:00,0,1,1,0,0");
+        // At t=30: both used.
+        assert_eq!(lines[2], "00:00:30,2,0,0,0,0");
+        // At t=60: vnode-1 idle again, vnode-3 used.
+        assert_eq!(lines[3], "00:01:00,1,0,1,0,0");
+    }
+
+    #[test]
+    fn busy_totals() {
+        let r = demo();
+        let m = r.busy_secs_per_node();
+        assert_eq!(m["vnode-1"], 40.0);
+        assert_eq!(m["vnode-3"], 50.0);
+    }
+
+    #[test]
+    fn state_durations_integrate_to_horizon() {
+        let r = demo();
+        let d = r.state_durations(t(100.0));
+        let v1: f64 = d["vnode-1"].values().sum();
+        assert!((v1 - 100.0).abs() < 1e-9);
+        assert_eq!(d["vnode-1"]["used"], 40.0);
+        assert_eq!(d["vnode-3"]["powering_on"], 30.0);
+    }
+
+    #[test]
+    fn milestones_recorded() {
+        let mut r = Recorder::new();
+        r.milestone(t(60.0), "AWS vnode-3 joined SLURM");
+        assert_eq!(r.milestones.len(), 1);
+    }
+}

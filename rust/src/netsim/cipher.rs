@@ -1,0 +1,127 @@
+//! OpenVPN cipher cost model (§3.5.6 performance-security trade-off).
+//!
+//! Throughput caps reflect what a t2.medium-class vRouter VM can push
+//! through a single OpenVPN tunnel with each cipher; ordering (plain >
+//! AES-128-GCM > AES-256-GCM > ChaCha20 > BF-CBC) is what matters for
+//! reproducing the trade-off, not the absolute numbers.
+
+/// Tunnel cipher choices exposed to deployments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Cipher {
+    /// `--cipher none`: authentication only, no confidentiality. The paper
+    /// suggests this for cluster software that already encrypts natively.
+    Plain,
+    /// AES-128-GCM (AES-NI accelerated).
+    Aes128Gcm,
+    /// AES-256-GCM — the secure default.
+    Aes256Gcm,
+    /// ChaCha20-Poly1305 (no AES-NI needed).
+    ChaCha20,
+    /// Legacy Blowfish-CBC (OpenVPN's historical default).
+    BlowfishCbc,
+}
+
+impl Cipher {
+    pub const ALL: [Cipher; 5] = [
+        Cipher::Plain,
+        Cipher::Aes128Gcm,
+        Cipher::Aes256Gcm,
+        Cipher::ChaCha20,
+        Cipher::BlowfishCbc,
+    ];
+
+    /// Single-tunnel throughput cap on the reference vRouter VM, bytes/s.
+    pub fn throughput_bps(self) -> f64 {
+        match self {
+            Cipher::Plain => 112.5e6,      // ~900 Mbps, tun copy-bound
+            Cipher::Aes128Gcm => 80.0e6,   // ~640 Mbps
+            Cipher::Aes256Gcm => 70.0e6,   // ~560 Mbps
+            Cipher::ChaCha20 => 60.0e6,    // ~480 Mbps
+            Cipher::BlowfishCbc => 17.5e6, // ~140 Mbps
+        }
+    }
+
+    /// Added processing latency per tunnelled hop, seconds.
+    pub fn hop_latency_s(self) -> f64 {
+        match self {
+            Cipher::Plain => 0.0002,
+            Cipher::Aes128Gcm => 0.0004,
+            Cipher::Aes256Gcm => 0.0005,
+            Cipher::ChaCha20 => 0.0006,
+            Cipher::BlowfishCbc => 0.0012,
+        }
+    }
+
+    /// vRouter CPU cost per byte (fraction of one core-second), used to
+    /// model the central point as a compute bottleneck under fan-in.
+    pub fn cpu_cost_per_byte(self) -> f64 {
+        // One fully-loaded core saturates at exactly the throughput cap.
+        1.0 / self.throughput_bps()
+    }
+
+    /// Security level label (for reports).
+    pub fn security(self) -> &'static str {
+        match self {
+            Cipher::Plain => "none",
+            Cipher::Aes128Gcm => "128-bit AEAD",
+            Cipher::Aes256Gcm => "256-bit AEAD",
+            Cipher::ChaCha20 => "256-bit AEAD",
+            Cipher::BlowfishCbc => "64-bit block (legacy)",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Cipher::Plain => "none",
+            Cipher::Aes128Gcm => "AES-128-GCM",
+            Cipher::Aes256Gcm => "AES-256-GCM",
+            Cipher::ChaCha20 => "ChaCha20-Poly1305",
+            Cipher::BlowfishCbc => "BF-CBC",
+        }
+    }
+}
+
+impl std::str::FromStr for Cipher {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "plain" => Ok(Cipher::Plain),
+            "aes-128-gcm" | "aes128" => Ok(Cipher::Aes128Gcm),
+            "aes-256-gcm" | "aes256" => Ok(Cipher::Aes256Gcm),
+            "chacha20" | "chacha20-poly1305" => Ok(Cipher::ChaCha20),
+            "bf-cbc" | "blowfish" => Ok(Cipher::BlowfishCbc),
+            other => anyhow::bail!("unknown cipher {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_plain_fastest_blowfish_slowest() {
+        let caps: Vec<f64> =
+            Cipher::ALL.iter().map(|c| c.throughput_bps()).collect();
+        assert!(caps.windows(2).all(|w| w[0] >= w[1]), "{caps:?}");
+        let lats: Vec<f64> =
+            Cipher::ALL.iter().map(|c| c.hop_latency_s()).collect();
+        assert!(lats.windows(2).all(|w| w[0] <= w[1]), "{lats:?}");
+    }
+
+    #[test]
+    fn cpu_cost_inverse_of_throughput() {
+        for c in Cipher::ALL {
+            let t = c.throughput_bps();
+            assert!((c.cpu_cost_per_byte() * t - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn parses_from_str() {
+        assert_eq!("aes-256-gcm".parse::<Cipher>().unwrap(),
+                   Cipher::Aes256Gcm);
+        assert_eq!("none".parse::<Cipher>().unwrap(), Cipher::Plain);
+        assert!("rot13".parse::<Cipher>().is_err());
+    }
+}

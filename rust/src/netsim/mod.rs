@@ -1,0 +1,229 @@
+//! Flow-level network simulator: the underlay the vRouter overlay rides on.
+//!
+//! Models inter-site WAN links (latency + bandwidth) and intra-site LANs.
+//! The overlay's OpenVPN hops add a cipher-dependent throughput cap and
+//! per-hop latency — the substance of the paper's §3.5.6
+//! performance-security trade-off.
+
+pub mod cipher;
+
+pub use cipher::Cipher;
+
+use std::collections::HashMap;
+
+/// Index of a network location (a cloud site or the public internet).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NetId(pub usize);
+
+/// Directed-symmetric link properties.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkSpec {
+    /// One-way propagation latency, seconds.
+    pub latency_s: f64,
+    /// Usable bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl LinkSpec {
+    /// Typical intra-European research-network WAN link.
+    pub fn wan() -> LinkSpec {
+        LinkSpec { latency_s: 0.020, bandwidth_bps: 1.25e8 } // 1 Gbps
+    }
+
+    /// Transatlantic link (CESNET ↔ AWS us-east-2 in the paper).
+    pub fn transatlantic() -> LinkSpec {
+        LinkSpec { latency_s: 0.055, bandwidth_bps: 6.25e7 } // 500 Mbps
+    }
+
+    /// Intra-site LAN.
+    pub fn lan() -> LinkSpec {
+        LinkSpec { latency_s: 0.0004, bandwidth_bps: 1.25e9 } // 10 Gbps
+    }
+}
+
+/// The underlay: sites + pairwise links.
+#[derive(Debug, Default)]
+pub struct Network {
+    names: Vec<String>,
+    links: HashMap<(NetId, NetId), LinkSpec>,
+    default_link: Option<LinkSpec>,
+}
+
+impl Network {
+    pub fn new() -> Network {
+        Network { names: Vec::new(), links: HashMap::new(),
+                  default_link: Some(LinkSpec::wan()) }
+    }
+
+    /// Register a location; returns its id.
+    pub fn add_location(&mut self, name: &str) -> NetId {
+        self.names.push(name.to_string());
+        NetId(self.names.len() - 1)
+    }
+
+    pub fn name(&self, id: NetId) -> &str {
+        &self.names[id.0]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Set the (symmetric) link between two locations.
+    pub fn set_link(&mut self, a: NetId, b: NetId, spec: LinkSpec) {
+        self.links.insert(Self::key(a, b), spec);
+    }
+
+    /// Fallback link used for unspecified pairs (None = unreachable).
+    pub fn set_default_link(&mut self, spec: Option<LinkSpec>) {
+        self.default_link = spec;
+    }
+
+    fn key(a: NetId, b: NetId) -> (NetId, NetId) {
+        if a <= b { (a, b) } else { (b, a) }
+    }
+
+    /// Link between two locations (same location ⇒ LAN).
+    pub fn link(&self, a: NetId, b: NetId) -> Option<LinkSpec> {
+        if a == b {
+            return Some(LinkSpec::lan());
+        }
+        self.links.get(&Self::key(a, b)).copied().or(self.default_link)
+    }
+
+    /// One-way latency along a multi-hop path of locations.
+    pub fn path_latency(&self, path: &[NetId]) -> Option<f64> {
+        let mut total = 0.0;
+        for w in path.windows(2) {
+            total += self.link(w[0], w[1])?.latency_s;
+        }
+        Some(total)
+    }
+
+    /// Bottleneck bandwidth along a path.
+    pub fn path_bandwidth(&self, path: &[NetId]) -> Option<f64> {
+        let mut bw = f64::INFINITY;
+        for w in path.windows(2) {
+            bw = bw.min(self.link(w[0], w[1])?.bandwidth_bps);
+        }
+        Some(bw)
+    }
+}
+
+/// One overlay hop as seen by a flow: underlay link + the tunnel cipher
+/// terminating at a vRouter with finite crypto throughput.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlayHop {
+    pub link: LinkSpec,
+    /// None = in-clear LAN hop (no tunnel).
+    pub tunnel: Option<Cipher>,
+}
+
+/// Time to move `bytes` across a sequence of overlay hops,
+/// store-and-forward at each vRouter.
+///
+/// Each tunnelled hop is capped at min(link bandwidth, cipher throughput)
+/// and pays the cipher's per-hop processing latency on top of propagation.
+pub fn transfer_time(bytes: f64, hops: &[OverlayHop]) -> f64 {
+    let mut t = 0.0;
+    for hop in hops {
+        let bw = match hop.tunnel {
+            Some(c) => hop.link.bandwidth_bps.min(c.throughput_bps()),
+            None => hop.link.bandwidth_bps,
+        };
+        let proc = hop.tunnel.map(|c| c.hop_latency_s()).unwrap_or(0.0);
+        t += hop.link.latency_s + proc + bytes / bw;
+    }
+    t
+}
+
+/// Effective steady-state throughput (bytes/s) across the hops — the
+/// bottleneck once pipelining hides per-hop latencies.
+pub fn path_throughput(hops: &[OverlayHop]) -> f64 {
+    hops.iter()
+        .map(|h| match h.tunnel {
+            Some(c) => h.link.bandwidth_bps.min(c.throughput_bps()),
+            None => h.link.bandwidth_bps,
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_site_net() -> (Network, NetId, NetId) {
+        let mut n = Network::new();
+        let a = n.add_location("cesnet");
+        let b = n.add_location("aws");
+        n.set_link(a, b, LinkSpec::transatlantic());
+        (n, a, b)
+    }
+
+    #[test]
+    fn same_location_is_lan() {
+        let (n, a, _) = two_site_net();
+        let l = n.link(a, a).unwrap();
+        assert!(l.latency_s < 0.001);
+    }
+
+    #[test]
+    fn default_link_for_unknown_pairs() {
+        let mut n = Network::new();
+        let a = n.add_location("a");
+        let b = n.add_location("b");
+        assert!(n.link(a, b).is_some()); // default WAN
+        n.set_default_link(None);
+        assert!(n.link(a, b).is_none());
+    }
+
+    #[test]
+    fn path_metrics() {
+        let mut n = Network::new();
+        let a = n.add_location("a");
+        let b = n.add_location("b");
+        let c = n.add_location("c");
+        n.set_link(a, b, LinkSpec { latency_s: 0.01, bandwidth_bps: 1e8 });
+        n.set_link(b, c, LinkSpec { latency_s: 0.03, bandwidth_bps: 5e7 });
+        let lat = n.path_latency(&[a, b, c]).unwrap();
+        assert!((lat - 0.04).abs() < 1e-12);
+        assert_eq!(n.path_bandwidth(&[a, b, c]).unwrap(), 5e7);
+    }
+
+    #[test]
+    fn cipher_caps_reduce_throughput_monotonically() {
+        let link = LinkSpec { latency_s: 0.02, bandwidth_bps: 1.25e9 };
+        let t_plain = transfer_time(
+            1e9, &[OverlayHop { link, tunnel: Some(Cipher::Plain) }]);
+        let t_128 = transfer_time(
+            1e9, &[OverlayHop { link, tunnel: Some(Cipher::Aes128Gcm) }]);
+        let t_256 = transfer_time(
+            1e9, &[OverlayHop { link, tunnel: Some(Cipher::Aes256Gcm) }]);
+        let t_bf = transfer_time(
+            1e9, &[OverlayHop { link, tunnel: Some(Cipher::BlowfishCbc) }]);
+        assert!(t_plain < t_128 && t_128 < t_256 && t_256 < t_bf,
+                "{t_plain} {t_128} {t_256} {t_bf}");
+    }
+
+    #[test]
+    fn untunnelled_hop_is_link_limited() {
+        let link = LinkSpec { latency_s: 0.0, bandwidth_bps: 1e6 };
+        let t = transfer_time(2e6, &[OverlayHop { link, tunnel: None }]);
+        assert!((t - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_is_bottleneck() {
+        let fast = LinkSpec { latency_s: 0.0, bandwidth_bps: 1e9 };
+        let slow = LinkSpec { latency_s: 0.0, bandwidth_bps: 1e7 };
+        let hops = [
+            OverlayHop { link: fast, tunnel: Some(Cipher::Aes256Gcm) },
+            OverlayHop { link: slow, tunnel: None },
+        ];
+        assert_eq!(path_throughput(&hops), 1e7);
+    }
+}

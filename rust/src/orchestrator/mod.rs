@@ -1,0 +1,343 @@
+//! PaaS Orchestrator analogue: TOSCA intake, site selection, and the
+//! deployment-update workflow engine.
+//!
+//! Two behaviours from the paper are load-bearing for its results and are
+//! modelled explicitly:
+//!
+//! 1. **Serialized updates** — "the PaaS Orchestrator workflow engine has
+//!    a limitation in that it does not allow a deployment to be modified
+//!    while an update operation is in progress". This is what turns three
+//!    simultaneous CLUES power-on requests into the ~20-minute staircase
+//!    of Figures 10/11. The engine runs one update at a time when
+//!    `serialized` (default), or fully concurrently when not — the
+//!    paper's future-work "parallel provisioning" ablation.
+//!
+//! 2. **Queued updates are cancellable** — CLUES cancels pending
+//!    power-offs when new jobs arrive early; only operations that have
+//!    not yet *started* can be cancelled (vnode-3's power-off had already
+//!    begun, so only it actually powered off).
+
+pub mod monitor;
+pub mod sla;
+
+pub use monitor::{Monitor, Outage, Probe, ProbeTarget};
+pub use sla::{rank_sites, sla_headroom, SiteHealth, Sla};
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Context};
+
+use crate::cloudsim::CloudSite;
+use crate::sim::SimTime;
+
+/// Update operation kinds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum UpdateOp {
+    /// Provision one worker node (CLUES power-on).
+    AddWorker { name: String },
+    /// Decommission one worker node (CLUES power-off).
+    RemoveWorker { name: String },
+    /// Initial deployment of the front-end + first workers.
+    InitialDeploy,
+}
+
+/// Workflow-engine update identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct UpdateId(pub u64);
+
+/// Update lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateState {
+    Queued,
+    InProgress,
+    Done,
+    Cancelled,
+}
+
+/// One deployment update tracked by the engine.
+#[derive(Debug, Clone)]
+pub struct Update {
+    pub id: UpdateId,
+    pub op: UpdateOp,
+    pub state: UpdateState,
+    pub submitted_at: SimTime,
+    pub started_at: Option<SimTime>,
+    pub finished_at: Option<SimTime>,
+}
+
+/// The deployment-update workflow engine.
+pub struct WorkflowEngine {
+    /// Paper default: one update at a time.
+    pub serialized: bool,
+    queue: VecDeque<UpdateId>,
+    updates: Vec<Update>,
+    in_progress: usize,
+}
+
+impl WorkflowEngine {
+    pub fn new(serialized: bool) -> WorkflowEngine {
+        WorkflowEngine {
+            serialized,
+            queue: VecDeque::new(),
+            updates: Vec::new(),
+            in_progress: 0,
+        }
+    }
+
+    /// Submit an update; it queues until the engine is free.
+    pub fn submit(&mut self, op: UpdateOp, t: SimTime) -> UpdateId {
+        let id = UpdateId(self.updates.len() as u64);
+        self.updates.push(Update {
+            id,
+            op,
+            state: UpdateState::Queued,
+            submitted_at: t,
+            started_at: None,
+            finished_at: None,
+        });
+        self.queue.push_back(id);
+        id
+    }
+
+    /// Pop the next update(s) that may start now. With serialization on,
+    /// at most one update is in progress at any time.
+    pub fn startable(&mut self, t: SimTime) -> Vec<Update> {
+        let mut started = Vec::new();
+        loop {
+            if self.serialized && self.in_progress + started.len() >= 1 {
+                break;
+            }
+            match self.queue.pop_front() {
+                None => break,
+                Some(id) => {
+                    let u = &mut self.updates[id.0 as usize];
+                    if u.state != UpdateState::Queued {
+                        continue; // cancelled while queued
+                    }
+                    u.state = UpdateState::InProgress;
+                    u.started_at = Some(t);
+                    started.push(u.clone());
+                }
+            }
+        }
+        self.in_progress += started.len();
+        started
+    }
+
+    /// Mark an in-progress update finished.
+    pub fn complete(&mut self, id: UpdateId, t: SimTime)
+        -> anyhow::Result<()> {
+        let u = self
+            .updates
+            .get_mut(id.0 as usize)
+            .with_context(|| format!("no update {id:?}"))?;
+        if u.state != UpdateState::InProgress {
+            bail!("update {id:?} is {:?}, not InProgress", u.state);
+        }
+        u.state = UpdateState::Done;
+        u.finished_at = Some(t);
+        self.in_progress -= 1;
+        Ok(())
+    }
+
+    /// Cancel a *queued* update (CLUES revoking a pending power-off).
+    /// Fails if it already started — matching the paper's vnode-3, whose
+    /// power-off could not be recalled.
+    pub fn cancel(&mut self, id: UpdateId, t: SimTime)
+        -> anyhow::Result<()> {
+        let u = self
+            .updates
+            .get_mut(id.0 as usize)
+            .with_context(|| format!("no update {id:?}"))?;
+        match u.state {
+            UpdateState::Queued => {
+                u.state = UpdateState::Cancelled;
+                u.finished_at = Some(t);
+                Ok(())
+            }
+            other => bail!("cannot cancel update in state {other:?}"),
+        }
+    }
+
+    pub fn update(&self, id: UpdateId) -> Option<&Update> {
+        self.updates.get(id.0 as usize)
+    }
+
+    pub fn updates(&self) -> &[Update] {
+        &self.updates
+    }
+
+    /// Find the queued update matching a predicate (used by CLUES to find
+    /// the pending power-off for a node).
+    pub fn find_queued(&self, pred: impl Fn(&UpdateOp) -> bool)
+        -> Option<UpdateId> {
+        self.updates
+            .iter()
+            .find(|u| u.state == UpdateState::Queued && pred(&u.op))
+            .map(|u| u.id)
+    }
+
+    pub fn queued_len(&self) -> usize {
+        self.updates
+            .iter()
+            .filter(|u| u.state == UpdateState::Queued)
+            .count()
+    }
+
+    pub fn in_progress(&self) -> usize {
+        self.in_progress
+    }
+}
+
+/// Site selection: pick the best ranked site with headroom for one more
+/// `cpus`-sized VM. `slas` order encodes the user's preferences.
+pub fn select_site(
+    sites: &[CloudSite],
+    slas: &[Sla],
+    used_per_site: &[u32],
+    cpus: u32,
+) -> Option<usize> {
+    let health: Vec<SiteHealth> = sites
+        .iter()
+        .map(|s| SiteHealth {
+            site_name: s.spec.name.clone(),
+            availability: s.spec.availability,
+            free_vms: Some(
+                (s.spec.quota.max_vms - s.used_vms()) as u32),
+        })
+        .collect();
+    for i in rank_sites(slas, &health) {
+        let site = &sites[i];
+        // Site-level quota headroom.
+        if site.used_vms() + 1 > site.spec.quota.max_vms {
+            continue;
+        }
+        if site.used_vcpus() + cpus > site.spec.quota.max_vcpus {
+            continue;
+        }
+        // SLA-level headroom.
+        if let Some(h) = sla_headroom(slas, &site.spec.name,
+                                      used_per_site[i]) {
+            if h == 0 {
+                continue;
+            }
+        }
+        return Some(i);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloudsim::{SiteSpec, VmRequest};
+    use crate::netsim::NetId;
+
+    fn t(s: f64) -> SimTime {
+        SimTime(s)
+    }
+
+    #[test]
+    fn serialized_engine_runs_one_at_a_time() {
+        let mut e = WorkflowEngine::new(true);
+        let a = e.submit(UpdateOp::AddWorker { name: "vnode-3".into() },
+                         t(0.0));
+        let b = e.submit(UpdateOp::AddWorker { name: "vnode-4".into() },
+                         t(0.0));
+        let started = e.startable(t(1.0));
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].id, a);
+        assert!(e.startable(t(2.0)).is_empty()); // engine busy
+        e.complete(a, t(100.0)).unwrap();
+        let started = e.startable(t(100.0));
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].id, b);
+    }
+
+    #[test]
+    fn parallel_engine_starts_everything() {
+        let mut e = WorkflowEngine::new(false);
+        for i in 0..3 {
+            e.submit(UpdateOp::AddWorker { name: format!("n{i}") }, t(0.0));
+        }
+        assert_eq!(e.startable(t(0.0)).len(), 3);
+        assert_eq!(e.in_progress(), 3);
+    }
+
+    #[test]
+    fn cancel_only_queued() {
+        let mut e = WorkflowEngine::new(true);
+        let a = e.submit(UpdateOp::RemoveWorker { name: "vnode-3".into() },
+                         t(0.0));
+        let b = e.submit(UpdateOp::RemoveWorker { name: "vnode-4".into() },
+                         t(0.0));
+        e.startable(t(1.0)); // a starts
+        assert!(e.cancel(a, t(2.0)).is_err()); // vnode-3: too late
+        e.cancel(b, t(2.0)).unwrap(); // vnode-4: revoked in queue
+        e.complete(a, t(50.0)).unwrap();
+        assert!(e.startable(t(50.0)).is_empty()); // b was cancelled
+        assert_eq!(e.update(b).unwrap().state, UpdateState::Cancelled);
+    }
+
+    #[test]
+    fn find_queued_matches_op() {
+        let mut e = WorkflowEngine::new(true);
+        e.submit(UpdateOp::AddWorker { name: "x".into() }, t(0.0));
+        let b = e.submit(UpdateOp::RemoveWorker { name: "y".into() }, t(0.0));
+        let found = e.find_queued(|op| matches!(op,
+            UpdateOp::RemoveWorker { name } if name == "y"));
+        // AddWorker is startable first, but both are still Queued.
+        assert_eq!(found, Some(b));
+    }
+
+    #[test]
+    fn site_selection_prefers_sla_until_quota_then_bursts() {
+        let mut sites = vec![
+            CloudSite::new(SiteSpec::cesnet_metacentrum(), 0, NetId(0), 1),
+            CloudSite::new(SiteSpec::aws_us_east_2(), 1, NetId(1), 2),
+        ];
+        let slas = vec![
+            Sla { site_name: "CESNET-MCC".into(), priority: 0,
+                  max_instances: None },
+            Sla { site_name: "AWS".into(), priority: 1,
+                  max_instances: None },
+        ];
+        let used = vec![0, 0];
+        assert_eq!(select_site(&sites, &slas, &used, 2), Some(0));
+        // Fill CESNET to its 3-VM quota.
+        for i in 0..3 {
+            sites[0]
+                .request_vm(&VmRequest {
+                    name: format!("n{i}"),
+                    instance_type: "standard.medium".into(),
+                    network: None,
+                    public_ip: false,
+                }, t(0.0))
+                .unwrap();
+        }
+        // Bursts to AWS — the paper's step 4.
+        assert_eq!(select_site(&sites, &slas, &used, 2), Some(1));
+    }
+
+    #[test]
+    fn selection_none_when_everything_full() {
+        let sites = vec![CloudSite::new(SiteSpec::cesnet_metacentrum(), 0,
+                                        NetId(0), 1)];
+        let slas = vec![Sla { site_name: "CESNET-MCC".into(), priority: 0,
+                              max_instances: Some(0) }];
+        assert_eq!(select_site(&sites, &slas, &[0], 2), None);
+    }
+
+    #[test]
+    fn update_log_records_timing() {
+        let mut e = WorkflowEngine::new(true);
+        let a = e.submit(UpdateOp::InitialDeploy, t(5.0));
+        e.startable(t(6.0));
+        e.complete(a, t(90.0)).unwrap();
+        let u = e.update(a).unwrap();
+        assert_eq!(u.submitted_at.0, 5.0);
+        assert_eq!(u.started_at.unwrap().0, 6.0);
+        assert_eq!(u.finished_at.unwrap().0, 90.0);
+        assert_eq!(u.state, UpdateState::Done);
+    }
+}

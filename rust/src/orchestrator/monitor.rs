@@ -1,0 +1,222 @@
+//! Monitoring service: the availability data the PaaS Orchestrator
+//! combines with SLAs when ranking sites (§3.2: "it gathers information
+//! about the SLA signed by the providers and monitoring data about the
+//! availability of the compute and storage resources").
+//!
+//! The real stack polls each CMF's health endpoints; here probes are
+//! synthetic (a per-site up-probability plus scripted outages), and the
+//! service maintains the sliding-window availability the ranking
+//! consumes — so a site that starts failing probes organically drops out
+//! of new placements.
+
+use std::collections::HashMap;
+
+use crate::sim::SimTime;
+use crate::util::prng::Prng;
+
+use super::SiteHealth;
+
+/// One probe result.
+#[derive(Debug, Clone, Copy)]
+pub struct Probe {
+    pub at: SimTime,
+    pub up: bool,
+    /// Probe round-trip, seconds (used as a tie-break quality signal).
+    pub rtt_s: f64,
+}
+
+/// A scripted outage window for a site (deterministic injections).
+#[derive(Debug, Clone)]
+pub struct Outage {
+    pub site: String,
+    pub start: SimTime,
+    pub duration_secs: f64,
+}
+
+impl Outage {
+    fn active_at(&self, t: SimTime) -> bool {
+        t.0 >= self.start.0 && t.0 < self.start.0 + self.duration_secs
+    }
+}
+
+/// Per-site probe configuration.
+#[derive(Debug, Clone)]
+pub struct ProbeTarget {
+    pub site: String,
+    /// Baseline probability a probe succeeds outside outages.
+    pub base_up_prob: f64,
+    /// Median probe RTT, seconds.
+    pub rtt_median_s: f64,
+}
+
+/// Sliding-window availability monitor.
+pub struct Monitor {
+    targets: Vec<ProbeTarget>,
+    outages: Vec<Outage>,
+    window: usize,
+    history: HashMap<String, Vec<Probe>>,
+    rng: Prng,
+}
+
+impl Monitor {
+    /// `window`: number of most recent probes that define availability.
+    pub fn new(targets: Vec<ProbeTarget>, window: usize, seed: u64)
+        -> Monitor {
+        Monitor {
+            targets,
+            outages: Vec::new(),
+            window: window.max(1),
+            history: HashMap::new(),
+            rng: Prng::new(seed ^ 0x40A1),
+        }
+    }
+
+    pub fn add_outage(&mut self, outage: Outage) {
+        self.outages.push(outage);
+    }
+
+    /// Run one probe round at time `t`.
+    pub fn probe_all(&mut self, t: SimTime) {
+        for target in self.targets.clone() {
+            let in_outage = self
+                .outages
+                .iter()
+                .any(|o| o.site == target.site && o.active_at(t));
+            let up = !in_outage && self.rng.chance(target.base_up_prob);
+            let rtt = self.rng.lognormal(target.rtt_median_s, 0.4);
+            self.history
+                .entry(target.site.clone())
+                .or_default()
+                .push(Probe { at: t, up, rtt_s: rtt });
+        }
+    }
+
+    /// Availability over the sliding window (1.0 when unprobed — a fresh
+    /// site is assumed healthy until evidence says otherwise).
+    pub fn availability(&self, site: &str) -> f64 {
+        match self.history.get(site) {
+            None => 1.0,
+            Some(h) if h.is_empty() => 1.0,
+            Some(h) => {
+                let tail = &h[h.len().saturating_sub(self.window)..];
+                tail.iter().filter(|p| p.up).count() as f64
+                    / tail.len() as f64
+            }
+        }
+    }
+
+    /// Median probe RTT over the window (f64::INFINITY when unprobed).
+    pub fn median_rtt(&self, site: &str) -> f64 {
+        match self.history.get(site) {
+            None => f64::INFINITY,
+            Some(h) if h.is_empty() => f64::INFINITY,
+            Some(h) => {
+                let tail = &h[h.len().saturating_sub(self.window)..];
+                let mut rtts: Vec<f64> =
+                    tail.iter().map(|p| p.rtt_s).collect();
+                rtts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                rtts[rtts.len() / 2]
+            }
+        }
+    }
+
+    /// Health snapshot for the ranking function.
+    pub fn snapshot(&self) -> Vec<SiteHealth> {
+        self.targets
+            .iter()
+            .map(|tg| SiteHealth {
+                site_name: tg.site.clone(),
+                availability: self.availability(&tg.site),
+                free_vms: None,
+            })
+            .collect()
+    }
+
+    pub fn probes_recorded(&self, site: &str) -> usize {
+        self.history.get(site).map(|h| h.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::{rank_sites, Sla};
+
+    fn targets() -> Vec<ProbeTarget> {
+        vec![
+            ProbeTarget { site: "cesnet".into(), base_up_prob: 0.99,
+                          rtt_median_s: 0.02 },
+            ProbeTarget { site: "aws".into(), base_up_prob: 0.999,
+                          rtt_median_s: 0.06 },
+        ]
+    }
+
+    #[test]
+    fn fresh_sites_assumed_available() {
+        let m = Monitor::new(targets(), 10, 1);
+        assert_eq!(m.availability("cesnet"), 1.0);
+        assert_eq!(m.availability("unknown"), 1.0);
+    }
+
+    #[test]
+    fn availability_tracks_probe_outcomes() {
+        let mut m = Monitor::new(targets(), 50, 2);
+        for i in 0..100 {
+            m.probe_all(SimTime(i as f64 * 60.0));
+        }
+        let a = m.availability("cesnet");
+        assert!(a > 0.9, "{a}");
+        assert_eq!(m.probes_recorded("cesnet"), 100);
+        assert!(m.median_rtt("cesnet") < m.median_rtt("aws"));
+    }
+
+    #[test]
+    fn outage_drops_availability_then_recovers() {
+        let mut m = Monitor::new(targets(), 10, 3);
+        m.add_outage(Outage { site: "cesnet".into(), start: SimTime(0.0),
+                              duration_secs: 600.0 });
+        for i in 0..10 {
+            m.probe_all(SimTime(i as f64 * 60.0));
+        }
+        assert_eq!(m.availability("cesnet"), 0.0);
+        assert!(m.availability("aws") > 0.9);
+        // After the outage the window slides back to healthy.
+        for i in 10..30 {
+            m.probe_all(SimTime(i as f64 * 60.0));
+        }
+        assert!(m.availability("cesnet") > 0.9);
+    }
+
+    #[test]
+    fn ranking_consumes_monitor_snapshot() {
+        let mut m = Monitor::new(targets(), 10, 4);
+        m.add_outage(Outage { site: "cesnet".into(), start: SimTime(0.0),
+                              duration_secs: 1e9 });
+        for i in 0..10 {
+            m.probe_all(SimTime(i as f64 * 60.0));
+        }
+        let slas = vec![
+            Sla { site_name: "cesnet".into(), priority: 0,
+                  max_instances: None },
+            Sla { site_name: "aws".into(), priority: 1,
+                  max_instances: None },
+        ];
+        let health = m.snapshot();
+        let ranked = rank_sites(&slas, &health);
+        // cesnet is dark — despite the better SLA it must be excluded.
+        assert_eq!(ranked.len(), 1);
+        assert_eq!(health[ranked[0]].site_name, "aws");
+    }
+
+    #[test]
+    fn window_bounds_history_influence() {
+        let mut m = Monitor::new(targets(), 5, 5);
+        m.add_outage(Outage { site: "aws".into(), start: SimTime(0.0),
+                              duration_secs: 300.0 });
+        // 5 down probes, then 5 up probes: window=5 forgets the outage.
+        for i in 0..10 {
+            m.probe_all(SimTime(i as f64 * 60.0));
+        }
+        assert!(m.availability("aws") > 0.9);
+    }
+}

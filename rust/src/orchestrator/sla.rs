@@ -1,0 +1,138 @@
+//! SLA-and-monitoring-driven site ranking (§3.2).
+//!
+//! The PaaS Orchestrator picks the "best" site for each deployment
+//! request by combining the user's signed SLAs with monitored
+//! availability data. We reproduce that ranking: SLA priority dominates,
+//! monitored availability breaks ties and disqualifies unhealthy sites.
+
+/// One signed SLA between the user and a site.
+#[derive(Debug, Clone)]
+pub struct Sla {
+    pub site_name: String,
+    /// Lower = preferred (the user's home site is usually 0).
+    pub priority: u32,
+    /// Optional ceiling on instances this SLA grants.
+    pub max_instances: Option<u32>,
+}
+
+/// Monitoring snapshot for one site.
+#[derive(Debug, Clone)]
+pub struct SiteHealth {
+    pub site_name: String,
+    /// Availability in [0,1] from the monitoring system.
+    pub availability: f64,
+    /// Known free VM headroom (None = unknown).
+    pub free_vms: Option<u32>,
+}
+
+/// Minimum availability for a site to be eligible at all.
+pub const MIN_AVAILABILITY: f64 = 0.5;
+
+/// Rank eligible sites best-first. Returns indices into `health`.
+///
+/// Ordering: (has SLA, SLA priority asc, availability desc, name asc).
+/// Sites without an SLA rank after all SLA sites (the orchestrator can
+/// still use them if nothing else has capacity, mirroring opportunistic
+/// use of federated sites).
+pub fn rank_sites(slas: &[Sla], health: &[SiteHealth]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..health.len())
+        .filter(|&i| health[i].availability >= MIN_AVAILABILITY)
+        .filter(|&i| {
+            // An SLA granting zero instances disqualifies the site.
+            match slas.iter().find(|s| s.site_name == health[i].site_name) {
+                Some(s) => s.max_instances != Some(0),
+                None => true,
+            }
+        })
+        .collect();
+    let key = |i: usize| {
+        let h = &health[i];
+        let sla = slas.iter().find(|s| s.site_name == h.site_name);
+        (
+            sla.is_none(),                              // SLA sites first
+            sla.map(|s| s.priority).unwrap_or(u32::MAX),
+            // availability desc with 1e-6 resolution
+            (1e6 - h.availability * 1e6) as i64,
+            h.site_name.clone(),
+        )
+    };
+    idx.sort_by_key(|&i| key(i));
+    idx
+}
+
+/// Instances an SLA still allows given `already_used`.
+pub fn sla_headroom(slas: &[Sla], site: &str, already_used: u32)
+    -> Option<u32> {
+    match slas.iter().find(|s| s.site_name == site) {
+        Some(Sla { max_instances: Some(max), .. }) => {
+            Some(max.saturating_sub(already_used))
+        }
+        _ => None, // unlimited (site quota still applies)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h(name: &str, avail: f64) -> SiteHealth {
+        SiteHealth { site_name: name.into(), availability: avail,
+                     free_vms: None }
+    }
+
+    #[test]
+    fn sla_priority_dominates_availability() {
+        let slas = vec![
+            Sla { site_name: "cesnet".into(), priority: 0,
+                  max_instances: None },
+            Sla { site_name: "aws".into(), priority: 1,
+                  max_instances: None },
+        ];
+        let health = vec![h("aws", 0.999), h("cesnet", 0.9)];
+        let ranked = rank_sites(&slas, &health);
+        assert_eq!(ranked, vec![1, 0]); // cesnet first despite lower avail
+    }
+
+    #[test]
+    fn availability_breaks_ties() {
+        let slas = vec![
+            Sla { site_name: "a".into(), priority: 0, max_instances: None },
+            Sla { site_name: "b".into(), priority: 0, max_instances: None },
+        ];
+        let health = vec![h("a", 0.9), h("b", 0.99)];
+        assert_eq!(rank_sites(&slas, &health), vec![1, 0]);
+    }
+
+    #[test]
+    fn unhealthy_sites_excluded() {
+        let slas = vec![Sla { site_name: "a".into(), priority: 0,
+                              max_instances: None }];
+        let health = vec![h("a", 0.3), h("b", 0.97)];
+        assert_eq!(rank_sites(&slas, &health), vec![1]);
+    }
+
+    #[test]
+    fn no_sla_sites_rank_last() {
+        let slas = vec![Sla { site_name: "home".into(), priority: 5,
+                              max_instances: None }];
+        let health = vec![h("opportunistic", 0.999), h("home", 0.8)];
+        assert_eq!(rank_sites(&slas, &health), vec![1, 0]);
+    }
+
+    #[test]
+    fn zero_instance_sla_disqualifies() {
+        let slas = vec![Sla { site_name: "a".into(), priority: 0,
+                              max_instances: Some(0) }];
+        let health = vec![h("a", 0.99), h("b", 0.9)];
+        assert_eq!(rank_sites(&slas, &health), vec![1]);
+    }
+
+    #[test]
+    fn headroom_accounting() {
+        let slas = vec![Sla { site_name: "a".into(), priority: 0,
+                              max_instances: Some(5) }];
+        assert_eq!(sla_headroom(&slas, "a", 3), Some(2));
+        assert_eq!(sla_headroom(&slas, "a", 7), Some(0));
+        assert_eq!(sla_headroom(&slas, "other", 0), None);
+    }
+}

@@ -1,0 +1,218 @@
+//! PJRT runtime: load the AOT-compiled audio classifier and serve
+//! inference from the Rust request path (no Python at runtime).
+//!
+//! `make artifacts` writes `artifacts/audio_classifier_b{B}.hlo.txt`
+//! (HLO text, parameters folded as constants) plus `MANIFEST.txt` with
+//! shape metadata and a golden logit. This module compiles each artifact
+//! once on the PJRT CPU client and executes it per job.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+/// One artifact entry from MANIFEST.txt.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub path: String,
+    pub batch: usize,
+    pub n_frames: usize,
+    pub n_bins: usize,
+    pub n_classes: usize,
+    pub param_count: u64,
+    /// logits[0,0] for synth_clip(0) as computed by the JAX build path.
+    pub golden0: f64,
+}
+
+/// Parse MANIFEST.txt.
+pub fn read_manifest(dir: &Path) -> anyhow::Result<Vec<ManifestEntry>> {
+    let path = dir.join("MANIFEST.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 8 {
+            bail!("{path:?}:{}: expected 8 fields, got {}", i + 1, f.len());
+        }
+        out.push(ManifestEntry {
+            name: f[0].to_string(),
+            path: f[1].to_string(),
+            batch: f[2].parse()?,
+            n_frames: f[3].parse()?,
+            n_bins: f[4].parse()?,
+            n_classes: f[5].parse()?,
+            param_count: f[6].parse()?,
+            golden0: f[7].parse()?,
+        });
+    }
+    Ok(out)
+}
+
+/// A compiled model executable bound to one batch size.
+pub struct ModelRuntime {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ManifestEntry,
+    /// Executions served (perf counter).
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl ModelRuntime {
+    /// Load and compile the artifact for `batch` from `dir`.
+    pub fn load(dir: impl AsRef<Path>, batch: usize)
+        -> anyhow::Result<ModelRuntime> {
+        let dir = dir.as_ref();
+        let entries = read_manifest(dir)?;
+        let entry = entries
+            .into_iter()
+            .find(|e| e.batch == batch)
+            .with_context(|| format!(
+                "no artifact for batch size {batch} in {dir:?}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        let hlo_path: PathBuf = dir.join(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("artifact path not UTF-8")?)
+            .map_err(|e| anyhow::anyhow!("parsing {hlo_path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {hlo_path:?}: {e}"))?;
+        Ok(ModelRuntime { exe, entry, executions: std::cell::Cell::new(0) })
+    }
+
+    /// Input element count per batch.
+    fn input_len(&self) -> usize {
+        self.entry.batch * self.entry.n_frames * self.entry.n_bins
+    }
+
+    /// Run inference on up to `batch` clips (each N_FRAMES*N_BINS long).
+    /// Shorter batches are zero-padded; only the real rows are returned.
+    pub fn infer(&self, clips: &[Vec<f32>])
+        -> anyhow::Result<Vec<Vec<f32>>> {
+        if clips.is_empty() || clips.len() > self.entry.batch {
+            bail!("batch of {} clips does not fit executable batch {}",
+                  clips.len(), self.entry.batch);
+        }
+        let clip_len = self.entry.n_frames * self.entry.n_bins;
+        let mut flat = Vec::with_capacity(self.input_len());
+        for c in clips {
+            if c.len() != clip_len {
+                bail!("clip has {} samples, expected {clip_len}", c.len());
+            }
+            flat.extend_from_slice(c);
+        }
+        flat.resize(self.input_len(), 0.0);
+
+        let input = xla::Literal::vec1(&flat)
+            .reshape(&[
+                self.entry.batch as i64,
+                self.entry.n_frames as i64,
+                self.entry.n_bins as i64,
+            ])
+            .map_err(|e| anyhow::anyhow!("reshape input: {e}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let logits_lit = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        let logits = logits_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("read logits: {e}"))?;
+        self.executions.set(self.executions.get() + 1);
+        Ok(clips
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                logits[i * self.entry.n_classes
+                    ..(i + 1) * self.entry.n_classes]
+                    .to_vec()
+            })
+            .collect())
+    }
+
+    /// Classify one synthetic file by id (generates the clip in-process).
+    pub fn infer_file(&self, file_id: u64) -> anyhow::Result<Vec<f32>> {
+        let clip = crate::workload::synth_clip(file_id);
+        Ok(self.infer(&[clip])?.remove(0))
+    }
+
+    /// Verify the runtime against the build-path golden logit.
+    pub fn verify_golden(&self) -> anyhow::Result<f64> {
+        let logits = self.infer_file(0)?;
+        let got = logits[0] as f64;
+        let want = self.entry.golden0;
+        let err = (got - want).abs();
+        if err > 1e-3 {
+            bail!("golden mismatch: rust={got} jax={want} (|Δ|={err})");
+        }
+        Ok(err)
+    }
+
+    /// Top-k (class index, logit) pairs for a logit vector.
+    pub fn top_k(logits: &[f32], k: usize) -> Vec<(usize, f32)> {
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.into_iter().take(k).map(|i| (i, logits[i])).collect()
+    }
+}
+
+/// Default artifacts directory: $EVHC_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("EVHC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True when artifacts exist (tests skip PJRT paths otherwise).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("MANIFEST.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing_roundtrip() {
+        let dir = std::env::temp_dir().join("evhc_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("MANIFEST.txt"),
+            "audio_classifier_b1 audio_classifier_b1.hlo.txt 1 96 257 527 \
+             781391 2.302364731e1\n",
+        )
+        .unwrap();
+        let m = read_manifest(&dir).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].batch, 1);
+        assert_eq!(m[0].n_classes, 527);
+        assert!((m[0].golden0 - 23.02364731).abs() < 1e-6);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        let dir = std::env::temp_dir().join("evhc_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("MANIFEST.txt"), "too few fields\n").unwrap();
+        assert!(read_manifest(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn top_k_orders_descending() {
+        let logits = vec![0.1, 5.0, -2.0, 3.0];
+        let top = ModelRuntime::top_k(&logits, 2);
+        assert_eq!(top[0].0, 1);
+        assert_eq!(top[1].0, 3);
+    }
+
+    // PJRT-dependent tests live in rust/tests/runtime_integration.rs and
+    // skip gracefully when artifacts are missing.
+}

@@ -1,0 +1,344 @@
+//! Discrete-event simulation engine.
+//!
+//! The paper's use case spans 5 h 40 m of wall-clock time on two real
+//! clouds; the simulator replays the same coordination logic in
+//! milliseconds under a virtual clock, or — via [`RealTimeRunner`] — in
+//! scaled real time for demos.
+//!
+//! The engine is deliberately minimal and deterministic:
+//! * events are ordered by `(time, sequence-number)` so same-time events
+//!   dispatch in schedule order,
+//! * scheduled events can be cancelled (tombstoned), which the CLUES
+//!   reproduction needs (the paper describes pending power-offs being
+//!   cancelled when new jobs arrive early).
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashSet};
+use std::fmt;
+
+/// Virtual time in seconds since simulation start.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct SimTime(pub f64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0.0);
+
+    pub fn secs(self) -> f64 {
+        self.0
+    }
+
+    pub fn from_hms(h: u64, m: u64, s: u64) -> SimTime {
+        SimTime((h * 3600 + m * 60 + s) as f64)
+    }
+
+    pub fn add(self, d: f64) -> SimTime {
+        SimTime(self.0 + d)
+    }
+
+    /// `hh:mm:ss` rendering used by figure outputs.
+    pub fn hms(self) -> String {
+        let total = self.0.max(0.0).round() as u64;
+        format!("{:02}:{:02}:{:02}", total / 3600, (total / 60) % 60,
+                total % 60)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.hms())
+    }
+}
+
+/// Handle to a scheduled event; used for cancellation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventId(u64);
+
+struct Entry<E> {
+    at: SimTime,
+    seq: u64,
+    id: EventId,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event queue + virtual clock.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    cancelled: HashSet<EventId>,
+    seq: u64,
+    now: SimTime,
+    dispatched: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            cancelled: HashSet::new(),
+            seq: 0,
+            now: SimTime::ZERO,
+            dispatched: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total events dispatched so far (perf counters).
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    /// Schedule `ev` after `delay` seconds (clamped at now for negatives).
+    pub fn schedule_in(&mut self, delay: f64, ev: E) -> EventId {
+        let at = self.now.add(delay.max(0.0));
+        self.schedule_at(at, ev)
+    }
+
+    /// Schedule `ev` at absolute time `at` (clamped at now if in the past).
+    pub fn schedule_at(&mut self, at: SimTime, ev: E) -> EventId {
+        let at = if at.0 < self.now.0 { self.now } else { at };
+        let id = EventId(self.seq);
+        self.heap.push(Entry { at, seq: self.seq, id, ev });
+        self.seq += 1;
+        id
+    }
+
+    /// Cancel a scheduled event. Returns false if it already fired or was
+    /// already cancelled.
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        if id.0 >= self.seq {
+            return false;
+        }
+        self.cancelled.insert(id)
+    }
+
+    /// Pop the next live event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        while let Some(entry) = self.heap.pop() {
+            if self.cancelled.remove(&entry.id) {
+                continue;
+            }
+            self.now = entry.at;
+            self.dispatched += 1;
+            return Some((entry.at, entry.ev));
+        }
+        None
+    }
+
+    /// Time of the next live event without popping it.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        while let Some(entry) = self.heap.peek() {
+            if self.cancelled.contains(&entry.id) {
+                let e = self.heap.pop().unwrap();
+                self.cancelled.remove(&e.id);
+                continue;
+            }
+            return Some(entry.at);
+        }
+        None
+    }
+
+    pub fn is_empty(&mut self) -> bool {
+        self.peek_time().is_none()
+    }
+}
+
+/// A simulation world reacts to events and may schedule more.
+pub trait World {
+    type Event;
+
+    /// Handle one event at virtual time `t`.
+    fn handle(
+        &mut self,
+        t: SimTime,
+        ev: Self::Event,
+        q: &mut EventQueue<Self::Event>,
+    );
+}
+
+/// Drive `world` until the queue drains or `horizon` is exceeded.
+/// Returns the final virtual time.
+pub fn run_until<W: World>(
+    world: &mut W,
+    q: &mut EventQueue<W::Event>,
+    horizon: SimTime,
+) -> SimTime {
+    while let Some(at) = q.peek_time() {
+        if at.0 > horizon.0 {
+            break;
+        }
+        let (t, ev) = q.pop().expect("peeked event vanished");
+        world.handle(t, ev, q);
+    }
+    q.now()
+}
+
+/// Drive `world` until the queue drains completely.
+pub fn run_to_completion<W: World>(
+    world: &mut W,
+    q: &mut EventQueue<W::Event>,
+) -> SimTime {
+    run_until(world, q, SimTime(f64::INFINITY))
+}
+
+/// Real-time adapter: dispatches the same event queue against the wall
+/// clock, compressed by `speedup` (e.g. 60.0 → one virtual minute per
+/// real second). Used by the demo mode of the CLI.
+pub struct RealTimeRunner {
+    pub speedup: f64,
+}
+
+impl RealTimeRunner {
+    pub fn run<W: World>(
+        &self,
+        world: &mut W,
+        q: &mut EventQueue<W::Event>,
+        horizon: SimTime,
+    ) -> SimTime {
+        let start = std::time::Instant::now();
+        while let Some(at) = q.peek_time() {
+            if at.0 > horizon.0 {
+                break;
+            }
+            let target = at.0 / self.speedup;
+            let elapsed = start.elapsed().as_secs_f64();
+            if target > elapsed {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    target - elapsed,
+                ));
+            }
+            let (t, ev) = q.pop().expect("peeked event vanished");
+            world.handle(t, ev, q);
+        }
+        q.now()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Recorder {
+        seen: Vec<(f64, u32)>,
+    }
+
+    impl World for Recorder {
+        type Event = u32;
+        fn handle(&mut self, t: SimTime, ev: u32, q: &mut EventQueue<u32>) {
+            self.seen.push((t.0, ev));
+            if ev == 1 {
+                // Cascading event.
+                q.schedule_in(5.0, 100);
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_order_by_time_then_seq() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime(10.0), 2);
+        q.schedule_at(SimTime(5.0), 1);
+        q.schedule_at(SimTime(10.0), 3); // same time as `2`, later seq
+        let mut w = Recorder { seen: vec![] };
+        run_to_completion(&mut w, &mut q);
+        assert_eq!(w.seen, vec![(5.0, 1), (10.0, 2), (10.0, 3), (10.0, 100)]);
+    }
+
+    #[test]
+    fn cascaded_events_advance_clock() {
+        let mut q = EventQueue::new();
+        q.schedule_in(1.0, 1);
+        let mut w = Recorder { seen: vec![] };
+        let end = run_to_completion(&mut w, &mut q);
+        assert_eq!(end.0, 6.0);
+        assert_eq!(q.dispatched(), 2);
+    }
+
+    #[test]
+    fn cancellation_suppresses_dispatch() {
+        let mut q = EventQueue::new();
+        let a = q.schedule_in(1.0, 7);
+        q.schedule_in(2.0, 8);
+        assert!(q.cancel(a));
+        assert!(!q.cancel(a)); // double-cancel is a no-op
+        let mut w = Recorder { seen: vec![] };
+        run_to_completion(&mut w, &mut q);
+        assert_eq!(w.seen, vec![(2.0, 8)]);
+    }
+
+    #[test]
+    fn horizon_stops_early() {
+        let mut q = EventQueue::new();
+        q.schedule_in(1.0, 5);
+        q.schedule_in(100.0, 6);
+        let mut w = Recorder { seen: vec![] };
+        run_until(&mut w, &mut q, SimTime(10.0));
+        assert_eq!(w.seen.len(), 1);
+        assert!(!q.is_empty());
+    }
+
+    #[test]
+    fn past_schedules_clamp_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule_at(SimTime(10.0), 1);
+        let mut w = Recorder { seen: vec![] };
+        run_to_completion(&mut w, &mut q);
+        // Now at 15 (cascade); scheduling "at 3" fires immediately.
+        let id = q.schedule_at(SimTime(3.0), 9);
+        assert!(id.0 > 0);
+        let (t, ev) = q.pop().unwrap();
+        assert_eq!(ev, 9);
+        assert!(t.0 >= 10.0);
+    }
+
+    #[test]
+    fn hms_formatting() {
+        assert_eq!(SimTime::from_hms(5, 40, 0).hms(), "05:40:00");
+        assert_eq!(SimTime(61.4).hms(), "00:01:01");
+        assert_eq!(SimTime::from_hms(5, 40, 0).secs(), 20400.0);
+    }
+
+    #[test]
+    fn realtime_runner_respects_speedup() {
+        let mut q = EventQueue::new();
+        q.schedule_in(0.2, 1); // cascades one more at +5s virtual
+        let mut w = Recorder { seen: vec![] };
+        let t0 = std::time::Instant::now();
+        RealTimeRunner { speedup: 100.0 }.run(&mut w, &mut q,
+                                              SimTime(1000.0));
+        let real = t0.elapsed().as_secs_f64();
+        assert_eq!(w.seen.len(), 2);
+        // 5.2 virtual seconds at 100x ≈ 52 ms real.
+        assert!(real >= 0.04 && real < 1.0, "real={real}");
+    }
+}

@@ -1,0 +1,382 @@
+//! TOSCA templates: the user-facing entrypoint of the deployment flow.
+//!
+//! The paper's flow starts from a curated TOSCA template ("SLURM Elastic
+//! cluster" in the Orchestrator dashboard). This module parses the
+//! TOSCA-simple-profile subset those templates use (via
+//! [`crate::util::yaml`]) into a typed [`ClusterTemplate`], and ships the
+//! curated templates as built-ins.
+
+use anyhow::{bail, Context};
+
+use crate::netsim::Cipher;
+use crate::util::yaml::{self, Yaml};
+
+/// Supported LRMS flavours (the paper's stack supports SLURM, HTCondor,
+/// Mesos, Kubernetes, Nomad via CLUES plugins; we implement two).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LrmsKind {
+    Slurm,
+    HtCondor,
+}
+
+impl LrmsKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            LrmsKind::Slurm => "slurm",
+            LrmsKind::HtCondor => "htcondor",
+        }
+    }
+}
+
+/// Host sizing requirements for a node template.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostRequirements {
+    pub num_cpus: u32,
+    pub mem_gb: f64,
+}
+
+/// Elasticity bounds from the `scalable` capability.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scalable {
+    /// Initially deployed working nodes.
+    pub count: u32,
+    pub min_instances: u32,
+    pub max_instances: u32,
+}
+
+/// Typed cluster template — everything the orchestrator needs.
+#[derive(Debug, Clone)]
+pub struct ClusterTemplate {
+    pub name: String,
+    pub description: String,
+    pub lrms: LrmsKind,
+    pub front_end: HostRequirements,
+    pub worker: HostRequirements,
+    pub scalable: Scalable,
+    /// OpenVPN cipher for the overlay tunnels (§3.5.6).
+    pub vpn_cipher: Cipher,
+    /// Allow worker provisioning to burst beyond the first site.
+    pub hybrid: bool,
+    /// Seconds a node must stay idle before CLUES powers it off.
+    pub idle_timeout_s: f64,
+    /// Deploy a hot-backup central point (redundant star, Fig. 6).
+    pub redundant_central_point: bool,
+}
+
+impl ClusterTemplate {
+    /// Validate semantic constraints a syntactically fine template can
+    /// still violate.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.scalable.max_instances < self.scalable.min_instances {
+            bail!("max_instances < min_instances");
+        }
+        if self.scalable.count > self.scalable.max_instances {
+            bail!("initial count {} exceeds max_instances {}",
+                  self.scalable.count, self.scalable.max_instances);
+        }
+        if self.front_end.num_cpus == 0 || self.worker.num_cpus == 0 {
+            bail!("nodes need at least one CPU");
+        }
+        if self.idle_timeout_s < 0.0 {
+            bail!("idle_timeout must be non-negative");
+        }
+        Ok(())
+    }
+}
+
+/// The curated "SLURM Elastic cluster" template, mirroring
+/// indigo-dc/tosca-templates, restricted to the YAML subset we parse.
+pub const SLURM_ELASTIC_TEMPLATE: &str = r#"
+tosca_definitions_version: tosca_simple_yaml_1_0
+description: Deploy an elastic SLURM cluster across hybrid cloud sites
+metadata:
+  display_name: SLURM Elastic cluster
+topology_template:
+  inputs:
+    wn_num:
+      type: integer
+      default: 2
+    wn_max:
+      type: integer
+      default: 5
+    hybrid:
+      type: boolean
+      default: true
+  node_templates:
+    elastic_cluster:
+      type: tosca.nodes.indigo.ElasticCluster
+      properties:
+        lrms: slurm
+        idle_timeout: 600
+        vpn_cipher: aes-256-gcm
+        redundant_central_point: false
+    lrms_front_end:
+      type: tosca.nodes.indigo.LRMS.FrontEnd.Slurm
+      capabilities:
+        host:
+          properties:
+            num_cpus: 2
+            mem_size: 4 GB
+    lrms_wn:
+      type: tosca.nodes.indigo.LRMS.WorkerNode.Slurm
+      capabilities:
+        scalable:
+          properties:
+            count: 2
+            min_instances: 0
+            max_instances: 5
+        host:
+          properties:
+            num_cpus: 2
+            mem_size: 4 GB
+"#;
+
+/// The same cluster shape on HTCondor (plugin-coverage template).
+pub const HTCONDOR_ELASTIC_TEMPLATE: &str = r#"
+tosca_definitions_version: tosca_simple_yaml_1_0
+description: Deploy an elastic HTCondor pool across hybrid cloud sites
+metadata:
+  display_name: HTCondor Elastic cluster
+topology_template:
+  node_templates:
+    elastic_cluster:
+      type: tosca.nodes.indigo.ElasticCluster
+      properties:
+        lrms: htcondor
+        idle_timeout: 600
+        vpn_cipher: aes-128-gcm
+        redundant_central_point: true
+    lrms_front_end:
+      type: tosca.nodes.indigo.LRMS.FrontEnd.HTCondor
+      capabilities:
+        host:
+          properties:
+            num_cpus: 2
+            mem_size: 4 GB
+    lrms_wn:
+      type: tosca.nodes.indigo.LRMS.WorkerNode.HTCondor
+      capabilities:
+        scalable:
+          properties:
+            count: 1
+            min_instances: 0
+            max_instances: 8
+        host:
+          properties:
+            num_cpus: 2
+            mem_size: 2 GB
+"#;
+
+fn parse_mem_gb(v: &Yaml) -> anyhow::Result<f64> {
+    match v {
+        Yaml::Int(i) => Ok(*i as f64),
+        Yaml::Float(f) => Ok(*f),
+        Yaml::Str(s) => {
+            let s = s.trim();
+            if let Some(num) = s.strip_suffix("GB") {
+                Ok(num.trim().parse::<f64>()?)
+            } else if let Some(num) = s.strip_suffix("MB") {
+                Ok(num.trim().parse::<f64>()? / 1024.0)
+            } else {
+                bail!("cannot parse memory size {s:?}")
+            }
+        }
+        other => bail!("cannot parse memory size from {other}"),
+    }
+}
+
+fn parse_host(node: &Yaml) -> anyhow::Result<HostRequirements> {
+    let props = node
+        .get_path("capabilities.host.properties")
+        .context("node template missing capabilities.host.properties")?;
+    Ok(HostRequirements {
+        num_cpus: props
+            .i64_at("num_cpus")
+            .context("host missing num_cpus")? as u32,
+        mem_gb: parse_mem_gb(
+            props.get("mem_size").context("host missing mem_size")?)?,
+    })
+}
+
+/// Parse a TOSCA document into a [`ClusterTemplate`].
+pub fn parse(doc: &str) -> anyhow::Result<ClusterTemplate> {
+    let y = yaml::parse(doc)?;
+    if y.str_at("tosca_definitions_version").is_none() {
+        bail!("not a TOSCA document: missing tosca_definitions_version");
+    }
+    let templates = y
+        .get_path("topology_template.node_templates")
+        .context("missing topology_template.node_templates")?;
+
+    // Locate node templates by TOSCA type prefix, not by key name.
+    let mut cluster = None;
+    let mut fe = None;
+    let mut wn = None;
+    for (key, node) in templates.as_map().context("node_templates")? {
+        let ty = node.str_at("type").unwrap_or("");
+        if ty.contains("ElasticCluster") {
+            cluster = Some((key.clone(), node));
+        } else if ty.contains("LRMS.FrontEnd") {
+            fe = Some(node);
+        } else if ty.contains("LRMS.WorkerNode") {
+            wn = Some(node);
+        }
+    }
+    let (_, cluster) = cluster.context("no ElasticCluster node template")?;
+    let fe = fe.context("no LRMS.FrontEnd node template")?;
+    let wn = wn.context("no LRMS.WorkerNode node template")?;
+
+    let props = cluster.get("properties").context("cluster properties")?;
+    let lrms = match props.str_at("lrms") {
+        Some("slurm") => LrmsKind::Slurm,
+        Some("htcondor") => LrmsKind::HtCondor,
+        Some(other) => bail!("unsupported LRMS {other:?}"),
+        None => LrmsKind::Slurm,
+    };
+    let vpn_cipher = match props.str_at("vpn_cipher") {
+        Some(s) => s.parse::<Cipher>()?,
+        None => Cipher::Aes256Gcm,
+    };
+    let idle_timeout_s =
+        props.get("idle_timeout").and_then(|v| v.as_f64()).unwrap_or(300.0);
+    let redundant_central_point = props
+        .get("redundant_central_point")
+        .and_then(|v| v.as_bool())
+        .unwrap_or(false);
+
+    let scal = wn
+        .get_path("capabilities.scalable.properties")
+        .context("worker missing scalable capability")?;
+    let scalable = Scalable {
+        count: scal.i64_at("count").unwrap_or(1) as u32,
+        min_instances: scal.i64_at("min_instances").unwrap_or(0) as u32,
+        max_instances: scal
+            .i64_at("max_instances")
+            .context("scalable missing max_instances")? as u32,
+    };
+
+    let hybrid = y
+        .get_path("topology_template.inputs.hybrid.default")
+        .and_then(|v| v.as_bool())
+        .unwrap_or(true);
+
+    let tpl = ClusterTemplate {
+        name: y
+            .str_at("metadata.display_name")
+            .unwrap_or("unnamed-cluster")
+            .to_string(),
+        description: y.str_at("description").unwrap_or("").to_string(),
+        lrms,
+        front_end: parse_host(fe)?,
+        worker: parse_host(wn)?,
+        scalable,
+        vpn_cipher,
+        hybrid,
+        idle_timeout_s,
+        redundant_central_point,
+    };
+    tpl.validate()?;
+    Ok(tpl)
+}
+
+/// Parse the built-in curated template by display name.
+pub fn builtin(name: &str) -> anyhow::Result<ClusterTemplate> {
+    match name {
+        "slurm" | "SLURM Elastic cluster" => parse(SLURM_ELASTIC_TEMPLATE),
+        "htcondor" | "HTCondor Elastic cluster" => {
+            parse(HTCONDOR_ELASTIC_TEMPLATE)
+        }
+        other => bail!("no built-in template {other:?} (try slurm/htcondor)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_builtin_slurm() {
+        let t = builtin("slurm").unwrap();
+        assert_eq!(t.lrms, LrmsKind::Slurm);
+        assert_eq!(t.name, "SLURM Elastic cluster");
+        assert_eq!(t.scalable.count, 2);
+        assert_eq!(t.scalable.max_instances, 5);
+        assert_eq!(t.front_end.num_cpus, 2);
+        assert_eq!(t.worker.mem_gb, 4.0);
+        assert_eq!(t.vpn_cipher, Cipher::Aes256Gcm);
+        assert!(t.hybrid);
+        assert_eq!(t.idle_timeout_s, 600.0);
+        assert!(!t.redundant_central_point);
+    }
+
+    #[test]
+    fn parses_builtin_htcondor() {
+        let t = builtin("htcondor").unwrap();
+        assert_eq!(t.lrms, LrmsKind::HtCondor);
+        assert!(t.redundant_central_point);
+        assert_eq!(t.scalable.max_instances, 8);
+        assert_eq!(t.worker.mem_gb, 2.0);
+    }
+
+    #[test]
+    fn unknown_builtin_rejected() {
+        assert!(builtin("kubernetes").is_err());
+    }
+
+    #[test]
+    fn missing_sections_rejected() {
+        assert!(parse("tosca_definitions_version: x\n").is_err());
+        assert!(parse("foo: bar\n").is_err());
+    }
+
+    #[test]
+    fn semantic_validation() {
+        let bad = SLURM_ELASTIC_TEMPLATE.replace(
+            "max_instances: 5", "max_instances: 1");
+        // count (2) > max_instances (1)
+        assert!(parse(&bad).is_err());
+    }
+
+    #[test]
+    fn mem_size_formats() {
+        assert_eq!(parse_mem_gb(&Yaml::Str("4 GB".into())).unwrap(), 4.0);
+        assert_eq!(parse_mem_gb(&Yaml::Str("512 MB".into())).unwrap(), 0.5);
+        assert_eq!(parse_mem_gb(&Yaml::Int(8)).unwrap(), 8.0);
+        assert!(parse_mem_gb(&Yaml::Str("lots".into())).is_err());
+    }
+
+    #[test]
+    fn defaults_for_optional_properties() {
+        let doc = r#"
+tosca_definitions_version: tosca_simple_yaml_1_0
+topology_template:
+  node_templates:
+    cluster:
+      type: tosca.nodes.indigo.ElasticCluster
+      properties:
+        lrms: slurm
+    fe:
+      type: tosca.nodes.indigo.LRMS.FrontEnd.Slurm
+      capabilities:
+        host:
+          properties:
+            num_cpus: 1
+            mem_size: 2 GB
+    wn:
+      type: tosca.nodes.indigo.LRMS.WorkerNode.Slurm
+      capabilities:
+        scalable:
+          properties:
+            max_instances: 3
+        host:
+          properties:
+            num_cpus: 1
+            mem_size: 2 GB
+"#;
+        let t = parse(doc).unwrap();
+        assert_eq!(t.scalable.count, 1);
+        assert_eq!(t.scalable.min_instances, 0);
+        assert_eq!(t.vpn_cipher, Cipher::Aes256Gcm);
+        assert_eq!(t.name, "unnamed-cluster");
+    }
+}

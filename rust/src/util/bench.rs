@@ -1,0 +1,65 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with summary statistics, and a
+//! uniform report format that `cargo bench` binaries (harness = false)
+//! print alongside the tables regenerating the paper's figures.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Measure `f` for `iters` iterations after `warmup` untimed runs.
+/// Returns per-iteration seconds.
+pub fn time_iters<F: FnMut()>(warmup: u32, iters: u32, mut f: F)
+    -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples
+}
+
+/// Measure and report one benchmark case.
+pub fn bench_case<F: FnMut()>(name: &str, warmup: u32, iters: u32, f: F)
+    -> Summary {
+    let samples = time_iters(warmup, iters, f);
+    let s = Summary::of(&samples);
+    println!(
+        "bench {name:<40} {:>10.3} ms/iter (p50 {:.3}, p95 {:.3}, n={})",
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p95 * 1e3,
+        s.n
+    );
+    s
+}
+
+/// Section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_returns_requested_samples() {
+        let xs = time_iters(1, 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(xs.len(), 5);
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn bench_case_summarizes() {
+        let s = bench_case("noop", 0, 3, || {});
+        assert_eq!(s.n, 3);
+    }
+}

@@ -1,0 +1,234 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+/// One option specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None => boolean flag; Some(meta) => takes a value shown as <meta>.
+    pub value: Option<&'static str>,
+    pub default: Option<&'static str>,
+}
+
+/// Declarative command description.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, ..Default::default() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, value: None, default: None });
+        self
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        meta: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec { name, help, value: Some(meta), default });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Parse `args` (without the program/subcommand names themselves).
+    pub fn parse(&self, args: &[String]) -> anyhow::Result<Parsed> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut pos: Vec<String> = Vec::new();
+        for spec in &self.opts {
+            if let (Some(_), Some(d)) = (spec.value, spec.default) {
+                values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.help_text());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|s| s.name == key)
+                    .with_context(|| format!(
+                        "unknown option --{key}\n{}", self.help_text()))?;
+                match spec.value {
+                    None => {
+                        if inline.is_some() {
+                            bail!("flag --{key} takes no value");
+                        }
+                        flags.push(key.to_string());
+                    }
+                    Some(_) => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => it
+                                .next()
+                                .with_context(|| format!(
+                                    "option --{key} expects a value"))?
+                                .clone(),
+                        };
+                        values.insert(key.to_string(), v);
+                    }
+                }
+            } else {
+                pos.push(a.clone());
+            }
+        }
+        if pos.len() > self.positionals.len() {
+            bail!(
+                "unexpected positional argument {:?}\n{}",
+                pos[self.positionals.len()],
+                self.help_text()
+            );
+        }
+        Ok(Parsed { values, flags, positionals: pos })
+    }
+
+    /// Generated usage/help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about,
+                            self.name);
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        if !self.positionals.is_empty() {
+            s.push_str("\n\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        s.push_str("\n\nOPTIONS:\n");
+        for o in &self.opts {
+            let lhs = match o.value {
+                Some(meta) => format!("--{} <{}>", o.name, meta),
+                None => format!("--{}", o.name),
+            };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {lhs:<28} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                       print this help\n");
+        s
+    }
+}
+
+/// Parse result with typed accessors.
+#[derive(Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .with_context(|| format!("missing required option --{name}"))?;
+        raw.parse::<T>()
+            .map_err(|e| anyhow::anyhow!("--{name}={raw}: {e}"))
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("demo", "demo command")
+            .flag("verbose", "more output")
+            .opt("count", "N", Some("3"), "how many")
+            .opt("name", "S", None, "a name")
+            .positional("file", "input file")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_options_positionals() {
+        let p = cmd()
+            .parse(&sv(&["--verbose", "--count", "7", "--name=zed", "in.txt"]))
+            .unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.get_parsed::<u32>("count").unwrap(), 7);
+        assert_eq!(p.get("name"), Some("zed"));
+        assert_eq!(p.positional(0), Some("in.txt"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cmd().parse(&sv(&[])).unwrap();
+        assert_eq!(p.get_parsed::<u32>("count").unwrap(), 3);
+        assert!(!p.flag("verbose"));
+        assert_eq!(p.get("name"), None);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(cmd().parse(&sv(&["--bogus"])).is_err());
+        assert!(cmd().parse(&sv(&["--count"])).is_err());
+        assert!(cmd().parse(&sv(&["--verbose=1"])).is_err());
+        assert!(cmd().parse(&sv(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_everything() {
+        let h = cmd().help_text();
+        for needle in ["--verbose", "--count <N>", "[default: 3]", "<file>"] {
+            assert!(h.contains(needle), "missing {needle} in help:\n{h}");
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Minimal CSV writing (quoting-aware) for bench/figure outputs.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// In-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics if the width does not match the header
+    /// (a bug in the caller, not a runtime condition).
+    pub fn push<S: Into<String>>(&mut self, row: Vec<S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn quote(field: &str) -> String {
+        if field.contains([',', '"', '\n']) {
+            format!("\"{}\"", field.replace('"', "\"\""))
+        } else {
+            field.to_string()
+        }
+    }
+
+    /// Render to CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let fmt_row = |row: &[String], s: &mut String| {
+            let joined: Vec<String> =
+                row.iter().map(|f| Self::quote(f)).collect();
+            let _ = writeln!(s, "{}", joined.join(","));
+        };
+        fmt_row(&self.header, &mut s);
+        for r in &self.rows {
+            fmt_row(r, &mut s);
+        }
+        s
+    }
+
+    /// Write CSV to a path, creating parent directories.
+    pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+
+    /// Render as an aligned text table (for terminal reports).
+    pub fn to_text(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, f) in r.iter().enumerate() {
+                widths[i] = widths[i].max(f.len());
+            }
+        }
+        let mut s = String::new();
+        let fmt_row = |row: &[String], s: &mut String| {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, f)| format!("{:<w$}", f, w = widths[i]))
+                .collect();
+            let _ = writeln!(s, "{}", cells.join("  "));
+        };
+        fmt_row(&self.header, &mut s);
+        let rule: Vec<String> =
+            widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(s, "{}", rule.join("  "));
+        for r in &self.rows {
+            fmt_row(r, &mut s);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_quoting() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.push(vec!["1", "plain"]);
+        t.push(vec!["x,y", "say \"hi\""]);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.push(vec!["only-one"]);
+    }
+
+    #[test]
+    fn text_alignment() {
+        let mut t = Table::new(vec!["name", "v"]);
+        t.push(vec!["longer-name", "1"]);
+        let txt = t.to_text();
+        let lines: Vec<&str> = txt.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].starts_with("---"));
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("evhc_csv_test");
+        let path = dir.join("t.csv");
+        let mut t = Table::new(vec!["x"]);
+        t.push(vec!["1"]);
+        t.write(&path).unwrap();
+        assert!(std::fs::read_to_string(&path).unwrap().contains("x\n1"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

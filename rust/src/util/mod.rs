@@ -1,0 +1,16 @@
+//! In-tree substrates for functionality normally pulled from crates.io.
+//!
+//! This build environment resolves only the `xla` crate's vendored
+//! dependency tree, so clap/serde/criterion/proptest/rand are not
+//! available. Everything the coordinator needs from them is implemented
+//! here, scoped to what the project actually uses.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod logging;
+pub mod plot;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod yaml;

@@ -1,0 +1,111 @@
+//! ASCII time-series plots for terminal reports — used by the CLI and
+//! benches to render Figure 10/11-style charts without a plotting stack.
+
+/// Render stacked horizontal bars: one row per series, bar length
+/// proportional to value, annotated with the numeric value.
+pub fn barchart(title: &str, rows: &[(String, f64)], width: usize)
+    -> String {
+    let max = rows.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max);
+    let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(4);
+    let mut out = format!("{title}\n");
+    for (label, v) in rows {
+        let filled = if max > 0.0 {
+            ((v / max) * width as f64).round() as usize
+        } else {
+            0
+        };
+        out.push_str(&format!(
+            "  {label:<label_w$} |{}{}| {v:.2}\n",
+            "█".repeat(filled),
+            " ".repeat(width.saturating_sub(filled)),
+        ));
+    }
+    out
+}
+
+/// Render a multi-series step chart over time buckets, one character
+/// column per bucket, one row per series; cell is the series glyph when
+/// its value > 0 at that bucket, scaled by intensity (.:*#@).
+pub fn heatline(name: &str, values: &[f64]) -> String {
+    let max = values.iter().cloned().fold(f64::MIN, f64::max);
+    let glyph = |v: f64| -> char {
+        if v <= 0.0 || max <= 0.0 {
+            '·'
+        } else {
+            // level 1..=4 over (0, max]; the max value renders '@'.
+            let level = (v / max * 4.0).ceil() as usize;
+            [' ', '.', ':', '*', '@'][level.min(4)]
+        }
+    };
+    let line: String = values.iter().map(|&v| glyph(v)).collect();
+    format!("{name:>14} {line}")
+}
+
+/// Full Figure-11-style chart: series of (label, per-bucket counts),
+/// plus a time axis in `bucket_secs` units.
+pub fn state_chart(series: &[(&str, Vec<f64>)], bucket_secs: f64)
+    -> String {
+    let mut out = String::new();
+    for (label, values) in series {
+        out.push_str(&heatline(label, values));
+        out.push('\n');
+    }
+    let n = series.first().map(|(_, v)| v.len()).unwrap_or(0);
+    // Axis: a tick every 10 buckets.
+    let mut axis = String::from("               ");
+    let mut i = 0;
+    while i < n {
+        let label = format!("{:<10}", format_mins(i as f64 * bucket_secs));
+        axis.push_str(&label[..label.len().min(10)]);
+        i += 10;
+    }
+    out.push_str(&axis);
+    out.push('\n');
+    out
+}
+
+fn format_mins(secs: f64) -> String {
+    format!("{}m", (secs / 60.0).round() as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barchart_scales_and_aligns() {
+        let rows = vec![("used".to_string(), 10.0),
+                        ("idle".to_string(), 5.0)];
+        let chart = barchart("states", &rows, 20);
+        let lines: Vec<&str> = chart.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let used_bar = lines[1].matches('█').count();
+        let idle_bar = lines[2].matches('█').count();
+        assert_eq!(used_bar, 20);
+        assert_eq!(idle_bar, 10);
+        assert!(lines[1].contains("10.00"));
+    }
+
+    #[test]
+    fn barchart_empty_and_zero_safe() {
+        assert!(barchart("t", &[], 10).starts_with('t'));
+        let chart = barchart("t", &[("a".to_string(), 0.0)], 10);
+        assert!(!chart.contains('█'));
+    }
+
+    #[test]
+    fn heatline_glyph_intensity() {
+        let line = heatline("used", &[0.0, 1.0, 5.0]);
+        assert!(line.contains('·'));
+        assert!(line.contains('@'));
+    }
+
+    #[test]
+    fn state_chart_has_axis() {
+        let chart = state_chart(&[("used", vec![1.0; 25]),
+                                  ("idle", vec![0.0; 25])], 120.0);
+        assert!(chart.contains("used"));
+        assert!(chart.contains("20m"), "{chart}");
+        assert_eq!(chart.lines().count(), 3);
+    }
+}

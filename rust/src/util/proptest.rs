@@ -1,0 +1,116 @@
+//! Hand-rolled property-testing harness (proptest is unavailable offline).
+//!
+//! Provides seeded generators over the crate's [`Prng`] and a runner that
+//! reports the failing case number + seed so failures reproduce exactly.
+//! Shrinking is deliberately out of scope — generators are kept small and
+//! structured enough that the raw counterexample is readable.
+
+use super::prng::Prng;
+
+/// Number of cases per property (overridable via EVHC_PROPTEST_CASES).
+pub fn default_cases() -> u32 {
+    std::env::var("EVHC_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A generator is any `Fn(&mut Prng) -> T`.
+pub trait Gen<T>: Fn(&mut Prng) -> T {}
+impl<T, F: Fn(&mut Prng) -> T> Gen<T> for F {}
+
+/// Run `prop` against `cases` generated inputs. Panics with the seed and
+/// case index on the first failure (where `prop` returns Err or panics).
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Prng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    check_n(name, default_cases(), gen, prop)
+}
+
+/// Like [`check`] with an explicit case count.
+pub fn check_n<T: std::fmt::Debug>(
+    name: &str,
+    cases: u32,
+    gen: impl Fn(&mut Prng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let base_seed = std::env::var("EVHC_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xEC3u64);
+    for case in 0..cases {
+        let mut rng = Prng::new(base_seed ^ (case as u64).wrapping_mul(
+            0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (EVHC_PROPTEST_SEED={base_seed}):\n  input: {input:?}\n  \
+                 reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Generator combinators.
+pub mod gen {
+    use super::Prng;
+
+    pub fn usize_in(lo: usize, hi: usize) -> impl Fn(&mut Prng) -> usize {
+        move |r| lo + r.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(lo: f64, hi: f64) -> impl Fn(&mut Prng) -> f64 {
+        move |r| r.uniform(lo, hi)
+    }
+
+    pub fn bool_with(p: f64) -> impl Fn(&mut Prng) -> bool {
+        move |r| r.chance(p)
+    }
+
+    pub fn vec_of<T>(
+        item: impl Fn(&mut Prng) -> T,
+        len: impl Fn(&mut Prng) -> usize,
+    ) -> impl Fn(&mut Prng) -> Vec<T> {
+        move |r| {
+            let n = len(r);
+            (0..n).map(|_| item(r)).collect()
+        }
+    }
+
+    pub fn choice<T: Clone>(items: Vec<T>) -> impl Fn(&mut Prng) -> T {
+        move |r| items[r.next_below(items.len() as u64) as usize].clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", gen::vec_of(gen::usize_in(0, 100),
+                                          gen::usize_in(0, 20)), |xs| {
+            let fwd: usize = xs.iter().sum();
+            let rev: usize = xs.iter().rev().sum();
+            if fwd == rev { Ok(()) } else { Err("sum not commutative".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports() {
+        check_n("always-fails", 4, gen::usize_in(0, 9), |_| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", gen::usize_in(3, 7), |&x| {
+            if (3..=7).contains(&x) { Ok(()) } else { Err(format!("{x}")) }
+        });
+    }
+}

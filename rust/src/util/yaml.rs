@@ -1,0 +1,540 @@
+//! YAML-subset parser for TOSCA templates and config files.
+//!
+//! Supports the subset TOSCA simple-profile documents actually use:
+//! indentation-nested mappings, block sequences (`- item`), scalars
+//! (string / int / float / bool / null), inline comments (`#`), quoted
+//! strings, and flow lists (`[a, b]`). Anchors, aliases, multi-line
+//! scalars and flow mappings are intentionally out of scope.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{bail, Context};
+
+/// Parsed YAML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Yaml {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    List(Vec<Yaml>),
+    /// Insertion-ordered mapping (order matters for deterministic output).
+    Map(Vec<(String, Yaml)>),
+}
+
+impl Yaml {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Yaml::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Yaml::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Yaml::Float(f) => Some(*f),
+            Yaml::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Yaml::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Yaml]> {
+        match self {
+            Yaml::List(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&[(String, Yaml)]> {
+        match self {
+            Yaml::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Map lookup by key.
+    pub fn get(&self, key: &str) -> Option<&Yaml> {
+        self.as_map()?.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Dotted-path lookup: `get_path("topology.node_templates.wn")`.
+    pub fn get_path(&self, path: &str) -> Option<&Yaml> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    /// Convenience: string at dotted path.
+    pub fn str_at(&self, path: &str) -> Option<&str> {
+        self.get_path(path)?.as_str()
+    }
+
+    /// Convenience: integer at dotted path.
+    pub fn i64_at(&self, path: &str) -> Option<i64> {
+        self.get_path(path)?.as_i64()
+    }
+}
+
+impl fmt::Display for Yaml {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Yaml::Null => write!(f, "null"),
+            Yaml::Bool(b) => write!(f, "{b}"),
+            Yaml::Int(i) => write!(f, "{i}"),
+            Yaml::Float(x) => write!(f, "{x}"),
+            Yaml::Str(s) => write!(f, "{s}"),
+            Yaml::List(l) => {
+                write!(f, "[")?;
+                for (i, v) in l.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Yaml::Map(m) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k}: {v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+/// A significant (non-blank, non-comment) line.
+struct Line {
+    indent: usize,
+    text: String,
+    lineno: usize,
+}
+
+fn strip_comment(s: &str) -> &str {
+    // A '#' starts a comment unless inside quotes.
+    let mut in_s = false;
+    let mut in_d = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '\'' if !in_d => in_s = !in_s,
+            '"' if !in_s => in_d = !in_d,
+            '#' if !in_s && !in_d => {
+                // Require preceding whitespace or start-of-line per YAML.
+                if i == 0 || s.as_bytes()[i - 1].is_ascii_whitespace() {
+                    return &s[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    s
+}
+
+fn significant_lines(src: &str) -> anyhow::Result<Vec<Line>> {
+    let mut out = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        if raw.trim_start().starts_with('#') {
+            continue;
+        }
+        let no_comment = strip_comment(raw);
+        let trimmed = no_comment.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        if trimmed.contains('\t') {
+            bail!("line {}: tabs are not allowed in YAML", idx + 1);
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        out.push(Line {
+            indent,
+            text: trimmed.trim_start().to_string(),
+            lineno: idx + 1,
+        });
+    }
+    Ok(out)
+}
+
+/// Parse a scalar token (already trimmed).
+pub fn parse_scalar(s: &str) -> Yaml {
+    let t = s.trim();
+    if t.is_empty() || t == "~" || t == "null" {
+        return Yaml::Null;
+    }
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Yaml::Str(t[1..t.len() - 1].to_string());
+    }
+    if t.starts_with('[') && t.ends_with(']') {
+        let inner = &t[1..t.len() - 1];
+        if inner.trim().is_empty() {
+            return Yaml::List(vec![]);
+        }
+        return Yaml::List(
+            split_flow_items(inner).iter().map(|i| parse_scalar(i)).collect(),
+        );
+    }
+    match t {
+        "true" | "True" => return Yaml::Bool(true),
+        "false" | "False" => return Yaml::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Yaml::Int(i);
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Yaml::Float(f);
+    }
+    Yaml::Str(t.to_string())
+}
+
+/// Split `a, b, [c, d]` at top-level commas.
+fn split_flow_items(s: &str) -> Vec<String> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '[' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                items.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur.trim().to_string());
+    }
+    items
+}
+
+/// Split `key: value` at the first top-level colon (not inside quotes).
+fn split_key_value(line: &str) -> Option<(&str, &str)> {
+    let mut in_s = false;
+    let mut in_d = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\'' if !in_d => in_s = !in_s,
+            '"' if !in_s => in_d = !in_d,
+            ':' if !in_s && !in_d => {
+                let rest = &line[i + 1..];
+                if rest.is_empty() || rest.starts_with(' ') {
+                    return Some((line[..i].trim(), rest.trim()));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Parse a YAML document into a [`Yaml`] tree.
+pub fn parse(src: &str) -> anyhow::Result<Yaml> {
+    let lines = significant_lines(src)?;
+    if lines.is_empty() {
+        return Ok(Yaml::Null);
+    }
+    let mut pos = 0usize;
+    let v = parse_block(&lines, &mut pos, lines[0].indent)?;
+    if pos != lines.len() {
+        bail!(
+            "line {}: unexpected content (inconsistent indentation?)",
+            lines[pos].lineno
+        );
+    }
+    Ok(v)
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize)
+    -> anyhow::Result<Yaml> {
+    if lines[*pos].text.starts_with("- ") || lines[*pos].text == "-" {
+        parse_sequence(lines, pos, indent)
+    } else {
+        parse_mapping(lines, pos, indent)
+    }
+}
+
+fn parse_sequence(lines: &[Line], pos: &mut usize, indent: usize)
+    -> anyhow::Result<Yaml> {
+    let mut items = Vec::new();
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let line = &lines[*pos];
+        if !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let body = line.text[1..].trim().to_string();
+        *pos += 1;
+        if body.is_empty() {
+            // Nested block follows.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent)?);
+            } else {
+                items.push(Yaml::Null);
+            }
+        } else if let Some((k, v)) = split_key_value(&body) {
+            // "- key: value" — item is a mapping whose first entry is on
+            // the dash line; further keys are indented deeper.
+            let mut map: Vec<(String, Yaml)> = Vec::new();
+            let first_val = if v.is_empty() {
+                if *pos < lines.len() && lines[*pos].indent > indent + 2 {
+                    let ci = lines[*pos].indent;
+                    parse_block(lines, pos, ci)?
+                } else {
+                    Yaml::Null
+                }
+            } else {
+                parse_scalar(v)
+            };
+            map.push((k.to_string(), first_val));
+            while *pos < lines.len() && lines[*pos].indent == indent + 2 {
+                let l = &lines[*pos];
+                let (k2, v2) = split_key_value(&l.text).with_context(|| {
+                    format!("line {}: expected key: value", l.lineno)
+                })?;
+                *pos += 1;
+                let val = if v2.is_empty() {
+                    if *pos < lines.len() && lines[*pos].indent > indent + 2 {
+                        let ci = lines[*pos].indent;
+                        parse_block(lines, pos, ci)?
+                    } else {
+                        Yaml::Null
+                    }
+                } else {
+                    parse_scalar(v2)
+                };
+                map.push((k2.to_string(), val));
+            }
+            items.push(Yaml::Map(map));
+        } else {
+            items.push(parse_scalar(&body));
+        }
+    }
+    Ok(Yaml::List(items))
+}
+
+fn parse_mapping(lines: &[Line], pos: &mut usize, indent: usize)
+    -> anyhow::Result<Yaml> {
+    let mut map: Vec<(String, Yaml)> = Vec::new();
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let line = &lines[*pos];
+        if line.text.starts_with("- ") || line.text == "-" {
+            break;
+        }
+        let (k, v) = split_key_value(&line.text).with_context(|| {
+            format!("line {}: expected `key: value`", line.lineno)
+        })?;
+        if map.iter().any(|(existing, _)| existing == k) {
+            bail!("line {}: duplicate key {k:?}", line.lineno);
+        }
+        *pos += 1;
+        let value = if v.is_empty() {
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                parse_block(lines, pos, child_indent)?
+            } else {
+                Yaml::Null
+            }
+        } else {
+            parse_scalar(v)
+        };
+        map.push((k.to_string(), value));
+    }
+    Ok(Yaml::Map(map))
+}
+
+/// Flatten a map into `BTreeMap<dotted.path, scalar-as-string>` — handy
+/// for config diffing in tests.
+pub fn flatten(y: &Yaml) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    fn rec(prefix: &str, y: &Yaml, out: &mut BTreeMap<String, String>) {
+        match y {
+            Yaml::Map(m) => {
+                for (k, v) in m {
+                    let p = if prefix.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{prefix}.{k}")
+                    };
+                    rec(&p, v, out);
+                }
+            }
+            Yaml::List(l) => {
+                for (i, v) in l.iter().enumerate() {
+                    rec(&format!("{prefix}[{i}]"), v, out);
+                }
+            }
+            other => {
+                out.insert(prefix.to_string(), other.to_string());
+            }
+        }
+    }
+    rec("", y, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse_scalar("42"), Yaml::Int(42));
+        assert_eq!(parse_scalar("4.5"), Yaml::Float(4.5));
+        assert_eq!(parse_scalar("true"), Yaml::Bool(true));
+        assert_eq!(parse_scalar("null"), Yaml::Null);
+        assert_eq!(parse_scalar("\"42\""), Yaml::Str("42".into()));
+        assert_eq!(parse_scalar("'a b'"), Yaml::Str("a b".into()));
+        assert_eq!(
+            parse_scalar("[1, 2, x]"),
+            Yaml::List(vec![Yaml::Int(1), Yaml::Int(2), Yaml::Str("x".into())])
+        );
+    }
+
+    #[test]
+    fn nested_mapping() {
+        let doc = "\
+a:
+  b:
+    c: 1
+  d: two
+e: 3.5
+";
+        let y = parse(doc).unwrap();
+        assert_eq!(y.i64_at("a.b.c"), Some(1));
+        assert_eq!(y.str_at("a.d"), Some("two"));
+        assert_eq!(y.get_path("e").unwrap().as_f64(), Some(3.5));
+    }
+
+    #[test]
+    fn block_sequence_of_scalars_and_maps() {
+        let doc = "\
+items:
+  - 1
+  - two
+  - name: x
+    size: 4
+hosts:
+  - host: a
+  - host: b
+";
+        let y = parse(doc).unwrap();
+        let items = y.get("items").unwrap().as_list().unwrap();
+        assert_eq!(items.len(), 3);
+        assert_eq!(items[0], Yaml::Int(1));
+        assert_eq!(items[2].get("size").unwrap().as_i64(), Some(4));
+        let hosts = y.get("hosts").unwrap().as_list().unwrap();
+        assert_eq!(hosts[1].str_at("host"), Some("b"));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = "\
+# header
+a: 1   # trailing
+
+b: 'with # not comment'
+";
+        let y = parse(doc).unwrap();
+        assert_eq!(y.i64_at("a"), Some(1));
+        assert_eq!(y.str_at("b"), Some("with # not comment"));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse("a: 1\na: 2\n").is_err());
+    }
+
+    #[test]
+    fn tabs_rejected() {
+        assert!(parse("a:\n\tb: 1\n").is_err());
+    }
+
+    #[test]
+    fn empty_doc_is_null() {
+        assert_eq!(parse("# nothing\n").unwrap(), Yaml::Null);
+    }
+
+    #[test]
+    fn colon_in_quoted_key_value() {
+        let y = parse("url: \"http://x:80/\"\n").unwrap();
+        assert_eq!(y.str_at("url"), Some("http://x:80/"));
+    }
+
+    #[test]
+    fn tosca_like_document() {
+        let doc = "\
+tosca_definitions_version: tosca_simple_yaml_1_0
+topology_template:
+  inputs:
+    wn_num:
+      type: integer
+      default: 5
+  node_templates:
+    lrms_front_end:
+      type: tosca.nodes.indigo.LRMS.FrontEnd.Slurm
+      properties:
+        wn_ips: [10.0.1.2, 10.0.1.3]
+    wn:
+      type: tosca.nodes.indigo.LRMS.WorkerNode.Slurm
+      capabilities:
+        scalable:
+          properties:
+            count: 2
+            max_instances: 5
+";
+        let y = parse(doc).unwrap();
+        assert_eq!(
+            y.i64_at("topology_template.inputs.wn_num.default"),
+            Some(5)
+        );
+        assert_eq!(
+            y.i64_at("topology_template.node_templates.wn.capabilities.scalable.properties.max_instances"),
+            Some(5)
+        );
+        let ips = y
+            .get_path("topology_template.node_templates.lrms_front_end.properties.wn_ips")
+            .unwrap()
+            .as_list()
+            .unwrap();
+        assert_eq!(ips.len(), 2);
+    }
+
+    #[test]
+    fn flatten_paths() {
+        let y = parse("a:\n  b: 1\nc:\n  - x\n  - y\n").unwrap();
+        let f = flatten(&y);
+        assert_eq!(f["a.b"], "1");
+        assert_eq!(f["c[1]"], "y");
+    }
+}

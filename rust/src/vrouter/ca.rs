@@ -1,0 +1,154 @@
+//! Simulated certificate authority for the overlay (§3.5.5).
+//!
+//! The real stack reuses OpenVPN's bundled Easy-RSA at the central point:
+//! certificates are generated at the CP, the IM retrieves them through
+//! its callback, and client subjects are pre-registered so each vRouter
+//! can be assigned a *static* subnet. This module reproduces those
+//! semantics (issuance, registration, revocation, static subnet maps) —
+//! no actual cryptography, which the simulation does not need.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context};
+
+use crate::sim::SimTime;
+
+/// An issued client/server certificate.
+#[derive(Debug, Clone)]
+pub struct Certificate {
+    pub serial: u64,
+    /// X.509 subject CN, e.g. "vrouter-aws" or "standalone-laptop".
+    pub subject: String,
+    pub issued_at: SimTime,
+    pub revoked: bool,
+}
+
+/// Easy-RSA-like CA living on the central point.
+#[derive(Debug, Default)]
+pub struct CertificateAuthority {
+    next_serial: u64,
+    issued: Vec<Certificate>,
+    /// subject → statically assigned /24 (network base address).
+    registrations: HashMap<String, u32>,
+}
+
+impl CertificateAuthority {
+    pub fn new() -> CertificateAuthority {
+        CertificateAuthority::default()
+    }
+
+    /// Issue a certificate for `subject`. Duplicate subjects are rejected
+    /// (one identity per networking element).
+    pub fn issue(&mut self, subject: &str, t: SimTime)
+        -> anyhow::Result<Certificate> {
+        if self.issued.iter().any(|c| c.subject == subject && !c.revoked) {
+            bail!("subject {subject:?} already holds a live certificate");
+        }
+        let cert = Certificate {
+            serial: self.next_serial,
+            subject: subject.to_string(),
+            issued_at: t,
+            revoked: false,
+        };
+        self.next_serial += 1;
+        self.issued.push(cert.clone());
+        Ok(cert)
+    }
+
+    /// Pre-register a client subject with its static subnet, so the CP
+    /// "makes it possible for the orchestration layer to pre-determine
+    /// which client vRouter will be assigned which subnet".
+    pub fn register_client(&mut self, subject: &str, subnet_base: u32)
+        -> anyhow::Result<()> {
+        if !self.has_live_cert(subject) {
+            bail!("cannot register {subject:?}: no live certificate");
+        }
+        if self
+            .registrations
+            .values()
+            .any(|&s| s == subnet_base)
+        {
+            bail!("subnet already registered to another subject");
+        }
+        self.registrations.insert(subject.to_string(), subnet_base);
+        Ok(())
+    }
+
+    /// The static subnet registered for a subject (used by the CP when
+    /// the client connects).
+    pub fn subnet_for(&self, subject: &str) -> Option<u32> {
+        self.registrations.get(subject).copied()
+    }
+
+    /// Authenticate an incoming VPN connection.
+    pub fn verify(&self, subject: &str) -> bool {
+        self.has_live_cert(subject)
+    }
+
+    pub fn revoke(&mut self, subject: &str) -> anyhow::Result<()> {
+        let cert = self
+            .issued
+            .iter_mut()
+            .find(|c| c.subject == subject && !c.revoked)
+            .with_context(|| format!("no live certificate for {subject:?}"))?;
+        cert.revoked = true;
+        self.registrations.remove(subject);
+        Ok(())
+    }
+
+    fn has_live_cert(&self, subject: &str) -> bool {
+        self.issued.iter().any(|c| c.subject == subject && !c.revoked)
+    }
+
+    pub fn issued_count(&self) -> usize {
+        self.issued.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn issue_register_verify() {
+        let mut ca = CertificateAuthority::new();
+        let c = ca.issue("vrouter-aws", SimTime(1.0)).unwrap();
+        assert_eq!(c.serial, 0);
+        assert!(ca.verify("vrouter-aws"));
+        assert!(!ca.verify("impostor"));
+        ca.register_client("vrouter-aws", 0x0A010000).unwrap();
+        assert_eq!(ca.subnet_for("vrouter-aws"), Some(0x0A010000));
+    }
+
+    #[test]
+    fn duplicate_subject_rejected_until_revoked() {
+        let mut ca = CertificateAuthority::new();
+        ca.issue("x", SimTime(0.0)).unwrap();
+        assert!(ca.issue("x", SimTime(1.0)).is_err());
+        ca.revoke("x").unwrap();
+        assert!(!ca.verify("x"));
+        ca.issue("x", SimTime(2.0)).unwrap(); // re-issue after revocation
+        assert!(ca.verify("x"));
+    }
+
+    #[test]
+    fn registration_requires_cert_and_unique_subnet() {
+        let mut ca = CertificateAuthority::new();
+        assert!(ca.register_client("ghost", 1).is_err());
+        ca.issue("a", SimTime(0.0)).unwrap();
+        ca.issue("b", SimTime(0.0)).unwrap();
+        ca.register_client("a", 7).unwrap();
+        assert!(ca.register_client("b", 7).is_err());
+        ca.register_client("b", 8).unwrap();
+    }
+
+    #[test]
+    fn revocation_clears_registration() {
+        let mut ca = CertificateAuthority::new();
+        ca.issue("a", SimTime(0.0)).unwrap();
+        ca.register_client("a", 7).unwrap();
+        ca.revoke("a").unwrap();
+        assert_eq!(ca.subnet_for("a"), None);
+        assert!(ca.revoke("a").is_err());
+    }
+}

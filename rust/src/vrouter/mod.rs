@@ -1,0 +1,505 @@
+//! INDIGO Virtual Router analogue: the multi-site private overlay.
+//!
+//! Reproduces §3.5 of the paper:
+//! * a star topology of OpenVPN tunnels with the **central point (CP)**
+//!   co-located with the cluster front-end (the only public IP),
+//! * one **site vRouter** per additional cloud, routing its local /24
+//!   through the CP,
+//! * **stand-alone nodes** (§3.5.4) that join the VPN directly because
+//!   their site gives no control over the local network,
+//! * **redundant stars** (Fig. 6): backup CPs used as hot standby only,
+//! * the §3.5.6 **performance–security trade-off** via per-cipher costs,
+//! * the future-work **shortest-path extension**: optional direct
+//!   router-to-router tunnels that bypass the CP.
+
+pub mod ca;
+pub mod routing;
+
+pub use ca::{Certificate, CertificateAuthority};
+pub use routing::{build_table, NextHop, RouteTable};
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context};
+
+use crate::netsim::{Cipher, NetId, Network, OverlayHop};
+use crate::sim::SimTime;
+
+/// Role of an overlay element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Designated vRouter accepting VPN connections (has the public IP).
+    CentralPoint,
+    /// Per-site router tunnelling its local network to a CP.
+    SiteRouter,
+    /// A single machine connected straight into the VPN (§3.5.4).
+    Standalone,
+}
+
+/// One overlay element (vRouter instance or standalone client).
+#[derive(Debug, Clone)]
+pub struct Element {
+    pub name: String,
+    pub role: Role,
+    /// Underlay location (cloud site / internet POP).
+    pub location: NetId,
+    /// The /24 this element announces (None for standalone clients).
+    pub subnet_base: Option<u32>,
+    /// Index into `cps` of the CP this element currently uses
+    /// (None for CPs themselves, or when disconnected).
+    pub via_cp: Option<usize>,
+    pub up: bool,
+}
+
+/// Time to establish one OpenVPN client connection (TLS handshake +
+/// config push), seconds.
+pub const VPN_CONNECT_SECS: f64 = 4.0;
+
+/// The overlay network of one hybrid deployment.
+pub struct Overlay {
+    pub cipher: Cipher,
+    pub ca: CertificateAuthority,
+    /// Element names of central points; index 0 is the primary.
+    cps: Vec<String>,
+    elements: HashMap<String, Element>,
+    /// Direct router↔router tunnels (shortest-path extension).
+    pub shortest_path: bool,
+    /// Connection log for reports: (time, element, cp index).
+    pub connection_log: Vec<(SimTime, String, usize)>,
+}
+
+impl Overlay {
+    pub fn new(cipher: Cipher) -> Overlay {
+        Overlay {
+            cipher,
+            ca: CertificateAuthority::new(),
+            cps: Vec::new(),
+            elements: HashMap::new(),
+            shortest_path: false,
+            connection_log: Vec::new(),
+        }
+    }
+
+    /// Install a central point (the first call defines the primary).
+    /// The CP hosts the CA, announces its local subnet, and needs the
+    /// deployment's only public IP.
+    pub fn add_central_point(&mut self, name: &str, location: NetId,
+                             subnet_base: u32, t: SimTime)
+        -> anyhow::Result<()> {
+        if self.elements.contains_key(name) {
+            bail!("element {name:?} already exists");
+        }
+        self.ca.issue(name, t)?;
+        self.elements.insert(name.to_string(), Element {
+            name: name.to_string(),
+            role: Role::CentralPoint,
+            location,
+            subnet_base: Some(subnet_base),
+            via_cp: None,
+            up: true,
+        });
+        self.cps.push(name.to_string());
+        Ok(())
+    }
+
+    /// Connect a per-site vRouter: issue+register its cert with a static
+    /// subnet, then open the tunnel to the primary live CP.
+    /// Returns the connection latency (cert exchange + TLS handshake).
+    pub fn add_site_router(&mut self, name: &str, location: NetId,
+                           subnet_base: u32, t: SimTime)
+        -> anyhow::Result<f64> {
+        if self.elements.contains_key(name) {
+            bail!("element {name:?} already exists");
+        }
+        let cp = self
+            .first_live_cp()
+            .context("no live central point to connect to")?;
+        self.ca.issue(name, t)?;
+        self.ca.register_client(name, subnet_base)?;
+        self.elements.insert(name.to_string(), Element {
+            name: name.to_string(),
+            role: Role::SiteRouter,
+            location,
+            subnet_base: Some(subnet_base),
+            via_cp: Some(cp),
+            up: true,
+        });
+        self.connection_log.push((t, name.to_string(), cp));
+        Ok(VPN_CONNECT_SECS)
+    }
+
+    /// Connect a stand-alone node (no subnet of its own; the VPN client
+    /// runs on the node itself — §3.5.4).
+    pub fn add_standalone(&mut self, name: &str, location: NetId, t: SimTime)
+        -> anyhow::Result<f64> {
+        if self.elements.contains_key(name) {
+            bail!("element {name:?} already exists");
+        }
+        let cp = self
+            .first_live_cp()
+            .context("no live central point to connect to")?;
+        self.ca.issue(name, t)?;
+        self.elements.insert(name.to_string(), Element {
+            name: name.to_string(),
+            role: Role::Standalone,
+            location,
+            subnet_base: None,
+            via_cp: Some(cp),
+            up: true,
+        });
+        self.connection_log.push((t, name.to_string(), cp));
+        Ok(VPN_CONNECT_SECS)
+    }
+
+    /// Remove an element (its VM was terminated).
+    pub fn remove(&mut self, name: &str) -> anyhow::Result<()> {
+        let el = self
+            .elements
+            .remove(name)
+            .with_context(|| format!("no element {name:?}"))?;
+        if el.role == Role::CentralPoint {
+            self.cps.retain(|c| c != name);
+            // Clients re-home just as if the CP had failed.
+            self.rehome_clients_of(name);
+        }
+        if self.ca.verify(name) {
+            let _ = self.ca.revoke(name);
+        }
+        Ok(())
+    }
+
+    fn first_live_cp(&self) -> Option<usize> {
+        self.cps.iter().position(|c| {
+            self.elements.get(c).map(|e| e.up).unwrap_or(false)
+        })
+    }
+
+    /// CP failure: clients fall back to the next live CP (hot backup,
+    /// Fig. 6). Returns the names of clients that re-homed (empty if no
+    /// backup exists — the deployment is then partitioned).
+    pub fn fail_central_point(&mut self, name: &str, t: SimTime)
+        -> anyhow::Result<Vec<String>> {
+        {
+            let el = self
+                .elements
+                .get_mut(name)
+                .with_context(|| format!("no element {name:?}"))?;
+            if el.role != Role::CentralPoint {
+                bail!("{name:?} is not a central point");
+            }
+            el.up = false;
+        }
+        let rehomed = self.rehome_clients_of(name);
+        for n in &rehomed {
+            if let Some(cp) = self.elements.get(n).and_then(|e| e.via_cp) {
+                self.connection_log.push((t, n.clone(), cp));
+            }
+        }
+        Ok(rehomed)
+    }
+
+    /// Bring a failed CP back (clients stay where they are; hot backup
+    /// remains in use until the next failure, matching "would only use
+    /// their connection to the backup CP if connection to the primary
+    /// was lost").
+    pub fn restore_central_point(&mut self, name: &str)
+        -> anyhow::Result<()> {
+        let el = self
+            .elements
+            .get_mut(name)
+            .with_context(|| format!("no element {name:?}"))?;
+        el.up = true;
+        Ok(())
+    }
+
+    fn rehome_clients_of(&mut self, cp_name: &str) -> Vec<String> {
+        let failed_idx = match self.cps.iter().position(|c| c == cp_name) {
+            Some(i) => i,
+            None => return Vec::new(),
+        };
+        let new_cp = self.first_live_cp();
+        let mut rehomed = Vec::new();
+        for el in self.elements.values_mut() {
+            if el.via_cp == Some(failed_idx) {
+                el.via_cp = new_cp;
+                if new_cp.is_some() {
+                    rehomed.push(el.name.clone());
+                }
+            }
+        }
+        rehomed
+    }
+
+    pub fn element(&self, name: &str) -> Option<&Element> {
+        self.elements.get(name)
+    }
+
+    pub fn elements(&self) -> impl Iterator<Item = &Element> {
+        self.elements.values()
+    }
+
+    pub fn cp_names(&self) -> &[String] {
+        &self.cps
+    }
+
+    /// Resolve the overlay path between two elements as a list of element
+    /// names (including endpoints). None if disconnected.
+    pub fn element_path(&self, from: &str, to: &str)
+        -> Option<Vec<String>> {
+        let a = self.elements.get(from)?;
+        let b = self.elements.get(to)?;
+        if !a.up || !b.up {
+            return None;
+        }
+        if from == to {
+            return Some(vec![from.to_string()]);
+        }
+        // Same site and both own routed subnets there → pure LAN.
+        if a.location == b.location {
+            return Some(vec![from.to_string(), to.to_string()]);
+        }
+        // Shortest-path extension: direct tunnel between site routers.
+        if self.shortest_path
+            && a.role != Role::CentralPoint
+            && b.role != Role::CentralPoint
+        {
+            return Some(vec![from.to_string(), to.to_string()]);
+        }
+        // Star routing: a → its CP → b (collapse duplicates when an
+        // endpoint *is* the CP).
+        let cp_of = |e: &Element| -> Option<String> {
+            match e.role {
+                Role::CentralPoint => Some(e.name.clone()),
+                _ => {
+                    let idx = e.via_cp?;
+                    let cp = self.cps.get(idx)?;
+                    self.elements.get(cp).filter(|c| c.up)?;
+                    Some(cp.clone())
+                }
+            }
+        };
+        let cp_a = cp_of(a)?;
+        let cp_b = cp_of(b)?;
+        let mut path = vec![from.to_string()];
+        if cp_a != *from {
+            path.push(cp_a.clone());
+        }
+        if cp_b != cp_a {
+            // Two different CPs: traffic crosses CP-to-CP (redundant star
+            // with split clients).
+            path.push(cp_b.clone());
+        }
+        if *to != *path.last().unwrap() {
+            path.push(to.to_string());
+        }
+        Some(path)
+    }
+
+    /// Are two elements mutually reachable over the overlay?
+    pub fn is_connected(&self, a: &str, b: &str) -> bool {
+        self.element_path(a, b).is_some()
+    }
+
+    /// Turn an element path into netsim overlay hops (tunnelled when the
+    /// hop crosses sites, clear LAN hop otherwise).
+    pub fn hops(&self, net: &Network, path: &[String])
+        -> anyhow::Result<Vec<OverlayHop>> {
+        let mut hops = Vec::new();
+        for w in path.windows(2) {
+            let a = self.elements.get(&w[0])
+                .with_context(|| format!("no element {:?}", w[0]))?;
+            let b = self.elements.get(&w[1])
+                .with_context(|| format!("no element {:?}", w[1]))?;
+            let link = net
+                .link(a.location, b.location)
+                .context("locations unreachable in underlay")?;
+            let tunnel = if a.location == b.location {
+                None
+            } else {
+                Some(self.cipher)
+            };
+            hops.push(OverlayHop { link, tunnel });
+        }
+        Ok(hops)
+    }
+
+    /// End-to-end one-way latency between elements, seconds.
+    pub fn latency(&self, net: &Network, from: &str, to: &str)
+        -> Option<f64> {
+        let path = self.element_path(from, to)?;
+        let hops = self.hops(net, &path).ok()?;
+        Some(hops.iter().map(|h| {
+            h.link.latency_s
+                + h.tunnel.map(|c| c.hop_latency_s()).unwrap_or(0.0)
+        }).sum())
+    }
+
+    /// Steady-state throughput between elements, bytes/s, accounting for
+    /// CP crypto fan-in: the CP shares its cipher capacity across the
+    /// `concurrent_flows` currently traversing it.
+    pub fn throughput(&self, net: &Network, from: &str, to: &str,
+                      concurrent_flows: u32) -> Option<f64> {
+        let path = self.element_path(from, to)?;
+        let hops = self.hops(net, &path).ok()?;
+        let raw = crate::netsim::path_throughput(&hops);
+        let crosses_cp = path.iter().any(|n| {
+            self.elements.get(n).map(|e| e.role == Role::CentralPoint)
+                .unwrap_or(false)
+        }) && path.len() > 2;
+        if crosses_cp && concurrent_flows > 1 {
+            Some(raw / concurrent_flows as f64)
+        } else {
+            Some(raw)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::LinkSpec;
+
+    fn net3() -> (Network, NetId, NetId, NetId) {
+        let mut n = Network::new();
+        let a = n.add_location("cesnet");
+        let b = n.add_location("aws");
+        let c = n.add_location("cloud3");
+        n.set_link(a, b, LinkSpec::transatlantic());
+        n.set_link(a, c, LinkSpec::wan());
+        n.set_link(b, c, LinkSpec::transatlantic());
+        (n, a, b, c)
+    }
+
+    fn star(a: NetId, b: NetId) -> Overlay {
+        let mut o = Overlay::new(Cipher::Aes256Gcm);
+        o.add_central_point("fe", a, 0x0A000000, SimTime(0.0)).unwrap();
+        o.add_site_router("vr-aws", b, 0x0A010000, SimTime(1.0)).unwrap();
+        o
+    }
+
+    #[test]
+    fn star_paths() {
+        let (_, a, b, _) = net3();
+        let o = star(a, b);
+        // Router to CP is a single tunnel hop.
+        assert_eq!(o.element_path("vr-aws", "fe").unwrap(),
+                   vec!["vr-aws".to_string(), "fe".to_string()]);
+        // CP to router likewise.
+        assert_eq!(o.element_path("fe", "vr-aws").unwrap().len(), 2);
+        assert!(o.is_connected("fe", "vr-aws"));
+    }
+
+    #[test]
+    fn cross_site_routers_go_via_cp() {
+        let (_, a, b, c) = net3();
+        let mut o = star(a, b);
+        o.add_site_router("vr-3", c, 0x0A020000, SimTime(2.0)).unwrap();
+        let p = o.element_path("vr-aws", "vr-3").unwrap();
+        assert_eq!(p, vec!["vr-aws".to_string(), "fe".to_string(),
+                           "vr-3".to_string()]);
+    }
+
+    #[test]
+    fn shortest_path_extension_bypasses_cp() {
+        let (_, a, b, c) = net3();
+        let mut o = star(a, b);
+        o.add_site_router("vr-3", c, 0x0A020000, SimTime(2.0)).unwrap();
+        o.shortest_path = true;
+        let p = o.element_path("vr-aws", "vr-3").unwrap();
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn latency_reflects_cipher_and_hops(){
+        let (net, a, b, c) = net3();
+        let mut o = star(a, b);
+        o.add_site_router("vr-3", c, 0x0A020000, SimTime(2.0)).unwrap();
+        let via_cp = o.latency(&net, "vr-aws", "vr-3").unwrap();
+        o.shortest_path = true;
+        let direct = o.latency(&net, "vr-aws", "vr-3").unwrap();
+        assert!(direct < via_cp, "{direct} !< {via_cp}");
+    }
+
+    #[test]
+    fn redundant_star_failover_and_restore() {
+        let (_, a, b, c) = net3();
+        let mut o = Overlay::new(Cipher::Aes128Gcm);
+        o.add_central_point("cp1", a, 0x0A000000, SimTime(0.0)).unwrap();
+        o.add_central_point("cp2", b, 0x0A010000, SimTime(0.0)).unwrap();
+        o.add_site_router("vr-3", c, 0x0A020000, SimTime(1.0)).unwrap();
+        assert_eq!(o.element("vr-3").unwrap().via_cp, Some(0));
+
+        let rehomed = o.fail_central_point("cp1", SimTime(10.0)).unwrap();
+        assert_eq!(rehomed, vec!["vr-3".to_string()]);
+        assert_eq!(o.element("vr-3").unwrap().via_cp, Some(1));
+        assert!(o.is_connected("vr-3", "cp2"));
+
+        // Restore: clients stay on the backup (hot-backup semantics).
+        o.restore_central_point("cp1").unwrap();
+        assert_eq!(o.element("vr-3").unwrap().via_cp, Some(1));
+    }
+
+    #[test]
+    fn single_star_partition_on_cp_failure() {
+        let (_, a, b, _) = net3();
+        let mut o = star(a, b);
+        let rehomed = o.fail_central_point("fe", SimTime(5.0)).unwrap();
+        assert!(rehomed.is_empty());
+        assert!(!o.is_connected("vr-aws", "fe"));
+    }
+
+    #[test]
+    fn standalone_node_connects_directly() {
+        let (net, a, b, c) = net3();
+        let mut o = star(a, b);
+        let secs = o.add_standalone("laptop", c, SimTime(3.0)).unwrap();
+        assert!(secs > 0.0);
+        let p = o.element_path("laptop", "vr-aws").unwrap();
+        assert_eq!(p, vec!["laptop".to_string(), "fe".to_string(),
+                           "vr-aws".to_string()]);
+        assert!(o.latency(&net, "laptop", "fe").unwrap() > 0.0);
+        assert_eq!(o.element("laptop").unwrap().subnet_base, None);
+    }
+
+    #[test]
+    fn duplicate_names_and_missing_cp_rejected() {
+        let (_, a, b, _) = net3();
+        let mut empty = Overlay::new(Cipher::Plain);
+        assert!(empty.add_site_router("vr", b, 1, SimTime(0.0)).is_err());
+        let mut o = star(a, b);
+        assert!(o.add_site_router("vr-aws", b, 2, SimTime(0.0)).is_err());
+        assert!(o.add_central_point("fe", a, 3, SimTime(0.0)).is_err());
+    }
+
+    #[test]
+    fn cp_fan_in_divides_throughput() {
+        let (net, a, b, c) = net3();
+        let mut o = star(a, b);
+        o.add_site_router("vr-3", c, 0x0A020000, SimTime(2.0)).unwrap();
+        let solo = o.throughput(&net, "vr-aws", "vr-3", 1).unwrap();
+        let shared = o.throughput(&net, "vr-aws", "vr-3", 4).unwrap();
+        assert!((solo / shared - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remove_revokes_and_reroutes() {
+        let (_, a, b, _) = net3();
+        let mut o = star(a, b);
+        o.remove("vr-aws").unwrap();
+        assert!(o.element("vr-aws").is_none());
+        assert!(!o.ca.verify("vr-aws"));
+        // Name can be reused after removal.
+        o.add_site_router("vr-aws", b, 0x0A030000, SimTime(9.0)).unwrap();
+    }
+
+    #[test]
+    fn same_site_traffic_stays_on_lan() {
+        let (net, a, b, _) = net3();
+        let mut o = star(a, b);
+        o.add_standalone("node-local", a, SimTime(1.0)).unwrap();
+        let path = o.element_path("node-local", "fe").unwrap();
+        let hops = o.hops(&net, &path).unwrap();
+        assert_eq!(hops.len(), 1);
+        assert!(hops[0].tunnel.is_none(), "LAN hop must not be tunnelled");
+    }
+}

@@ -1,0 +1,217 @@
+//! Explicit routing tables for overlay elements (§3.5: each vRouter
+//! "routes traffic between nodes in the local private network and remote
+//! sites", forwarding everything else to the central point — exactly a
+//! physical MAN router's FIB, which §5 calls out as the design's
+//! deliberately familiar mental model).
+
+use std::collections::BTreeMap;
+
+use crate::cloudsim::ip_to_string;
+
+use super::{Overlay, Role};
+
+/// One routing-table entry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NextHop {
+    /// Deliver on the local L2 segment.
+    Local,
+    /// Send through the tunnel to the named element.
+    Via(String),
+    /// Default route (everything not matched) via the named element.
+    Default(String),
+}
+
+/// A /24-granular routing table for one element.
+#[derive(Debug, Clone, Default)]
+pub struct RouteTable {
+    /// subnet base → next hop.
+    pub routes: BTreeMap<u32, NextHop>,
+    pub default: Option<NextHop>,
+}
+
+impl RouteTable {
+    /// Look up the next hop for a destination IP.
+    pub fn lookup(&self, dst_ip: u32) -> Option<&NextHop> {
+        let subnet = dst_ip & 0xFFFF_FF00;
+        self.routes.get(&subnet).or(self.default.as_ref())
+    }
+
+    /// Render as `ip route`-style text (for reports/debugging).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (subnet, hop) in &self.routes {
+            out.push_str(&format!("{}/24 {}\n", ip_to_string(*subnet),
+                                  render_hop(hop)));
+        }
+        if let Some(d) = &self.default {
+            out.push_str(&format!("default {}\n", render_hop(d)));
+        }
+        out
+    }
+}
+
+fn render_hop(hop: &NextHop) -> String {
+    match hop {
+        NextHop::Local => "dev eth0 (local)".to_string(),
+        NextHop::Via(v) => format!("via tun0 -> {v}"),
+        NextHop::Default(v) => format!("via tun0 -> {v} (default)"),
+    }
+}
+
+/// Build the routing table a given element would install, from the
+/// overlay's current topology.
+///
+/// * central point: a route to every client's registered subnet via that
+///   client's tunnel; its own subnet is local.
+/// * site router: its own subnet local; everything else defaults to its
+///   CP (or, with the shortest-path extension, direct routes to sibling
+///   routers' subnets).
+/// * standalone node: default to its CP.
+pub fn build_table(overlay: &Overlay, element: &str)
+    -> anyhow::Result<RouteTable> {
+    let el = overlay
+        .element(element)
+        .ok_or_else(|| anyhow::anyhow!("no element {element:?}"))?;
+    let mut table = RouteTable::default();
+
+    if let Some(own) = el.subnet_base {
+        table.routes.insert(own, NextHop::Local);
+    }
+
+    match el.role {
+        Role::CentralPoint => {
+            // Routes to every connected client subnet.
+            for other in overlay.elements() {
+                if other.name == el.name || !other.up {
+                    continue;
+                }
+                if let (Some(base), Some(_)) =
+                    (other.subnet_base, other.via_cp)
+                {
+                    table.routes.insert(
+                        base, NextHop::Via(other.name.clone()));
+                }
+            }
+        }
+        Role::SiteRouter => {
+            if overlay.shortest_path {
+                // Direct tunnels to sibling routers (§5 extension).
+                for other in overlay.elements() {
+                    if other.name == el.name
+                        || other.role != Role::SiteRouter
+                        || !other.up
+                    {
+                        continue;
+                    }
+                    if let Some(base) = other.subnet_base {
+                        table.routes.insert(
+                            base, NextHop::Via(other.name.clone()));
+                    }
+                }
+            }
+            if let Some(cp_idx) = el.via_cp {
+                let cp = overlay.cp_names()[cp_idx].clone();
+                table.default = Some(NextHop::Default(cp));
+            }
+        }
+        Role::Standalone => {
+            if let Some(cp_idx) = el.via_cp {
+                let cp = overlay.cp_names()[cp_idx].clone();
+                table.default = Some(NextHop::Default(cp));
+            }
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{Cipher, NetId};
+    use crate::sim::SimTime;
+
+    fn overlay() -> Overlay {
+        let mut ov = Overlay::new(Cipher::Aes256Gcm);
+        ov.add_central_point("fe", NetId(0), 0x0A00_0000, SimTime(0.0))
+            .unwrap();
+        ov.add_site_router("vr-aws", NetId(1), 0x0A01_0000, SimTime(1.0))
+            .unwrap();
+        ov.add_site_router("vr-bari", NetId(2), 0x0A02_0000, SimTime(2.0))
+            .unwrap();
+        ov.add_standalone("laptop", NetId(3), SimTime(3.0)).unwrap();
+        ov
+    }
+
+    #[test]
+    fn cp_routes_every_client_subnet() {
+        let ov = overlay();
+        let t = build_table(&ov, "fe").unwrap();
+        assert_eq!(t.routes[&0x0A00_0000], NextHop::Local);
+        assert_eq!(t.routes[&0x0A01_0000],
+                   NextHop::Via("vr-aws".into()));
+        assert_eq!(t.routes[&0x0A02_0000],
+                   NextHop::Via("vr-bari".into()));
+        // Lookup by host address matches the /24.
+        assert_eq!(t.lookup(0x0A01_0007),
+                   Some(&NextHop::Via("vr-aws".into())));
+    }
+
+    #[test]
+    fn site_router_defaults_to_cp() {
+        let ov = overlay();
+        let t = build_table(&ov, "vr-aws").unwrap();
+        assert_eq!(t.routes[&0x0A01_0000], NextHop::Local);
+        assert_eq!(t.default, Some(NextHop::Default("fe".into())));
+        // Remote subnet falls through to the default.
+        assert_eq!(t.lookup(0x0A02_0005),
+                   Some(&NextHop::Default("fe".into())));
+        let text = t.render();
+        assert!(text.contains("10.1.0.0/24"));
+        assert!(text.contains("default"));
+    }
+
+    #[test]
+    fn shortest_path_installs_direct_routes() {
+        let mut ov = overlay();
+        ov.shortest_path = true;
+        let t = build_table(&ov, "vr-aws").unwrap();
+        assert_eq!(t.routes[&0x0A02_0000],
+                   NextHop::Via("vr-bari".into()));
+        // Default still points at the CP for everything else.
+        assert_eq!(t.default, Some(NextHop::Default("fe".into())));
+    }
+
+    #[test]
+    fn standalone_has_default_only() {
+        let ov = overlay();
+        let t = build_table(&ov, "laptop").unwrap();
+        assert!(t.routes.is_empty());
+        assert_eq!(t.default, Some(NextHop::Default("fe".into())));
+    }
+
+    #[test]
+    fn tables_and_paths_agree() {
+        // Consistency: for every pair (a, b) with subnets, the first hop
+        // in element_path(a, b) equals a's table lookup of b's subnet.
+        let ov = overlay();
+        let named: Vec<&str> = vec!["fe", "vr-aws", "vr-bari"];
+        for a in &named {
+            let table = build_table(&ov, a).unwrap();
+            for b in &named {
+                if a == b {
+                    continue;
+                }
+                let dst = ov.element(b).unwrap().subnet_base.unwrap() + 5;
+                let path = ov.element_path(a, b).unwrap();
+                let expected_next = path[1].clone();
+                let hop = table.lookup(dst).unwrap();
+                let via = match hop {
+                    NextHop::Local => a.to_string(),
+                    NextHop::Via(v) | NextHop::Default(v) => v.clone(),
+                };
+                assert_eq!(via, expected_next,
+                           "{a}->{b}: table {hop:?} vs path {path:?}");
+            }
+        }
+    }
+}

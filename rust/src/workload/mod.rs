@@ -1,0 +1,186 @@
+//! The paper's §4 workload: audio-classification jobs over a subset of
+//! the Urban Sound Datasets (3,676 WAV files, four submission blocks).
+//!
+//! Each job processes one audio file with the DEEP audio classifier. The
+//! first job on a fresh node additionally pays a one-time setup cost
+//! (install udocker, pull the classifier image, create the container —
+//! 4 min 30 s on average in the paper); the classification itself takes
+//! 15–20 s per file.
+//!
+//! [`synth_clip`] generates the synthetic power spectrogram for a file id
+//! — bit-compatible with `python/compile/model.py::synth_clip`, so the
+//! logits computed through the PJRT runtime can be golden-checked against
+//! the values the JAX build path recorded in the artifact manifest.
+
+pub mod staging;
+
+pub use staging::StagingPath;
+
+use crate::sim::SimTime;
+use crate::util::prng::Prng;
+
+/// Model input geometry (must match python/compile/model.py).
+pub const N_FRAMES: usize = 96;
+pub const N_BINS: usize = 257;
+pub const N_CLASSES: usize = 527;
+
+/// Paper constants.
+pub const TOTAL_FILES: u32 = 3676;
+pub const SETUP_SECS_MEAN: f64 = 270.0; // 4 min 30 s
+pub const JOB_SECS_MIN: f64 = 15.0;
+pub const JOB_SECS_MAX: f64 = 20.0;
+
+/// One submission block (Fig. 9).
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub at: SimTime,
+    pub jobs: u32,
+}
+
+/// A workload: blocks of jobs submitted over time.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub blocks: Vec<Block>,
+    /// Mean one-time per-node setup seconds.
+    pub setup_secs: f64,
+}
+
+impl Workload {
+    /// The paper's workload: 3,676 files in four equal blocks with
+    /// waiting time in between (Fig. 9). `scale` shrinks the job count
+    /// for fast tests (1.0 = full paper run).
+    pub fn paper(scale: f64) -> Workload {
+        let total = ((TOTAL_FILES as f64 * scale).round() as u32).max(4);
+        let per = total / 4;
+        let sizes = [per, per, per, total - 3 * per];
+        // Block spacing: the first block lands at t=0 (the paper's
+        // 15:00); later blocks arrive after roughly an hour of work plus
+        // a short gap — early enough to catch nodes in power-off grace.
+        // 70 min apart at full scale: one block takes ~60 min on the
+        // full cluster, so nodes go idle just long enough for CLUES to
+        // begin powering off before the next block rescues most of them
+        // (the paper's 16:05 episode where only vnode-3 actually died).
+        let starts = [0.0, 4200.0 * scale.max(0.02), 8400.0 * scale.max(0.02),
+                      12600.0 * scale.max(0.02)];
+        Workload {
+            blocks: starts
+                .iter()
+                .zip(sizes)
+                .map(|(&at, jobs)| Block { at: SimTime(at), jobs })
+                .collect(),
+            setup_secs: SETUP_SECS_MEAN,
+        }
+    }
+
+    pub fn total_jobs(&self) -> u32 {
+        self.blocks.iter().map(|b| b.jobs).sum()
+    }
+
+    /// Sample the duration of one classification job (15–20 s uniform,
+    /// as reported in §4.1).
+    pub fn sample_job_secs(rng: &mut Prng) -> f64 {
+        rng.uniform(JOB_SECS_MIN, JOB_SECS_MAX)
+    }
+
+    /// Sample the one-time node setup duration (±15% around the mean).
+    pub fn sample_setup_secs(&self, rng: &mut Prng) -> f64 {
+        rng.uniform(self.setup_secs * 0.85, self.setup_secs * 1.15)
+    }
+}
+
+/// Synthetic power spectrogram for `file_id`, flattened row-major
+/// (N_FRAMES × N_BINS). Twin of the Python generator.
+pub fn synth_clip(file_id: u64) -> Vec<f32> {
+    let mut rng = Prng::for_stream(file_id);
+    let f0 = 50.0 + rng.next_f32() as f64 * 450.0;
+    let n_harm = 1 + (rng.next_f32() as f64 * 8.0) as u32;
+    // f64 intermediate then f32 cast, matching numpy's promotion rules.
+    let noise = (0.01 + rng.next_f32() as f64 * 0.05) as f32;
+    let am = 0.5 + rng.next_f32() as f64 * 4.0;
+
+    let mut spec = vec![noise; N_FRAMES * N_BINS];
+    // Per-frame amplitude envelope.
+    let env: Vec<f32> = (0..N_FRAMES)
+        .map(|t| {
+            (0.6 + 0.4 * (std::f64::consts::TAU * am * t as f64
+                / N_FRAMES as f64).sin()) as f32
+        })
+        .collect();
+    for h in 1..=n_harm {
+        let centre = f0 * h as f64 / 8000.0 * (N_BINS as f64 - 1.0);
+        if centre >= N_BINS as f64 {
+            break;
+        }
+        let width = 1.5 + 0.5 * h as f64;
+        for (ti, e) in env.iter().enumerate() {
+            for fi in 0..N_BINS {
+                let d = (fi as f64 - centre) / width;
+                let peak = ((-0.5 * d * d).exp() / h as f64) as f32;
+                spec[ti * N_BINS + fi] += e * peak;
+            }
+        }
+    }
+    spec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_workload_shape() {
+        let w = Workload::paper(1.0);
+        assert_eq!(w.total_jobs(), TOTAL_FILES);
+        assert_eq!(w.blocks.len(), 4);
+        assert_eq!(w.blocks[0].at.0, 0.0);
+        assert!(w.blocks[3].at.0 > w.blocks[2].at.0);
+    }
+
+    #[test]
+    fn scaled_workload() {
+        let w = Workload::paper(0.01);
+        assert!(w.total_jobs() >= 32 && w.total_jobs() <= 40,
+                "{}", w.total_jobs());
+        // Block spacing shrinks with scale.
+        assert!(w.blocks[1].at.0 < 200.0);
+    }
+
+    #[test]
+    fn job_durations_in_paper_range() {
+        let mut rng = Prng::new(1);
+        for _ in 0..1000 {
+            let s = Workload::sample_job_secs(&mut rng);
+            assert!((JOB_SECS_MIN..JOB_SECS_MAX).contains(&s));
+        }
+    }
+
+    #[test]
+    fn setup_duration_around_4m30s() {
+        let w = Workload::paper(1.0);
+        let mut rng = Prng::new(2);
+        let mean: f64 = (0..2000)
+            .map(|_| w.sample_setup_secs(&mut rng))
+            .sum::<f64>() / 2000.0;
+        assert!((mean - 270.0).abs() < 10.0, "mean={mean}");
+    }
+
+    #[test]
+    fn synth_clip_deterministic_distinct_nonnegative() {
+        let a = synth_clip(1);
+        let b = synth_clip(1);
+        let c = synth_clip(2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), N_FRAMES * N_BINS);
+        assert!(a.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn synth_clip_has_harmonic_structure() {
+        // Energy must be concentrated, not flat noise.
+        let a = synth_clip(0);
+        let max = a.iter().cloned().fold(f32::MIN, f32::max);
+        let mean = a.iter().sum::<f32>() / a.len() as f32;
+        assert!(max > 5.0 * mean, "max={max} mean={mean}");
+    }
+}

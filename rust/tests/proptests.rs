@@ -1,0 +1,405 @@
+//! Property-based tests over coordinator invariants, using the in-tree
+//! harness (`evhc::util::proptest`). Each property runs against dozens of
+//! randomized scenarios; failures report the seed for exact reproduction.
+
+use evhc::lrms::{HtCondor, JobState, Lrms, NodeHealth, Slurm};
+use evhc::netsim::{Cipher, Network};
+use evhc::orchestrator::{UpdateOp, UpdateState, WorkflowEngine};
+use evhc::sim::{EventQueue, SimTime};
+use evhc::util::prng::Prng;
+use evhc::util::proptest::{check, check_n};
+use evhc::vrouter::Overlay;
+
+// ---------------------------------------------------------------------
+// DES engine
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_event_queue_dispatches_in_time_order() {
+    check("event-queue-order", |r: &mut Prng| {
+        let n = 1 + r.next_below(200) as usize;
+        (0..n).map(|_| r.uniform(0.0, 1000.0)).collect::<Vec<f64>>()
+    }, |times| {
+        let mut q: EventQueue<usize> = EventQueue::new();
+        for (i, &t) in times.iter().enumerate() {
+            q.schedule_at(SimTime(t), i);
+        }
+        let mut last = f64::NEG_INFINITY;
+        while let Some((t, _)) = q.pop() {
+            if t.0 < last {
+                return Err(format!("time went backwards: {last} -> {}",
+                                   t.0));
+            }
+            last = t.0;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cancelled_events_never_fire() {
+    check("cancel-suppresses", |r: &mut Prng| {
+        let n = 1 + r.next_below(100) as usize;
+        let cancel_mask: Vec<bool> =
+            (0..n).map(|_| r.chance(0.5)).collect();
+        let times: Vec<f64> =
+            (0..n).map(|_| r.uniform(0.0, 100.0)).collect();
+        (times, cancel_mask)
+    }, |(times, mask)| {
+        let mut q: EventQueue<usize> = EventQueue::new();
+        let ids: Vec<_> = times.iter().enumerate()
+            .map(|(i, &t)| q.schedule_at(SimTime(t), i))
+            .collect();
+        for (id, &c) in ids.iter().zip(mask) {
+            if c {
+                q.cancel(*id);
+            }
+        }
+        let mut fired = Vec::new();
+        while let Some((_, i)) = q.pop() {
+            fired.push(i);
+        }
+        for (i, &c) in mask.iter().enumerate() {
+            if c && fired.contains(&i) {
+                return Err(format!("cancelled event {i} fired"));
+            }
+            if !c && !fired.contains(&i) {
+                return Err(format!("live event {i} lost"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// LRMS invariants (both plugins)
+// ---------------------------------------------------------------------
+
+/// Random op sequence on an LRMS; checks conservation + capacity.
+fn lrms_invariants(mk: fn() -> Box<dyn Lrms>) {
+    check_n("lrms-invariants", 48, |r: &mut Prng| {
+        let ops: Vec<u64> = (0..120).map(|_| r.next_u64()).collect();
+        ops
+    }, |ops| {
+        let mut l = mk();
+        let mut t = 0.0;
+        let mut submitted = 0usize;
+        let mut node_i = 0usize;
+        for &op in ops {
+            t += 1.0;
+            match op % 6 {
+                0 => {
+                    l.register_node(&format!("n{node_i}"),
+                                    1 + (op % 3) as u32, SimTime(t));
+                    node_i += 1;
+                }
+                1 => {
+                    l.submit(&format!("j{submitted}"), 1, SimTime(t));
+                    submitted += 1;
+                }
+                2 => {
+                    l.schedule(SimTime(t));
+                }
+                3 => {
+                    // Finish the first running job, if any.
+                    let running = l.jobs().iter()
+                        .find(|j| j.state == JobState::Running)
+                        .map(|j| j.id);
+                    if let Some(id) = running {
+                        l.on_job_finished(id, true, SimTime(t)).unwrap();
+                    }
+                }
+                4 => {
+                    let names: Vec<String> = l.nodes().iter()
+                        .map(|n| n.name.clone()).collect();
+                    if !names.is_empty() {
+                        let k = (op as usize / 7) % names.len();
+                        let _ = l.set_node_health(
+                            &names[k],
+                            if op % 2 == 0 { NodeHealth::Down }
+                            else { NodeHealth::Up },
+                            SimTime(t));
+                    }
+                }
+                _ => {
+                    let names: Vec<String> = l.nodes().iter()
+                        .map(|n| n.name.clone()).collect();
+                    if names.len() > 1 {
+                        let k = (op as usize / 11) % names.len();
+                        let _ = l.deregister_node(&names[k], SimTime(t));
+                    }
+                }
+            }
+            // Invariant 1: no node oversubscribed.
+            for n in l.nodes() {
+                if n.used_slots > n.slots {
+                    return Err(format!("{} oversubscribed", n.name));
+                }
+            }
+            // Invariant 2: job conservation.
+            let jobs = l.jobs();
+            let counted = jobs.iter().filter(|j| matches!(j.state,
+                JobState::Pending | JobState::Running
+                | JobState::Completed | JobState::Failed
+                | JobState::Cancelled)).count();
+            if counted != submitted {
+                return Err(format!("jobs leaked: {counted}/{submitted}"));
+            }
+            // Invariant 3: running jobs sit on Up nodes with capacity.
+            for j in &jobs {
+                if j.state == JobState::Running {
+                    let node = j.node.as_ref()
+                        .ok_or("running job without node")?;
+                    let info = l.nodes().into_iter()
+                        .find(|n| &n.name == node)
+                        .ok_or(format!("running on missing node {node}"))?;
+                    if info.health == NodeHealth::Down {
+                        return Err(format!("running on Down node {node}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slurm_invariants() {
+    lrms_invariants(|| Box::new(Slurm::new()));
+}
+
+#[test]
+fn prop_condor_invariants() {
+    lrms_invariants(|| Box::new(HtCondor::new()));
+}
+
+// ---------------------------------------------------------------------
+// Workflow engine
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_serialized_engine_never_overlaps() {
+    check("engine-serialized", |r: &mut Prng| {
+        (0..60).map(|_| r.next_below(3)).collect::<Vec<u64>>()
+    }, |ops| {
+        let mut e = WorkflowEngine::new(true);
+        let mut t = 0.0;
+        let mut started: Vec<evhc::orchestrator::UpdateId> = Vec::new();
+        for &op in ops {
+            t += 1.0;
+            match op {
+                0 => {
+                    e.submit(UpdateOp::AddWorker {
+                        name: format!("n{t}"),
+                    }, SimTime(t));
+                }
+                1 => {
+                    started.extend(e.startable(SimTime(t)).iter()
+                        .map(|u| u.id));
+                }
+                _ => {
+                    if let Some(id) = started.pop() {
+                        e.complete(id, SimTime(t)).unwrap();
+                    }
+                }
+            }
+            if e.in_progress() > 1 {
+                return Err(format!("{} updates in progress",
+                                   e.in_progress()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_updates_terminal_states_are_final() {
+    check_n("engine-terminal", 32, |r: &mut Prng| {
+        (0..40).map(|_| r.next_below(4)).collect::<Vec<u64>>()
+    }, |ops| {
+        let mut e = WorkflowEngine::new(true);
+        let mut t = 0.0;
+        let mut started = Vec::new();
+        for &op in ops {
+            t += 1.0;
+            match op {
+                0 => {
+                    e.submit(UpdateOp::InitialDeploy, SimTime(t));
+                }
+                1 => started.extend(
+                    e.startable(SimTime(t)).iter().map(|u| u.id)),
+                2 => {
+                    if let Some(id) = started.pop() {
+                        e.complete(id, SimTime(t)).unwrap();
+                    }
+                }
+                _ => {
+                    // Cancel any queued update.
+                    if let Some(id) = e.find_queued(|_| true) {
+                        e.cancel(id, SimTime(t)).unwrap();
+                    }
+                }
+            }
+        }
+        // Terminal updates must have finished_at; queued/in-progress not.
+        for u in e.updates() {
+            match u.state {
+                UpdateState::Done | UpdateState::Cancelled => {
+                    if u.finished_at.is_none() {
+                        return Err(format!("{u:?} terminal w/o time"));
+                    }
+                }
+                _ => {
+                    if u.finished_at.is_some() {
+                        return Err(format!("{u:?} live with finish time"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Overlay routing
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_overlay_full_connectivity_while_cp_alive() {
+    check_n("overlay-connectivity", 48, |r: &mut Prng| {
+        let sites = 2 + r.next_below(6) as usize;
+        let standalone = r.next_below(3) as usize;
+        let shortest = r.chance(0.5);
+        let cipher_i = r.next_below(5) as usize;
+        (sites, standalone, shortest, cipher_i)
+    }, |&(sites, standalone, shortest, cipher_i)| {
+        let mut net = Network::new();
+        let ids: Vec<_> = (0..sites + standalone)
+            .map(|i| net.add_location(&format!("s{i}")))
+            .collect();
+        let mut ov = Overlay::new(Cipher::ALL[cipher_i]);
+        ov.add_central_point("cp", ids[0], 0x0A000000, SimTime(0.0))
+            .map_err(|e| e.to_string())?;
+        let mut names = vec!["cp".to_string()];
+        for (i, &loc) in ids.iter().enumerate().take(sites).skip(1) {
+            let n = format!("vr{i}");
+            ov.add_site_router(&n, loc, 0x0A000000 + ((i as u32) << 8),
+                               SimTime(1.0))
+                .map_err(|e| e.to_string())?;
+            names.push(n);
+        }
+        for (i, &loc) in ids.iter().enumerate().skip(sites) {
+            let n = format!("sa{i}");
+            ov.add_standalone(&n, loc, SimTime(2.0))
+                .map_err(|e| e.to_string())?;
+            names.push(n);
+        }
+        ov.shortest_path = shortest;
+        // Invariant: every pair is connected, and latency is symmetric-ish
+        // (same path length both ways).
+        for a in &names {
+            for b in &names {
+                if !ov.is_connected(a, b) {
+                    return Err(format!("{a} !-> {b}"));
+                }
+                let lab = ov.latency(&net, a, b).unwrap();
+                let lba = ov.latency(&net, b, a).unwrap();
+                if (lab - lba).abs() > 1e-9 {
+                    return Err(format!("asymmetric {a}<->{b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_redundant_star_survives_any_single_cp_failure() {
+    check_n("overlay-failover", 32, |r: &mut Prng| {
+        let routers = 1 + r.next_below(5) as usize;
+        let fail_primary = r.chance(0.5);
+        (routers, fail_primary)
+    }, |&(routers, fail_primary)| {
+        let mut net = Network::new();
+        let mut ov = Overlay::new(Cipher::Aes128Gcm);
+        let l0 = net.add_location("c0");
+        let l1 = net.add_location("c1");
+        ov.add_central_point("cp0", l0, 0x0A000000, SimTime(0.0))
+            .map_err(|e| e.to_string())?;
+        ov.add_central_point("cp1", l1, 0x0A000100, SimTime(0.0))
+            .map_err(|e| e.to_string())?;
+        let mut names = Vec::new();
+        for i in 0..routers {
+            let loc = net.add_location(&format!("s{i}"));
+            let n = format!("vr{i}");
+            ov.add_site_router(&n, loc, 0x0A010000 + ((i as u32) << 8),
+                               SimTime(1.0))
+                .map_err(|e| e.to_string())?;
+            names.push(n);
+        }
+        let victim = if fail_primary { "cp0" } else { "cp1" };
+        ov.fail_central_point(victim, SimTime(10.0))
+            .map_err(|e| e.to_string())?;
+        for a in &names {
+            for b in &names {
+                if !ov.is_connected(a, b) {
+                    return Err(format!(
+                        "{a} !-> {b} after {victim} failure"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Whole-cluster invariants across random scenarios
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_cluster_scenarios_complete_and_respect_bounds() {
+    check_n("cluster-scenarios", 12, |r: &mut Prng| {
+        let scale = r.uniform(0.01, 0.08);
+        let seed = r.next_u64();
+        let serialized = r.chance(0.5);
+        let max_workers = 2 + r.next_below(5) as u32;
+        (scale, seed, serialized, max_workers)
+    }, |&(scale, seed, serialized, max_workers)| {
+        let mut cfg = evhc::cluster::RunConfig::paper_usecase(scale, seed);
+        cfg.serialized_orchestrator = serialized;
+        cfg.template.scalable.max_instances = max_workers;
+        cfg.template.scalable.count =
+            cfg.template.scalable.count.min(max_workers);
+        let total = cfg.workload.total_jobs();
+        let report = evhc::cluster::HybridCluster::new(cfg)
+            .map_err(|e| e.to_string())?
+            .run()
+            .map_err(|e| e.to_string())?;
+        if report.jobs_completed != total {
+            return Err(format!("{}/{total} jobs", report.jobs_completed));
+        }
+        // Worker-count bound: count concurrent worker incarnations from
+        // the recorder (PoweringOn..Off window) at each transition point.
+        let mut alive = std::collections::HashSet::new();
+        for (_, node, s) in &report.recorder.transitions {
+            if !node.starts_with("vnode-") {
+                continue;
+            }
+            use evhc::metrics::DisplayState as D;
+            match s {
+                D::PoweringOn | D::Idle | D::Used | D::PoweringOff
+                | D::Failed => {
+                    alive.insert(node.clone());
+                }
+                D::Off => {
+                    alive.remove(node);
+                }
+            }
+            if alive.len() as u32 > max_workers {
+                return Err(format!(
+                    "{} workers alive > max {max_workers}", alive.len()));
+            }
+        }
+        Ok(())
+    });
+}

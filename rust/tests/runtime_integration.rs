@@ -1,0 +1,100 @@
+//! PJRT runtime integration: artifact loading, golden cross-check against
+//! the JAX build path, batching semantics, and the use case with real
+//! inference on the request path.
+//!
+//! These tests need `make artifacts` to have run; they skip (pass
+//! trivially, with a note) when artifacts are missing so plain
+//! `cargo test` works on a fresh checkout.
+
+use evhc::runtime::{artifacts_available, read_manifest, ModelRuntime};
+use evhc::workload::{synth_clip, N_CLASSES};
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn manifest_lists_both_batch_sizes() {
+    require_artifacts!();
+    let entries = read_manifest(std::path::Path::new("artifacts")).unwrap();
+    let batches: Vec<usize> = entries.iter().map(|e| e.batch).collect();
+    assert!(batches.contains(&1) && batches.contains(&8), "{batches:?}");
+    for e in &entries {
+        assert_eq!(e.n_classes, N_CLASSES);
+        assert!(e.param_count > 500_000);
+    }
+}
+
+#[test]
+fn golden_logit_matches_jax_build_path() {
+    require_artifacts!();
+    let rt = ModelRuntime::load("artifacts", 1).unwrap();
+    let err = rt.verify_golden().unwrap();
+    assert!(err < 1e-3, "|Δ|={err}");
+}
+
+#[test]
+fn batch8_matches_batch1_per_clip() {
+    require_artifacts!();
+    let rt1 = ModelRuntime::load("artifacts", 1).unwrap();
+    let rt8 = ModelRuntime::load("artifacts", 8).unwrap();
+    let clips: Vec<Vec<f32>> = (0..8).map(|i| synth_clip(i)).collect();
+    let batched = rt8.infer(&clips).unwrap();
+    for (i, clip) in clips.iter().enumerate() {
+        let single = rt1.infer(std::slice::from_ref(clip)).unwrap();
+        let max_diff = batched[i]
+            .iter()
+            .zip(&single[0])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "clip {i}: max diff {max_diff}");
+    }
+}
+
+#[test]
+fn partial_batches_are_padded_and_sliced() {
+    require_artifacts!();
+    let rt8 = ModelRuntime::load("artifacts", 8).unwrap();
+    let clips: Vec<Vec<f32>> = (0..3).map(|i| synth_clip(100 + i)).collect();
+    let out = rt8.infer(&clips).unwrap();
+    assert_eq!(out.len(), 3);
+    assert!(out.iter().all(|l| l.len() == N_CLASSES));
+    // Oversized batches are rejected.
+    let too_many: Vec<Vec<f32>> = (0..9).map(|i| synth_clip(i)).collect();
+    assert!(rt8.infer(&too_many).is_err());
+    // Wrong clip length is rejected.
+    assert!(rt8.infer(&[vec![0.0; 7]]).is_err());
+}
+
+#[test]
+fn different_files_give_different_predictions() {
+    require_artifacts!();
+    let rt = ModelRuntime::load("artifacts", 1).unwrap();
+    let a = rt.infer_file(1).unwrap();
+    let b = rt.infer_file(2).unwrap();
+    let top_a = ModelRuntime::top_k(&a, 1)[0].0;
+    let top_b = ModelRuntime::top_k(&b, 1)[0].0;
+    // Logits must differ substantially even if argmax collides.
+    let max_diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff > 0.1, "top_a={top_a} top_b={top_b}");
+}
+
+#[test]
+fn usecase_with_real_inference_on_request_path() {
+    require_artifacts!();
+    let mut cfg = evhc::cluster::RunConfig::paper_usecase(0.02, 3);
+    cfg.inference_every = 5; // every 5th job runs the real model
+    let total = cfg.workload.total_jobs();
+    let report = evhc::cluster::HybridCluster::new(cfg).unwrap()
+        .run().unwrap();
+    assert_eq!(report.jobs_completed, total);
+    assert!(report.inferences_run >= (total / 5) as u64,
+            "{} inferences for {total} jobs", report.inferences_run);
+    assert!(report.inference_wall_secs > 0.0);
+}

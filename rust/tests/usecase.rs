@@ -1,0 +1,179 @@
+//! Integration test: the paper's §4 use case end to end (FIG8 topology,
+//! the burst, the staircase, the failure episode, cost/utilization
+//! shape). Runs at full scale — the DES replays 5h40m in milliseconds.
+
+use evhc::cloudsim::{InjectionPlan, TransientDown};
+use evhc::cluster::{HybridCluster, RunConfig, RunReport};
+use evhc::im::NodeRole;
+use evhc::metrics::DisplayState;
+use evhc::sim::SimTime;
+
+fn paper_run(seed: u64) -> RunReport {
+    let mut cfg = RunConfig::paper_usecase(1.0, seed);
+    cfg.injections = InjectionPlan {
+        transient_downs: vec![TransientDown {
+            node_name: "vnode-5".into(),
+            start: SimTime(4800.0),
+            duration_secs: 300.0,
+        }],
+    };
+    HybridCluster::new(cfg).unwrap().run().unwrap()
+}
+
+#[test]
+fn fig8_topology_realized() {
+    let report = paper_run(42);
+    // FE at CESNET with the deployment's only public-IP role; workers at
+    // both sites; exactly one vRouter VM, at AWS.
+    let fe: Vec<_> = report.per_vm.iter()
+        .filter(|r| r.role == NodeRole::FrontEnd).collect();
+    assert_eq!(fe.len(), 1);
+    assert_eq!(fe[0].site, "CESNET-MCC");
+    let vrouters: Vec<_> = report.per_vm.iter()
+        .filter(|r| r.role == NodeRole::SiteVRouter).collect();
+    assert_eq!(vrouters.len(), 1, "{vrouters:?}");
+    assert_eq!(vrouters[0].site, "AWS");
+    assert!(report.per_vm.iter().any(|r| r.role == NodeRole::WorkerNode
+        && r.site == "CESNET-MCC"));
+    assert!(report.per_vm.iter().any(|r| r.role == NodeRole::WorkerNode
+        && r.site == "AWS"));
+}
+
+#[test]
+fn full_workload_completes_with_paper_shape() {
+    let report = paper_run(42);
+    assert_eq!(report.jobs_completed, 3676);
+
+    // Makespan within ±25% of the paper's 5h40m.
+    let hours = report.makespan.0 / 3600.0;
+    assert!((4.2..7.2).contains(&hours), "makespan {hours:.2} h");
+
+    // Cost magnitude ~ $0.75.
+    assert!((0.3..1.5).contains(&report.total_cost_usd),
+            "cost {}", report.total_cost_usd);
+
+    // Paid utilization in the 50-90% band around the paper's 66%.
+    let util = report.paid_utilization();
+    assert!((0.5..0.9).contains(&util), "util {util}");
+
+    // AWS worker busy hours ~ the paper's 9.7 h.
+    let aws_busy: f64 = report.per_vm.iter()
+        .filter(|r| r.site == "AWS" && r.role == NodeRole::WorkerNode)
+        .map(|r| r.busy_hours)
+        .sum();
+    assert!((6.0..13.0).contains(&aws_busy), "AWS busy {aws_busy:.2} h");
+}
+
+#[test]
+fn aws_deploys_take_about_twenty_minutes() {
+    let report = paper_run(42);
+    let deploys: Vec<f64> = report.deploy_times.iter()
+        .filter(|(n, _, _)| n.starts_with("vnode-"))
+        .map(|(_, r, j)| (j.0 - r.0) / 60.0)
+        .collect();
+    assert!(!deploys.is_empty());
+    let mean = evhc::util::stats::mean(&deploys);
+    assert!((14.0..26.0).contains(&mean),
+            "mean deploy {mean:.1} min (paper ~19-20)");
+}
+
+#[test]
+fn vnode5_failure_and_poweroff_cancellation_episodes() {
+    let report = paper_run(42);
+    assert!(report.recorder.transitions.iter().any(|(_, n, s)|
+        n == "vnode-5" && *s == DisplayState::Failed),
+        "vnode-5 must be marked failed");
+    // Replacement after the failure (jobs remained).
+    let failed_at = report.recorder.transitions.iter()
+        .find(|(_, n, s)| n == "vnode-5" && *s == DisplayState::Failed)
+        .map(|(t, _, _)| t.0)
+        .unwrap();
+    assert!(report.recorder.transitions.iter().any(|(t, n, s)|
+        t.0 > failed_at && n.starts_with("vnode-")
+        && *s == DisplayState::PoweringOn),
+        "a replacement must be powered on after the failure");
+    // At least one pending power-off was cancelled by early job arrival.
+    assert!(report.recorder.milestones.iter().any(|(_, m)|
+        m.contains("cancelled")), "cancellation episode missing");
+}
+
+#[test]
+fn deterministic_across_identical_seeds() {
+    let a = paper_run(7);
+    let b = paper_run(7);
+    assert_eq!(a.jobs_completed, b.jobs_completed);
+    assert_eq!(a.makespan.0, b.makespan.0);
+    assert_eq!(a.total_cost_usd, b.total_cost_usd);
+    assert_eq!(a.recorder.transitions.len(),
+               b.recorder.transitions.len());
+}
+
+#[test]
+fn seeds_vary_but_shape_holds() {
+    for seed in [1, 99, 12345] {
+        let r = paper_run(seed);
+        assert_eq!(r.jobs_completed, 3676, "seed {seed}");
+        let hours = r.makespan.0 / 3600.0;
+        assert!((4.0..8.0).contains(&hours),
+                "seed {seed}: makespan {hours:.2}");
+        assert!(r.total_cost_usd < 2.0, "seed {seed}");
+    }
+}
+
+#[test]
+fn htcondor_template_runs_the_same_scenario() {
+    let mut cfg = RunConfig::paper_usecase(0.1, 5);
+    cfg.template = evhc::tosca::builtin("htcondor").unwrap();
+    let total = cfg.workload.total_jobs();
+    let report = HybridCluster::new(cfg).unwrap().run().unwrap();
+    assert_eq!(report.jobs_completed, total);
+}
+
+#[test]
+fn three_site_federation_spreads_load() {
+    let mut cfg = RunConfig::paper_usecase(0.3, 11);
+    cfg.sites.push(evhc::cloudsim::SiteSpec::opennebula("INFN-BARI"));
+    cfg.slas.push(evhc::orchestrator::Sla {
+        site_name: "INFN-BARI".into(),
+        priority: 1, // same priority as AWS
+        max_instances: Some(2),
+    });
+    // Prefer the free academic site over AWS for the burst.
+    cfg.slas.iter_mut().find(|s| s.site_name == "AWS").unwrap().priority =
+        2;
+    cfg.template.scalable.max_instances = 7;
+    let report = HybridCluster::new(cfg).unwrap().run().unwrap();
+    // Burst must hit INFN-BARI first (higher priority than AWS).
+    assert!(report.per_vm.iter().any(|r| r.site == "INFN-BARI"
+        && r.role == NodeRole::WorkerNode), "{:?}",
+        report.per_vm.iter().map(|r| (&r.name, &r.site))
+            .collect::<Vec<_>>());
+    // And a vRouter was provisioned there too.
+    assert!(report.per_vm.iter().any(|r| r.site == "INFN-BARI"
+        && r.role == NodeRole::SiteVRouter));
+}
+
+#[test]
+fn stochastic_vm_crashes_are_absorbed() {
+    // Aggressive crash rate at AWS: ~1 crash per VM-hour. The elasticity
+    // loop must keep replacing nodes until the workload completes.
+    let mut cfg = RunConfig::paper_usecase(0.1, 21);
+    cfg.sites[1].failure.crash_rate_per_hour = 1.0;
+    let total = cfg.workload.total_jobs();
+    let report = HybridCluster::new(cfg).unwrap().run().unwrap();
+    assert_eq!(report.jobs_completed, total);
+    // At least one crash actually happened at this rate/seed.
+    let crashes = report.recorder.milestones.iter()
+        .filter(|(_, m)| m.contains("crashed"))
+        .count();
+    assert!(crashes > 0, "expected crashes with rate 1.0/h");
+}
+
+#[test]
+fn boot_failures_are_retried() {
+    let mut cfg = RunConfig::paper_usecase(0.05, 33);
+    cfg.sites[1].failure.boot_failure_prob = 0.4;
+    let total = cfg.workload.total_jobs();
+    let report = HybridCluster::new(cfg).unwrap().run().unwrap();
+    assert_eq!(report.jobs_completed, total);
+}
