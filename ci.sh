@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 verify, then the scheduling-scale bench in
+# quick mode (writes BENCH_scale.json at the repo root so every run
+# leaves a perf datapoint behind).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== perf: scale bench (quick mode) =="
+EVHC_SCALE_BENCH_QUICK=1 cargo bench --bench scale
+
+echo "== done; BENCH_scale.json =="
+cat BENCH_scale.json

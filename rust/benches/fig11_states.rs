@@ -42,7 +42,7 @@ fn main() {
     section("paper episode checks");
     // 1. Power-on ramp: at least 3 nodes were simultaneously powering on
     //    at some point after block 1 (the AWS burst).
-    let trans = &report.recorder.transitions;
+    let trans = report.recorder.transitions_named();
     let vnode5_failed = trans.iter().any(|(_, n, s)| n == "vnode-5"
         && *s == DisplayState::Failed);
     println!("  vnode-5 failed episode observed: {vnode5_failed}");

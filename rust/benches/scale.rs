@@ -1,0 +1,233 @@
+//! SCALE — scheduling hot-path throughput at production scale.
+//!
+//! Generates synthetic HTC scenarios (1k/5k/10k nodes spread over 2–8
+//! sites, 100k–1M single/dual-slot jobs in four submission blocks),
+//! replays them through the discrete-event queue against the LRMS core,
+//! and reports events/sec and ms per scheduling sweep. The 5k-node
+//! scenario is run on both the indexed scheduler and the naive reference
+//! scheduler *in the same process* so the speedup number is apples to
+//! apples; results are written to `BENCH_scale.json` at the repo root so
+//! future PRs accumulate a perf trajectory.
+//!
+//!     cargo bench --bench scale              # full suite (~10k nodes)
+//!     EVHC_SCALE_BENCH_QUICK=1 cargo bench --bench scale   # CI mode
+
+use std::time::Instant;
+
+use evhc::api::json::Json;
+use evhc::lrms::core::{BatchCore, Placement};
+use evhc::lrms::JobId;
+use evhc::sim::{EventQueue, SimTime};
+use evhc::util::bench::section;
+use evhc::util::prng::Prng;
+
+struct Scenario {
+    name: &'static str,
+    nodes: u32,
+    sites: u32,
+    jobs: u32,
+    slots_per_node: u32,
+    /// Run the naive reference scheduler too (skipped at 10k nodes —
+    /// O(jobs·nodes) makes it minutes-long there).
+    with_naive: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Measured {
+    events: u64,
+    wall_s: f64,
+    events_per_sec: f64,
+    ms_per_tick: f64,
+    completed: u32,
+}
+
+enum Ev {
+    SubmitBlock(u32),
+    JobDone(JobId),
+}
+
+/// Replay one synthetic scenario to completion on `core`.
+fn run_scenario(core: &mut BatchCore, sc: &Scenario, seed: u64)
+    -> Measured {
+    let mut rng = Prng::new(seed);
+    for i in 0..sc.nodes {
+        let site = i % sc.sites;
+        core.register_node(&format!("s{site}-wn-{i}"), sc.slots_per_node,
+                           SimTime(0.0));
+    }
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let blocks = 4u32;
+    for b in 0..blocks {
+        let n = sc.jobs / blocks
+            + if b == 0 { sc.jobs % blocks } else { 0 };
+        q.schedule_at(SimTime(b as f64 * 900.0), Ev::SubmitBlock(n));
+    }
+    let mut completed = 0u32;
+    let mut ticks = 0u64;
+    let mut tick_secs = 0.0;
+    let wall = Instant::now();
+    while let Some((t, ev)) = q.pop() {
+        match ev {
+            Ev::SubmitBlock(n) => {
+                for i in 0..n {
+                    // Mixed 1/2-slot jobs; empty name → no allocation.
+                    core.submit("", 1 + (i % 2), t);
+                }
+            }
+            Ev::JobDone(j) => {
+                let _ = core.on_job_finished(j, true, t);
+                completed += 1;
+            }
+        }
+        let t0 = Instant::now();
+        let assigned = core.schedule(t);
+        tick_secs += t0.elapsed().as_secs_f64();
+        ticks += 1;
+        for (job, _node) in assigned {
+            q.schedule_in(15.0 + rng.next_f64() * 5.0, Ev::JobDone(job));
+        }
+        if completed >= sc.jobs {
+            break;
+        }
+    }
+    let wall_s = wall.elapsed().as_secs_f64();
+    let events = q.dispatched();
+    Measured {
+        events,
+        wall_s,
+        events_per_sec: events as f64 / wall_s.max(1e-9),
+        ms_per_tick: tick_secs * 1e3 / ticks.max(1) as f64,
+        completed,
+    }
+}
+
+fn measured_json(m: &Measured) -> Json {
+    Json::Object(vec![
+        ("events".into(), Json::Num(m.events as f64)),
+        ("wall_s".into(), Json::Num(m.wall_s)),
+        ("events_per_sec".into(), Json::Num(m.events_per_sec)),
+        ("ms_per_tick".into(), Json::Num(m.ms_per_tick)),
+        ("completed".into(), Json::Num(m.completed as f64)),
+    ])
+}
+
+fn report_line(label: &str, m: &Measured) {
+    println!(
+        "  {label:<18} {:>12.0} ev/s  {:>9.4} ms/tick  \
+         ({} events, {:.2}s wall, {} jobs)",
+        m.events_per_sec, m.ms_per_tick, m.events, m.wall_s, m.completed
+    );
+}
+
+fn main() {
+    let quick = std::env::var("EVHC_SCALE_BENCH_QUICK").is_ok();
+    let scenarios: Vec<Scenario> = if quick {
+        vec![
+            Scenario { name: "1k-nodes-20k-jobs", nodes: 1000, sites: 2,
+                       jobs: 20_000, slots_per_node: 2, with_naive: true },
+        ]
+    } else {
+        vec![
+            Scenario { name: "1k-nodes-100k-jobs", nodes: 1000, sites: 2,
+                       jobs: 100_000, slots_per_node: 2,
+                       with_naive: true },
+            Scenario { name: "5k-nodes-200k-jobs", nodes: 5000, sites: 4,
+                       jobs: 200_000, slots_per_node: 2,
+                       with_naive: true },
+            Scenario { name: "10k-nodes-1M-jobs", nodes: 10_000, sites: 8,
+                       jobs: 1_000_000, slots_per_node: 4,
+                       with_naive: false },
+        ]
+    };
+
+    section(&format!(
+        "SCALE: scheduling hot path ({} mode)",
+        if quick { "quick" } else { "full" }
+    ));
+
+    let mut rows = Vec::new();
+    for sc in &scenarios {
+        println!("\n--- {} ({} sites, {} slots/node) ---",
+                 sc.name, sc.sites, sc.slots_per_node);
+        let mut indexed_core = BatchCore::new(Placement::PackFirstFit);
+        let indexed = run_scenario(&mut indexed_core, sc, 7);
+        assert_eq!(indexed.completed, sc.jobs,
+                   "indexed run must drain the workload");
+        report_line("indexed", &indexed);
+
+        let naive = if sc.with_naive {
+            let mut naive_core = BatchCore::new_naive(Placement::PackFirstFit);
+            let m = run_scenario(&mut naive_core, sc, 7);
+            assert_eq!(m.completed, sc.jobs,
+                       "naive run must drain the workload");
+            report_line("naive-reference", &m);
+            Some(m)
+        } else {
+            println!("  naive-reference    skipped (O(jobs x nodes) \
+                      at this size)");
+            None
+        };
+
+        let speedup = naive
+            .map(|n| indexed.events_per_sec / n.events_per_sec.max(1e-9));
+        if let Some(s) = speedup {
+            println!("  speedup            {s:>11.1}x events/sec \
+                      (indexed vs naive)");
+        }
+
+        let mut fields = vec![
+            ("name".into(), Json::Str(sc.name.into())),
+            ("nodes".into(), Json::Num(sc.nodes as f64)),
+            ("sites".into(), Json::Num(sc.sites as f64)),
+            ("jobs".into(), Json::Num(sc.jobs as f64)),
+            ("slots_per_node".into(),
+             Json::Num(sc.slots_per_node as f64)),
+            ("indexed".into(), measured_json(&indexed)),
+        ];
+        if let Some(n) = &naive {
+            fields.push(("naive".into(), measured_json(n)));
+        }
+        if let Some(s) = speedup {
+            fields.push(("speedup_events_per_sec".into(), Json::Num(s)));
+        }
+        rows.push(Json::Object(fields));
+    }
+
+    // Spread policy spot-check so both index structures stay honest.
+    section("SCALE: SpreadMostFree spot-check");
+    let sc = Scenario {
+        name: "spread-2k-50k",
+        nodes: 2000,
+        sites: 4,
+        jobs: if quick { 10_000 } else { 50_000 },
+        slots_per_node: 2,
+        with_naive: true,
+    };
+    let mut spread_core = BatchCore::new(Placement::SpreadMostFree);
+    let spread = run_scenario(&mut spread_core, &sc, 11);
+    report_line("indexed-spread", &spread);
+    let mut spread_naive_core = BatchCore::new_naive(Placement::SpreadMostFree);
+    let spread_naive = run_scenario(&mut spread_naive_core, &sc, 11);
+    report_line("naive-spread", &spread_naive);
+    rows.push(Json::Object(vec![
+        ("name".into(), Json::Str(sc.name.into())),
+        ("nodes".into(), Json::Num(sc.nodes as f64)),
+        ("sites".into(), Json::Num(sc.sites as f64)),
+        ("jobs".into(), Json::Num(sc.jobs as f64)),
+        ("slots_per_node".into(), Json::Num(sc.slots_per_node as f64)),
+        ("indexed".into(), measured_json(&spread)),
+        ("naive".into(), measured_json(&spread_naive)),
+        ("speedup_events_per_sec".into(),
+         Json::Num(spread.events_per_sec
+                   / spread_naive.events_per_sec.max(1e-9))),
+    ]));
+
+    let doc = Json::Object(vec![
+        ("bench".into(), Json::Str("scale".into())),
+        ("quick".into(), Json::Bool(quick)),
+        ("scenarios".into(), Json::Array(rows)),
+    ]);
+    std::fs::write("BENCH_scale.json", doc.render() + "\n")
+        .expect("write BENCH_scale.json");
+    println!("\nwrote BENCH_scale.json");
+}

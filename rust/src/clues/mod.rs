@@ -11,9 +11,15 @@
 //! * a node whose LRMS state reads *down* for consecutive polls is marked
 //!   **failed** and powered off "to avoid unnecessary costs by failed
 //!   VMs", then powered on again if jobs remain (the vnode-5 cycle).
+//!
+//! Tracking is keyed by interned [`NodeId`]s sharing the cluster-wide
+//! interner, and the monitor tick iterates allocation-light
+//! [`NodeStat`] snapshots — a 10k-node tick allocates no `String`s
+//! except for the (rare) emitted actions.
 
 use std::collections::HashMap;
 
+use crate::ids::{NodeId, NodeNames};
 use crate::lrms::{Lrms, NodeHealth};
 use crate::sim::SimTime;
 
@@ -61,7 +67,8 @@ pub enum PowerState {
     Off,
 }
 
-/// Decisions CLUES emits; the cluster world executes them.
+/// Decisions CLUES emits; the cluster world executes them. Actions carry
+/// names (they cross into the orchestrator, whose updates are named).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Action {
     /// Ask the orchestrator for `count` new worker nodes.
@@ -84,27 +91,41 @@ struct Tracked {
 /// The elasticity engine.
 pub struct Clues {
     pub cfg: CluesConfig,
-    nodes: HashMap<String, Tracked>,
+    names: NodeNames,
+    nodes: HashMap<NodeId, Tracked>,
     /// Decision log for reports: (t, action).
     pub log: Vec<(SimTime, Action)>,
 }
 
 impl Clues {
     pub fn new(cfg: CluesConfig) -> Clues {
-        Clues { cfg, nodes: HashMap::new(), log: Vec::new() }
+        Clues::with_names(cfg, NodeNames::new())
+    }
+
+    /// Share the cluster-wide interner so ids line up with the LRMS.
+    pub fn with_names(cfg: CluesConfig, names: NodeNames) -> Clues {
+        Clues { cfg, names, nodes: HashMap::new(), log: Vec::new() }
     }
 
     /// Register a node under CLUES management (e.g. initial workers, or
     /// a node the orchestrator just started provisioning).
     pub fn track(&mut self, name: &str, state: PowerState) {
-        self.nodes.insert(name.to_string(), Tracked {
-            state,
-            consecutive_down: 0,
-        });
+        let id = self.names.intern(name);
+        self.track_id(id, state);
+    }
+
+    pub fn track_id(&mut self, id: NodeId, state: PowerState) {
+        self.nodes.insert(id, Tracked { state, consecutive_down: 0 });
     }
 
     pub fn set_state(&mut self, name: &str, state: PowerState) {
-        if let Some(n) = self.nodes.get_mut(name) {
+        if let Some(id) = self.names.get(name) {
+            self.set_state_id(id, state);
+        }
+    }
+
+    pub fn set_state_id(&mut self, id: NodeId, state: PowerState) {
+        if let Some(n) = self.nodes.get_mut(&id) {
             n.state = state;
             if state == PowerState::On {
                 n.consecutive_down = 0;
@@ -113,11 +134,21 @@ impl Clues {
     }
 
     pub fn state(&self, name: &str) -> Option<PowerState> {
-        self.nodes.get(name).map(|n| n.state)
+        self.names.get(name).and_then(|id| self.state_id(id))
+    }
+
+    pub fn state_id(&self, id: NodeId) -> Option<PowerState> {
+        self.nodes.get(&id).map(|n| n.state)
     }
 
     pub fn forget(&mut self, name: &str) {
-        self.nodes.remove(name);
+        if let Some(id) = self.names.get(name) {
+            self.forget_id(id);
+        }
+    }
+
+    pub fn forget_id(&mut self, id: NodeId) {
+        self.nodes.remove(&id);
     }
 
     fn count(&self, state: PowerState) -> u32 {
@@ -143,24 +174,26 @@ impl Clues {
         is_down: &dyn Fn(&str) -> bool,
     ) -> Vec<Action> {
         let mut actions = Vec::new();
-        let nodes = lrms.nodes();
+        let stats = lrms.node_stats();
 
         // --- 1. Failure detection on On nodes ----------------------------
-        for info in &nodes {
-            let Some(tracked) = self.nodes.get_mut(&info.name) else {
+        for s in &stats {
+            let Some(tracked) = self.nodes.get_mut(&s.id) else {
                 continue;
             };
             if tracked.state != PowerState::On {
                 continue;
             }
-            let down = is_down(&info.name)
-                || info.health == NodeHealth::Down;
+            // Only consult the (possibly expensive) monitor override for
+            // tracked On nodes — this runs per node per tick.
+            let down = s.health == NodeHealth::Down
+                || self.names.with_name(s.id, |n| is_down(n));
             if down {
                 tracked.consecutive_down += 1;
                 if tracked.consecutive_down >= self.cfg.down_polls_to_fail {
                     tracked.state = PowerState::Failed;
                     actions.push(Action::MarkFailed {
-                        node: info.name.clone(),
+                        node: self.names.name(s.id),
                     });
                 }
             } else {
@@ -172,28 +205,36 @@ impl Clues {
 
         // --- 2. Cancel pending power-offs when work arrives ---------------
         if pending > 0 {
-            for (name, tracked) in self.nodes.iter_mut() {
-                if tracked.state == PowerState::PoweringOff {
-                    actions.push(Action::CancelPowerOff {
-                        node: name.clone(),
-                    });
-                    // The world confirms the cancellation (set_state(On))
-                    // only if the orchestrator could still revoke it.
-                }
+            let mut offs: Vec<NodeId> = self
+                .nodes
+                .iter()
+                .filter(|(_, tr)| tr.state == PowerState::PoweringOff)
+                .map(|(&id, _)| id)
+                .collect();
+            offs.sort(); // deterministic action order
+            for id in offs {
+                actions.push(Action::CancelPowerOff {
+                    node: self.names.name(id),
+                });
+                // The world confirms the cancellation (set_state(On))
+                // only if the orchestrator could still revoke it.
             }
         }
 
         // --- 3. Scale up ---------------------------------------------------
-        let free_slots: u32 = nodes
-            .iter()
-            .filter(|n| {
-                n.health == NodeHealth::Up
-                    && !is_down(&n.name)
-                    && self.nodes.get(&n.name).map(|t| t.state
-                        == PowerState::On).unwrap_or(false)
-            })
-            .map(|n| n.slots - n.used_slots)
-            .sum();
+        let mut free_slots: u32 = 0;
+        for s in &stats {
+            if s.health == NodeHealth::Up
+                && self
+                    .nodes
+                    .get(&s.id)
+                    .map(|tr| tr.state == PowerState::On)
+                    .unwrap_or(false)
+                && !self.names.with_name(s.id, |n| is_down(n))
+            {
+                free_slots += s.slots - s.used_slots;
+            }
+        }
         let incoming = self.count(PowerState::PoweringOn)
             * self.cfg.slots_per_worker;
         // Nodes with a cancel in flight will come back too.
@@ -218,11 +259,13 @@ impl Clues {
 
         // --- 4. Scale down ---------------------------------------------------
         if pending == 0 {
-            let mut on_workers: Vec<&crate::lrms::NodeInfo> = nodes
+            let mut on_workers: Vec<&crate::lrms::NodeStat> = stats
                 .iter()
-                .filter(|n| {
-                    self.nodes.get(&n.name).map(|t| t.state
-                        == PowerState::On).unwrap_or(false)
+                .filter(|s| {
+                    self.nodes
+                        .get(&s.id)
+                        .map(|tr| tr.state == PowerState::On)
+                        .unwrap_or(false)
                 })
                 .collect();
             // Power off the longest-idle nodes first.
@@ -234,20 +277,20 @@ impl Clues {
             let mut removable = self
                 .active_workers()
                 .saturating_sub(self.cfg.min_workers);
-            for info in on_workers {
+            for s in on_workers {
                 if removable == 0 {
                     break;
                 }
-                let idle_long_enough = info
+                let idle_long_enough = s
                     .idle_since
-                    .map(|s| t.0 - s.0 >= self.cfg.idle_timeout_s)
+                    .map(|x| t.0 - x.0 >= self.cfg.idle_timeout_s)
                     .unwrap_or(false);
-                if info.used_slots == 0 && idle_long_enough {
-                    if let Some(tr) = self.nodes.get_mut(&info.name) {
+                if s.used_slots == 0 && idle_long_enough {
+                    if let Some(tr) = self.nodes.get_mut(&s.id) {
                         tr.state = PowerState::PoweringOff;
                     }
                     actions.push(Action::PowerOff {
-                        node: info.name.clone(),
+                        node: self.names.name(s.id),
                     });
                     removable -= 1;
                 }
@@ -264,6 +307,7 @@ impl Clues {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ids::NodeNames;
     use crate::lrms::{Lrms, Slurm};
 
     fn no_flap(_: &str) -> bool {
@@ -271,12 +315,13 @@ mod tests {
     }
 
     fn setup(workers: &[&str]) -> (Slurm, Clues) {
-        let mut lrms = Slurm::new();
-        let mut clues = Clues::new(CluesConfig {
+        let names = NodeNames::new();
+        let mut lrms = Slurm::with_names(names.clone());
+        let mut clues = Clues::with_names(CluesConfig {
             idle_timeout_s: 300.0,
             max_workers: 5,
             ..CluesConfig::default()
-        });
+        }, names);
         for w in workers {
             lrms.register_node(w, 1, SimTime(0.0));
             clues.track(w, PowerState::On);
@@ -392,5 +437,16 @@ mod tests {
         lrms.schedule(SimTime(0.0));
         let actions = clues.tick(SimTime(60.0), &lrms, &no_flap);
         assert!(actions.is_empty(), "at max: {actions:?}");
+    }
+
+    #[test]
+    fn id_and_name_apis_agree() {
+        let (_lrms, mut clues) = setup(&["vnode-1"]);
+        let id = clues.names.get("vnode-1").unwrap();
+        assert_eq!(clues.state_id(id), Some(PowerState::On));
+        clues.set_state_id(id, PowerState::PoweringOff);
+        assert_eq!(clues.state("vnode-1"), Some(PowerState::PoweringOff));
+        clues.forget_id(id);
+        assert_eq!(clues.state("vnode-1"), None);
     }
 }

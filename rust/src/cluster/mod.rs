@@ -19,6 +19,12 @@
 //! Everything advances on the discrete-event queue of [`crate::sim`], so
 //! a 5h40m run replays in milliseconds; the PJRT inference calls are real
 //! compute, sampled per job according to [`RunConfig::inference_every`].
+//!
+//! Scale architecture: one [`NodeNames`] interner is shared by the LRMS,
+//! CLUES and the metrics recorder, and every per-event structure (node
+//! runtime map, events, accounting indices) is keyed by the dense
+//! [`NodeId`] — the job-completion hot path performs no string hashing,
+//! cloning, or O(nodes) scans.
 
 use std::collections::HashMap;
 
@@ -26,6 +32,7 @@ use anyhow::Context;
 
 use crate::clues::{Action, Clues, CluesConfig, PowerState};
 use crate::cloudsim::{CloudSite, SiteSpec, VmId};
+use crate::ids::{NodeId, NodeNames};
 use crate::im::{Im, NodeRole};
 use crate::lrms::{HtCondor, JobId, Lrms, NodeHealth, Slurm};
 use crate::metrics::{DisplayState, Recorder};
@@ -82,7 +89,8 @@ impl RunConfig {
     }
 }
 
-/// Simulation events.
+/// Simulation events. Node references are interned ids; names are
+/// resolved only when a milestone or report line is rendered.
 #[derive(Debug, Clone)]
 pub enum Ev {
     /// Kick off the initial deployment (FE + initial workers).
@@ -90,25 +98,25 @@ pub enum Ev {
     /// Submit workload block `i`.
     SubmitBlock(usize),
     /// A VM finished booting.
-    VmBooted { site: usize, vm: VmId, node: String, failed: bool },
+    VmBooted { site: usize, vm: VmId, node: NodeId, failed: bool },
     /// Contextualization finished for a node.
-    CtxDone { node: String },
+    CtxDone { node: NodeId },
     /// A job finished on a node. `gen` is the job's requeue count at
     /// scheduling time, so stale completions from executions that were
     /// requeued away (node failure) are recognized and dropped.
-    JobDone { job: JobId, node: String, gen: u32 },
+    JobDone { job: JobId, node: NodeId, gen: u32 },
     /// CLUES monitor tick.
     CluesTick,
     /// The workflow engine may start queued updates.
     OrchestratorPump,
     /// Provider finished terminating a node's VM.
-    TerminationDone { node: String, update: Option<UpdateId> },
+    TerminationDone { node: NodeId, update: Option<UpdateId> },
     /// A running VM hard-crashed (stochastic failure injection).
-    VmCrashed { site: usize, vm: VmId, node: String },
+    VmCrashed { site: usize, vm: VmId, node: NodeId },
 }
 
 /// Runtime info per deployment node.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 struct NodeRt {
     site: usize,
     vm: VmId,
@@ -180,20 +188,20 @@ pub struct HybridCluster {
     pub engine: WorkflowEngine,
     pub im: Im,
     pub recorder: Recorder,
-    nodes: HashMap<String, NodeRt>,
-    /// update id → worker name being added/removed.
-    update_nodes: HashMap<u64, (UpdateOp, String)>,
-    /// node name → in-progress AddWorker update to complete on join.
-    update_for_node: HashMap<String, UpdateId>,
-    /// node name → contextualization duration (sampled at provision).
-    ctx_secs: HashMap<String, f64>,
+    /// Cluster-wide name⇄id interner (shared with lrms/clues/recorder).
+    names: NodeNames,
+    nodes: HashMap<NodeId, NodeRt>,
+    /// node → in-progress AddWorker update to complete on join.
+    update_for_node: HashMap<NodeId, UpdateId>,
+    /// node → contextualization duration (sampled at provision).
+    ctx_secs: HashMap<NodeId, f64>,
     /// Permanent archive of (node, requested, joined) — survives node
     /// termination, unlike the live `nodes` map.
     deploy_log: Vec<(String, SimTime, SimTime)>,
     /// One accounting record per VM incarnation (ledger row index).
     vm_records: Vec<VmRec>,
-    /// node name → index into vm_records for the live incarnation.
-    live_record: HashMap<String, usize>,
+    /// node → index into vm_records for the live incarnation.
+    live_record: HashMap<NodeId, usize>,
     /// jobs submitted so far / completed.
     jobs_submitted: u32,
     jobs_completed: u32,
@@ -249,16 +257,20 @@ impl HybridCluster {
                 net.set_link(a, b, spec);
             }
         }
+        // One interner shared by every node-identity consumer.
+        let names = NodeNames::new();
         let lrms: Box<dyn Lrms> = match cfg.template.lrms {
-            LrmsKind::Slurm => Box::new(Slurm::new()),
-            LrmsKind::HtCondor => Box::new(HtCondor::new()),
+            LrmsKind::Slurm => Box::new(Slurm::with_names(names.clone())),
+            LrmsKind::HtCondor => {
+                Box::new(HtCondor::with_names(names.clone()))
+            }
         };
-        let clues = Clues::new(CluesConfig {
+        let clues = Clues::with_names(CluesConfig {
             idle_timeout_s: cfg.template.idle_timeout_s,
             min_workers: cfg.template.scalable.min_instances,
             max_workers: cfg.template.scalable.max_instances,
             ..CluesConfig::default()
-        });
+        }, names.clone());
         let overlay = Overlay::new(cfg.template.vpn_cipher);
         let engine = WorkflowEngine::new(cfg.serialized_orchestrator);
         let im = Im::new(cfg.seed);
@@ -277,9 +289,9 @@ impl HybridCluster {
             clues,
             engine,
             im,
-            recorder: Recorder::new(),
+            recorder: Recorder::with_names(names.clone()),
+            names,
             nodes: HashMap::new(),
-            update_nodes: HashMap::new(),
             update_for_node: HashMap::new(),
             ctx_secs: HashMap::new(),
             deploy_log: Vec::new(),
@@ -389,6 +401,7 @@ impl HybridCluster {
     /// Provision one node and schedule its boot completion.
     fn provision(&mut self, q: &mut EventQueue<Ev>, site: usize, name: &str,
                  role: NodeRole, t: SimTime) -> anyhow::Result<()> {
+        let id = self.names.intern(name);
         let itype = match role {
             NodeRole::FrontEnd => self.worker_instance_type(site),
             NodeRole::WorkerNode => self.worker_instance_type(site),
@@ -408,7 +421,7 @@ impl HybridCluster {
             self.cfg.template.lrms,
             t,
         )?;
-        self.nodes.insert(name.to_string(), NodeRt {
+        self.nodes.insert(id, NodeRt {
             site,
             vm: p.vm,
             role,
@@ -416,7 +429,7 @@ impl HybridCluster {
             requested_at: t,
             joined_at: None,
         });
-        self.live_record.insert(name.to_string(), self.vm_records.len());
+        self.live_record.insert(id, self.vm_records.len());
         self.vm_records.push(VmRec {
             name: name.to_string(),
             site,
@@ -424,15 +437,15 @@ impl HybridCluster {
             ledger_idx: self.sites[site].ledger.entries.len() - 1,
             busy_secs: 0.0,
         });
-        self.recorder.node_state(t, name, DisplayState::PoweringOn);
+        self.recorder.node_state_id(t, id, DisplayState::PoweringOn);
         q.schedule_in(net_secs + p.boot_secs, Ev::VmBooted {
             site,
             vm: p.vm,
-            node: name.to_string(),
+            node: id,
             failed: p.boot_fails,
         });
         // Stash ctx duration for CtxDone scheduling at boot time.
-        self.ctx_secs.insert(name.to_string(), p.ctx_secs);
+        self.ctx_secs.insert(id, p.ctx_secs);
         Ok(())
     }
 
@@ -441,7 +454,7 @@ impl HybridCluster {
         if site == self.fe_site && self.fe_ready {
             return true;
         }
-        self.nodes.iter().any(|(_, rt)| {
+        self.nodes.values().any(|rt| {
             rt.site == site
                 && rt.role == NodeRole::SiteVRouter
                 && rt.joined_at.is_some()
@@ -454,11 +467,12 @@ impl HybridCluster {
 
     /// Lowest unused worker index → "vnode-N" (names are reused after
     /// termination, matching the paper's vnode-5 power-off/on cycle).
-    fn next_worker_name(&self) -> String {
+    fn next_worker(&self) -> (NodeId, String) {
         for i in 1.. {
             let name = format!("vnode-{i}");
-            if !self.nodes.contains_key(&name) {
-                return name;
+            let id = self.names.intern(&name);
+            if !self.nodes.contains_key(&id) {
+                return (id, name);
             }
         }
         unreachable!()
@@ -502,7 +516,8 @@ impl HybridCluster {
         // VM of quota), then the worker.
         if site != self.fe_site && !self.site_has_router(site) {
             let vr = self.vrouter_name(site);
-            if !self.nodes.contains_key(&vr) {
+            let vr_id = self.names.intern(&vr);
+            if !self.nodes.contains_key(&vr_id) {
                 if let Err(e) = self.provision(q, site, &vr,
                                                NodeRole::SiteVRouter, t) {
                     self.recorder.milestone(t, format!(
@@ -540,8 +555,9 @@ impl HybridCluster {
         self.recorder.milestone(t, format!(
             "initial cluster ready ({} workers) — workload timeline t0",
             self.cfg.template.scalable.count));
-        for (i, b) in self.cfg.workload.blocks.clone().iter().enumerate() {
-            q.schedule_at(SimTime(t.0 + b.at.0), Ev::SubmitBlock(i));
+        for i in 0..self.cfg.workload.blocks.len() {
+            let at = self.cfg.workload.blocks[i].at;
+            q.schedule_at(SimTime(t.0 + at.0), Ev::SubmitBlock(i));
         }
         if !self.clues_ticking {
             self.clues_ticking = true;
@@ -553,6 +569,16 @@ impl HybridCluster {
     fn reported_down(&self, node: &str, t: SimTime) -> bool {
         self.cfg.injections.node_reported_down(
             node, SimTime(t.0 - self.workload_t0.0))
+    }
+
+    /// One CLUES monitor pass (no `InjectionPlan` clone: the closure
+    /// borrows the plan for the duration of the tick).
+    fn clues_tick(&mut self, t: SimTime) -> Vec<Action> {
+        let w0 = self.workload_t0;
+        let inj = &self.cfg.injections;
+        self.clues.tick(t, self.lrms.as_ref(), &|n| {
+            inj.node_reported_down(n, SimTime(t.0 - w0.0))
+        })
     }
 
     /// Run LRMS scheduling and materialize job executions as events.
@@ -568,7 +594,7 @@ impl HybridCluster {
                     rt.setup_done = true;
                 }
             }
-            self.recorder.node_state(t, &node, DisplayState::Used);
+            self.recorder.node_state_id(t, node, DisplayState::Used);
             // Real inference (sampled): wall-clock compute, virtual time
             // stays the paper's measured job duration.
             if let Some(rtm) = &self.runtime {
@@ -603,10 +629,10 @@ impl HybridCluster {
             match action {
                 Action::PowerOn { count } => {
                     for _ in 0..count {
-                        let name = self.next_worker_name();
+                        let (id, name) = self.next_worker();
                         // Reserve the name immediately so subsequent
                         // PowerOns pick fresh ones.
-                        self.nodes.insert(name.clone(), NodeRt {
+                        self.nodes.insert(id, NodeRt {
                             site: usize::MAX,
                             vm: VmId(u64::MAX),
                             role: NodeRole::WorkerNode,
@@ -614,27 +640,22 @@ impl HybridCluster {
                             requested_at: t,
                             joined_at: None,
                         });
-                        self.clues.track(&name, PowerState::PoweringOn);
-                        self.recorder.node_state(t, &name,
-                                                 DisplayState::PoweringOn);
-                        let id = self.engine.submit(UpdateOp::AddWorker {
-                            name: name.clone(),
+                        self.clues.track_id(id, PowerState::PoweringOn);
+                        self.recorder.node_state_id(
+                            t, id, DisplayState::PoweringOn);
+                        self.engine.submit(UpdateOp::AddWorker {
+                            name,
                         }, t);
-                        self.update_nodes.insert(
-                            id.0, (UpdateOp::AddWorker { name: name.clone() },
-                                   name));
                     }
                     q.schedule_in(0.0, Ev::OrchestratorPump);
                 }
                 Action::PowerOff { node } => {
-                    let id = self.engine.submit(UpdateOp::RemoveWorker {
-                        name: node.clone(),
+                    let id = self.names.intern(&node);
+                    self.engine.submit(UpdateOp::RemoveWorker {
+                        name: node,
                     }, t);
-                    self.update_nodes.insert(
-                        id.0, (UpdateOp::RemoveWorker { name: node.clone() },
-                               node.clone()));
-                    self.recorder.node_state(t, &node,
-                                             DisplayState::PoweringOff);
+                    self.recorder.node_state_id(t, id,
+                                                DisplayState::PoweringOff);
                     q.schedule_in(0.0, Ev::OrchestratorPump);
                 }
                 Action::CancelPowerOff { node } => {
@@ -643,13 +664,14 @@ impl HybridCluster {
                     match id {
                         Some(id) if self.engine.cancel(id, t).is_ok() => {
                             // Rescued: the node never left.
-                            self.clues.set_state(&node, PowerState::On);
+                            let nid = self.names.intern(&node);
+                            self.clues.set_state_id(nid, PowerState::On);
                             let idle = self
                                 .lrms
-                                .nodes()
-                                .iter()
-                                .any(|n| n.name == node && n.is_idle());
-                            self.recorder.node_state(t, &node,
+                                .node_stat(nid)
+                                .map(|s| s.is_idle())
+                                .unwrap_or(false);
+                            self.recorder.node_state_id(t, nid,
                                 if idle { DisplayState::Idle }
                                 else { DisplayState::Used });
                             self.recorder.milestone(t, format!(
@@ -662,19 +684,18 @@ impl HybridCluster {
                     }
                 }
                 Action::MarkFailed { node } => {
-                    self.recorder.node_state(t, &node, DisplayState::Failed);
+                    let id = self.names.intern(&node);
+                    self.recorder.node_state_id(t, id,
+                                                DisplayState::Failed);
                     self.recorder.milestone(t, format!(
                         "{node} detected as off — marked failed, \
                          powering off to avoid cost"));
                     // Requeue its jobs and power it off.
                     let _ = self.lrms.set_node_health(&node,
                                                       NodeHealth::Down, t);
-                    let id = self.engine.submit(UpdateOp::RemoveWorker {
-                        name: node.clone(),
+                    self.engine.submit(UpdateOp::RemoveWorker {
+                        name: node,
                     }, t);
-                    self.update_nodes.insert(
-                        id.0, (UpdateOp::RemoveWorker { name: node.clone() },
-                               node));
                     q.schedule_in(0.0, Ev::OrchestratorPump);
                 }
             }
@@ -684,35 +705,36 @@ impl HybridCluster {
     /// Start any updates the (possibly serialized) engine allows.
     fn pump_orchestrator(&mut self, q: &mut EventQueue<Ev>, t: SimTime) {
         for update in self.engine.startable(t) {
-            match update.op.clone() {
+            match &update.op {
                 UpdateOp::AddWorker { name } => {
-                    if !self.start_add_worker(q, &name, t) {
+                    let id = self.names.intern(name);
+                    if !self.start_add_worker(q, name, t) {
                         // No capacity: finish the update immediately and
                         // stop tracking the phantom node. Re-pump so
                         // updates queued behind this one are not starved.
                         let _ = self.engine.complete(update.id, t);
-                        self.nodes.remove(&name);
-                        self.clues.forget(&name);
-                        self.recorder.node_state(t, &name,
-                                                 DisplayState::Off);
+                        self.nodes.remove(&id);
+                        self.clues.forget_id(id);
+                        self.recorder.node_state_id(t, id,
+                                                    DisplayState::Off);
                         q.schedule_in(0.0, Ev::OrchestratorPump);
                     } else {
-                        self.update_for_node
-                            .insert(name.clone(), update.id);
+                        self.update_for_node.insert(id, update.id);
                     }
                 }
                 UpdateOp::RemoveWorker { name } => {
-                    let Some(rt) = self.nodes.get(&name).cloned() else {
+                    let id = self.names.intern(name);
+                    let Some(rt) = self.nodes.get(&id).copied() else {
                         let _ = self.engine.complete(update.id, t);
                         q.schedule_in(0.0, Ev::OrchestratorPump);
                         continue;
                     };
-                    let _ = self.lrms.deregister_node(&name, t);
+                    let _ = self.lrms.deregister_node(name, t);
                     match self.im.decommission_node(
-                        &mut self.sites, rt.site, rt.vm, &name, t) {
+                        &mut self.sites, rt.site, rt.vm, name, t) {
                         Ok(secs) => {
                             q.schedule_in(secs, Ev::TerminationDone {
-                                node: name.clone(),
+                                node: id,
                                 update: Some(update.id),
                             });
                         }
@@ -752,8 +774,7 @@ impl World for HybridCluster {
     fn handle(&mut self, t: SimTime, ev: Ev, q: &mut EventQueue<Ev>) {
         match ev {
             Ev::Deploy => {
-                let id = self.engine.submit(UpdateOp::InitialDeploy, t);
-                let _ = id;
+                self.engine.submit(UpdateOp::InitialDeploy, t);
                 self.pump_orchestrator(q, t);
             }
 
@@ -768,22 +789,17 @@ impl World for HybridCluster {
                     "block {} submitted: {jobs} jobs", i + 1));
                 self.pump_jobs(q, t);
                 // Immediate CLUES reaction on new work.
-                let actions = {
-                    let w0 = self.workload_t0;
-                    let inj = self.cfg.injections.clone();
-                    self.clues.tick(t, self.lrms.as_ref(),
-                                    &|n| inj.node_reported_down(
-                                        n, SimTime(t.0 - w0.0)))
-                };
+                let actions = self.clues_tick(t);
                 self.apply_clues_actions(q, actions, t);
             }
 
             Ev::VmBooted { site, vm, node, failed } => {
                 if failed {
                     let _ = self.sites[site].complete_boot(vm, true, t);
-                    self.recorder.node_state(t, &node, DisplayState::Failed);
+                    self.recorder.node_state_id(t, node,
+                                                DisplayState::Failed);
                     self.recorder.milestone(t, format!(
-                        "{node} failed to boot"));
+                        "{} failed to boot", self.names.name(node)));
                     // Retry through CLUES on the next tick (the node
                     // vanishes; CLUES sees the deficit again).
                     if let Some(id) = self.update_for_node.remove(&node) {
@@ -791,7 +807,7 @@ impl World for HybridCluster {
                         q.schedule_in(0.0, Ev::OrchestratorPump);
                     }
                     self.nodes.remove(&node);
-                    self.clues.forget(&node);
+                    self.clues.forget_id(node);
                     return;
                 }
                 let _ = self.sites[site].complete_boot(vm, false, t);
@@ -800,19 +816,20 @@ impl World for HybridCluster {
                 if let Some(secs) = self.sites[site]
                     .spec
                     .failure
-                    .clone()
                     .sample_crash_in(&mut self.rng)
                 {
                     q.schedule_in(secs, Ev::VmCrashed {
                         site,
                         vm,
-                        node: node.clone(),
+                        node,
                     });
                 }
                 // Contextualization starts now (Ansible over the SSH
                 // reverse tunnel fabric).
-                if node != FE_NAME {
-                    let _ = self.im.connect_node(&node, t);
+                let is_fe = self.names.with_name(node, |n| n == FE_NAME);
+                if !is_fe {
+                    let name = self.names.name(node);
+                    let _ = self.im.connect_node(&name, t);
                 }
                 let ctx = self.ctx_secs.get(&node).copied().unwrap_or(300.0);
                 q.schedule_in(ctx, Ev::CtxDone { node });
@@ -821,9 +838,10 @@ impl World for HybridCluster {
             Ev::CtxDone { node } => {
                 let Some(rt) = self.nodes.get_mut(&node) else { return };
                 rt.joined_at = Some(t);
-                self.deploy_log.push((node.clone(), rt.requested_at, t));
-                let site = rt.site;
-                let role = rt.role;
+                let (site, role, requested_at) =
+                    (rt.site, rt.role, rt.requested_at);
+                let name = self.names.name(node);
+                self.deploy_log.push((name.clone(), requested_at, t));
                 match role {
                     NodeRole::FrontEnd => {
                         self.fe_ready = true;
@@ -840,8 +858,8 @@ impl World for HybridCluster {
                         self.recorder.milestone(t,
                             "front-end ready (LRMS controller + NFS + \
                              vRouter CP)".to_string());
-                        self.recorder.node_state(t, FE_NAME,
-                                                 DisplayState::Used);
+                        self.recorder.node_state_id(t, node,
+                                                    DisplayState::Used);
                         // Initial workers, all within the same
                         // InitialDeploy update.
                         self.initial_pending =
@@ -854,11 +872,11 @@ impl World for HybridCluster {
                             }
                         }
                         for _ in 0..self.cfg.template.scalable.count {
-                            let name = self.next_worker_name();
-                            self.clues.track(&name, PowerState::PoweringOn);
+                            let (wid, wname) = self.next_worker();
+                            self.clues.track_id(wid, PowerState::PoweringOn);
                             // Initial workers are provisioned directly by
                             // the IM inside the initial update.
-                            if !self.start_add_worker(q, &name, t) {
+                            if !self.start_add_worker(q, &wname, t) {
                                 self.initial_pending -= 1;
                             }
                         }
@@ -878,32 +896,32 @@ impl World for HybridCluster {
                         let _ = self
                             .im
                             .retrieve_certificate(&mut self.overlay,
-                                                  &node, t);
+                                                  &name, t);
                         // add_site_router issues the cert itself if the
                         // callback did not; remove double issue.
-                        if self.overlay.element(&node).is_none() {
-                            if self.overlay.ca.verify(&node) {
-                                let _ = self.overlay.ca.revoke(&node);
+                        if self.overlay.element(&name).is_none() {
+                            if self.overlay.ca.verify(&name) {
+                                let _ = self.overlay.ca.revoke(&name);
                             }
                             let _ = self.overlay.add_site_router(
-                                &node, loc, base, t);
+                                &name, loc, base, t);
                         }
                         self.recorder.milestone(t, format!(
-                            "{node} connected to the CP (overlay up at \
+                            "{name} connected to the CP (overlay up at \
                              {})", self.sites[site].spec.name));
-                        self.recorder.node_state(t, &node,
-                                                 DisplayState::Used);
+                        self.recorder.node_state_id(t, node,
+                                                    DisplayState::Used);
                     }
                     NodeRole::WorkerNode => {
                         // Join the LRMS; node becomes schedulable.
                         self.lrms.register_node(
-                            &node, self.clues.cfg.slots_per_worker, t);
-                        self.clues.track(&node, PowerState::On);
-                        self.clues.set_state(&node, PowerState::On);
-                        self.recorder.node_state(t, &node,
-                                                 DisplayState::Idle);
+                            &name, self.clues.cfg.slots_per_worker, t);
+                        self.clues.track_id(node, PowerState::On);
+                        self.clues.set_state_id(node, PowerState::On);
+                        self.recorder.node_state_id(t, node,
+                                                    DisplayState::Idle);
                         self.recorder.milestone(t, format!(
-                            "{node} joined the cluster"));
+                            "{name} joined the cluster"));
                         if let Some(id) = self.update_for_node.remove(&node)
                         {
                             let _ = self.engine.complete(id, t);
@@ -931,22 +949,17 @@ impl World for HybridCluster {
                 let live = self.lrms.job(job).map(|j| {
                     j.requeues == gen
                         && j.state == crate::lrms::JobState::Running
-                        && j.node.as_deref() == Some(node.as_str())
+                        && j.node == Some(node)
                 }).unwrap_or(false);
                 if !live {
                     return;
                 }
                 let _ = self.lrms.on_job_finished(job, true, t);
                 self.jobs_completed += 1;
-                if let Some(info) = self
-                    .lrms
-                    .nodes()
-                    .iter()
-                    .find(|n| n.name == node)
-                {
-                    if info.used_slots == 0 {
-                        self.recorder.node_state(t, &node,
-                                                 DisplayState::Idle);
+                if let Some(stat) = self.lrms.node_stat(node) {
+                    if stat.used_slots == 0 {
+                        self.recorder.node_state_id(t, node,
+                                                    DisplayState::Idle);
                     }
                 }
                 // Record the run interval (start = end - duration is not
@@ -954,7 +967,7 @@ impl World for HybridCluster {
                 if let Some(j) = self.lrms.job(job) {
                     if let (Some(s), Some(e)) = (j.started_at, j.finished_at)
                     {
-                        self.recorder.job_run(&node, s, e);
+                        self.recorder.job_run_id(node, s, e);
                         if let Some(&ri) = self.live_record.get(&node) {
                             self.vm_records[ri].busy_secs += e.0 - s.0;
                         }
@@ -964,38 +977,33 @@ impl World for HybridCluster {
             }
 
             Ev::CluesTick => {
-                let actions = {
-                    let w0 = self.workload_t0;
-                    let inj = self.cfg.injections.clone();
-                    self.clues.tick(t, self.lrms.as_ref(),
-                                    &|n| inj.node_reported_down(
-                                        n, SimTime(t.0 - w0.0)))
-                };
+                let actions = self.clues_tick(t);
                 self.apply_clues_actions(q, actions, t);
                 // Recovery path for transient flaps: if the monitor reads
                 // the node as up again and the LRMS had it Down, revive.
-                let down_nodes: Vec<String> = {
-                    let nodes = self.lrms.nodes();
-                    nodes
-                        .iter()
-                        .filter(|n| n.health == NodeHealth::Down
-                                && !self.reported_down(&n.name, t))
-                        .map(|n| n.name.clone())
-                        .collect()
-                };
-                for n in down_nodes {
+                let down_nodes: Vec<crate::ids::NodeId> = self
+                    .lrms
+                    .node_stats()
+                    .iter()
+                    .filter(|s| s.health == NodeHealth::Down)
+                    .map(|s| s.id)
+                    .collect();
+                for id in down_nodes {
+                    let name = self.names.name(id);
                     // Only revive if CLUES has not already failed it.
-                    if self.clues.state(&n) == Some(PowerState::On) {
+                    if !self.reported_down(&name, t)
+                        && self.clues.state_id(id) == Some(PowerState::On)
+                    {
                         let _ = self.lrms.set_node_health(
-                            &n, NodeHealth::Up, t);
+                            &name, NodeHealth::Up, t);
                     }
                 }
                 self.pump_jobs(q, t);
                 // Keep ticking while there is anything left to manage.
                 let all_workers_off = self
                     .nodes
-                    .iter()
-                    .filter(|(_, rt)| rt.role == NodeRole::WorkerNode)
+                    .values()
+                    .filter(|rt| rt.role == NodeRole::WorkerNode)
                     .count() == 0;
                 if !(self.workload_done() && all_workers_off) {
                     q.schedule_in(self.clues.cfg.poll_interval_s,
@@ -1021,15 +1029,16 @@ impl World for HybridCluster {
                 }
                 let _ = self.sites[site].crash_vm(vm, t);
                 // The LRMS sees the node die: requeue its jobs.
-                let _ = self.lrms.set_node_health(&node, NodeHealth::Down,
+                let name = self.names.name(node);
+                let _ = self.lrms.set_node_health(&name, NodeHealth::Down,
                                                   t);
-                let _ = self.lrms.deregister_node(&node, t);
+                let _ = self.lrms.deregister_node(&name, t);
                 self.nodes.remove(&node);
-                self.clues.set_state(&node, PowerState::Failed);
-                self.clues.forget(&node);
-                self.recorder.node_state(t, &node, DisplayState::Failed);
+                self.clues.set_state_id(node, PowerState::Failed);
+                self.clues.forget_id(node);
+                self.recorder.node_state_id(t, node, DisplayState::Failed);
                 self.recorder.milestone(t, format!(
-                    "{node} crashed (provider-side failure)"));
+                    "{name} crashed (provider-side failure)"));
                 // CLUES replaces it on its next tick if jobs remain.
                 self.pump_jobs(q, t);
             }
@@ -1039,10 +1048,11 @@ impl World for HybridCluster {
                     let _ = self.sites[rt.site]
                         .complete_termination(rt.vm, t);
                 }
-                self.clues.set_state(&node, PowerState::Off);
-                self.clues.forget(&node);
-                self.recorder.node_state(t, &node, DisplayState::Off);
-                self.recorder.milestone(t, format!("{node} powered off"));
+                self.clues.set_state_id(node, PowerState::Off);
+                self.clues.forget_id(node);
+                self.recorder.node_state_id(t, node, DisplayState::Off);
+                self.recorder.milestone(t, format!(
+                    "{} powered off", self.names.name(node)));
                 if let Some(id) = update {
                     let _ = self.engine.complete(id, t);
                     q.schedule_in(0.0, Ev::OrchestratorPump);
@@ -1178,7 +1188,7 @@ mod tests {
         // The node must have gone through Failed at some point.
         let failed = report
             .recorder
-            .transitions
+            .transitions_named()
             .iter()
             .any(|(_, n, s)| n == "vnode-2" && *s == DisplayState::Failed);
         assert!(failed, "vnode-2 never marked failed");

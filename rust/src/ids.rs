@@ -1,0 +1,129 @@
+//! Interned node identity.
+//!
+//! Node names (`"vnode-5"`, `"front-end"`, …) used to be the unit of
+//! identity across the LRMS, CLUES, the cluster world and the metrics
+//! recorder — every scheduling decision hashed and cloned `String`s. At
+//! the 10k-node/1M-job scale the simulator targets, that dominated the
+//! profile. [`NodeId`] is a dense `u32` issued by a [`NodeNames`]
+//! interner that all subsystems of one cluster share; names survive only
+//! at the edges (TOSCA parsing, reports, API JSON, log lines).
+//!
+//! `NodeNames` is a cheaply-clonable handle (`Rc<RefCell<..>>`): the
+//! simulation is single-threaded per cluster, and every accessor scopes
+//! its borrow internally so handles can be held by several subsystems at
+//! once.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+use std::rc::Rc;
+
+/// Dense interned node identifier. The numeric value doubles as the
+/// index into id-keyed tables (`Vec<Option<..>>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    /// The id as a table index.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "node#{}", self.0)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    names: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+/// Shared name⇄id interner (one per cluster).
+#[derive(Debug, Clone, Default)]
+pub struct NodeNames(Rc<RefCell<Inner>>);
+
+impl NodeNames {
+    pub fn new() -> NodeNames {
+        NodeNames::default()
+    }
+
+    /// Id for `name`, interning it on first sight.
+    pub fn intern(&self, name: &str) -> NodeId {
+        let mut g = self.0.borrow_mut();
+        if let Some(&i) = g.index.get(name) {
+            return NodeId(i);
+        }
+        let i = g.names.len() as u32;
+        g.names.push(name.to_string());
+        g.index.insert(name.to_string(), i);
+        NodeId(i)
+    }
+
+    /// Id for `name` if it was interned before (no insertion).
+    pub fn get(&self, name: &str) -> Option<NodeId> {
+        self.0.borrow().index.get(name).map(|&i| NodeId(i))
+    }
+
+    /// Owned name for `id` (edge paths only: reports, logs).
+    pub fn name(&self, id: NodeId) -> String {
+        self.0
+            .borrow()
+            .names
+            .get(id.index())
+            .cloned()
+            .unwrap_or_else(|| format!("node#{}", id.0))
+    }
+
+    /// Run `f` over the borrowed name without cloning. `f` must not
+    /// touch this interner (the borrow is held while it runs).
+    pub fn with_name<R>(&self, id: NodeId, f: impl FnOnce(&str) -> R) -> R {
+        let g = self.0.borrow();
+        f(g.names.get(id.index()).map(|s| s.as_str()).unwrap_or("?"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.borrow().names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_dense_and_stable() {
+        let n = NodeNames::new();
+        let a = n.intern("vnode-1");
+        let b = n.intern("vnode-2");
+        assert_eq!(a, NodeId(0));
+        assert_eq!(b, NodeId(1));
+        assert_eq!(n.intern("vnode-1"), a); // idempotent
+        assert_eq!(n.len(), 2);
+        assert_eq!(n.name(a), "vnode-1");
+        assert_eq!(n.get("vnode-2"), Some(b));
+        assert_eq!(n.get("vnode-3"), None);
+    }
+
+    #[test]
+    fn handles_share_state() {
+        let n = NodeNames::new();
+        let m = n.clone();
+        let a = n.intern("x");
+        assert_eq!(m.get("x"), Some(a));
+        assert!(m.with_name(a, |s| s == "x"));
+    }
+
+    #[test]
+    fn unknown_id_renders_placeholder() {
+        let n = NodeNames::new();
+        assert_eq!(n.name(NodeId(9)), "node#9");
+    }
+}

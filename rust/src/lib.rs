@@ -7,6 +7,7 @@
 //! The crate implements the paper's full coordination stack plus every
 //! substrate it depends on (see `DESIGN.md`):
 //!
+//! * [`ids`] — interned dense node identity shared across subsystems.
 //! * [`sim`] — discrete-event simulation engine (virtual clock).
 //! * [`netsim`] — flow-level inter-site network with cipher cost model.
 //! * [`cloudsim`] — IaaS cloud-site simulator (quotas, VMs, networks,
@@ -33,6 +34,7 @@
 //! via the PJRT C API.
 
 pub mod api;
+pub mod ids;
 pub mod util;
 pub mod sim;
 pub mod netsim;

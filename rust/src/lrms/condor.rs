@@ -3,7 +3,8 @@
 //! beyond SLURM.
 
 use super::core::{BatchCore, Placement};
-use super::{Assignment, Job, JobId, Lrms, NodeHealth, NodeInfo};
+use super::{Assignment, Job, JobId, Lrms, NodeHealth, NodeId, NodeInfo,
+            NodeNames, NodeStat};
 use crate::sim::SimTime;
 
 /// HTCondor-like pool (`condor_collector`+`negotiator` analogue).
@@ -15,6 +16,13 @@ pub struct HtCondor {
 impl HtCondor {
     pub fn new() -> HtCondor {
         HtCondor { core: BatchCore::new(Placement::SpreadMostFree) }
+    }
+
+    /// Share a cluster-wide interner so ids line up across subsystems.
+    pub fn with_names(names: NodeNames) -> HtCondor {
+        HtCondor {
+            core: BatchCore::with_names(Placement::SpreadMostFree, names),
+        }
     }
 }
 
@@ -72,12 +80,32 @@ impl Lrms for HtCondor {
         self.core.nodes()
     }
 
+    fn node_id(&self, name: &str) -> Option<NodeId> {
+        self.core.node_id(name)
+    }
+
+    fn node_name(&self, id: NodeId) -> Option<String> {
+        self.core.node_name(id)
+    }
+
+    fn node_stat(&self, id: NodeId) -> Option<NodeStat> {
+        self.core.node_stat(id)
+    }
+
+    fn node_stats(&self) -> Vec<NodeStat> {
+        self.core.node_stats()
+    }
+
     fn pending(&self) -> usize {
         self.core.pending()
     }
 
     fn running(&self) -> usize {
         self.core.running()
+    }
+
+    fn free_slots(&self) -> u32 {
+        self.core.free_slots()
     }
 }
 
@@ -93,9 +121,12 @@ mod tests {
         c.submit("a", 1, SimTime(0.0));
         c.submit("b", 1, SimTime(0.0));
         let assigned = c.schedule(SimTime(0.0));
-        let nodes: Vec<&str> =
-            assigned.iter().map(|(_, n)| n.as_str()).collect();
-        assert!(nodes.contains(&"e1") && nodes.contains(&"e2"),
+        let nodes: Vec<String> = assigned
+            .iter()
+            .map(|(_, n)| c.node_name(*n).unwrap())
+            .collect();
+        assert!(nodes.iter().any(|n| n == "e1")
+                && nodes.iter().any(|n| n == "e2"),
                 "{nodes:?}");
     }
 }

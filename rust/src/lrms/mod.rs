@@ -6,6 +6,11 @@
 //! core ([`core::BatchCore`]), and two concrete plugins: [`slurm::Slurm`]
 //! (FIFO, depth-first packing) and [`condor::HtCondor`] (matchmaking,
 //! breadth-first spreading).
+//!
+//! Node identity inside the scheduler is a dense interned [`NodeId`];
+//! names appear only at the registration/reporting edges. Assignments
+//! and [`Job::node`] carry ids — resolve through [`Lrms::node_name`]
+//! when a human-readable name is needed.
 
 pub mod condor;
 pub mod core;
@@ -15,6 +20,8 @@ pub mod slurm;
 pub use condor::HtCondor;
 pub use partition::PartitionedLrms;
 pub use slurm::Slurm;
+
+pub use crate::ids::{NodeId, NodeNames};
 
 use crate::sim::SimTime;
 
@@ -50,7 +57,8 @@ pub struct Job {
     pub submitted_at: SimTime,
     pub started_at: Option<SimTime>,
     pub finished_at: Option<SimTime>,
-    pub node: Option<String>,
+    /// Node the job runs (or last ran) on.
+    pub node: Option<NodeId>,
     /// Times the job was requeued after a node failure.
     pub requeues: u32,
 }
@@ -66,9 +74,10 @@ pub enum NodeHealth {
     Drain,
 }
 
-/// Snapshot of one registered node.
+/// Snapshot of one registered node (name-resolving; reporting edge).
 #[derive(Debug, Clone)]
 pub struct NodeInfo {
+    pub id: NodeId,
     pub name: String,
     pub slots: u32,
     pub used_slots: u32,
@@ -84,8 +93,26 @@ impl NodeInfo {
     }
 }
 
+/// Allocation-light node snapshot (no `String`): what monitoring loops
+/// (CLUES) iterate at scale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeStat {
+    pub id: NodeId,
+    pub slots: u32,
+    pub used_slots: u32,
+    pub health: NodeHealth,
+    pub registered_at: SimTime,
+    pub idle_since: Option<SimTime>,
+}
+
+impl NodeStat {
+    pub fn is_idle(&self) -> bool {
+        self.used_slots == 0 && self.health == NodeHealth::Up
+    }
+}
+
 /// Scheduling decision: job → node assignments made by one sweep.
-pub type Assignment = (JobId, String);
+pub type Assignment = (JobId, NodeId);
 
 /// The LRMS plugin interface (what CLUES and the cluster façade consume).
 pub trait Lrms {
@@ -105,7 +132,9 @@ pub trait Lrms {
     fn set_node_health(&mut self, name: &str, health: NodeHealth, t: SimTime)
         -> anyhow::Result<Vec<JobId>>;
 
-    /// Submit a job; it starts Pending.
+    /// Submit a job; it starts Pending. A job occupies at least one
+    /// slot — `slots` is clamped to ≥ 1 (zero-slot jobs would be
+    /// invisible to the free-slot placement indexes).
     fn submit(&mut self, name: &str, slots: u32, t: SimTime) -> JobId;
 
     /// Cancel a pending job.
@@ -122,13 +151,25 @@ pub trait Lrms {
     fn jobs(&self) -> Vec<&Job>;
     fn nodes(&self) -> Vec<NodeInfo>;
 
+    /// Id of a currently-registered node, if any.
+    fn node_id(&self, name: &str) -> Option<NodeId>;
+
+    /// Name of a currently-registered node, if any.
+    fn node_name(&self, id: NodeId) -> Option<String>;
+
+    /// O(1) single-node snapshot.
+    fn node_stat(&self, id: NodeId) -> Option<NodeStat>;
+
+    /// Allocation-light snapshots of every node (registration order).
+    fn node_stats(&self) -> Vec<NodeStat>;
+
     /// Pending-queue depth — the elasticity signal CLUES polls.
     fn pending(&self) -> usize;
     fn running(&self) -> usize;
 
     /// Total free Up slots right now.
     fn free_slots(&self) -> u32 {
-        self.nodes()
+        self.node_stats()
             .iter()
             .filter(|n| n.health == NodeHealth::Up)
             .map(|n| n.slots - n.used_slots)
@@ -154,6 +195,12 @@ mod trait_tests {
         assert_eq!(assigned.len(), 2);
         assert_eq!(l.pending(), 1);
         assert_eq!(l.running(), 2);
+        // Assignments resolve back to registered names.
+        for (_, nid) in &assigned {
+            let name = l.node_name(*nid).expect("assigned node has a name");
+            assert!(name.starts_with('n'), "{name}");
+            assert_eq!(l.node_id(&name), Some(*nid));
+        }
         l.on_job_finished(a, true, SimTime(10.0)).unwrap();
         let again = l.schedule(SimTime(10.0));
         assert_eq!(again.len(), 1);
@@ -162,6 +209,7 @@ mod trait_tests {
         l.on_job_finished(c, true, SimTime(12.0)).unwrap();
         assert_eq!(l.running(), 0);
         assert!(l.nodes().iter().all(|n| n.is_idle()));
+        assert_eq!(l.free_slots(), 2);
     }
 
     #[test]

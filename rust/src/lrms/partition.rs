@@ -26,6 +26,11 @@ pub struct PartitionedLrms {
     partitions: Vec<Partition>,
     /// Global job id → (partition index, inner job id).
     jobs: HashMap<u64, (usize, JobId)>,
+    /// Per-partition reverse map: inner job ids are dense (the core
+    /// assigns them sequentially), so `global_of_inner[pi][inner]` is
+    /// the global id — a scheduling sweep reverse-maps each assignment
+    /// in O(1) instead of scanning every job ever submitted.
+    global_of_inner: Vec<Vec<JobId>>,
     /// node name → partition index (names are cluster-unique).
     nodes: HashMap<String, usize>,
     next_job: u64,
@@ -36,6 +41,7 @@ impl PartitionedLrms {
         PartitionedLrms {
             partitions: Vec::new(),
             jobs: HashMap::new(),
+            global_of_inner: Vec::new(),
             nodes: HashMap::new(),
             next_job: 0,
         }
@@ -48,6 +54,7 @@ impl PartitionedLrms {
             bail!("partition {name:?} already exists");
         }
         self.partitions.push(Partition { name: name.to_string(), lrms });
+        self.global_of_inner.push(Vec::new());
         Ok(())
     }
 
@@ -104,22 +111,23 @@ impl PartitionedLrms {
         let inner = self.partitions[idx].lrms.submit(name, slots, t);
         let gid = JobId(self.next_job);
         self.jobs.insert(self.next_job, (idx, inner));
+        debug_assert_eq!(inner.0 as usize, self.global_of_inner[idx].len(),
+                         "inner job ids must be dense per partition");
+        self.global_of_inner[idx].push(gid);
         self.next_job += 1;
         Ok(gid)
     }
 
-    /// One sweep over every partition. Returns (global id, node).
+    /// One sweep over every partition. Returns (global id, node name).
     pub fn schedule(&mut self, t: SimTime) -> Vec<(JobId, String)> {
         let mut out = Vec::new();
         for (pi, p) in self.partitions.iter_mut().enumerate() {
-            for (inner, node) in p.lrms.schedule(t) {
-                // Reverse-map to the global id.
-                let gid = self
-                    .jobs
-                    .iter()
-                    .find(|(_, &(qi, qj))| qi == pi && qj == inner)
-                    .map(|(&g, _)| JobId(g))
-                    .expect("scheduled job must be registered");
+            for (inner, nid) in p.lrms.schedule(t) {
+                let gid = self.global_of_inner[pi][inner.0 as usize];
+                let node = p
+                    .lrms
+                    .node_name(nid)
+                    .expect("assigned node must be registered");
                 out.push((gid, node));
             }
         }

@@ -2,7 +2,8 @@
 //! the batch system used in the paper's use case.
 
 use super::core::{BatchCore, Placement};
-use super::{Assignment, Job, JobId, Lrms, NodeHealth, NodeInfo};
+use super::{Assignment, Job, JobId, Lrms, NodeHealth, NodeId, NodeInfo,
+            NodeNames, NodeStat};
 use crate::sim::SimTime;
 
 /// SLURM-like controller (`slurmctld` analogue).
@@ -14,6 +15,11 @@ pub struct Slurm {
 impl Slurm {
     pub fn new() -> Slurm {
         Slurm { core: BatchCore::new(Placement::PackFirstFit) }
+    }
+
+    /// Share a cluster-wide interner so ids line up across subsystems.
+    pub fn with_names(names: NodeNames) -> Slurm {
+        Slurm { core: BatchCore::with_names(Placement::PackFirstFit, names) }
     }
 }
 
@@ -71,12 +77,32 @@ impl Lrms for Slurm {
         self.core.nodes()
     }
 
+    fn node_id(&self, name: &str) -> Option<NodeId> {
+        self.core.node_id(name)
+    }
+
+    fn node_name(&self, id: NodeId) -> Option<String> {
+        self.core.node_name(id)
+    }
+
+    fn node_stat(&self, id: NodeId) -> Option<NodeStat> {
+        self.core.node_stat(id)
+    }
+
+    fn node_stats(&self) -> Vec<NodeStat> {
+        self.core.node_stats()
+    }
+
     fn pending(&self) -> usize {
         self.core.pending()
     }
 
     fn running(&self) -> usize {
         self.core.running()
+    }
+
+    fn free_slots(&self) -> u32 {
+        self.core.free_slots()
     }
 }
 
@@ -110,6 +136,7 @@ mod tests {
         s.submit("a", 1, SimTime(0.0));
         s.submit("b", 1, SimTime(0.0));
         let a = s.schedule(SimTime(0.0));
-        assert!(a.iter().all(|(_, n)| n == "wn1"));
+        assert!(a.iter().all(
+            |(_, n)| s.node_name(*n).as_deref() == Some("wn1")));
     }
 }

@@ -4,9 +4,17 @@
 //! into a [`Recorder`]; exporters then rebuild the paper's Figure 10
 //! (per-node usage evolution), Figure 11 (node state counts evolution)
 //! and the §4.2 cost/utilization table from the recorded series.
+//!
+//! Transitions and job runs are recorded by interned [`NodeId`] — one
+//! `u32` per event instead of a cloned `String` — and first-appearance
+//! order is maintained in an order-preserving index set, so
+//! [`Recorder::node_names`] is O(nodes) instead of the old O(n²)
+//! rescan of the whole transition log. Names are resolved only when a
+//! figure/table is rendered.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
+use crate::ids::{NodeId, NodeNames};
 use crate::sim::SimTime;
 use crate::util::csv::Table;
 
@@ -39,12 +47,17 @@ impl DisplayState {
 /// Recorder of everything the figures need.
 #[derive(Debug, Default)]
 pub struct Recorder {
+    names: NodeNames,
     /// (t, node, new state) transitions, in time order.
-    pub transitions: Vec<(SimTime, String, DisplayState)>,
+    pub transitions: Vec<(SimTime, NodeId, DisplayState)>,
     /// (t, event label) milestones for the narrative log.
     pub milestones: Vec<(SimTime, String)>,
     /// Completed job records: (node, start, end).
-    pub job_runs: Vec<(String, SimTime, SimTime)>,
+    pub job_runs: Vec<(NodeId, SimTime, SimTime)>,
+    /// First-appearance order of node ids (order-preserving index set:
+    /// `seen` answers membership, `order` preserves insertion order).
+    order: Vec<NodeId>,
+    seen: Vec<bool>,
 }
 
 impl Recorder {
@@ -52,8 +65,33 @@ impl Recorder {
         Recorder::default()
     }
 
+    /// Share the cluster-wide interner so ids resolve to real names.
+    pub fn with_names(names: NodeNames) -> Recorder {
+        Recorder { names, ..Recorder::default() }
+    }
+
+    /// Interner handle (ids recorded here resolve through it).
+    pub fn names(&self) -> NodeNames {
+        self.names.clone()
+    }
+
     pub fn node_state(&mut self, t: SimTime, node: &str, s: DisplayState) {
-        self.transitions.push((t, node.to_string(), s));
+        let id = self.names.intern(node);
+        self.node_state_id(t, id, s);
+    }
+
+    /// Hot-path variant: no hashing, no cloning.
+    pub fn node_state_id(&mut self, t: SimTime, id: NodeId,
+                         s: DisplayState) {
+        let i = id.index();
+        if self.seen.len() <= i {
+            self.seen.resize(i + 1, false);
+        }
+        if !self.seen[i] {
+            self.seen[i] = true;
+            self.order.push(id);
+        }
+        self.transitions.push((t, id, s));
     }
 
     pub fn milestone(&mut self, t: SimTime, label: impl Into<String>) {
@@ -61,29 +99,41 @@ impl Recorder {
     }
 
     pub fn job_run(&mut self, node: &str, start: SimTime, end: SimTime) {
-        self.job_runs.push((node.to_string(), start, end));
+        let id = self.names.intern(node);
+        self.job_run_id(id, start, end);
+    }
+
+    /// Hot-path variant: no hashing, no cloning.
+    pub fn job_run_id(&mut self, id: NodeId, start: SimTime, end: SimTime) {
+        self.job_runs.push((id, start, end));
     }
 
     /// All node names seen, in first-appearance order.
     pub fn node_names(&self) -> Vec<String> {
-        let mut names = Vec::new();
-        for (_, n, _) in &self.transitions {
-            if !names.contains(n) {
-                names.push(n.clone());
-            }
-        }
-        names
+        self.order.iter().map(|&id| self.names.name(id)).collect()
+    }
+
+    /// Transition log with names resolved (test/report convenience).
+    pub fn transitions_named(&self)
+        -> Vec<(SimTime, String, DisplayState)> {
+        self.transitions
+            .iter()
+            .map(|&(t, id, s)| (t, self.names.name(id), s))
+            .collect()
     }
 
     /// State of each node at time `t` (replay of the transition log).
     pub fn states_at(&self, t: SimTime) -> BTreeMap<String, DisplayState> {
-        let mut m = BTreeMap::new();
-        for (at, node, s) in &self.transitions {
+        let mut by_id: HashMap<NodeId, DisplayState> = HashMap::new();
+        for &(at, node, s) in &self.transitions {
             if at.0 <= t.0 {
-                m.insert(node.clone(), *s);
+                by_id.insert(node, s);
             }
         }
-        m
+        by_id
+            .into_iter()
+            .map(|(id, s)| (self.names.name(id), s))
+            .collect()
     }
 
     /// Figure 10: one row per `bucket_secs`, one column per node, cell =
@@ -92,31 +142,30 @@ impl Recorder {
     /// O(runs log runs + buckets x nodes) instead of rescanning every
     /// job run per cell (EXPERIMENTS §Perf L3).
     pub fn fig10_usage(&self, bucket_secs: f64, until: SimTime) -> Table {
-        let names = self.node_names();
+        let ids = &self.order;
         let mut header = vec!["time".to_string()];
-        header.extend(names.iter().cloned());
+        header.extend(ids.iter().map(|&id| self.names.name(id)));
         let mut table = Table::new(header);
 
         // Group + sort intervals per node.
-        let mut per_node: BTreeMap<&str, Vec<(f64, f64)>> = BTreeMap::new();
-        for (node, s, e) in &self.job_runs {
-            per_node.entry(node.as_str()).or_default().push((s.0, e.0));
+        let mut per_node: HashMap<NodeId, Vec<(f64, f64)>> = HashMap::new();
+        for &(node, s, e) in &self.job_runs {
+            per_node.entry(node).or_default().push((s.0, e.0));
         }
         for runs in per_node.values_mut() {
             runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         }
-        let mut cursor: BTreeMap<&str, usize> = BTreeMap::new();
+        let mut cursor: HashMap<NodeId, usize> =
+            ids.iter().map(|&id| (id, 0)).collect();
 
         let mut t = 0.0;
         while t <= until.0 {
             let mut row = vec![SimTime(t).hms()];
-            for n in &names {
-                let busy = match per_node.get(n.as_str()) {
+            for id in ids {
+                let busy = match per_node.get(id) {
                     None => false,
                     Some(runs) => {
-                        let idx = cursor.entry(per_node
-                            .get_key_value(n.as_str()).unwrap().0)
-                            .or_insert(0);
+                        let idx = cursor.get_mut(id).expect("cursor seeded");
                         // Skip intervals that ended before this bucket.
                         while *idx < runs.len() && runs[*idx].1 <= t {
                             *idx += 1;
@@ -146,16 +195,16 @@ impl Recorder {
         ]);
         // DES dispatch order makes the log time-sorted already; the
         // stable sort is a cheap guarantee for hand-built recorders.
-        let mut ordered: Vec<&(SimTime, String, DisplayState)> =
+        let mut ordered: Vec<&(SimTime, NodeId, DisplayState)> =
             self.transitions.iter().collect();
         ordered.sort_by(|a, b| a.0 .0.partial_cmp(&b.0 .0).unwrap());
-        let mut current: BTreeMap<&str, DisplayState> = BTreeMap::new();
+        let mut current: HashMap<NodeId, DisplayState> = HashMap::new();
         let mut idx = 0usize;
         let mut t = 0.0;
         while t <= until.0 {
             while idx < ordered.len() && ordered[idx].0 .0 <= t {
-                let (_, node, s) = ordered[idx];
-                current.insert(node.as_str(), *s);
+                let &(_, node, s) = ordered[idx];
+                current.insert(node, s);
                 idx += 1;
             }
             let count = |want: DisplayState| {
@@ -176,20 +225,23 @@ impl Recorder {
 
     /// Total busy seconds per node (Figure 10 integrals / §4.2 numbers).
     pub fn busy_secs_per_node(&self) -> BTreeMap<String, f64> {
-        let mut m: BTreeMap<String, f64> = BTreeMap::new();
-        for (node, s, e) in &self.job_runs {
-            *m.entry(node.clone()).or_insert(0.0) += e.0 - s.0;
+        let mut by_id: HashMap<NodeId, f64> = HashMap::new();
+        for &(node, s, e) in &self.job_runs {
+            *by_id.entry(node).or_insert(0.0) += e.0 - s.0;
         }
-        m
+        by_id
+            .into_iter()
+            .map(|(id, secs)| (self.names.name(id), secs))
+            .collect()
     }
 
     /// Seconds each node spent in each display state up to `until`.
     pub fn state_durations(&self, until: SimTime)
         -> BTreeMap<String, BTreeMap<&'static str, f64>> {
-        let mut per_node: BTreeMap<String,
-            Vec<(SimTime, DisplayState)>> = BTreeMap::new();
-        for (t, n, s) in &self.transitions {
-            per_node.entry(n.clone()).or_default().push((*t, *s));
+        let mut per_node: HashMap<NodeId,
+            Vec<(SimTime, DisplayState)>> = HashMap::new();
+        for &(t, n, s) in &self.transitions {
+            per_node.entry(n).or_default().push((t, s));
         }
         let mut out = BTreeMap::new();
         for (node, mut evs) in per_node {
@@ -201,7 +253,7 @@ impl Recorder {
                     *durs.entry(s.label()).or_insert(0.0) += t1 - t0.0;
                 }
             }
-            out.insert(node, durs);
+            out.insert(self.names.name(node), durs);
         }
         out
     }
@@ -288,5 +340,29 @@ mod tests {
         let mut r = Recorder::new();
         r.milestone(t(60.0), "AWS vnode-3 joined SLURM");
         assert_eq!(r.milestones.len(), 1);
+    }
+
+    #[test]
+    fn node_names_first_appearance_order() {
+        let mut r = Recorder::new();
+        r.node_state(t(0.0), "b", DisplayState::Idle);
+        r.node_state(t(1.0), "a", DisplayState::Idle);
+        r.node_state(t(2.0), "b", DisplayState::Used); // repeat: no dup
+        r.node_state(t(3.0), "c", DisplayState::Idle);
+        assert_eq!(r.node_names(), vec!["b", "a", "c"]);
+        let named = r.transitions_named();
+        assert_eq!(named.len(), 4);
+        assert_eq!(named[2].1, "b");
+    }
+
+    #[test]
+    fn id_and_name_recording_agree() {
+        let names = NodeNames::new();
+        let id = names.intern("wn");
+        let mut r = Recorder::with_names(names);
+        r.node_state_id(t(0.0), id, DisplayState::Used);
+        r.job_run_id(id, t(0.0), t(5.0));
+        assert_eq!(r.node_names(), vec!["wn"]);
+        assert_eq!(r.busy_secs_per_node()["wn"], 5.0);
     }
 }

@@ -5,6 +5,14 @@
 //! (HLO text, parameters folded as constants) plus `MANIFEST.txt` with
 //! shape metadata and a golden logit. This module compiles each artifact
 //! once on the PJRT CPU client and executes it per job.
+//!
+//! The PJRT client comes from the external `xla` crate, which cannot be
+//! vendored into the offline build environment. The real execution path
+//! is therefore behind the `pjrt` cargo feature (which additionally
+//! requires adding `xla` to `[dependencies]`); without it this module
+//! keeps the exact same API but [`ModelRuntime::load`] reports the
+//! runtime as unavailable and [`artifacts_available`] returns false so
+//! tests and the simulator skip real inference gracefully.
 
 use std::path::{Path, PathBuf};
 
@@ -51,6 +59,7 @@ pub fn read_manifest(dir: &Path) -> anyhow::Result<Vec<ManifestEntry>> {
 
 /// A compiled model executable bound to one batch size.
 pub struct ModelRuntime {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     pub entry: ManifestEntry,
     /// Executions served (perf counter).
@@ -59,6 +68,7 @@ pub struct ModelRuntime {
 
 impl ModelRuntime {
     /// Load and compile the artifact for `batch` from `dir`.
+    #[cfg(feature = "pjrt")]
     pub fn load(dir: impl AsRef<Path>, batch: usize)
         -> anyhow::Result<ModelRuntime> {
         let dir = dir.as_ref();
@@ -81,13 +91,25 @@ impl ModelRuntime {
         Ok(ModelRuntime { exe, entry, executions: std::cell::Cell::new(0) })
     }
 
+    /// Stub without the `pjrt` feature: same signature, always errors.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dir: impl AsRef<Path>, batch: usize)
+        -> anyhow::Result<ModelRuntime> {
+        let _ = (dir.as_ref(), batch);
+        bail!("PJRT runtime unavailable: build with `--features pjrt` \
+               and an `xla` dependency (offline builds run the \
+               simulation without real inference)")
+    }
+
     /// Input element count per batch.
+    #[cfg(feature = "pjrt")]
     fn input_len(&self) -> usize {
         self.entry.batch * self.entry.n_frames * self.entry.n_bins
     }
 
     /// Run inference on up to `batch` clips (each N_FRAMES*N_BINS long).
     /// Shorter batches are zero-padded; only the real rows are returned.
+    #[cfg(feature = "pjrt")]
     pub fn infer(&self, clips: &[Vec<f32>])
         -> anyhow::Result<Vec<Vec<f32>>> {
         if clips.is_empty() || clips.len() > self.entry.batch {
@@ -136,6 +158,15 @@ impl ModelRuntime {
             .collect())
     }
 
+    /// Stub without the `pjrt` feature (unreachable in practice: `load`
+    /// refuses to construct a runtime).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn infer(&self, clips: &[Vec<f32>])
+        -> anyhow::Result<Vec<Vec<f32>>> {
+        let _ = clips;
+        bail!("PJRT runtime unavailable (pjrt feature disabled)")
+    }
+
     /// Classify one synthetic file by id (generates the clip in-process).
     pub fn infer_file(&self, file_id: u64) -> anyhow::Result<Vec<f32>> {
         let clip = crate::workload::synth_clip(file_id);
@@ -169,9 +200,12 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// True when artifacts exist (tests skip PJRT paths otherwise).
+/// True when the runtime can actually serve inference: the `pjrt`
+/// feature is compiled in AND artifacts exist on disk. Tests and the
+/// demo binaries skip PJRT paths otherwise.
 pub fn artifacts_available() -> bool {
-    artifacts_dir().join("MANIFEST.txt").exists()
+    cfg!(feature = "pjrt")
+        && artifacts_dir().join("MANIFEST.txt").exists()
 }
 
 #[cfg(test)]

@@ -8,9 +8,10 @@
 //! The engine is deliberately minimal and deterministic:
 //! * events are ordered by `(time, sequence-number)` so same-time events
 //!   dispatch in schedule order,
-//! * scheduled events can be cancelled (tombstoned), which the CLUES
-//!   reproduction needs (the paper describes pending power-offs being
-//!   cancelled when new jobs arrive early).
+//! * scheduled events can be cancelled, which the CLUES reproduction
+//!   needs (the paper describes pending power-offs being cancelled when
+//!   new jobs arrive early); stale cancels of already-fired events are
+//!   rejected without storing anything.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashSet};
@@ -83,9 +84,15 @@ impl<E> Ord for Entry<E> {
 }
 
 /// The event queue + virtual clock.
+///
+/// Cancellation is tracked through a *live* set (ids scheduled but not
+/// yet dispatched or cancelled) rather than a tombstone set: cancelling
+/// an id whose event already fired is a `false` no-op that stores
+/// nothing, so long replays with many stale cancels cannot leak memory,
+/// and the set's size is always bounded by the heap's.
 pub struct EventQueue<E> {
     heap: BinaryHeap<Entry<E>>,
-    cancelled: HashSet<EventId>,
+    live: HashSet<EventId>,
     seq: u64,
     now: SimTime,
     dispatched: u64,
@@ -101,7 +108,7 @@ impl<E> EventQueue<E> {
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
-            cancelled: HashSet::new(),
+            live: HashSet::new(),
             seq: 0,
             now: SimTime::ZERO,
             dispatched: 0,
@@ -129,24 +136,22 @@ impl<E> EventQueue<E> {
         let at = if at.0 < self.now.0 { self.now } else { at };
         let id = EventId(self.seq);
         self.heap.push(Entry { at, seq: self.seq, id, ev });
+        self.live.insert(id);
         self.seq += 1;
         id
     }
 
     /// Cancel a scheduled event. Returns false if it already fired or was
-    /// already cancelled.
+    /// already cancelled — in both cases without storing anything.
     pub fn cancel(&mut self, id: EventId) -> bool {
-        if id.0 >= self.seq {
-            return false;
-        }
-        self.cancelled.insert(id)
+        self.live.remove(&id)
     }
 
     /// Pop the next live event, advancing the clock.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
         while let Some(entry) = self.heap.pop() {
-            if self.cancelled.remove(&entry.id) {
-                continue;
+            if !self.live.remove(&entry.id) {
+                continue; // cancelled while queued
             }
             self.now = entry.at;
             self.dispatched += 1;
@@ -158,9 +163,8 @@ impl<E> EventQueue<E> {
     /// Time of the next live event without popping it.
     pub fn peek_time(&mut self) -> Option<SimTime> {
         while let Some(entry) = self.heap.peek() {
-            if self.cancelled.contains(&entry.id) {
-                let e = self.heap.pop().unwrap();
-                self.cancelled.remove(&e.id);
+            if !self.live.contains(&entry.id) {
+                self.heap.pop();
                 continue;
             }
             return Some(entry.at);
@@ -294,6 +298,35 @@ mod tests {
         let mut w = Recorder { seen: vec![] };
         run_to_completion(&mut w, &mut q);
         assert_eq!(w.seen, vec![(2.0, 8)]);
+    }
+
+    #[test]
+    fn stale_cancel_of_fired_event_is_rejected_without_leaking() {
+        let mut q = EventQueue::new();
+        let a = q.schedule_in(1.0, 7);
+        let mut w = Recorder { seen: vec![] };
+        run_to_completion(&mut w, &mut q);
+        assert_eq!(w.seen, vec![(1.0, 7)]);
+        // The event already dispatched: cancelling it must fail and must
+        // not tombstone anything (the live set stays bounded by the
+        // heap, which is empty here).
+        assert!(!q.cancel(a));
+        assert!(q.live.is_empty());
+        assert!(q.is_empty());
+        // Never-scheduled ids are rejected too.
+        assert!(!q.cancel(EventId(999)));
+    }
+
+    #[test]
+    fn cancelled_then_popped_entry_clears_live_set() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let a = q.schedule_in(1.0, 1);
+        q.schedule_in(2.0, 2);
+        assert!(q.cancel(a));
+        assert!(!q.cancel(a));
+        let (_, ev) = q.pop().unwrap();
+        assert_eq!(ev, 2);
+        assert!(q.live.is_empty());
     }
 
     #[test]

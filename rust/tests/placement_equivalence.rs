@@ -1,0 +1,248 @@
+//! The indexed placement structures must be *placement-for-placement*
+//! identical to the naive reference scheduler — same assignments, same
+//! queue order, same node snapshots — on randomized job/node/failure
+//! sequences (both placement policies), and the whole simulation must
+//! stay deterministic so figure outputs are reproducible byte-for-byte.
+
+use evhc::cluster::{HybridCluster, RunConfig, RunReport};
+use evhc::lrms::core::{BatchCore, Placement};
+use evhc::lrms::{JobState, NodeHealth};
+use evhc::sim::SimTime;
+use evhc::util::proptest::check_n;
+use evhc::util::prng::Prng;
+
+/// One randomized operation on an LRMS core.
+#[derive(Debug, Clone)]
+enum Op {
+    Register { idx: usize, slots: u32 },
+    Deregister { idx: usize },
+    Health { idx: usize, health: NodeHealth },
+    Submit { slots: u32 },
+    Cancel,
+    Schedule,
+    FinishOne { ok: bool },
+}
+
+fn gen_ops(r: &mut Prng) -> Vec<Op> {
+    let n = 40 + r.next_below(120) as usize;
+    (0..n)
+        .map(|_| match r.next_below(12) {
+            0 | 1 => Op::Register {
+                idx: r.next_below(12) as usize,
+                slots: 1 + r.next_below(4) as u32,
+            },
+            2 => Op::Deregister { idx: r.next_below(12) as usize },
+            3 => Op::Health {
+                idx: r.next_below(12) as usize,
+                health: match r.next_below(3) {
+                    0 => NodeHealth::Up,
+                    1 => NodeHealth::Down,
+                    _ => NodeHealth::Drain,
+                },
+            },
+            4 | 5 | 6 | 7 => Op::Submit {
+                slots: 1 + r.next_below(3) as u32,
+            },
+            8 => Op::Cancel,
+            9 | 10 => Op::Schedule,
+            _ => Op::FinishOne { ok: r.chance(0.9) },
+        })
+        .collect()
+}
+
+/// Apply `op` to one core; return the sweep result for Schedule ops.
+fn apply(c: &mut BatchCore, op: &Op, t: SimTime)
+    -> Option<Vec<(u64, u32)>> {
+    match op {
+        Op::Register { idx, slots } => {
+            c.register_node(&format!("n{idx}"), *slots, t);
+            None
+        }
+        Op::Deregister { idx } => {
+            let _ = c.deregister_node(&format!("n{idx}"), t);
+            None
+        }
+        Op::Health { idx, health } => {
+            let _ = c.set_node_health(&format!("n{idx}"), *health, t);
+            None
+        }
+        Op::Submit { slots } => {
+            c.submit("j", *slots, t);
+            None
+        }
+        Op::Cancel => {
+            // Cancel the first pending job, if any.
+            let pending = c
+                .jobs()
+                .iter()
+                .find(|j| j.state == JobState::Pending)
+                .map(|j| j.id);
+            if let Some(id) = pending {
+                let _ = c.cancel(id, t);
+            }
+            None
+        }
+        Op::Schedule => Some(
+            c.schedule(t)
+                .into_iter()
+                .map(|(j, n)| (j.0, n.0))
+                .collect(),
+        ),
+        Op::FinishOne { ok } => {
+            let running = c
+                .jobs()
+                .iter()
+                .find(|j| j.state == JobState::Running)
+                .map(|j| j.id);
+            if let Some(id) = running {
+                let _ = c.on_job_finished(id, *ok, t);
+            }
+            None
+        }
+    }
+}
+
+/// Full observable snapshot of a core, for equality checks.
+fn snapshot(c: &BatchCore) -> String {
+    let mut s = String::new();
+    for n in c.nodes() {
+        s.push_str(&format!(
+            "{}:{}/{}:{:?}:{:?};",
+            n.name, n.used_slots, n.slots, n.health, n.idle_since
+        ));
+    }
+    s.push('|');
+    for j in c.jobs() {
+        s.push_str(&format!(
+            "{}:{:?}:{:?}:{}:{:?};",
+            j.id, j.state, j.node, j.requeues, j.started_at
+        ));
+    }
+    s.push_str(&format!(
+        "|pending={} running={} free={}",
+        c.pending(),
+        c.running(),
+        c.free_slots()
+    ));
+    s
+}
+
+fn equivalence_for(placement: Placement) {
+    check_n(
+        &format!("indexed-matches-naive-{placement:?}"),
+        48,
+        gen_ops,
+        |ops| {
+            let mut indexed = BatchCore::new(placement);
+            let mut naive = BatchCore::new_naive(placement);
+            let mut t = 0.0;
+            for (step, op) in ops.iter().enumerate() {
+                t += 1.0;
+                let a = apply(&mut indexed, op, SimTime(t));
+                let b = apply(&mut naive, op, SimTime(t));
+                if a != b {
+                    return Err(format!(
+                        "step {step} {op:?}: indexed {a:?} != naive {b:?}"
+                    ));
+                }
+                let (sa, sb) = (snapshot(&indexed), snapshot(&naive));
+                if sa != sb {
+                    return Err(format!(
+                        "step {step} {op:?}: state diverged\n  \
+                         indexed: {sa}\n  naive:   {sb}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_indexed_matches_naive_pack_first_fit() {
+    equivalence_for(Placement::PackFirstFit);
+}
+
+#[test]
+fn prop_indexed_matches_naive_spread_most_free() {
+    equivalence_for(Placement::SpreadMostFree);
+}
+
+/// Heavier smoke at a larger node count: a burst of jobs over 300 nodes
+/// with failures, drained to completion on both schedulers.
+#[test]
+fn indexed_matches_naive_on_a_dense_burst() {
+    for placement in [Placement::PackFirstFit, Placement::SpreadMostFree] {
+        let mut indexed = BatchCore::new(placement);
+        let mut naive = BatchCore::new_naive(placement);
+        for c in [&mut indexed, &mut naive] {
+            for i in 0..300u32 {
+                c.register_node(&format!("wn{i}"), 1 + (i % 3),
+                                SimTime(0.0));
+            }
+            for i in 0..1500u32 {
+                c.submit("", 1 + (i % 2), SimTime(0.0));
+            }
+        }
+        let mut t = 1.0;
+        loop {
+            let a = indexed.schedule(SimTime(t));
+            let b = naive.schedule(SimTime(t));
+            assert_eq!(a, b, "{placement:?} sweep at t={t}");
+            // Inject a node failure mid-drain once.
+            if (t - 3.0).abs() < 1e-9 {
+                let ra = indexed
+                    .set_node_health("wn7", NodeHealth::Down, SimTime(t))
+                    .unwrap();
+                let rb = naive
+                    .set_node_health("wn7", NodeHealth::Down, SimTime(t))
+                    .unwrap();
+                assert_eq!(ra, rb);
+            }
+            let running: Vec<_> = indexed
+                .jobs()
+                .iter()
+                .filter(|j| j.state == JobState::Running)
+                .map(|j| j.id)
+                .collect();
+            if running.is_empty() && a.is_empty() {
+                break;
+            }
+            for id in running {
+                indexed.on_job_finished(id, true, SimTime(t + 1.0)).unwrap();
+                naive.on_job_finished(id, true, SimTime(t + 1.0)).unwrap();
+            }
+            t += 1.0;
+            assert!(t < 10_000.0, "drain did not converge");
+        }
+        assert_eq!(indexed.free_slots(), naive.free_slots());
+        assert_eq!(indexed.pending(), naive.pending());
+    }
+}
+
+fn small_run() -> RunReport {
+    let mut cfg = RunConfig::paper_usecase(0.05, 42);
+    cfg.inference_every = 0;
+    HybridCluster::new(cfg).unwrap().run().unwrap()
+}
+
+/// The end-to-end simulation (and therefore every figure/table derived
+/// from it) must be byte-identical across runs of the same seed — the
+/// guarantee golden_check-style comparisons rest on.
+#[test]
+fn figure_outputs_byte_identical_across_runs() {
+    let a = small_run();
+    let b = small_run();
+    assert_eq!(a.recorder.milestones, b.recorder.milestones);
+    assert_eq!(
+        a.recorder.fig10_usage(120.0, a.makespan).to_csv(),
+        b.recorder.fig10_usage(120.0, b.makespan).to_csv()
+    );
+    assert_eq!(
+        a.recorder.fig11_states(120.0, a.makespan).to_csv(),
+        b.recorder.fig11_states(120.0, b.makespan).to_csv()
+    );
+    // Cost-table inputs too (§4.2 numbers).
+    assert_eq!(a.total_cost_usd, b.total_cost_usd);
+    assert_eq!(a.busy_secs, b.busy_secs);
+}

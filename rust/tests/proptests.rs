@@ -148,13 +148,12 @@ fn lrms_invariants(mk: fn() -> Box<dyn Lrms>) {
             // Invariant 3: running jobs sit on Up nodes with capacity.
             for j in &jobs {
                 if j.state == JobState::Running {
-                    let node = j.node.as_ref()
+                    let nid = j.node
                         .ok_or("running job without node")?;
-                    let info = l.nodes().into_iter()
-                        .find(|n| &n.name == node)
-                        .ok_or(format!("running on missing node {node}"))?;
-                    if info.health == NodeHealth::Down {
-                        return Err(format!("running on Down node {node}"));
+                    let stat = l.node_stat(nid)
+                        .ok_or(format!("running on missing node {nid}"))?;
+                    if stat.health == NodeHealth::Down {
+                        return Err(format!("running on Down node {nid}"));
                     }
                 }
             }
@@ -381,7 +380,7 @@ fn prop_cluster_scenarios_complete_and_respect_bounds() {
         // Worker-count bound: count concurrent worker incarnations from
         // the recorder (PoweringOn..Off window) at each transition point.
         let mut alive = std::collections::HashSet::new();
-        for (_, node, s) in &report.recorder.transitions {
+        for (_, node, s) in &report.recorder.transitions_named() {
             if !node.starts_with("vnode-") {
                 continue;
             }

@@ -80,15 +80,16 @@ fn aws_deploys_take_about_twenty_minutes() {
 #[test]
 fn vnode5_failure_and_poweroff_cancellation_episodes() {
     let report = paper_run(42);
-    assert!(report.recorder.transitions.iter().any(|(_, n, s)|
+    let trans = report.recorder.transitions_named();
+    assert!(trans.iter().any(|(_, n, s)|
         n == "vnode-5" && *s == DisplayState::Failed),
         "vnode-5 must be marked failed");
     // Replacement after the failure (jobs remained).
-    let failed_at = report.recorder.transitions.iter()
+    let failed_at = trans.iter()
         .find(|(_, n, s)| n == "vnode-5" && *s == DisplayState::Failed)
         .map(|(t, _, _)| t.0)
         .unwrap();
-    assert!(report.recorder.transitions.iter().any(|(t, n, s)|
+    assert!(trans.iter().any(|(t, n, s)|
         t.0 > failed_at && n.starts_with("vnode-")
         && *s == DisplayState::PoweringOn),
         "a replacement must be powered on after the failure");
