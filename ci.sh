@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 verify, then the scheduling-scale bench in
 # quick mode (writes BENCH_scale.json at the repo root so every run
-# leaves a perf datapoint behind).
+# leaves a perf datapoint behind), then a warn-only diff against the
+# committed BENCH_baseline.json.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -13,6 +14,19 @@ cargo test -q
 
 echo "== perf: scale bench (quick mode) =="
 EVHC_SCALE_BENCH_QUICK=1 cargo bench --bench scale
+
+echo "== perf: baseline comparison (warn-only) =="
+if [ -f BENCH_baseline.json ]; then
+    cargo run --release --example bench_compare -- \
+        BENCH_baseline.json BENCH_scale.json || true
+else
+    # On an ephemeral checkout this seed disappears with the workspace:
+    # the diff step stays inert until someone commits the seeded file.
+    echo "WARNING: no BENCH_baseline.json committed — seeding it from"
+    echo "this run. COMMIT BENCH_baseline.json to activate the perf"
+    echo "comparison; until then this step compares nothing."
+    cp BENCH_scale.json BENCH_baseline.json
+fi
 
 echo "== done; BENCH_scale.json =="
 cat BENCH_scale.json

@@ -1,0 +1,102 @@
+//! Compare a fresh `BENCH_scale.json` against the committed
+//! `BENCH_baseline.json`, printing an events/sec and ms/tick table per
+//! scenario/section. Warn-only: regressions are reported loudly but the
+//! exit code stays 0 — `ci.sh` runs this after every bench pass.
+//!
+//!     cargo run --release --example bench_compare -- \
+//!         BENCH_baseline.json BENCH_scale.json
+
+use evhc::api::json::{parse, Json};
+
+/// Sections of a scenario row that carry Measured-shaped objects.
+const SECTIONS: &[(&str, &[&str])] = &[
+    ("indexed", &["indexed"]),
+    ("naive", &["naive"]),
+    ("sharded/single_queue", &["sharded", "single_queue"]),
+    ("sharded/parallel", &["sharded", "parallel"]),
+];
+
+fn lookup<'a>(row: &'a Json, path: &[&str]) -> Option<&'a Json> {
+    let mut cur = row;
+    for &key in path {
+        cur = cur.get(key)?;
+    }
+    Some(cur)
+}
+
+fn metric(row: &Json, path: &[&str], name: &str) -> Option<f64> {
+    lookup(row, path)?.get(name)?.as_f64()
+}
+
+fn scenarios(doc: &Json) -> Vec<(String, &Json)> {
+    let Some(Json::Array(rows)) = doc.get("scenarios") else {
+        return Vec::new();
+    };
+    rows.iter()
+        .filter_map(|r| {
+            r.get("name")
+                .and_then(|n| n.as_str())
+                .map(|n| (n.to_string(), r))
+        })
+        .collect()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() != 3 {
+        eprintln!("usage: bench_compare <baseline.json> <fresh.json>");
+        std::process::exit(2);
+    }
+    let read = |path: &str| -> Json {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("reading {path}: {e}"));
+        parse(&text).unwrap_or_else(|e| panic!("parsing {path}: {e}"))
+    };
+    let baseline = read(&args[1]);
+    let fresh = read(&args[2]);
+
+    println!("{:<22} {:<22} {:>14} {:>14} {:>8}", "scenario", "section",
+             "base ev/s", "fresh ev/s", "delta");
+    println!("{}", "-".repeat(84));
+    let mut regressions = 0u32;
+    let base_rows = scenarios(&baseline);
+    for (name, fresh_row) in scenarios(&fresh) {
+        let Some((_, base_row)) =
+            base_rows.iter().find(|(n, _)| *n == name)
+        else {
+            println!("{name:<22} (new scenario, no baseline)");
+            continue;
+        };
+        for &(label, path) in SECTIONS {
+            let (Some(b), Some(f)) = (
+                metric(base_row, path, "events_per_sec"),
+                metric(fresh_row, path, "events_per_sec"),
+            ) else {
+                continue;
+            };
+            let delta = if b > 0.0 { (f - b) / b * 100.0 } else { 0.0 };
+            let mark = if delta < -10.0 {
+                regressions += 1;
+                "  <-- REGRESSION"
+            } else {
+                ""
+            };
+            println!("{name:<22} {label:<22} {b:>14.0} {f:>14.0} \
+                      {delta:>+7.1}%{mark}");
+            if let (Some(bm), Some(fm)) = (
+                metric(base_row, path, "ms_per_tick"),
+                metric(fresh_row, path, "ms_per_tick"),
+            ) {
+                let dm = if bm > 0.0 { (fm - bm) / bm * 100.0 } else { 0.0 };
+                println!("{:<22} {:<22} {bm:>11.4} ms {fm:>11.4} ms \
+                          {dm:>+7.1}%", "", "  ms/tick");
+            }
+        }
+    }
+    if regressions > 0 {
+        println!("\nWARNING: {regressions} section(s) regressed by more \
+                  than 10% events/sec (warn-only for now).");
+    } else {
+        println!("\nno events/sec regressions beyond 10%.");
+    }
+}

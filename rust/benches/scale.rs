@@ -1,13 +1,20 @@
 //! SCALE — scheduling hot-path throughput at production scale.
 //!
 //! Generates synthetic HTC scenarios (1k/5k/10k nodes spread over 2–8
-//! sites, 100k–1M single/dual-slot jobs in four submission blocks),
-//! replays them through the discrete-event queue against the LRMS core,
-//! and reports events/sec and ms per scheduling sweep. The 5k-node
-//! scenario is run on both the indexed scheduler and the naive reference
-//! scheduler *in the same process* so the speedup number is apples to
-//! apples; results are written to `BENCH_scale.json` at the repo root so
-//! future PRs accumulate a perf trajectory.
+//! sites, 100k–1M single/dual-slot jobs in four submission blocks) and
+//! replays them three ways *in the same process* so the speedups are
+//! apples to apples:
+//!
+//! * `indexed` vs `naive-reference` — one global event queue against
+//!   the indexed / naive LRMS core (the PR-1 scheduling comparison),
+//! * `sharded` — the same workload split into per-site shards: the
+//!   single-queue engine (serial deterministic merge) vs the parallel
+//!   windowed engine of `evhc::sim::shard`, with an equality assert
+//!   that both replays produced identical per-site outcomes.
+//!
+//! Results are written to `BENCH_scale.json` at the repo root so future
+//! PRs accumulate a perf trajectory (`ci.sh` diffs it against the
+//! committed `BENCH_baseline.json`).
 //!
 //!     cargo bench --bench scale              # full suite (~10k nodes)
 //!     EVHC_SCALE_BENCH_QUICK=1 cargo bench --bench scale   # CI mode
@@ -17,7 +24,9 @@ use std::time::Instant;
 use evhc::api::json::Json;
 use evhc::lrms::core::{BatchCore, Placement};
 use evhc::lrms::JobId;
-use evhc::sim::{EventQueue, SimTime};
+use evhc::sim::shard::{default_threads, run_sharded, run_sharded_serial,
+                       ControlPlane, SiteCtx, SiteShard};
+use evhc::sim::{EventQueue, ShardEvent, ShardKey, ShardedQueue, SimTime};
 use evhc::util::bench::section;
 use evhc::util::prng::Prng;
 
@@ -101,6 +110,157 @@ fn run_scenario(core: &mut BatchCore, sc: &Scenario, seed: u64)
     }
 }
 
+// ---------------------------------------------------------------------
+// Sharded replay: the same workload split into per-site shards.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum SEv {
+    /// Control shard: fan one submission block out to every site.
+    Block { jobs_per_site: u32 },
+    /// Site shard: submit `n` jobs at this site.
+    Submit { site: u32, n: u32 },
+    /// Site shard: a job finished at this site.
+    Done { site: u32, job: JobId },
+}
+
+impl ShardEvent for SEv {
+    fn shard_key(&self) -> ShardKey {
+        match self {
+            SEv::Block { .. } => ShardKey::Control,
+            SEv::Submit { site, .. } | SEv::Done { site, .. } => {
+                ShardKey::Site(*site)
+            }
+        }
+    }
+}
+
+/// One cloud site's shard: its own LRMS core, rng and counters.
+struct SiteSim {
+    site: u32,
+    core: BatchCore,
+    rng: Prng,
+    completed: u32,
+    ticks: u64,
+    tick_secs: f64,
+}
+
+impl SiteShard for SiteSim {
+    type Event = SEv;
+
+    fn handle(&mut self, t: SimTime, ev: SEv, ctx: &mut SiteCtx<'_, SEv>) {
+        match ev {
+            SEv::Submit { n, .. } => {
+                for i in 0..n {
+                    // Mixed 1/2-slot jobs; empty name → no allocation.
+                    self.core.submit("", 1 + (i % 2), t);
+                }
+            }
+            SEv::Done { job, .. } => {
+                let _ = self.core.on_job_finished(job, true, t);
+                self.completed += 1;
+            }
+            SEv::Block { .. } => unreachable!("control event in site shard"),
+        }
+        let t0 = Instant::now();
+        let assigned = self.core.schedule(t);
+        self.tick_secs += t0.elapsed().as_secs_f64();
+        self.ticks += 1;
+        for (job, _node) in assigned {
+            ctx.schedule_in(15.0 + self.rng.next_f64() * 5.0, SEv::Done {
+                site: self.site,
+                job,
+            });
+        }
+    }
+}
+
+/// Control plane: only feeds submission blocks; sites never talk back,
+/// so the lookahead is unbounded and windows stretch block to block.
+struct BlockFeeder {
+    sites: u32,
+}
+
+impl ControlPlane for BlockFeeder {
+    type Site = SiteSim;
+
+    fn handle(&mut self, _sites: &mut [SiteSim], t: SimTime, ev: SEv,
+              q: &mut ShardedQueue<SEv>) {
+        if let SEv::Block { jobs_per_site } = ev {
+            for s in 0..self.sites {
+                q.schedule_at(t, SEv::Submit { site: s, n: jobs_per_site });
+            }
+        }
+    }
+}
+
+fn sharded_world(sc: &Scenario, seed: u64)
+    -> (BlockFeeder, Vec<SiteSim>, ShardedQueue<SEv>) {
+    let mut sites = Vec::new();
+    for s in 0..sc.sites {
+        let mut core = BatchCore::new(Placement::PackFirstFit);
+        let mut i = s;
+        while i < sc.nodes {
+            core.register_node(&format!("s{s}-wn-{i}"), sc.slots_per_node,
+                               SimTime(0.0));
+            i += sc.sites;
+        }
+        sites.push(SiteSim {
+            site: s,
+            core,
+            rng: Prng::new(seed ^ (s as u64 + 1).wrapping_mul(0x9E37)),
+            completed: 0,
+            ticks: 0,
+            tick_secs: 0.0,
+        });
+    }
+    let mut q: ShardedQueue<SEv> = ShardedQueue::new(sc.sites as usize);
+    let jps = sc.jobs / sc.sites;
+    let blocks = 4u32;
+    for b in 0..blocks {
+        let n = jps / blocks + if b == 0 { jps % blocks } else { 0 };
+        q.schedule_at(SimTime(b as f64 * 900.0),
+                      SEv::Block { jobs_per_site: n });
+    }
+    (BlockFeeder { sites: sc.sites }, sites, q)
+}
+
+/// Per-site outcome digest used to assert single-queue ≡ parallel.
+type SiteDigest = Vec<(u32, usize, u32, u64)>;
+
+fn run_sharded_scenario(sc: &Scenario, seed: u64, parallel: bool,
+                        threads: usize) -> (Measured, SiteDigest) {
+    let (mut feeder, mut sites, mut q) = sharded_world(sc, seed);
+    let wall = Instant::now();
+    if parallel {
+        run_sharded(&mut feeder, &mut sites, &mut q,
+                    SimTime(f64::INFINITY), threads);
+    } else {
+        run_sharded_serial(&mut feeder, &mut sites, &mut q,
+                           SimTime(f64::INFINITY));
+    }
+    let wall_s = wall.elapsed().as_secs_f64();
+    let events = q.dispatched();
+    let completed: u32 = sites.iter().map(|s| s.completed).sum();
+    let expected = (sc.jobs / sc.sites) * sc.sites;
+    assert_eq!(completed, expected, "sharded run must drain the workload");
+    let ticks: u64 = sites.iter().map(|s| s.ticks).sum();
+    let tick_secs: f64 = sites.iter().map(|s| s.tick_secs).sum();
+    let digest = sites
+        .iter()
+        .map(|s| (s.completed, s.core.pending(), s.core.free_slots(),
+                  s.ticks))
+        .collect();
+    let m = Measured {
+        events,
+        wall_s,
+        events_per_sec: events as f64 / wall_s.max(1e-9),
+        ms_per_tick: tick_secs * 1e3 / ticks.max(1) as f64,
+        completed,
+    };
+    (m, digest)
+}
+
 fn measured_json(m: &Measured) -> Json {
     Json::Object(vec![
         ("events".into(), Json::Num(m.events as f64)),
@@ -175,6 +335,23 @@ fn main() {
                       (indexed vs naive)");
         }
 
+        // Sharded engine: the same workload split into per-site shards,
+        // replayed through the single-queue (serial merge) engine and
+        // the parallel windowed engine. Both must agree exactly.
+        let threads = default_threads(sc.sites as usize);
+        let (shard_single, d_single) =
+            run_sharded_scenario(sc, 7, false, 1);
+        let (shard_parallel, d_parallel) =
+            run_sharded_scenario(sc, 7, true, threads);
+        assert_eq!(d_single, d_parallel,
+                   "parallel sharded replay diverged from single-queue");
+        report_line("shard-single-q", &shard_single);
+        report_line(&format!("shard-par[{threads}t]"), &shard_parallel);
+        let shard_speedup = shard_parallel.events_per_sec
+            / shard_single.events_per_sec.max(1e-9);
+        println!("  sharded speedup    {shard_speedup:>11.1}x events/sec \
+                  (parallel vs single-queue)");
+
         let mut fields = vec![
             ("name".into(), Json::Str(sc.name.into())),
             ("nodes".into(), Json::Num(sc.nodes as f64)),
@@ -190,13 +367,21 @@ fn main() {
         if let Some(s) = speedup {
             fields.push(("speedup_events_per_sec".into(), Json::Num(s)));
         }
+        fields.push(("sharded".into(), Json::Object(vec![
+            ("single_queue".into(), measured_json(&shard_single)),
+            ("parallel".into(), measured_json(&shard_parallel)),
+            ("threads".into(), Json::Num(threads as f64)),
+            ("speedup_events_per_sec".into(), Json::Num(shard_speedup)),
+        ])));
         rows.push(Json::Object(fields));
     }
 
     // Spread policy spot-check so both index structures stay honest.
     section("SCALE: SpreadMostFree spot-check");
+    // Distinct names per mode so bench_compare never diffs a 10k-job
+    // quick run against a 50k-job full baseline row.
     let sc = Scenario {
-        name: "spread-2k-50k",
+        name: if quick { "spread-2k-10k" } else { "spread-2k-50k" },
         nodes: 2000,
         sites: 4,
         jobs: if quick { 10_000 } else { 50_000 },

@@ -20,7 +20,7 @@
 use std::collections::HashMap;
 
 use crate::ids::{NodeId, NodeNames};
-use crate::lrms::{Lrms, NodeHealth};
+use crate::lrms::{Lrms, NodeHealth, NodeStat};
 use crate::sim::SimTime;
 
 /// CLUES configuration (a subset of its real policy knobs).
@@ -95,6 +95,9 @@ pub struct Clues {
     nodes: HashMap<NodeId, Tracked>,
     /// Decision log for reports: (t, action).
     pub log: Vec<(SimTime, Action)>,
+    /// Reused snapshot buffer: at steady state a tick performs no
+    /// per-tick `Vec<NodeStat>` allocation, whatever the node count.
+    stats_scratch: Vec<NodeStat>,
 }
 
 impl Clues {
@@ -104,7 +107,13 @@ impl Clues {
 
     /// Share the cluster-wide interner so ids line up with the LRMS.
     pub fn with_names(cfg: CluesConfig, names: NodeNames) -> Clues {
-        Clues { cfg, names, nodes: HashMap::new(), log: Vec::new() }
+        Clues {
+            cfg,
+            names,
+            nodes: HashMap::new(),
+            log: Vec::new(),
+            stats_scratch: Vec::new(),
+        }
     }
 
     /// Register a node under CLUES management (e.g. initial workers, or
@@ -174,7 +183,10 @@ impl Clues {
         is_down: &dyn Fn(&str) -> bool,
     ) -> Vec<Action> {
         let mut actions = Vec::new();
-        let stats = lrms.node_stats();
+        // Owned scratch (taken off self) so the sections below may
+        // borrow `self.nodes` mutably while iterating the snapshots.
+        let mut stats = std::mem::take(&mut self.stats_scratch);
+        lrms.node_stats_into(&mut stats);
 
         // --- 1. Failure detection on On nodes ----------------------------
         for s in &stats {
@@ -300,6 +312,7 @@ impl Clues {
         for a in &actions {
             self.log.push((t, a.clone()));
         }
+        self.stats_scratch = stats;
         actions
     }
 }

@@ -24,7 +24,14 @@
 //! CLUES and the metrics recorder, and every per-event structure (node
 //! runtime map, events, accounting indices) is keyed by the dense
 //! [`NodeId`] — the job-completion hot path performs no string hashing,
-//! cloning, or O(nodes) scans.
+//! cloning, or O(nodes) scans. Events are routed through the sharded
+//! queue of [`crate::sim::shard`]: every [`Ev`] declares a shard key
+//! (its cloud site, or the control shard for orchestrator/CLUES/deploy
+//! traffic), so the replay order is the engine's deterministic
+//! `(time, shard, seq)` merge. The full cluster world runs in merged
+//! (serial) mode — its handlers touch the shared LRMS/CLUES state on
+//! every event — while fully site-local worlds (see `benches/scale.rs`)
+//! replay their shards in parallel.
 
 use std::collections::HashMap;
 
@@ -34,13 +41,14 @@ use crate::clues::{Action, Clues, CluesConfig, PowerState};
 use crate::cloudsim::{CloudSite, SiteSpec, VmId};
 use crate::ids::{NodeId, NodeNames};
 use crate::im::{Im, NodeRole};
-use crate::lrms::{HtCondor, JobId, Lrms, NodeHealth, Slurm};
+use crate::lrms::{HtCondor, JobId, Lrms, NodeHealth, NodeStat, Slurm};
 use crate::metrics::{DisplayState, Recorder};
 use crate::netsim::{LinkSpec, Network};
 use crate::orchestrator::{select_site, Sla, UpdateId, UpdateOp,
                           WorkflowEngine};
 use crate::runtime::ModelRuntime;
-use crate::sim::{run_until, EventQueue, SimTime, World};
+use crate::sim::{run_merged_until, MergedWorld, ShardEvent, ShardKey,
+                 ShardedQueue, SimTime};
 use crate::tosca::{ClusterTemplate, LrmsKind};
 use crate::util::prng::Prng;
 use crate::vrouter::Overlay;
@@ -90,7 +98,9 @@ impl RunConfig {
 }
 
 /// Simulation events. Node references are interned ids; names are
-/// resolved only when a milestone or report line is rendered.
+/// resolved only when a milestone or report line is rendered. Every
+/// event declares its shard: site-local traffic carries its cloud-site
+/// index, orchestrator/CLUES/deploy traffic rides the control shard.
 #[derive(Debug, Clone)]
 pub enum Ev {
     /// Kick off the initial deployment (FE + initial workers).
@@ -100,19 +110,35 @@ pub enum Ev {
     /// A VM finished booting.
     VmBooted { site: usize, vm: VmId, node: NodeId, failed: bool },
     /// Contextualization finished for a node.
-    CtxDone { node: NodeId },
+    CtxDone { site: usize, node: NodeId },
     /// A job finished on a node. `gen` is the job's requeue count at
     /// scheduling time, so stale completions from executions that were
     /// requeued away (node failure) are recognized and dropped.
-    JobDone { job: JobId, node: NodeId, gen: u32 },
+    JobDone { site: usize, job: JobId, node: NodeId, gen: u32 },
     /// CLUES monitor tick.
     CluesTick,
     /// The workflow engine may start queued updates.
     OrchestratorPump,
     /// Provider finished terminating a node's VM.
-    TerminationDone { node: NodeId, update: Option<UpdateId> },
+    TerminationDone { site: usize, node: NodeId, update: Option<UpdateId> },
     /// A running VM hard-crashed (stochastic failure injection).
     VmCrashed { site: usize, vm: VmId, node: NodeId },
+}
+
+impl ShardEvent for Ev {
+    fn shard_key(&self) -> ShardKey {
+        match self {
+            Ev::Deploy
+            | Ev::SubmitBlock(_)
+            | Ev::CluesTick
+            | Ev::OrchestratorPump => ShardKey::Control,
+            Ev::VmBooted { site, .. }
+            | Ev::CtxDone { site, .. }
+            | Ev::JobDone { site, .. }
+            | Ev::TerminationDone { site, .. }
+            | Ev::VmCrashed { site, .. } => ShardKey::Site(*site as u32),
+        }
+    }
 }
 
 /// Runtime info per deployment node.
@@ -218,6 +244,9 @@ pub struct HybridCluster {
     clues_ticking: bool,
     /// When the initial cluster came up (workload + injection t=0).
     workload_t0: SimTime,
+    /// Scratch buffer for per-tick node snapshots (reused; a 10k-node
+    /// tick allocates no per-tick `Vec`).
+    stats_scratch: Vec<NodeStat>,
 }
 
 #[derive(Debug, Clone)]
@@ -310,6 +339,7 @@ impl HybridCluster {
             inference_wall_secs: 0.0,
             clues_ticking: false,
             workload_t0: SimTime::ZERO,
+            stats_scratch: Vec::new(),
             cfg,
         })
     }
@@ -317,13 +347,13 @@ impl HybridCluster {
     /// Deploy + run the full scenario to completion. Returns the report.
     pub fn run(mut self) -> anyhow::Result<RunReport> {
         let wall0 = std::time::Instant::now();
-        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut q: ShardedQueue<Ev> = ShardedQueue::new(self.sites.len());
         // The paper's timeline (Fig. 9) is relative to the moment the
         // initial cluster is up; workload blocks are scheduled when the
         // InitialDeploy update completes.
         q.schedule_at(SimTime::ZERO, Ev::Deploy);
         let horizon = self.cfg.horizon;
-        run_until(&mut self, &mut q, horizon);
+        run_merged_until(&mut self, &mut q, horizon);
         let makespan = q.now();
 
         // ---- report assembly -------------------------------------------
@@ -399,7 +429,7 @@ impl HybridCluster {
     }
 
     /// Provision one node and schedule its boot completion.
-    fn provision(&mut self, q: &mut EventQueue<Ev>, site: usize, name: &str,
+    fn provision(&mut self, q: &mut ShardedQueue<Ev>, site: usize, name: &str,
                  role: NodeRole, t: SimTime) -> anyhow::Result<()> {
         let id = self.names.intern(name);
         let itype = match role {
@@ -492,7 +522,7 @@ impl HybridCluster {
 
     /// Start adding a worker (one orchestrator update). Returns false if
     /// no site has capacity.
-    fn start_add_worker(&mut self, q: &mut EventQueue<Ev>, name: &str,
+    fn start_add_worker(&mut self, q: &mut ShardedQueue<Ev>, name: &str,
                         t: SimTime) -> bool {
         let used = self.used_workers_per_site();
         let cpus = self.cfg.template.worker.num_cpus;
@@ -550,7 +580,7 @@ impl HybridCluster {
 
     /// The initial cluster is up: anchor the workload timeline here
     /// (the paper's "15:00") and start the CLUES monitor loop.
-    fn begin_workload(&mut self, q: &mut EventQueue<Ev>, t: SimTime) {
+    fn begin_workload(&mut self, q: &mut ShardedQueue<Ev>, t: SimTime) {
         self.workload_t0 = t;
         self.recorder.milestone(t, format!(
             "initial cluster ready ({} workers) — workload timeline t0",
@@ -582,10 +612,14 @@ impl HybridCluster {
     }
 
     /// Run LRMS scheduling and materialize job executions as events.
-    fn pump_jobs(&mut self, q: &mut EventQueue<Ev>, t: SimTime) {
+    fn pump_jobs(&mut self, q: &mut ShardedQueue<Ev>, t: SimTime) {
         for (job, node) in self.lrms.schedule(t) {
             let mut secs = Workload::sample_job_secs(&mut self.rng);
+            // Scheduled jobs always run on a joined node, whose site is
+            // known — that site's shard carries the completion event.
+            let mut site = 0usize;
             if let Some(rt) = self.nodes.get_mut(&node) {
+                site = rt.site;
                 if !rt.setup_done {
                     // One-time udocker install + image pull + container
                     // create (paper: ~4 min 30 s).
@@ -610,7 +644,7 @@ impl HybridCluster {
             }
             self.next_file_id += 1;
             let gen = self.lrms.job(job).map(|j| j.requeues).unwrap_or(0);
-            q.schedule_in(secs, Ev::JobDone { job, node, gen });
+            q.schedule_in(secs, Ev::JobDone { site, job, node, gen });
         }
     }
 
@@ -623,7 +657,7 @@ impl HybridCluster {
     // CLUES action execution
     // ---------------------------------------------------------------
 
-    fn apply_clues_actions(&mut self, q: &mut EventQueue<Ev>,
+    fn apply_clues_actions(&mut self, q: &mut ShardedQueue<Ev>,
                            actions: Vec<Action>, t: SimTime) {
         for action in actions {
             match action {
@@ -659,8 +693,9 @@ impl HybridCluster {
                     q.schedule_in(0.0, Ev::OrchestratorPump);
                 }
                 Action::CancelPowerOff { node } => {
-                    let id = self.engine.find_queued(|op| matches!(op,
-                        UpdateOp::RemoveWorker { name } if *name == node));
+                    // O(1) keyed lookup instead of scanning the whole
+                    // update history.
+                    let id = self.engine.find_queued_remove(&node);
                     match id {
                         Some(id) if self.engine.cancel(id, t).is_ok() => {
                             // Rescued: the node never left.
@@ -703,7 +738,7 @@ impl HybridCluster {
     }
 
     /// Start any updates the (possibly serialized) engine allows.
-    fn pump_orchestrator(&mut self, q: &mut EventQueue<Ev>, t: SimTime) {
+    fn pump_orchestrator(&mut self, q: &mut ShardedQueue<Ev>, t: SimTime) {
         for update in self.engine.startable(t) {
             match &update.op {
                 UpdateOp::AddWorker { name } => {
@@ -734,6 +769,7 @@ impl HybridCluster {
                         &mut self.sites, rt.site, rt.vm, name, t) {
                         Ok(secs) => {
                             q.schedule_in(secs, Ev::TerminationDone {
+                                site: rt.site,
                                 node: id,
                                 update: Some(update.id),
                             });
@@ -768,10 +804,10 @@ impl HybridCluster {
     }
 }
 
-impl World for HybridCluster {
+impl MergedWorld for HybridCluster {
     type Event = Ev;
 
-    fn handle(&mut self, t: SimTime, ev: Ev, q: &mut EventQueue<Ev>) {
+    fn handle(&mut self, t: SimTime, ev: Ev, q: &mut ShardedQueue<Ev>) {
         match ev {
             Ev::Deploy => {
                 self.engine.submit(UpdateOp::InitialDeploy, t);
@@ -832,10 +868,10 @@ impl World for HybridCluster {
                     let _ = self.im.connect_node(&name, t);
                 }
                 let ctx = self.ctx_secs.get(&node).copied().unwrap_or(300.0);
-                q.schedule_in(ctx, Ev::CtxDone { node });
+                q.schedule_in(ctx, Ev::CtxDone { site, node });
             }
 
-            Ev::CtxDone { node } => {
+            Ev::CtxDone { site: _, node } => {
                 let Some(rt) = self.nodes.get_mut(&node) else { return };
                 rt.joined_at = Some(t);
                 let (site, role, requested_at) =
@@ -943,7 +979,7 @@ impl World for HybridCluster {
                 }
             }
 
-            Ev::JobDone { job, node, gen } => {
+            Ev::JobDone { site: _, job, node, gen } => {
                 // Drop stale completions: the execution this event
                 // belongs to was requeued away (node went down).
                 let live = self.lrms.job(job).map(|j| {
@@ -981,14 +1017,16 @@ impl World for HybridCluster {
                 self.apply_clues_actions(q, actions, t);
                 // Recovery path for transient flaps: if the monitor reads
                 // the node as up again and the LRMS had it Down, revive.
-                let down_nodes: Vec<crate::ids::NodeId> = self
-                    .lrms
-                    .node_stats()
-                    .iter()
-                    .filter(|s| s.health == NodeHealth::Down)
-                    .map(|s| s.id)
-                    .collect();
-                for id in down_nodes {
+                // The snapshot buffer is owned scratch (taken off self),
+                // so the loop body may mutate the LRMS while iterating —
+                // and the tick allocates nothing at steady state.
+                let mut stats = std::mem::take(&mut self.stats_scratch);
+                self.lrms.node_stats_into(&mut stats);
+                for s in &stats {
+                    if s.health != NodeHealth::Down {
+                        continue;
+                    }
+                    let id = s.id;
                     let name = self.names.name(id);
                     // Only revive if CLUES has not already failed it.
                     if !self.reported_down(&name, t)
@@ -998,6 +1036,7 @@ impl World for HybridCluster {
                             &name, NodeHealth::Up, t);
                     }
                 }
+                self.stats_scratch = stats;
                 self.pump_jobs(q, t);
                 // Keep ticking while there is anything left to manage.
                 let all_workers_off = self
@@ -1043,7 +1082,7 @@ impl World for HybridCluster {
                 self.pump_jobs(q, t);
             }
 
-            Ev::TerminationDone { node, update } => {
+            Ev::TerminationDone { site: _, node, update } => {
                 if let Some(rt) = self.nodes.remove(&node) {
                     let _ = self.sites[rt.site]
                         .complete_termination(rt.vm, t);
@@ -1223,7 +1262,6 @@ mod tests {
 #[cfg(test)]
 mod debug_tests {
     use super::*;
-    use crate::sim::run_until;
 
     #[test]
     fn nonhybrid_engine_drains() {
@@ -1231,9 +1269,9 @@ mod debug_tests {
         cfg.template.hybrid = false;
         cfg.inference_every = 0;
         let mut world = HybridCluster::new(cfg).unwrap();
-        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut q: ShardedQueue<Ev> = ShardedQueue::new(world.sites.len());
         q.schedule_at(SimTime::ZERO, Ev::Deploy);
-        run_until(&mut world, &mut q, SimTime::from_hms(47, 0, 0));
+        run_merged_until(&mut world, &mut q, SimTime::from_hms(47, 0, 0));
         let updates = world.engine.updates();
         let stuck: Vec<_> = updates.iter()
             .filter(|u| !matches!(u.state,

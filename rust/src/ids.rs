@@ -8,15 +8,18 @@
 //! interner that all subsystems of one cluster share; names survive only
 //! at the edges (TOSCA parsing, reports, API JSON, log lines).
 //!
-//! `NodeNames` is a cheaply-clonable handle (`Rc<RefCell<..>>`): the
-//! simulation is single-threaded per cluster, and every accessor scopes
-//! its borrow internally so handles can be held by several subsystems at
-//! once.
+//! `NodeNames` is a cheaply-clonable handle (`Arc<RwLock<..>>`): every
+//! accessor scopes its lock internally so handles can be held by several
+//! subsystems at once, and the handle is `Send + Sync` so per-site shard
+//! states (each owning a core + interner) can replay on worker threads
+//! in the sharded engine. Within one cluster the interner is only ever
+//! touched from one thread at a time, so the uncontended lock cost is
+//! noise — and interning sits at the edges (registration, reporting),
+//! not in the scheduling hot path.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::fmt;
-use std::rc::Rc;
+use std::sync::{Arc, RwLock};
 
 /// Dense interned node identifier. The numeric value doubles as the
 /// index into id-keyed tables (`Vec<Option<..>>`).
@@ -44,7 +47,7 @@ struct Inner {
 
 /// Shared name⇄id interner (one per cluster).
 #[derive(Debug, Clone, Default)]
-pub struct NodeNames(Rc<RefCell<Inner>>);
+pub struct NodeNames(Arc<RwLock<Inner>>);
 
 impl NodeNames {
     pub fn new() -> NodeNames {
@@ -53,7 +56,7 @@ impl NodeNames {
 
     /// Id for `name`, interning it on first sight.
     pub fn intern(&self, name: &str) -> NodeId {
-        let mut g = self.0.borrow_mut();
+        let mut g = self.0.write().expect("interner poisoned");
         if let Some(&i) = g.index.get(name) {
             return NodeId(i);
         }
@@ -65,13 +68,19 @@ impl NodeNames {
 
     /// Id for `name` if it was interned before (no insertion).
     pub fn get(&self, name: &str) -> Option<NodeId> {
-        self.0.borrow().index.get(name).map(|&i| NodeId(i))
+        self.0
+            .read()
+            .expect("interner poisoned")
+            .index
+            .get(name)
+            .map(|&i| NodeId(i))
     }
 
     /// Owned name for `id` (edge paths only: reports, logs).
     pub fn name(&self, id: NodeId) -> String {
         self.0
-            .borrow()
+            .read()
+            .expect("interner poisoned")
             .names
             .get(id.index())
             .cloned()
@@ -79,14 +88,14 @@ impl NodeNames {
     }
 
     /// Run `f` over the borrowed name without cloning. `f` must not
-    /// touch this interner (the borrow is held while it runs).
+    /// touch this interner (the lock is held while it runs).
     pub fn with_name<R>(&self, id: NodeId, f: impl FnOnce(&str) -> R) -> R {
-        let g = self.0.borrow();
+        let g = self.0.read().expect("interner poisoned");
         f(g.names.get(id.index()).map(|s| s.as_str()).unwrap_or("?"))
     }
 
     pub fn len(&self) -> usize {
-        self.0.borrow().names.len()
+        self.0.read().expect("interner poisoned").names.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -125,5 +134,19 @@ mod tests {
     fn unknown_id_renders_placeholder() {
         let n = NodeNames::new();
         assert_eq!(n.name(NodeId(9)), "node#9");
+    }
+
+    #[test]
+    fn handles_cross_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<NodeNames>();
+        let n = NodeNames::new();
+        let id = n.intern("x");
+        let m = n.clone();
+        std::thread::scope(|s| {
+            s.spawn(move || assert_eq!(m.name(id), "x"))
+                .join()
+                .unwrap();
+        });
     }
 }

@@ -96,6 +96,10 @@ impl Lrms for HtCondor {
         self.core.node_stats()
     }
 
+    fn node_stats_into(&self, out: &mut Vec<NodeStat>) {
+        self.core.node_stats_into(out)
+    }
+
     fn pending(&self) -> usize {
         self.core.pending()
     }

@@ -76,6 +76,9 @@ pub struct BatchCore {
     scratch: VecDeque<JobId>,
     /// Node table indexed by `NodeId` (`None` = unknown/deregistered).
     nodes: Vec<Option<NodeSlot>>,
+    /// Live node ids in registration order — snapshot walks are a
+    /// straight indexed sweep, no sort and no allocation.
+    reg_order: Vec<NodeId>,
     /// PackFirstFit index: `bucket[f]` = Up nodes with `f` free slots.
     pack_buckets: Vec<BTreeSet<(u64, u32)>>,
     /// SpreadMostFree index: Up nodes keyed `(free, newest-last, id)`.
@@ -114,6 +117,7 @@ impl BatchCore {
             queue: VecDeque::new(),
             scratch: VecDeque::new(),
             nodes: Vec::new(),
+            reg_order: Vec::new(),
             pack_buckets: Vec::new(),
             spread_set: BTreeSet::new(),
             free_up: 0,
@@ -222,6 +226,10 @@ impl BatchCore {
             running: Vec::new(),
         });
         self.next_order += 1;
+        // Fresh slot: the id cannot already be in reg_order (deregister
+        // removed it), and new orders are monotone, so a push keeps the
+        // list sorted by registration order.
+        self.reg_order.push(id);
         self.attach(i);
     }
 
@@ -236,6 +244,7 @@ impl BatchCore {
         let requeued = self.requeue_jobs_on_idx(i, t);
         self.detach(i);
         self.nodes[i] = None;
+        self.reg_order.retain(|&n| n != id);
         Ok(requeued)
     }
 
@@ -506,9 +515,9 @@ impl BatchCore {
 
     /// Snapshots in registration order (name-resolving; edge paths).
     pub fn nodes(&self) -> Vec<NodeInfo> {
-        let mut live: Vec<&NodeSlot> = self.nodes.iter().flatten().collect();
-        live.sort_by_key(|n| n.order);
-        live.iter()
+        self.reg_order
+            .iter()
+            .filter_map(|&id| self.slot(id))
             .map(|n| NodeInfo {
                 id: n.id,
                 name: self.names.name(n.id),
@@ -524,18 +533,28 @@ impl BatchCore {
     /// Allocation-light snapshots in registration order (hot paths:
     /// no `String` per node).
     pub fn node_stats(&self) -> Vec<NodeStat> {
-        let mut live: Vec<&NodeSlot> = self.nodes.iter().flatten().collect();
-        live.sort_by_key(|n| n.order);
-        live.iter()
-            .map(|n| NodeStat {
-                id: n.id,
-                slots: n.slots,
-                used_slots: n.used,
-                health: n.health,
-                registered_at: n.registered_at,
-                idle_since: n.idle_since,
-            })
-            .collect()
+        let mut out = Vec::with_capacity(self.reg_order.len());
+        self.node_stats_into(&mut out);
+        out
+    }
+
+    /// Fill `out` with snapshots in registration order, reusing its
+    /// capacity — the CLUES tick passes a scratch buffer, so a
+    /// 10k-node tick performs zero allocations here.
+    pub fn node_stats_into(&self, out: &mut Vec<NodeStat>) {
+        out.clear();
+        for &id in &self.reg_order {
+            if let Some(n) = self.slot(id) {
+                out.push(NodeStat {
+                    id: n.id,
+                    slots: n.slots,
+                    used_slots: n.used,
+                    health: n.health,
+                    registered_at: n.registered_at,
+                    idle_since: n.idle_since,
+                });
+            }
+        }
     }
 
     /// O(1) single-node snapshot.
@@ -760,6 +779,36 @@ mod tests {
             assert_eq!(a.schedule(t(3.0)), b.schedule(t(3.0)),
                        "{placement:?}");
         }
+    }
+
+    #[test]
+    fn node_stats_into_reuses_buffer_in_registration_order() {
+        let mut c = BatchCore::new(Placement::PackFirstFit);
+        c.register_node("b", 1, t(0.0));
+        c.register_node("a", 2, t(1.0));
+        c.register_node("c", 3, t(2.0));
+        let mut buf = Vec::new();
+        c.node_stats_into(&mut buf);
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf[0].id, c.node_id("b").unwrap());
+        assert_eq!(buf[2].id, c.node_id("c").unwrap());
+        // Deregistration drops the node from the sweep; re-registration
+        // appends at the end (new registration order).
+        c.deregister_node("b", t(3.0)).unwrap();
+        c.node_stats_into(&mut buf);
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf[0].id, c.node_id("a").unwrap());
+        c.register_node("b", 1, t(4.0));
+        c.node_stats_into(&mut buf);
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf[2].id, c.node_id("b").unwrap());
+        assert_eq!(buf, c.node_stats());
+        // Revival (Down -> re-register) keeps the original order.
+        c.set_node_health("a", NodeHealth::Down, t(5.0)).unwrap();
+        c.register_node("a", 2, t(6.0));
+        c.node_stats_into(&mut buf);
+        assert_eq!(buf[0].id, c.node_id("a").unwrap());
+        assert_eq!(buf.len(), 3);
     }
 
     #[test]

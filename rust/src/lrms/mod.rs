@@ -163,6 +163,16 @@ pub trait Lrms {
     /// Allocation-light snapshots of every node (registration order).
     fn node_stats(&self) -> Vec<NodeStat>;
 
+    /// Fill `out` with the same snapshots as [`Lrms::node_stats`],
+    /// reusing its capacity — monitoring loops (the CLUES tick) pass a
+    /// scratch buffer so a 10k-node tick allocates nothing at steady
+    /// state. Implementations should override the default, which
+    /// delegates to `node_stats` and only saves the outer allocation.
+    fn node_stats_into(&self, out: &mut Vec<NodeStat>) {
+        out.clear();
+        out.extend(self.node_stats());
+    }
+
     /// Pending-queue depth — the elasticity signal CLUES polls.
     fn pending(&self) -> usize;
     fn running(&self) -> usize;

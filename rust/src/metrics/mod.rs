@@ -113,6 +113,50 @@ impl Recorder {
         self.order.iter().map(|&id| self.names.name(id)).collect()
     }
 
+    /// Merge per-shard recorders into one stream, ordered by the
+    /// sharded engine's deterministic merge key
+    /// `(time, shard index, intra-shard record order)`. Parallel site
+    /// shards own their recorders (and possibly private interners), so
+    /// every record is re-interned by name into `names`; the result is
+    /// byte-identical however the shards were scheduled on threads.
+    pub fn merge_shards(names: NodeNames, shards: &[Recorder]) -> Recorder {
+        let mut merged = Recorder::with_names(names);
+
+        let mut transitions: Vec<(f64, usize, usize, String, DisplayState)> =
+            Vec::new();
+        let mut runs: Vec<(f64, usize, usize, String, SimTime, SimTime)> =
+            Vec::new();
+        let mut notes: Vec<(f64, usize, usize, &str)> = Vec::new();
+        for (si, r) in shards.iter().enumerate() {
+            for (k, &(t, id, s)) in r.transitions.iter().enumerate() {
+                transitions.push((t.0, si, k, r.names.name(id), s));
+            }
+            for (k, &(id, s, e)) in r.job_runs.iter().enumerate() {
+                runs.push((e.0, si, k, r.names.name(id), s, e));
+            }
+            for (k, (t, label)) in r.milestones.iter().enumerate() {
+                notes.push((t.0, si, k, label.as_str()));
+            }
+        }
+        let key = |a: &(f64, usize, usize), b: &(f64, usize, usize)| {
+            a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+        };
+        transitions.sort_by(|a, b| key(&(a.0, a.1, a.2), &(b.0, b.1, b.2)));
+        runs.sort_by(|a, b| key(&(a.0, a.1, a.2), &(b.0, b.1, b.2)));
+        notes.sort_by(|a, b| key(&(a.0, a.1, a.2), &(b.0, b.1, b.2)));
+
+        for (t, _, _, name, s) in transitions {
+            merged.node_state(SimTime(t), &name, s);
+        }
+        for (_, _, _, name, s, e) in runs {
+            merged.job_run(&name, s, e);
+        }
+        for (t, _, _, label) in notes {
+            merged.milestone(SimTime(t), label);
+        }
+        merged
+    }
+
     /// Transition log with names resolved (test/report convenience).
     pub fn transitions_named(&self)
         -> Vec<(SimTime, String, DisplayState)> {
@@ -353,6 +397,36 @@ mod tests {
         let named = r.transitions_named();
         assert_eq!(named.len(), 4);
         assert_eq!(named[2].1, "b");
+    }
+
+    #[test]
+    fn merge_shards_orders_by_time_then_shard() {
+        // Two shard recorders with private interners, overlapping times.
+        let mut a = Recorder::new();
+        a.node_state(t(0.0), "s0-n1", DisplayState::Idle);
+        a.node_state(t(10.0), "s0-n1", DisplayState::Used);
+        a.job_run("s0-n1", t(10.0), t(20.0));
+        a.milestone(t(10.0), "s0 started");
+        let mut b = Recorder::new();
+        b.node_state(t(5.0), "s1-n1", DisplayState::Idle);
+        b.node_state(t(10.0), "s1-n1", DisplayState::Used);
+        b.job_run("s1-n1", t(10.0), t(20.0));
+        b.milestone(t(10.0), "s1 started");
+
+        let merged = Recorder::merge_shards(NodeNames::new(), &[a, b]);
+        // First-appearance order follows the merged (time, shard) order.
+        assert_eq!(merged.node_names(), vec!["s0-n1", "s1-n1"]);
+        let named = merged.transitions_named();
+        assert_eq!(named.len(), 4);
+        assert_eq!(named[1].1, "s1-n1"); // t=5 from shard 1
+        // At t=10 shard 0 precedes shard 1.
+        assert_eq!(named[2].1, "s0-n1");
+        assert_eq!(named[3].1, "s1-n1");
+        assert_eq!(merged.milestones,
+                   vec![(t(10.0), "s0 started".to_string()),
+                        (t(10.0), "s1 started".to_string())]);
+        assert_eq!(merged.busy_secs_per_node()["s0-n1"], 10.0);
+        assert_eq!(merged.busy_secs_per_node()["s1-n1"], 10.0);
     }
 
     #[test]

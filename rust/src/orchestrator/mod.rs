@@ -23,7 +23,7 @@ pub mod sla;
 pub use monitor::{Monitor, Outage, Probe, ProbeTarget};
 pub use sla::{rank_sites, sla_headroom, SiteHealth, Sla};
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use anyhow::{bail, Context};
 
@@ -65,6 +65,24 @@ pub struct Update {
     pub finished_at: Option<SimTime>,
 }
 
+/// Key identifying what a queued update targets. The engine keeps a
+/// FIFO of queued update ids per key so lookups by operation are O(1)
+/// instead of a scan over the full (append-only) update history.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum OpKey {
+    Add(String),
+    Remove(String),
+    Init,
+}
+
+fn op_key(op: &UpdateOp) -> OpKey {
+    match op {
+        UpdateOp::AddWorker { name } => OpKey::Add(name.clone()),
+        UpdateOp::RemoveWorker { name } => OpKey::Remove(name.clone()),
+        UpdateOp::InitialDeploy => OpKey::Init,
+    }
+}
+
 /// The deployment-update workflow engine.
 pub struct WorkflowEngine {
     /// Paper default: one update at a time.
@@ -72,6 +90,12 @@ pub struct WorkflowEngine {
     queue: VecDeque<UpdateId>,
     updates: Vec<Update>,
     in_progress: usize,
+    /// Queued updates indexed by op key (FIFO per key). Entries leave
+    /// the index the moment an update starts or is cancelled, so its
+    /// size is bounded by the queue depth, not the history length.
+    queued_by_key: HashMap<OpKey, VecDeque<UpdateId>>,
+    /// Count of updates currently in `Queued` state.
+    queued: usize,
 }
 
 impl WorkflowEngine {
@@ -81,12 +105,15 @@ impl WorkflowEngine {
             queue: VecDeque::new(),
             updates: Vec::new(),
             in_progress: 0,
+            queued_by_key: HashMap::new(),
+            queued: 0,
         }
     }
 
     /// Submit an update; it queues until the engine is free.
     pub fn submit(&mut self, op: UpdateOp, t: SimTime) -> UpdateId {
         let id = UpdateId(self.updates.len() as u64);
+        let key = op_key(&op);
         self.updates.push(Update {
             id,
             op,
@@ -96,7 +123,22 @@ impl WorkflowEngine {
             finished_at: None,
         });
         self.queue.push_back(id);
+        self.queued_by_key.entry(key).or_default().push_back(id);
+        self.queued += 1;
         id
+    }
+
+    /// Drop `id` from the per-key queued index.
+    fn unqueue(&mut self, id: UpdateId, key: OpKey) {
+        if let Some(dq) = self.queued_by_key.get_mut(&key) {
+            if let Some(pos) = dq.iter().position(|&x| x == id) {
+                dq.remove(pos);
+                self.queued -= 1;
+            }
+            if dq.is_empty() {
+                self.queued_by_key.remove(&key);
+            }
+        }
     }
 
     /// Pop the next update(s) that may start now. With serialization on,
@@ -116,7 +158,9 @@ impl WorkflowEngine {
                     }
                     u.state = UpdateState::InProgress;
                     u.started_at = Some(t);
-                    started.push(u.clone());
+                    let cloned = u.clone();
+                    self.unqueue(id, op_key(&cloned.op));
+                    started.push(cloned);
                 }
             }
         }
@@ -153,6 +197,8 @@ impl WorkflowEngine {
             UpdateState::Queued => {
                 u.state = UpdateState::Cancelled;
                 u.finished_at = Some(t);
+                let key = op_key(&u.op);
+                self.unqueue(id, key);
                 Ok(())
             }
             other => bail!("cannot cancel update in state {other:?}"),
@@ -167,8 +213,9 @@ impl WorkflowEngine {
         &self.updates
     }
 
-    /// Find the queued update matching a predicate (used by CLUES to find
-    /// the pending power-off for a node).
+    /// Find the queued update matching an arbitrary predicate. This is
+    /// the generic O(history) path — prefer the keyed O(1) lookup
+    /// ([`WorkflowEngine::find_queued_remove`]) on hot paths.
     pub fn find_queued(&self, pred: impl Fn(&UpdateOp) -> bool)
         -> Option<UpdateId> {
         self.updates
@@ -177,11 +224,18 @@ impl WorkflowEngine {
             .map(|u| u.id)
     }
 
+    /// O(1): the oldest queued `RemoveWorker` update for `name` (CLUES
+    /// revoking a pending power-off).
+    pub fn find_queued_remove(&self, name: &str) -> Option<UpdateId> {
+        self.queued_by_key
+            .get(&OpKey::Remove(name.to_string()))
+            .and_then(|dq| dq.front().copied())
+    }
+
+    /// Number of updates currently queued — O(1), maintained by the
+    /// per-key index.
     pub fn queued_len(&self) -> usize {
-        self.updates
-            .iter()
-            .filter(|u| u.state == UpdateState::Queued)
-            .count()
+        self.queued
     }
 
     pub fn in_progress(&self) -> usize {
@@ -288,6 +342,36 @@ mod tests {
             UpdateOp::RemoveWorker { name } if name == "y"));
         // AddWorker is startable first, but both are still Queued.
         assert_eq!(found, Some(b));
+    }
+
+    #[test]
+    fn queued_index_tracks_lifecycle() {
+        let mut e = WorkflowEngine::new(true);
+        let a = e.submit(UpdateOp::RemoveWorker { name: "vnode-1".into() },
+                         t(0.0));
+        let b = e.submit(UpdateOp::RemoveWorker { name: "vnode-1".into() },
+                         t(1.0));
+        let _c = e.submit(UpdateOp::AddWorker { name: "vnode-2".into() },
+                          t(2.0));
+        assert_eq!(e.queued_len(), 3);
+        // The keyed lookup returns the oldest queued entry per key and
+        // agrees with the generic scan.
+        assert_eq!(e.find_queued_remove("vnode-1"), Some(a));
+        assert_eq!(
+            e.find_queued_remove("vnode-1"),
+            e.find_queued(|op| matches!(op,
+                UpdateOp::RemoveWorker { name } if name == "vnode-1")));
+        // Starting `a` drains its index entry; `b` remains findable.
+        let started = e.startable(t(3.0));
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].id, a);
+        assert_eq!(e.queued_len(), 2);
+        assert_eq!(e.find_queued_remove("vnode-1"), Some(b));
+        // Cancelling `b` empties the Remove key entirely.
+        e.cancel(b, t(4.0)).unwrap();
+        assert_eq!(e.find_queued_remove("vnode-1"), None);
+        assert_eq!(e.queued_len(), 1);
+        assert_eq!(e.find_queued_remove("vnode-9"), None);
     }
 
     #[test]

@@ -1,21 +1,44 @@
-//! Discrete-event simulation engine.
+//! Discrete-event simulation core.
 //!
 //! The paper's use case spans 5 h 40 m of wall-clock time on two real
 //! clouds; the simulator replays the same coordination logic in
 //! milliseconds under a virtual clock, or — via [`RealTimeRunner`] — in
 //! scaled real time for demos.
 //!
-//! The engine is deliberately minimal and deterministic:
-//! * events are ordered by `(time, sequence-number)` so same-time events
-//!   dispatch in schedule order,
+//! The engine comes in two tiers:
+//!
+//! * [`EventQueue`] — the classic single binary-heap queue ordered by
+//!   `(time, sequence-number)`. Still the right tool for small worlds
+//!   and micro-benchmarks.
+//! * [`shard`] — the **sharded engine**: events carry a [`shard::ShardKey`]
+//!   (one shard per cloud site, plus a *control* shard for orchestrator /
+//!   CLUES / VPN traffic), each shard owns its own queue, and a
+//!   deterministic merge — min time across shards with a fixed
+//!   shard-order tiebreak — either replays serially (the *single-queue*
+//!   reference mode) or dispatches site-local windows in parallel while
+//!   control-shard events act as synchronization barriers. Both modes
+//!   produce identical event streams; `tests/shard_equivalence.rs`
+//!   proves it on randomized scenarios.
+//!
+//! Shared guarantees, both tiers:
+//! * events are ordered by a **total** order (`f64::total_cmp`), and
+//!   non-finite schedule times are rejected outright instead of silently
+//!   collapsing the heap order,
+//! * same-time events dispatch in schedule order (per shard),
 //! * scheduled events can be cancelled, which the CLUES reproduction
 //!   needs (the paper describes pending power-offs being cancelled when
-//!   new jobs arrive early); stale cancels of already-fired events are
-//!   rejected without storing anything.
+//!   new jobs arrive early). Cancellation is **generation-slot** based:
+//!   each scheduled event holds a reusable slot whose generation advances
+//!   when the event fires or is cancelled, so the pop hot path performs
+//!   no hashing and stale cancels of already-fired events are rejected
+//!   without storing anything.
 
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashSet};
+pub mod shard;
+
 use std::fmt;
+
+pub use shard::{run_merged, run_merged_until, MergedWorld, ShardEvent,
+                ShardEventId, ShardKey, ShardedQueue};
 
 /// Virtual time in seconds since simulation start.
 #[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
@@ -52,50 +75,23 @@ impl fmt::Display for SimTime {
 
 /// Handle to a scheduled event; used for cancellation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct EventId(u64);
-
-struct Entry<E> {
-    at: SimTime,
-    seq: u64,
-    id: EventId,
-    ev: E,
+pub struct EventId {
+    slot: u32,
+    gen: u32,
 }
 
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl<E> Eq for Entry<E> {}
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap: invert for earliest-first.
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-/// The event queue + virtual clock.
+/// The event queue + virtual clock (single-queue tier): one
+/// [`shard::ShardHeap`] plus the clock.
 ///
-/// Cancellation is tracked through a *live* set (ids scheduled but not
-/// yet dispatched or cancelled) rather than a tombstone set: cancelling
-/// an id whose event already fired is a `false` no-op that stores
-/// nothing, so long replays with many stale cancels cannot leak memory,
-/// and the set's size is always bounded by the heap's.
+/// Cancellation uses generation slots: scheduling claims a slot (reusing
+/// freed ones) and stamps the entry with the slot's current generation;
+/// firing or cancelling advances the generation, so a stale handle can
+/// never match again. Memory is bounded by the maximum number of
+/// *concurrently* scheduled events, and neither `pop` nor `cancel`
+/// hashes anything.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
-    live: HashSet<EventId>,
-    seq: u64,
+    heap: shard::ShardHeap<E>,
     now: SimTime,
-    dispatched: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -107,11 +103,8 @@ impl<E> Default for EventQueue<E> {
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
-            live: HashSet::new(),
-            seq: 0,
+            heap: shard::ShardHeap::new(),
             now: SimTime::ZERO,
-            dispatched: 0,
         }
     }
 
@@ -122,54 +115,49 @@ impl<E> EventQueue<E> {
 
     /// Total events dispatched so far (perf counters).
     pub fn dispatched(&self) -> u64 {
-        self.dispatched
+        self.heap.dispatched()
+    }
+
+    /// Events scheduled but not yet fired or cancelled.
+    pub fn live_count(&self) -> usize {
+        self.heap.live_count()
     }
 
     /// Schedule `ev` after `delay` seconds (clamped at now for negatives).
+    /// Non-finite delays are a caller bug and are rejected loudly.
     pub fn schedule_in(&mut self, delay: f64, ev: E) -> EventId {
-        let at = self.now.add(delay.max(0.0));
+        let at = shard::delay_to_at(self.now, delay);
         self.schedule_at(at, ev)
     }
 
-    /// Schedule `ev` at absolute time `at` (clamped at now if in the past).
+    /// Schedule `ev` at absolute time `at` (clamped at now if in the
+    /// past). Non-finite times are a caller bug and are rejected loudly.
     pub fn schedule_at(&mut self, at: SimTime, ev: E) -> EventId {
-        let at = if at.0 < self.now.0 { self.now } else { at };
-        let id = EventId(self.seq);
-        self.heap.push(Entry { at, seq: self.seq, id, ev });
-        self.live.insert(id);
-        self.seq += 1;
-        id
+        let at = shard::clamp_schedule_time(self.now, at);
+        let (slot, gen) = self.heap.schedule(at, ev);
+        EventId { slot, gen }
     }
 
     /// Cancel a scheduled event. Returns false if it already fired or was
     /// already cancelled — in both cases without storing anything.
     pub fn cancel(&mut self, id: EventId) -> bool {
-        self.live.remove(&id)
+        self.heap.cancel(id.slot, id.gen)
     }
 
     /// Pop the next live event, advancing the clock.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        while let Some(entry) = self.heap.pop() {
-            if !self.live.remove(&entry.id) {
-                continue; // cancelled while queued
+        match self.heap.pop() {
+            Some((t, _seq, ev)) => {
+                self.now = t;
+                Some((t, ev))
             }
-            self.now = entry.at;
-            self.dispatched += 1;
-            return Some((entry.at, entry.ev));
+            None => None,
         }
-        None
     }
 
     /// Time of the next live event without popping it.
     pub fn peek_time(&mut self) -> Option<SimTime> {
-        while let Some(entry) = self.heap.peek() {
-            if !self.live.contains(&entry.id) {
-                self.heap.pop();
-                continue;
-            }
-            return Some(entry.at);
-        }
-        None
+        self.heap.peek().map(|(t, _seq)| t)
     }
 
     pub fn is_empty(&mut self) -> bool {
@@ -307,18 +295,17 @@ mod tests {
         let mut w = Recorder { seen: vec![] };
         run_to_completion(&mut w, &mut q);
         assert_eq!(w.seen, vec![(1.0, 7)]);
-        // The event already dispatched: cancelling it must fail and must
-        // not tombstone anything (the live set stays bounded by the
-        // heap, which is empty here).
+        // The event already dispatched: cancelling it must fail, and the
+        // slot store must be fully recycled (nothing live).
         assert!(!q.cancel(a));
-        assert!(q.live.is_empty());
+        assert_eq!(q.live_count(), 0);
         assert!(q.is_empty());
         // Never-scheduled ids are rejected too.
-        assert!(!q.cancel(EventId(999)));
+        assert!(!q.cancel(EventId { slot: 999, gen: 0 }));
     }
 
     #[test]
-    fn cancelled_then_popped_entry_clears_live_set() {
+    fn cancelled_then_popped_entry_clears_slot() {
         let mut q: EventQueue<u32> = EventQueue::new();
         let a = q.schedule_in(1.0, 1);
         q.schedule_in(2.0, 2);
@@ -326,7 +313,38 @@ mod tests {
         assert!(!q.cancel(a));
         let (_, ev) = q.pop().unwrap();
         assert_eq!(ev, 2);
-        assert!(q.live.is_empty());
+        assert_eq!(q.live_count(), 0);
+    }
+
+    #[test]
+    fn slots_are_reused_with_fresh_generations() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let a = q.schedule_in(1.0, 1);
+        assert!(q.cancel(a));
+        // The freed slot is reclaimed; the stale handle must not be able
+        // to cancel the new occupant.
+        let b = q.schedule_in(2.0, 2);
+        assert!(!q.cancel(a));
+        assert_eq!(q.live_count(), 1);
+        let (_, ev) = q.pop().unwrap();
+        assert_eq!(ev, 2);
+        assert!(!q.cancel(b)); // already fired
+        // Bounded store: two schedules, one slot.
+        assert_eq!(q.heap.slot_capacity(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn nan_schedule_time_is_rejected() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule_at(SimTime(f64::NAN), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn infinite_delay_is_rejected() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.schedule_in(f64::INFINITY, 1);
     }
 
     #[test]
@@ -347,8 +365,7 @@ mod tests {
         let mut w = Recorder { seen: vec![] };
         run_to_completion(&mut w, &mut q);
         // Now at 15 (cascade); scheduling "at 3" fires immediately.
-        let id = q.schedule_at(SimTime(3.0), 9);
-        assert!(id.0 > 0);
+        q.schedule_at(SimTime(3.0), 9);
         let (t, ev) = q.pop().unwrap();
         assert_eq!(ev, 9);
         assert!(t.0 >= 10.0);

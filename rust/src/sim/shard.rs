@@ -1,0 +1,942 @@
+//! Sharded discrete-event engine: one queue per cloud site plus a
+//! control shard, merged deterministically, with optional parallel
+//! replay of site-local event windows.
+//!
+//! ## Model
+//!
+//! Every event declares a [`ShardKey`] through the [`ShardEvent`] trait:
+//! [`ShardKey::Site`]`(s)` for traffic local to cloud site `s` (boots,
+//! job completions, crashes), [`ShardKey::Control`] for everything that
+//! crosses sites — orchestrator updates, CLUES decisions, VPN/overlay
+//! traffic. A [`ShardedQueue`] owns one [`ShardHeap`] per shard; each
+//! heap orders its entries by `(time, per-shard sequence)` and cancels
+//! through generation slots (no hashing on the pop path).
+//!
+//! ## Deterministic merge
+//!
+//! The global dispatch order is `(time, shard index, per-shard seq)`
+//! with the control shard at index 0 — min-time across shards, fixed
+//! shard-order tiebreak. This order is what both replay modes produce:
+//!
+//! * [`run_sharded_serial`] — the *single-queue engine*: pops one
+//!   globally-minimal event at a time. Reference semantics.
+//! * [`run_sharded`] — the *parallel engine*: control events run
+//!   serially as synchronization barriers; between barriers, each site
+//!   shard's window of events is drained on its own thread (scoped
+//!   threads, `E: Send`). Site shards share no state, so any thread
+//!   interleaving yields the same per-shard outcome, and cross-shard
+//!   (control) emissions are buffered and flushed in origin dispatch
+//!   order, reproducing the serial enqueue order exactly.
+//!
+//! The window bound is conservative-PDES style: a site window starting
+//! at `T` extends to `min(next queued control event, T + lookahead)`,
+//! where [`ControlPlane::lookahead`] is the world's minimum site→control
+//! latency (in the paper's setting, inter-site WAN latency makes this a
+//! natural, honest bound). Site handlers must emit control events at
+//! least `lookahead` in the future ([`SiteCtx::emit_control_in`]
+//! asserts it); with a zero lookahead the engine degrades gracefully to
+//! single-queue stepping and stays exactly equivalent.
+//!
+//! Worlds whose handlers genuinely need global state on every event
+//! (e.g. the full [`crate::cluster::HybridCluster`] reproduction)
+//! implement [`MergedWorld`] instead and replay through
+//! [`run_merged_until`] — same queue, same deterministic order, serial
+//! dispatch. `tests/shard_equivalence.rs` proves serial ≡ parallel on
+//! randomized scenarios down to byte-identical figure output.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::SimTime;
+
+/// Which shard an event belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShardKey {
+    /// Cross-site traffic: orchestrator, CLUES, VPN/overlay. Serialized;
+    /// acts as a barrier in parallel replay.
+    Control,
+    /// Site-local traffic for cloud site `s`.
+    Site(u32),
+}
+
+/// Events declare their shard; the queue routes on it.
+pub trait ShardEvent {
+    fn shard_key(&self) -> ShardKey;
+}
+
+/// Validate and clamp an absolute schedule time against `now`. Every
+/// `schedule_at` entry point (single-queue, sharded, site ctx) goes
+/// through here so the engines' rejection/clamping policies cannot
+/// drift apart.
+pub(crate) fn clamp_schedule_time(now: SimTime, at: SimTime) -> SimTime {
+    assert!(at.0.is_finite(), "schedule_at: non-finite time {}", at.0);
+    if at.0 < now.0 { now } else { at }
+}
+
+/// Validate a relative delay and turn it into an absolute time
+/// (negatives clamp to `now`). Shared by every `schedule_in`.
+pub(crate) fn delay_to_at(now: SimTime, delay: f64) -> SimTime {
+    assert!(delay.is_finite(), "schedule_in: non-finite delay {delay}");
+    now.add(delay.max(0.0))
+}
+
+/// Handle to a scheduled sharded event; used for cancellation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShardEventId {
+    shard: u32,
+    slot: u32,
+    gen: u32,
+}
+
+struct Entry<E> {
+    at: SimTime,
+    seq: u64,
+    slot: u32,
+    gen: u32,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap: invert for earliest-first; total order via total_cmp.
+        other
+            .at
+            .0
+            .total_cmp(&self.at.0)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// One shard's queue: binary heap ordered `(time, seq)` with
+/// generation-slot cancellation. Scheduling claims a reusable slot and
+/// stamps the entry with the slot's generation; firing or cancelling
+/// advances the generation, so stale handles can never match and the
+/// slot store stays bounded by the number of concurrently live events.
+///
+/// This is the one heap implementation in the crate:
+/// [`super::EventQueue`] wraps a single `ShardHeap`, so the
+/// model-checked cancellation property in `tests/shard_equivalence.rs`
+/// covers the parallel engine's shards too.
+pub struct ShardHeap<E> {
+    heap: BinaryHeap<Entry<E>>,
+    gens: Vec<u32>,
+    free: Vec<u32>,
+    seq: u64,
+    dispatched: u64,
+}
+
+impl<E> ShardHeap<E> {
+    pub(crate) fn new() -> ShardHeap<E> {
+        ShardHeap {
+            heap: BinaryHeap::new(),
+            gens: Vec::new(),
+            free: Vec::new(),
+            seq: 0,
+            dispatched: 0,
+        }
+    }
+
+    pub(crate) fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    /// Events scheduled but not yet fired or cancelled.
+    pub(crate) fn live_count(&self) -> usize {
+        self.gens.len() - self.free.len()
+    }
+
+    /// Slot-store capacity (bounded by peak concurrent live events).
+    pub(crate) fn slot_capacity(&self) -> usize {
+        self.gens.len()
+    }
+
+    pub(crate) fn schedule(&mut self, at: SimTime, ev: E) -> (u32, u32) {
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.gens.push(0);
+                (self.gens.len() - 1) as u32
+            }
+        };
+        let gen = self.gens[slot as usize];
+        self.heap.push(Entry { at, seq: self.seq, slot, gen, ev });
+        self.seq += 1;
+        (slot, gen)
+    }
+
+    pub(crate) fn cancel(&mut self, slot: u32, gen: u32) -> bool {
+        match self.gens.get_mut(slot as usize) {
+            Some(g) if *g == gen => {
+                *g = g.wrapping_add(1);
+                self.free.push(slot);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// `(time, seq)` of the next live entry; prunes cancelled entries.
+    pub(crate) fn peek(&mut self) -> Option<(SimTime, u64)> {
+        while let Some(entry) = self.heap.peek() {
+            if self.gens[entry.slot as usize] != entry.gen {
+                self.heap.pop();
+                continue;
+            }
+            return Some((entry.at, entry.seq));
+        }
+        None
+    }
+
+    pub(crate) fn pop(&mut self) -> Option<(SimTime, u64, E)> {
+        while let Some(entry) = self.heap.pop() {
+            let i = entry.slot as usize;
+            if self.gens[i] != entry.gen {
+                continue;
+            }
+            self.gens[i] = self.gens[i].wrapping_add(1);
+            self.free.push(entry.slot);
+            self.dispatched += 1;
+            return Some((entry.at, entry.seq, entry.ev));
+        }
+        None
+    }
+}
+
+/// The sharded event queue + virtual clock.
+///
+/// Shard 0 is the control shard; site `s` lives at shard `1 + s`.
+/// Global dispatch order is `(time, shard index, per-shard seq)`.
+pub struct ShardedQueue<E> {
+    shards: Vec<ShardHeap<E>>,
+    now: SimTime,
+}
+
+impl<E: ShardEvent> ShardedQueue<E> {
+    /// A queue with `sites` site shards plus the control shard.
+    pub fn new(sites: usize) -> ShardedQueue<E> {
+        ShardedQueue {
+            shards: (0..sites + 1).map(|_| ShardHeap::new()).collect(),
+            now: SimTime::ZERO,
+        }
+    }
+
+    /// Number of site shards.
+    pub fn sites(&self) -> usize {
+        self.shards.len() - 1
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total events dispatched across all shards (perf counters).
+    pub fn dispatched(&self) -> u64 {
+        self.shards.iter().map(|s| s.dispatched).sum()
+    }
+
+    fn shard_index(&self, key: ShardKey) -> usize {
+        match key {
+            ShardKey::Control => 0,
+            ShardKey::Site(s) => {
+                let i = 1 + s as usize;
+                assert!(
+                    i < self.shards.len(),
+                    "event routed to unknown site shard {s} \
+                     (queue has {} site shards)",
+                    self.shards.len() - 1
+                );
+                i
+            }
+        }
+    }
+
+    /// Schedule `ev` at absolute time `at` (clamped at now if in the
+    /// past), routed to the shard it declares. Non-finite times are a
+    /// caller bug and are rejected loudly.
+    pub fn schedule_at(&mut self, at: SimTime, ev: E) -> ShardEventId {
+        let at = clamp_schedule_time(self.now, at);
+        let shard = self.shard_index(ev.shard_key());
+        let (slot, gen) = self.shards[shard].schedule(at, ev);
+        ShardEventId { shard: shard as u32, slot, gen }
+    }
+
+    /// Schedule `ev` after `delay` seconds (clamped at now for
+    /// negatives). Non-finite delays are rejected loudly.
+    pub fn schedule_in(&mut self, delay: f64, ev: E) -> ShardEventId {
+        let at = delay_to_at(self.now, delay);
+        self.schedule_at(at, ev)
+    }
+
+    /// Cancel a scheduled event. Returns false if it already fired or
+    /// was already cancelled — without storing anything either way.
+    pub fn cancel(&mut self, id: ShardEventId) -> bool {
+        match self.shards.get_mut(id.shard as usize) {
+            Some(sh) => sh.cancel(id.slot, id.gen),
+            None => false,
+        }
+    }
+
+    /// `(time, shard)` of the globally next event under the
+    /// deterministic merge order `(time, shard, seq)`.
+    pub fn peek(&mut self) -> Option<(SimTime, usize)> {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, sh) in self.shards.iter_mut().enumerate() {
+            if let Some((t, _seq)) = sh.peek() {
+                // Strict < keeps the lowest shard index on ties: shards
+                // are visited in ascending order.
+                if best.map_or(true, |(bt, _)| t.0 < bt) {
+                    best = Some((t.0, i));
+                }
+            }
+        }
+        best.map(|(t, i)| (SimTime(t), i))
+    }
+
+    /// Pop the globally next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let (_, shard) = self.peek()?;
+        self.pop_from(shard)
+    }
+
+    /// Pop from the shard a preceding [`ShardedQueue::peek`] identified,
+    /// skipping the O(shards) re-scan — the runners' hot path.
+    fn pop_from(&mut self, shard: usize) -> Option<(SimTime, E)> {
+        let (t, _seq, ev) = self.shards[shard].pop()?;
+        self.now = t;
+        Some((t, ev))
+    }
+
+    pub fn is_empty(&mut self) -> bool {
+        self.peek().is_none()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Merged (serial, global-state) worlds
+// ---------------------------------------------------------------------
+
+/// A world whose handlers need global state on every event. Dispatch is
+/// serial in the deterministic merge order; the sharded queue still
+/// routes and cancels per shard.
+pub trait MergedWorld {
+    type Event: ShardEvent;
+
+    fn handle(
+        &mut self,
+        t: SimTime,
+        ev: Self::Event,
+        q: &mut ShardedQueue<Self::Event>,
+    );
+}
+
+/// Drive a [`MergedWorld`] until the queue drains or `horizon` is
+/// exceeded. Returns the final virtual time.
+pub fn run_merged_until<W: MergedWorld>(
+    world: &mut W,
+    q: &mut ShardedQueue<W::Event>,
+    horizon: SimTime,
+) -> SimTime {
+    while let Some((at, shard)) = q.peek() {
+        if at.0 > horizon.0 {
+            break;
+        }
+        let (t, ev) = q.pop_from(shard).expect("peeked event vanished");
+        world.handle(t, ev, q);
+    }
+    q.now()
+}
+
+/// Drive a [`MergedWorld`] until the queue drains completely.
+pub fn run_merged<W: MergedWorld>(
+    world: &mut W,
+    q: &mut ShardedQueue<W::Event>,
+) -> SimTime {
+    run_merged_until(world, q, SimTime(f64::INFINITY))
+}
+
+// ---------------------------------------------------------------------
+// Sharded (parallel-capable) worlds
+// ---------------------------------------------------------------------
+
+/// Per-site shard state. Handlers only touch their own site, schedule
+/// into their own shard, and may emit control events through the ctx —
+/// which is exactly what makes windows of site events safe to replay in
+/// parallel.
+pub trait SiteShard: Send {
+    type Event: ShardEvent + Send;
+
+    fn handle(
+        &mut self,
+        t: SimTime,
+        ev: Self::Event,
+        ctx: &mut SiteCtx<'_, Self::Event>,
+    );
+}
+
+/// The control plane: serial handler with full access to every site at
+/// barrier points.
+pub trait ControlPlane {
+    type Site: SiteShard;
+
+    /// Handle one control-shard event. May schedule into any shard and
+    /// mutate any site state.
+    fn handle(
+        &mut self,
+        sites: &mut [Self::Site],
+        t: SimTime,
+        ev: <Self::Site as SiteShard>::Event,
+        q: &mut ShardedQueue<<Self::Site as SiteShard>::Event>,
+    );
+
+    /// Minimum virtual-time distance between a site event and any
+    /// control event it emits (conservative lookahead). Site windows
+    /// extend at most this far past their start; the default means
+    /// "sites never talk to the control plane".
+    fn lookahead(&self) -> f64 {
+        f64::INFINITY
+    }
+}
+
+/// A control emission buffered during a site window, flushed at the
+/// barrier in origin dispatch order.
+struct ControlEmission<E> {
+    origin_t: f64,
+    origin_shard: u32,
+    at: SimTime,
+    ev: E,
+}
+
+/// What a site handler may do: schedule/cancel in its own shard, emit
+/// control events at least `lookahead` in the future.
+pub struct SiteCtx<'a, E> {
+    shard: u32,
+    now: SimTime,
+    lookahead: f64,
+    heap: &'a mut ShardHeap<E>,
+    control_out: &'a mut Vec<ControlEmission<E>>,
+}
+
+impl<'a, E: ShardEvent> SiteCtx<'a, E> {
+    /// Time of the event being handled.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// The site this shard belongs to.
+    pub fn site(&self) -> u32 {
+        self.shard - 1
+    }
+
+    /// Schedule into this site's own shard at absolute time `at`
+    /// (clamped at the current event time if in the past).
+    pub fn schedule_at(&mut self, at: SimTime, ev: E) -> ShardEventId {
+        match ev.shard_key() {
+            ShardKey::Site(s) if s + 1 == self.shard => {}
+            other => panic!(
+                "site shard {} may only schedule its own events, got {:?}",
+                self.shard - 1, other
+            ),
+        }
+        let at = clamp_schedule_time(self.now, at);
+        let (slot, gen) = self.heap.schedule(at, ev);
+        ShardEventId { shard: self.shard, slot, gen }
+    }
+
+    /// Schedule into this site's own shard after `delay` seconds.
+    pub fn schedule_in(&mut self, delay: f64, ev: E) -> ShardEventId {
+        let at = delay_to_at(self.now, delay);
+        self.schedule_at(at, ev)
+    }
+
+    /// Cancel an event previously scheduled in this shard.
+    pub fn cancel(&mut self, id: ShardEventId) -> bool {
+        assert_eq!(id.shard, self.shard,
+                   "cross-shard cancel from a site handler");
+        self.heap.cancel(id.slot, id.gen)
+    }
+
+    /// Emit a control-shard event `delay` seconds from now. `delay`
+    /// must respect the world's lookahead — that is the contract that
+    /// keeps parallel windows equivalent to the serial replay.
+    pub fn emit_control_in(&mut self, delay: f64, ev: E) {
+        assert!(
+            delay.is_finite() && delay >= self.lookahead,
+            "control emission delay {delay} below the lookahead {}",
+            self.lookahead
+        );
+        assert!(
+            matches!(ev.shard_key(), ShardKey::Control),
+            "emit_control_in given a site-shard event"
+        );
+        self.control_out.push(ControlEmission {
+            origin_t: self.now.0,
+            origin_shard: self.shard,
+            at: self.now.add(delay),
+            ev,
+        });
+    }
+}
+
+/// Drain one site shard's window `[*, barrier)` (bounded by `horizon`,
+/// inclusive). Returns the time of the last dispatched event, or
+/// `NEG_INFINITY` if none qualified.
+fn drain_window<S: SiteShard>(
+    site: &mut S,
+    heap: &mut ShardHeap<S::Event>,
+    shard: u32,
+    barrier: f64,
+    horizon: f64,
+    lookahead: f64,
+    out: &mut Vec<ControlEmission<S::Event>>,
+) -> f64 {
+    let mut last = f64::NEG_INFINITY;
+    loop {
+        match heap.peek() {
+            Some((t, _)) if t.0 < barrier && t.0 <= horizon => {}
+            _ => break,
+        }
+        let (t, _seq, ev) = heap.pop().expect("peeked entry vanished");
+        last = t.0; // per-shard dispatch times are monotone
+        let mut ctx = SiteCtx {
+            shard,
+            now: t,
+            lookahead,
+            heap: &mut *heap,
+            control_out: &mut *out,
+        };
+        site.handle(t, ev, &mut ctx);
+    }
+    last
+}
+
+/// Dispatch exactly one site event (the global front) — the degenerate
+/// single-queue step used by the serial engine and by zero-lookahead
+/// windows.
+fn step_site<S: SiteShard>(
+    sites: &mut [S],
+    q: &mut ShardedQueue<S::Event>,
+    shard: usize,
+    lookahead: f64,
+) {
+    let mut out: Vec<ControlEmission<S::Event>> = Vec::new();
+    let t = {
+        let heap = &mut q.shards[shard];
+        let (t, _seq, ev) = heap.pop().expect("peeked event vanished");
+        let mut ctx = SiteCtx {
+            shard: shard as u32,
+            now: t,
+            lookahead,
+            heap: &mut *heap,
+            control_out: &mut out,
+        };
+        sites[shard - 1].handle(t, ev, &mut ctx);
+        t
+    };
+    if t.0 > q.now.0 {
+        q.now = t;
+    }
+    flush_control(q, out);
+}
+
+/// Flush buffered control emissions in origin dispatch order — the
+/// order the serial single-queue replay would have enqueued them in
+/// (per-shard buffers are already in per-shard dispatch order; the
+/// stable sort interleaves shards by `(origin time, origin shard)`).
+fn flush_control<E: ShardEvent>(
+    q: &mut ShardedQueue<E>,
+    mut emissions: Vec<ControlEmission<E>>,
+) {
+    emissions.sort_by(|a, b| {
+        a.origin_t
+            .total_cmp(&b.origin_t)
+            .then(a.origin_shard.cmp(&b.origin_shard))
+    });
+    for em in emissions {
+        debug_assert!(matches!(em.ev.shard_key(), ShardKey::Control));
+        debug_assert!(em.at.0 >= q.now.0,
+                      "control emission scheduled into the past");
+        q.schedule_at(em.at, em.ev);
+    }
+}
+
+/// The single-queue engine: serial replay of a sharded world, one
+/// globally-minimal event at a time. Reference semantics for
+/// [`run_sharded`] — the equivalence suite holds the two byte-identical.
+pub fn run_sharded_serial<C, S, E>(
+    control: &mut C,
+    sites: &mut [S],
+    q: &mut ShardedQueue<E>,
+    horizon: SimTime,
+) -> SimTime
+where
+    C: ControlPlane<Site = S>,
+    S: SiteShard<Event = E>,
+    E: ShardEvent + Send,
+{
+    assert_eq!(sites.len() + 1, q.shards.len(),
+               "one site state per site shard");
+    loop {
+        let Some((at, shard)) = q.peek() else { break };
+        if at.0 > horizon.0 {
+            break;
+        }
+        if shard == 0 {
+            let (t, ev) = q.pop_from(0).expect("peeked event vanished");
+            control.handle(sites, t, ev, q);
+        } else {
+            let lookahead = control.lookahead().max(0.0);
+            step_site(sites, q, shard, lookahead);
+        }
+    }
+    q.now()
+}
+
+/// The parallel engine: control events run serially as barriers;
+/// between barriers each site shard's window is drained on its own
+/// thread. Produces exactly the event stream of [`run_sharded_serial`].
+pub fn run_sharded<C, S, E>(
+    control: &mut C,
+    sites: &mut [S],
+    q: &mut ShardedQueue<E>,
+    horizon: SimTime,
+    threads: usize,
+) -> SimTime
+where
+    C: ControlPlane<Site = S>,
+    S: SiteShard<Event = E>,
+    E: ShardEvent + Send,
+{
+    assert_eq!(sites.len() + 1, q.shards.len(),
+               "one site state per site shard");
+    loop {
+        let Some((at, shard)) = q.peek() else { break };
+        if at.0 > horizon.0 {
+            break;
+        }
+        if shard == 0 {
+            let (t, ev) = q.pop_from(0).expect("peeked event vanished");
+            control.handle(sites, t, ev, q);
+            continue;
+        }
+        let lookahead = control.lookahead().max(0.0);
+        let t_start = at.0;
+        let mut barrier = if lookahead.is_finite() {
+            t_start + lookahead
+        } else {
+            f64::INFINITY
+        };
+        if let Some((tc, _)) = q.shards[0].peek() {
+            barrier = barrier.min(tc.0);
+        }
+        if barrier <= t_start {
+            // Zero lookahead: the window is empty — fall back to exact
+            // single-queue stepping of the front event.
+            step_site(sites, q, shard, lookahead);
+            continue;
+        }
+        // Parallel site window [t_start, barrier).
+        let workers = threads.max(1).min(sites.len());
+        let chunk = sites.len().div_ceil(workers);
+        let horizon_t = horizon.0;
+        let mut emissions: Vec<ControlEmission<E>> = Vec::new();
+        let mut max_t = f64::NEG_INFINITY;
+        {
+            let (_control_shard, site_heaps) = q.shards.split_at_mut(1);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for (ci, (site_chunk, heap_chunk)) in sites
+                    .chunks_mut(chunk)
+                    .zip(site_heaps.chunks_mut(chunk))
+                    .enumerate()
+                {
+                    let base = ci * chunk;
+                    handles.push(scope.spawn(move || {
+                        let mut out: Vec<ControlEmission<E>> = Vec::new();
+                        let mut last = f64::NEG_INFINITY;
+                        for (k, (site, heap)) in site_chunk
+                            .iter_mut()
+                            .zip(heap_chunk.iter_mut())
+                            .enumerate()
+                        {
+                            let l = drain_window(
+                                site,
+                                heap,
+                                (1 + base + k) as u32,
+                                barrier,
+                                horizon_t,
+                                lookahead,
+                                &mut out,
+                            );
+                            if l > last {
+                                last = l;
+                            }
+                        }
+                        (last, out)
+                    }));
+                }
+                for h in handles {
+                    let (last, out) =
+                        h.join().expect("site shard worker panicked");
+                    if last > max_t {
+                        max_t = last;
+                    }
+                    emissions.extend(out);
+                }
+            });
+        }
+        if max_t > q.now.0 {
+            q.now = SimTime(max_t);
+        }
+        flush_control(q, emissions);
+    }
+    q.now()
+}
+
+/// A sensible worker count: one thread per site shard, capped by the
+/// machine's available parallelism.
+pub fn default_threads(sites: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(sites.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Clone, PartialEq)]
+    enum TEv {
+        Ctl(u32),
+        Site { site: u32, tag: u32 },
+    }
+
+    impl ShardEvent for TEv {
+        fn shard_key(&self) -> ShardKey {
+            match self {
+                TEv::Ctl(_) => ShardKey::Control,
+                TEv::Site { site, .. } => ShardKey::Site(*site),
+            }
+        }
+    }
+
+    #[test]
+    fn merge_order_is_time_shard_seq() {
+        let mut q: ShardedQueue<TEv> = ShardedQueue::new(2);
+        q.schedule_at(SimTime(5.0), TEv::Site { site: 1, tag: 0 });
+        q.schedule_at(SimTime(5.0), TEv::Site { site: 0, tag: 1 });
+        q.schedule_at(SimTime(5.0), TEv::Ctl(2));
+        q.schedule_at(SimTime(1.0), TEv::Site { site: 1, tag: 3 });
+        q.schedule_at(SimTime(5.0), TEv::Site { site: 0, tag: 4 });
+        let mut order = Vec::new();
+        while let Some((t, ev)) = q.pop() {
+            order.push((t.0, ev));
+        }
+        // t=1 first; at t=5 control (shard 0) precedes site 0 precedes
+        // site 1, and within site 0 schedule order holds.
+        assert_eq!(order, vec![
+            (1.0, TEv::Site { site: 1, tag: 3 }),
+            (5.0, TEv::Ctl(2)),
+            (5.0, TEv::Site { site: 0, tag: 1 }),
+            (5.0, TEv::Site { site: 0, tag: 4 }),
+            (5.0, TEv::Site { site: 1, tag: 0 }),
+        ]);
+        assert_eq!(q.dispatched(), 5);
+    }
+
+    #[test]
+    fn cancellation_per_shard() {
+        let mut q: ShardedQueue<TEv> = ShardedQueue::new(1);
+        let a = q.schedule_at(SimTime(1.0), TEv::Site { site: 0, tag: 0 });
+        let b = q.schedule_at(SimTime(2.0), TEv::Ctl(1));
+        assert!(q.cancel(a));
+        assert!(!q.cancel(a));
+        let (t, ev) = q.pop().unwrap();
+        assert_eq!((t.0, ev), (2.0, TEv::Ctl(1)));
+        assert!(!q.cancel(b)); // already fired
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown site shard")]
+    fn unknown_site_shard_is_rejected() {
+        let mut q: ShardedQueue<TEv> = ShardedQueue::new(1);
+        q.schedule_at(SimTime(0.0), TEv::Site { site: 7, tag: 0 });
+    }
+
+    // -- a toy sharded world used by the serial/parallel equivalence
+    //    checks below (heavier randomized coverage lives in
+    //    tests/shard_equivalence.rs) ---------------------------------
+
+    #[derive(Clone)]
+    struct TSite {
+        site: u32,
+        remaining: u32,
+        log: Vec<(f64, u32)>,
+    }
+
+    impl SiteShard for TSite {
+        type Event = TEv;
+
+        fn handle(&mut self, t: SimTime, ev: TEv,
+                  ctx: &mut SiteCtx<'_, TEv>) {
+            let TEv::Site { tag, .. } = ev else { return };
+            self.log.push((t.0, tag));
+            if self.remaining > 0 {
+                self.remaining -= 1;
+                ctx.schedule_in(1.5, TEv::Site {
+                    site: self.site,
+                    tag: tag + 1,
+                });
+                if self.remaining % 3 == 0 {
+                    ctx.emit_control_in(10.0, TEv::Ctl(self.site));
+                }
+            }
+        }
+    }
+
+    #[derive(Clone)]
+    struct TControl {
+        kicked: bool,
+        lookahead: f64,
+        log: Vec<(f64, u32)>,
+    }
+
+    impl ControlPlane for TControl {
+        type Site = TSite;
+
+        fn handle(&mut self, sites: &mut [TSite], t: SimTime, ev: TEv,
+                  q: &mut ShardedQueue<TEv>) {
+            let TEv::Ctl(x) = ev else { return };
+            self.log.push((t.0, x));
+            if !self.kicked {
+                self.kicked = true;
+                for s in sites.iter() {
+                    q.schedule_at(t, TEv::Site { site: s.site, tag: 0 });
+                }
+            }
+        }
+
+        fn lookahead(&self) -> f64 {
+            self.lookahead
+        }
+    }
+
+    fn toy_world(lookahead: f64) -> (TControl, Vec<TSite>) {
+        let control = TControl { kicked: false, lookahead, log: vec![] };
+        let sites = (0..3)
+            .map(|s| TSite {
+                site: s,
+                remaining: 7 + s * 3,
+                log: vec![],
+            })
+            .collect();
+        (control, sites)
+    }
+
+    fn run_both(lookahead: f64)
+        -> ((TControl, Vec<TSite>, u64), (TControl, Vec<TSite>, u64)) {
+        // The toy world emits control at +10.0, so any lookahead ≤ 10
+        // respects the contract.
+        let (mut c1, mut s1) = toy_world(lookahead);
+        let mut q1: ShardedQueue<TEv> = ShardedQueue::new(s1.len());
+        q1.schedule_at(SimTime(0.0), TEv::Ctl(99));
+        run_sharded_serial(&mut c1, &mut s1, &mut q1,
+                           SimTime(f64::INFINITY));
+        let (mut c2, mut s2) = toy_world(lookahead);
+        let mut q2: ShardedQueue<TEv> = ShardedQueue::new(s2.len());
+        q2.schedule_at(SimTime(0.0), TEv::Ctl(99));
+        run_sharded(&mut c2, &mut s2, &mut q2, SimTime(f64::INFINITY), 3);
+        ((c1, s1, q1.dispatched()), (c2, s2, q2.dispatched()))
+    }
+
+    #[test]
+    fn parallel_replay_matches_serial() {
+        let ((c1, s1, d1), (c2, s2, d2)) = run_both(10.0);
+        assert_eq!(c1.log, c2.log);
+        assert_eq!(d1, d2);
+        for (a, b) in s1.iter().zip(&s2) {
+            assert_eq!(a.log, b.log, "site {} diverged", a.site);
+        }
+        // The cascade actually ran.
+        assert!(s1.iter().all(|s| s.log.len() > 1));
+        assert!(!c1.log.is_empty());
+    }
+
+    #[test]
+    fn zero_lookahead_degrades_to_single_queue() {
+        let ((c1, s1, d1), (c2, s2, d2)) = run_both(0.0);
+        assert_eq!(c1.log, c2.log);
+        assert_eq!(d1, d2);
+        for (a, b) in s1.iter().zip(&s2) {
+            assert_eq!(a.log, b.log);
+        }
+    }
+
+    #[test]
+    fn horizon_bounds_both_engines_identically() {
+        let (mut c1, mut s1) = toy_world(10.0);
+        let mut q1: ShardedQueue<TEv> = ShardedQueue::new(s1.len());
+        q1.schedule_at(SimTime(0.0), TEv::Ctl(99));
+        let end1 = run_sharded_serial(&mut c1, &mut s1, &mut q1,
+                                      SimTime(4.0));
+        let (mut c2, mut s2) = toy_world(10.0);
+        let mut q2: ShardedQueue<TEv> = ShardedQueue::new(s2.len());
+        q2.schedule_at(SimTime(0.0), TEv::Ctl(99));
+        let end2 = run_sharded(&mut c2, &mut s2, &mut q2, SimTime(4.0), 2);
+        assert_eq!(end1.0, end2.0);
+        for (a, b) in s1.iter().zip(&s2) {
+            assert_eq!(a.log, b.log);
+            assert!(a.log.iter().all(|&(t, _)| t <= 4.0));
+        }
+        assert!(!q1.is_empty(), "horizon left events queued");
+    }
+
+    struct MergeCounter {
+        seen: Vec<(f64, u32)>,
+    }
+
+    impl MergedWorld for MergeCounter {
+        type Event = TEv;
+
+        fn handle(&mut self, t: SimTime, ev: TEv,
+                  q: &mut ShardedQueue<TEv>) {
+            match ev {
+                TEv::Ctl(x) => {
+                    self.seen.push((t.0, x));
+                    if x > 0 {
+                        q.schedule_in(1.0, TEv::Site { site: 0, tag: x - 1 });
+                    }
+                }
+                TEv::Site { tag, .. } => {
+                    self.seen.push((t.0, tag));
+                    if tag > 0 {
+                        q.schedule_in(1.0, TEv::Ctl(tag - 1));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merged_world_cascades_across_shards() {
+        let mut w = MergeCounter { seen: vec![] };
+        let mut q: ShardedQueue<TEv> = ShardedQueue::new(1);
+        q.schedule_at(SimTime(0.0), TEv::Ctl(3));
+        let end = run_merged(&mut w, &mut q);
+        assert_eq!(w.seen, vec![(0.0, 3), (1.0, 2), (2.0, 1), (3.0, 0)]);
+        assert_eq!(end.0, 3.0);
+    }
+}

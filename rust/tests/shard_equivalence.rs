@@ -1,0 +1,419 @@
+//! The sharded engine's parallel windowed replay must be byte-for-byte
+//! equivalent to the single-queue (serial deterministic merge) replay:
+//! same per-shard dispatch order, same control-plane event stream, and
+//! byte-identical figure outputs from the merged per-shard recorders —
+//! on randomized multi-site scenarios. Plus model-checked EventQueue
+//! generation-slot cancellation invariants under randomized
+//! schedule/cancel/pop interleavings.
+
+use evhc::ids::NodeNames;
+use evhc::lrms::core::{BatchCore, Placement};
+use evhc::lrms::JobId;
+use evhc::metrics::{DisplayState, Recorder};
+use evhc::sim::shard::{run_sharded, run_sharded_serial, ControlPlane,
+                       SiteCtx, SiteShard};
+use evhc::sim::{EventQueue, ShardEvent, ShardKey, ShardedQueue, SimTime};
+use evhc::util::prng::Prng;
+use evhc::util::proptest::check_n;
+
+// ---------------------------------------------------------------------
+// Randomized sharded world: per-site LRMS core + recorder, control
+// fan-out blocks, site→control progress reports.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum PEv {
+    /// Control: fan one submission block out to every site.
+    Block { per_site: u32 },
+    /// Control: progress report emitted by a site shard.
+    Progress { site: u32, done: u32 },
+    /// Site: submit `n` jobs.
+    Submit { site: u32, n: u32 },
+    /// Site: a job finished.
+    Done { site: u32, job: JobId },
+}
+
+impl ShardEvent for PEv {
+    fn shard_key(&self) -> ShardKey {
+        match self {
+            PEv::Block { .. } | PEv::Progress { .. } => ShardKey::Control,
+            PEv::Submit { site, .. } | PEv::Done { site, .. } => {
+                ShardKey::Site(*site)
+            }
+        }
+    }
+}
+
+struct PropSite {
+    site: u32,
+    core: BatchCore,
+    rec: Recorder,
+    rng: Prng,
+    completed: u32,
+    report_every: u32,
+    lookahead: f64,
+    /// Per-shard dispatch log: (time bits, tag).
+    log: Vec<(u64, u32)>,
+}
+
+impl PropSite {
+    fn record_assignments(&mut self, t: SimTime,
+                          assigned: &[(JobId, evhc::ids::NodeId)],
+                          ctx: &mut SiteCtx<'_, PEv>) {
+        for &(job, node) in assigned {
+            let name = self.core.node_name(node).expect("assigned node");
+            self.rec.node_state(t, &name, DisplayState::Used);
+            let dur = 5.0 + self.rng.next_f64() * 20.0;
+            ctx.schedule_in(dur, PEv::Done { site: self.site, job });
+        }
+    }
+}
+
+impl SiteShard for PropSite {
+    type Event = PEv;
+
+    fn handle(&mut self, t: SimTime, ev: PEv, ctx: &mut SiteCtx<'_, PEv>) {
+        match ev {
+            PEv::Submit { n, .. } => {
+                self.log.push((t.0.to_bits(), 1_000_000 + n));
+                for i in 0..n {
+                    self.core.submit("", 1 + (i % 2), t);
+                }
+            }
+            PEv::Done { job, .. } => {
+                self.log.push((t.0.to_bits(), job.0 as u32));
+                let _ = self.core.on_job_finished(job, true, t);
+                self.completed += 1;
+                if let Some(j) = self.core.job(job) {
+                    if let (Some(node), Some(s), Some(e)) =
+                        (j.node, j.started_at, j.finished_at)
+                    {
+                        let name = self
+                            .core
+                            .node_name(node)
+                            .expect("node still registered");
+                        self.rec.job_run(&name, s, e);
+                        if self
+                            .core
+                            .node_stat(node)
+                            .map(|st| st.used_slots == 0)
+                            .unwrap_or(false)
+                        {
+                            self.rec.node_state(t, &name,
+                                                DisplayState::Idle);
+                        }
+                    }
+                }
+                if self.completed % self.report_every == 0 {
+                    ctx.emit_control_in(self.lookahead, PEv::Progress {
+                        site: self.site,
+                        done: self.completed,
+                    });
+                }
+            }
+            _ => unreachable!("control event in site shard"),
+        }
+        let assigned = self.core.schedule(t);
+        self.record_assignments(t, &assigned, ctx);
+    }
+}
+
+struct PropControl {
+    sites_n: u32,
+    lookahead: f64,
+    /// Control dispatch log: (time bits, site-or-MAX, payload).
+    log: Vec<(u64, u32, u32)>,
+}
+
+impl ControlPlane for PropControl {
+    type Site = PropSite;
+
+    fn handle(&mut self, _sites: &mut [PropSite], t: SimTime, ev: PEv,
+              q: &mut ShardedQueue<PEv>) {
+        match ev {
+            PEv::Block { per_site } => {
+                self.log.push((t.0.to_bits(), u32::MAX, per_site));
+                for s in 0..self.sites_n {
+                    q.schedule_at(t, PEv::Submit { site: s, n: per_site });
+                }
+            }
+            PEv::Progress { site, done } => {
+                self.log.push((t.0.to_bits(), site, done));
+            }
+            _ => unreachable!("site event in control shard"),
+        }
+    }
+
+    fn lookahead(&self) -> f64 {
+        self.lookahead
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Scn {
+    sites: u32,
+    nodes_per_site: u32,
+    slots: u32,
+    jobs_per_block: u32,
+    blocks: u32,
+    lookahead: f64,
+    report_every: u32,
+    threads: usize,
+    seed: u64,
+}
+
+fn gen_scn(r: &mut Prng) -> Scn {
+    Scn {
+        sites: 2 + r.next_below(3) as u32,
+        nodes_per_site: 1 + r.next_below(3) as u32,
+        slots: 1 + r.next_below(2) as u32,
+        jobs_per_block: 2 + r.next_below(20) as u32,
+        blocks: 1 + r.next_below(3) as u32,
+        lookahead: if r.chance(0.5) { 3.0 } else { 47.0 },
+        report_every: 1 + r.next_below(4) as u32,
+        threads: 2 + r.next_below(3) as usize,
+        seed: r.next_u64(),
+    }
+}
+
+fn build(scn: &Scn) -> (PropControl, Vec<PropSite>, ShardedQueue<PEv>) {
+    let mut sites = Vec::new();
+    for s in 0..scn.sites {
+        let mut core = BatchCore::new(Placement::PackFirstFit);
+        for k in 0..scn.nodes_per_site {
+            core.register_node(&format!("s{s}-n{k}"), scn.slots,
+                               SimTime(0.0));
+        }
+        sites.push(PropSite {
+            site: s,
+            core,
+            rec: Recorder::new(),
+            rng: Prng::new(scn.seed ^ (s as u64 + 1)
+                .wrapping_mul(0x9E3779B97F4A7C15)),
+            completed: 0,
+            report_every: scn.report_every,
+            lookahead: scn.lookahead,
+            log: Vec::new(),
+        });
+    }
+    let mut q: ShardedQueue<PEv> = ShardedQueue::new(scn.sites as usize);
+    for b in 0..scn.blocks {
+        q.schedule_at(SimTime(b as f64 * 50.0), PEv::Block {
+            per_site: scn.jobs_per_block,
+        });
+    }
+    (PropControl {
+        sites_n: scn.sites,
+        lookahead: scn.lookahead,
+        log: Vec::new(),
+    }, sites, q)
+}
+
+/// Everything observable about a finished run, figures included.
+struct Outcome {
+    control_log: Vec<(u64, u32, u32)>,
+    site_logs: Vec<Vec<(u64, u32)>>,
+    completed: Vec<u32>,
+    dispatched: u64,
+    transitions: Vec<(SimTime, String, DisplayState)>,
+    milestones: Vec<(SimTime, String)>,
+    fig10: String,
+    fig11: String,
+}
+
+fn run(scn: &Scn, parallel: bool) -> Outcome {
+    let (mut control, mut sites, mut q) = build(scn);
+    if parallel {
+        run_sharded(&mut control, &mut sites, &mut q,
+                    SimTime(f64::INFINITY), scn.threads);
+    } else {
+        run_sharded_serial(&mut control, &mut sites, &mut q,
+                           SimTime(f64::INFINITY));
+    }
+    let dispatched = q.dispatched();
+    let completed = sites.iter().map(|s| s.completed).collect();
+    let site_logs = sites.iter().map(|s| s.log.clone()).collect();
+    let control_log = control.log.clone();
+    let recs: Vec<Recorder> = sites.into_iter().map(|s| s.rec).collect();
+    let merged = Recorder::merge_shards(NodeNames::new(), &recs);
+    Outcome {
+        control_log,
+        site_logs,
+        completed,
+        dispatched,
+        transitions: merged.transitions_named(),
+        milestones: merged.milestones.clone(),
+        fig10: merged.fig10_usage(25.0, SimTime(600.0)).to_csv(),
+        fig11: merged.fig11_states(25.0, SimTime(600.0)).to_csv(),
+    }
+}
+
+#[test]
+fn prop_parallel_sharded_replay_equals_single_queue() {
+    check_n("sharded-eq-single-queue", 48, gen_scn, |scn| {
+        let a = run(scn, false);
+        let b = run(scn, true);
+        if a.control_log != b.control_log {
+            return Err(format!(
+                "control stream diverged:\n  serial:   {:?}\n  \
+                 parallel: {:?}", a.control_log, b.control_log));
+        }
+        if a.site_logs != b.site_logs {
+            return Err("per-shard dispatch order diverged".into());
+        }
+        if a.completed != b.completed {
+            return Err(format!("completions diverged: {:?} vs {:?}",
+                               a.completed, b.completed));
+        }
+        if a.dispatched != b.dispatched {
+            return Err(format!("dispatch counts diverged: {} vs {}",
+                               a.dispatched, b.dispatched));
+        }
+        if a.transitions != b.transitions {
+            return Err("merged transition streams diverged".into());
+        }
+        if a.milestones != b.milestones {
+            return Err("merged milestones diverged".into());
+        }
+        if a.fig10 != b.fig10 {
+            return Err("fig10 output not byte-identical".into());
+        }
+        if a.fig11 != b.fig11 {
+            return Err("fig11 output not byte-identical".into());
+        }
+        // Sanity: the scenario did real work.
+        let total: u32 = a.completed.iter().sum();
+        if total != scn.sites * scn.jobs_per_block * scn.blocks {
+            return Err(format!("workload not drained: {total}"));
+        }
+        Ok(())
+    });
+}
+
+/// Two parallel replays (same seed) must also agree with each other —
+/// thread scheduling must not leak into any observable stream.
+#[test]
+fn prop_parallel_replay_is_internally_deterministic() {
+    check_n("sharded-parallel-deterministic", 16, gen_scn, |scn| {
+        let a = run(scn, true);
+        let b = run(scn, true);
+        if a.transitions != b.transitions || a.fig10 != b.fig10
+            || a.control_log != b.control_log
+        {
+            return Err("parallel replay not deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// EventQueue generation-slot cancellation: model-checked invariants.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum MState {
+    Live,
+    Cancelled,
+    Fired,
+}
+
+#[test]
+fn prop_event_queue_cancellation_model() {
+    check_n("event-queue-cancel-model", 96, |r: &mut Prng| {
+        let n = 20 + r.next_below(200) as usize;
+        (0..n).map(|_| r.next_u64()).collect::<Vec<u64>>()
+    }, |ops| {
+        let mut q: EventQueue<usize> = EventQueue::new();
+        // Model: (effective time, value, state), insertion-ordered.
+        let mut model: Vec<(f64, usize, MState)> = Vec::new();
+        let mut handles = Vec::new();
+        let mut now = 0.0f64;
+        for &op in ops {
+            match op % 4 {
+                0 | 1 => {
+                    let t = ((op >> 8) % 1000) as f64 / 10.0;
+                    let v = model.len();
+                    handles.push(q.schedule_at(SimTime(t), v));
+                    model.push((t.max(now), v, MState::Live));
+                }
+                2 => {
+                    if handles.is_empty() {
+                        continue;
+                    }
+                    let k = ((op >> 8) as usize) % handles.len();
+                    let expected = model[k].2 == MState::Live;
+                    let got = q.cancel(handles[k]);
+                    if got != expected {
+                        return Err(format!(
+                            "cancel #{k}: got {got}, expected {expected} \
+                             (state {:?})", model[k].2));
+                    }
+                    if expected {
+                        model[k].2 = MState::Cancelled;
+                    }
+                    // Idempotence: a second cancel must always fail.
+                    if q.cancel(handles[k]) {
+                        return Err(format!("double-cancel #{k} succeeded"));
+                    }
+                }
+                _ => {
+                    // Model pop: live entry with min (time, insertion).
+                    let next = model
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, e)| e.2 == MState::Live)
+                        .min_by(|(_, x), (_, y)| {
+                            x.0.total_cmp(&y.0)
+                        })
+                        .map(|(i, e)| (i, e.0, e.1));
+                    match (q.pop(), next) {
+                        (None, None) => {}
+                        (Some((t, v)), Some((i, mt, mv))) => {
+                            if v != mv || t.0 != mt {
+                                return Err(format!(
+                                    "pop mismatch: got ({}, {v}), \
+                                     model ({mt}, {mv})", t.0));
+                            }
+                            if t.0 < now {
+                                return Err("time went backwards".into());
+                            }
+                            now = t.0;
+                            model[i].2 = MState::Fired;
+                        }
+                        (got, want) => {
+                            return Err(format!(
+                                "pop disagreement: queue {got:?}, \
+                                 model {want:?}"));
+                        }
+                    }
+                }
+            }
+            let live = model.iter().filter(|e| e.2 == MState::Live).count();
+            if q.live_count() != live {
+                return Err(format!(
+                    "live_count {} != model {live}", q.live_count()));
+            }
+        }
+        // Drain: everything still live fires, in model order.
+        while let Some((t, v)) = q.pop() {
+            let next = model
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.2 == MState::Live)
+                .min_by(|(_, x), (_, y)| x.0.total_cmp(&y.0))
+                .map(|(i, e)| (i, e.1));
+            match next {
+                Some((i, mv)) if mv == v => model[i].2 = MState::Fired,
+                other => {
+                    return Err(format!(
+                        "drain pop ({}, {v}) but model says {other:?}",
+                        t.0));
+                }
+            }
+        }
+        if model.iter().any(|e| e.2 == MState::Live) {
+            return Err("live events lost at drain".into());
+        }
+        Ok(())
+    });
+}
