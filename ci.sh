@@ -12,7 +12,13 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
-echo "== perf: scale bench (quick mode) =="
+# Tier-1 above already ran the full broker suite; this quick pass
+# re-drives just the scenario-replay tests (the broker's determinism
+# surface) with a reduced property budget as a cheap smoke signal.
+echo "== broker: scenario suite (quick mode) =="
+EVHC_PROPTEST_CASES=24 cargo test -q --test broker_policies scenario
+
+echo "== perf: scale bench (quick mode; includes the broker section) =="
 EVHC_SCALE_BENCH_QUICK=1 cargo bench --bench scale
 
 echo "== perf: baseline comparison (warn-only) =="

@@ -28,8 +28,8 @@ fn metric(row: &Json, path: &[&str], name: &str) -> Option<f64> {
     lookup(row, path)?.get(name)?.as_f64()
 }
 
-fn scenarios(doc: &Json) -> Vec<(String, &Json)> {
-    let Some(Json::Array(rows)) = doc.get("scenarios") else {
+fn rows_of<'a>(doc: &'a Json, key: &str) -> Vec<(String, &'a Json)> {
+    let Some(Json::Array(rows)) = doc.get(key) else {
         return Vec::new();
     };
     rows.iter()
@@ -39,6 +39,65 @@ fn scenarios(doc: &Json) -> Vec<(String, &Json)> {
                 .map(|n| (n.to_string(), r))
         })
         .collect()
+}
+
+fn scenarios(doc: &Json) -> Vec<(String, &Json)> {
+    rows_of(doc, "scenarios")
+}
+
+/// Diff the broker policy×scenario rows: cost and makespan are the
+/// broker's figures of merit (events/sec is noise at this size).
+fn compare_broker(baseline: &Json, fresh: &Json) -> u32 {
+    let base_rows = rows_of(baseline, "broker");
+    let fresh_rows = rows_of(fresh, "broker");
+    if fresh_rows.is_empty() {
+        return 0;
+    }
+    println!("\n{:<28} {:>12} {:>12} {:>8}", "broker row", "base", "fresh",
+             "delta");
+    println!("{}", "-".repeat(64));
+    let mut regressions = 0u32;
+    for (name, row) in fresh_rows {
+        let Some((_, base_row)) =
+            base_rows.iter().find(|(n, _)| *n == name)
+        else {
+            println!("{name:<28} (new row, no baseline)");
+            continue;
+        };
+        for metric_name in ["makespan_s", "cost_usd",
+                            "preempt_recovered"] {
+            let (Some(b), Some(f)) = (
+                base_row.get(metric_name).and_then(|v| v.as_f64()),
+                row.get(metric_name).and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            if b == f {
+                continue; // deterministic scenarios: only drift matters
+            }
+            // A metric growing from a zero baseline (e.g. a formerly
+            // free run starting to cost money) is an unbounded
+            // regression, not a 0% one.
+            let delta = if b != 0.0 {
+                (f - b) / b * 100.0
+            } else {
+                f64::INFINITY
+            };
+            // A scenario getting >10% slower or pricier is a
+            // regression in the broker's own currency.
+            let mark = if metric_name != "preempt_recovered"
+                && delta > 10.0
+            {
+                regressions += 1;
+                "  <-- REGRESSION"
+            } else {
+                ""
+            };
+            println!("{name:<28} {b:>12.4} {f:>12.4} {delta:>+7.1}% \
+                      ({metric_name}){mark}");
+        }
+    }
+    regressions
 }
 
 fn main() {
@@ -93,10 +152,12 @@ fn main() {
             }
         }
     }
-    if regressions > 0 {
+    let broker_regressions = compare_broker(&baseline, &fresh);
+    if regressions > 0 || broker_regressions > 0 {
         println!("\nWARNING: {regressions} section(s) regressed by more \
-                  than 10% events/sec (warn-only for now).");
+                  than 10% events/sec and {broker_regressions} broker \
+                  row(s) by more than 10% cost/makespan (warn-only).");
     } else {
-        println!("\nno events/sec regressions beyond 10%.");
+        println!("\nno regressions beyond 10%.");
     }
 }

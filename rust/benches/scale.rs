@@ -10,7 +10,11 @@
 //! * `sharded` — the same workload split into per-site shards: the
 //!   single-queue engine (serial deterministic merge) vs the parallel
 //!   windowed engine of `evhc::sim::shard`, with an equality assert
-//!   that both replays produced identical per-site outcomes.
+//!   that both replays produced identical per-site outcomes,
+//! * `broker` — full-cluster elasticity runs over 2–8 sites, policy ×
+//!   scenario (spot-preemption waves, site outages, price spikes):
+//!   cost, makespan and preempted-job recovery per combination, each
+//!   replayed twice with a determinism assert.
 //!
 //! Results are written to `BENCH_scale.json` at the repo root so future
 //! PRs accumulate a perf trajectory (`ci.sh` diffs it against the
@@ -22,6 +26,9 @@
 use std::time::Instant;
 
 use evhc::api::json::Json;
+use evhc::broker::{PolicyKind, ScenarioPlan};
+use evhc::cloudsim::SiteSpec;
+use evhc::cluster::{HybridCluster, RunConfig, RunReport};
 use evhc::lrms::core::{BatchCore, Placement};
 use evhc::lrms::JobId;
 use evhc::sim::shard::{default_threads, run_sharded, run_sharded_serial,
@@ -279,6 +286,118 @@ fn report_line(label: &str, m: &Measured) {
     );
 }
 
+// ---------------------------------------------------------------------
+// Broker: policy × scenario × multi-site elasticity runs
+// ---------------------------------------------------------------------
+
+/// Build a policy/scenario world: CESNET + AWS (the paper pair), an AWS
+/// spot market from 3 sites up, opportunistic OpenNebula sites beyond.
+fn broker_cfg(policy: PolicyKind, scenario: &ScenarioPlan,
+              n_sites: usize, scale: f64) -> RunConfig {
+    let mut cfg = RunConfig::paper_usecase(scale, 7);
+    cfg.inference_every = 0;
+    let mut sites = vec![SiteSpec::cesnet_metacentrum(),
+                         SiteSpec::aws_us_east_2()];
+    if n_sites >= 3 {
+        sites.push(SiteSpec::aws_spot_us_east_2());
+    }
+    for i in 3..n_sites {
+        sites.push(SiteSpec::opennebula(&format!("ON-{i}")));
+    }
+    sites.truncate(n_sites);
+    cfg.sites = sites;
+    cfg.policy = policy;
+    cfg.scenario = scenario.clone();
+    cfg
+}
+
+fn broker_run(policy: PolicyKind, scenario: &ScenarioPlan,
+              n_sites: usize, scale: f64) -> RunReport {
+    HybridCluster::new(broker_cfg(policy, scenario, n_sites, scale))
+        .expect("broker world")
+        .run()
+        .expect("broker run")
+}
+
+/// Everything that must match bit-for-bit between two replays.
+fn broker_digest(r: &RunReport) -> (u32, u64, u64, u32, u32, u32) {
+    (
+        r.jobs_completed,
+        r.makespan.0.to_bits(),
+        r.total_cost_usd.to_bits(),
+        r.preempted_vms,
+        r.preempted_jobs,
+        r.preempt_recovered,
+    )
+}
+
+fn broker_section(quick: bool) -> Json {
+    let scale = if quick { 0.05 } else { 0.2 };
+    let t_wave = if quick { 300.0 } else { 600.0 };
+    let policies: Vec<PolicyKind> = if quick {
+        vec![PolicyKind::SlaRank, PolicyKind::CostMin,
+             PolicyKind::SpotAware]
+    } else {
+        PolicyKind::ALL.to_vec()
+    };
+    let mut scenarios: Vec<(&str, ScenarioPlan)> = vec![
+        ("spot-wave", ScenarioPlan::new()
+            .spot_wave(0, t_wave, 0)
+            .spot_wave(1, t_wave * 2.0, 0)),
+        ("site-outage", ScenarioPlan::new()
+            .site_outage(1, t_wave, t_wave * 6.0)),
+    ];
+    if !quick {
+        scenarios.push(("price-spike", ScenarioPlan::new()
+            .price_spike(1, 0.0, 1_000_000.0, 8.0)));
+    }
+    let site_counts: &[usize] = if quick { &[2, 4] } else { &[2, 4, 8] };
+
+    let mut rows = Vec::new();
+    for &(sname, ref plan) in &scenarios {
+        for &policy in &policies {
+            for &n in site_counts {
+                let wall = Instant::now();
+                let r = broker_run(policy, plan, n, scale);
+                let wall_s = wall.elapsed().as_secs_f64();
+                // Deterministic across runs: replay and compare.
+                let r2 = broker_run(policy, plan, n, scale);
+                assert_eq!(broker_digest(&r), broker_digest(&r2),
+                           "broker run diverged: {} {} {n} sites",
+                           policy.label(), sname);
+                println!(
+                    "  {:<11} {:<11} {n}s  {:>8.1}s makespan  \
+                     ${:<8.4} {:>4} preempted {:>4} jobs recovered {:>4}",
+                    policy.label(), sname, r.makespan.0,
+                    r.total_cost_usd, r.preempted_vms, r.preempted_jobs,
+                    r.preempt_recovered
+                );
+                rows.push(Json::Object(vec![
+                    ("name".into(), Json::Str(format!(
+                        "{}-{}-{}s", policy.label(), sname, n))),
+                    ("policy".into(), Json::Str(policy.label().into())),
+                    ("scenario".into(), Json::Str(sname.into())),
+                    ("sites".into(), Json::Num(n as f64)),
+                    ("jobs".into(), Json::Num(r.jobs_completed as f64)),
+                    ("makespan_s".into(), Json::Num(r.makespan.0)),
+                    ("cost_usd".into(), Json::Num(r.total_cost_usd)),
+                    ("preempted_vms".into(),
+                     Json::Num(r.preempted_vms as f64)),
+                    ("preempted_jobs".into(),
+                     Json::Num(r.preempted_jobs as f64)),
+                    ("preempt_recovered".into(),
+                     Json::Num(r.preempt_recovered as f64)),
+                    ("events".into(), Json::Num(r.events as f64)),
+                    ("wall_s".into(), Json::Num(wall_s)),
+                    ("events_per_sec".into(),
+                     Json::Num(r.events as f64 / wall_s.max(1e-9))),
+                ]));
+            }
+        }
+    }
+    Json::Array(rows)
+}
+
 fn main() {
     let quick = std::env::var("EVHC_SCALE_BENCH_QUICK").is_ok();
     let scenarios: Vec<Scenario> = if quick {
@@ -407,10 +526,16 @@ fn main() {
                    / spread_naive.events_per_sec.max(1e-9))),
     ]));
 
+    // Broker: policy × scenario × multi-site elasticity runs, each
+    // replayed twice with an in-bench determinism assert.
+    section("SCALE: broker policy x scenario");
+    let broker_rows = broker_section(quick);
+
     let doc = Json::Object(vec![
         ("bench".into(), Json::Str("scale".into())),
         ("quick".into(), Json::Bool(quick)),
         ("scenarios".into(), Json::Array(rows)),
+        ("broker".into(), broker_rows),
     ]);
     std::fs::write("BENCH_scale.json", doc.render() + "\n")
         .expect("write BENCH_scale.json");

@@ -1,0 +1,557 @@
+//! Multi-site elasticity broker: the grow/shrink-to-*which-site*
+//! decision behind CLUES power-on requests.
+//!
+//! The legacy path (`orchestrator::select_site`) was a single static
+//! SLA-rank sweep that re-cloned site names on every call and ignored
+//! every live economic signal the simulator already tracks. The broker
+//! owns that decision instead:
+//!
+//! * **Identity** — site names are interned once into dense
+//!   [`SiteId`]s (mirroring the node interner of [`crate::ids`]); the
+//!   immutable [`SiteTable`] pre-resolves SLAs, name tie-break ranks,
+//!   worker price points and preemption hazards, so a placement
+//!   decision hashes and clones no `String`s.
+//! * **Signals** — each decision samples live [`SiteSignals`] per site:
+//!   quota headroom, availability (the spec's monitored baseline,
+//!   forced to 0 while a scenario outage is active; wiring the live
+//!   [`crate::orchestrator::Monitor`] window in is future work), the
+//!   ledger's open $/hour burn rate, the LRMS queue depth, WAN latency
+//!   from the front-end through the vRouter overlay, and the site's
+//!   spot-preemption hazard.
+//! * **Policy** — a pluggable [`PlacementPolicy`] ranks the eligible
+//!   sites. [`SlaRank`] reproduces the legacy selector exactly
+//!   (property-proven in `tests/broker_policies.rs`); [`CostMin`],
+//!   [`LatencyMin`] and [`SpotAware`] trade cost, distance and
+//!   preemption risk. Eligibility itself (availability floor, SLA
+//!   zero-instance exclusion, VM/vCPU quota, SLA headroom) is shared by
+//!   every policy and identical to the legacy checks.
+//! * **Scenarios** — [`scenario::ScenarioPlan`] scripts spot-preemption
+//!   waves, whole-site outages and price spikes; the cluster world
+//!   replays them as site-sharded events, so scenario runs stay
+//!   deterministic under the parallel engine of [`crate::sim::shard`].
+//!
+//! The front-end placement always uses the SLA ranking (the front end
+//! is the cluster's fixed point — the paper deploys it at the home
+//! site); the configured policy governs the elastic workers.
+
+pub mod policy;
+pub mod scenario;
+
+pub use policy::{CostMin, LatencyMin, PlacementPolicy, PolicyKind, Score,
+                 SlaRank, SpotAware};
+pub use scenario::{ScenarioEvent, ScenarioPlan};
+
+use crate::cloudsim::CloudSite;
+use crate::ids::{SiteId, SiteNames};
+use crate::netsim::Network;
+use crate::orchestrator::sla::{ResolvedSlas, Sla, MIN_AVAILABILITY};
+use crate::sim::SimTime;
+
+/// Immutable per-site facts, resolved once at construction. Policies
+/// read it through accessors; nothing here allocates per decision.
+pub struct SiteTable {
+    names: SiteNames,
+    slas: ResolvedSlas,
+    /// Interned id of each site, indexed by site-vector position.
+    /// Usually `site_ids[i] == SiteId(i)`; sites sharing a name share
+    /// an id (and therefore an SLA), exactly like the legacy by-name
+    /// lookup.
+    site_ids: Vec<SiteId>,
+    /// Rank of each site's name in ascending order — the deterministic
+    /// final tie-break, precomputed so ranking never compares strings.
+    name_ranks: Vec<u32>,
+    /// $/hour of the instance type the cluster would provision for one
+    /// worker at each site (the smallest type satisfying the template).
+    worker_prices: Vec<f64>,
+    /// Spot-preemption hazard (events per VM-hour) per site.
+    hazards: Vec<f64>,
+    /// One-way WAN latency from the front-end site (0 until the FE is
+    /// placed, then 0 for the FE site itself).
+    latency_from_fe: Vec<f64>,
+}
+
+impl SiteTable {
+    pub fn sla_priority(&self, site: usize) -> Option<u32> {
+        self.slas.get(self.site_ids[site]).map(|(p, _)| p)
+    }
+
+    pub fn name_rank(&self, site: usize) -> u32 {
+        self.name_ranks[site]
+    }
+
+    pub fn worker_price(&self, site: usize) -> f64 {
+        self.worker_prices[site]
+    }
+
+    pub fn hazard(&self, site: usize) -> f64 {
+        self.hazards[site]
+    }
+
+    pub fn latency_from_fe(&self, site: usize) -> f64 {
+        self.latency_from_fe[site]
+    }
+
+    /// Interner handle (ids are issued in site-vector order).
+    pub fn names(&self) -> SiteNames {
+        self.names.clone()
+    }
+}
+
+/// Live signals for one site, sampled at decision time. `Copy`, id
+/// indexed, no `String`s — the per-call cost of a decision is a sweep
+/// of plain arithmetic over the site vector.
+#[derive(Debug, Clone, Copy)]
+pub struct SiteSignals {
+    /// Site availability: the spec's monitored baseline, 0.0 while a
+    /// scenario outage is active.
+    pub availability: f64,
+    /// VM quota headroom.
+    pub free_vms: u32,
+    /// vCPU quota headroom.
+    pub free_vcpus: u32,
+    /// Instances the SLA still allows (None = no SLA ceiling).
+    pub sla_headroom: Option<u32>,
+    /// Worker $/hour at this site right now (list × price factor).
+    pub effective_price: f64,
+    /// $/hour currently burning in the site's ledger (open entries).
+    pub cost_rate: f64,
+    /// One-way WAN latency from the front-end site, seconds.
+    pub latency_to_fe: f64,
+    /// Spot-preemption hazard, events per VM-hour.
+    pub hazard_per_hour: f64,
+    /// LRMS pending-queue depth at decision time (cluster-wide).
+    pub queue_depth: u32,
+    /// A scenario outage is in effect.
+    pub outage: bool,
+}
+
+/// The elasticity broker.
+pub struct ElasticityBroker {
+    table: SiteTable,
+    policy: Box<dyn PlacementPolicy>,
+    /// Scenario state: outage flag per site.
+    outage: Vec<bool>,
+    /// Decision log for reports: (t, chosen site).
+    pub decisions: Vec<(SimTime, usize)>,
+}
+
+impl ElasticityBroker {
+    /// Build the broker for a fixed site vector. Site names are
+    /// interned in vector order (duplicated names share an id — and
+    /// therefore an SLA — exactly like the legacy by-name lookup).
+    /// `worker_cpus`/`worker_mem_gb` come from the cluster template and
+    /// determine each site's worker price point.
+    pub fn new(kind: PolicyKind, sites: &[CloudSite], slas: &[Sla],
+               worker_cpus: u32, worker_mem_gb: f64) -> ElasticityBroker {
+        let names = SiteNames::new();
+        let site_ids: Vec<SiteId> =
+            sites.iter().map(|s| names.intern(&s.spec.name)).collect();
+        let resolved = ResolvedSlas::resolve(slas, &names);
+        let mut order: Vec<usize> = (0..sites.len()).collect();
+        order.sort_by(|&a, &b| sites[a].spec.name.cmp(&sites[b].spec.name));
+        let mut name_ranks = vec![0u32; sites.len()];
+        for (r, &i) in order.iter().enumerate() {
+            name_ranks[i] = r as u32;
+        }
+        let worker_prices = sites
+            .iter()
+            .map(|s| {
+                // The same selector the cluster provisions through, so
+                // the ranked price is the billed price.
+                s.spec
+                    .worker_instance_type(worker_cpus, worker_mem_gb)
+                    .price
+                    .usd_per_hour
+            })
+            .collect();
+        let hazards = sites
+            .iter()
+            .map(|s| s.spec.failure.preempt_rate_per_hour)
+            .collect();
+        ElasticityBroker {
+            table: SiteTable {
+                names,
+                slas: resolved,
+                site_ids,
+                name_ranks,
+                worker_prices,
+                hazards,
+                latency_from_fe: vec![0.0; sites.len()],
+            },
+            policy: kind.build(),
+            outage: vec![false; sites.len()],
+            decisions: Vec::new(),
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn table(&self) -> &SiteTable {
+        &self.table
+    }
+
+    /// The front end has been placed: resolve WAN latencies from its
+    /// site through the underlay (the overlay's site-router hop rides
+    /// exactly this link).
+    pub fn set_front_end(&mut self, fe_site: usize, net: &Network,
+                         sites: &[CloudSite]) {
+        for i in 0..sites.len() {
+            self.table.latency_from_fe[i] = if i == fe_site {
+                0.0
+            } else {
+                net.link(sites[fe_site].net_id, sites[i].net_id)
+                    .map(|l| l.latency_s)
+                    .unwrap_or(f64::INFINITY)
+            };
+        }
+    }
+
+    /// Scenario hook: mark a whole-site outage on/off.
+    pub fn set_outage(&mut self, site: usize, dark: bool) {
+        if let Some(o) = self.outage.get_mut(site) {
+            *o = dark;
+        }
+    }
+
+    pub fn outage_active(&self, site: usize) -> bool {
+        self.outage.get(site).copied().unwrap_or(false)
+    }
+
+    /// Sample the live signals for one site. The effective price reads
+    /// the site's own launch-time price factor, so scenario price
+    /// spikes reach the policies through the same state that bills the
+    /// ledger — there is no second copy to keep in sync.
+    pub fn signals(&self, site: usize, sites: &[CloudSite],
+                   used_per_site: &[u32], queue_depth: u32) -> SiteSignals {
+        let s = &sites[site];
+        let outage = self.outage[site];
+        SiteSignals {
+            availability: if outage { 0.0 } else { s.spec.availability },
+            free_vms: s.spec.quota.max_vms.saturating_sub(s.used_vms())
+                as u32,
+            free_vcpus: s.spec.quota.max_vcpus
+                .saturating_sub(s.used_vcpus()),
+            sla_headroom: self.table.slas.headroom(
+                self.table.site_ids[site], used_per_site[site]),
+            effective_price: self.table.worker_prices[site]
+                * s.price_factor(),
+            cost_rate: s.ledger.open_rate_usd_per_hour(),
+            latency_to_fe: self.table.latency_from_fe[site],
+            hazard_per_hour: self.table.hazards[site],
+            queue_depth,
+            outage,
+        }
+    }
+
+    /// The shared eligibility gate — byte-for-byte the legacy
+    /// `select_site` checks (availability floor, zero-instance SLA,
+    /// VM/vCPU quota, SLA headroom), plus scenario outages through the
+    /// forced-zero availability.
+    fn eligible(&self, site: usize, sites: &[CloudSite], cpus: u32,
+                sig: &SiteSignals) -> bool {
+        if sig.availability < MIN_AVAILABILITY {
+            return false;
+        }
+        if let Some((_, max)) =
+            self.table.slas.get(self.table.site_ids[site])
+        {
+            if max == Some(0) {
+                return false;
+            }
+        }
+        let s = &sites[site];
+        if s.used_vms() + 1 > s.spec.quota.max_vms {
+            return false;
+        }
+        if s.used_vcpus() + cpus > s.spec.quota.max_vcpus {
+            return false;
+        }
+        if sig.sla_headroom == Some(0) {
+            return false;
+        }
+        true
+    }
+
+    fn pick(&self, policy: &dyn PlacementPolicy, sites: &[CloudSite],
+            used_per_site: &[u32], cpus: u32, queue_depth: u32)
+        -> Option<usize> {
+        let mut best: Option<(Score, usize)> = None;
+        for i in 0..sites.len() {
+            let sig = self.signals(i, sites, used_per_site, queue_depth);
+            if !self.eligible(i, sites, cpus, &sig) {
+                continue;
+            }
+            let score = policy.score(i, &self.table, &sig);
+            let replace = match &best {
+                Some((b, _)) => score.better_than(b),
+                None => true,
+            };
+            if replace {
+                best = Some((score, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Pick the site for one new worker under the configured policy.
+    pub fn select(&mut self, sites: &[CloudSite], used_per_site: &[u32],
+                  cpus: u32, queue_depth: u32, t: SimTime)
+        -> Option<usize> {
+        let pick = self.pick(self.policy.as_ref(), sites, used_per_site,
+                             cpus, queue_depth);
+        if let Some(i) = pick {
+            self.decisions.push((t, i));
+        }
+        pick
+    }
+
+    /// Pick the front-end site. Always SLA-ranked: the front end is the
+    /// cluster's fixed point, whatever the elastic-worker policy.
+    pub fn select_front_end(&mut self, sites: &[CloudSite],
+                            used_per_site: &[u32], cpus: u32, t: SimTime)
+        -> Option<usize> {
+        let pick = self.pick(&SlaRank, sites, used_per_site, cpus, 0);
+        if let Some(i) = pick {
+            self.decisions.push((t, i));
+        }
+        pick
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloudsim::{SiteSpec, VmRequest};
+    use crate::netsim::{LinkSpec, NetId};
+    use crate::orchestrator::select_site;
+
+    fn t(s: f64) -> SimTime {
+        SimTime(s)
+    }
+
+    fn site(spec: SiteSpec, i: usize) -> CloudSite {
+        CloudSite::new(spec, i as u8, NetId(i), 40 + i as u64)
+    }
+
+    fn paper_slas() -> Vec<Sla> {
+        vec![
+            Sla { site_name: "CESNET-MCC".into(), priority: 0,
+                  max_instances: None },
+            Sla { site_name: "AWS".into(), priority: 1,
+                  max_instances: None },
+        ]
+    }
+
+    fn paper_sites() -> Vec<CloudSite> {
+        vec![
+            site(SiteSpec::cesnet_metacentrum(), 0),
+            site(SiteSpec::aws_us_east_2(), 1),
+        ]
+    }
+
+    fn broker(kind: PolicyKind, sites: &[CloudSite], slas: &[Sla])
+        -> ElasticityBroker {
+        ElasticityBroker::new(kind, sites, slas, 2, 4.0)
+    }
+
+    #[test]
+    fn sla_rank_matches_legacy_select_site() {
+        let mut sites = paper_sites();
+        let slas = paper_slas();
+        let mut b = broker(PolicyKind::SlaRank, &sites, &slas);
+        let used = vec![0, 0];
+        assert_eq!(b.select(&sites, &used, 2, 0, t(0.0)),
+                   select_site(&sites, &slas, &used, 2));
+        // Fill CESNET to its 3-VM quota: both must burst to AWS.
+        for i in 0..3 {
+            sites[0]
+                .request_vm(&VmRequest {
+                    name: format!("n{i}"),
+                    instance_type: "standard.medium".into(),
+                    network: None,
+                    public_ip: false,
+                }, t(0.0))
+                .unwrap();
+        }
+        assert_eq!(b.select(&sites, &used, 2, 0, t(1.0)), Some(1));
+        assert_eq!(select_site(&sites, &slas, &used, 2), Some(1));
+        assert_eq!(b.decisions.len(), 2);
+    }
+
+    #[test]
+    fn cost_min_prefers_free_site_over_sla_home() {
+        // SLA prefers AWS, but CESNET is grant-funded ($0).
+        let sites = paper_sites();
+        let slas = vec![
+            Sla { site_name: "AWS".into(), priority: 0,
+                  max_instances: None },
+            Sla { site_name: "CESNET-MCC".into(), priority: 1,
+                  max_instances: None },
+        ];
+        let used = vec![0, 0];
+        let mut sla = broker(PolicyKind::SlaRank, &sites, &slas);
+        let mut cost = broker(PolicyKind::CostMin, &sites, &slas);
+        assert_eq!(sla.select(&sites, &used, 2, 0, t(0.0)), Some(1));
+        assert_eq!(cost.select(&sites, &used, 2, 0, t(0.0)), Some(0));
+    }
+
+    #[test]
+    fn spot_aware_avoids_hazard_cost_min_chases_discount() {
+        let sites = vec![
+            site(SiteSpec::aws_us_east_2(), 0),
+            site(SiteSpec::aws_spot_us_east_2(), 1),
+        ];
+        let slas: Vec<Sla> = Vec::new();
+        let used = vec![0, 0];
+        let mut spot = broker(PolicyKind::SpotAware, &sites, &slas);
+        let mut cost = broker(PolicyKind::CostMin, &sites, &slas);
+        // Spot market is cheaper but hazardous.
+        assert_eq!(cost.select(&sites, &used, 2, 0, t(0.0)), Some(1));
+        assert_eq!(spot.select(&sites, &used, 2, 0, t(0.0)), Some(0));
+        // Under heavy queue pressure the premium stops being worth it:
+        // SpotAware flips to the cheap spot market.
+        let deep = crate::broker::policy::SPOT_PRESSURE_QUEUE + 1;
+        assert_eq!(spot.select(&sites, &used, 2, deep, t(1.0)), Some(1));
+    }
+
+    #[test]
+    fn latency_min_follows_the_wan() {
+        let mut net = Network::new();
+        let sites = vec![
+            site(SiteSpec::cesnet_metacentrum(), 0),
+            site(SiteSpec::aws_us_east_2(), 1),
+            site(SiteSpec::opennebula("ON-EU"), 2),
+        ];
+        for s in &sites {
+            net.add_location(&s.spec.name);
+        }
+        net.set_link(NetId(0), NetId(1), LinkSpec::transatlantic());
+        net.set_link(NetId(0), NetId(2), LinkSpec::wan());
+        let slas: Vec<Sla> = Vec::new();
+        let used = vec![0, 0, 0];
+        let mut b = broker(PolicyKind::LatencyMin, &sites, &slas);
+        b.set_front_end(0, &net, &sites);
+        assert_eq!(b.table().latency_from_fe(0), 0.0);
+        assert!(b.table().latency_from_fe(1)
+                > b.table().latency_from_fe(2));
+        // FE site itself first; once full, the nearer WAN site wins
+        // over the transatlantic one.
+        assert_eq!(b.select(&sites, &used, 2, 0, t(0.0)), Some(0));
+        let mut filled = sites;
+        for i in 0..3 {
+            filled[0]
+                .request_vm(&VmRequest {
+                    name: format!("n{i}"),
+                    instance_type: "standard.medium".into(),
+                    network: None,
+                    public_ip: false,
+                }, t(0.0))
+                .unwrap();
+        }
+        assert_eq!(b.select(&filled, &used, 2, 0, t(1.0)), Some(2));
+    }
+
+    #[test]
+    fn outage_excludes_site_until_lifted() {
+        let sites = paper_sites();
+        let slas = paper_slas();
+        let used = vec![0, 0];
+        let mut b = broker(PolicyKind::SlaRank, &sites, &slas);
+        b.set_outage(0, true);
+        assert!(b.outage_active(0));
+        assert_eq!(b.select(&sites, &used, 2, 0, t(0.0)), Some(1));
+        b.set_outage(1, true);
+        assert_eq!(b.select(&sites, &used, 2, 0, t(1.0)), None);
+        b.set_outage(0, false);
+        assert_eq!(b.select(&sites, &used, 2, 0, t(2.0)), Some(0));
+    }
+
+    #[test]
+    fn price_spike_redirects_cost_min() {
+        let mut sites = vec![
+            site(SiteSpec::aws_us_east_2(), 0),
+            site(SiteSpec::aws_spot_us_east_2(), 1),
+        ];
+        let slas: Vec<Sla> = Vec::new();
+        let used = vec![0, 0];
+        let mut b = broker(PolicyKind::CostMin, &sites, &slas);
+        assert_eq!(b.select(&sites, &used, 2, 0, t(0.0)), Some(1));
+        // Spot price spikes 10x above on-demand: cost-min flips. The
+        // broker reads the factor straight off the site.
+        sites[1].set_price_factor(10.0);
+        assert_eq!(b.select(&sites, &used, 2, 0, t(1.0)), Some(0));
+        sites[1].set_price_factor(1.0);
+        assert_eq!(b.select(&sites, &used, 2, 0, t(2.0)), Some(1));
+    }
+
+    #[test]
+    fn duplicate_site_names_share_the_sla() {
+        // Two capacity pools exposed under one provider name: both
+        // resolve to the same SLA, like the legacy by-name lookup.
+        let mut sites = vec![
+            site(SiteSpec::cesnet_metacentrum(), 0),
+            site(SiteSpec::cesnet_metacentrum(), 1),
+        ];
+        let slas = vec![Sla { site_name: "CESNET-MCC".into(), priority: 0,
+                              max_instances: Some(4) }];
+        let mut b = broker(PolicyKind::SlaRank, &sites, &slas);
+        // Equal rank: the first pool wins deterministically.
+        assert_eq!(b.select(&sites, &[0, 0], 2, 0, t(0.0)), Some(0));
+        // SLA headroom applies per used-count entry.
+        assert_eq!(b.select(&sites, &[4, 0], 2, 0, t(1.0)), Some(1));
+        // Fill pool 0's quota: pool 1 takes over.
+        for i in 0..3 {
+            sites[0]
+                .request_vm(&VmRequest {
+                    name: format!("n{i}"),
+                    instance_type: "standard.medium".into(),
+                    network: None,
+                    public_ip: false,
+                }, t(0.0))
+                .unwrap();
+        }
+        assert_eq!(b.select(&sites, &[0, 0], 2, 0, t(2.0)), Some(1));
+    }
+
+    #[test]
+    fn signals_expose_quota_cost_and_hazard() {
+        let mut sites = vec![site(SiteSpec::aws_spot_us_east_2(), 0)];
+        let b = broker(PolicyKind::SlaRank, &sites, &[]);
+        sites[0]
+            .request_vm(&VmRequest {
+                name: "wn".into(),
+                instance_type: "t2.medium".into(),
+                network: None,
+                public_ip: false,
+            }, t(0.0))
+            .unwrap();
+        let sig = b.signals(0, &sites, &[1], 7);
+        assert_eq!(sig.free_vms, 19);
+        assert_eq!(sig.free_vcpus, 38);
+        assert!(sig.cost_rate > 0.0);
+        assert!(sig.hazard_per_hour > 0.0);
+        assert_eq!(sig.queue_depth, 7);
+        assert_eq!(sig.sla_headroom, None);
+        assert!(!sig.outage);
+        // Spot t2.medium at 30% of 0.0464.
+        assert!((sig.effective_price - 0.0464 * 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sla_headroom_gates_selection() {
+        let sites = paper_sites();
+        let slas = vec![
+            Sla { site_name: "CESNET-MCC".into(), priority: 0,
+                  max_instances: Some(2) },
+            Sla { site_name: "AWS".into(), priority: 1,
+                  max_instances: None },
+        ];
+        let mut b = broker(PolicyKind::SlaRank, &sites, &slas);
+        assert_eq!(b.select(&sites, &[1, 0], 2, 0, t(0.0)), Some(0));
+        // CESNET's SLA is exhausted: burst even though quota has room.
+        assert_eq!(b.select(&sites, &[2, 0], 2, 0, t(1.0)), Some(1));
+        assert_eq!(select_site(&sites, &slas, &[2, 0], 2), Some(1));
+    }
+}

@@ -1,0 +1,233 @@
+//! Pluggable site-placement policies.
+//!
+//! A [`PlacementPolicy`] scores every *eligible* site (eligibility —
+//! availability, SLA, quota, headroom — is owned by the broker and
+//! identical for all policies, mirroring the legacy
+//! `orchestrator::select_site` checks); the broker picks the lowest
+//! score. Scores are pure functions of the immutable [`SiteTable`] and
+//! the per-decision [`SiteSignals`], so every policy is deterministic
+//! and unit-testable without a simulation.
+
+use super::{SiteSignals, SiteTable};
+
+/// Deterministic, totally-ordered score; lower wins. Ties fall through
+/// `primary` → `secondary` → `tiebreak` (the site-name rank, so the
+/// final order never depends on map iteration or float noise).
+#[derive(Debug, Clone, Copy)]
+pub struct Score {
+    pub primary: f64,
+    pub secondary: f64,
+    pub tiebreak: u32,
+}
+
+impl Score {
+    /// Strictly better (lower) than `other` under the total order.
+    pub fn better_than(&self, other: &Score) -> bool {
+        match self.primary.total_cmp(&other.primary) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => {
+                match self.secondary.total_cmp(&other.secondary) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => {
+                        self.tiebreak < other.tiebreak
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// SLA priority folded into one f64: priority for SLA sites,
+/// +∞ for opportunistic (no-SLA) sites — which therefore rank after
+/// every SLA site, exactly like the legacy `(is_none, priority)` key.
+fn sla_key(table: &SiteTable, site: usize) -> f64 {
+    match table.sla_priority(site) {
+        Some(p) => p as f64,
+        None => f64::INFINITY,
+    }
+}
+
+/// Availability descending, quantized at 1e-6 exactly like the legacy
+/// ranking key (`(1e6 - avail * 1e6) as i64`).
+fn avail_key(sig: &SiteSignals) -> f64 {
+    (1e6 - sig.availability * 1e6) as i64 as f64
+}
+
+/// A site-selection policy: scores one eligible site.
+pub trait PlacementPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Score an eligible site; lower wins. Must be deterministic.
+    fn score(&self, site: usize, table: &SiteTable, sig: &SiteSignals)
+        -> Score;
+}
+
+/// Baseline: the paper's SLA-priority ranking — decision-identical to
+/// the legacy `orchestrator::select_site` (proven by the property test
+/// in `tests/broker_policies.rs`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlaRank;
+
+impl PlacementPolicy for SlaRank {
+    fn name(&self) -> &'static str {
+        "sla-rank"
+    }
+
+    fn score(&self, site: usize, table: &SiteTable, sig: &SiteSignals)
+        -> Score {
+        Score {
+            primary: sla_key(table, site),
+            secondary: avail_key(sig),
+            tiebreak: table.name_rank(site),
+        }
+    }
+}
+
+/// Cheapest-first: effective worker $/hour (list price × live scenario
+/// price factor; grant-funded research sites are $0), SLA rank breaking
+/// price ties.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CostMin;
+
+impl PlacementPolicy for CostMin {
+    fn name(&self) -> &'static str {
+        "cost-min"
+    }
+
+    fn score(&self, site: usize, table: &SiteTable, sig: &SiteSignals)
+        -> Score {
+        Score {
+            primary: sig.effective_price,
+            secondary: sla_key(table, site),
+            tiebreak: table.name_rank(site),
+        }
+    }
+}
+
+/// Closest-first: one-way WAN latency from the front-end's site through
+/// the vRouter overlay (0 for the front-end site itself), SLA rank
+/// breaking ties. Until the front-end is placed all latencies are 0 and
+/// this degrades to `SlaRank` ordering via the secondary key.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyMin;
+
+impl PlacementPolicy for LatencyMin {
+    fn name(&self) -> &'static str {
+        "latency-min"
+    }
+
+    fn score(&self, site: usize, table: &SiteTable, sig: &SiteSignals)
+        -> Score {
+        Score {
+            primary: sig.latency_to_fe,
+            secondary: sla_key(table, site),
+            tiebreak: table.name_rank(site),
+        }
+    }
+}
+
+/// Pending-queue depth above which [`SpotAware`] stops paying the
+/// stability premium and chases price like [`CostMin`] — a deep
+/// backlog makes preemption risk worth taking, since requeued jobs
+/// would have waited anyway.
+pub const SPOT_PRESSURE_QUEUE: u32 = 256;
+
+/// Preemption-averse: sites are weighted by their spot-reclaim hazard
+/// (events per VM-hour) first, effective price second — a hazardous
+/// spot market is only chosen when nothing stabler has capacity.
+/// Under heavy queue pressure (> [`SPOT_PRESSURE_QUEUE`] pending
+/// jobs) the weights flip: cheap spot capacity first, hazard as the
+/// tie-break.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpotAware;
+
+impl PlacementPolicy for SpotAware {
+    fn name(&self) -> &'static str {
+        "spot-aware"
+    }
+
+    fn score(&self, site: usize, table: &SiteTable, sig: &SiteSignals)
+        -> Score {
+        let (primary, secondary) = if sig.queue_depth > SPOT_PRESSURE_QUEUE
+        {
+            (sig.effective_price, sig.hazard_per_hour)
+        } else {
+            (sig.hazard_per_hour, sig.effective_price)
+        };
+        Score {
+            primary,
+            secondary,
+            tiebreak: table.name_rank(site),
+        }
+    }
+}
+
+/// Config-friendly policy selector (what [`crate::cluster::RunConfig`]
+/// carries; `build` yields the boxed trait object the broker drives).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    SlaRank,
+    CostMin,
+    LatencyMin,
+    SpotAware,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 4] = [
+        PolicyKind::SlaRank,
+        PolicyKind::CostMin,
+        PolicyKind::LatencyMin,
+        PolicyKind::SpotAware,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PolicyKind::SlaRank => "sla-rank",
+            PolicyKind::CostMin => "cost-min",
+            PolicyKind::LatencyMin => "latency-min",
+            PolicyKind::SpotAware => "spot-aware",
+        }
+    }
+
+    pub fn build(self) -> Box<dyn PlacementPolicy> {
+        match self {
+            PolicyKind::SlaRank => Box::new(SlaRank),
+            PolicyKind::CostMin => Box::new(CostMin),
+            PolicyKind::LatencyMin => Box::new(LatencyMin),
+            PolicyKind::SpotAware => Box::new(SpotAware),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_order_is_total_and_lexicographic() {
+        let a = Score { primary: 0.0, secondary: 5.0, tiebreak: 9 };
+        let b = Score { primary: 1.0, secondary: 0.0, tiebreak: 0 };
+        assert!(a.better_than(&b));
+        assert!(!b.better_than(&a));
+        let c = Score { primary: 0.0, secondary: 4.0, tiebreak: 9 };
+        assert!(c.better_than(&a));
+        let d = Score { primary: 0.0, secondary: 5.0, tiebreak: 8 };
+        assert!(d.better_than(&a));
+        // Exact ties are not "better" — the broker keeps the first.
+        assert!(!a.better_than(&a));
+        // Infinities order after every finite score.
+        let inf = Score { primary: f64::INFINITY, secondary: 0.0,
+                          tiebreak: 0 };
+        assert!(a.better_than(&inf));
+        assert!(!inf.better_than(&a));
+    }
+
+    #[test]
+    fn policy_kinds_build_matching_labels() {
+        for kind in PolicyKind::ALL {
+            assert_eq!(kind.build().name(), kind.label());
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Scripted elasticity scenarios: spot-preemption waves, whole-site
+//! outages and price spikes.
+//!
+//! A [`ScenarioPlan`] is a deterministic list of timed events, with
+//! times **relative to the workload t0** (the moment the initial
+//! cluster is up) — the same convention as
+//! [`crate::cloudsim::InjectionPlan`]. The cluster world maps each
+//! entry onto site-sharded simulation events at `begin_workload`, so
+//! scenario traffic replays under the sharded engine's deterministic
+//! `(time, shard, seq)` merge and two runs of the same plan produce
+//! byte-identical recorder output.
+
+use crate::sim::SimTime;
+
+/// One scripted scenario event.
+#[derive(Debug, Clone)]
+pub enum ScenarioEvent {
+    /// Spot capacity reclaim at `site`: up to `count` running workers
+    /// are preempted (0 = every running worker there). Their jobs
+    /// requeue and the run report tracks how many recover.
+    SpotWave { site: usize, at: SimTime, count: u32 },
+    /// Whole-site outage: every non-front-end VM at `site` dies and the
+    /// broker refuses the site until the window closes.
+    SiteOutage { site: usize, at: SimTime, duration_secs: f64 },
+    /// Price spike: VMs launched at `site` during the window bill at
+    /// `factor` × list price (already-running VMs keep their rate).
+    PriceSpike { site: usize, at: SimTime, duration_secs: f64,
+                 factor: f64 },
+}
+
+impl ScenarioEvent {
+    /// Site the event targets.
+    pub fn site(&self) -> usize {
+        match self {
+            ScenarioEvent::SpotWave { site, .. }
+            | ScenarioEvent::SiteOutage { site, .. }
+            | ScenarioEvent::PriceSpike { site, .. } => *site,
+        }
+    }
+}
+
+/// A deterministic scenario: timed events relative to workload t0.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioPlan {
+    pub events: Vec<ScenarioEvent>,
+}
+
+impl ScenarioPlan {
+    pub fn new() -> ScenarioPlan {
+        ScenarioPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Builder: preempt up to `count` workers (0 = all) at `site`,
+    /// `at_secs` after workload t0.
+    pub fn spot_wave(mut self, site: usize, at_secs: f64, count: u32)
+        -> ScenarioPlan {
+        self.events.push(ScenarioEvent::SpotWave {
+            site,
+            at: SimTime(at_secs),
+            count,
+        });
+        self
+    }
+
+    /// Builder: take `site` dark for `duration_secs`, starting
+    /// `at_secs` after workload t0.
+    pub fn site_outage(mut self, site: usize, at_secs: f64,
+                       duration_secs: f64) -> ScenarioPlan {
+        self.events.push(ScenarioEvent::SiteOutage {
+            site,
+            at: SimTime(at_secs),
+            duration_secs,
+        });
+        self
+    }
+
+    /// Builder: multiply `site`'s launch prices by `factor` for
+    /// `duration_secs`, starting `at_secs` after workload t0.
+    pub fn price_spike(mut self, site: usize, at_secs: f64,
+                       duration_secs: f64, factor: f64) -> ScenarioPlan {
+        self.events.push(ScenarioEvent::PriceSpike {
+            site,
+            at: SimTime(at_secs),
+            duration_secs,
+            factor,
+        });
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_accumulate_in_order() {
+        let plan = ScenarioPlan::new()
+            .spot_wave(1, 600.0, 0)
+            .site_outage(2, 1200.0, 900.0)
+            .price_spike(1, 300.0, 600.0, 4.0);
+        assert_eq!(plan.events.len(), 3);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.events[0].site(), 1);
+        assert_eq!(plan.events[1].site(), 2);
+        match &plan.events[2] {
+            ScenarioEvent::PriceSpike { site, at, duration_secs, factor }
+            => {
+                assert_eq!(*site, 1);
+                assert_eq!(at.0, 300.0);
+                assert_eq!(*duration_secs, 600.0);
+                assert_eq!(*factor, 4.0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(ScenarioPlan::new().is_empty());
+    }
+}

@@ -17,6 +17,10 @@ pub struct FailureModel {
     pub transient_down_prob: f64,
     /// Duration of a transient flap, seconds.
     pub transient_down_secs: f64,
+    /// Poisson rate of the provider *preempting* a running VM (spot /
+    /// opportunistic capacity reclaim), events per VM-hour. This is the
+    /// hazard signal the broker's `SpotAware` policy weighs a site by.
+    pub preempt_rate_per_hour: f64,
 }
 
 impl FailureModel {
@@ -27,6 +31,7 @@ impl FailureModel {
             crash_rate_per_hour: 0.0,
             transient_down_prob: 0.0,
             transient_down_secs: 0.0,
+            preempt_rate_per_hour: 0.0,
         }
     }
 
@@ -37,6 +42,7 @@ impl FailureModel {
             crash_rate_per_hour: 0.002,
             transient_down_prob: 0.002,
             transient_down_secs: 240.0,
+            preempt_rate_per_hour: 0.0,
         }
     }
 
@@ -50,6 +56,15 @@ impl FailureModel {
             return None;
         }
         Some(rng.exponential(3600.0 / self.crash_rate_per_hour))
+    }
+
+    /// Sample time-to-preemption for a VM entering Running (None =
+    /// never — the site has no spot reclaim).
+    pub fn sample_preempt_in(&self, rng: &mut Prng) -> Option<f64> {
+        if self.preempt_rate_per_hour <= 0.0 {
+            return None;
+        }
+        Some(rng.exponential(3600.0 / self.preempt_rate_per_hour))
     }
 }
 
@@ -105,6 +120,20 @@ mod tests {
         let mut rng = Prng::new(2);
         let fails = (0..10_000).filter(|_| m.boot_fails(&mut rng)).count();
         assert!((fails as f64 / 10_000.0 - 0.2).abs() < 0.02, "{fails}");
+    }
+
+    #[test]
+    fn preempt_sampling_mean_and_default_off() {
+        let off = FailureModel::none();
+        let mut rng = Prng::new(7);
+        assert!(off.sample_preempt_in(&mut rng).is_none());
+        let m = FailureModel { preempt_rate_per_hour: 2.0,
+                               ..FailureModel::none() };
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| m.sample_preempt_in(&mut rng).unwrap())
+            .sum::<f64>() / n as f64;
+        assert!((mean - 1800.0).abs() < 60.0, "mean={mean}");
     }
 
     #[test]

@@ -157,6 +157,33 @@ impl SiteSpec {
         }
     }
 
+    /// The instance type a cluster provisions for one worker with the
+    /// given requirements: the smallest satisfying catalog entry,
+    /// falling back to the first entry. Shared by the deployment path
+    /// and the broker's price table so the price a policy ranks by is
+    /// the price the ledger bills.
+    pub fn worker_instance_type(&self, cpus: u32, mem_gb: f64)
+        -> &InstanceType {
+        self.instance_types
+            .iter()
+            .filter(|t| t.vcpus >= cpus && t.mem_gb >= mem_gb)
+            .min_by(|a, b| a.vcpus.cmp(&b.vcpus))
+            .unwrap_or(&self.instance_types[0])
+    }
+
+    /// AWS us-east-2 spot capacity: the same catalog at a ~70% discount,
+    /// but carrying a preemption hazard — the signal the broker's
+    /// `SpotAware` policy weighs a site by.
+    pub fn aws_spot_us_east_2() -> SiteSpec {
+        let mut s = SiteSpec::aws_us_east_2();
+        s.name = "AWS-spot".into();
+        for t in &mut s.instance_types {
+            t.price.usd_per_hour *= 0.3;
+        }
+        s.failure.preempt_rate_per_hour = 0.05;
+        s
+    }
+
     /// A generic OpenNebula research site (for multi-site benches).
     pub fn opennebula(name: &str) -> SiteSpec {
         SiteSpec {
@@ -211,6 +238,9 @@ pub struct CloudSite {
     vms: HashMap<VmId, Vm>,
     next_vm: u64,
     pub ledger: Ledger,
+    /// Multiplier applied to list prices of entries opened from now on
+    /// (scenario-driven price spikes; 1.0 = list price).
+    price_factor: f64,
     rng: Prng,
 }
 
@@ -226,8 +256,21 @@ impl CloudSite {
             vms: HashMap::new(),
             next_vm: 0,
             ledger: Ledger::default(),
+            price_factor: 1.0,
             rng: Prng::new(seed ^ 0xC10D),
         }
+    }
+
+    /// Current price multiplier (1.0 = list price).
+    pub fn price_factor(&self) -> f64 {
+        self.price_factor
+    }
+
+    /// Set the multiplier applied to VMs launched from now on. Entries
+    /// already open keep the rate they were opened at, mirroring how
+    /// on-demand price changes bind at launch time.
+    pub fn set_price_factor(&mut self, factor: f64) {
+        self.price_factor = factor.max(0.0);
     }
 
     pub fn name(&self) -> &str {
@@ -309,7 +352,11 @@ impl CloudSite {
         }
 
         vm.transition(VmState::Booting, t)?;
-        self.ledger.open(&req.name, &req.instance_type, &itype.price, t);
+        let price = Price {
+            usd_per_hour: itype.price.usd_per_hour * self.price_factor,
+            granularity: itype.price.granularity,
+        };
+        self.ledger.open(&req.name, &req.instance_type, &price, t);
 
         let boot_secs = self.rng.lognormal(
             self.spec.op_latency.vm_boot_median,
@@ -512,6 +559,35 @@ mod tests {
         s.crash_vm(ticket.vm, t(200.0)).unwrap();
         assert_eq!(s.used_vms(), 0);
         assert_eq!(s.vm(ticket.vm).unwrap().state, VmState::Failed);
+    }
+
+    #[test]
+    fn price_spike_applies_to_new_launches_only() {
+        let mut s = aws();
+        let a = s.request_vm(&req("before", None, false), t(0.0)).unwrap();
+        s.complete_boot(a.vm, false, t(10.0)).unwrap();
+        s.set_price_factor(3.0);
+        let b = s.request_vm(&req("during", None, false), t(0.0)).unwrap();
+        s.complete_boot(b.vm, false, t(10.0)).unwrap();
+        // Open rate = list + 3x list.
+        let rate = s.ledger.open_rate_usd_per_hour();
+        assert!((rate - 0.0464 * 4.0).abs() < 1e-9, "{rate}");
+        s.set_price_factor(1.0);
+        let c = s.request_vm(&req("after", None, false), t(0.0)).unwrap();
+        s.complete_boot(c.vm, false, t(10.0)).unwrap();
+        assert!((s.ledger.open_rate_usd_per_hour() - 0.0464 * 5.0).abs()
+                < 1e-9);
+    }
+
+    #[test]
+    fn spot_spec_is_discounted_and_hazardous() {
+        let od = SiteSpec::aws_us_east_2();
+        let spot = SiteSpec::aws_spot_us_east_2();
+        assert_eq!(spot.name, "AWS-spot");
+        assert!(spot.instance_types[0].price.usd_per_hour
+                < od.instance_types[0].price.usd_per_hour);
+        assert!(spot.failure.preempt_rate_per_hour > 0.0);
+        assert_eq!(od.failure.preempt_rate_per_hour, 0.0);
     }
 
     #[test]

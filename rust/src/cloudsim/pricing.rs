@@ -4,6 +4,8 @@
 //! because it is "billed by the second"); OpenStack research clouds are
 //! modelled as zero-cost (grant-funded) but still tracked in VM-hours.
 
+use std::collections::HashMap;
+
 use crate::sim::SimTime;
 
 /// Billing granularity.
@@ -67,14 +69,25 @@ impl LedgerEntry {
 }
 
 /// Site-level cost ledger.
+///
+/// Open entries are indexed by VM name, so closing one — the hot
+/// operation during a spot-preemption wave, where one event closes many
+/// VMs — is O(1) instead of a reverse scan over the whole history.
+/// `entries` stays public read-only history; mutate it only through
+/// [`Ledger::open`]/[`Ledger::close`] or the index desynchronizes.
 #[derive(Debug, Default)]
 pub struct Ledger {
     pub entries: Vec<LedgerEntry>,
+    /// vm name → indexes of open entries (stack; most recent last).
+    open_by_name: HashMap<String, Vec<usize>>,
+    /// Sum of `usd_per_hour` across open entries (live burn rate).
+    open_rate: f64,
 }
 
 impl Ledger {
     pub fn open(&mut self, vm_name: &str, instance_type: &str, price: &Price,
                 start: SimTime) {
+        let idx = self.entries.len();
         self.entries.push(LedgerEntry {
             vm_name: vm_name.to_string(),
             instance_type: instance_type.to_string(),
@@ -83,18 +96,37 @@ impl Ledger {
             usd_per_hour: price.usd_per_hour,
             granularity: price.granularity,
         });
+        self.open_by_name
+            .entry(vm_name.to_string())
+            .or_default()
+            .push(idx);
+        self.open_rate += price.usd_per_hour;
     }
 
-    /// Close the open entry for `vm_name` (no-op if none).
+    /// Close the most recent open entry for `vm_name` (no-op if none).
+    /// O(1): the open-entry index replaces the old reverse scan.
     pub fn close(&mut self, vm_name: &str, end: SimTime) {
-        if let Some(e) = self
-            .entries
-            .iter_mut()
-            .rev()
-            .find(|e| e.vm_name == vm_name && e.end.is_none())
-        {
-            e.end = Some(end);
+        let Some(stack) = self.open_by_name.get_mut(vm_name) else {
+            return;
+        };
+        let Some(idx) = stack.pop() else { return };
+        if stack.is_empty() {
+            self.open_by_name.remove(vm_name);
         }
+        let e = &mut self.entries[idx];
+        e.end = Some(end);
+        self.open_rate -= e.usd_per_hour;
+    }
+
+    /// $/hour currently burning across all open entries — the live
+    /// cost-rate signal the elasticity broker consumes per site.
+    pub fn open_rate_usd_per_hour(&self) -> f64 {
+        self.open_rate
+    }
+
+    /// Number of currently open (still billing) entries.
+    pub fn open_count(&self) -> usize {
+        self.open_by_name.values().map(|v| v.len()).sum()
     }
 
     pub fn total_cost(&self, now: SimTime) -> f64 {
@@ -158,6 +190,38 @@ mod tests {
         let mut l = Ledger::default();
         l.close("ghost", SimTime(1.0));
         assert_eq!(l.entries.len(), 0);
+        assert_eq!(l.open_count(), 0);
+        assert_eq!(l.open_rate_usd_per_hour(), 0.0);
+    }
+
+    #[test]
+    fn open_index_survives_name_reuse_and_tracks_rate() {
+        // vnode names are reused across incarnations; each close must
+        // hit the most recent open entry, exactly like the old reverse
+        // scan did.
+        let mut l = Ledger::default();
+        let p1 = Price { usd_per_hour: 1.0,
+                         granularity: Granularity::PerSecond };
+        let p2 = Price { usd_per_hour: 2.0,
+                         granularity: Granularity::PerSecond };
+        l.open("vnode-5", "t2.medium", &p1, SimTime(0.0));
+        l.close("vnode-5", SimTime(100.0));
+        l.open("vnode-5", "t2.medium", &p2, SimTime(200.0));
+        assert_eq!(l.open_count(), 1);
+        assert!((l.open_rate_usd_per_hour() - 2.0).abs() < 1e-12);
+        // Double-open (pathological but allowed): close pops LIFO.
+        l.open("vnode-5", "t2.medium", &p1, SimTime(300.0));
+        assert_eq!(l.open_count(), 2);
+        l.close("vnode-5", SimTime(400.0));
+        assert_eq!(l.entries[2].end, Some(SimTime(400.0)));
+        assert_eq!(l.entries[1].end, None);
+        l.close("vnode-5", SimTime(500.0));
+        assert_eq!(l.entries[1].end, Some(SimTime(500.0)));
+        assert_eq!(l.open_count(), 0);
+        assert!(l.open_rate_usd_per_hour().abs() < 1e-12);
+        // Everything closed: a further close is a no-op.
+        l.close("vnode-5", SimTime(600.0));
+        assert_eq!(l.entries.len(), 3);
     }
 
     #[test]

@@ -33,10 +33,12 @@
 //! every event — while fully site-local worlds (see `benches/scale.rs`)
 //! replay their shards in parallel.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use anyhow::Context;
 
+use crate::broker::{ElasticityBroker, PolicyKind, ScenarioEvent,
+                    ScenarioPlan};
 use crate::clues::{Action, Clues, CluesConfig, PowerState};
 use crate::cloudsim::{CloudSite, SiteSpec, VmId};
 use crate::ids::{NodeId, NodeNames};
@@ -44,8 +46,7 @@ use crate::im::{Im, NodeRole};
 use crate::lrms::{HtCondor, JobId, Lrms, NodeHealth, NodeStat, Slurm};
 use crate::metrics::{DisplayState, Recorder};
 use crate::netsim::{LinkSpec, Network};
-use crate::orchestrator::{select_site, Sla, UpdateId, UpdateOp,
-                          WorkflowEngine};
+use crate::orchestrator::{Sla, UpdateId, UpdateOp, WorkflowEngine};
 use crate::runtime::ModelRuntime;
 use crate::sim::{run_merged_until, MergedWorld, ShardEvent, ShardKey,
                  ShardedQueue, SimTime};
@@ -63,6 +64,13 @@ pub struct RunConfig {
     pub seed: u64,
     /// Scripted monitor glitches (the vnode-5 transient).
     pub injections: crate::cloudsim::InjectionPlan,
+    /// Which broker policy owns the grow-to-which-site decision
+    /// (`SlaRank` reproduces the legacy `select_site` exactly).
+    pub policy: PolicyKind,
+    /// Scripted elasticity scenario — spot-preemption waves, site
+    /// outages, price spikes — with times relative to the workload t0
+    /// (the same convention as `injections`).
+    pub scenario: ScenarioPlan,
     /// Paper default true; false = parallel-provisioning ablation.
     pub serialized_orchestrator: bool,
     /// Run real PJRT inference for one out of every N jobs
@@ -90,6 +98,8 @@ impl RunConfig {
             workload: Workload::paper(scale),
             seed,
             injections: crate::cloudsim::InjectionPlan::default(),
+            policy: PolicyKind::SlaRank,
+            scenario: ScenarioPlan::default(),
             serialized_orchestrator: true,
             inference_every: 0,
             horizon: SimTime::from_hms(48, 0, 0),
@@ -123,6 +133,18 @@ pub enum Ev {
     TerminationDone { site: usize, node: NodeId, update: Option<UpdateId> },
     /// A running VM hard-crashed (stochastic failure injection).
     VmCrashed { site: usize, vm: VmId, node: NodeId },
+    /// The provider reclaimed a running VM's spot capacity (stochastic
+    /// per-site hazard; the scripted twin is [`Ev::SpotWave`]).
+    VmPreempted { site: usize, vm: VmId, node: NodeId },
+    /// Scenario: spot-preemption wave — up to `count` (0 = all) running
+    /// workers at `site` are reclaimed at once.
+    SpotWave { site: usize, count: u32 },
+    /// Scenario: whole-site outage begins / ends.
+    OutageStart { site: usize },
+    OutageEnd { site: usize },
+    /// Scenario: price spike begins / ends at a site.
+    PriceSpikeStart { site: usize, factor: f64 },
+    PriceSpikeEnd { site: usize },
 }
 
 impl ShardEvent for Ev {
@@ -136,7 +158,13 @@ impl ShardEvent for Ev {
             | Ev::CtxDone { site, .. }
             | Ev::JobDone { site, .. }
             | Ev::TerminationDone { site, .. }
-            | Ev::VmCrashed { site, .. } => ShardKey::Site(*site as u32),
+            | Ev::VmCrashed { site, .. }
+            | Ev::VmPreempted { site, .. }
+            | Ev::SpotWave { site, .. }
+            | Ev::OutageStart { site }
+            | Ev::OutageEnd { site }
+            | Ev::PriceSpikeStart { site, .. }
+            | Ev::PriceSpikeEnd { site } => ShardKey::Site(*site as u32),
         }
     }
 }
@@ -185,6 +213,14 @@ pub struct RunReport {
     pub events: u64,
     /// Wall-clock seconds the simulation took.
     pub wall_secs: f64,
+    /// Broker policy that governed worker placement.
+    pub policy: &'static str,
+    /// VMs lost to preemption waves / site outages / spot reclaims.
+    pub preempted_vms: u32,
+    /// Jobs requeued by those losses.
+    pub preempted_jobs: u32,
+    /// Of those, jobs that went on to complete (recovery).
+    pub preempt_recovered: u32,
 }
 
 impl RunReport {
@@ -213,6 +249,8 @@ pub struct HybridCluster {
     pub clues: Clues,
     pub engine: WorkflowEngine,
     pub im: Im,
+    /// Multi-site elasticity broker (owns grow-to-which-site).
+    pub broker: ElasticityBroker,
     pub recorder: Recorder,
     /// Cluster-wide name⇄id interner (shared with lrms/clues/recorder).
     names: NodeNames,
@@ -244,6 +282,15 @@ pub struct HybridCluster {
     clues_ticking: bool,
     /// When the initial cluster came up (workload + injection t=0).
     workload_t0: SimTime,
+    /// Jobs requeued by a preemption/outage, awaiting completion.
+    preempt_pending: HashSet<JobId>,
+    preempted_vms: u32,
+    preempted_jobs: u32,
+    preempt_recovered: u32,
+    /// Active price-spike windows per site: the latest spike's factor
+    /// rules while any window is open; list price returns only when
+    /// the count drains to zero (overlapping spikes compose).
+    price_spikes_active: Vec<u32>,
     /// Scratch buffer for per-tick node snapshots (reused; a 10k-node
     /// tick allocates no per-tick `Vec`).
     stats_scratch: Vec<NodeStat>,
@@ -303,6 +350,13 @@ impl HybridCluster {
         let overlay = Overlay::new(cfg.template.vpn_cipher);
         let engine = WorkflowEngine::new(cfg.serialized_orchestrator);
         let im = Im::new(cfg.seed);
+        let broker = ElasticityBroker::new(
+            cfg.policy,
+            &sites,
+            &cfg.slas,
+            cfg.template.worker.num_cpus,
+            cfg.template.worker.mem_gb,
+        );
         let runtime = if cfg.inference_every > 0 {
             Some(ModelRuntime::load(crate::runtime::artifacts_dir(), 1)
                 .context("loading PJRT runtime (run `make artifacts`)")?)
@@ -310,6 +364,7 @@ impl HybridCluster {
             None
         };
         let rng = Prng::new(cfg.seed ^ 0xC1);
+        let n_sites = sites.len();
         Ok(HybridCluster {
             sites,
             net,
@@ -318,6 +373,7 @@ impl HybridCluster {
             clues,
             engine,
             im,
+            broker,
             recorder: Recorder::with_names(names.clone()),
             names,
             nodes: HashMap::new(),
@@ -339,6 +395,11 @@ impl HybridCluster {
             inference_wall_secs: 0.0,
             clues_ticking: false,
             workload_t0: SimTime::ZERO,
+            preempt_pending: HashSet::new(),
+            preempted_vms: 0,
+            preempted_jobs: 0,
+            preempt_recovered: 0,
+            price_spikes_active: vec![0; n_sites],
             stats_scratch: Vec::new(),
             cfg,
         })
@@ -389,6 +450,10 @@ impl HybridCluster {
             inference_wall_secs: self.inference_wall_secs,
             events: q.dispatched(),
             wall_secs: wall0.elapsed().as_secs_f64(),
+            policy: self.broker.policy_name(),
+            preempted_vms: self.preempted_vms,
+            preempted_jobs: self.preempted_jobs,
+            preempt_recovered: self.preempt_recovered,
         })
     }
 
@@ -397,18 +462,14 @@ impl HybridCluster {
     // ---------------------------------------------------------------
 
     fn worker_instance_type(&self, site: usize) -> String {
-        // Pick the smallest catalog entry satisfying the template.
+        // The shared SiteSpec selector — also what prices the broker's
+        // CostMin/SpotAware table, so ranking and billing agree.
         let want = &self.cfg.template.worker;
         self.sites[site]
             .spec
-            .instance_types
-            .iter()
-            .filter(|t| t.vcpus >= want.num_cpus && t.mem_gb >= want.mem_gb)
-            .min_by(|a, b| a.vcpus.cmp(&b.vcpus))
-            .map(|t| t.name.clone())
-            .unwrap_or_else(|| {
-                self.sites[site].spec.instance_types[0].name.clone()
-            })
+            .worker_instance_type(want.num_cpus, want.mem_gb)
+            .name
+            .clone()
     }
 
     fn vrouter_instance_type(&self, site: usize) -> String {
@@ -526,8 +587,9 @@ impl HybridCluster {
                         t: SimTime) -> bool {
         let used = self.used_workers_per_site();
         let cpus = self.cfg.template.worker.num_cpus;
+        let queue_depth = self.lrms.pending() as u32;
         let site = if self.cfg.template.hybrid {
-            select_site(&self.sites, &self.cfg.slas, &used, cpus)
+            self.broker.select(&self.sites, &used, cpus, queue_depth, t)
         } else {
             // Non-hybrid: only the FE's site may host workers.
             let s = self.fe_site;
@@ -589,10 +651,129 @@ impl HybridCluster {
             let at = self.cfg.workload.blocks[i].at;
             q.schedule_at(SimTime(t.0 + at.0), Ev::SubmitBlock(i));
         }
+        // Scenario events ride the same relative timeline; each lands
+        // on its target site's shard.
+        for ev in &self.cfg.scenario.events {
+            if ev.site() >= self.sites.len() {
+                continue; // plan written for a bigger world: ignore
+            }
+            match *ev {
+                ScenarioEvent::SpotWave { site, at, count } => {
+                    q.schedule_at(SimTime(t.0 + at.0),
+                                  Ev::SpotWave { site, count });
+                }
+                ScenarioEvent::SiteOutage { site, at, duration_secs } => {
+                    q.schedule_at(SimTime(t.0 + at.0),
+                                  Ev::OutageStart { site });
+                    q.schedule_at(SimTime(t.0 + at.0 + duration_secs),
+                                  Ev::OutageEnd { site });
+                }
+                ScenarioEvent::PriceSpike { site, at, duration_secs,
+                                            factor } => {
+                    q.schedule_at(SimTime(t.0 + at.0),
+                                  Ev::PriceSpikeStart { site, factor });
+                    q.schedule_at(SimTime(t.0 + at.0 + duration_secs),
+                                  Ev::PriceSpikeEnd { site });
+                }
+            }
+        }
         if !self.clues_ticking {
             self.clues_ticking = true;
             q.schedule_in(self.clues.cfg.poll_interval_s, Ev::CluesTick);
         }
+    }
+
+    /// A node was lost mid-lifecycle (crash or preemption): complete
+    /// whatever update is still in flight for it, or the serialized
+    /// engine stalls forever. Handles both CLUES-originated workers
+    /// (tracked in `update_for_node`) and *initial* workers, which are
+    /// provisioned inside the InitialDeploy update with no per-node
+    /// entry — a pre-join loss of one must still drain
+    /// `initial_pending`.
+    fn settle_update_on_loss(&mut self, q: &mut ShardedQueue<Ev>,
+                             node: NodeId, rt: &NodeRt, t: SimTime) {
+        if let Some(id) = self.update_for_node.remove(&node) {
+            let _ = self.engine.complete(id, t);
+            q.schedule_in(0.0, Ev::OrchestratorPump);
+        } else if rt.role == NodeRole::WorkerNode
+            && rt.joined_at.is_none()
+            && self.initial_pending > 0
+        {
+            self.initial_pending -= 1;
+            if self.initial_pending == 0 {
+                if let Some(id) = self.deploy_update.take() {
+                    let _ = self.engine.complete(id, t);
+                    self.begin_workload(q, t);
+                    q.schedule_in(0.0, Ev::OrchestratorPump);
+                }
+            }
+        }
+    }
+
+    /// Forcibly reclaim one node's VM (spot preemption / site outage).
+    /// Running jobs requeue and are tracked for the recovery metric; a
+    /// node already being decommissioned is left to finish normally,
+    /// and the front end is never reclaimed (it is the cluster's fixed
+    /// point — LRMS controller + vRouter CP). Returns true if the node
+    /// was actually reclaimed.
+    fn preempt_node(&mut self, q: &mut ShardedQueue<Ev>, node: NodeId,
+                    t: SimTime, reason: &str) -> bool {
+        let Some(rt) = self.nodes.get(&node).copied() else {
+            return false;
+        };
+        if rt.role == NodeRole::FrontEnd {
+            return false; // the FE survives preemption scenarios
+        }
+        if rt.site >= self.sites.len() {
+            return false; // placeholder: no site chosen, no VM yet
+        }
+        if self.sites[rt.site].crash_vm(rt.vm, t).is_err() {
+            // Already Terminating/Terminated: the in-flight
+            // decommission owns the ledger close and update.
+            return false;
+        }
+        let name = self.names.name(node);
+        let mut requeued = self
+            .lrms
+            .set_node_health(&name, NodeHealth::Down, t)
+            .unwrap_or_default();
+        if let Ok(more) = self.lrms.deregister_node(&name, t) {
+            requeued.extend(more);
+        }
+        for j in requeued {
+            if self.preempt_pending.insert(j) {
+                self.preempted_jobs += 1;
+            }
+        }
+        self.settle_update_on_loss(q, node, &rt, t);
+        self.nodes.remove(&node);
+        self.clues.set_state_id(node, PowerState::Failed);
+        self.clues.forget_id(node);
+        self.recorder.node_state_id(t, node, DisplayState::Failed);
+        self.recorder.milestone(t, format!("{name} {reason}"));
+        self.preempted_vms += 1;
+        true
+    }
+
+    /// Nodes at `site` eligible for forcible reclaim, in deterministic
+    /// (NodeId) order. The front end survives: it is the cluster's
+    /// fixed point (LRMS controller + vRouter CP).
+    fn reclaim_victims(&self, site: usize, workers_only: bool)
+        -> Vec<NodeId> {
+        let mut victims: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|(_, rt)| {
+                rt.site == site
+                    && rt.role != NodeRole::FrontEnd
+                    && (!workers_only
+                        || (rt.role == NodeRole::WorkerNode
+                            && rt.joined_at.is_some()))
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        victims.sort();
+        victims
     }
 
     /// Injection times are relative to the workload t0.
@@ -783,11 +964,15 @@ impl HybridCluster {
                 UpdateOp::InitialDeploy => {
                     self.deploy_update = Some(update.id);
                     let used = self.used_workers_per_site();
-                    let fe_site = select_site(
-                        &self.sites, &self.cfg.slas, &used,
-                        self.cfg.template.front_end.num_cpus)
+                    // FE placement is always SLA-ranked (the fixed
+                    // point); the configured policy governs workers.
+                    let fe_site = self.broker.select_front_end(
+                        &self.sites, &used,
+                        self.cfg.template.front_end.num_cpus, t)
                         .unwrap_or(0);
                     self.fe_site = fe_site;
+                    self.broker.set_front_end(fe_site, &self.net,
+                                              &self.sites);
                     if let Err(e) = self.provision(q, fe_site, FE_NAME,
                                                    NodeRole::FrontEnd, t) {
                         self.recorder.milestone(t, format!(
@@ -816,11 +1001,10 @@ impl MergedWorld for HybridCluster {
 
             Ev::SubmitBlock(i) => {
                 let jobs = self.cfg.workload.blocks[i].jobs;
-                for j in 0..jobs {
-                    self.lrms.submit(
-                        &format!("audio-b{i}-{j}"), 1, t);
-                    self.jobs_submitted += 1;
-                }
+                // One bulk core call per block (a 100k-job block is a
+                // single submit), not one trait dispatch per job.
+                self.lrms.submit_batch(jobs, 1, t);
+                self.jobs_submitted += jobs;
                 self.recorder.milestone(t, format!(
                     "block {} submitted: {jobs} jobs", i + 1));
                 self.pump_jobs(q, t);
@@ -855,6 +1039,18 @@ impl MergedWorld for HybridCluster {
                     .sample_crash_in(&mut self.rng)
                 {
                     q.schedule_in(secs, Ev::VmCrashed {
+                        site,
+                        vm,
+                        node,
+                    });
+                }
+                // Spot capacity carries its own reclaim hazard.
+                if let Some(secs) = self.sites[site]
+                    .spec
+                    .failure
+                    .sample_preempt_in(&mut self.rng)
+                {
+                    q.schedule_in(secs, Ev::VmPreempted {
                         site,
                         vm,
                         node,
@@ -992,6 +1188,9 @@ impl MergedWorld for HybridCluster {
                 }
                 let _ = self.lrms.on_job_finished(job, true, t);
                 self.jobs_completed += 1;
+                if self.preempt_pending.remove(&job) {
+                    self.preempt_recovered += 1;
+                }
                 if let Some(stat) = self.lrms.node_stat(node) {
                     if stat.used_slots == 0 {
                         self.recorder.node_state_id(t, node,
@@ -1060,10 +1259,10 @@ impl MergedWorld for HybridCluster {
 
             Ev::VmCrashed { site, vm, node } => {
                 // Stale if the node was already replaced or terminated.
-                let live = self.nodes.get(&node)
-                    .map(|rt| rt.vm == vm && rt.site == site)
-                    .unwrap_or(false);
-                if !live {
+                let Some(rt) = self.nodes.get(&node).copied() else {
+                    return;
+                };
+                if rt.vm != vm || rt.site != site {
                     return;
                 }
                 let _ = self.sites[site].crash_vm(vm, t);
@@ -1072,6 +1271,11 @@ impl MergedWorld for HybridCluster {
                 let _ = self.lrms.set_node_health(&name, NodeHealth::Down,
                                                   t);
                 let _ = self.lrms.deregister_node(&name, t);
+                // A crash before the node joined leaves its update in
+                // flight (per-node AddWorker or the InitialDeploy it
+                // was part of); complete it so the serialized engine
+                // cannot stall.
+                self.settle_update_on_loss(q, node, &rt, t);
                 self.nodes.remove(&node);
                 self.clues.set_state_id(node, PowerState::Failed);
                 self.clues.forget_id(node);
@@ -1080,6 +1284,87 @@ impl MergedWorld for HybridCluster {
                     "{name} crashed (provider-side failure)"));
                 // CLUES replaces it on its next tick if jobs remain.
                 self.pump_jobs(q, t);
+            }
+
+            Ev::VmPreempted { site, vm, node } => {
+                // Stale if the node was already replaced or terminated.
+                let live = self.nodes.get(&node)
+                    .map(|rt| rt.vm == vm && rt.site == site)
+                    .unwrap_or(false);
+                if !live {
+                    return;
+                }
+                self.preempt_node(q, node, t,
+                                  "preempted (spot capacity reclaimed)");
+                self.pump_jobs(q, t);
+            }
+
+            Ev::SpotWave { site, count } => {
+                let victims = self.reclaim_victims(site, true);
+                let n = if count == 0 {
+                    victims.len()
+                } else {
+                    (count as usize).min(victims.len())
+                };
+                self.recorder.milestone(t, format!(
+                    "spot-preemption wave at {}: reclaiming {n} of {} \
+                     workers", self.sites[site].spec.name, victims.len()));
+                for id in victims.into_iter().take(n) {
+                    self.preempt_node(q, id, t,
+                                      "preempted (spot wave)");
+                }
+                // Immediate CLUES pass so replacements start promptly
+                // (the broker decides where they land).
+                let actions = self.clues_tick(t);
+                self.apply_clues_actions(q, actions, t);
+                self.pump_jobs(q, t);
+            }
+
+            Ev::OutageStart { site } => {
+                self.broker.set_outage(site, true);
+                self.recorder.milestone(t, format!(
+                    "site outage: {} dark", self.sites[site].spec.name));
+                for id in self.reclaim_victims(site, false) {
+                    self.preempt_node(q, id, t, "lost to site outage");
+                }
+                let actions = self.clues_tick(t);
+                self.apply_clues_actions(q, actions, t);
+                self.pump_jobs(q, t);
+            }
+
+            Ev::OutageEnd { site } => {
+                self.broker.set_outage(site, false);
+                self.recorder.milestone(t, format!(
+                    "site outage over: {} eligible again",
+                    self.sites[site].spec.name));
+            }
+
+            Ev::PriceSpikeStart { site, factor } => {
+                // The broker reads the site's factor through its
+                // signals, so billing and policy stay in sync by
+                // construction. Overlapping windows compose: the
+                // latest spike's factor rules until every open window
+                // has ended.
+                self.price_spikes_active[site] += 1;
+                self.sites[site].set_price_factor(factor);
+                self.recorder.milestone(t, format!(
+                    "price spike at {}: {factor}x list for new launches",
+                    self.sites[site].spec.name));
+            }
+
+            Ev::PriceSpikeEnd { site } => {
+                self.price_spikes_active[site] =
+                    self.price_spikes_active[site].saturating_sub(1);
+                if self.price_spikes_active[site] == 0 {
+                    self.sites[site].set_price_factor(1.0);
+                    self.recorder.milestone(t, format!(
+                        "price spike over at {}",
+                        self.sites[site].spec.name));
+                } else {
+                    self.recorder.milestone(t, format!(
+                        "price spike window closed at {} (another spike \
+                         still active)", self.sites[site].spec.name));
+                }
             }
 
             Ev::TerminationDone { site: _, node, update } => {
@@ -1245,6 +1530,72 @@ mod tests {
                 "{:?}", report.per_vm);
         // Still finishes everything, just slower.
         assert!(report.jobs_completed > 0);
+    }
+
+    #[test]
+    fn spot_wave_preempts_and_recovers_jobs() {
+        let mut cfg = small_cfg(0.1);
+        // Reclaim every running CESNET worker mid-block-1: vnode-1 and
+        // vnode-2 joined before t0 and are busy until ~t0+800.
+        cfg.scenario = ScenarioPlan::new().spot_wave(0, 600.0, 0);
+        let total = cfg.workload.total_jobs();
+        let report = HybridCluster::new(cfg).unwrap().run().unwrap();
+        assert_eq!(report.jobs_completed, total);
+        assert!(report.preempted_vms >= 1,
+                "wave reclaimed nothing");
+        // Every preempted job was requeued and finished elsewhere.
+        assert_eq!(report.preempt_recovered, report.preempted_jobs);
+        assert_eq!(report.policy, "sla-rank");
+        assert!(report.recorder.milestones.iter().any(
+            |(_, m)| m.contains("spot-preemption wave")));
+    }
+
+    #[test]
+    fn site_outage_bursts_to_surviving_site() {
+        let mut cfg = small_cfg(0.1);
+        // CESNET goes dark shortly after the run starts; the broker
+        // must route every replacement worker to AWS until it is back.
+        cfg.scenario = ScenarioPlan::new().site_outage(0, 600.0, 3600.0);
+        let total = cfg.workload.total_jobs();
+        let report = HybridCluster::new(cfg).unwrap().run().unwrap();
+        assert_eq!(report.jobs_completed, total);
+        assert!(report.preempted_vms >= 1, "outage killed nothing");
+        assert!(report.per_vm.iter().any(
+            |r| r.site == "AWS" && r.name.starts_with("vnode-")),
+            "no AWS replacements: {:?}", report.per_vm);
+        assert!(report.recorder.milestones.iter().any(
+            |(_, m)| m.contains("site outage")));
+    }
+
+    #[test]
+    fn price_spike_inflates_burst_cost() {
+        let base = HybridCluster::new(small_cfg(0.05)).unwrap()
+            .run().unwrap();
+        let mut cfg = small_cfg(0.05);
+        // 10x AWS prices for the whole burst window.
+        cfg.scenario = ScenarioPlan::new()
+            .price_spike(1, 0.0, 1_000_000.0, 10.0);
+        let spiked = HybridCluster::new(cfg).unwrap().run().unwrap();
+        assert_eq!(base.jobs_completed, spiked.jobs_completed);
+        // SlaRank ignores price, so the placements match — only the
+        // bill changes. (The first burst VM can open before the spike
+        // event lands, so the factor is well below the full 10x.)
+        assert!(spiked.total_cost_usd > base.total_cost_usd * 1.5,
+                "spiked {} !>> base {}", spiked.total_cost_usd,
+                base.total_cost_usd);
+    }
+
+    #[test]
+    fn alternative_policies_complete_the_workload() {
+        for kind in [PolicyKind::CostMin, PolicyKind::LatencyMin,
+                     PolicyKind::SpotAware] {
+            let mut cfg = small_cfg(0.05);
+            cfg.policy = kind;
+            let total = cfg.workload.total_jobs();
+            let report = HybridCluster::new(cfg).unwrap().run().unwrap();
+            assert_eq!(report.jobs_completed, total, "{kind:?}");
+            assert_eq!(report.policy, kind.label());
+        }
     }
 
     #[test]

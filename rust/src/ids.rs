@@ -103,6 +103,98 @@ impl NodeNames {
     }
 }
 
+/// Dense interned cloud-site identifier (mirrors [`NodeId`]). Site
+/// names (`"CESNET-MCC"`, `"AWS"`, …) are interned once when a world is
+/// built; every per-decision structure in the elasticity broker —
+/// health snapshots, placement signals, cost rates — is keyed by this
+/// `u32`, so the grow/shrink site-selection hot path performs no string
+/// hashing or cloning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SiteId(pub u32);
+
+impl SiteId {
+    /// The id as a table index.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for SiteId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "site#{}", self.0)
+    }
+}
+
+/// Shared site-name⇄id interner (one per cluster world; mirrors
+/// [`NodeNames`]). Ids are issued densely in interning order, so a
+/// world that interns its sites in construction order can use
+/// `SiteId(i)` and the site vector index interchangeably.
+#[derive(Debug, Clone, Default)]
+pub struct SiteNames(Arc<RwLock<Inner>>);
+
+impl SiteNames {
+    pub fn new() -> SiteNames {
+        SiteNames::default()
+    }
+
+    /// Id for `name`, interning it on first sight.
+    pub fn intern(&self, name: &str) -> SiteId {
+        let mut g = self.0.write().expect("interner poisoned");
+        if let Some(&i) = g.index.get(name) {
+            return SiteId(i);
+        }
+        let i = g.names.len() as u32;
+        g.names.push(name.to_string());
+        g.index.insert(name.to_string(), i);
+        SiteId(i)
+    }
+
+    /// Id for `name` if it was interned before (no insertion).
+    pub fn get(&self, name: &str) -> Option<SiteId> {
+        self.0
+            .read()
+            .expect("interner poisoned")
+            .index
+            .get(name)
+            .map(|&i| SiteId(i))
+    }
+
+    /// Owned name for `id` (edge paths only: reports, logs).
+    pub fn name(&self, id: SiteId) -> String {
+        self.0
+            .read()
+            .expect("interner poisoned")
+            .names
+            .get(id.index())
+            .cloned()
+            .unwrap_or_else(|| format!("site#{}", id.0))
+    }
+
+    /// Run `f` over the borrowed name without cloning. `f` must not
+    /// touch this interner (the lock is held while it runs).
+    pub fn with_name<R>(&self, id: SiteId, f: impl FnOnce(&str) -> R) -> R {
+        let g = self.0.read().expect("interner poisoned");
+        f(g.names.get(id.index()).map(|s| s.as_str()).unwrap_or("?"))
+    }
+
+    /// Lexicographic order of two interned names under one lock — the
+    /// deterministic final tie-break of site ranking, without cloning.
+    pub fn cmp_names(&self, a: SiteId, b: SiteId) -> std::cmp::Ordering {
+        let g = self.0.read().expect("interner poisoned");
+        let na = g.names.get(a.index()).map(|s| s.as_str()).unwrap_or("");
+        let nb = g.names.get(b.index()).map(|s| s.as_str()).unwrap_or("");
+        na.cmp(nb)
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.read().expect("interner poisoned").names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +226,24 @@ mod tests {
     fn unknown_id_renders_placeholder() {
         let n = NodeNames::new();
         assert_eq!(n.name(NodeId(9)), "node#9");
+    }
+
+    #[test]
+    fn site_interning_mirrors_node_interning() {
+        let s = SiteNames::new();
+        let a = s.intern("CESNET-MCC");
+        let b = s.intern("AWS");
+        assert_eq!(a, SiteId(0));
+        assert_eq!(b, SiteId(1));
+        assert_eq!(s.intern("CESNET-MCC"), a);
+        assert_eq!(s.get("AWS"), Some(b));
+        assert_eq!(s.get("nope"), None);
+        assert_eq!(s.name(a), "CESNET-MCC");
+        assert_eq!(s.name(SiteId(9)), "site#9");
+        assert_eq!(s.cmp_names(b, a), std::cmp::Ordering::Less); // AWS < CES
+        assert_eq!(s.cmp_names(a, a), std::cmp::Ordering::Equal);
+        assert!(s.with_name(b, |n| n == "AWS"));
+        assert_eq!(s.len(), 2);
     }
 
     #[test]

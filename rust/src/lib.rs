@@ -21,6 +21,9 @@
 //!   overlay networks, redundant central points, standalone nodes, CA.
 //! * [`lrms`] — SLURM-like batch system behind a plugin trait.
 //! * [`clues`] — the CLUES elasticity engine.
+//! * [`broker`] — the multi-site elasticity broker: pluggable placement
+//!   policies over live per-site signals, plus scripted scenarios
+//!   (spot-preemption waves, site outages, price spikes).
 //! * [`workload`] — the paper's §4 audio-classification workload.
 //! * [`runtime`] — PJRT executor for the AOT-compiled L2/L1 model.
 //! * [`cluster`] — the public façade tying everything together.
@@ -42,6 +45,7 @@ pub mod cloudsim;
 pub mod tosca;
 pub mod lrms;
 pub mod clues;
+pub mod broker;
 pub mod vrouter;
 pub mod im;
 pub mod orchestrator;

@@ -55,6 +55,10 @@ impl Lrms for HtCondor {
         self.core.submit(name, slots, t)
     }
 
+    fn submit_batch(&mut self, count: u32, slots: u32, t: SimTime) {
+        self.core.submit_batch(count, slots, t)
+    }
+
     fn cancel(&mut self, id: JobId, t: SimTime) -> anyhow::Result<()> {
         self.core.cancel(id, t)
     }

@@ -329,6 +329,32 @@ impl BatchCore {
         id
     }
 
+    /// Bulk submit: `count` identical anonymous jobs in one call.
+    /// Job-for-job equivalent to `count` × [`BatchCore::submit`] with
+    /// empty names — ids are issued densely in submission order — but
+    /// both tables are grown once up front.
+    pub fn submit_batch(&mut self, count: u32, slots: u32, t: SimTime) {
+        let slots = slots.max(1);
+        let first = self.jobs.len() as u64;
+        self.jobs.reserve(count as usize);
+        self.queue.reserve(count as usize);
+        for k in 0..count as u64 {
+            let id = JobId(first + k);
+            self.jobs.push(Job {
+                id,
+                name: String::new(),
+                slots,
+                state: JobState::Pending,
+                submitted_at: t,
+                started_at: None,
+                finished_at: None,
+                node: None,
+                requeues: 0,
+            });
+            self.queue.push_back(id);
+        }
+    }
+
     pub fn cancel(&mut self, id: JobId, t: SimTime) -> anyhow::Result<()> {
         let job = self
             .jobs
@@ -809,6 +835,39 @@ mod tests {
         c.node_stats_into(&mut buf);
         assert_eq!(buf[0].id, c.node_id("a").unwrap());
         assert_eq!(buf.len(), 3);
+    }
+
+    #[test]
+    fn submit_batch_equivalent_to_repeated_submit() {
+        for placement in [Placement::PackFirstFit,
+                          Placement::SpreadMostFree] {
+            let mut a = BatchCore::new(placement);
+            let mut b = BatchCore::new(placement);
+            for c in [&mut a, &mut b] {
+                c.register_node("n1", 2, t(0.0));
+                c.register_node("n2", 3, t(0.0));
+            }
+            a.submit_batch(7, 1, t(1.0));
+            a.submit_batch(3, 2, t(2.0));
+            for _ in 0..7 {
+                b.submit("", 1, t(1.0));
+            }
+            for _ in 0..3 {
+                b.submit("", 2, t(2.0));
+            }
+            assert_eq!(a.pending(), b.pending());
+            // Same ids, same placements, same queue order.
+            let pa = a.schedule(t(3.0));
+            let pb = b.schedule(t(3.0));
+            assert_eq!(pa, pb, "{placement:?}");
+            a.on_job_finished(pa[0].0, true, t(4.0)).unwrap();
+            b.on_job_finished(pb[0].0, true, t(4.0)).unwrap();
+            assert_eq!(a.schedule(t(5.0)), b.schedule(t(5.0)));
+            // Zero-slot batch jobs are clamped like plain submits.
+            a.submit_batch(1, 0, t(6.0));
+            let id = b.submit("", 0, t(6.0));
+            assert_eq!(a.job(id).unwrap().slots, b.job(id).unwrap().slots);
+        }
     }
 
     #[test]

@@ -137,6 +137,17 @@ pub trait Lrms {
     /// invisible to the free-slot placement indexes).
     fn submit(&mut self, name: &str, slots: u32, t: SimTime) -> JobId;
 
+    /// Submit `count` identical anonymous `slots`-wide jobs in one
+    /// call — the workload-block fast path. The default delegates to
+    /// [`Lrms::submit`] per job; the batch-core plugins override it
+    /// with one bulk `BatchCore` call, so a 100k-job block is a single
+    /// core call instead of 100k trait dispatches.
+    fn submit_batch(&mut self, count: u32, slots: u32, t: SimTime) {
+        for _ in 0..count {
+            self.submit("", slots, t);
+        }
+    }
+
     /// Cancel a pending job.
     fn cancel(&mut self, id: JobId, t: SimTime) -> anyhow::Result<()>;
 

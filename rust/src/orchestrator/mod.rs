@@ -21,7 +21,7 @@ pub mod monitor;
 pub mod sla;
 
 pub use monitor::{Monitor, Outage, Probe, ProbeTarget};
-pub use sla::{rank_sites, sla_headroom, SiteHealth, Sla};
+pub use sla::{rank_sites, sla_headroom, ResolvedSlas, SiteHealth, Sla};
 
 use std::collections::{HashMap, VecDeque};
 
@@ -245,22 +245,30 @@ impl WorkflowEngine {
 
 /// Site selection: pick the best ranked site with headroom for one more
 /// `cpus`-sized VM. `slas` order encodes the user's preferences.
+///
+/// This is the *legacy reference* selector: it re-interns the site list
+/// and re-resolves the SLAs on every call. The elasticity hot path goes
+/// through [`crate::broker::ElasticityBroker`], which resolves all of
+/// this once at construction; `tests/broker_policies.rs` proves the
+/// broker's `SlaRank` policy decision-identical to this function.
 pub fn select_site(
     sites: &[CloudSite],
     slas: &[Sla],
     used_per_site: &[u32],
     cpus: u32,
 ) -> Option<usize> {
+    let names = crate::ids::SiteNames::new();
     let health: Vec<SiteHealth> = sites
         .iter()
         .map(|s| SiteHealth {
-            site_name: s.spec.name.clone(),
+            site: names.intern(&s.spec.name),
             availability: s.spec.availability,
             free_vms: Some(
                 (s.spec.quota.max_vms - s.used_vms()) as u32),
         })
         .collect();
-    for i in rank_sites(slas, &health) {
+    let resolved = ResolvedSlas::resolve(slas, &names);
+    for i in rank_sites(&resolved, &names, &health) {
         let site = &sites[i];
         // Site-level quota headroom.
         if site.used_vms() + 1 > site.spec.quota.max_vms {

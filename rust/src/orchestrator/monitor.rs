@@ -11,6 +11,7 @@
 
 use std::collections::HashMap;
 
+use crate::ids::{SiteId, SiteNames};
 use crate::sim::SimTime;
 use crate::util::prng::Prng;
 
@@ -49,12 +50,17 @@ pub struct ProbeTarget {
     pub rtt_median_s: f64,
 }
 
-/// Sliding-window availability monitor.
+/// Sliding-window availability monitor. Probe history is keyed by the
+/// interned [`SiteId`] (targets are interned once at construction), so
+/// a probe round clones no target list and no site-name `String`s.
 pub struct Monitor {
+    names: SiteNames,
     targets: Vec<ProbeTarget>,
+    /// Interned id of each target, parallel to `targets`.
+    target_ids: Vec<SiteId>,
     outages: Vec<Outage>,
     window: usize,
-    history: HashMap<String, Vec<Probe>>,
+    history: HashMap<SiteId, Vec<Probe>>,
     rng: Prng,
 }
 
@@ -62,13 +68,29 @@ impl Monitor {
     /// `window`: number of most recent probes that define availability.
     pub fn new(targets: Vec<ProbeTarget>, window: usize, seed: u64)
         -> Monitor {
+        Monitor::with_names(targets, window, seed, SiteNames::new())
+    }
+
+    /// Share a cluster-wide site interner so ids line up with the
+    /// broker and the ranking functions.
+    pub fn with_names(targets: Vec<ProbeTarget>, window: usize, seed: u64,
+                      names: SiteNames) -> Monitor {
+        let target_ids =
+            targets.iter().map(|tg| names.intern(&tg.site)).collect();
         Monitor {
+            names,
             targets,
+            target_ids,
             outages: Vec::new(),
             window: window.max(1),
             history: HashMap::new(),
             rng: Prng::new(seed ^ 0x40A1),
         }
+    }
+
+    /// Interner handle (snapshot ids resolve through it).
+    pub fn names(&self) -> SiteNames {
+        self.names.clone()
     }
 
     pub fn add_outage(&mut self, outage: Outage) {
@@ -77,15 +99,20 @@ impl Monitor {
 
     /// Run one probe round at time `t`.
     pub fn probe_all(&mut self, t: SimTime) {
-        for target in self.targets.clone() {
-            let in_outage = self
-                .outages
-                .iter()
-                .any(|o| o.site == target.site && o.active_at(t));
-            let up = !in_outage && self.rng.chance(target.base_up_prob);
-            let rtt = self.rng.lognormal(target.rtt_median_s, 0.4);
+        for ti in 0..self.targets.len() {
+            let id = self.target_ids[ti];
+            let (in_outage, base_up, rtt_median) = {
+                let tg = &self.targets[ti];
+                let out = self
+                    .outages
+                    .iter()
+                    .any(|o| o.site == tg.site && o.active_at(t));
+                (out, tg.base_up_prob, tg.rtt_median_s)
+            };
+            let up = !in_outage && self.rng.chance(base_up);
+            let rtt = self.rng.lognormal(rtt_median, 0.4);
             self.history
-                .entry(target.site.clone())
+                .entry(id)
                 .or_default()
                 .push(Probe { at: t, up, rtt_s: rtt });
         }
@@ -94,7 +121,15 @@ impl Monitor {
     /// Availability over the sliding window (1.0 when unprobed — a fresh
     /// site is assumed healthy until evidence says otherwise).
     pub fn availability(&self, site: &str) -> f64 {
-        match self.history.get(site) {
+        self.names
+            .get(site)
+            .map(|id| self.availability_id(id))
+            .unwrap_or(1.0)
+    }
+
+    /// Id-keyed twin of [`Monitor::availability`] (hot path).
+    pub fn availability_id(&self, site: SiteId) -> f64 {
+        match self.history.get(&site) {
             None => 1.0,
             Some(h) if h.is_empty() => 1.0,
             Some(h) => {
@@ -107,7 +142,8 @@ impl Monitor {
 
     /// Median probe RTT over the window (f64::INFINITY when unprobed).
     pub fn median_rtt(&self, site: &str) -> f64 {
-        match self.history.get(site) {
+        let h = self.names.get(site).and_then(|id| self.history.get(&id));
+        match h {
             None => f64::INFINITY,
             Some(h) if h.is_empty() => f64::INFINITY,
             Some(h) => {
@@ -120,20 +156,24 @@ impl Monitor {
         }
     }
 
-    /// Health snapshot for the ranking function.
+    /// Health snapshot for the ranking function (id-keyed, no clones).
     pub fn snapshot(&self) -> Vec<SiteHealth> {
-        self.targets
+        self.target_ids
             .iter()
-            .map(|tg| SiteHealth {
-                site_name: tg.site.clone(),
-                availability: self.availability(&tg.site),
+            .map(|&id| SiteHealth {
+                site: id,
+                availability: self.availability_id(id),
                 free_vms: None,
             })
             .collect()
     }
 
     pub fn probes_recorded(&self, site: &str) -> usize {
-        self.history.get(site).map(|h| h.len()).unwrap_or(0)
+        self.names
+            .get(site)
+            .and_then(|id| self.history.get(&id))
+            .map(|h| h.len())
+            .unwrap_or(0)
     }
 }
 
@@ -201,11 +241,14 @@ mod tests {
             Sla { site_name: "aws".into(), priority: 1,
                   max_instances: None },
         ];
+        let names = m.names();
         let health = m.snapshot();
-        let ranked = rank_sites(&slas, &health);
+        let resolved = crate::orchestrator::ResolvedSlas::resolve(
+            &slas, &names);
+        let ranked = rank_sites(&resolved, &names, &health);
         // cesnet is dark — despite the better SLA it must be excluded.
         assert_eq!(ranked.len(), 1);
-        assert_eq!(health[ranked[0]].site_name, "aws");
+        assert_eq!(names.name(health[ranked[0]].site), "aws");
     }
 
     #[test]

@@ -4,8 +4,19 @@
 //! request by combining the user's signed SLAs with monitored
 //! availability data. We reproduce that ranking: SLA priority dominates,
 //! monitored availability breaks ties and disqualifies unhealthy sites.
+//!
+//! Site identity in the ranking hot path is the dense interned
+//! [`SiteId`]: health snapshots carry ids, SLAs are resolved against the
+//! interner once per decision batch ([`ResolvedSlas`]), and the final
+//! deterministic name tie-break compares interned names in place —
+//! ranking a site list clones no `String`s. Names survive only at the
+//! configuration edge ([`Sla::site_name`]) and in reports.
 
-/// One signed SLA between the user and a site.
+use crate::ids::{SiteId, SiteNames};
+
+/// One signed SLA between the user and a site. This is the
+/// configuration-edge type: names are resolved to [`SiteId`]s via
+/// [`ResolvedSlas::resolve`] before any ranking happens.
 #[derive(Debug, Clone)]
 pub struct Sla {
     pub site_name: String,
@@ -15,14 +26,52 @@ pub struct Sla {
     pub max_instances: Option<u32>,
 }
 
-/// Monitoring snapshot for one site.
-#[derive(Debug, Clone)]
+/// Monitoring snapshot for one site, keyed by interned id.
+#[derive(Debug, Clone, Copy)]
 pub struct SiteHealth {
-    pub site_name: String,
+    pub site: SiteId,
     /// Availability in [0,1] from the monitoring system.
     pub availability: f64,
     /// Known free VM headroom (None = unknown).
     pub free_vms: Option<u32>,
+}
+
+/// SLA terms resolved against a site interner: a dense per-site table
+/// of `(priority, max_instances)`. When several SLAs name the same
+/// site, the first wins (matching the legacy first-match lookup).
+#[derive(Debug, Clone, Default)]
+pub struct ResolvedSlas {
+    by_site: Vec<Option<(u32, Option<u32>)>>,
+}
+
+impl ResolvedSlas {
+    pub fn resolve(slas: &[Sla], names: &SiteNames) -> ResolvedSlas {
+        let mut by_site: Vec<Option<(u32, Option<u32>)>> =
+            vec![None; names.len()];
+        for s in slas {
+            if let Some(id) = names.get(&s.site_name) {
+                let e = &mut by_site[id.index()];
+                if e.is_none() {
+                    *e = Some((s.priority, s.max_instances));
+                }
+            }
+        }
+        ResolvedSlas { by_site }
+    }
+
+    /// `(priority, max_instances)` of the SLA covering `site`, if any.
+    pub fn get(&self, site: SiteId) -> Option<(u32, Option<u32>)> {
+        self.by_site.get(site.index()).copied().flatten()
+    }
+
+    /// Instances the SLA for `site` still allows given `already_used`
+    /// (None = no SLA ceiling; site quota still applies).
+    pub fn headroom(&self, site: SiteId, already_used: u32) -> Option<u32> {
+        match self.get(site) {
+            Some((_, Some(max))) => Some(max.saturating_sub(already_used)),
+            _ => None,
+        }
+    }
 }
 
 /// Minimum availability for a site to be eligible at all.
@@ -34,33 +83,43 @@ pub const MIN_AVAILABILITY: f64 = 0.5;
 /// Sites without an SLA rank after all SLA sites (the orchestrator can
 /// still use them if nothing else has capacity, mirroring opportunistic
 /// use of federated sites).
-pub fn rank_sites(slas: &[Sla], health: &[SiteHealth]) -> Vec<usize> {
+pub fn rank_sites(slas: &ResolvedSlas, names: &SiteNames,
+                  health: &[SiteHealth]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..health.len())
         .filter(|&i| health[i].availability >= MIN_AVAILABILITY)
         .filter(|&i| {
             // An SLA granting zero instances disqualifies the site.
-            match slas.iter().find(|s| s.site_name == health[i].site_name) {
-                Some(s) => s.max_instances != Some(0),
+            match slas.get(health[i].site) {
+                Some((_, max)) => max != Some(0),
                 None => true,
             }
         })
         .collect();
-    let key = |i: usize| {
+    // Precompute the name tie-break rank over the eligible set: ranking
+    // by rank number is identical to ranking by name, without cloning.
+    let mut by_name = idx.clone();
+    by_name.sort_by(|&a, &b| names.cmp_names(health[a].site,
+                                             health[b].site));
+    let mut name_rank = vec![0u32; health.len()];
+    for (r, &i) in by_name.iter().enumerate() {
+        name_rank[i] = r as u32;
+    }
+    idx.sort_by_key(|&i| {
         let h = &health[i];
-        let sla = slas.iter().find(|s| s.site_name == h.site_name);
+        let sla = slas.get(h.site);
         (
             sla.is_none(),                              // SLA sites first
-            sla.map(|s| s.priority).unwrap_or(u32::MAX),
+            sla.map(|(p, _)| p).unwrap_or(u32::MAX),
             // availability desc with 1e-6 resolution
             (1e6 - h.availability * 1e6) as i64,
-            h.site_name.clone(),
+            name_rank[i],
         )
-    };
-    idx.sort_by_key(|&i| key(i));
+    });
     idx
 }
 
-/// Instances an SLA still allows given `already_used`.
+/// Instances an SLA still allows given `already_used` — string-keyed
+/// configuration-edge twin of [`ResolvedSlas::headroom`].
 pub fn sla_headroom(slas: &[Sla], site: &str, already_used: u32)
     -> Option<u32> {
     match slas.iter().find(|s| s.site_name == site) {
@@ -75,9 +134,23 @@ pub fn sla_headroom(slas: &[Sla], site: &str, already_used: u32)
 mod tests {
     use super::*;
 
-    fn h(name: &str, avail: f64) -> SiteHealth {
-        SiteHealth { site_name: name.into(), availability: avail,
-                     free_vms: None }
+    /// Interner + health list from (name, availability) pairs.
+    fn world(entries: &[(&str, f64)]) -> (SiteNames, Vec<SiteHealth>) {
+        let names = SiteNames::new();
+        let health = entries
+            .iter()
+            .map(|&(n, avail)| SiteHealth {
+                site: names.intern(n),
+                availability: avail,
+                free_vms: None,
+            })
+            .collect();
+        (names, health)
+    }
+
+    fn rank(slas: &[Sla], names: &SiteNames, health: &[SiteHealth])
+        -> Vec<usize> {
+        rank_sites(&ResolvedSlas::resolve(slas, names), names, health)
     }
 
     #[test]
@@ -88,8 +161,8 @@ mod tests {
             Sla { site_name: "aws".into(), priority: 1,
                   max_instances: None },
         ];
-        let health = vec![h("aws", 0.999), h("cesnet", 0.9)];
-        let ranked = rank_sites(&slas, &health);
+        let (names, health) = world(&[("aws", 0.999), ("cesnet", 0.9)]);
+        let ranked = rank(&slas, &names, &health);
         assert_eq!(ranked, vec![1, 0]); // cesnet first despite lower avail
     }
 
@@ -99,32 +172,45 @@ mod tests {
             Sla { site_name: "a".into(), priority: 0, max_instances: None },
             Sla { site_name: "b".into(), priority: 0, max_instances: None },
         ];
-        let health = vec![h("a", 0.9), h("b", 0.99)];
-        assert_eq!(rank_sites(&slas, &health), vec![1, 0]);
+        let (names, health) = world(&[("a", 0.9), ("b", 0.99)]);
+        assert_eq!(rank(&slas, &names, &health), vec![1, 0]);
+    }
+
+    #[test]
+    fn name_breaks_full_ties() {
+        let slas = vec![
+            Sla { site_name: "zeta".into(), priority: 0,
+                  max_instances: None },
+            Sla { site_name: "alpha".into(), priority: 0,
+                  max_instances: None },
+        ];
+        let (names, health) = world(&[("zeta", 0.9), ("alpha", 0.9)]);
+        assert_eq!(rank(&slas, &names, &health), vec![1, 0]);
     }
 
     #[test]
     fn unhealthy_sites_excluded() {
         let slas = vec![Sla { site_name: "a".into(), priority: 0,
                               max_instances: None }];
-        let health = vec![h("a", 0.3), h("b", 0.97)];
-        assert_eq!(rank_sites(&slas, &health), vec![1]);
+        let (names, health) = world(&[("a", 0.3), ("b", 0.97)]);
+        assert_eq!(rank(&slas, &names, &health), vec![1]);
     }
 
     #[test]
     fn no_sla_sites_rank_last() {
         let slas = vec![Sla { site_name: "home".into(), priority: 5,
                               max_instances: None }];
-        let health = vec![h("opportunistic", 0.999), h("home", 0.8)];
-        assert_eq!(rank_sites(&slas, &health), vec![1, 0]);
+        let (names, health) = world(&[("opportunistic", 0.999),
+                                      ("home", 0.8)]);
+        assert_eq!(rank(&slas, &names, &health), vec![1, 0]);
     }
 
     #[test]
     fn zero_instance_sla_disqualifies() {
         let slas = vec![Sla { site_name: "a".into(), priority: 0,
                               max_instances: Some(0) }];
-        let health = vec![h("a", 0.99), h("b", 0.9)];
-        assert_eq!(rank_sites(&slas, &health), vec![1]);
+        let (names, health) = world(&[("a", 0.99), ("b", 0.9)]);
+        assert_eq!(rank(&slas, &names, &health), vec![1]);
     }
 
     #[test]
@@ -134,5 +220,37 @@ mod tests {
         assert_eq!(sla_headroom(&slas, "a", 3), Some(2));
         assert_eq!(sla_headroom(&slas, "a", 7), Some(0));
         assert_eq!(sla_headroom(&slas, "other", 0), None);
+    }
+
+    #[test]
+    fn resolved_headroom_matches_string_twin() {
+        let slas = vec![
+            Sla { site_name: "a".into(), priority: 0,
+                  max_instances: Some(5) },
+            Sla { site_name: "b".into(), priority: 1, max_instances: None },
+        ];
+        let names = SiteNames::new();
+        let a = names.intern("a");
+        let b = names.intern("b");
+        let c = names.intern("c");
+        let resolved = ResolvedSlas::resolve(&slas, &names);
+        assert_eq!(resolved.headroom(a, 3), sla_headroom(&slas, "a", 3));
+        assert_eq!(resolved.headroom(a, 7), sla_headroom(&slas, "a", 7));
+        assert_eq!(resolved.headroom(b, 0), sla_headroom(&slas, "b", 0));
+        assert_eq!(resolved.headroom(c, 0), sla_headroom(&slas, "c", 0));
+        assert_eq!(resolved.get(c), None);
+    }
+
+    #[test]
+    fn first_matching_sla_wins() {
+        let slas = vec![
+            Sla { site_name: "a".into(), priority: 2,
+                  max_instances: Some(1) },
+            Sla { site_name: "a".into(), priority: 0, max_instances: None },
+        ];
+        let names = SiteNames::new();
+        let a = names.intern("a");
+        let resolved = ResolvedSlas::resolve(&slas, &names);
+        assert_eq!(resolved.get(a), Some((2, Some(1))));
     }
 }
