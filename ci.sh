@@ -1,38 +1,138 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 verify, then the scheduling-scale bench in
-# quick mode (writes BENCH_scale.json at the repo root so every run
-# leaves a perf datapoint behind), then a warn-only diff against the
-# committed BENCH_baseline.json.
+# Staged CI pipeline.
+#
+#   ./ci.sh                 # full pipeline: fmt lint build test bench compare
+#   ./ci.sh <stage> [...]   # run the named stage(s) in the given order
+#
+# Stages:
+#   fmt            cargo fmt --all -- --check   (skips if rustfmt missing)
+#   lint           cargo clippy -D warnings     (skips if clippy missing)
+#   build          cargo build --release
+#   test           cargo test -q, plus quick re-drives of the broker
+#                  scenario suite and the shard-equivalence properties
+#                  with a reduced EVHC_PROPTEST_CASES budget
+#   bench          scale bench in quick mode -> BENCH_scale.json
+#   compare        diff BENCH_scale.json against the committed
+#                  BENCH_baseline.json with the events/sec regression
+#                  gate active (EVHC_BENCH_GATE=1: >15% fails)
+#   seed-baseline  copy BENCH_scale.json over BENCH_baseline.json —
+#                  explicit only, never part of the default pipeline,
+#                  and refuses dirty/ephemeral checkouts
 set -euo pipefail
 cd "$(dirname "$0")"
 
-echo "== tier-1: cargo build --release =="
-cargo build --release
+stage_fmt() {
+    echo "== fmt: cargo fmt --all -- --check =="
+    if ! cargo fmt --version >/dev/null 2>&1; then
+        echo "SKIP: rustfmt not installed (rustup component add rustfmt)"
+        return 0
+    fi
+    cargo fmt --all -- --check
+}
 
-echo "== tier-1: cargo test -q =="
-cargo test -q
+stage_lint() {
+    echo "== lint: cargo clippy --all-targets -- -D warnings =="
+    if ! cargo clippy --version >/dev/null 2>&1; then
+        echo "SKIP: clippy not installed (rustup component add clippy)"
+        return 0
+    fi
+    cargo clippy --release --all-targets -- -D warnings
+}
 
-# Tier-1 above already ran the full broker suite; this quick pass
-# re-drives just the scenario-replay tests (the broker's determinism
-# surface) with a reduced property budget as a cheap smoke signal.
-echo "== broker: scenario suite (quick mode) =="
-EVHC_PROPTEST_CASES=24 cargo test -q --test broker_policies scenario
+stage_build() {
+    echo "== build: cargo build --release =="
+    cargo build --release
+}
 
-echo "== perf: scale bench (quick mode; includes the broker section) =="
-EVHC_SCALE_BENCH_QUICK=1 cargo bench --bench scale
+stage_test() {
+    echo "== test: cargo test -q =="
+    cargo test -q
 
-echo "== perf: baseline comparison (warn-only) =="
-if [ -f BENCH_baseline.json ]; then
-    cargo run --release --example bench_compare -- \
-        BENCH_baseline.json BENCH_scale.json || true
-else
-    # On an ephemeral checkout this seed disappears with the workspace:
-    # the diff step stays inert until someone commits the seeded file.
-    echo "WARNING: no BENCH_baseline.json committed — seeding it from"
-    echo "this run. COMMIT BENCH_baseline.json to activate the perf"
-    echo "comparison; until then this step compares nothing."
+    # Tier-1 above already ran both suites in full; these quick passes
+    # re-drive the determinism surfaces with a reduced property budget
+    # as a cheap smoke signal for iterating on a single stage.
+    echo "== test: broker scenario suite (quick mode) =="
+    EVHC_PROPTEST_CASES=24 cargo test -q --test broker_policies scenario
+    echo "== test: shard equivalence properties (quick mode) =="
+    EVHC_PROPTEST_CASES=12 cargo test -q --test shard_equivalence prop_
+}
+
+stage_bench() {
+    echo "== bench: scale bench (quick mode) =="
+    EVHC_SCALE_BENCH_QUICK=1 cargo bench --bench scale
+}
+
+# Refuse to invent a baseline where it cannot be committed: on an
+# ephemeral checkout (no git) or a dirty tree, a seeded baseline would
+# silently disappear with the workspace — the old behaviour that made
+# the perf comparison permanently inert.
+check_seedable() {
+    if ! git rev-parse --is-inside-work-tree >/dev/null 2>&1; then
+        echo "ERROR: not a git checkout (ephemeral workspace?)." >&2
+        echo "A baseline seeded here would be discarded with the" >&2
+        echo "workspace. Run './ci.sh bench seed-baseline' in a real" >&2
+        echo "clone and commit BENCH_baseline.json." >&2
+        return 1
+    fi
+    if [ -n "$(git status --porcelain -uno)" ]; then
+        echo "ERROR: the working tree has uncommitted changes;" >&2
+        echo "refusing to seed a baseline that mixes them in. Commit" >&2
+        echo "or stash first, then './ci.sh bench seed-baseline'." >&2
+        return 1
+    fi
+    return 0
+}
+
+stage_compare() {
+    echo "== compare: bench diff vs committed baseline (gated) =="
+    if [ ! -f BENCH_scale.json ]; then
+        echo "ERROR: no BENCH_scale.json — run './ci.sh bench' first." >&2
+        return 1
+    fi
+    if [ ! -f BENCH_baseline.json ]; then
+        echo "no committed BENCH_baseline.json." >&2
+        check_seedable || return 1
+        echo "Seeding the baseline from this run; COMMIT" >&2
+        echo "BENCH_baseline.json to make the perf gate meaningful." >&2
+        cp BENCH_scale.json BENCH_baseline.json
+    fi
+    EVHC_BENCH_GATE=1 cargo run --release --example bench_compare -- \
+        BENCH_baseline.json BENCH_scale.json
+}
+
+stage_seed_baseline() {
+    echo "== seed-baseline: BENCH_scale.json -> BENCH_baseline.json =="
+    if [ ! -f BENCH_scale.json ]; then
+        echo "ERROR: no BENCH_scale.json — run './ci.sh bench' first." >&2
+        return 1
+    fi
+    check_seedable || return 1
     cp BENCH_scale.json BENCH_baseline.json
-fi
+    echo "Seeded. Review and commit BENCH_baseline.json."
+}
 
-echo "== done; BENCH_scale.json =="
-cat BENCH_scale.json
+run_stage() {
+    case "$1" in
+        fmt)           stage_fmt ;;
+        lint)          stage_lint ;;
+        build)         stage_build ;;
+        test)          stage_test ;;
+        bench)         stage_bench ;;
+        compare)       stage_compare ;;
+        seed-baseline) stage_seed_baseline ;;
+        *)
+            echo "unknown stage: $1" >&2
+            echo "stages: fmt lint build test bench compare" \
+                 "seed-baseline" >&2
+            return 2
+            ;;
+    esac
+}
+
+if [ "$#" -eq 0 ]; then
+    set -- fmt lint build test bench compare
+fi
+for stage in "$@"; do
+    run_stage "$stage"
+done
+echo "== ci: all stages passed =="

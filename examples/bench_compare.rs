@@ -1,19 +1,38 @@
 //! Compare a fresh `BENCH_scale.json` against the committed
 //! `BENCH_baseline.json`, printing an events/sec and ms/tick table per
-//! scenario/section. Warn-only: regressions are reported loudly but the
-//! exit code stays 0 — `ci.sh` runs this after every bench pass.
+//! scenario/section plus the broker cost/makespan diff.
+//!
+//! Regression policy:
+//! * events/sec drops beyond 10% are warned about; beyond 15% they are
+//!   *gating* — with `EVHC_BENCH_GATE=1` (set by `ci.sh`) the process
+//!   exits non-zero. Cost/makespan (broker) and recorder-bytes
+//!   (stealing) drifts stay warn-only in every mode.
+//! * without `EVHC_BENCH_GATE=1` everything is warn-only (exit 0).
 //!
 //!     cargo run --release --example bench_compare -- \
 //!         BENCH_baseline.json BENCH_scale.json
 
 use evhc::api::json::{parse, Json};
 
-/// Sections of a scenario row that carry Measured-shaped objects.
+/// events/sec regression beyond this is worth a warning.
+const WARN_PCT: f64 = 10.0;
+/// events/sec regression beyond this fails the gate.
+const GATE_PCT: f64 = 15.0;
+
+/// Sections of a `scenarios` row that carry Measured-shaped objects.
 const SECTIONS: &[(&str, &[&str])] = &[
     ("indexed", &["indexed"]),
     ("naive", &["naive"]),
     ("sharded/single_queue", &["sharded", "single_queue"]),
     ("sharded/parallel", &["sharded", "parallel"]),
+];
+
+/// Sections of a `stealing` row that carry Measured-shaped objects.
+const STEAL_SECTIONS: &[(&str, &[&str])] = &[
+    ("single_queue", &["single_queue"]),
+    ("parallel", &["parallel"]),
+    ("stealing", &["stealing"]),
+    ("stealing_spill", &["stealing_spill"]),
 ];
 
 fn lookup<'a>(row: &'a Json, path: &[&str]) -> Option<&'a Json> {
@@ -41,12 +60,93 @@ fn rows_of<'a>(doc: &'a Json, key: &str) -> Vec<(String, &'a Json)> {
         .collect()
 }
 
-fn scenarios(doc: &Json) -> Vec<(String, &Json)> {
-    rows_of(doc, "scenarios")
+/// Tallies of a comparison pass: sections warned about (>10% slower)
+/// and sections that fail the gate (>15% slower).
+#[derive(Default)]
+struct Tally {
+    warned: u32,
+    gated: u32,
+}
+
+/// Diff the Measured-shaped `sections` of every named row under `key`,
+/// comparing events/sec (regression-tracked) and ms/tick (printed).
+fn compare_measured(baseline: &Json, fresh: &Json, key: &str,
+                    sections: &[(&str, &[&str])]) -> Tally {
+    let base_rows = rows_of(baseline, key);
+    let fresh_rows = rows_of(fresh, key);
+    let mut tally = Tally::default();
+    if fresh_rows.is_empty() {
+        return tally;
+    }
+    println!("\n[{key}]");
+    println!("{:<22} {:<22} {:>14} {:>14} {:>8}", "row", "section",
+             "base ev/s", "fresh ev/s", "delta");
+    println!("{}", "-".repeat(84));
+    for (name, fresh_row) in fresh_rows {
+        let Some((_, base_row)) =
+            base_rows.iter().find(|(n, _)| *n == name)
+        else {
+            println!("{name:<22} (new row, no baseline)");
+            continue;
+        };
+        for &(label, path) in sections {
+            let (Some(b), Some(f)) = (
+                metric(base_row, path, "events_per_sec"),
+                metric(fresh_row, path, "events_per_sec"),
+            ) else {
+                continue;
+            };
+            let delta = if b > 0.0 { (f - b) / b * 100.0 } else { 0.0 };
+            let mark = if delta < -GATE_PCT {
+                tally.warned += 1;
+                tally.gated += 1;
+                "  <-- REGRESSION (gate)"
+            } else if delta < -WARN_PCT {
+                tally.warned += 1;
+                "  <-- REGRESSION"
+            } else {
+                ""
+            };
+            println!("{name:<22} {label:<22} {b:>14.0} {f:>14.0} \
+                      {delta:>+7.1}%{mark}");
+            if let (Some(bm), Some(fm)) = (
+                metric(base_row, path, "ms_per_tick"),
+                metric(fresh_row, path, "ms_per_tick"),
+            ) {
+                let dm = if bm > 0.0 { (fm - bm) / bm * 100.0 } else { 0.0 };
+                println!("{:<22} {:<22} {bm:>11.4} ms {fm:>11.4} ms \
+                          {dm:>+7.1}%", "", "  ms/tick");
+            }
+        }
+        // Recorder-memory trajectory (stealing rows): warn-only.
+        for bytes_metric in ["recorder_bytes_in_memory",
+                             "recorder_spill_file_bytes"] {
+            let (Some(b), Some(f)) = (
+                base_row.get(bytes_metric).and_then(|v| v.as_f64()),
+                fresh_row.get(bytes_metric).and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            if b == f {
+                continue;
+            }
+            let delta = if b > 0.0 {
+                (f - b) / b * 100.0
+            } else {
+                f64::INFINITY
+            };
+            let mark = if delta > WARN_PCT { "  <-- GREW (warn-only)" }
+                       else { "" };
+            println!("{name:<22} {bytes_metric:<22} {b:>14.0} {f:>14.0} \
+                      {delta:>+7.1}%{mark}");
+        }
+    }
+    tally
 }
 
 /// Diff the broker policy×scenario rows: cost and makespan are the
 /// broker's figures of merit (events/sec is noise at this size).
+/// Always warn-only.
 fn compare_broker(baseline: &Json, fresh: &Json) -> u32 {
     let base_rows = rows_of(baseline, "broker");
     let fresh_rows = rows_of(fresh, "broker");
@@ -86,7 +186,7 @@ fn compare_broker(baseline: &Json, fresh: &Json) -> u32 {
             // A scenario getting >10% slower or pricier is a
             // regression in the broker's own currency.
             let mark = if metric_name != "preempt_recovered"
-                && delta > 10.0
+                && delta > WARN_PCT
             {
                 regressions += 1;
                 "  <-- REGRESSION"
@@ -113,51 +213,42 @@ fn main() {
     };
     let baseline = read(&args[1]);
     let fresh = read(&args[2]);
+    let gate_on = std::env::var("EVHC_BENCH_GATE")
+        .map(|v| v == "1")
+        .unwrap_or(false);
 
-    println!("{:<22} {:<22} {:>14} {:>14} {:>8}", "scenario", "section",
-             "base ev/s", "fresh ev/s", "delta");
-    println!("{}", "-".repeat(84));
-    let mut regressions = 0u32;
-    let base_rows = scenarios(&baseline);
-    for (name, fresh_row) in scenarios(&fresh) {
-        let Some((_, base_row)) =
-            base_rows.iter().find(|(n, _)| *n == name)
-        else {
-            println!("{name:<22} (new scenario, no baseline)");
-            continue;
-        };
-        for &(label, path) in SECTIONS {
-            let (Some(b), Some(f)) = (
-                metric(base_row, path, "events_per_sec"),
-                metric(fresh_row, path, "events_per_sec"),
-            ) else {
-                continue;
-            };
-            let delta = if b > 0.0 { (f - b) / b * 100.0 } else { 0.0 };
-            let mark = if delta < -10.0 {
-                regressions += 1;
-                "  <-- REGRESSION"
-            } else {
-                ""
-            };
-            println!("{name:<22} {label:<22} {b:>14.0} {f:>14.0} \
-                      {delta:>+7.1}%{mark}");
-            if let (Some(bm), Some(fm)) = (
-                metric(base_row, path, "ms_per_tick"),
-                metric(fresh_row, path, "ms_per_tick"),
-            ) {
-                let dm = if bm > 0.0 { (fm - bm) / bm * 100.0 } else { 0.0 };
-                println!("{:<22} {:<22} {bm:>11.4} ms {fm:>11.4} ms \
-                          {dm:>+7.1}%", "", "  ms/tick");
-            }
-        }
+    if baseline
+        .get("synthetic_seed")
+        .and_then(|v| v.as_bool())
+        .unwrap_or(false)
+    {
+        println!("NOTE: the committed baseline is a synthetic low-water \
+                  seed;\nrefresh it with './ci.sh bench seed-baseline' \
+                  on a quiet machine\nand commit the result to tighten \
+                  the gate.");
     }
+
+    let scen = compare_measured(&baseline, &fresh, "scenarios", SECTIONS);
+    let steal =
+        compare_measured(&baseline, &fresh, "stealing", STEAL_SECTIONS);
     let broker_regressions = compare_broker(&baseline, &fresh);
-    if regressions > 0 || broker_regressions > 0 {
-        println!("\nWARNING: {regressions} section(s) regressed by more \
-                  than 10% events/sec and {broker_regressions} broker \
-                  row(s) by more than 10% cost/makespan (warn-only).");
+
+    let warned = scen.warned + steal.warned;
+    let gated = scen.gated + steal.gated;
+    if warned > 0 || broker_regressions > 0 {
+        println!("\nWARNING: {warned} section(s) regressed by more than \
+                  {WARN_PCT}% events/sec ({gated} beyond the {GATE_PCT}% \
+                  gate) and {broker_regressions} broker row(s) by more \
+                  than {WARN_PCT}% cost/makespan (warn-only).");
     } else {
-        println!("\nno regressions beyond 10%.");
+        println!("\nno regressions beyond {WARN_PCT}%.");
+    }
+    if gate_on && gated > 0 {
+        eprintln!("FAIL: {gated} section(s) regressed beyond {GATE_PCT}% \
+                   events/sec with EVHC_BENCH_GATE=1.");
+        std::process::exit(1);
+    }
+    if gate_on {
+        println!("gate: no events/sec regression beyond {GATE_PCT}%.");
     }
 }

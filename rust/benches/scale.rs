@@ -11,6 +11,13 @@
 //!   single-queue engine (serial deterministic merge) vs the parallel
 //!   windowed engine of `evhc::sim::shard`, with an equality assert
 //!   that both replays produced identical per-site outcomes,
+//! * `stealing` — skewed multi-site worlds (one hot site carrying
+//!   `hot_mul`× the jobs of a cold site): the single-queue engine vs
+//!   the chunked parallel engine vs the work-stealing engine, with
+//!   digest equality asserts between all three, plus the per-shard
+//!   metrics story — in-memory recorder bytes vs streaming spill-file
+//!   bytes, with a byte-identical merged-figure assert between the two
+//!   recording paths,
 //! * `broker` — full-cluster elasticity runs over 2–8 sites, policy ×
 //!   scenario (spot-preemption waves, site outages, price spikes):
 //!   cost, makespan and preempted-job recovery per combination, each
@@ -18,21 +25,26 @@
 //!
 //! Results are written to `BENCH_scale.json` at the repo root so future
 //! PRs accumulate a perf trajectory (`ci.sh` diffs it against the
-//! committed `BENCH_baseline.json`).
+//! committed `BENCH_baseline.json` and, with `EVHC_BENCH_GATE=1`, fails
+//! on events/sec regressions beyond 15%).
 //!
 //!     cargo bench --bench scale              # full suite (~10k nodes)
 //!     EVHC_SCALE_BENCH_QUICK=1 cargo bench --bench scale   # CI mode
 
+use std::path::Path;
 use std::time::Instant;
 
 use evhc::api::json::Json;
 use evhc::broker::{PolicyKind, ScenarioPlan};
 use evhc::cloudsim::SiteSpec;
 use evhc::cluster::{HybridCluster, RunConfig, RunReport};
+use evhc::ids::NodeNames;
 use evhc::lrms::core::{BatchCore, Placement};
 use evhc::lrms::JobId;
+use evhc::metrics::{DisplayState, Recorder, ShardSink, SpillFiles};
 use evhc::sim::shard::{default_threads, run_sharded, run_sharded_serial,
-                       ControlPlane, SiteCtx, SiteShard};
+                       run_sharded_stealing, ControlPlane, SiteCtx,
+                       SiteShard, StealConfig};
 use evhc::sim::{EventQueue, ShardEvent, ShardKey, ShardedQueue, SimTime};
 use evhc::util::bench::section;
 use evhc::util::prng::Prng;
@@ -142,7 +154,9 @@ impl ShardEvent for SEv {
     }
 }
 
-/// One cloud site's shard: its own LRMS core, rng and counters.
+/// One cloud site's shard: its own LRMS core, rng, counters and —
+/// in the stealing/metrics section — a recorder (in-memory or
+/// streaming to spill files).
 struct SiteSim {
     site: u32,
     core: BatchCore,
@@ -150,6 +164,7 @@ struct SiteSim {
     completed: u32,
     ticks: u64,
     tick_secs: f64,
+    rec: Option<Recorder>,
 }
 
 impl SiteShard for SiteSim {
@@ -166,6 +181,19 @@ impl SiteShard for SiteSim {
             SEv::Done { job, .. } => {
                 let _ = self.core.on_job_finished(job, true, t);
                 self.completed += 1;
+                if let Some(rec) = self.rec.as_mut() {
+                    if let Some(j) = self.core.job(job) {
+                        if let (Some(node), Some(s), Some(e)) =
+                            (j.node, j.started_at, j.finished_at)
+                        {
+                            let name = self
+                                .core
+                                .node_name(node)
+                                .expect("assigned node");
+                            rec.job_run(&name, s, e);
+                        }
+                    }
+                }
             }
             SEv::Block { .. } => unreachable!("control event in site shard"),
         }
@@ -173,7 +201,12 @@ impl SiteShard for SiteSim {
         let assigned = self.core.schedule(t);
         self.tick_secs += t0.elapsed().as_secs_f64();
         self.ticks += 1;
-        for (job, _node) in assigned {
+        for (job, node) in assigned {
+            if let Some(rec) = self.rec.as_mut() {
+                let name =
+                    self.core.node_name(node).expect("assigned node");
+                rec.node_state(t, &name, DisplayState::Used);
+            }
             ctx.schedule_in(15.0 + self.rng.next_f64() * 5.0, SEv::Done {
                 site: self.site,
                 job,
@@ -219,6 +252,7 @@ fn sharded_world(sc: &Scenario, seed: u64)
             completed: 0,
             ticks: 0,
             tick_secs: 0.0,
+            rec: None,
         });
     }
     let mut q: ShardedQueue<SEv> = ShardedQueue::new(sc.sites as usize);
@@ -266,6 +300,258 @@ fn run_sharded_scenario(sc: &Scenario, seed: u64, parallel: bool,
         completed,
     };
     (m, digest)
+}
+
+// ---------------------------------------------------------------------
+// Work-stealing on skewed worlds + streaming per-shard metrics.
+// ---------------------------------------------------------------------
+
+/// A skewed multi-site scenario: site 0 (the hot site) receives
+/// `hot_mul`× the jobs of each cold site, reproducing the
+/// one-hot-back-end mix that serializes the chunked parallel engine.
+struct SkewSpec {
+    name: &'static str,
+    cold_sites: u32,
+    hot_mul: u32,
+    nodes_per_site: u32,
+    slots_per_node: u32,
+    cold_jobs_per_block: u32,
+    blocks: u32,
+}
+
+impl SkewSpec {
+    fn sites(&self) -> u32 {
+        self.cold_sites + 1
+    }
+
+    fn total_jobs(&self) -> u32 {
+        self.blocks * self.cold_jobs_per_block
+            * (self.cold_sites + self.hot_mul)
+    }
+}
+
+/// Control plane for skewed worlds: fans each block out with the hot
+/// multiplier applied to site 0. Sites never talk back (unbounded
+/// lookahead, block-to-block windows).
+struct SkewFeeder {
+    sites: u32,
+    hot_mul: u32,
+}
+
+impl ControlPlane for SkewFeeder {
+    type Site = SiteSim;
+
+    fn handle(&mut self, _sites: &mut [SiteSim], t: SimTime, ev: SEv,
+              q: &mut ShardedQueue<SEv>) {
+        if let SEv::Block { jobs_per_site } = ev {
+            for s in 0..self.sites {
+                let n = if s == 0 {
+                    jobs_per_site * self.hot_mul
+                } else {
+                    jobs_per_site
+                };
+                q.schedule_at(t, SEv::Submit { site: s, n });
+            }
+        }
+    }
+}
+
+/// Build a skewed world; every site records (in memory, or streaming
+/// to spill files under `spill_dir` when given).
+fn skew_world(sc: &SkewSpec, seed: u64, spill_dir: Option<&Path>)
+    -> (SkewFeeder, Vec<SiteSim>, ShardedQueue<SEv>) {
+    let mut sites = Vec::new();
+    for s in 0..sc.sites() {
+        let mut core = BatchCore::new(Placement::PackFirstFit);
+        for k in 0..sc.nodes_per_site {
+            core.register_node(&format!("s{s}-wn-{k}"), sc.slots_per_node,
+                               SimTime(0.0));
+        }
+        let rec = match spill_dir {
+            None => Recorder::new(),
+            Some(dir) => Recorder::with_spill(
+                NodeNames::new(),
+                ShardSink::create(dir, s).expect("spill sink"),
+            ),
+        };
+        sites.push(SiteSim {
+            site: s,
+            core,
+            rng: Prng::new(seed ^ (s as u64 + 1).wrapping_mul(0x9E37)),
+            completed: 0,
+            ticks: 0,
+            tick_secs: 0.0,
+            rec: Some(rec),
+        });
+    }
+    let mut q: ShardedQueue<SEv> = ShardedQueue::new(sc.sites() as usize);
+    for b in 0..sc.blocks {
+        q.schedule_at(SimTime(b as f64 * 900.0),
+                      SEv::Block { jobs_per_site: sc.cold_jobs_per_block });
+    }
+    (SkewFeeder { sites: sc.sites(), hot_mul: sc.hot_mul }, sites, q)
+}
+
+enum SkewEngine {
+    SingleQueue,
+    Parallel(usize),
+    Stealing(StealConfig),
+}
+
+fn run_skew(sc: &SkewSpec, seed: u64, engine: &SkewEngine,
+            spill_dir: Option<&Path>)
+    -> (Measured, SiteDigest, Vec<Recorder>) {
+    let (mut feeder, mut sites, mut q) = skew_world(sc, seed, spill_dir);
+    let wall = Instant::now();
+    match engine {
+        SkewEngine::SingleQueue => {
+            run_sharded_serial(&mut feeder, &mut sites, &mut q,
+                               SimTime(f64::INFINITY));
+        }
+        SkewEngine::Parallel(threads) => {
+            run_sharded(&mut feeder, &mut sites, &mut q,
+                        SimTime(f64::INFINITY), *threads);
+        }
+        SkewEngine::Stealing(cfg) => {
+            run_sharded_stealing(&mut feeder, &mut sites, &mut q,
+                                 SimTime(f64::INFINITY), *cfg);
+        }
+    }
+    let wall_s = wall.elapsed().as_secs_f64();
+    let events = q.dispatched();
+    let completed: u32 = sites.iter().map(|s| s.completed).sum();
+    assert_eq!(completed, sc.total_jobs(),
+               "skew run must drain the workload");
+    let ticks: u64 = sites.iter().map(|s| s.ticks).sum();
+    let tick_secs: f64 = sites.iter().map(|s| s.tick_secs).sum();
+    let digest = sites
+        .iter()
+        .map(|s| (s.completed, s.core.pending(), s.core.free_slots(),
+                  s.ticks))
+        .collect();
+    let recs = sites
+        .into_iter()
+        .map(|s| s.rec.expect("skew sites record"))
+        .collect();
+    let m = Measured {
+        events,
+        wall_s,
+        events_per_sec: events as f64 / wall_s.max(1e-9),
+        ms_per_tick: tick_secs * 1e3 / ticks.max(1) as f64,
+        completed,
+    };
+    (m, digest, recs)
+}
+
+fn stealing_section(quick: bool) -> Json {
+    let specs: Vec<SkewSpec> = if quick {
+        vec![SkewSpec {
+            name: "skew10-7sites", cold_sites: 6, hot_mul: 10,
+            nodes_per_site: 40, slots_per_node: 2,
+            cold_jobs_per_block: 500, blocks: 4,
+        }]
+    } else {
+        vec![
+            SkewSpec {
+                name: "skew8-8sites", cold_sites: 7, hot_mul: 8,
+                nodes_per_site: 100, slots_per_node: 2,
+                cold_jobs_per_block: 3000, blocks: 4,
+            },
+            SkewSpec {
+                name: "skew24-4sites", cold_sites: 3, hot_mul: 24,
+                nodes_per_site: 60, slots_per_node: 2,
+                cold_jobs_per_block: 1500, blocks: 4,
+            },
+        ]
+    };
+
+    let mut rows = Vec::new();
+    for sc in &specs {
+        // Fewer workers than sites: exactly the regime where the hot
+        // shard serializes behind its static chunk without stealing.
+        let threads = (sc.sites() as usize / 2).max(2);
+        let cfg = StealConfig { threads, segment_events: 256 };
+        println!("\n--- {} ({} sites, hot x{}, {} jobs, {threads} \
+                  threads) ---",
+                 sc.name, sc.sites(), sc.hot_mul, sc.total_jobs());
+
+        let (m_sq, d_sq, _recs_sq) =
+            run_skew(sc, 7, &SkewEngine::SingleQueue, None);
+        report_line("skew-single-q", &m_sq);
+        let (m_par, d_par, _) =
+            run_skew(sc, 7, &SkewEngine::Parallel(threads), None);
+        assert_eq!(d_sq, d_par,
+                   "chunked parallel replay diverged on {}", sc.name);
+        report_line(&format!("skew-par[{threads}t]"), &m_par);
+        let (m_steal, d_steal, recs_steal) =
+            run_skew(sc, 7, &SkewEngine::Stealing(cfg), None);
+        assert_eq!(d_sq, d_steal,
+                   "stealing replay diverged on {}", sc.name);
+        report_line(&format!("skew-steal[{threads}t]"), &m_steal);
+
+        let vs_par = m_steal.events_per_sec
+            / m_par.events_per_sec.max(1e-9);
+        let vs_sq = m_steal.events_per_sec
+            / m_sq.events_per_sec.max(1e-9);
+        println!("  steal vs no-steal  {vs_par:>11.2}x events/sec   \
+                  (vs single-queue {vs_sq:.2}x)");
+
+        // Metrics memory story: in-memory per-shard recorders vs the
+        // streaming spill path, which must merge byte-identically.
+        let mem_bytes: usize =
+            recs_steal.iter().map(Recorder::approx_bytes).sum();
+        let merged_mem =
+            Recorder::merge_shards(NodeNames::new(), &recs_steal);
+        let dir = std::env::temp_dir()
+            .join(format!("evhc_bench_spill_{}", sc.name));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (m_spill, d_spill, recs_spill) =
+            run_skew(sc, 7, &SkewEngine::Stealing(cfg), Some(dir.as_path()));
+        assert_eq!(d_sq, d_spill,
+                   "spill-mode stealing replay diverged on {}", sc.name);
+        report_line("skew-steal-spill", &m_spill);
+        let files: Vec<SpillFiles> = recs_spill
+            .into_iter()
+            .map(|mut r| {
+                r.finish_spill().expect("spilling").expect("spill io")
+            })
+            .collect();
+        let spill_bytes: u64 = files.iter().map(|f| f.bytes).sum();
+        let merged_spill = Recorder::merge_spills(NodeNames::new(), &files)
+            .expect("spill merge");
+        let until = SimTime(sc.blocks as f64 * 900.0 + 3600.0);
+        assert_eq!(merged_mem.fig10_usage(300.0, until).to_csv(),
+                   merged_spill.fig10_usage(300.0, until).to_csv(),
+                   "spill merge fig10 diverged on {}", sc.name);
+        assert_eq!(merged_mem.fig11_states(300.0, until).to_csv(),
+                   merged_spill.fig11_states(300.0, until).to_csv(),
+                   "spill merge fig11 diverged on {}", sc.name);
+        let merged_bytes = merged_spill.approx_bytes();
+        let _ = std::fs::remove_dir_all(&dir);
+        println!("  recorder bytes     {mem_bytes:>11} in-memory  \
+                  {spill_bytes:>11} spilled  {merged_bytes:>11} merged");
+
+        rows.push(Json::Object(vec![
+            ("name".into(), Json::Str(sc.name.into())),
+            ("sites".into(), Json::Num(sc.sites() as f64)),
+            ("threads".into(), Json::Num(threads as f64)),
+            ("hot_mul".into(), Json::Num(sc.hot_mul as f64)),
+            ("jobs".into(), Json::Num(sc.total_jobs() as f64)),
+            ("single_queue".into(), measured_json(&m_sq)),
+            ("parallel".into(), measured_json(&m_par)),
+            ("stealing".into(), measured_json(&m_steal)),
+            ("stealing_spill".into(), measured_json(&m_spill)),
+            ("speedup_steal_vs_parallel".into(), Json::Num(vs_par)),
+            ("speedup_steal_vs_single_queue".into(), Json::Num(vs_sq)),
+            ("recorder_bytes_in_memory".into(),
+             Json::Num(mem_bytes as f64)),
+            ("recorder_spill_file_bytes".into(),
+             Json::Num(spill_bytes as f64)),
+            ("recorder_bytes_merged".into(),
+             Json::Num(merged_bytes as f64)),
+        ]));
+    }
+    Json::Array(rows)
 }
 
 fn measured_json(m: &Measured) -> Json {
@@ -526,6 +812,12 @@ fn main() {
                    / spread_naive.events_per_sec.max(1e-9))),
     ]));
 
+    // Work-stealing on skewed worlds + streaming per-shard metrics,
+    // with digest/figure equality asserts across engines and recording
+    // paths.
+    section("SCALE: work-stealing x skew x metrics spill");
+    let stealing_rows = stealing_section(quick);
+
     // Broker: policy × scenario × multi-site elasticity runs, each
     // replayed twice with an in-bench determinism assert.
     section("SCALE: broker policy x scenario");
@@ -535,6 +827,7 @@ fn main() {
         ("bench".into(), Json::Str("scale".into())),
         ("quick".into(), Json::Bool(quick)),
         ("scenarios".into(), Json::Array(rows)),
+        ("stealing".into(), stealing_rows),
         ("broker".into(), broker_rows),
     ]);
     std::fs::write("BENCH_scale.json", doc.render() + "\n")

@@ -44,7 +44,7 @@ use crate::cloudsim::{CloudSite, SiteSpec, VmId};
 use crate::ids::{NodeId, NodeNames};
 use crate::im::{Im, NodeRole};
 use crate::lrms::{HtCondor, JobId, Lrms, NodeHealth, NodeStat, Slurm};
-use crate::metrics::{DisplayState, Recorder};
+use crate::metrics::{DisplayState, Recorder, ShardSink};
 use crate::netsim::{LinkSpec, Network};
 use crate::orchestrator::{Sla, UpdateId, UpdateOp, WorkflowEngine};
 use crate::runtime::ModelRuntime;
@@ -78,6 +78,12 @@ pub struct RunConfig {
     pub inference_every: u32,
     /// Simulation horizon (safety stop).
     pub horizon: SimTime,
+    /// When set, the recorder streams transitions/job-runs/milestones
+    /// to spill files under this directory during the replay instead of
+    /// accumulating them in memory; the report's recorder is rebuilt
+    /// from the spill at run end. Constant-memory metrics for long
+    /// replays — figures and reports are byte-identical either way.
+    pub metrics_spill_dir: Option<std::path::PathBuf>,
 }
 
 impl RunConfig {
@@ -103,6 +109,7 @@ impl RunConfig {
             serialized_orchestrator: true,
             inference_every: 0,
             horizon: SimTime::from_hms(48, 0, 0),
+            metrics_spill_dir: None,
         }
     }
 }
@@ -365,6 +372,16 @@ impl HybridCluster {
         };
         let rng = Prng::new(cfg.seed ^ 0xC1);
         let n_sites = sites.len();
+        // The cluster replays in merged (serial) mode, so its metrics
+        // form a single logical shard; spill mode streams it to disk.
+        let recorder = match &cfg.metrics_spill_dir {
+            Some(dir) => Recorder::with_spill(
+                names.clone(),
+                ShardSink::create(dir, 0)
+                    .context("creating metrics spill sink")?,
+            ),
+            None => Recorder::with_names(names.clone()),
+        };
         Ok(HybridCluster {
             sites,
             net,
@@ -374,7 +391,7 @@ impl HybridCluster {
             engine,
             im,
             broker,
-            recorder: Recorder::with_names(names.clone()),
+            recorder,
             names,
             nodes: HashMap::new(),
             update_for_node: HashMap::new(),
@@ -416,6 +433,20 @@ impl HybridCluster {
         let horizon = self.cfg.horizon;
         run_merged_until(&mut self, &mut q, horizon);
         let makespan = q.now();
+
+        // Spill mode: flush the stream and rebuild the in-memory
+        // recorder from it, so the report and figures see exactly the
+        // data an in-memory run would have accumulated.
+        if self.recorder.is_spilling() {
+            let files = self
+                .recorder
+                .finish_spill()
+                .expect("is_spilling checked")
+                .context("flushing metrics spill")?;
+            self.recorder =
+                Recorder::merge_spills(self.names.clone(), &[files])
+                    .context("merging metrics spill")?;
+        }
 
         // ---- report assembly -------------------------------------------
         let mut per_vm = Vec::new();
@@ -1408,6 +1439,30 @@ mod tests {
         assert!(names.iter().any(|n| n == "front-end"), "{names:?}");
         assert!(names.iter().any(|n| n == "vnode-1"), "{names:?}");
         assert!(names.iter().any(|n| n == "vnode-2"), "{names:?}");
+    }
+
+    #[test]
+    fn spill_mode_metrics_match_in_memory_run() {
+        let mem = HybridCluster::new(small_cfg(0.01)).unwrap()
+            .run().unwrap();
+        let dir = std::env::temp_dir().join("evhc_cluster_spill_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = small_cfg(0.01);
+        cfg.metrics_spill_dir = Some(dir.clone());
+        let spilled = HybridCluster::new(cfg).unwrap().run().unwrap();
+        // Same seed, deterministic world: the streamed-and-merged
+        // recorder must be byte-identical to the in-memory one.
+        assert_eq!(spilled.makespan.0, mem.makespan.0);
+        assert_eq!(spilled.jobs_completed, mem.jobs_completed);
+        assert_eq!(spilled.recorder.milestones, mem.recorder.milestones);
+        assert_eq!(spilled.recorder.node_names(), mem.recorder.node_names());
+        let until = mem.makespan;
+        assert_eq!(spilled.recorder.fig10_usage(60.0, until).to_csv(),
+                   mem.recorder.fig10_usage(60.0, until).to_csv());
+        assert_eq!(spilled.recorder.fig11_states(60.0, until).to_csv(),
+                   mem.recorder.fig11_states(60.0, until).to_csv());
+        assert_eq!(spilled.busy_secs, mem.busy_secs);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

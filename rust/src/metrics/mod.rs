@@ -12,11 +12,15 @@
 //! rescan of the whole transition log. Names are resolved only when a
 //! figure/table is rendered.
 
+pub mod spill;
+
 use std::collections::{BTreeMap, HashMap};
 
 use crate::ids::{NodeId, NodeNames};
 use crate::sim::SimTime;
 use crate::util::csv::Table;
+
+pub use spill::{ShardSink, SpillFiles};
 
 /// Node display states — exactly the legend of the paper's Figure 11
 /// (blue=used, green=powering on, orange=idle, purple=powering off),
@@ -42,9 +46,28 @@ impl DisplayState {
             DisplayState::Failed => "failed",
         }
     }
+
+    /// Inverse of [`DisplayState::label`] (spill-file deserialization).
+    pub fn from_label(s: &str) -> Option<DisplayState> {
+        Some(match s {
+            "used" => DisplayState::Used,
+            "powering_on" => DisplayState::PoweringOn,
+            "idle" => DisplayState::Idle,
+            "powering_off" => DisplayState::PoweringOff,
+            "off" => DisplayState::Off,
+            "failed" => DisplayState::Failed,
+            _ => return None,
+        })
+    }
 }
 
 /// Recorder of everything the figures need.
+///
+/// Two recording modes share this surface: the default accumulates in
+/// the public vectors below; a recorder built by
+/// [`Recorder::with_spill`] instead streams every record to its
+/// [`ShardSink`]'s spill files and keeps nothing in memory — rebuild
+/// the in-memory view afterwards with [`Recorder::merge_spills`].
 #[derive(Debug, Default)]
 pub struct Recorder {
     names: NodeNames,
@@ -58,6 +81,8 @@ pub struct Recorder {
     /// `seen` answers membership, `order` preserves insertion order).
     order: Vec<NodeId>,
     seen: Vec<bool>,
+    /// When set, records stream here instead of the vectors above.
+    sink: Option<ShardSink>,
 }
 
 impl Recorder {
@@ -70,6 +95,40 @@ impl Recorder {
         Recorder { names, ..Recorder::default() }
     }
 
+    /// A streaming recorder: every record goes to `sink`'s spill files,
+    /// nothing accumulates in memory. The figure/query methods on a
+    /// spilling recorder see an empty log — merge the spills back with
+    /// [`Recorder::merge_spills`] when the replay ends.
+    pub fn with_spill(names: NodeNames, sink: ShardSink) -> Recorder {
+        Recorder { names, sink: Some(sink), ..Recorder::default() }
+    }
+
+    /// Is this recorder streaming to spill files?
+    pub fn is_spilling(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Take the spill sink out and flush it, leaving an (empty)
+    /// in-memory recorder behind. `None` if not spilling.
+    pub fn finish_spill(&mut self)
+        -> Option<anyhow::Result<SpillFiles>> {
+        self.sink.take().map(ShardSink::finish)
+    }
+
+    /// Approximate heap footprint of the accumulated record vectors —
+    /// the number the per-shard streaming flush exists to keep flat.
+    pub fn approx_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.transitions.capacity()
+            * size_of::<(SimTime, NodeId, DisplayState)>()
+            + self.job_runs.capacity()
+                * size_of::<(NodeId, SimTime, SimTime)>()
+            + self.milestones.capacity() * size_of::<(SimTime, String)>()
+            + self.milestones.iter().map(|(_, s)| s.capacity()).sum::<usize>()
+            + self.order.capacity() * size_of::<NodeId>()
+            + self.seen.capacity()
+    }
+
     /// Interner handle (ids recorded here resolve through it).
     pub fn names(&self) -> NodeNames {
         self.names.clone()
@@ -80,9 +139,13 @@ impl Recorder {
         self.node_state_id(t, id, s);
     }
 
-    /// Hot-path variant: no hashing, no cloning.
+    /// Hot-path variant: no hashing, no cloning (in-memory mode).
     pub fn node_state_id(&mut self, t: SimTime, id: NodeId,
                          s: DisplayState) {
+        if let Some(sink) = self.sink.as_mut() {
+            sink.node_state(t, &self.names.name(id), s);
+            return;
+        }
         let i = id.index();
         if self.seen.len() <= i {
             self.seen.resize(i + 1, false);
@@ -95,7 +158,12 @@ impl Recorder {
     }
 
     pub fn milestone(&mut self, t: SimTime, label: impl Into<String>) {
-        self.milestones.push((t, label.into()));
+        let label = label.into();
+        if let Some(sink) = self.sink.as_mut() {
+            sink.milestone(t, &label);
+            return;
+        }
+        self.milestones.push((t, label));
     }
 
     pub fn job_run(&mut self, node: &str, start: SimTime, end: SimTime) {
@@ -103,8 +171,12 @@ impl Recorder {
         self.job_run_id(id, start, end);
     }
 
-    /// Hot-path variant: no hashing, no cloning.
+    /// Hot-path variant: no hashing, no cloning (in-memory mode).
     pub fn job_run_id(&mut self, id: NodeId, start: SimTime, end: SimTime) {
+        if let Some(sink) = self.sink.as_mut() {
+            sink.job_run(&self.names.name(id), start, end);
+            return;
+        }
         self.job_runs.push((id, start, end));
     }
 

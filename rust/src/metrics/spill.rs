@@ -1,0 +1,453 @@
+//! Streaming per-shard metrics: spill recorder streams to disk during
+//! replay, deterministic k-way merge back afterwards.
+//!
+//! A [`ShardSink`] owns three append-only CSV spill files (state
+//! transitions, job runs, milestones) for one shard. Rows are written
+//! in record order — which, under the sharded engine, is the shard's
+//! dispatch order, so every stream is time-sorted within its file (the
+//! merge precondition). Virtual times are serialized as
+//! `f64::to_bits` so they roundtrip exactly, and fields go through
+//! [`crate::util::csv`] quoting, so names with commas survive.
+//!
+//! [`Recorder::merge_spills`] replays `k` spill sets through a
+//! streaming k-way merge keyed by `(time, shard, in-file order)` — the
+//! same key [`Recorder::merge_shards`] sorts by, pass order included
+//! (all transitions, then all job runs, then all milestones, so node
+//! first-appearance order matches) — holding only one pending row per
+//! shard in memory. `tests/shard_equivalence.rs` proves the two merge
+//! paths byte-identical down to fig10/fig11 output.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+use std::fmt;
+use std::fs::{self, File};
+use std::io::{BufRead, BufReader, BufWriter, Lines, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::ids::NodeNames;
+use crate::sim::SimTime;
+use crate::util::csv::{format_row, parse_row};
+
+use super::{DisplayState, Recorder};
+
+/// The finished spill set of one shard: three stream files plus the
+/// total bytes written. Produced by [`ShardSink::finish`], consumed by
+/// [`Recorder::merge_spills`].
+#[derive(Debug, Clone)]
+pub struct SpillFiles {
+    pub shard: u32,
+    pub states: PathBuf,
+    pub jobs: PathBuf,
+    pub notes: PathBuf,
+    /// Total bytes written across the three streams.
+    pub bytes: u64,
+}
+
+/// Streaming writer for one shard's metrics. Mirrors the recording
+/// surface of [`Recorder`] but appends every record to a spill file
+/// instead of a vector, so a shard's memory footprint stays flat no
+/// matter how long the replay runs. IO errors are deferred: the first
+/// one is kept and surfaced by [`ShardSink::finish`], keeping the
+/// record methods signature-compatible with the hot path.
+pub struct ShardSink {
+    states: BufWriter<File>,
+    jobs: BufWriter<File>,
+    notes: BufWriter<File>,
+    out: SpillFiles,
+    err: Option<std::io::Error>,
+}
+
+impl fmt::Debug for ShardSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ShardSink(shard {}, {} bytes)", self.out.shard,
+               self.out.bytes)
+    }
+}
+
+/// Exact-roundtrip serialization of a virtual time.
+fn time_bits(t: SimTime) -> String {
+    t.0.to_bits().to_string()
+}
+
+/// Inverse of [`time_bits`].
+fn parse_time_bits(s: &str) -> anyhow::Result<SimTime> {
+    let bits: u64 = s
+        .parse()
+        .map_err(|e| anyhow!("bad time bits {s:?} in spill row: {e}"))?;
+    Ok(SimTime(f64::from_bits(bits)))
+}
+
+impl ShardSink {
+    /// Open the three stream files for `shard` under `dir` (created if
+    /// missing). Existing files are truncated.
+    pub fn create(dir: impl AsRef<Path>, shard: u32)
+        -> anyhow::Result<ShardSink> {
+        let dir = dir.as_ref();
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating spill dir {dir:?}"))?;
+        let path = |stream: &str| {
+            dir.join(format!("shard-{shard:04}.{stream}.csv"))
+        };
+        let open = |p: &PathBuf| -> anyhow::Result<BufWriter<File>> {
+            let f = File::create(p)
+                .with_context(|| format!("creating spill file {p:?}"))?;
+            Ok(BufWriter::new(f))
+        };
+        let (states_p, jobs_p, notes_p) =
+            (path("states"), path("jobs"), path("notes"));
+        let mut sink = ShardSink {
+            states: open(&states_p)?,
+            jobs: open(&jobs_p)?,
+            notes: open(&notes_p)?,
+            out: SpillFiles {
+                shard,
+                states: states_p,
+                jobs: jobs_p,
+                notes: notes_p,
+                bytes: 0,
+            },
+            err: None,
+        };
+        sink.header();
+        Ok(sink)
+    }
+
+    fn header(&mut self) {
+        let (b, e) = (&mut self.out.bytes, &mut self.err);
+        emit(&mut self.states, b, e, &["t_bits", "node", "state"]);
+        emit(&mut self.jobs, b, e, &["end_bits", "node", "start_bits"]);
+        emit(&mut self.notes, b, e, &["t_bits", "label"]);
+    }
+
+    pub fn shard(&self) -> u32 {
+        self.out.shard
+    }
+
+    /// Bytes written so far (headers included, buffered or flushed).
+    pub fn bytes_written(&self) -> u64 {
+        self.out.bytes
+    }
+
+    /// Record a node display-state transition.
+    pub fn node_state(&mut self, t: SimTime, node: &str, s: DisplayState) {
+        emit(&mut self.states, &mut self.out.bytes, &mut self.err,
+             &[&time_bits(t), node, s.label()]);
+    }
+
+    /// Record a completed job run (the stream is keyed by end time, the
+    /// same key [`Recorder::merge_shards`] orders runs by).
+    pub fn job_run(&mut self, node: &str, start: SimTime, end: SimTime) {
+        emit(&mut self.jobs, &mut self.out.bytes, &mut self.err,
+             &[&time_bits(end), node, &time_bits(start)]);
+    }
+
+    /// Record a narrative milestone.
+    pub fn milestone(&mut self, t: SimTime, label: &str) {
+        emit(&mut self.notes, &mut self.out.bytes, &mut self.err,
+             &[&time_bits(t), label]);
+    }
+
+    /// Flush everything and hand back the spill set; surfaces the first
+    /// deferred IO error if any write failed.
+    pub fn finish(self) -> anyhow::Result<SpillFiles> {
+        let ShardSink { mut states, mut jobs, mut notes, out, err } = self;
+        if let Some(e) = err {
+            return Err(anyhow!("metrics spill write (shard {}): {e}",
+                               out.shard));
+        }
+        states.flush().context("flushing states spill")?;
+        jobs.flush().context("flushing jobs spill")?;
+        notes.flush().context("flushing notes spill")?;
+        Ok(out)
+    }
+}
+
+/// Append one CSV record; on failure keep the first error and drop the
+/// rest (surfaced at [`ShardSink::finish`]). Spilled fields must be
+/// newline-free — the readers are line-based, and `format_row`'s
+/// quoting cannot hide a raw line break from them — so embedded
+/// newlines are rejected through the same deferred-error path rather
+/// than silently corrupting the stream.
+fn emit(w: &mut BufWriter<File>, bytes: &mut u64,
+        err: &mut Option<std::io::Error>, row: &[&str]) {
+    if err.is_some() {
+        return;
+    }
+    if row.iter().any(|f| f.contains(['\n', '\r'])) {
+        *err = Some(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "spill fields must be newline-free (readers are line-based)",
+        ));
+        return;
+    }
+    let line = format_row(row);
+    *bytes += line.len() as u64 + 1;
+    if let Err(e) = writeln!(w, "{line}") {
+        *err = Some(e);
+    }
+}
+
+/// `f64` time wrapped with the same total order the in-memory merge
+/// sorts by (`total_cmp`).
+#[derive(PartialEq)]
+struct TotalTime(f64);
+
+impl Eq for TotalTime {}
+
+impl PartialOrd for TotalTime {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TotalTime {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// One shard's stream cursor: line iterator plus the parsed row whose
+/// key currently sits in the merge heap.
+struct Cursor {
+    lines: Lines<BufReader<File>>,
+    pending: Option<Vec<String>>,
+    path: PathBuf,
+}
+
+impl Cursor {
+    fn open(path: &Path) -> anyhow::Result<Cursor> {
+        let f = File::open(path)
+            .with_context(|| format!("opening spill file {path:?}"))?;
+        let mut lines = BufReader::new(f).lines();
+        // Skip the header row.
+        if let Some(h) = lines.next() {
+            h.with_context(|| format!("reading spill header {path:?}"))?;
+        }
+        Ok(Cursor { lines, pending: None, path: path.to_path_buf() })
+    }
+
+    /// Read the next row; returns its merge-key time, or `None` at EOF.
+    fn advance(&mut self) -> anyhow::Result<Option<f64>> {
+        match self.lines.next() {
+            None => {
+                self.pending = None;
+                Ok(None)
+            }
+            Some(line) => {
+                let line = line.with_context(
+                    || format!("reading spill file {:?}", self.path))?;
+                let fields = parse_row(&line);
+                let t = parse_time_bits(fields.first().map(String::as_str)
+                        .ok_or_else(|| anyhow!("empty spill row"))?)
+                    .with_context(|| format!("in {:?}", self.path))?;
+                self.pending = Some(fields);
+                Ok(Some(t.0))
+            }
+        }
+    }
+}
+
+/// Streaming k-way merge of one stream across shards, ordered by
+/// `(time, shard slice index, in-file order)`. Each cursor holds one
+/// pending row, so memory is O(shards) regardless of stream length.
+/// Precondition: each file is time-sorted (true for DES dispatch-order
+/// recording; [`Recorder::merge_shards`] re-sorts and therefore also
+/// accepts unsorted input — the property suite runs on engine output,
+/// where both agree).
+fn merge_stream(
+    paths: &[&Path],
+    mut apply: impl FnMut(&[String]) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    let mut cursors = Vec::with_capacity(paths.len());
+    let mut heap: BinaryHeap<Reverse<(TotalTime, usize)>> =
+        BinaryHeap::new();
+    for (i, &p) in paths.iter().enumerate() {
+        let mut cur = Cursor::open(p)?;
+        if let Some(t) = cur.advance()? {
+            heap.push(Reverse((TotalTime(t), i)));
+        }
+        cursors.push(cur);
+    }
+    while let Some(Reverse((_, i))) = heap.pop() {
+        let fields = cursors[i]
+            .pending
+            .take()
+            .expect("heap key without a pending row");
+        apply(&fields)?;
+        if let Some(t) = cursors[i].advance()? {
+            heap.push(Reverse((TotalTime(t), i)));
+        }
+    }
+    Ok(())
+}
+
+fn field<'a>(row: &'a [String], i: usize, what: &str)
+    -> anyhow::Result<&'a str> {
+    row.get(i)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("spill row missing field {i} ({what})"))
+}
+
+impl Recorder {
+    /// Streaming replacement for [`Recorder::merge_shards`]: k-way
+    /// merge the per-shard spill sets into one recorder, byte-identical
+    /// to the in-memory merge of the recorders that produced them.
+    /// Shard order is the slice order, mirroring `merge_shards`.
+    pub fn merge_spills(names: NodeNames, spills: &[SpillFiles])
+        -> anyhow::Result<Recorder> {
+        let mut merged = Recorder::with_names(names);
+        let states: Vec<&Path> =
+            spills.iter().map(|s| s.states.as_path()).collect();
+        merge_stream(&states, |row| {
+            let t = parse_time_bits(field(row, 0, "time")?)?;
+            let node = field(row, 1, "node")?;
+            let label = field(row, 2, "state")?;
+            let s = DisplayState::from_label(label).ok_or_else(
+                || anyhow!("unknown display state {label:?} in spill"))?;
+            merged.node_state(t, node, s);
+            Ok(())
+        })?;
+        let jobs: Vec<&Path> =
+            spills.iter().map(|s| s.jobs.as_path()).collect();
+        merge_stream(&jobs, |row| {
+            let end = parse_time_bits(field(row, 0, "end")?)?;
+            let node = field(row, 1, "node")?;
+            let start = parse_time_bits(field(row, 2, "start")?)?;
+            merged.job_run(node, start, end);
+            Ok(())
+        })?;
+        let notes: Vec<&Path> =
+            spills.iter().map(|s| s.notes.as_path()).collect();
+        merge_stream(&notes, |row| {
+            let t = parse_time_bits(field(row, 0, "time")?)?;
+            merged.milestone(t, field(row, 1, "label")?);
+            Ok(())
+        })?;
+        Ok(merged)
+    }
+
+    /// Write this in-memory recorder out as one shard's spill set,
+    /// preserving record order — the bridge that lets the two merge
+    /// paths be property-compared against each other.
+    pub fn spill_to(&self, dir: impl AsRef<Path>, shard: u32)
+        -> anyhow::Result<SpillFiles> {
+        let mut sink = ShardSink::create(dir, shard)?;
+        for &(t, id, s) in &self.transitions {
+            sink.node_state(t, &self.names.name(id), s);
+        }
+        for &(id, s, e) in &self.job_runs {
+            sink.job_run(&self.names.name(id), s, e);
+        }
+        for (t, label) in &self.milestones {
+            sink.milestone(*t, label);
+        }
+        sink.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime(s)
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("evhc_spill_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// Two shard recorders with awkward names and overlapping times —
+    /// the spill roundtrip must agree with the in-memory merge exactly.
+    #[test]
+    fn spill_merge_matches_in_memory_merge() {
+        let mut a = Recorder::new();
+        a.node_state(t(0.0), "s0,comma", DisplayState::Idle);
+        a.node_state(t(10.0), "s0,comma", DisplayState::Used);
+        a.job_run("s0,comma", t(10.0), t(20.0));
+        a.milestone(t(10.0), "s0 \"started\"");
+        let mut b = Recorder::new();
+        b.node_state(t(5.0), "s1-n1", DisplayState::Idle);
+        b.node_state(t(10.0), "s1-n1", DisplayState::Used);
+        b.job_run("s1-n1", t(10.0), t(20.0));
+        b.milestone(t(10.0), "s1 started");
+
+        let dir = tmp("unit_merge");
+        let spills = vec![
+            a.spill_to(&dir, 0).expect("spill a"),
+            b.spill_to(&dir, 1).expect("spill b"),
+        ];
+        assert!(spills.iter().all(|s| s.bytes > 0));
+
+        let mem = Recorder::merge_shards(NodeNames::new(), &[a, b]);
+        let streamed =
+            Recorder::merge_spills(NodeNames::new(), &spills).expect("merge");
+        assert_eq!(mem.transitions_named(), streamed.transitions_named());
+        assert_eq!(mem.milestones, streamed.milestones);
+        assert_eq!(mem.node_names(), streamed.node_names());
+        assert_eq!(mem.fig10_usage(5.0, t(25.0)).to_csv(),
+                   streamed.fig10_usage(5.0, t(25.0)).to_csv());
+        assert_eq!(mem.fig11_states(5.0, t(25.0)).to_csv(),
+                   streamed.fig11_states(5.0, t(25.0)).to_csv());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn time_bits_roundtrip_is_exact() {
+        for v in [0.0, 1.5, 1.0e-12, 12345.678901234567, f64::MAX] {
+            let enc = time_bits(SimTime(v));
+            let back = parse_time_bits(&enc).expect("roundtrip");
+            assert_eq!(back.0.to_bits(), v.to_bits(), "{v}");
+        }
+        assert!(parse_time_bits("not-bits").is_err());
+    }
+
+    #[test]
+    fn spill_recorder_mode_streams_instead_of_accumulating() {
+        let dir = tmp("unit_mode");
+        let sink = ShardSink::create(&dir, 3).expect("sink");
+        let names = NodeNames::new();
+        let mut rec = Recorder::with_spill(names.clone(), sink);
+        assert!(rec.is_spilling());
+        rec.node_state(t(1.0), "wn-1", DisplayState::Used);
+        rec.job_run("wn-1", t(1.0), t(2.0));
+        rec.milestone(t(2.0), "done");
+        // Nothing accumulated in memory...
+        assert!(rec.transitions.is_empty());
+        assert!(rec.job_runs.is_empty());
+        assert!(rec.milestones.is_empty());
+        // ...but the merged view sees everything.
+        let files = rec.finish_spill().expect("spilling").expect("io");
+        assert!(!rec.is_spilling());
+        assert_eq!(files.shard, 3);
+        let merged =
+            Recorder::merge_spills(names, &[files]).expect("merge");
+        assert_eq!(merged.node_names(), vec!["wn-1"]);
+        assert_eq!(merged.busy_secs_per_node()["wn-1"], 1.0);
+        assert_eq!(merged.milestones,
+                   vec![(t(2.0), "done".to_string())]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn newline_in_field_is_rejected_at_finish() {
+        let dir = tmp("unit_newline");
+        let mut sink = ShardSink::create(&dir, 0).expect("sink");
+        sink.milestone(t(1.0), "line one\nline two");
+        let err = sink.finish().expect_err("newline must be rejected");
+        assert!(err.to_string().contains("newline-free"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_spills_of_nothing_is_empty() {
+        let merged = Recorder::merge_spills(NodeNames::new(), &[])
+            .expect("empty merge");
+        assert!(merged.transitions.is_empty());
+        assert!(merged.node_names().is_empty());
+    }
+}

@@ -37,6 +37,35 @@
 //! asserts it); with a zero lookahead the engine degrades gracefully to
 //! single-queue stepping and stays exactly equivalent.
 //!
+//! ## Work stealing
+//!
+//! [`run_sharded`] assigns site shards to threads in fixed contiguous
+//! chunks, so one *hot* shard (a skewed back-end mix concentrates most
+//! of the workload on one site) serializes behind the cold shards that
+//! share its chunk while other workers idle. [`run_sharded_stealing`]
+//! fixes that: each busy shard's window `[T, barrier)` becomes one
+//! sequential *chain* of time-sliced segments, all chains go onto a
+//! shared injector (a mutex-protected deque), and every worker thread
+//! steals the next ready segment — from any shard — the moment it
+//! finishes its previous one. A hot shard therefore never waits behind
+//! cold shards, and cold shards spread across the remaining workers.
+//!
+//! **Segment-boundary determinism.** Segment cuts are computed from the
+//! shard heap's *initially pending* dispatch times at window start
+//! (every `segment_events`-th sorted time becomes a cut), i.e. purely
+//! from queue state that is itself deterministic — never from thread
+//! timing. A segment with end-cut `c` drains exactly the events with
+//! `t < c`, so all events at one timestamp land in one segment and
+//! events a handler schedules mid-window fall into whichever later
+//! segment covers their time. Because (a) shards share no state, (b)
+//! each chain is executed strictly in segment order by at most one
+//! worker at a time, and (c) cross-shard control emissions are buffered
+//! and flushed in origin `(time, shard)` dispatch order at the barrier,
+//! the per-shard event sequences — and thus the merged stream — are
+//! byte-identical to [`run_sharded_serial`] no matter which worker
+//! steals which segment. `tests/shard_equivalence.rs` proves it on
+//! skew-heavy randomized worlds with stealing on and off.
+//!
 //! Worlds whose handlers genuinely need global state on every event
 //! (e.g. the full [`crate::cluster::HybridCluster`] reproduction)
 //! implement [`MergedWorld`] instead and replay through
@@ -45,7 +74,8 @@
 //! randomized scenarios down to byte-identical figure output.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::{Condvar, Mutex};
 
 use super::SimTime;
 
@@ -196,6 +226,23 @@ impl<E> ShardHeap<E> {
             return Some((entry.at, entry.seq));
         }
         None
+    }
+
+    /// Dispatch times of live pending entries with `t < below` and
+    /// `t <= horizon`, appended to `out` in no particular order. This
+    /// snapshot of queue state — not thread timing — is what the
+    /// work-stealing engine cuts into segments, which is why stealing
+    /// cannot perturb the merge order.
+    pub(crate) fn pending_times(&self, below: f64, horizon: f64,
+                                out: &mut Vec<f64>) {
+        for e in self.heap.iter() {
+            if self.gens[e.slot as usize] == e.gen
+                && e.at.0 < below
+                && e.at.0 <= horizon
+            {
+                out.push(e.at.0);
+            }
+        }
     }
 
     pub(crate) fn pop(&mut self) -> Option<(SimTime, u64, E)> {
@@ -704,6 +751,258 @@ where
     q.now()
 }
 
+// ---------------------------------------------------------------------
+// Work-stealing parallel engine
+// ---------------------------------------------------------------------
+
+/// Configuration for [`run_sharded_stealing`].
+#[derive(Debug, Clone, Copy)]
+pub struct StealConfig {
+    /// Worker threads (clamped per window to the number of busy shards).
+    pub threads: usize,
+    /// Target number of initially-pending events per stolen segment;
+    /// windows with at most this many pending events stay one segment.
+    pub segment_events: usize,
+}
+
+impl StealConfig {
+    /// `threads` workers with the default segment granularity.
+    pub fn new(threads: usize) -> StealConfig {
+        StealConfig { threads, segment_events: 1024 }
+    }
+}
+
+/// Deterministic segment end-cuts for one shard's window ending at
+/// `barrier`. `times` holds the shard's initially-pending dispatch
+/// times inside the window (any order; sorted in place): every
+/// `per_seg`-th sorted time becomes a cut, so each segment starts with
+/// roughly `per_seg` of the initially-pending events. Cuts are strictly
+/// ascending, never split a timestamp across segments (a drain up to
+/// cut `c` takes exactly the events with `t < c`), and the final bound
+/// is always `barrier`.
+fn segment_bounds(times: &mut [f64], barrier: f64, per_seg: usize)
+    -> Vec<f64> {
+    let mut bounds = Vec::new();
+    if times.len() > per_seg {
+        times.sort_unstable_by(|a, b| a.total_cmp(b));
+        let mut i = per_seg;
+        while i < times.len() {
+            let cut = times[i];
+            // Skip duplicate cuts (runs of equal timestamps) and a cut
+            // that would leave the first segment empty.
+            if cut > times[0] && bounds.last().map_or(true, |&b| cut > b) {
+                bounds.push(cut);
+            }
+            i += per_seg;
+        }
+    }
+    bounds.push(barrier);
+    bounds
+}
+
+/// One shard's window as a sequential chain of segments. At most one
+/// worker holds a chain at a time; ownership travels through the
+/// injector between segments, which is what lets an idle worker steal
+/// the tail of a hot shard without ever reordering its events.
+struct Chain<'a, S: SiteShard> {
+    shard: u32,
+    site: &'a mut S,
+    heap: &'a mut ShardHeap<S::Event>,
+    /// Ascending segment end-cuts; the last is the window barrier.
+    bounds: Vec<f64>,
+    /// Index of the next segment to drain.
+    next: usize,
+}
+
+/// The shared injector: ready chains plus the count of chains not yet
+/// retired (queued *or* held by a worker — the distinction is what the
+/// idle-worker wait condition needs).
+struct StealState<'a, S: SiteShard> {
+    ready: VecDeque<Chain<'a, S>>,
+    active: usize,
+}
+
+/// Steal the next ready chain, blocking while chains are still held by
+/// other workers (they may re-inject their next segment). Returns
+/// `None` once every chain has retired.
+fn steal_next<'a, S: SiteShard>(
+    state: &Mutex<StealState<'a, S>>,
+    cv: &Condvar,
+) -> Option<Chain<'a, S>> {
+    let mut g = state.lock().expect("steal state poisoned");
+    loop {
+        if let Some(c) = g.ready.pop_front() {
+            return Some(c);
+        }
+        if g.active == 0 {
+            return None;
+        }
+        g = cv.wait(g).expect("steal state poisoned");
+    }
+}
+
+/// One worker: steal a ready segment, drain it, re-inject the chain's
+/// next segment (or retire the chain), repeat until no work remains.
+/// Returns the max dispatched time and the buffered control emissions.
+fn steal_worker<'a, S, E>(
+    state: &Mutex<StealState<'a, S>>,
+    cv: &Condvar,
+    horizon: f64,
+    lookahead: f64,
+) -> (f64, Vec<ControlEmission<E>>)
+where
+    S: SiteShard<Event = E>,
+    E: ShardEvent + Send,
+{
+    let mut out: Vec<ControlEmission<E>> = Vec::new();
+    let mut last = f64::NEG_INFINITY;
+    while let Some(mut chain) = steal_next(state, cv) {
+        let end = chain.bounds[chain.next];
+        let l = drain_window(chain.site, chain.heap, chain.shard, end,
+                             horizon, lookahead, &mut out);
+        if l > last {
+            last = l;
+        }
+        chain.next += 1;
+        let mut g = state.lock().expect("steal state poisoned");
+        if chain.next < chain.bounds.len() {
+            g.ready.push_back(chain);
+            drop(g);
+            cv.notify_one();
+        } else {
+            g.active -= 1;
+            if g.active == 0 {
+                drop(g);
+                cv.notify_all();
+            }
+        }
+    }
+    (last, out)
+}
+
+/// The work-stealing parallel engine: identical window/barrier
+/// semantics to [`run_sharded`], but site windows are drained as
+/// segment chains stolen from a shared injector instead of fixed
+/// per-thread chunks, so a hot shard's tail never serializes behind
+/// cold shards. Produces exactly the event stream of
+/// [`run_sharded_serial`] (see the module docs for the argument).
+pub fn run_sharded_stealing<C, S, E>(
+    control: &mut C,
+    sites: &mut [S],
+    q: &mut ShardedQueue<E>,
+    horizon: SimTime,
+    cfg: StealConfig,
+) -> SimTime
+where
+    C: ControlPlane<Site = S>,
+    S: SiteShard<Event = E>,
+    E: ShardEvent + Send,
+{
+    assert_eq!(sites.len() + 1, q.shards.len(),
+               "one site state per site shard");
+    let per_seg = cfg.segment_events.max(1);
+    let mut times: Vec<f64> = Vec::new();
+    loop {
+        let Some((at, shard)) = q.peek() else { break };
+        if at.0 > horizon.0 {
+            break;
+        }
+        if shard == 0 {
+            let (t, ev) = q.pop_from(0).expect("peeked event vanished");
+            control.handle(sites, t, ev, q);
+            continue;
+        }
+        let lookahead = control.lookahead().max(0.0);
+        let t_start = at.0;
+        let mut barrier = if lookahead.is_finite() {
+            t_start + lookahead
+        } else {
+            f64::INFINITY
+        };
+        if let Some((tc, _)) = q.shards[0].peek() {
+            barrier = barrier.min(tc.0);
+        }
+        if barrier <= t_start {
+            // Zero lookahead: fall back to exact single-queue stepping.
+            step_site(sites, q, shard, lookahead);
+            continue;
+        }
+        let horizon_t = horizon.0;
+        let mut emissions: Vec<ControlEmission<E>> = Vec::new();
+        let mut max_t = f64::NEG_INFINITY;
+        {
+            let (_control_shard, site_heaps) = q.shards.split_at_mut(1);
+            // One segment chain per shard with work in this window.
+            let mut chains: VecDeque<Chain<'_, S>> = VecDeque::new();
+            for (i, (site, heap)) in sites
+                .iter_mut()
+                .zip(site_heaps.iter_mut())
+                .enumerate()
+            {
+                match heap.peek() {
+                    Some((t, _)) if t.0 < barrier && t.0 <= horizon_t => {}
+                    _ => continue,
+                }
+                // live_count() bounds the in-window pending count from
+                // above, so small heaps skip the O(pending) time scan
+                // entirely — their window is a single segment either
+                // way.
+                let bounds = if heap.live_count() <= per_seg {
+                    vec![barrier]
+                } else {
+                    times.clear();
+                    heap.pending_times(barrier, horizon_t, &mut times);
+                    segment_bounds(&mut times, barrier, per_seg)
+                };
+                chains.push_back(Chain {
+                    shard: (1 + i) as u32,
+                    site,
+                    heap,
+                    bounds,
+                    next: 0,
+                });
+            }
+            let workers = cfg.threads.max(1).min(chains.len());
+            if workers <= 1 {
+                // One worker: drain each chain's whole window in place.
+                for c in chains {
+                    let l = drain_window(c.site, c.heap, c.shard, barrier,
+                                         horizon_t, lookahead,
+                                         &mut emissions);
+                    if l > max_t {
+                        max_t = l;
+                    }
+                }
+            } else {
+                let active = chains.len();
+                let state = Mutex::new(StealState { ready: chains, active });
+                let cv = Condvar::new();
+                std::thread::scope(|scope| {
+                    let mut handles = Vec::new();
+                    for _ in 0..workers {
+                        handles.push(scope.spawn(|| {
+                            steal_worker(&state, &cv, horizon_t, lookahead)
+                        }));
+                    }
+                    for h in handles {
+                        let (last, out) =
+                            h.join().expect("steal worker panicked");
+                        if last > max_t {
+                            max_t = last;
+                        }
+                        emissions.extend(out);
+                    }
+                });
+            }
+        }
+        if max_t > q.now.0 {
+            q.now = SimTime(max_t);
+        }
+        flush_control(q, emissions);
+    }
+    q.now()
+}
+
 /// A sensible worker count: one thread per site shard, capped by the
 /// machine's available parallelism.
 pub fn default_threads(sites: usize) -> usize {
@@ -883,6 +1182,86 @@ mod tests {
         for (a, b) in s1.iter().zip(&s2) {
             assert_eq!(a.log, b.log);
         }
+    }
+
+    fn run_stealing_toy(lookahead: f64, cfg: StealConfig)
+        -> (TControl, Vec<TSite>, u64) {
+        let (mut c, mut s) = toy_world(lookahead);
+        let mut q: ShardedQueue<TEv> = ShardedQueue::new(s.len());
+        q.schedule_at(SimTime(0.0), TEv::Ctl(99));
+        run_sharded_stealing(&mut c, &mut s, &mut q,
+                             SimTime(f64::INFINITY), cfg);
+        (c, s, q.dispatched())
+    }
+
+    #[test]
+    fn stealing_replay_matches_serial() {
+        // Finest possible segmentation (1 event per segment) stresses
+        // the chain/injector machinery hardest.
+        for seg in [1usize, 2, 1024] {
+            for lookahead in [0.0, 10.0] {
+                let ((c1, s1, d1), _) = run_both(lookahead);
+                let cfg = StealConfig { threads: 3, segment_events: seg };
+                let (c2, s2, d2) = run_stealing_toy(lookahead, cfg);
+                assert_eq!(c1.log, c2.log,
+                           "control log (seg={seg}, la={lookahead})");
+                assert_eq!(d1, d2);
+                for (a, b) in s1.iter().zip(&s2) {
+                    assert_eq!(a.log, b.log,
+                               "site {} (seg={seg}, la={lookahead})",
+                               a.site);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_respects_horizon() {
+        let (mut c1, mut s1) = toy_world(10.0);
+        let mut q1: ShardedQueue<TEv> = ShardedQueue::new(s1.len());
+        q1.schedule_at(SimTime(0.0), TEv::Ctl(99));
+        let end1 = run_sharded_serial(&mut c1, &mut s1, &mut q1,
+                                      SimTime(4.0));
+        let (mut c2, mut s2) = toy_world(10.0);
+        let mut q2: ShardedQueue<TEv> = ShardedQueue::new(s2.len());
+        q2.schedule_at(SimTime(0.0), TEv::Ctl(99));
+        let end2 = run_sharded_stealing(
+            &mut c2, &mut s2, &mut q2, SimTime(4.0),
+            StealConfig { threads: 2, segment_events: 1 });
+        assert_eq!(end1.0, end2.0);
+        assert_eq!(c1.log, c2.log);
+        for (a, b) in s1.iter().zip(&s2) {
+            assert_eq!(a.log, b.log);
+        }
+        assert!(!q2.is_empty(), "horizon left events queued");
+    }
+
+    #[test]
+    fn segment_bounds_are_ascending_and_end_at_barrier() {
+        let mut times = vec![5.0, 1.0, 3.0, 3.0, 2.0, 4.0, 1.0];
+        let bounds = segment_bounds(&mut times, 10.0, 2);
+        assert_eq!(*bounds.last().unwrap(), 10.0);
+        for w in bounds.windows(2) {
+            assert!(w[0] < w[1], "bounds not ascending: {bounds:?}");
+        }
+        // Cuts come from the sorted pending times, never below the
+        // first (the first segment is never empty).
+        assert!(bounds[..bounds.len() - 1]
+                    .iter()
+                    .all(|&b| b > 1.0 && b < 10.0));
+    }
+
+    #[test]
+    fn segment_bounds_degenerate_cases() {
+        // Few events: single segment.
+        let mut times = vec![2.0, 1.0];
+        assert_eq!(segment_bounds(&mut times, 9.0, 4), vec![9.0]);
+        // All events at one timestamp: a cut would empty the first
+        // segment, so the window stays whole.
+        let mut same = vec![3.0; 10];
+        assert_eq!(segment_bounds(&mut same, 9.0, 2), vec![9.0]);
+        // Empty window.
+        assert_eq!(segment_bounds(&mut [], 9.0, 2), vec![9.0]);
     }
 
     #[test]

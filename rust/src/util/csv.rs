@@ -1,8 +1,59 @@
-//! Minimal CSV writing (quoting-aware) for bench/figure outputs.
+//! Minimal CSV writing and record parsing (quoting-aware) for
+//! bench/figure outputs and the metrics spill files.
 
 use std::fmt::Write as _;
 use std::fs;
 use std::path::Path;
+
+/// Quote one CSV field if it needs it (commas, quotes, newlines).
+fn quote(field: &str) -> String {
+    if field.contains([',', '"', '\n']) {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Format one CSV record (quoting-aware, no trailing newline). The
+/// exact inverse of [`parse_row`] for newline-free fields.
+pub fn format_row<S: AsRef<str>>(fields: &[S]) -> String {
+    let quoted: Vec<String> =
+        fields.iter().map(|f| quote(f.as_ref())).collect();
+    quoted.join(",")
+}
+
+/// Parse one CSV record produced by [`format_row`] / [`Table::to_csv`].
+/// Handles quoted fields with embedded commas and doubled quotes;
+/// fields containing raw newlines are out of scope (the spill readers
+/// are line-based).
+pub fn parse_row(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                cur.push(c);
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => out.push(std::mem::take(&mut cur)),
+                _ => cur.push(c),
+            }
+        }
+    }
+    out.push(cur);
+    out
+}
 
 /// In-memory CSV table with a fixed header.
 #[derive(Debug, Clone)]
@@ -41,25 +92,12 @@ impl Table {
         self.rows.is_empty()
     }
 
-    fn quote(field: &str) -> String {
-        if field.contains([',', '"', '\n']) {
-            format!("\"{}\"", field.replace('"', "\"\""))
-        } else {
-            field.to_string()
-        }
-    }
-
     /// Render to CSV text.
     pub fn to_csv(&self) -> String {
         let mut s = String::new();
-        let fmt_row = |row: &[String], s: &mut String| {
-            let joined: Vec<String> =
-                row.iter().map(|f| Self::quote(f)).collect();
-            let _ = writeln!(s, "{}", joined.join(","));
-        };
-        fmt_row(&self.header, &mut s);
+        let _ = writeln!(s, "{}", format_row(&self.header));
         for r in &self.rows {
-            fmt_row(r, &mut s);
+            let _ = writeln!(s, "{}", format_row(r));
         }
         s
     }
@@ -133,6 +171,29 @@ mod tests {
         let lines: Vec<&str> = txt.lines().collect();
         assert_eq!(lines.len(), 3);
         assert!(lines[1].starts_with("---"));
+    }
+
+    #[test]
+    fn format_parse_roundtrip() {
+        let rows: Vec<Vec<&str>> = vec![
+            vec!["plain", "fields", "only"],
+            vec!["with,comma", "say \"hi\"", ""],
+            vec!["", "", ""],
+            vec!["a\"b,c\"d", "x"],
+        ];
+        for row in rows {
+            let line = format_row(&row);
+            let back = parse_row(&line);
+            assert_eq!(back, row, "roundtrip of {line:?}");
+        }
+    }
+
+    #[test]
+    fn parse_row_splits_unquoted() {
+        assert_eq!(parse_row("a,b,c"), vec!["a", "b", "c"]);
+        assert_eq!(parse_row(""), vec![""]);
+        assert_eq!(parse_row("a,,c"), vec!["a", "", "c"]);
+        assert_eq!(parse_row("\"x,y\",z"), vec!["x,y", "z"]);
     }
 
     #[test]

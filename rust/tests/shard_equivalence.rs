@@ -1,24 +1,42 @@
-//! The sharded engine's parallel windowed replay must be byte-for-byte
-//! equivalent to the single-queue (serial deterministic merge) replay:
-//! same per-shard dispatch order, same control-plane event stream, and
-//! byte-identical figure outputs from the merged per-shard recorders —
-//! on randomized multi-site scenarios. Plus model-checked EventQueue
-//! generation-slot cancellation invariants under randomized
-//! schedule/cancel/pop interleavings.
+//! The sharded engine's parallel windowed replay — chunked *and*
+//! work-stealing — must be byte-for-byte equivalent to the single-queue
+//! (serial deterministic merge) replay: same per-shard dispatch order,
+//! same control-plane event stream, and byte-identical figure outputs
+//! from the merged per-shard recorders — on randomized multi-site
+//! scenarios, including skew-heavy worlds (one hot site carrying up to
+//! 32× the jobs of a cold site, the regime work stealing exists for).
+//! The streaming spill merge must reproduce `Recorder::merge_shards`
+//! byte-for-byte. Plus model-checked EventQueue generation-slot
+//! cancellation invariants under randomized schedule/cancel/pop
+//! interleavings.
+//!
+//! `EVHC_PROPTEST_CASES` bounds every property's case count (the CI
+//! quick mode sets it low; unset, each property uses its own default).
 
 use evhc::ids::NodeNames;
 use evhc::lrms::core::{BatchCore, Placement};
 use evhc::lrms::JobId;
-use evhc::metrics::{DisplayState, Recorder};
-use evhc::sim::shard::{run_sharded, run_sharded_serial, ControlPlane,
-                       SiteCtx, SiteShard};
+use evhc::metrics::{DisplayState, Recorder, ShardSink, SpillFiles};
+use evhc::sim::shard::{run_sharded, run_sharded_serial,
+                       run_sharded_stealing, ControlPlane, SiteCtx,
+                       SiteShard, StealConfig};
 use evhc::sim::{EventQueue, ShardEvent, ShardKey, ShardedQueue, SimTime};
 use evhc::util::prng::Prng;
 use evhc::util::proptest::check_n;
 
+/// Per-property case budget, bounded by `EVHC_PROPTEST_CASES` when set
+/// (the CI quick mode caps the skew-heavy properties this way).
+fn cases(default: u32) -> u32 {
+    std::env::var("EVHC_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
 // ---------------------------------------------------------------------
 // Randomized sharded world: per-site LRMS core + recorder, control
-// fan-out blocks, site→control progress reports.
+// fan-out blocks (optionally skewed towards hot site 0), site→control
+// progress reports.
 // ---------------------------------------------------------------------
 
 #[derive(Debug, Clone)]
@@ -120,6 +138,9 @@ impl SiteShard for PropSite {
 
 struct PropControl {
     sites_n: u32,
+    /// Hot-site multiplier: site 0 receives `hot`× the block jobs of
+    /// each cold site (1 = uniform world).
+    hot: u32,
     lookahead: f64,
     /// Control dispatch log: (time bits, site-or-MAX, payload).
     log: Vec<(u64, u32, u32)>,
@@ -134,7 +155,12 @@ impl ControlPlane for PropControl {
             PEv::Block { per_site } => {
                 self.log.push((t.0.to_bits(), u32::MAX, per_site));
                 for s in 0..self.sites_n {
-                    q.schedule_at(t, PEv::Submit { site: s, n: per_site });
+                    let n = if s == 0 {
+                        per_site * self.hot
+                    } else {
+                        per_site
+                    };
+                    q.schedule_at(t, PEv::Submit { site: s, n });
                 }
             }
             PEv::Progress { site, done } => {
@@ -156,10 +182,28 @@ struct Scn {
     slots: u32,
     jobs_per_block: u32,
     blocks: u32,
+    /// Hot-site multiplier (1 = uniform).
+    hot: u32,
     lookahead: f64,
     report_every: u32,
     threads: usize,
+    /// Steal-segment granularity: tiny values force many segments per
+    /// window, stressing the chain/injector machinery.
+    segment_events: usize,
     seed: u64,
+}
+
+impl Scn {
+    fn total_jobs(&self) -> u32 {
+        (self.sites - 1 + self.hot) * self.jobs_per_block * self.blocks
+    }
+
+    fn steal_cfg(&self) -> StealConfig {
+        StealConfig {
+            threads: self.threads,
+            segment_events: self.segment_events,
+        }
+    }
 }
 
 fn gen_scn(r: &mut Prng) -> Scn {
@@ -169,9 +213,30 @@ fn gen_scn(r: &mut Prng) -> Scn {
         slots: 1 + r.next_below(2) as u32,
         jobs_per_block: 2 + r.next_below(20) as u32,
         blocks: 1 + r.next_below(3) as u32,
+        hot: 1,
         lookahead: if r.chance(0.5) { 3.0 } else { 47.0 },
         report_every: 1 + r.next_below(4) as u32,
         threads: 2 + r.next_below(3) as usize,
+        segment_events: 1 + r.next_below(8) as usize,
+        seed: r.next_u64(),
+    }
+}
+
+/// Skew-heavy worlds: one hot site + 2–5 cold sites, the hot site
+/// carrying 8–32× the jobs — the regime where the chunked engine
+/// serializes and work stealing must not change a single byte.
+fn gen_skew(r: &mut Prng) -> Scn {
+    Scn {
+        sites: 3 + r.next_below(4) as u32,
+        nodes_per_site: 1 + r.next_below(3) as u32,
+        slots: 1 + r.next_below(2) as u32,
+        jobs_per_block: 2 + r.next_below(8) as u32,
+        blocks: 1 + r.next_below(3) as u32,
+        hot: 8 + r.next_below(25) as u32,
+        lookahead: if r.chance(0.5) { 3.0 } else { 47.0 },
+        report_every: 1 + r.next_below(4) as u32,
+        threads: 2 + r.next_below(3) as usize,
+        segment_events: 1 + r.next_below(8) as usize,
         seed: r.next_u64(),
     }
 }
@@ -204,9 +269,17 @@ fn build(scn: &Scn) -> (PropControl, Vec<PropSite>, ShardedQueue<PEv>) {
     }
     (PropControl {
         sites_n: scn.sites,
+        hot: scn.hot,
         lookahead: scn.lookahead,
         log: Vec::new(),
     }, sites, q)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Engine {
+    Serial,
+    Parallel,
+    Stealing,
 }
 
 /// Everything observable about a finished run, figures included.
@@ -221,14 +294,21 @@ struct Outcome {
     fig11: String,
 }
 
-fn run(scn: &Scn, parallel: bool) -> Outcome {
+fn run(scn: &Scn, engine: Engine) -> Outcome {
     let (mut control, mut sites, mut q) = build(scn);
-    if parallel {
-        run_sharded(&mut control, &mut sites, &mut q,
-                    SimTime(f64::INFINITY), scn.threads);
-    } else {
-        run_sharded_serial(&mut control, &mut sites, &mut q,
-                           SimTime(f64::INFINITY));
+    match engine {
+        Engine::Serial => {
+            run_sharded_serial(&mut control, &mut sites, &mut q,
+                               SimTime(f64::INFINITY));
+        }
+        Engine::Parallel => {
+            run_sharded(&mut control, &mut sites, &mut q,
+                        SimTime(f64::INFINITY), scn.threads);
+        }
+        Engine::Stealing => {
+            run_sharded_stealing(&mut control, &mut sites, &mut q,
+                                 SimTime(f64::INFINITY), scn.steal_cfg());
+        }
     }
     let dispatched = q.dispatched();
     let completed = sites.iter().map(|s| s.completed).collect();
@@ -248,43 +328,77 @@ fn run(scn: &Scn, parallel: bool) -> Outcome {
     }
 }
 
+/// Byte-level comparison of two outcomes; `what` names the pairing in
+/// failure messages.
+fn diff(a: &Outcome, b: &Outcome, what: &str) -> Result<(), String> {
+    if a.control_log != b.control_log {
+        return Err(format!(
+            "{what}: control stream diverged:\n  left:  {:?}\n  \
+             right: {:?}", a.control_log, b.control_log));
+    }
+    if a.site_logs != b.site_logs {
+        return Err(format!("{what}: per-shard dispatch order diverged"));
+    }
+    if a.completed != b.completed {
+        return Err(format!("{what}: completions diverged: {:?} vs {:?}",
+                           a.completed, b.completed));
+    }
+    if a.dispatched != b.dispatched {
+        return Err(format!("{what}: dispatch counts diverged: {} vs {}",
+                           a.dispatched, b.dispatched));
+    }
+    if a.transitions != b.transitions {
+        return Err(format!("{what}: merged transition streams diverged"));
+    }
+    if a.milestones != b.milestones {
+        return Err(format!("{what}: merged milestones diverged"));
+    }
+    if a.fig10 != b.fig10 {
+        return Err(format!("{what}: fig10 output not byte-identical"));
+    }
+    if a.fig11 != b.fig11 {
+        return Err(format!("{what}: fig11 output not byte-identical"));
+    }
+    Ok(())
+}
+
 #[test]
 fn prop_parallel_sharded_replay_equals_single_queue() {
-    check_n("sharded-eq-single-queue", 48, gen_scn, |scn| {
-        let a = run(scn, false);
-        let b = run(scn, true);
-        if a.control_log != b.control_log {
-            return Err(format!(
-                "control stream diverged:\n  serial:   {:?}\n  \
-                 parallel: {:?}", a.control_log, b.control_log));
-        }
-        if a.site_logs != b.site_logs {
-            return Err("per-shard dispatch order diverged".into());
-        }
-        if a.completed != b.completed {
-            return Err(format!("completions diverged: {:?} vs {:?}",
-                               a.completed, b.completed));
-        }
-        if a.dispatched != b.dispatched {
-            return Err(format!("dispatch counts diverged: {} vs {}",
-                               a.dispatched, b.dispatched));
-        }
-        if a.transitions != b.transitions {
-            return Err("merged transition streams diverged".into());
-        }
-        if a.milestones != b.milestones {
-            return Err("merged milestones diverged".into());
-        }
-        if a.fig10 != b.fig10 {
-            return Err("fig10 output not byte-identical".into());
-        }
-        if a.fig11 != b.fig11 {
-            return Err("fig11 output not byte-identical".into());
-        }
+    check_n("sharded-eq-single-queue", cases(48), gen_scn, |scn| {
+        let a = run(scn, Engine::Serial);
+        let b = run(scn, Engine::Parallel);
+        let c = run(scn, Engine::Stealing);
+        diff(&a, &b, "serial-vs-parallel")?;
+        diff(&a, &c, "serial-vs-stealing")?;
         // Sanity: the scenario did real work.
         let total: u32 = a.completed.iter().sum();
-        if total != scn.sites * scn.jobs_per_block * scn.blocks {
+        if total != scn.total_jobs() {
             return Err(format!("workload not drained: {total}"));
+        }
+        Ok(())
+    });
+}
+
+/// Skew-heavy property suite: 1 hot site + N cold sites, stealing on
+/// and off, merged recorders byte-compared against the single-queue
+/// reference.
+#[test]
+fn prop_stealing_equals_single_queue_on_skewed_worlds() {
+    check_n("stealing-eq-skew", cases(32), gen_skew, |scn| {
+        let a = run(scn, Engine::Serial);
+        let b = run(scn, Engine::Parallel);
+        let c = run(scn, Engine::Stealing);
+        diff(&a, &b, "skew-serial-vs-parallel")?;
+        diff(&a, &c, "skew-serial-vs-stealing")?;
+        let total: u32 = a.completed.iter().sum();
+        if total != scn.total_jobs() {
+            return Err(format!("workload not drained: {total}"));
+        }
+        // The hot shard really is hot: it completed more than any cold
+        // shard (otherwise the generator stopped generating skew).
+        let hot = a.completed[0];
+        if a.completed[1..].iter().any(|&c| c >= hot) {
+            return Err(format!("skew lost: {:?}", a.completed));
         }
         Ok(())
     });
@@ -294,16 +408,117 @@ fn prop_parallel_sharded_replay_equals_single_queue() {
 /// thread scheduling must not leak into any observable stream.
 #[test]
 fn prop_parallel_replay_is_internally_deterministic() {
-    check_n("sharded-parallel-deterministic", 16, gen_scn, |scn| {
-        let a = run(scn, true);
-        let b = run(scn, true);
-        if a.transitions != b.transitions || a.fig10 != b.fig10
-            || a.control_log != b.control_log
+    check_n("sharded-parallel-deterministic", cases(16), gen_scn, |scn| {
+        let a = run(scn, Engine::Parallel);
+        let b = run(scn, Engine::Parallel);
+        diff(&a, &b, "parallel-rerun")
+    });
+}
+
+/// Same for the work-stealing engine, on skewed worlds: whichever
+/// worker steals whichever segment, the streams must not move.
+#[test]
+fn prop_stealing_replay_is_internally_deterministic() {
+    check_n("stealing-deterministic", cases(12), gen_skew, |scn| {
+        let a = run(scn, Engine::Stealing);
+        let b = run(scn, Engine::Stealing);
+        diff(&a, &b, "stealing-rerun")
+    });
+}
+
+// ---------------------------------------------------------------------
+// Recorder::merge_shards vs the streaming spill merge.
+// ---------------------------------------------------------------------
+
+/// The streaming k-way spill merge must reproduce the in-memory
+/// `merge_shards` byte-for-byte, down to fig10/fig11 CSV output.
+#[test]
+fn prop_merge_shards_equals_streaming_spill_merge() {
+    check_n("merge-shards-eq-spill", cases(24), gen_scn, |scn| {
+        let (mut control, mut sites, mut q) = build(scn);
+        run_sharded_serial(&mut control, &mut sites, &mut q,
+                           SimTime(f64::INFINITY));
+        let recs: Vec<Recorder> =
+            sites.into_iter().map(|s| s.rec).collect();
+        let dir = std::env::temp_dir()
+            .join(format!("evhc_spill_eqprop_{:016x}", scn.seed));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spills: Vec<SpillFiles> = recs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| r.spill_to(&dir, i as u32).expect("spill_to"))
+            .collect();
+        let mem = Recorder::merge_shards(NodeNames::new(), &recs);
+        let streamed = Recorder::merge_spills(NodeNames::new(), &spills)
+            .map_err(|e| format!("merge_spills: {e}"))?;
+        let _ = std::fs::remove_dir_all(&dir);
+        if mem.transitions_named() != streamed.transitions_named() {
+            return Err("spill merge: transitions diverged".into());
+        }
+        if mem.milestones != streamed.milestones {
+            return Err("spill merge: milestones diverged".into());
+        }
+        if mem.node_names() != streamed.node_names() {
+            return Err("spill merge: node order diverged".into());
+        }
+        let until = SimTime(600.0);
+        if mem.fig10_usage(25.0, until).to_csv()
+            != streamed.fig10_usage(25.0, until).to_csv()
         {
-            return Err("parallel replay not deterministic".into());
+            return Err("spill merge: fig10 not byte-identical".into());
+        }
+        if mem.fig11_states(25.0, until).to_csv()
+            != streamed.fig11_states(25.0, until).to_csv()
+        {
+            return Err("spill merge: fig11 not byte-identical".into());
         }
         Ok(())
     });
+}
+
+/// Spill-mode recorders *during* a work-stealing replay (each shard
+/// streaming from its worker thread) must merge to the same bytes as
+/// in-memory recorders during a serial replay.
+#[test]
+fn live_spill_recorders_match_in_memory_merge() {
+    let mut r = Prng::new(0xFEED);
+    let scn = gen_skew(&mut r);
+
+    let (mut c1, mut s1, mut q1) = build(&scn);
+    run_sharded_serial(&mut c1, &mut s1, &mut q1, SimTime(f64::INFINITY));
+    let recs: Vec<Recorder> = s1.into_iter().map(|s| s.rec).collect();
+    let mem = Recorder::merge_shards(NodeNames::new(), &recs);
+
+    let dir = std::env::temp_dir().join("evhc_spill_live_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (mut c2, mut s2, mut q2) = build(&scn);
+    for (i, site) in s2.iter_mut().enumerate() {
+        site.rec = Recorder::with_spill(
+            NodeNames::new(),
+            ShardSink::create(&dir, i as u32).expect("sink"),
+        );
+    }
+    run_sharded_stealing(&mut c2, &mut s2, &mut q2,
+                         SimTime(f64::INFINITY), scn.steal_cfg());
+    let files: Vec<SpillFiles> = s2
+        .into_iter()
+        .map(|mut s| {
+            s.rec.finish_spill().expect("spilling").expect("spill io")
+        })
+        .collect();
+    assert!(files.iter().all(|f| f.bytes > 0), "spills were written");
+    let streamed =
+        Recorder::merge_spills(NodeNames::new(), &files).expect("merge");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    assert_eq!(mem.transitions_named(), streamed.transitions_named());
+    assert_eq!(mem.milestones, streamed.milestones);
+    assert_eq!(mem.node_names(), streamed.node_names());
+    let until = SimTime(600.0);
+    assert_eq!(mem.fig10_usage(25.0, until).to_csv(),
+               streamed.fig10_usage(25.0, until).to_csv());
+    assert_eq!(mem.fig11_states(25.0, until).to_csv(),
+               streamed.fig11_states(25.0, until).to_csv());
 }
 
 // ---------------------------------------------------------------------
@@ -319,7 +534,7 @@ enum MState {
 
 #[test]
 fn prop_event_queue_cancellation_model() {
-    check_n("event-queue-cancel-model", 96, |r: &mut Prng| {
+    check_n("event-queue-cancel-model", cases(96), |r: &mut Prng| {
         let n = 20 + r.next_below(200) as usize;
         (0..n).map(|_| r.next_u64()).collect::<Vec<u64>>()
     }, |ops| {
