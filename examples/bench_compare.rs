@@ -1,6 +1,7 @@
 //! Compare a fresh `BENCH_scale.json` against the committed
 //! `BENCH_baseline.json`, printing an events/sec and ms/tick table per
-//! scenario/section plus the broker cost/makespan diff.
+//! scenario/stealing/cluster section plus the broker cost/makespan
+//! diff.
 //!
 //! Regression policy:
 //! * events/sec drops beyond 10% are warned about; beyond 15% they are
@@ -31,6 +32,14 @@ const SECTIONS: &[(&str, &[&str])] = &[
 const STEAL_SECTIONS: &[(&str, &[&str])] = &[
     ("single_queue", &["single_queue"]),
     ("parallel", &["parallel"]),
+    ("stealing", &["stealing"]),
+    ("stealing_spill", &["stealing_spill"]),
+];
+
+/// Sections of a `cluster` row (the real paper use case per engine).
+const CLUSTER_SECTIONS: &[(&str, &[&str])] = &[
+    ("serial", &["serial"]),
+    ("sharded", &["sharded"]),
     ("stealing", &["stealing"]),
     ("stealing_spill", &["stealing_spill"]),
 ];
@@ -231,10 +240,12 @@ fn main() {
     let scen = compare_measured(&baseline, &fresh, "scenarios", SECTIONS);
     let steal =
         compare_measured(&baseline, &fresh, "stealing", STEAL_SECTIONS);
+    let cluster =
+        compare_measured(&baseline, &fresh, "cluster", CLUSTER_SECTIONS);
     let broker_regressions = compare_broker(&baseline, &fresh);
 
-    let warned = scen.warned + steal.warned;
-    let gated = scen.gated + steal.gated;
+    let warned = scen.warned + steal.warned + cluster.warned;
+    let gated = scen.gated + steal.gated + cluster.gated;
     if warned > 0 || broker_regressions > 0 {
         println!("\nWARNING: {warned} section(s) regressed by more than \
                   {WARN_PCT}% events/sec ({gated} beyond the {GATE_PCT}% \

@@ -18,6 +18,11 @@
 //!   metrics story — in-memory recorder bytes vs streaming spill-file
 //!   bytes, with a byte-identical merged-figure assert between the two
 //!   recording paths,
+//! * `cluster` — the **real paper use case** (site-partitioned
+//!   `HybridCluster`) at 1k/5k/10k nodes over 4–8 sites, replayed
+//!   through all three engines (`Serial`/`Sharded`/`Stealing`) with
+//!   cross-engine digest + figure byte-equality asserts, plus the
+//!   spill path with figures rendered straight from the spill streams,
 //! * `broker` — full-cluster elasticity runs over 2–8 sites, policy ×
 //!   scenario (spot-preemption waves, site outages, price spikes):
 //!   cost, makespan and preempted-job recovery per combination, each
@@ -36,8 +41,7 @@ use std::time::Instant;
 
 use evhc::api::json::Json;
 use evhc::broker::{PolicyKind, ScenarioPlan};
-use evhc::cloudsim::SiteSpec;
-use evhc::cluster::{HybridCluster, RunConfig, RunReport};
+use evhc::cluster::{Engine, HybridCluster, RunConfig, RunReport};
 use evhc::ids::NodeNames;
 use evhc::lrms::core::{BatchCore, Placement};
 use evhc::lrms::JobId;
@@ -577,21 +581,12 @@ fn report_line(label: &str, m: &Measured) {
 // ---------------------------------------------------------------------
 
 /// Build a policy/scenario world: CESNET + AWS (the paper pair), an AWS
-/// spot market from 3 sites up, opportunistic OpenNebula sites beyond.
+/// spot market from 3 sites up, opportunistic OpenNebula sites beyond —
+/// the shared `RunConfig::paper_usecase_sites` ladder.
 fn broker_cfg(policy: PolicyKind, scenario: &ScenarioPlan,
               n_sites: usize, scale: f64) -> RunConfig {
-    let mut cfg = RunConfig::paper_usecase(scale, 7);
+    let mut cfg = RunConfig::paper_usecase_sites(scale, 7, n_sites);
     cfg.inference_every = 0;
-    let mut sites = vec![SiteSpec::cesnet_metacentrum(),
-                         SiteSpec::aws_us_east_2()];
-    if n_sites >= 3 {
-        sites.push(SiteSpec::aws_spot_us_east_2());
-    }
-    for i in 3..n_sites {
-        sites.push(SiteSpec::opennebula(&format!("ON-{i}")));
-    }
-    sites.truncate(n_sites);
-    cfg.sites = sites;
     cfg.policy = policy;
     cfg.scenario = scenario.clone();
     cfg
@@ -605,16 +600,11 @@ fn broker_run(policy: PolicyKind, scenario: &ScenarioPlan,
         .expect("broker run")
 }
 
-/// Everything that must match bit-for-bit between two replays.
-fn broker_digest(r: &RunReport) -> (u32, u64, u64, u32, u32, u32) {
-    (
-        r.jobs_completed,
-        r.makespan.0.to_bits(),
-        r.total_cost_usd.to_bits(),
-        r.preempted_vms,
-        r.preempted_jobs,
-        r.preempt_recovered,
-    )
+/// Everything that must match bit-for-bit between two replays — the
+/// shared contract type, so the bench and the property tests cannot
+/// drift apart.
+fn broker_digest(r: &RunReport) -> evhc::cluster::RunDigest {
+    r.determinism_digest()
 }
 
 fn broker_section(quick: bool) -> Json {
@@ -680,6 +670,177 @@ fn broker_section(quick: bool) -> Json {
                 ]));
             }
         }
+    }
+    Json::Array(rows)
+}
+
+// ---------------------------------------------------------------------
+// Cluster: the real paper use case across the three replay engines
+// ---------------------------------------------------------------------
+
+/// A production-sized paper topology: `nodes` workers spread over the
+/// `RunConfig::paper_usecase_sites` ladder, each site's quota carved to
+/// hold its share, the full block-structured workload scaled to
+/// `jobs_per_node` jobs per worker.
+struct ClusterScale {
+    name: &'static str,
+    nodes: u32,
+    sites: usize,
+    jobs_per_node: u32,
+}
+
+impl ClusterScale {
+    fn jobs(&self) -> u32 {
+        self.nodes * self.jobs_per_node
+    }
+}
+
+fn cluster_cfg(sc: &ClusterScale, engine: Engine,
+               spill: Option<std::path::PathBuf>) -> RunConfig {
+    let mut cfg = RunConfig::paper_usecase_sites(1.0, 7, sc.sites);
+    cfg.inference_every = 0;
+    cfg.engine = engine;
+    cfg.metrics_spill_dir = spill;
+    cfg.template.scalable.count = sc.nodes;
+    cfg.template.scalable.min_instances = 0;
+    cfg.template.scalable.max_instances = sc.nodes;
+    // Carve each site's quota to roughly its share of the fleet (plus
+    // slack for the FE and vRouters) so the workers genuinely spread
+    // across every site shard.
+    let share = sc.nodes / sc.sites as u32 + 4;
+    let cpus = cfg.template.worker.num_cpus;
+    for site in &mut cfg.sites {
+        site.quota.max_vms = share as usize + 4;
+        site.quota.max_vcpus = (share + 4) * cpus;
+        site.quota.max_public_ips = 8;
+    }
+    // Fixed-spacing blocks: `Workload::paper` scales the block gaps
+    // with the job count, which at bench scale would push later blocks
+    // past the horizon.
+    let total = sc.jobs();
+    let per = total / 4;
+    cfg.workload = evhc::workload::Workload {
+        blocks: [0.0f64, 900.0, 1800.0, 2700.0]
+            .iter()
+            .zip([per, per, per, total - 3 * per])
+            .map(|(&at, jobs)| evhc::workload::Block {
+                at: SimTime(at),
+                jobs,
+            })
+            .collect(),
+        setup_secs: evhc::workload::SETUP_SECS_MEAN,
+    };
+    cfg
+}
+
+fn cluster_run(sc: &ClusterScale, engine: Engine,
+               spill: Option<std::path::PathBuf>)
+    -> (RunReport, Measured) {
+    let wall = Instant::now();
+    let report = HybridCluster::new(cluster_cfg(sc, engine, spill))
+        .expect("cluster world")
+        .run()
+        .expect("cluster run");
+    let wall_s = wall.elapsed().as_secs_f64();
+    assert_eq!(report.jobs_completed, sc.jobs(),
+               "cluster run must drain the workload ({})", sc.name);
+    let m = Measured {
+        events: report.events,
+        wall_s,
+        events_per_sec: report.events as f64 / wall_s.max(1e-9),
+        ms_per_tick: 0.0,
+        completed: report.jobs_completed,
+    };
+    (report, m)
+}
+
+fn cluster_section(quick: bool) -> Json {
+    let scales: Vec<ClusterScale> = if quick {
+        vec![ClusterScale { name: "paper-200n-4s", nodes: 200, sites: 4,
+                            jobs_per_node: 8 }]
+    } else {
+        vec![
+            ClusterScale { name: "paper-1k-4s", nodes: 1000, sites: 4,
+                           jobs_per_node: 12 },
+            ClusterScale { name: "paper-5k-6s", nodes: 5000, sites: 6,
+                           jobs_per_node: 12 },
+            ClusterScale { name: "paper-10k-8s", nodes: 10_000, sites: 8,
+                           jobs_per_node: 10 },
+        ]
+    };
+
+    let mut rows = Vec::new();
+    for sc in &scales {
+        println!("\n--- {} ({} nodes, {} sites, {} jobs) ---",
+                 sc.name, sc.nodes, sc.sites, sc.jobs());
+        let (r_serial, m_serial) = cluster_run(sc, Engine::Serial, None);
+        report_line("serial", &m_serial);
+        let (r_sharded, m_sharded) =
+            cluster_run(sc, Engine::Sharded { threads: 0 }, None);
+        assert_eq!(r_sharded.determinism_digest(), r_serial.determinism_digest(),
+                   "sharded cluster replay diverged on {}", sc.name);
+        report_line("sharded", &m_sharded);
+        let (r_steal, m_steal) = cluster_run(
+            sc, Engine::Stealing { threads: 0, segment_events: 0 }, None);
+        assert_eq!(r_steal.determinism_digest(), r_serial.determinism_digest(),
+                   "stealing cluster replay diverged on {}", sc.name);
+        report_line("stealing", &m_steal);
+
+        // Figures must be byte-identical across engines.
+        let until = r_serial.makespan;
+        let f10 = r_serial.recorder.fig10_usage(300.0, until).to_csv();
+        let f11 = r_serial.recorder.fig11_states(300.0, until).to_csv();
+        assert_eq!(r_steal.recorder.fig10_usage(300.0, until).to_csv(),
+                   f10, "fig10 diverged across engines on {}", sc.name);
+        assert_eq!(r_steal.recorder.fig11_states(300.0, until).to_csv(),
+                   f11, "fig11 diverged across engines on {}", sc.name);
+
+        // Spill mode under stealing: same digest, and the figures
+        // rendered *straight from the spill streams* (no merged
+        // recorder materialized) must reproduce the in-memory render.
+        let dir = std::env::temp_dir()
+            .join(format!("evhc_bench_cluster_{}", sc.name));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (r_spill, m_spill) = cluster_run(
+            sc, Engine::Stealing { threads: 0, segment_events: 0 },
+            Some(dir.clone()));
+        assert_eq!(r_spill.determinism_digest(), r_serial.determinism_digest(),
+                   "spill cluster replay diverged on {}", sc.name);
+        report_line("stealing-spill", &m_spill);
+        let spills: Vec<SpillFiles> = (0..=sc.sites)
+            .map(|i| SpillFiles::locate(&dir, i as u32))
+            .collect();
+        assert_eq!(Recorder::fig10_from_spills(&spills, 300.0, until)
+                       .expect("fig10 from spills")
+                       .to_csv(),
+                   f10, "streamed fig10 diverged on {}", sc.name);
+        assert_eq!(Recorder::fig11_from_spills(&spills, 300.0, until)
+                       .expect("fig11 from spills")
+                       .to_csv(),
+                   f11, "streamed fig11 diverged on {}", sc.name);
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let sharded_speedup = m_sharded.events_per_sec
+            / m_serial.events_per_sec.max(1e-9);
+        let steal_speedup = m_steal.events_per_sec
+            / m_serial.events_per_sec.max(1e-9);
+        println!("  engine speedup     sharded {sharded_speedup:.2}x  \
+                  stealing {steal_speedup:.2}x (vs serial)");
+
+        rows.push(Json::Object(vec![
+            ("name".into(), Json::Str(sc.name.into())),
+            ("nodes".into(), Json::Num(sc.nodes as f64)),
+            ("sites".into(), Json::Num(sc.sites as f64)),
+            ("jobs".into(), Json::Num(sc.jobs() as f64)),
+            ("serial".into(), measured_json(&m_serial)),
+            ("sharded".into(), measured_json(&m_sharded)),
+            ("stealing".into(), measured_json(&m_steal)),
+            ("stealing_spill".into(), measured_json(&m_spill)),
+            ("speedup_sharded_vs_serial".into(),
+             Json::Num(sharded_speedup)),
+            ("speedup_stealing_vs_serial".into(),
+             Json::Num(steal_speedup)),
+        ]));
     }
     Json::Array(rows)
 }
@@ -818,6 +979,12 @@ fn main() {
     section("SCALE: work-stealing x skew x metrics spill");
     let stealing_rows = stealing_section(quick);
 
+    // The real paper use case across the three replay engines, with
+    // cross-engine digest + figure equality asserts and the
+    // straight-from-spill figure render byte-compared in place.
+    section("SCALE: paper use case x engines");
+    let cluster_rows = cluster_section(quick);
+
     // Broker: policy × scenario × multi-site elasticity runs, each
     // replayed twice with an in-bench determinism assert.
     section("SCALE: broker policy x scenario");
@@ -828,6 +995,7 @@ fn main() {
         ("quick".into(), Json::Bool(quick)),
         ("scenarios".into(), Json::Array(rows)),
         ("stealing".into(), stealing_rows),
+        ("cluster".into(), cluster_rows),
         ("broker".into(), broker_rows),
     ]);
     std::fs::write("BENCH_scale.json", doc.render() + "\n")

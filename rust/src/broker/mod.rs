@@ -27,8 +27,10 @@
 //!   every policy and identical to the legacy checks.
 //! * **Scenarios** — [`scenario::ScenarioPlan`] scripts spot-preemption
 //!   waves, whole-site outages and price spikes; the cluster world
-//!   replays them as site-sharded events, so scenario runs stay
-//!   deterministic under the parallel engine of [`crate::sim::shard`].
+//!   replays them as control-plane events (reclaims touch the LRMS and
+//!   broker, and the control plane owns cross-site effects), so
+//!   scenario runs stay byte-identical across the serial and parallel
+//!   engines of [`crate::sim::shard`].
 //!
 //! The front-end placement always uses the SLA ranking (the front end
 //! is the cluster's fixed point — the paper deploys it at the home
@@ -141,14 +143,20 @@ impl ElasticityBroker {
     /// therefore an SLA — exactly like the legacy by-name lookup).
     /// `worker_cpus`/`worker_mem_gb` come from the cluster template and
     /// determine each site's worker price point.
-    pub fn new(kind: PolicyKind, sites: &[CloudSite], slas: &[Sla],
-               worker_cpus: u32, worker_mem_gb: f64) -> ElasticityBroker {
+    pub fn new<S: AsRef<CloudSite>>(kind: PolicyKind, sites: &[S],
+                                    slas: &[Sla], worker_cpus: u32,
+                                    worker_mem_gb: f64)
+        -> ElasticityBroker {
         let names = SiteNames::new();
-        let site_ids: Vec<SiteId> =
-            sites.iter().map(|s| names.intern(&s.spec.name)).collect();
+        let site_ids: Vec<SiteId> = sites
+            .iter()
+            .map(|s| names.intern(&s.as_ref().spec.name))
+            .collect();
         let resolved = ResolvedSlas::resolve(slas, &names);
         let mut order: Vec<usize> = (0..sites.len()).collect();
-        order.sort_by(|&a, &b| sites[a].spec.name.cmp(&sites[b].spec.name));
+        order.sort_by(|&a, &b| {
+            sites[a].as_ref().spec.name.cmp(&sites[b].as_ref().spec.name)
+        });
         let mut name_ranks = vec![0u32; sites.len()];
         for (r, &i) in order.iter().enumerate() {
             name_ranks[i] = r as u32;
@@ -158,7 +166,8 @@ impl ElasticityBroker {
             .map(|s| {
                 // The same selector the cluster provisions through, so
                 // the ranked price is the billed price.
-                s.spec
+                s.as_ref()
+                    .spec
                     .worker_instance_type(worker_cpus, worker_mem_gb)
                     .price
                     .usd_per_hour
@@ -166,7 +175,7 @@ impl ElasticityBroker {
             .collect();
         let hazards = sites
             .iter()
-            .map(|s| s.spec.failure.preempt_rate_per_hour)
+            .map(|s| s.as_ref().spec.failure.preempt_rate_per_hour)
             .collect();
         ElasticityBroker {
             table: SiteTable {
@@ -195,13 +204,14 @@ impl ElasticityBroker {
     /// The front end has been placed: resolve WAN latencies from its
     /// site through the underlay (the overlay's site-router hop rides
     /// exactly this link).
-    pub fn set_front_end(&mut self, fe_site: usize, net: &Network,
-                         sites: &[CloudSite]) {
+    pub fn set_front_end<S: AsRef<CloudSite>>(&mut self, fe_site: usize,
+                                              net: &Network, sites: &[S]) {
         for i in 0..sites.len() {
             self.table.latency_from_fe[i] = if i == fe_site {
                 0.0
             } else {
-                net.link(sites[fe_site].net_id, sites[i].net_id)
+                net.link(sites[fe_site].as_ref().net_id,
+                         sites[i].as_ref().net_id)
                     .map(|l| l.latency_s)
                     .unwrap_or(f64::INFINITY)
             };
@@ -223,9 +233,10 @@ impl ElasticityBroker {
     /// the site's own launch-time price factor, so scenario price
     /// spikes reach the policies through the same state that bills the
     /// ledger — there is no second copy to keep in sync.
-    pub fn signals(&self, site: usize, sites: &[CloudSite],
-                   used_per_site: &[u32], queue_depth: u32) -> SiteSignals {
-        let s = &sites[site];
+    pub fn signals<S: AsRef<CloudSite>>(&self, site: usize, sites: &[S],
+                                        used_per_site: &[u32],
+                                        queue_depth: u32) -> SiteSignals {
+        let s = sites[site].as_ref();
         let outage = self.outage[site];
         SiteSignals {
             availability: if outage { 0.0 } else { s.spec.availability },
@@ -249,7 +260,7 @@ impl ElasticityBroker {
     /// `select_site` checks (availability floor, zero-instance SLA,
     /// VM/vCPU quota, SLA headroom), plus scenario outages through the
     /// forced-zero availability.
-    fn eligible(&self, site: usize, sites: &[CloudSite], cpus: u32,
+    fn eligible(&self, site: usize, s: &CloudSite, cpus: u32,
                 sig: &SiteSignals) -> bool {
         if sig.availability < MIN_AVAILABILITY {
             return false;
@@ -261,7 +272,6 @@ impl ElasticityBroker {
                 return false;
             }
         }
-        let s = &sites[site];
         if s.used_vms() + 1 > s.spec.quota.max_vms {
             return false;
         }
@@ -274,13 +284,14 @@ impl ElasticityBroker {
         true
     }
 
-    fn pick(&self, policy: &dyn PlacementPolicy, sites: &[CloudSite],
-            used_per_site: &[u32], cpus: u32, queue_depth: u32)
+    fn pick<S: AsRef<CloudSite>>(&self, policy: &dyn PlacementPolicy,
+                                 sites: &[S], used_per_site: &[u32],
+                                 cpus: u32, queue_depth: u32)
         -> Option<usize> {
         let mut best: Option<(Score, usize)> = None;
         for i in 0..sites.len() {
             let sig = self.signals(i, sites, used_per_site, queue_depth);
-            if !self.eligible(i, sites, cpus, &sig) {
+            if !self.eligible(i, sites[i].as_ref(), cpus, &sig) {
                 continue;
             }
             let score = policy.score(i, &self.table, &sig);
@@ -296,8 +307,9 @@ impl ElasticityBroker {
     }
 
     /// Pick the site for one new worker under the configured policy.
-    pub fn select(&mut self, sites: &[CloudSite], used_per_site: &[u32],
-                  cpus: u32, queue_depth: u32, t: SimTime)
+    pub fn select<S: AsRef<CloudSite>>(&mut self, sites: &[S],
+                                       used_per_site: &[u32], cpus: u32,
+                                       queue_depth: u32, t: SimTime)
         -> Option<usize> {
         let pick = self.pick(self.policy.as_ref(), sites, used_per_site,
                              cpus, queue_depth);
@@ -309,8 +321,9 @@ impl ElasticityBroker {
 
     /// Pick the front-end site. Always SLA-ranked: the front end is the
     /// cluster's fixed point, whatever the elastic-worker policy.
-    pub fn select_front_end(&mut self, sites: &[CloudSite],
-                            used_per_site: &[u32], cpus: u32, t: SimTime)
+    pub fn select_front_end<S: AsRef<CloudSite>>(&mut self, sites: &[S],
+                                                 used_per_site: &[u32],
+                                                 cpus: u32, t: SimTime)
         -> Option<usize> {
         let pick = self.pick(&SlaRank, sites, used_per_site, cpus, 0);
         if let Some(i) = pick {

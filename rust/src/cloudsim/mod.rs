@@ -244,6 +244,15 @@ pub struct CloudSite {
     rng: Prng,
 }
 
+/// Identity `AsRef` so APIs generic over "anything that carries a
+/// cloud site" (the elasticity broker) accept plain site vectors and
+/// wrapper worlds (e.g. the cluster's `SiteWorld`) alike.
+impl AsRef<CloudSite> for CloudSite {
+    fn as_ref(&self) -> &CloudSite {
+        self
+    }
+}
+
 impl CloudSite {
     pub fn new(spec: SiteSpec, site_index: u8, net_id: NetId, seed: u64)
         -> CloudSite {
@@ -393,14 +402,21 @@ impl CloudSite {
         Ok(self.spec.op_latency.terminate)
     }
 
-    /// Finish termination: close billing, release addresses.
+    /// Finish termination: close billing, release addresses. A VM
+    /// whose billing already ended (it crashed and was then cleaned up
+    /// via Failed → Terminating) keeps its original close — names are
+    /// reused across incarnations, so a second by-name ledger close
+    /// here would pop a *successor* VM's open entry.
     pub fn complete_termination(&mut self, id: VmId, t: SimTime)
         -> anyhow::Result<()> {
         let vm = self.vm_mut(id)?;
+        let billing_already_ended = vm.billing_end.is_some();
         vm.transition(VmState::Terminated, t)?;
         let name = vm.name.clone();
         self.release_addresses(id)?;
-        self.ledger.close(&name, t);
+        if !billing_already_ended {
+            self.ledger.close(&name, t);
+        }
         Ok(())
     }
 
@@ -577,6 +593,24 @@ mod tests {
         s.complete_boot(c.vm, false, t(10.0)).unwrap();
         assert!((s.ledger.open_rate_usd_per_hour() - 0.0464 * 5.0).abs()
                 < 1e-9);
+    }
+
+    #[test]
+    fn crashed_then_terminated_vm_closes_billing_once() {
+        let mut s = aws();
+        let a = s.request_vm(&req("wn", None, false), t(0.0)).unwrap();
+        s.complete_boot(a.vm, false, t(10.0)).unwrap();
+        s.crash_vm(a.vm, t(100.0)).unwrap();
+        // The name is reused by a successor while cleanup of the
+        // crashed VM is still in flight.
+        let b = s.request_vm(&req("wn", None, false), t(150.0)).unwrap();
+        s.complete_boot(b.vm, false, t(160.0)).unwrap();
+        let secs = s.terminate_vm(a.vm, t(200.0)).unwrap(); // cleanup
+        s.complete_termination(a.vm, t(200.0 + secs)).unwrap();
+        // The successor's ledger entry must still be open and billing —
+        // the crashed VM's close happened at the crash, not here.
+        assert!(s.ledger.open_rate_usd_per_hour() > 0.0);
+        assert_eq!(s.vm(b.vm).unwrap().state, VmState::Running);
     }
 
     #[test]

@@ -1,0 +1,1159 @@
+//! The control-plane half of the cluster world, dispatched serially on
+//! the control shard (a barrier point of the sharded engines).
+//!
+//! [`ControlWorld`] owns every piece of cross-site state: the
+//! orchestrator workflow engine, the LRMS controller, CLUES, the
+//! elasticity broker, the vRouter overlay + CA, the IM (networks,
+//! tunnel fabric), the workload queue, per-VM accounting and the
+//! control recorder shard. Under the [`ControlPlane`] contract it may
+//! read and mutate any [`SiteWorld`] while handling a control event
+//! (provisioning VMs, reclaiming them in scenario waves, reading
+//! broker signals) and may schedule commands into any site shard —
+//! but all *site-originated* effects arrive here as control events
+//! emitted with the configured WAN latency, never as direct mutation.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::broker::{ElasticityBroker, ScenarioEvent};
+use crate::clues::{Action, Clues, PowerState};
+use crate::cloudsim::VmId;
+use crate::ids::{NodeId, NodeNames};
+use crate::im::{Im, NodeRole};
+use crate::lrms::{JobId, Lrms, NodeHealth, NodeStat};
+use crate::metrics::{DisplayState, Recorder};
+use crate::netsim::Network;
+use crate::orchestrator::{UpdateId, UpdateOp, WorkflowEngine};
+use crate::runtime::ModelRuntime;
+use crate::sim::shard::ControlPlane;
+use crate::sim::{ShardedQueue, SimTime};
+use crate::util::prng::Prng;
+use crate::vrouter::Overlay;
+use crate::workload::Workload;
+
+use super::{Ev, RunConfig, SiteWorld, FE_NAME};
+
+/// Runtime info per deployment node (controller's view).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct NodeRt {
+    pub(crate) site: usize,
+    pub(crate) vm: VmId,
+    pub(crate) role: NodeRole,
+    /// One-time udocker setup already paid?
+    setup_done: bool,
+    requested_at: SimTime,
+    joined_at: Option<SimTime>,
+}
+
+/// One VM incarnation's accounting row (ledger row index at its site).
+#[derive(Debug, Clone)]
+pub(crate) struct VmRec {
+    pub(crate) name: String,
+    pub(crate) site: usize,
+    pub(crate) role: NodeRole,
+    pub(crate) ledger_idx: usize,
+    pub(crate) busy_secs: f64,
+}
+
+/// The cross-site control plane.
+pub struct ControlWorld {
+    pub cfg: RunConfig,
+    pub net: Network,
+    pub overlay: Overlay,
+    pub lrms: Box<dyn Lrms>,
+    pub clues: Clues,
+    pub engine: WorkflowEngine,
+    pub im: Im,
+    /// Multi-site elasticity broker (owns grow-to-which-site).
+    pub broker: ElasticityBroker,
+    /// The control shard's metrics stream.
+    pub(crate) recorder: Recorder,
+    /// Cluster-wide name⇄id interner (shared with lrms/clues/recorders).
+    pub(crate) names: NodeNames,
+    pub(crate) nodes: HashMap<NodeId, NodeRt>,
+    /// node → in-progress AddWorker update to complete on join.
+    update_for_node: HashMap<NodeId, UpdateId>,
+    /// Permanent archive of (node, requested, joined) — survives node
+    /// termination, unlike the live `nodes` map.
+    pub(crate) deploy_log: Vec<(String, SimTime, SimTime)>,
+    /// One accounting record per VM incarnation (ledger row index).
+    pub(crate) vm_records: Vec<VmRec>,
+    /// node → index into vm_records for the live incarnation.
+    live_record: HashMap<NodeId, usize>,
+    /// jobs submitted so far / completed.
+    jobs_submitted: u32,
+    pub(crate) jobs_completed: u32,
+    next_file_id: u64,
+    rng: Prng,
+    fe_site: usize,
+    fe_ready: bool,
+    initial_pending: u32,
+    deploy_update: Option<UpdateId>,
+    /// Optional real-inference runtime.
+    runtime: Option<ModelRuntime>,
+    pub(crate) inferences_run: u64,
+    pub(crate) inference_wall_secs: f64,
+    clues_ticking: bool,
+    /// When the initial cluster came up (workload + injection t=0).
+    workload_t0: SimTime,
+    /// Jobs requeued by a preemption/outage, awaiting completion.
+    preempt_pending: HashSet<JobId>,
+    pub(crate) preempted_vms: u32,
+    pub(crate) preempted_jobs: u32,
+    pub(crate) preempt_recovered: u32,
+    /// Active price-spike windows per site: the latest spike's factor
+    /// rules while any window is open; list price returns only when
+    /// the count drains to zero (overlapping spikes compose).
+    price_spikes_active: Vec<u32>,
+    /// Scratch buffer for per-tick node snapshots (reused; a 10k-node
+    /// tick allocates no per-tick `Vec`).
+    stats_scratch: Vec<NodeStat>,
+    n_sites: usize,
+    control_latency: f64,
+}
+
+impl ControlWorld {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn build(
+        cfg: RunConfig,
+        net: Network,
+        overlay: Overlay,
+        lrms: Box<dyn Lrms>,
+        clues: Clues,
+        engine: WorkflowEngine,
+        im: Im,
+        broker: ElasticityBroker,
+        recorder: Recorder,
+        names: NodeNames,
+        runtime: Option<ModelRuntime>,
+        rng: Prng,
+        n_sites: usize,
+        control_latency: f64,
+    ) -> ControlWorld {
+        ControlWorld {
+            cfg,
+            net,
+            overlay,
+            lrms,
+            clues,
+            engine,
+            im,
+            broker,
+            recorder,
+            names,
+            nodes: HashMap::new(),
+            update_for_node: HashMap::new(),
+            deploy_log: Vec::new(),
+            vm_records: Vec::new(),
+            live_record: HashMap::new(),
+            jobs_submitted: 0,
+            jobs_completed: 0,
+            next_file_id: 0,
+            rng,
+            fe_site: 0,
+            fe_ready: false,
+            initial_pending: 0,
+            deploy_update: None,
+            runtime,
+            inferences_run: 0,
+            inference_wall_secs: 0.0,
+            clues_ticking: false,
+            workload_t0: SimTime::ZERO,
+            preempt_pending: HashSet::new(),
+            preempted_vms: 0,
+            preempted_jobs: 0,
+            preempt_recovered: 0,
+            price_spikes_active: vec![0; n_sites],
+            stats_scratch: Vec::new(),
+            n_sites,
+            control_latency,
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Deployment plumbing
+    // ---------------------------------------------------------------
+
+    fn worker_instance_type(&self, sites: &[SiteWorld], site: usize)
+        -> String {
+        // The shared SiteSpec selector — also what prices the broker's
+        // CostMin/SpotAware table, so ranking and billing agree.
+        let want = &self.cfg.template.worker;
+        sites[site]
+            .cloud
+            .spec
+            .worker_instance_type(want.num_cpus, want.mem_gb)
+            .name
+            .clone()
+    }
+
+    fn vrouter_instance_type(&self, sites: &[SiteWorld], site: usize)
+        -> String {
+        // Cheapest instance in the catalog (t2.micro at AWS).
+        sites[site]
+            .cloud
+            .spec
+            .instance_types
+            .iter()
+            .min_by(|a, b| {
+                a.price
+                    .usd_per_hour
+                    .partial_cmp(&b.price.usd_per_hour)
+                    .unwrap()
+                    .then(a.vcpus.cmp(&b.vcpus))
+            })
+            .map(|t| t.name.clone())
+            .unwrap()
+    }
+
+    /// Provision one node at `site` and schedule its boot completion
+    /// (plus sampled stochastic crash/spot-reclaim timers) into the
+    /// site's shard.
+    fn provision(&mut self, q: &mut ShardedQueue<Ev>,
+                 sites: &mut [SiteWorld], site: usize, name: &str,
+                 role: NodeRole, t: SimTime) -> anyhow::Result<()> {
+        let id = self.names.intern(name);
+        let itype = match role {
+            NodeRole::FrontEnd => self.worker_instance_type(sites, site),
+            NodeRole::WorkerNode => self.worker_instance_type(sites, site),
+            NodeRole::SiteVRouter => {
+                self.vrouter_instance_type(sites, site)
+            }
+        };
+        let cloud = &mut sites[site].cloud;
+        let (_net_id, net_secs) =
+            self.im.ensure_network(cloud, site, "evhc")?;
+        let p = self.im.provision_node(
+            cloud,
+            site,
+            "evhc",
+            name,
+            role,
+            &itype,
+            self.cfg.template.lrms,
+            t,
+        )?;
+        self.nodes.insert(id, NodeRt {
+            site,
+            vm: p.vm,
+            role,
+            setup_done: false,
+            requested_at: t,
+            joined_at: None,
+        });
+        self.live_record.insert(id, self.vm_records.len());
+        self.vm_records.push(VmRec {
+            name: name.to_string(),
+            site,
+            role,
+            ledger_idx: cloud.ledger.entries.len() - 1,
+            busy_secs: 0.0,
+        });
+        self.recorder.node_state_id(t, id, DisplayState::PoweringOn);
+        let boot_at = t.0 + net_secs + p.boot_secs;
+        q.schedule_at(SimTime(boot_at), Ev::BootDone {
+            site,
+            vm: p.vm,
+            node: id,
+            failed: p.boot_fails,
+            ctx_secs: p.ctx_secs,
+        });
+        // Stochastic failure injection: sample a time-to-failure (and,
+        // for non-FE roles, a spot-reclaim time) from the site's
+        // failure model, anchored at boot completion. Timers for VMs
+        // that die first are dropped at the site (crash_vm rejects
+        // non-running states).
+        let failure = cloud.spec.failure.clone();
+        if let Some(secs) = failure.sample_crash_in(&mut self.rng) {
+            q.schedule_at(SimTime(boot_at + secs), Ev::CrashTimer {
+                site,
+                vm: p.vm,
+                node: id,
+                preempt: false,
+            });
+        }
+        if role != NodeRole::FrontEnd {
+            // The FE survives spot reclaims: it is the cluster's fixed
+            // point (LRMS controller + vRouter CP).
+            if let Some(secs) = failure.sample_preempt_in(&mut self.rng) {
+                q.schedule_at(SimTime(boot_at + secs), Ev::CrashTimer {
+                    site,
+                    vm: p.vm,
+                    node: id,
+                    preempt: true,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Does `site` already host a live vRouter (or the CP)?
+    fn site_has_router(&self, site: usize) -> bool {
+        if site == self.fe_site && self.fe_ready {
+            return true;
+        }
+        self.nodes.values().any(|rt| {
+            rt.site == site
+                && rt.role == NodeRole::SiteVRouter
+                && rt.joined_at.is_some()
+        })
+    }
+
+    fn vrouter_name(&self, sites: &[SiteWorld], site: usize) -> String {
+        format!("vrouter-{}", sites[site].cloud.spec.name.to_lowercase())
+    }
+
+    /// Lowest unused worker index → "vnode-N" (names are reused after
+    /// termination, matching the paper's vnode-5 power-off/on cycle).
+    fn next_worker(&self) -> (NodeId, String) {
+        for i in 1.. {
+            let name = format!("vnode-{i}");
+            let id = self.names.intern(&name);
+            if !self.nodes.contains_key(&id) {
+                return (id, name);
+            }
+        }
+        unreachable!()
+    }
+
+    fn used_workers_per_site(&self) -> Vec<u32> {
+        let mut v = vec![0u32; self.n_sites];
+        for rt in self.nodes.values() {
+            // Placeholder entries (PowerOn reserved the name but no site
+            // was chosen yet) have site == usize::MAX.
+            if rt.role == NodeRole::WorkerNode && rt.site < v.len() {
+                v[rt.site] += 1;
+            }
+        }
+        v
+    }
+
+    /// Start adding a worker (one orchestrator update). Returns false if
+    /// no site has capacity.
+    fn start_add_worker(&mut self, q: &mut ShardedQueue<Ev>,
+                        sites: &mut [SiteWorld], name: &str,
+                        t: SimTime) -> bool {
+        let used = self.used_workers_per_site();
+        let cpus = self.cfg.template.worker.num_cpus;
+        let queue_depth = self.lrms.pending() as u32;
+        let site = if self.cfg.template.hybrid {
+            self.broker.select(sites, &used, cpus, queue_depth, t)
+        } else {
+            // Non-hybrid: only the FE's site may host workers.
+            let s = self.fe_site;
+            let cloud = &sites[s].cloud;
+            let fits = cloud.used_vms() < cloud.spec.quota.max_vms
+                && cloud.used_vcpus() + cpus <= cloud.spec.quota.max_vcpus;
+            fits.then_some(s)
+        };
+        let Some(site) = site else {
+            self.recorder.milestone(t, format!(
+                "no capacity anywhere for {name}"));
+            return false;
+        };
+        // Bursting into a router-less site: vRouter first (plus one more
+        // VM of quota), then the worker.
+        if site != self.fe_site && !self.site_has_router(site) {
+            let vr = self.vrouter_name(sites, site);
+            let vr_id = self.names.intern(&vr);
+            if !self.nodes.contains_key(&vr_id) {
+                if let Err(e) = self.provision(q, sites, site, &vr,
+                                               NodeRole::SiteVRouter, t) {
+                    self.recorder.milestone(t, format!(
+                        "vRouter provision failed at {}: {e}",
+                        sites[site].cloud.spec.name));
+                    return false;
+                }
+                self.recorder.milestone(t, format!(
+                    "provisioning {vr} at {}",
+                    sites[site].cloud.spec.name));
+            }
+        }
+        match self.provision(q, sites, site, name, NodeRole::WorkerNode, t)
+        {
+            Ok(()) => {
+                self.recorder.milestone(t, format!(
+                    "provisioning {name} at {}",
+                    sites[site].cloud.spec.name));
+                true
+            }
+            Err(e) => {
+                self.recorder.milestone(t, format!(
+                    "worker provision failed: {e}"));
+                false
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Job plumbing
+    // ---------------------------------------------------------------
+
+    /// The initial cluster is up: anchor the workload timeline here
+    /// (the paper's "15:00") and start the CLUES monitor loop.
+    fn begin_workload(&mut self, q: &mut ShardedQueue<Ev>, t: SimTime) {
+        self.workload_t0 = t;
+        self.recorder.milestone(t, format!(
+            "initial cluster ready ({} workers) — workload timeline t0",
+            self.cfg.template.scalable.count));
+        for i in 0..self.cfg.workload.blocks.len() {
+            let at = self.cfg.workload.blocks[i].at;
+            q.schedule_at(SimTime(t.0 + at.0), Ev::SubmitBlock(i));
+        }
+        // Scenario events ride the same relative timeline. They are
+        // operator actions on the control plane (reclaims touch the
+        // LRMS and broker), so they ride the control shard.
+        for ev in &self.cfg.scenario.events {
+            if ev.site() >= self.n_sites {
+                continue; // plan written for a bigger world: ignore
+            }
+            match *ev {
+                ScenarioEvent::SpotWave { site, at, count } => {
+                    q.schedule_at(SimTime(t.0 + at.0),
+                                  Ev::SpotWave { site, count });
+                }
+                ScenarioEvent::SiteOutage { site, at, duration_secs } => {
+                    q.schedule_at(SimTime(t.0 + at.0),
+                                  Ev::OutageStart { site });
+                    q.schedule_at(SimTime(t.0 + at.0 + duration_secs),
+                                  Ev::OutageEnd { site });
+                }
+                ScenarioEvent::PriceSpike { site, at, duration_secs,
+                                            factor } => {
+                    q.schedule_at(SimTime(t.0 + at.0),
+                                  Ev::PriceSpikeStart { site, factor });
+                    q.schedule_at(SimTime(t.0 + at.0 + duration_secs),
+                                  Ev::PriceSpikeEnd { site });
+                }
+            }
+        }
+        if !self.clues_ticking {
+            self.clues_ticking = true;
+            q.schedule_in(self.clues.cfg.poll_interval_s, Ev::CluesTick);
+        }
+    }
+
+    /// A node was lost mid-lifecycle (boot failure, crash, preemption):
+    /// complete whatever update is still in flight for it, or the
+    /// serialized engine stalls forever. Handles both CLUES-originated
+    /// workers (tracked in `update_for_node`) and *initial* workers,
+    /// which are provisioned inside the InitialDeploy update with no
+    /// per-node entry — a pre-join loss of one must still drain
+    /// `initial_pending`.
+    fn settle_update_on_loss(&mut self, q: &mut ShardedQueue<Ev>,
+                             node: NodeId, rt: &NodeRt, t: SimTime) {
+        if let Some(id) = self.update_for_node.remove(&node) {
+            let _ = self.engine.complete(id, t);
+            q.schedule_in(0.0, Ev::OrchestratorPump);
+        } else if rt.role == NodeRole::WorkerNode
+            && rt.joined_at.is_none()
+            && self.initial_pending > 0
+        {
+            self.initial_pending -= 1;
+            if self.initial_pending == 0 {
+                if let Some(id) = self.deploy_update.take() {
+                    let _ = self.engine.complete(id, t);
+                    self.begin_workload(q, t);
+                    q.schedule_in(0.0, Ev::OrchestratorPump);
+                }
+            }
+        }
+    }
+
+    /// Forcibly reclaim one node's VM (scenario spot wave / outage).
+    /// Running jobs requeue and are tracked for the recovery metric; a
+    /// node already being decommissioned is left to finish normally,
+    /// and the front end is never reclaimed (it is the cluster's fixed
+    /// point — LRMS controller + vRouter CP). Returns true if the node
+    /// was actually reclaimed.
+    fn preempt_node(&mut self, q: &mut ShardedQueue<Ev>,
+                    sites: &mut [SiteWorld], node: NodeId, t: SimTime,
+                    reason: &str) -> bool {
+        let Some(rt) = self.nodes.get(&node).copied() else {
+            return false;
+        };
+        if rt.role == NodeRole::FrontEnd {
+            return false; // the FE survives preemption scenarios
+        }
+        if rt.site >= sites.len() {
+            return false; // placeholder: no site chosen, no VM yet
+        }
+        if sites[rt.site].cloud.crash_vm(rt.vm, t).is_err() {
+            // Already Terminating/Terminated: the in-flight
+            // decommission owns the ledger close and update.
+            return false;
+        }
+        let name = self.names.name(node);
+        let mut requeued = self
+            .lrms
+            .set_node_health(&name, NodeHealth::Down, t)
+            .unwrap_or_default();
+        if let Ok(more) = self.lrms.deregister_node(&name, t) {
+            requeued.extend(more);
+        }
+        for j in requeued {
+            if self.preempt_pending.insert(j) {
+                self.preempted_jobs += 1;
+            }
+        }
+        self.settle_update_on_loss(q, node, &rt, t);
+        self.nodes.remove(&node);
+        self.clues.set_state_id(node, PowerState::Failed);
+        self.clues.forget_id(node);
+        self.recorder.node_state_id(t, node, DisplayState::Failed);
+        self.recorder.milestone(t, format!("{name} {reason}"));
+        self.preempted_vms += 1;
+        true
+    }
+
+    /// Nodes at `site` eligible for forcible reclaim, in deterministic
+    /// (NodeId) order. The front end survives: it is the cluster's
+    /// fixed point (LRMS controller + vRouter CP).
+    fn reclaim_victims(&self, site: usize, workers_only: bool)
+        -> Vec<NodeId> {
+        let mut victims: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|(_, rt)| {
+                rt.site == site
+                    && rt.role != NodeRole::FrontEnd
+                    && (!workers_only
+                        || (rt.role == NodeRole::WorkerNode
+                            && rt.joined_at.is_some()))
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        victims.sort();
+        victims
+    }
+
+    /// Injection times are relative to the workload t0.
+    fn reported_down(&self, node: &str, t: SimTime) -> bool {
+        self.cfg.injections.node_reported_down(
+            node, SimTime(t.0 - self.workload_t0.0))
+    }
+
+    /// One CLUES monitor pass (no `InjectionPlan` clone: the closure
+    /// borrows the plan for the duration of the tick).
+    fn clues_tick(&mut self, t: SimTime) -> Vec<Action> {
+        let w0 = self.workload_t0;
+        let inj = &self.cfg.injections;
+        self.clues.tick(t, self.lrms.as_ref(), &|n| {
+            inj.node_reported_down(n, SimTime(t.0 - w0.0))
+        })
+    }
+
+    /// Run LRMS scheduling and materialize job executions as
+    /// site-shard timers.
+    fn pump_jobs(&mut self, q: &mut ShardedQueue<Ev>, t: SimTime) {
+        for (job, node) in self.lrms.schedule(t) {
+            let mut secs = Workload::sample_job_secs(&mut self.rng);
+            // Scheduled jobs always run on a joined node, whose site is
+            // known — that site's shard carries the execution timer.
+            let mut site = 0usize;
+            if let Some(rt) = self.nodes.get_mut(&node) {
+                site = rt.site;
+                if !rt.setup_done {
+                    // One-time udocker install + image pull + container
+                    // create (paper: ~4 min 30 s).
+                    secs += self.cfg.workload.sample_setup_secs(
+                        &mut self.rng);
+                    rt.setup_done = true;
+                }
+            }
+            self.recorder.node_state_id(t, node, DisplayState::Used);
+            // Real inference (sampled): wall-clock compute, virtual time
+            // stays the paper's measured job duration.
+            if let Some(rtm) = &self.runtime {
+                let every = self.cfg.inference_every.max(1) as u64;
+                if self.next_file_id % every == 0 {
+                    let w0 = std::time::Instant::now();
+                    if rtm.infer_file(self.next_file_id).is_ok() {
+                        self.inferences_run += 1;
+                        self.inference_wall_secs +=
+                            w0.elapsed().as_secs_f64();
+                    }
+                }
+            }
+            self.next_file_id += 1;
+            let gen = self.lrms.job(job).map(|j| j.requeues).unwrap_or(0);
+            q.schedule_in(secs, Ev::JobTimer { site, job, node, gen });
+        }
+    }
+
+    fn workload_done(&self) -> bool {
+        let total: u32 = self.cfg.workload.total_jobs();
+        self.jobs_completed >= total
+    }
+
+    /// Process one site's batched completed-run report: validate each
+    /// run against the live LRMS record (stale executions that were
+    /// requeued away are dropped), free the slots, account busy time,
+    /// then run one scheduling sweep for the whole batch.
+    fn apply_job_batch(&mut self, q: &mut ShardedQueue<Ev>,
+                       done: Vec<super::JobRun>, t: SimTime) {
+        for run in done {
+            let live = self.lrms.job(run.job).map(|j| {
+                j.requeues == run.gen
+                    && j.state == crate::lrms::JobState::Running
+                    && j.node == Some(run.node)
+            }).unwrap_or(false);
+            if !live {
+                continue;
+            }
+            let _ = self.lrms.on_job_finished(run.job, true, t);
+            self.jobs_completed += 1;
+            if self.preempt_pending.remove(&run.job) {
+                self.preempt_recovered += 1;
+            }
+            if let Some(stat) = self.lrms.node_stat(run.node) {
+                if stat.used_slots == 0 {
+                    self.recorder.node_state_id(t, run.node,
+                                                DisplayState::Idle);
+                }
+            }
+            // Record the run interval from the LRMS job record.
+            if let Some(j) = self.lrms.job(run.job) {
+                if let (Some(s), Some(e)) = (j.started_at, j.finished_at)
+                {
+                    self.recorder.job_run_id(run.node, s, e);
+                    if let Some(&ri) = self.live_record.get(&run.node) {
+                        self.vm_records[ri].busy_secs += e.0 - s.0;
+                    }
+                }
+            }
+        }
+        self.pump_jobs(q, t);
+    }
+
+    // ---------------------------------------------------------------
+    // CLUES action execution
+    // ---------------------------------------------------------------
+
+    fn apply_clues_actions(&mut self, q: &mut ShardedQueue<Ev>,
+                           actions: Vec<Action>, t: SimTime) {
+        for action in actions {
+            match action {
+                Action::PowerOn { count } => {
+                    for _ in 0..count {
+                        let (id, name) = self.next_worker();
+                        // Reserve the name immediately so subsequent
+                        // PowerOns pick fresh ones.
+                        self.nodes.insert(id, NodeRt {
+                            site: usize::MAX,
+                            vm: VmId(u64::MAX),
+                            role: NodeRole::WorkerNode,
+                            setup_done: false,
+                            requested_at: t,
+                            joined_at: None,
+                        });
+                        self.clues.track_id(id, PowerState::PoweringOn);
+                        self.recorder.node_state_id(
+                            t, id, DisplayState::PoweringOn);
+                        self.engine.submit(UpdateOp::AddWorker {
+                            name,
+                        }, t);
+                    }
+                    q.schedule_in(0.0, Ev::OrchestratorPump);
+                }
+                Action::PowerOff { node } => {
+                    let id = self.names.intern(&node);
+                    self.engine.submit(UpdateOp::RemoveWorker {
+                        name: node,
+                    }, t);
+                    self.recorder.node_state_id(t, id,
+                                                DisplayState::PoweringOff);
+                    q.schedule_in(0.0, Ev::OrchestratorPump);
+                }
+                Action::CancelPowerOff { node } => {
+                    // O(1) keyed lookup instead of scanning the whole
+                    // update history.
+                    let id = self.engine.find_queued_remove(&node);
+                    match id {
+                        Some(id) if self.engine.cancel(id, t).is_ok() => {
+                            // Rescued: the node never left.
+                            let nid = self.names.intern(&node);
+                            self.clues.set_state_id(nid, PowerState::On);
+                            let idle = self
+                                .lrms
+                                .node_stat(nid)
+                                .map(|s| s.is_idle())
+                                .unwrap_or(false);
+                            self.recorder.node_state_id(t, nid,
+                                if idle { DisplayState::Idle }
+                                else { DisplayState::Used });
+                            self.recorder.milestone(t, format!(
+                                "power-off of {node} cancelled \
+                                 (jobs arrived early)"));
+                        }
+                        _ => {
+                            // Too late (vnode-3): it will power off.
+                        }
+                    }
+                }
+                Action::MarkFailed { node } => {
+                    let id = self.names.intern(&node);
+                    self.recorder.node_state_id(t, id,
+                                                DisplayState::Failed);
+                    self.recorder.milestone(t, format!(
+                        "{node} detected as off — marked failed, \
+                         powering off to avoid cost"));
+                    // Requeue its jobs and power it off.
+                    let _ = self.lrms.set_node_health(&node,
+                                                      NodeHealth::Down, t);
+                    self.engine.submit(UpdateOp::RemoveWorker {
+                        name: node,
+                    }, t);
+                    q.schedule_in(0.0, Ev::OrchestratorPump);
+                }
+            }
+        }
+    }
+
+    /// Start any updates the (possibly serialized) engine allows.
+    fn pump_orchestrator(&mut self, q: &mut ShardedQueue<Ev>,
+                         sites: &mut [SiteWorld], t: SimTime) {
+        for update in self.engine.startable(t) {
+            match &update.op {
+                UpdateOp::AddWorker { name } => {
+                    let id = self.names.intern(name);
+                    if !self.start_add_worker(q, sites, name, t) {
+                        // No capacity: finish the update immediately and
+                        // stop tracking the phantom node. Re-pump so
+                        // updates queued behind this one are not starved.
+                        let _ = self.engine.complete(update.id, t);
+                        self.nodes.remove(&id);
+                        self.clues.forget_id(id);
+                        self.recorder.node_state_id(t, id,
+                                                    DisplayState::Off);
+                        q.schedule_in(0.0, Ev::OrchestratorPump);
+                    } else {
+                        self.update_for_node.insert(id, update.id);
+                    }
+                }
+                UpdateOp::RemoveWorker { name } => {
+                    let id = self.names.intern(name);
+                    let Some(rt) = self.nodes.get(&id).copied() else {
+                        let _ = self.engine.complete(update.id, t);
+                        q.schedule_in(0.0, Ev::OrchestratorPump);
+                        continue;
+                    };
+                    if rt.site >= sites.len() {
+                        // The original node died and its name was
+                        // reused by a PowerOn reservation that has no
+                        // site yet (placeholder, site == usize::MAX):
+                        // nothing to decommission. The old
+                        // Im::decommission_node bounds check caught
+                        // this; with the single-site Im API the guard
+                        // lives here.
+                        let _ = self.engine.complete(update.id, t);
+                        q.schedule_in(0.0, Ev::OrchestratorPump);
+                        continue;
+                    }
+                    let _ = self.lrms.deregister_node(name, t);
+                    match self.im.decommission_node(
+                        &mut sites[rt.site].cloud, rt.vm, name, t) {
+                        Ok(secs) => {
+                            q.schedule_in(secs, Ev::TerminationDone {
+                                site: rt.site,
+                                vm: rt.vm,
+                                node: id,
+                                update: Some(update.id),
+                            });
+                        }
+                        Err(_) => {
+                            let _ = self.engine.complete(update.id, t);
+                            q.schedule_in(0.0, Ev::OrchestratorPump);
+                        }
+                    }
+                }
+                UpdateOp::InitialDeploy => {
+                    self.deploy_update = Some(update.id);
+                    let used = self.used_workers_per_site();
+                    // FE placement is always SLA-ranked (the fixed
+                    // point); the configured policy governs workers.
+                    let fe_site = self.broker.select_front_end(
+                        sites, &used,
+                        self.cfg.template.front_end.num_cpus, t)
+                        .unwrap_or(0);
+                    self.fe_site = fe_site;
+                    self.broker.set_front_end(fe_site, &self.net, sites);
+                    if let Err(e) = self.provision(q, sites, fe_site,
+                                                   FE_NAME,
+                                                   NodeRole::FrontEnd, t) {
+                        self.recorder.milestone(t, format!(
+                            "FATAL: cannot provision front-end: {e}"));
+                        let _ = self.engine.complete(update.id, t);
+                    } else {
+                        self.recorder.milestone(t, format!(
+                            "deploying front-end at {}",
+                            sites[fe_site].cloud.spec.name));
+                    }
+                }
+            }
+        }
+    }
+
+    /// A node finished contextualization and joins the cluster.
+    fn node_ready(&mut self, q: &mut ShardedQueue<Ev>,
+                  sites: &mut [SiteWorld], node: NodeId, t: SimTime) {
+        let Some(rt) = self.nodes.get_mut(&node) else { return };
+        rt.joined_at = Some(t);
+        let (site, role, requested_at) =
+            (rt.site, rt.role, rt.requested_at);
+        let name = self.names.name(node);
+        self.deploy_log.push((name.clone(), requested_at, t));
+        // Non-FE nodes keep a reverse tunnel to the Ansible master so
+        // the control node can reach them without a public IP.
+        if role != NodeRole::FrontEnd {
+            let _ = self.im.connect_node(&name, t);
+        }
+        match role {
+            NodeRole::FrontEnd => {
+                self.fe_ready = true;
+                self.im.establish_master(FE_NAME);
+                // FE hosts the vRouter central point + CA.
+                let base = sites[site]
+                    .cloud
+                    .networks
+                    .get(crate::cloudsim::NetworkId(0))
+                    .map(|n| n.cidr_base)
+                    .unwrap_or(0x0A00_0000);
+                let loc = sites[site].cloud.net_id;
+                let _ = self.overlay.add_central_point(
+                    FE_NAME, loc, base, t);
+                self.recorder.milestone(t,
+                    "front-end ready (LRMS controller + NFS + \
+                     vRouter CP)".to_string());
+                self.recorder.node_state_id(t, node,
+                                            DisplayState::Used);
+                // Initial workers, all within the same
+                // InitialDeploy update.
+                self.initial_pending =
+                    self.cfg.template.scalable.count;
+                if self.initial_pending == 0 {
+                    if let Some(id) = self.deploy_update.take() {
+                        let _ = self.engine.complete(id, t);
+                        self.begin_workload(q, t);
+                        q.schedule_in(0.0, Ev::OrchestratorPump);
+                    }
+                }
+                for _ in 0..self.cfg.template.scalable.count {
+                    let (wid, wname) = self.next_worker();
+                    self.clues.track_id(wid, PowerState::PoweringOn);
+                    // Initial workers are provisioned directly by
+                    // the IM inside the initial update.
+                    if !self.start_add_worker(q, sites, &wname, t) {
+                        self.initial_pending -= 1;
+                    }
+                }
+            }
+            NodeRole::SiteVRouter => {
+                // Register + connect the site router to the CP.
+                let loc = sites[site].cloud.net_id;
+                let base = self
+                    .im
+                    .networks
+                    .get(&site)
+                    .and_then(|nid| {
+                        sites[site].cloud.networks.get(*nid)
+                    })
+                    .map(|n| n.cidr_base)
+                    .unwrap_or(0x0A01_0000);
+                let _ = self
+                    .im
+                    .retrieve_certificate(&mut self.overlay,
+                                          &name, t);
+                // add_site_router issues the cert itself if the
+                // callback did not; remove double issue.
+                if self.overlay.element(&name).is_none() {
+                    if self.overlay.ca.verify(&name) {
+                        let _ = self.overlay.ca.revoke(&name);
+                    }
+                    let _ = self.overlay.add_site_router(
+                        &name, loc, base, t);
+                }
+                self.recorder.milestone(t, format!(
+                    "{name} connected to the CP (overlay up at \
+                     {})", sites[site].cloud.spec.name));
+                self.recorder.node_state_id(t, node,
+                                            DisplayState::Used);
+            }
+            NodeRole::WorkerNode => {
+                // Join the LRMS; node becomes schedulable.
+                self.lrms.register_node(
+                    &name, self.clues.cfg.slots_per_worker, t);
+                self.clues.track_id(node, PowerState::On);
+                self.clues.set_state_id(node, PowerState::On);
+                self.recorder.node_state_id(t, node,
+                                            DisplayState::Idle);
+                self.recorder.milestone(t, format!(
+                    "{name} joined the cluster"));
+                if let Some(id) = self.update_for_node.remove(&node)
+                {
+                    let _ = self.engine.complete(id, t);
+                    q.schedule_in(0.0, Ev::OrchestratorPump);
+                }
+                if self.initial_pending > 0 {
+                    self.initial_pending -= 1;
+                    if self.initial_pending == 0 {
+                        if let Some(id) = self.deploy_update.take() {
+                            let _ = self.engine.complete(id, t);
+                            self.begin_workload(q, t);
+                            q.schedule_in(0.0,
+                                          Ev::OrchestratorPump);
+                        }
+                    }
+                }
+                self.pump_jobs(q, t);
+            }
+        }
+    }
+}
+
+impl ControlPlane for ControlWorld {
+    type Site = SiteWorld;
+
+    /// The conservative lookahead of the sharded engines: every
+    /// site→control emission is at least this far in the future.
+    fn lookahead(&self) -> f64 {
+        self.control_latency
+    }
+
+    fn handle(&mut self, sites: &mut [SiteWorld], t: SimTime, ev: Ev,
+              q: &mut ShardedQueue<Ev>) {
+        match ev {
+            Ev::Deploy => {
+                self.engine.submit(UpdateOp::InitialDeploy, t);
+                self.pump_orchestrator(q, sites, t);
+            }
+
+            Ev::SubmitBlock(i) => {
+                let jobs = self.cfg.workload.blocks[i].jobs;
+                // One bulk core call per block (a 100k-job block is a
+                // single submit), not one trait dispatch per job.
+                self.lrms.submit_batch(jobs, 1, t);
+                self.jobs_submitted += jobs;
+                self.recorder.milestone(t, format!(
+                    "block {} submitted: {jobs} jobs", i + 1));
+                self.pump_jobs(q, t);
+                // Immediate CLUES reaction on new work.
+                let actions = self.clues_tick(t);
+                self.apply_clues_actions(q, actions, t);
+            }
+
+            Ev::NodeReady { site, vm, node } => {
+                // Stale if this VM incarnation was reclaimed while the
+                // notification crossed the WAN and the name was reused
+                // for a successor — a successor must not be joined on
+                // the strength of its predecessor's contextualization.
+                let live = self.nodes.get(&node)
+                    .map(|rt| rt.vm == vm && rt.site == site)
+                    .unwrap_or(false);
+                if !live {
+                    return;
+                }
+                self.node_ready(q, sites, node, t);
+            }
+
+            Ev::BootFailed { site, vm, node } => {
+                let Some(rt) = self.nodes.get(&node).copied() else {
+                    return;
+                };
+                if rt.vm != vm || rt.site != site {
+                    return; // stale: the name already hosts a successor
+                }
+                // Retry through CLUES on the next tick (the node
+                // vanishes; CLUES sees the deficit again).
+                self.settle_update_on_loss(q, node, &rt, t);
+                self.nodes.remove(&node);
+                self.clues.forget_id(node);
+            }
+
+            Ev::JobBatch { done, .. } => {
+                self.apply_job_batch(q, done, t);
+            }
+
+            Ev::CluesTick => {
+                let actions = self.clues_tick(t);
+                self.apply_clues_actions(q, actions, t);
+                // Recovery path for transient flaps: if the monitor reads
+                // the node as up again and the LRMS had it Down, revive.
+                // The snapshot buffer is owned scratch (taken off self),
+                // so the loop body may mutate the LRMS while iterating —
+                // and the tick allocates nothing at steady state.
+                let mut stats = std::mem::take(&mut self.stats_scratch);
+                self.lrms.node_stats_into(&mut stats);
+                for s in &stats {
+                    if s.health != NodeHealth::Down {
+                        continue;
+                    }
+                    let id = s.id;
+                    let name = self.names.name(id);
+                    // Only revive if CLUES has not already failed it.
+                    if !self.reported_down(&name, t)
+                        && self.clues.state_id(id) == Some(PowerState::On)
+                    {
+                        let _ = self.lrms.set_node_health(
+                            &name, NodeHealth::Up, t);
+                    }
+                }
+                self.stats_scratch = stats;
+                self.pump_jobs(q, t);
+                // Keep ticking while there is anything left to manage.
+                let all_workers_off = self
+                    .nodes
+                    .values()
+                    .filter(|rt| rt.role == NodeRole::WorkerNode)
+                    .count() == 0;
+                if !(self.workload_done() && all_workers_off) {
+                    q.schedule_in(self.clues.cfg.poll_interval_s,
+                                  Ev::CluesTick);
+                } else {
+                    self.recorder.milestone(t,
+                        "workload complete, all workers released"
+                            .to_string());
+                }
+            }
+
+            Ev::OrchestratorPump => {
+                self.pump_orchestrator(q, sites, t);
+            }
+
+            Ev::NodeLost { site, vm, node, preempted } => {
+                // Stale if the node was already replaced or terminated.
+                let Some(rt) = self.nodes.get(&node).copied() else {
+                    return;
+                };
+                if rt.vm != vm || rt.site != site {
+                    return;
+                }
+                // The site already crashed the VM (and closed its
+                // ledger row); the controller's side is the LRMS
+                // requeue + elasticity bookkeeping.
+                let name = self.names.name(node);
+                let mut requeued = self
+                    .lrms
+                    .set_node_health(&name, NodeHealth::Down, t)
+                    .unwrap_or_default();
+                if let Ok(more) = self.lrms.deregister_node(&name, t) {
+                    requeued.extend(more);
+                }
+                if preempted {
+                    for j in requeued {
+                        if self.preempt_pending.insert(j) {
+                            self.preempted_jobs += 1;
+                        }
+                    }
+                    self.preempted_vms += 1;
+                }
+                self.settle_update_on_loss(q, node, &rt, t);
+                self.nodes.remove(&node);
+                self.clues.set_state_id(node, PowerState::Failed);
+                self.clues.forget_id(node);
+                // CLUES replaces it on its next tick if jobs remain.
+                self.pump_jobs(q, t);
+            }
+
+            Ev::NodeOff { site, vm, node, update } => {
+                // Drop the node only if this is still the incarnation
+                // the termination belonged to: a crash notification in
+                // the same latency window may already have removed it
+                // and freed the name for a successor, which must not
+                // be forgotten by its predecessor's power-off.
+                let live = self.nodes.get(&node)
+                    .map(|rt| rt.vm == vm && rt.site == site)
+                    .unwrap_or(false);
+                if live {
+                    self.nodes.remove(&node);
+                    self.clues.set_state_id(node, PowerState::Off);
+                    self.clues.forget_id(node);
+                }
+                // The decommission update is done either way.
+                if let Some(id) = update {
+                    let _ = self.engine.complete(id, t);
+                    q.schedule_in(0.0, Ev::OrchestratorPump);
+                }
+            }
+
+            Ev::SpotWave { site, count } => {
+                let victims = self.reclaim_victims(site, true);
+                let n = if count == 0 {
+                    victims.len()
+                } else {
+                    (count as usize).min(victims.len())
+                };
+                self.recorder.milestone(t, format!(
+                    "spot-preemption wave at {}: reclaiming {n} of {} \
+                     workers", sites[site].cloud.spec.name,
+                    victims.len()));
+                for id in victims.into_iter().take(n) {
+                    self.preempt_node(q, sites, id, t,
+                                      "preempted (spot wave)");
+                }
+                // Immediate CLUES pass so replacements start promptly
+                // (the broker decides where they land).
+                let actions = self.clues_tick(t);
+                self.apply_clues_actions(q, actions, t);
+                self.pump_jobs(q, t);
+            }
+
+            Ev::OutageStart { site } => {
+                self.broker.set_outage(site, true);
+                self.recorder.milestone(t, format!(
+                    "site outage: {} dark", sites[site].cloud.spec.name));
+                for id in self.reclaim_victims(site, false) {
+                    self.preempt_node(q, sites, id, t,
+                                      "lost to site outage");
+                }
+                let actions = self.clues_tick(t);
+                self.apply_clues_actions(q, actions, t);
+                self.pump_jobs(q, t);
+            }
+
+            Ev::OutageEnd { site } => {
+                self.broker.set_outage(site, false);
+                self.recorder.milestone(t, format!(
+                    "site outage over: {} eligible again",
+                    sites[site].cloud.spec.name));
+            }
+
+            Ev::PriceSpikeStart { site, factor } => {
+                // The broker reads the site's factor through its
+                // signals, so billing and policy stay in sync by
+                // construction. Overlapping windows compose: the
+                // latest spike's factor rules until every open window
+                // has ended.
+                self.price_spikes_active[site] += 1;
+                sites[site].cloud.set_price_factor(factor);
+                self.recorder.milestone(t, format!(
+                    "price spike at {}: {factor}x list for new launches",
+                    sites[site].cloud.spec.name));
+            }
+
+            Ev::PriceSpikeEnd { site } => {
+                self.price_spikes_active[site] =
+                    self.price_spikes_active[site].saturating_sub(1);
+                if self.price_spikes_active[site] == 0 {
+                    sites[site].cloud.set_price_factor(1.0);
+                    self.recorder.milestone(t, format!(
+                        "price spike over at {}",
+                        sites[site].cloud.spec.name));
+                } else {
+                    self.recorder.milestone(t, format!(
+                        "price spike window closed at {} (another spike \
+                         still active)", sites[site].cloud.spec.name));
+                }
+            }
+
+            // Site-shard events never reach the control handler.
+            Ev::BootDone { .. }
+            | Ev::CtxTimer { .. }
+            | Ev::JobTimer { .. }
+            | Ev::FlushTimer { .. }
+            | Ev::CrashTimer { .. }
+            | Ev::TerminationDone { .. } => {
+                unreachable!("site event routed to the control shard")
+            }
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! The site-local half of the cluster world: one [`SiteWorld`] per
+//! cloud site, replayed on that site's event shard.
+//!
+//! A site handler owns its [`CloudSite`] (VM lifecycle, ledger,
+//! pricing, networks), the in-flight boot/contextualization timers for
+//! VMs at the site, the job-execution timers of jobs running on its
+//! nodes, the completed-run report buffer, and a per-shard
+//! [`Recorder`]. It touches nothing else — the shared [`NodeNames`]
+//! interner is only ever *read* here (ids are interned at the control
+//! plane, so the dense id space never depends on site-thread
+//! interleaving) — and it reaches the control plane exclusively
+//! through [`SiteCtx::emit_control_in`] with the configured
+//! control-latency delay. That pair of rules is what makes windows of
+//! site events safe to replay in parallel and byte-identical across
+//! the serial/sharded/stealing engines.
+
+use crate::cloudsim::CloudSite;
+use crate::ids::{NodeId, NodeNames};
+use crate::metrics::{DisplayState, Recorder};
+use crate::sim::shard::{SiteCtx, SiteShard};
+use crate::sim::SimTime;
+
+use super::{Ev, JobRun};
+
+/// Everything site-local, replayed on the site's own shard.
+pub struct SiteWorld {
+    pub(crate) site: usize,
+    /// The IaaS site itself: VMs, ledger, pricing, networks.
+    pub cloud: CloudSite,
+    /// This shard's metrics stream (merged with the control shard and
+    /// its site peers at run end).
+    pub(crate) recorder: Recorder,
+    /// Shared interner handle — read-only on the site side.
+    names: NodeNames,
+    /// Completed runs the controller has not been told about yet.
+    done_buf: Vec<JobRun>,
+    /// A `FlushTimer` is already scheduled for `done_buf`.
+    flush_scheduled: bool,
+    /// Site→control notification latency (the engine lookahead).
+    control_latency: f64,
+    /// Completed-run report grid, seconds (≤ 0 = report immediately).
+    report_grid: f64,
+}
+
+impl SiteWorld {
+    pub(crate) fn new(site: usize, cloud: CloudSite, recorder: Recorder,
+                      names: NodeNames, control_latency: f64,
+                      report_grid: f64) -> SiteWorld {
+        SiteWorld {
+            site,
+            cloud,
+            recorder,
+            names,
+            done_buf: Vec::new(),
+            flush_scheduled: false,
+            control_latency,
+            report_grid,
+        }
+    }
+
+    /// Take the shard recorder out for merging (report assembly).
+    pub(crate) fn take_recorder(&mut self) -> Recorder {
+        std::mem::take(&mut self.recorder)
+    }
+
+    /// The next completed-run flush instant for a completion at `t`:
+    /// the next strict multiple of the report grid (so a burst of
+    /// completions in one grid slot becomes one controller report), or
+    /// `t` itself when batching is disabled.
+    fn next_flush_at(&self, t: f64) -> f64 {
+        if self.report_grid <= 0.0 {
+            return t;
+        }
+        ((t / self.report_grid).floor() + 1.0) * self.report_grid
+    }
+}
+
+impl AsRef<CloudSite> for SiteWorld {
+    fn as_ref(&self) -> &CloudSite {
+        &self.cloud
+    }
+}
+
+impl SiteShard for SiteWorld {
+    type Event = Ev;
+
+    fn handle(&mut self, t: SimTime, ev: Ev, ctx: &mut SiteCtx<'_, Ev>) {
+        match ev {
+            Ev::BootDone { vm, node, failed, ctx_secs, .. } => {
+                // The VM may have been reclaimed (scenario wave /
+                // outage) while still booting — then it is already
+                // Failed and there is nothing left to complete.
+                if self.cloud.complete_boot(vm, failed, t).is_err() {
+                    return;
+                }
+                if failed {
+                    self.recorder.node_state_id(t, node,
+                                                DisplayState::Failed);
+                    self.recorder.milestone(t, format!(
+                        "{} failed to boot", self.names.name(node)));
+                    ctx.emit_control_in(self.control_latency,
+                                        Ev::BootFailed {
+                                            site: self.site,
+                                            vm,
+                                            node,
+                                        });
+                    return;
+                }
+                // Contextualization starts now (Ansible over the SSH
+                // reverse tunnel fabric).
+                ctx.schedule_in(ctx_secs, Ev::CtxTimer {
+                    site: self.site,
+                    vm,
+                    node,
+                });
+            }
+
+            Ev::CtxTimer { vm, node, .. } => {
+                // The node is configured; the controller hears about
+                // the join one WAN notification later.
+                ctx.emit_control_in(self.control_latency, Ev::NodeReady {
+                    site: self.site,
+                    vm,
+                    node,
+                });
+            }
+
+            Ev::JobTimer { job, node, gen, .. } => {
+                self.done_buf.push(JobRun { job, node, gen });
+                if !self.flush_scheduled {
+                    self.flush_scheduled = true;
+                    ctx.schedule_at(SimTime(self.next_flush_at(t.0)),
+                                    Ev::FlushTimer { site: self.site });
+                }
+            }
+
+            Ev::FlushTimer { .. } => {
+                self.flush_scheduled = false;
+                if self.done_buf.is_empty() {
+                    return;
+                }
+                let done = std::mem::take(&mut self.done_buf);
+                ctx.emit_control_in(self.control_latency, Ev::JobBatch {
+                    site: self.site,
+                    done,
+                });
+            }
+
+            Ev::CrashTimer { vm, node, preempt, .. } => {
+                // Stale unless this exact VM incarnation is still
+                // alive: crash_vm rejects Terminating/Terminated/Failed
+                // states, which is precisely the "already replaced or
+                // decommissioning" filter.
+                if self.cloud.crash_vm(vm, t).is_err() {
+                    return;
+                }
+                let name = self.names.name(node);
+                self.recorder.node_state_id(t, node, DisplayState::Failed);
+                self.recorder.milestone(t, if preempt {
+                    format!("{name} preempted (spot capacity reclaimed)")
+                } else {
+                    format!("{name} crashed (provider-side failure)")
+                });
+                ctx.emit_control_in(self.control_latency, Ev::NodeLost {
+                    site: self.site,
+                    vm,
+                    node,
+                    preempted: preempt,
+                });
+            }
+
+            Ev::TerminationDone { vm, node, update, .. } => {
+                let _ = self.cloud.complete_termination(vm, t);
+                self.recorder.node_state_id(t, node, DisplayState::Off);
+                self.recorder.milestone(t, format!(
+                    "{} powered off", self.names.name(node)));
+                ctx.emit_control_in(self.control_latency, Ev::NodeOff {
+                    site: self.site,
+                    vm,
+                    node,
+                    update,
+                });
+            }
+
+            // Control-shard events never reach a site handler.
+            _ => unreachable!("control event routed to site shard"),
+        }
+    }
+}

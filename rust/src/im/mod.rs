@@ -19,7 +19,7 @@ pub use contextualizer::{plan as ctx_plan, total_secs as ctx_total_secs,
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context};
+use anyhow::bail;
 
 use crate::cloudsim::{CloudSite, NetworkId, VmId, VmRequest, VmTicket};
 use crate::sim::SimTime;
@@ -102,17 +102,18 @@ impl Im {
     }
 
     /// Step 1 of the paper's §3.1 flow: create the per-site private
-    /// network (idempotent per site). Returns (network, creation secs;
-    /// 0 if it already existed).
-    pub fn ensure_network(&mut self, sites: &mut [CloudSite],
+    /// network (idempotent per site). The caller hands the IM the one
+    /// site it is operating on (`site_idx` keys the per-deployment
+    /// network map — in the site-partitioned cluster world, site state
+    /// is owned by that site's shard, so the IM never sees the whole
+    /// site vector). Returns (network, creation secs; 0 if it already
+    /// existed).
+    pub fn ensure_network(&mut self, site: &mut CloudSite,
                           site_idx: usize, deployment: &str)
         -> anyhow::Result<(NetworkId, f64)> {
         if let Some(&net) = self.networks.get(&site_idx) {
             return Ok((net, 0.0));
         }
-        let site = sites
-            .get_mut(site_idx)
-            .context("site index out of range")?;
         let (net, secs) =
             site.create_network(&format!("{deployment}-net"))?;
         self.networks.insert(site_idx, net);
@@ -121,9 +122,10 @@ impl Im {
 
     /// Provision one node: network-first, then the VM (public IP only for
     /// the front-end / CP), then plan its contextualization.
+    #[allow(clippy::too_many_arguments)]
     pub fn provision_node(
         &mut self,
-        sites: &mut [CloudSite],
+        site: &mut CloudSite,
         site_idx: usize,
         deployment: &str,
         name: &str,
@@ -133,8 +135,7 @@ impl Im {
         t: SimTime,
     ) -> anyhow::Result<NodeProvision> {
         let (net, _net_secs) =
-            self.ensure_network(sites, site_idx, deployment)?;
-        let site = &mut sites[site_idx];
+            self.ensure_network(site, site_idx, deployment)?;
         let public_ip = role == NodeRole::FrontEnd;
         let ticket: VmTicket = site.request_vm(
             &VmRequest {
@@ -192,10 +193,9 @@ impl Im {
 
     /// Tear down a node (terminate + close its tunnel). Returns the
     /// provider termination latency.
-    pub fn decommission_node(&mut self, sites: &mut [CloudSite],
-                             site_idx: usize, vm: VmId, name: &str,
-                             t: SimTime) -> anyhow::Result<f64> {
-        let site = sites.get_mut(site_idx).context("site index")?;
+    pub fn decommission_node(&mut self, site: &mut CloudSite, vm: VmId,
+                             name: &str, t: SimTime)
+        -> anyhow::Result<f64> {
         let secs = site.terminate_vm(vm, t)?;
         self.tunnels.close(name);
         Ok(secs)
@@ -220,7 +220,7 @@ mod tests {
         let mut s = sites();
         let mut im = Im::new(9);
         let p = im
-            .provision_node(&mut s, 0, "dep1", "front-end",
+            .provision_node(&mut s[0], 0, "dep1", "front-end",
                             NodeRole::FrontEnd, "standard.medium",
                             LrmsKind::Slurm, SimTime(0.0))
             .unwrap();
@@ -236,14 +236,14 @@ mod tests {
     fn network_reused_across_nodes_same_site() {
         let mut s = sites();
         let mut im = Im::new(9);
-        im.provision_node(&mut s, 1, "dep1", "vnode-3",
+        im.provision_node(&mut s[1], 1, "dep1", "vnode-3",
                           NodeRole::WorkerNode, "t2.medium",
                           LrmsKind::Slurm, SimTime(0.0))
             .unwrap();
-        let (net1, secs1) = im.ensure_network(&mut s, 1, "dep1").unwrap();
+        let (net1, secs1) = im.ensure_network(&mut s[1], 1, "dep1").unwrap();
         assert_eq!(secs1, 0.0); // already created
         let p2 = im
-            .provision_node(&mut s, 1, "dep1", "vnode-4",
+            .provision_node(&mut s[1], 1, "dep1", "vnode-4",
                             NodeRole::WorkerNode, "t2.medium",
                             LrmsKind::Slurm, SimTime(5.0))
             .unwrap();
@@ -256,7 +256,7 @@ mod tests {
         let mut s = sites();
         let mut im = Im::new(9);
         let p = im
-            .provision_node(&mut s, 1, "dep1", "vnode-3",
+            .provision_node(&mut s[1], 1, "dep1", "vnode-3",
                             NodeRole::WorkerNode, "t2.medium",
                             LrmsKind::Slurm, SimTime(0.0))
             .unwrap();
@@ -295,14 +295,14 @@ mod tests {
         let mut im = Im::new(9);
         im.establish_master("front-end");
         let p = im
-            .provision_node(&mut s, 1, "dep1", "vnode-3",
+            .provision_node(&mut s[1], 1, "dep1", "vnode-3",
                             NodeRole::WorkerNode, "t2.medium",
                             LrmsKind::Slurm, SimTime(0.0))
             .unwrap();
         s[1].complete_boot(p.vm, false, SimTime(120.0)).unwrap();
         im.connect_node("vnode-3", SimTime(121.0)).unwrap();
         let secs = im
-            .decommission_node(&mut s, 1, p.vm, "vnode-3", SimTime(500.0))
+            .decommission_node(&mut s[1], p.vm, "vnode-3", SimTime(500.0))
             .unwrap();
         assert!(secs > 0.0);
         assert!(!im.tunnels.reachable("vnode-3"));
@@ -314,12 +314,12 @@ mod tests {
         let mut im = Im::new(9);
         // CESNET quota: 3 VMs.
         for i in 0..3 {
-            im.provision_node(&mut s, 0, "dep1", &format!("n{i}"),
+            im.provision_node(&mut s[0], 0, "dep1", &format!("n{i}"),
                               NodeRole::WorkerNode, "standard.medium",
                               LrmsKind::Slurm, SimTime(0.0))
                 .unwrap();
         }
-        let err = im.provision_node(&mut s, 0, "dep1", "n3",
+        let err = im.provision_node(&mut s[0], 0, "dep1", "n3",
                                     NodeRole::WorkerNode, "standard.medium",
                                     LrmsKind::Slurm, SimTime(0.0));
         assert!(err.is_err());

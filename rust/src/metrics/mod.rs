@@ -11,6 +11,12 @@
 //! [`Recorder::node_names`] is O(nodes) instead of the old O(n²)
 //! rescan of the whole transition log. Names are resolved only when a
 //! figure/table is rendered.
+//!
+//! For spill-mode runs the figures can also be rendered straight from
+//! the per-shard spill streams ([`Recorder::fig10_from_spills`] /
+//! [`Recorder::fig11_from_spills`] in [`spill`]) without materializing
+//! the merged recorder — property-proven byte-identical to merging
+//! first and rendering from memory.
 
 pub mod spill;
 

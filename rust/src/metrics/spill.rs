@@ -18,7 +18,7 @@
 //! paths byte-identical down to fig10/fig11 output.
 
 use std::cmp::{Ordering, Reverse};
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 use std::fmt;
 use std::fs::{self, File};
 use std::io::{BufRead, BufReader, BufWriter, Lines, Write};
@@ -28,7 +28,7 @@ use anyhow::{anyhow, Context};
 
 use crate::ids::NodeNames;
 use crate::sim::SimTime;
-use crate::util::csv::{format_row, parse_row};
+use crate::util::csv::{format_row, parse_row, Table};
 
 use super::{DisplayState, Recorder};
 
@@ -43,6 +43,27 @@ pub struct SpillFiles {
     pub notes: PathBuf,
     /// Total bytes written across the three streams.
     pub bytes: u64,
+}
+
+impl SpillFiles {
+    /// The spill set [`ShardSink::create`] writes for `shard` under
+    /// `dir` — the one place the on-disk naming convention lives.
+    /// `bytes` is 0: callers locating existing files (rather than
+    /// receiving the set from [`ShardSink::finish`]) have no byte
+    /// count.
+    pub fn locate(dir: impl AsRef<Path>, shard: u32) -> SpillFiles {
+        let dir = dir.as_ref();
+        let path = |stream: &str| {
+            dir.join(format!("shard-{shard:04}.{stream}.csv"))
+        };
+        SpillFiles {
+            shard,
+            states: path("states"),
+            jobs: path("jobs"),
+            notes: path("notes"),
+            bytes: 0,
+        }
+    }
 }
 
 /// Streaming writer for one shard's metrics. Mirrors the recording
@@ -87,27 +108,17 @@ impl ShardSink {
         let dir = dir.as_ref();
         fs::create_dir_all(dir)
             .with_context(|| format!("creating spill dir {dir:?}"))?;
-        let path = |stream: &str| {
-            dir.join(format!("shard-{shard:04}.{stream}.csv"))
-        };
         let open = |p: &PathBuf| -> anyhow::Result<BufWriter<File>> {
             let f = File::create(p)
                 .with_context(|| format!("creating spill file {p:?}"))?;
             Ok(BufWriter::new(f))
         };
-        let (states_p, jobs_p, notes_p) =
-            (path("states"), path("jobs"), path("notes"));
+        let out = SpillFiles::locate(dir, shard);
         let mut sink = ShardSink {
-            states: open(&states_p)?,
-            jobs: open(&jobs_p)?,
-            notes: open(&notes_p)?,
-            out: SpillFiles {
-                shard,
-                states: states_p,
-                jobs: jobs_p,
-                notes: notes_p,
-                bytes: 0,
-            },
+            states: open(&out.states)?,
+            jobs: open(&out.jobs)?,
+            notes: open(&out.notes)?,
+            out,
             err: None,
         };
         sink.header();
@@ -328,6 +339,121 @@ impl Recorder {
         Ok(merged)
     }
 
+    /// Figure 10 straight from the spill streams: one merged pass over
+    /// the states streams establishes the node column order, one over
+    /// the jobs streams collects compact per-node busy intervals, and
+    /// the bucket sweep renders from those — the merged recorder (with
+    /// its full transition log and milestone strings) is never
+    /// materialized. Byte-identical to
+    /// `Recorder::merge_spills(..)?.fig10_usage(..)`.
+    pub fn fig10_from_spills(spills: &[SpillFiles], bucket_secs: f64,
+                             until: SimTime) -> anyhow::Result<Table> {
+        // Column order: first appearance in the merged transition
+        // stream (exactly how the in-memory recorder builds `order`).
+        let mut index: HashMap<String, usize> = HashMap::new();
+        let mut names_in_order: Vec<String> = Vec::new();
+        let states: Vec<&Path> =
+            spills.iter().map(|s| s.states.as_path()).collect();
+        merge_stream(&states, |row| {
+            let node = field(row, 1, "node")?;
+            if !index.contains_key(node) {
+                index.insert(node.to_string(), names_in_order.len());
+                names_in_order.push(node.to_string());
+            }
+            Ok(())
+        })?;
+        // Busy intervals per column, in merged arrival order (end-time
+        // sorted), then stably re-sorted by start like the in-memory
+        // renderer.
+        let mut per_node: Vec<Vec<(f64, f64)>> =
+            vec![Vec::new(); names_in_order.len()];
+        let jobs: Vec<&Path> =
+            spills.iter().map(|s| s.jobs.as_path()).collect();
+        merge_stream(&jobs, |row| {
+            let end = parse_time_bits(field(row, 0, "end")?)?;
+            let node = field(row, 1, "node")?;
+            let start = parse_time_bits(field(row, 2, "start")?)?;
+            if let Some(&i) = index.get(node) {
+                per_node[i].push((start.0, end.0));
+            }
+            Ok(())
+        })?;
+        for runs in &mut per_node {
+            runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        }
+        let mut header = vec!["time".to_string()];
+        header.extend(names_in_order.iter().cloned());
+        let mut table = Table::new(header);
+        let mut cursor = vec![0usize; per_node.len()];
+        let mut t = 0.0;
+        while t <= until.0 {
+            let mut row = vec![SimTime(t).hms()];
+            for (i, runs) in per_node.iter().enumerate() {
+                let idx = &mut cursor[i];
+                while *idx < runs.len() && runs[*idx].1 <= t {
+                    *idx += 1;
+                }
+                let busy = *idx < runs.len()
+                    && runs[*idx].0 < t + bucket_secs
+                    && runs[*idx].1 > t;
+                row.push(if busy { "1".into() } else { "0".into() });
+            }
+            table.push(row);
+            t += bucket_secs;
+        }
+        Ok(table)
+    }
+
+    /// Figure 11 straight from the spill streams: a single merged pass
+    /// over the states streams with O(nodes) live state — buckets are
+    /// emitted as stream time passes them, so nothing is accumulated.
+    /// Byte-identical to `Recorder::merge_spills(..)?.fig11_states(..)`.
+    pub fn fig11_from_spills(spills: &[SpillFiles], bucket_secs: f64,
+                             until: SimTime) -> anyhow::Result<Table> {
+        fn emit_row(table: &mut Table,
+                    current: &HashMap<String, DisplayState>, t: f64) {
+            let count = |want: DisplayState| {
+                current.values().filter(|&&s| s == want).count().to_string()
+            };
+            table.push(vec![
+                SimTime(t).hms(),
+                count(DisplayState::Used),
+                count(DisplayState::PoweringOn),
+                count(DisplayState::Idle),
+                count(DisplayState::PoweringOff),
+                count(DisplayState::Failed),
+            ]);
+        }
+        let mut table = Table::new(vec![
+            "time", "used", "powering_on", "idle", "powering_off",
+            "failed",
+        ]);
+        let mut current: HashMap<String, DisplayState> = HashMap::new();
+        let mut t = 0.0;
+        let states: Vec<&Path> =
+            spills.iter().map(|s| s.states.as_path()).collect();
+        merge_stream(&states, |row| {
+            let rt = parse_time_bits(field(row, 0, "time")?)?;
+            let node = field(row, 1, "node")?;
+            let label = field(row, 2, "state")?;
+            let s = DisplayState::from_label(label).ok_or_else(
+                || anyhow!("unknown display state {label:?} in spill"))?;
+            // A bucket at `t` counts every transition with time <= t,
+            // so rows at exactly `t` apply before the bucket is cut.
+            while t <= until.0 && rt.0 > t {
+                emit_row(&mut table, &current, t);
+                t += bucket_secs;
+            }
+            current.insert(node.to_string(), s);
+            Ok(())
+        })?;
+        while t <= until.0 {
+            emit_row(&mut table, &current, t);
+            t += bucket_secs;
+        }
+        Ok(table)
+    }
+
     /// Write this in-memory recorder out as one shard's spill set,
     /// preserving record order — the bridge that lets the two merge
     /// paths be property-compared against each other.
@@ -449,5 +575,131 @@ mod tests {
             .expect("empty merge");
         assert!(merged.transitions.is_empty());
         assert!(merged.node_names().is_empty());
+    }
+
+    #[test]
+    fn figures_from_spills_match_merged_render() {
+        // Overlapping intervals, out-of-order starts within one node,
+        // a node that only ever appears in job runs (no column), and
+        // transitions at exact bucket boundaries.
+        let mut a = Recorder::new();
+        a.node_state(t(0.0), "wn-a", DisplayState::PoweringOn);
+        a.node_state(t(5.0), "wn-a", DisplayState::Used);
+        a.node_state(t(10.0), "wn-a", DisplayState::Idle);
+        a.job_run("wn-a", t(5.0), t(9.0));
+        a.job_run("wn-a", t(2.0), t(11.0)); // later end, earlier start
+        a.job_run("ghost", t(0.0), t(4.0)); // never in transitions
+        let mut b = Recorder::new();
+        b.node_state(t(1.0), "wn-b", DisplayState::Idle);
+        b.node_state(t(10.0), "wn-b", DisplayState::Used);
+        b.node_state(t(14.0), "wn-b", DisplayState::Off);
+        b.job_run("wn-b", t(10.0), t(14.0));
+
+        let dir = tmp("unit_fig_stream");
+        let spills = vec![
+            a.spill_to(&dir, 0).expect("spill a"),
+            b.spill_to(&dir, 1).expect("spill b"),
+        ];
+        let merged = Recorder::merge_spills(NodeNames::new(), &spills)
+            .expect("merge");
+        for bucket in [2.0, 5.0] {
+            for until in [0.0, 12.0, 30.0] {
+                let f10 = Recorder::fig10_from_spills(
+                    &spills, bucket, t(until)).expect("fig10 stream");
+                assert_eq!(f10.to_csv(),
+                           merged.fig10_usage(bucket, t(until)).to_csv(),
+                           "fig10 bucket={bucket} until={until}");
+                let f11 = Recorder::fig11_from_spills(
+                    &spills, bucket, t(until)).expect("fig11 stream");
+                assert_eq!(f11.to_csv(),
+                           merged.fig11_states(bucket, t(until)).to_csv(),
+                           "fig11 bucket={bucket} until={until}");
+            }
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prop_figures_from_spills_match_merged_render() {
+        use crate::util::proptest::check_n;
+        use crate::util::prng::Prng;
+
+        // Random per-shard recorders with *time-sorted* streams (the
+        // spill precondition, guaranteed by dispatch-order recording in
+        // the engines) — the streaming renders must match the merged
+        // recorder's byte for byte.
+        #[derive(Debug)]
+        struct Case {
+            shards: Vec<(Vec<(f64, u32, DisplayState)>,
+                         Vec<(u32, f64, f64)>)>,
+            bucket: f64,
+            until: f64,
+        }
+        let states = [DisplayState::Used, DisplayState::PoweringOn,
+                      DisplayState::Idle, DisplayState::PoweringOff,
+                      DisplayState::Off, DisplayState::Failed];
+        let gen = |r: &mut Prng| {
+            let shards = (0..1 + r.next_below(3))
+                .map(|_| {
+                    let mut ts = 0.0;
+                    let trans = (0..r.next_below(20))
+                        .map(|_| {
+                            ts += r.uniform(0.0, 7.0);
+                            (ts, r.next_below(5) as u32,
+                             states[r.next_below(6) as usize])
+                        })
+                        .collect::<Vec<_>>();
+                    let mut te = 0.0;
+                    let runs = (0..r.next_below(15))
+                        .map(|_| {
+                            te += r.uniform(0.0, 9.0);
+                            (r.next_below(5) as u32,
+                             (te - r.uniform(0.0, 30.0)).max(0.0), te)
+                        })
+                        .collect::<Vec<_>>();
+                    (trans, runs)
+                })
+                .collect();
+            Case {
+                shards,
+                bucket: r.uniform(1.0, 10.0),
+                until: r.uniform(0.0, 120.0),
+            }
+        };
+        check_n("fig-from-spills ≡ merged render", 32, gen, |case| {
+            let dir = tmp("prop_fig_stream");
+            let mut spills = Vec::new();
+            for (i, (trans, runs)) in case.shards.iter().enumerate() {
+                let mut rec = Recorder::new();
+                for &(at, node, s) in trans {
+                    rec.node_state(t(at), &format!("wn-{node}"), s);
+                }
+                for &(node, s, e) in runs {
+                    rec.job_run(&format!("wn-{node}"), t(s), t(e));
+                }
+                spills.push(rec.spill_to(&dir, i as u32)
+                    .map_err(|e| e.to_string())?);
+            }
+            let merged = Recorder::merge_spills(NodeNames::new(), &spills)
+                .map_err(|e| e.to_string())?;
+            let f10 = Recorder::fig10_from_spills(
+                &spills, case.bucket, t(case.until))
+                .map_err(|e| e.to_string())?;
+            if f10.to_csv()
+                != merged.fig10_usage(case.bucket, t(case.until)).to_csv()
+            {
+                return Err("fig10 diverged".into());
+            }
+            let f11 = Recorder::fig11_from_spills(
+                &spills, case.bucket, t(case.until))
+                .map_err(|e| e.to_string())?;
+            if f11.to_csv()
+                != merged.fig11_states(case.bucket, t(case.until)).to_csv()
+            {
+                return Err("fig11 diverged".into());
+            }
+            let _ = fs::remove_dir_all(&dir);
+            Ok(())
+        });
     }
 }

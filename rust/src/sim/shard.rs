@@ -44,9 +44,9 @@
 //! of the workload on one site) serializes behind the cold shards that
 //! share its chunk while other workers idle. [`run_sharded_stealing`]
 //! fixes that: each busy shard's window `[T, barrier)` becomes one
-//! sequential *chain* of time-sliced segments, all chains go onto a
+//! sequential *chain* (of one or more segments), all chains go onto a
 //! shared injector (a mutex-protected deque), and every worker thread
-//! steals the next ready segment — from any shard — the moment it
+//! steals the next ready chain — from any shard — the moment it
 //! finishes its previous one. A hot shard therefore never waits behind
 //! cold shards, and cold shards spread across the remaining workers.
 //!
@@ -66,11 +66,22 @@
 //! steals which segment. `tests/shard_equivalence.rs` proves it on
 //! skew-heavy randomized worlds with stealing on and off.
 //!
+//! **Worker↔chain affinity.** The worker that holds a chain drains its
+//! remaining segments itself before stealing another chain: the
+//! chain's heap and site state are already hot in its cache, and a
+//! sequential chain gains nothing from bouncing to a different core
+//! between segments (see [`steal_worker`] for the full argument).
+//! Determinism is untouched — the affinity only changes *which thread*
+//! executes a segment, never the segment order.
+//!
 //! Worlds whose handlers genuinely need global state on every event
-//! (e.g. the full [`crate::cluster::HybridCluster`] reproduction)
 //! implement [`MergedWorld`] instead and replay through
 //! [`run_merged_until`] — same queue, same deterministic order, serial
-//! dispatch. `tests/shard_equivalence.rs` proves serial ≡ parallel on
+//! dispatch. The full [`crate::cluster::HybridCluster`] reproduction
+//! used to be such a world; it is now split into per-site
+//! [`SiteShard`]s plus a [`ControlPlane`] and replays on all three
+//! engines (`rust/src/cluster/mod.rs` documents the ownership
+//! boundary). `tests/shard_equivalence.rs` proves serial ≡ parallel on
 //! randomized scenarios down to byte-identical figure output.
 
 use std::cmp::Ordering;
@@ -230,9 +241,12 @@ impl<E> ShardHeap<E> {
 
     /// Dispatch times of live pending entries with `t < below` and
     /// `t <= horizon`, appended to `out` in no particular order. This
-    /// snapshot of queue state — not thread timing — is what the
-    /// work-stealing engine cuts into segments, which is why stealing
-    /// cannot perturb the merge order.
+    /// snapshot of queue state — not thread timing — is what segment
+    /// cuts are computed from, which is why cutting cannot perturb the
+    /// merge order. Currently exercised by the unit tests only: with
+    /// worker↔chain affinity the stealing engine drains whole windows,
+    /// and a conditional-handoff policy would call this again.
+    #[cfg_attr(not(test), allow(dead_code))]
     pub(crate) fn pending_times(&self, below: f64, horizon: f64,
                                 out: &mut Vec<f64>) {
         for e in self.heap.iter() {
@@ -760,8 +774,13 @@ where
 pub struct StealConfig {
     /// Worker threads (clamped per window to the number of busy shards).
     pub threads: usize,
-    /// Target number of initially-pending events per stolen segment;
-    /// windows with at most this many pending events stay one segment.
+    /// Target number of initially-pending events per chain segment.
+    /// With worker↔chain affinity the holder drains its whole window
+    /// back-to-back, so the engine currently computes no cuts and this
+    /// knob does not influence replay (output is identical at any
+    /// granularity by the determinism argument anyway). Retained as
+    /// the granularity a conditional-handoff policy would cut
+    /// ([`segment_bounds`]) and release chains at.
     pub segment_events: usize,
 }
 
@@ -779,7 +798,11 @@ impl StealConfig {
 /// roughly `per_seg` of the initially-pending events. Cuts are strictly
 /// ascending, never split a timestamp across segments (a drain up to
 /// cut `c` takes exactly the events with `t < c`), and the final bound
-/// is always `barrier`.
+/// is always `barrier`. With worker↔chain affinity the engine drains
+/// whole windows, so this is currently exercised by the unit tests
+/// only — it is the cut algorithm a conditional-handoff policy plugs
+/// back in.
+#[cfg_attr(not(test), allow(dead_code))]
 fn segment_bounds(times: &mut [f64], barrier: f64, per_seg: usize)
     -> Vec<f64> {
     let mut bounds = Vec::new();
@@ -801,9 +824,10 @@ fn segment_bounds(times: &mut [f64], barrier: f64, per_seg: usize)
 }
 
 /// One shard's window as a sequential chain of segments. At most one
-/// worker holds a chain at a time; ownership travels through the
-/// injector between segments, which is what lets an idle worker steal
-/// the tail of a hot shard without ever reordering its events.
+/// worker holds a chain at a time; the holder drains the segments in
+/// order (worker↔chain affinity) and the injector hands whole ready
+/// chains to idle workers — which is what lets chains spread across
+/// workers without ever reordering any shard's events.
 struct Chain<'a, S: SiteShard> {
     shard: u32,
     site: &'a mut S,
@@ -823,8 +847,7 @@ struct StealState<'a, S: SiteShard> {
 }
 
 /// Steal the next ready chain, blocking while chains are still held by
-/// other workers (they may re-inject their next segment). Returns
-/// `None` once every chain has retired.
+/// other workers. Returns `None` once every chain has retired.
 fn steal_next<'a, S: SiteShard>(
     state: &Mutex<StealState<'a, S>>,
     cv: &Condvar,
@@ -841,9 +864,24 @@ fn steal_next<'a, S: SiteShard>(
     }
 }
 
-/// One worker: steal a ready segment, drain it, re-inject the chain's
-/// next segment (or retire the chain), repeat until no work remains.
-/// Returns the max dispatched time and the buffered control emissions.
+/// One worker: steal a ready chain, then drain its segments to
+/// completion before stealing elsewhere. Returns the max dispatched
+/// time and the buffered control emissions.
+///
+/// **Worker↔chain affinity.** A worker that just finished a chain
+/// segment prefers that chain's next ready segment over anything on
+/// the injector: the chain's heap and site state are hot in this
+/// worker's cache, and — since a chain is sequential and at most one
+/// worker may hold it — handing it back through the injector could
+/// only move it to a cold core while this worker picks up a different
+/// cold chain. (The pre-affinity scheme did exactly that: re-inject
+/// after every segment, `push_back` behind the cold chains, so a hot
+/// shard's tail bounced between workers.) This is the cheap step
+/// toward pinned shard workers; determinism is unaffected by
+/// construction, because segment cuts come from queue state and chains
+/// execute strictly in segment order whoever holds them —
+/// `tests/shard_equivalence.rs` asserts byte-identical output with
+/// stealing on and off either way.
 fn steal_worker<'a, S, E>(
     state: &Mutex<StealState<'a, S>>,
     cv: &Condvar,
@@ -857,24 +895,20 @@ where
     let mut out: Vec<ControlEmission<E>> = Vec::new();
     let mut last = f64::NEG_INFINITY;
     while let Some(mut chain) = steal_next(state, cv) {
-        let end = chain.bounds[chain.next];
-        let l = drain_window(chain.site, chain.heap, chain.shard, end,
-                             horizon, lookahead, &mut out);
-        if l > last {
-            last = l;
-        }
-        chain.next += 1;
-        let mut g = state.lock().expect("steal state poisoned");
-        if chain.next < chain.bounds.len() {
-            g.ready.push_back(chain);
-            drop(g);
-            cv.notify_one();
-        } else {
-            g.active -= 1;
-            if g.active == 0 {
-                drop(g);
-                cv.notify_all();
+        while chain.next < chain.bounds.len() {
+            let end = chain.bounds[chain.next];
+            let l = drain_window(chain.site, chain.heap, chain.shard, end,
+                                 horizon, lookahead, &mut out);
+            if l > last {
+                last = l;
             }
+            chain.next += 1;
+        }
+        let mut g = state.lock().expect("steal state poisoned");
+        g.active -= 1;
+        if g.active == 0 {
+            drop(g);
+            cv.notify_all();
         }
     }
     (last, out)
@@ -900,8 +934,7 @@ where
 {
     assert_eq!(sites.len() + 1, q.shards.len(),
                "one site state per site shard");
-    let per_seg = cfg.segment_events.max(1);
-    let mut times: Vec<f64> = Vec::new();
+    let _ = cfg.segment_events; // see StealConfig: cuts are future API
     loop {
         let Some((at, shard)) = q.peek() else { break };
         if at.0 > horizon.0 {
@@ -932,7 +965,15 @@ where
         let mut max_t = f64::NEG_INFINITY;
         {
             let (_control_shard, site_heaps) = q.shards.split_at_mut(1);
-            // One segment chain per shard with work in this window.
+            // One chain per shard with work in this window. Under
+            // worker↔chain affinity the holder drains consecutive
+            // segments back-to-back anyway, so cutting the window
+            // would only pay an O(pending) scan + sort per hot shard
+            // without changing which thread runs anything — each
+            // chain is one segment ending at the barrier.
+            // (`ShardHeap::pending_times` + `segment_bounds` remain
+            // the cut algorithm a conditional-handoff policy would
+            // plug back in here.)
             let mut chains: VecDeque<Chain<'_, S>> = VecDeque::new();
             for (i, (site, heap)) in sites
                 .iter_mut()
@@ -943,22 +984,11 @@ where
                     Some((t, _)) if t.0 < barrier && t.0 <= horizon_t => {}
                     _ => continue,
                 }
-                // live_count() bounds the in-window pending count from
-                // above, so small heaps skip the O(pending) time scan
-                // entirely — their window is a single segment either
-                // way.
-                let bounds = if heap.live_count() <= per_seg {
-                    vec![barrier]
-                } else {
-                    times.clear();
-                    heap.pending_times(barrier, horizon_t, &mut times);
-                    segment_bounds(&mut times, barrier, per_seg)
-                };
                 chains.push_back(Chain {
                     shard: (1 + i) as u32,
                     site,
                     heap,
-                    bounds,
+                    bounds: vec![barrier],
                     next: 0,
                 });
             }

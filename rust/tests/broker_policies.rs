@@ -12,12 +12,21 @@ use evhc::broker::{ElasticityBroker, PolicyKind, ScenarioPlan};
 use evhc::cloudsim::{CloudSite, FailureModel, Granularity, InstanceType,
                      OpLatency, Price, Provider, Quota, SiteSpec,
                      VmRequest};
-use evhc::cluster::{HybridCluster, RunConfig, RunReport};
+use evhc::cluster::{Engine, HybridCluster, RunConfig, RunReport};
 use evhc::netsim::NetId;
 use evhc::orchestrator::{select_site, Sla};
 use evhc::sim::SimTime;
-use evhc::util::proptest::check;
+use evhc::util::proptest::{check, check_n};
 use evhc::util::prng::Prng;
+
+/// Per-property case budget, bounded by `EVHC_PROPTEST_CASES` when set
+/// (the CI quick mode caps the full-cluster properties this way).
+fn cases(default: u32) -> u32 {
+    std::env::var("EVHC_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
 
 // ---------------------------------------------------------------------
 // Property: SlaRank ≡ legacy select_site
@@ -199,19 +208,10 @@ fn scenario_cfg() -> RunConfig {
     cfg
 }
 
-fn digest(r: &RunReport) -> (u32, u32, u32, u32, u64, Vec<(u64, String)>) {
-    (
-        r.jobs_completed,
-        r.preempted_vms,
-        r.preempted_jobs,
-        r.preempt_recovered,
-        r.makespan.0.to_bits(),
-        r.recorder
-            .milestones
-            .iter()
-            .map(|(t, m)| (t.0.to_bits(), m.clone()))
-            .collect(),
-    )
+/// The shared bit-exact replay contract (see `RunDigest` in the
+/// cluster module) — one definition for every determinism check here.
+fn digest(r: &RunReport) -> evhc::cluster::RunDigest {
+    r.determinism_digest()
 }
 
 #[test]
@@ -230,6 +230,130 @@ fn spot_scenario_replays_byte_identically() {
     let f11a = r1.recorder.fig11_states(60.0, r1.makespan).to_csv();
     let f11b = r2.recorder.fig11_states(60.0, r2.makespan).to_csv();
     assert_eq!(f11a, f11b);
+}
+
+// ---------------------------------------------------------------------
+// Property: Serial ≡ Sharded ≡ Stealing on the real paper use case
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct EngineCase {
+    scale: f64,
+    seed: u64,
+    n_sites: usize,
+    serialized: bool,
+    /// 0 = spot wave, 1 = site outage, 2 = both.
+    scenario_kind: u8,
+    outage_site: usize,
+}
+
+fn engine_case(r: &mut Prng) -> EngineCase {
+    let n_sites = 2 + r.next_below(3) as usize; // 2..=4
+    EngineCase {
+        scale: r.uniform(0.02, 0.06),
+        seed: r.next_u64(),
+        n_sites,
+        serialized: r.chance(0.5),
+        scenario_kind: r.next_below(3) as u8,
+        outage_site: r.next_below(n_sites as u64) as usize,
+    }
+}
+
+fn engine_case_cfg(case: &EngineCase, engine: Engine) -> RunConfig {
+    let mut cfg =
+        RunConfig::paper_usecase_sites(case.scale, case.seed,
+                                       case.n_sites);
+    cfg.inference_every = 0;
+    cfg.serialized_orchestrator = case.serialized;
+    cfg.engine = engine;
+    let mut plan = ScenarioPlan::new();
+    if case.scenario_kind != 1 {
+        plan = plan.spot_wave(0, 600.0, 0);
+    }
+    if case.scenario_kind != 0 {
+        plan = plan.site_outage(case.outage_site, 900.0, 1800.0);
+    }
+    cfg.scenario = plan;
+    cfg
+}
+
+/// The tentpole acceptance property: `HybridCluster::run` under
+/// `Engine::Serial`, `Sharded` and `Stealing` produces byte-identical
+/// fig10/fig11 CSV and equal `RunReport`s on randomized paper-use-case
+/// configs (spot-wave and site-outage broker failure scenarios
+/// included), over 2–4 sites with both orchestrator modes.
+#[test]
+fn scenario_replays_byte_identically_on_all_engines() {
+    check_n("serial ≡ sharded ≡ stealing (paper use case)", cases(10),
+            engine_case, |case| {
+        let run = |engine: Engine| -> Result<RunReport, String> {
+            HybridCluster::new(engine_case_cfg(case, engine))
+                .map_err(|e| e.to_string())?
+                .run()
+                .map_err(|e| e.to_string())
+        };
+        let reference = run(Engine::Serial)?;
+        let total = engine_case_cfg(case, Engine::Serial)
+            .workload
+            .total_jobs();
+        if reference.jobs_completed != total {
+            return Err(format!("serial completed {}/{total}",
+                               reference.jobs_completed));
+        }
+        let ref_digest = reference.determinism_digest();
+        let until = reference.makespan;
+        let f10 = reference.recorder.fig10_usage(120.0, until).to_csv();
+        let f11 = reference.recorder.fig11_states(120.0, until).to_csv();
+        for engine in [Engine::Sharded { threads: 0 },
+                       Engine::Stealing { threads: 0,
+                                          segment_events: 8 }] {
+            let r = run(engine)?;
+            if r.determinism_digest() != ref_digest {
+                return Err(format!("{} run diverged from serial",
+                                   engine.label()));
+            }
+            if r.recorder.transitions_named()
+                != reference.recorder.transitions_named()
+            {
+                return Err(format!("{} recorder transitions diverged",
+                                   engine.label()));
+            }
+            if r.recorder.fig10_usage(120.0, until).to_csv() != f10 {
+                return Err(format!("{} fig10 diverged", engine.label()));
+            }
+            if r.recorder.fig11_states(120.0, until).to_csv() != f11 {
+                return Err(format!("{} fig11 diverged", engine.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Spill-mode scenario replay under the parallel engines reproduces
+/// the serial in-memory recorder byte for byte (figures included).
+#[test]
+fn scenario_spill_replays_match_across_engines() {
+    let mem = HybridCluster::new(scenario_cfg()).unwrap().run().unwrap();
+    let until = mem.makespan;
+    for (i, engine) in [Engine::Sharded { threads: 0 },
+                        Engine::Stealing { threads: 0, segment_events: 16 }]
+        .into_iter()
+        .enumerate()
+    {
+        let dir = std::env::temp_dir()
+            .join(format!("evhc_broker_engine_spill_{i}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = scenario_cfg();
+        cfg.engine = engine;
+        cfg.metrics_spill_dir = Some(dir.clone());
+        let r = HybridCluster::new(cfg).unwrap().run().unwrap();
+        assert_eq!(digest(&r), digest(&mem), "{}", engine.label());
+        assert_eq!(r.recorder.fig10_usage(60.0, until).to_csv(),
+                   mem.recorder.fig10_usage(60.0, until).to_csv());
+        assert_eq!(r.recorder.fig11_states(60.0, until).to_csv(),
+                   mem.recorder.fig11_states(60.0, until).to_csv());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 #[test]
