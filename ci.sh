@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Staged CI pipeline.
 #
-#   ./ci.sh                 # full pipeline: fmt lint build test bench compare
+#   ./ci.sh                 # full pipeline: fmt lint build test chaos bench compare
 #   ./ci.sh <stage> [...]   # run the named stage(s) in the given order
 #
 # Stages:
@@ -11,6 +11,9 @@
 #   test           cargo test -q, plus quick re-drives of the broker
 #                  scenario suite and the shard-equivalence properties
 #                  with a reduced EVHC_PROPTEST_CASES budget
+#   chaos          WAN chaos suite: the randomized fault-plan
+#                  cross-engine replay property plus the scripted
+#                  loss/quarantine tests, bounded by EVHC_PROPTEST_CASES
 #   bench          scale bench in quick mode -> BENCH_scale.json
 #   compare        diff BENCH_scale.json against the committed
 #                  BENCH_baseline.json with the events/sec regression
@@ -55,6 +58,18 @@ stage_test() {
     EVHC_PROPTEST_CASES=24 cargo test -q --test broker_policies scenario
     echo "== test: shard equivalence properties (quick mode) =="
     EVHC_PROPTEST_CASES=12 cargo test -q --test shard_equivalence prop_
+}
+
+stage_chaos() {
+    # The full chaos property already runs under `cargo test` in tier 1;
+    # this stage re-drives the WAN fault surfaces with a small bounded
+    # case budget so chaos can be iterated on (and smoke-checked in the
+    # default pipeline) without paying for the whole suite.
+    echo "== chaos: WAN fault injection suite (quick mode) =="
+    EVHC_PROPTEST_CASES=${EVHC_PROPTEST_CASES:-4} \
+        cargo test -q --test broker_policies \
+            chaos partition_trips_quarantine fault_plan_validation \
+            cluster_completes_under
 }
 
 stage_bench() {
@@ -117,12 +132,13 @@ run_stage() {
         lint)          stage_lint ;;
         build)         stage_build ;;
         test)          stage_test ;;
+        chaos)         stage_chaos ;;
         bench)         stage_bench ;;
         compare)       stage_compare ;;
         seed-baseline) stage_seed_baseline ;;
         *)
             echo "unknown stage: $1" >&2
-            echo "stages: fmt lint build test bench compare" \
+            echo "stages: fmt lint build test chaos bench compare" \
                  "seed-baseline" >&2
             return 2
             ;;
@@ -130,7 +146,7 @@ run_stage() {
 }
 
 if [ "$#" -eq 0 ]; then
-    set -- fmt lint build test bench compare
+    set -- fmt lint build test chaos bench compare
 fi
 for stage in "$@"; do
     run_stage "$stage"

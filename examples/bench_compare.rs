@@ -1,13 +1,14 @@
 //! Compare a fresh `BENCH_scale.json` against the committed
 //! `BENCH_baseline.json`, printing an events/sec and ms/tick table per
 //! scenario/stealing/cluster section plus the broker cost/makespan
-//! diff.
+//! diff and the WAN-chaos recovery-overhead diff.
 //!
 //! Regression policy:
 //! * events/sec drops beyond 10% are warned about; beyond 15% they are
 //!   *gating* — with `EVHC_BENCH_GATE=1` (set by `ci.sh`) the process
-//!   exits non-zero. Cost/makespan (broker) and recorder-bytes
-//!   (stealing) drifts stay warn-only in every mode.
+//!   exits non-zero. Cost/makespan (broker), recovery overhead and
+//!   completed-jobs/sec (chaos) and recorder-bytes (stealing) drifts
+//!   stay warn-only in every mode.
 //! * without `EVHC_BENCH_GATE=1` everything is warn-only (exit 0).
 //!
 //!     cargo run --release --example bench_compare -- \
@@ -209,6 +210,66 @@ fn compare_broker(baseline: &Json, fresh: &Json) -> u32 {
     regressions
 }
 
+/// Diff the WAN-chaos rows: recovery overhead (chaos makespan over
+/// the fault-free reference) and completed-jobs/sec. Always warn-only
+/// — the rows mix simulated recovery behaviour with wall-clock
+/// throughput, so they chart the self-healing trajectory without ever
+/// gating CI.
+fn compare_chaos(baseline: &Json, fresh: &Json) -> u32 {
+    let base_rows = rows_of(baseline, "chaos");
+    let fresh_rows = rows_of(fresh, "chaos");
+    if fresh_rows.is_empty() {
+        return 0;
+    }
+    println!("\n{:<28} {:>12} {:>12} {:>8}", "chaos row", "base", "fresh",
+             "delta");
+    println!("{}", "-".repeat(64));
+    let mut regressions = 0u32;
+    for (name, row) in fresh_rows {
+        let Some((_, base_row)) =
+            base_rows.iter().find(|(n, _)| *n == name)
+        else {
+            println!("{name:<28} (new row, no baseline)");
+            continue;
+        };
+        for metric_name in ["recovery_overhead", "completed_jobs_per_sec",
+                            "messages_retransmitted",
+                            "quarantine_windows"] {
+            let (Some(b), Some(f)) = (
+                base_row.get(metric_name).and_then(|v| v.as_f64()),
+                row.get(metric_name).and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            if b == f {
+                continue; // deterministic chaos: only drift matters
+            }
+            let delta = if b != 0.0 {
+                (f - b) / b * 100.0
+            } else {
+                f64::INFINITY
+            };
+            // Self-healing getting >10% more expensive (longer
+            // recovery, fewer jobs through) is worth a warning; the
+            // raw fault counters are informational only.
+            let worse = match metric_name {
+                "recovery_overhead" => delta > WARN_PCT,
+                "completed_jobs_per_sec" => delta < -WARN_PCT,
+                _ => false,
+            };
+            let mark = if worse {
+                regressions += 1;
+                "  <-- REGRESSION (warn-only)"
+            } else {
+                ""
+            };
+            println!("{name:<28} {b:>12.4} {f:>12.4} {delta:>+7.1}% \
+                      ({metric_name}){mark}");
+        }
+    }
+    regressions
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     if args.len() != 3 {
@@ -243,14 +304,17 @@ fn main() {
     let cluster =
         compare_measured(&baseline, &fresh, "cluster", CLUSTER_SECTIONS);
     let broker_regressions = compare_broker(&baseline, &fresh);
+    let chaos_regressions = compare_chaos(&baseline, &fresh);
 
     let warned = scen.warned + steal.warned + cluster.warned;
     let gated = scen.gated + steal.gated + cluster.gated;
-    if warned > 0 || broker_regressions > 0 {
+    if warned > 0 || broker_regressions > 0 || chaos_regressions > 0 {
         println!("\nWARNING: {warned} section(s) regressed by more than \
                   {WARN_PCT}% events/sec ({gated} beyond the {GATE_PCT}% \
-                  gate) and {broker_regressions} broker row(s) by more \
-                  than {WARN_PCT}% cost/makespan (warn-only).");
+                  gate), {broker_regressions} broker row(s) by more \
+                  than {WARN_PCT}% cost/makespan and \
+                  {chaos_regressions} chaos row(s) by more than \
+                  {WARN_PCT}% recovery overhead (both warn-only).");
     } else {
         println!("\nno regressions beyond {WARN_PCT}%.");
     }

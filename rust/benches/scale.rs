@@ -26,7 +26,12 @@
 //! * `broker` — full-cluster elasticity runs over 2–8 sites, policy ×
 //!   scenario (spot-preemption waves, site outages, price spikes):
 //!   cost, makespan and preempted-job recovery per combination, each
-//!   replayed twice with a determinism assert.
+//!   replayed twice with a determinism assert,
+//! * `chaos` — WAN fault injection on the paper use case (1% / 5%
+//!   message loss, a mid-run 900 s partition): recovery overhead vs a
+//!   fault-free reference and completed-jobs/sec, with cross-engine
+//!   digest equality asserted in-bench (diffed warn-only by
+//!   `bench_compare` — the rows are wall-clock sensitive).
 //!
 //! Results are written to `BENCH_scale.json` at the repo root so future
 //! PRs accumulate a perf trajectory (`ci.sh` diffs it against the
@@ -41,7 +46,8 @@ use std::time::Instant;
 
 use evhc::api::json::Json;
 use evhc::broker::{PolicyKind, ScenarioPlan};
-use evhc::cluster::{Engine, HybridCluster, RunConfig, RunReport};
+use evhc::cluster::{Engine, HybridCluster, RunConfig, RunReport,
+                    WanFaultPlan};
 use evhc::ids::NodeNames;
 use evhc::lrms::core::{BatchCore, Placement};
 use evhc::lrms::JobId;
@@ -474,7 +480,7 @@ fn stealing_section(quick: bool) -> Json {
         // Fewer workers than sites: exactly the regime where the hot
         // shard serializes behind its static chunk without stealing.
         let threads = (sc.sites() as usize / 2).max(2);
-        let cfg = StealConfig { threads, segment_events: 256 };
+        let cfg = StealConfig { threads };
         println!("\n--- {} ({} sites, hot x{}, {} jobs, {threads} \
                   threads) ---",
                  sc.name, sc.sites(), sc.hot_mul, sc.total_jobs());
@@ -675,6 +681,109 @@ fn broker_section(quick: bool) -> Json {
 }
 
 // ---------------------------------------------------------------------
+// Chaos: WAN fault injection overhead on the paper use case
+// ---------------------------------------------------------------------
+
+fn chaos_run_cfg(scale: f64, n_sites: usize, engine: Engine,
+                 faults: &WanFaultPlan) -> RunConfig {
+    let mut cfg = RunConfig::paper_usecase_sites(scale, 7, n_sites);
+    cfg.inference_every = 0;
+    cfg.engine = engine;
+    cfg.faults = faults.clone();
+    cfg
+}
+
+/// Self-healing overhead under scripted WAN chaos: steady 1% / 5%
+/// message loss on the remote sites and a mid-run 900 s partition,
+/// each compared against a fault-free reference run (recovery
+/// overhead = chaos makespan / clean makespan) and replayed on all
+/// three engines with an in-bench digest-equality assert. These rows
+/// are wall-clock sensitive, so `bench_compare` diffs them warn-only.
+fn chaos_section(quick: bool) -> Json {
+    let scale = if quick { 0.05 } else { 0.15 };
+    let n_sites = 3;
+    let variants: Vec<(&str, WanFaultPlan)> = vec![
+        ("loss-1pct", WanFaultPlan::new(0xC4A0)
+            .lossy(1, 0.0, 50_000.0, 0.01)
+            .lossy(2, 0.0, 50_000.0, 0.01)),
+        ("loss-5pct", WanFaultPlan::new(0xC4A1)
+            .lossy(1, 0.0, 50_000.0, 0.05)
+            .lossy(2, 0.0, 50_000.0, 0.05)),
+        ("partition-900s", WanFaultPlan::new(0xC4A2)
+            .partition(1, 1500.0, 900.0)),
+    ];
+
+    // Fault-free reference for the recovery-overhead ratio.
+    let clean = HybridCluster::new(chaos_run_cfg(
+            scale, n_sites, Engine::Serial, &WanFaultPlan::default()))
+        .expect("chaos baseline world")
+        .run()
+        .expect("chaos baseline run");
+    println!("  {:<15} {:>9.1}s makespan (fault-free reference)",
+             "clean", clean.makespan.0);
+
+    let mut rows = Vec::new();
+    for (name, plan) in &variants {
+        let wall = Instant::now();
+        let r = HybridCluster::new(chaos_run_cfg(
+                scale, n_sites, Engine::Serial, plan))
+            .expect("chaos world")
+            .run()
+            .expect("chaos run");
+        let wall_s = wall.elapsed().as_secs_f64();
+        assert_eq!(r.jobs_completed, clean.jobs_completed,
+                   "chaos run lost jobs: {name}");
+        // Chaos must not break the cross-engine replay contract: the
+        // fault streams are keyed by (site, seq), not by engine.
+        for engine in [Engine::Sharded { threads: 0 },
+                       Engine::Stealing { threads: 0 }] {
+            let rp = HybridCluster::new(chaos_run_cfg(
+                    scale, n_sites, engine, plan))
+                .expect("chaos world")
+                .run()
+                .expect("chaos run");
+            assert_eq!(rp.determinism_digest(), r.determinism_digest(),
+                       "chaos replay diverged: {name} under {}",
+                       engine.label());
+        }
+        let overhead = r.makespan.0 / clean.makespan.0.max(1e-9);
+        let jobs_per_sec = r.jobs_completed as f64 / wall_s.max(1e-9);
+        println!("  {name:<15} {:>9.1}s makespan ({overhead:.3}x clean)  \
+                  {:>5} dropped {:>5} retx {:>2} quarantines  \
+                  {jobs_per_sec:>8.0} jobs/s",
+                 r.makespan.0, r.messages_dropped,
+                 r.messages_retransmitted, r.quarantine_windows);
+        rows.push(Json::Object(vec![
+            ("name".into(), Json::Str((*name).into())),
+            ("sites".into(), Json::Num(n_sites as f64)),
+            ("jobs".into(), Json::Num(r.jobs_completed as f64)),
+            ("makespan_s".into(), Json::Num(r.makespan.0)),
+            ("makespan_clean_s".into(), Json::Num(clean.makespan.0)),
+            ("recovery_overhead".into(), Json::Num(overhead)),
+            ("completed_jobs_per_sec".into(), Json::Num(jobs_per_sec)),
+            ("wall_s".into(), Json::Num(wall_s)),
+            ("events".into(), Json::Num(r.events as f64)),
+            ("messages_dropped".into(),
+             Json::Num(r.messages_dropped as f64)),
+            ("messages_duplicated".into(),
+             Json::Num(r.messages_duplicated as f64)),
+            ("messages_retransmitted".into(),
+             Json::Num(r.messages_retransmitted as f64)),
+            ("provision_retries".into(),
+             Json::Num(r.provision_retries as f64)),
+            ("quarantine_windows".into(),
+             Json::Num(r.quarantine_windows as f64)),
+            ("quarantine_secs".into(), Json::Num(r.quarantine_secs)),
+            ("lease_requeued_jobs".into(),
+             Json::Num(r.lease_requeued_jobs as f64)),
+            ("lease_recovered_jobs".into(),
+             Json::Num(r.lease_recovered_jobs as f64)),
+        ]));
+    }
+    Json::Array(rows)
+}
+
+// ---------------------------------------------------------------------
 // Cluster: the real paper use case across the three replay engines
 // ---------------------------------------------------------------------
 
@@ -781,7 +890,7 @@ fn cluster_section(quick: bool) -> Json {
                    "sharded cluster replay diverged on {}", sc.name);
         report_line("sharded", &m_sharded);
         let (r_steal, m_steal) = cluster_run(
-            sc, Engine::Stealing { threads: 0, segment_events: 0 }, None);
+            sc, Engine::Stealing { threads: 0 }, None);
         assert_eq!(r_steal.determinism_digest(), r_serial.determinism_digest(),
                    "stealing cluster replay diverged on {}", sc.name);
         report_line("stealing", &m_steal);
@@ -802,8 +911,7 @@ fn cluster_section(quick: bool) -> Json {
             .join(format!("evhc_bench_cluster_{}", sc.name));
         let _ = std::fs::remove_dir_all(&dir);
         let (r_spill, m_spill) = cluster_run(
-            sc, Engine::Stealing { threads: 0, segment_events: 0 },
-            Some(dir.clone()));
+            sc, Engine::Stealing { threads: 0 }, Some(dir.clone()));
         assert_eq!(r_spill.determinism_digest(), r_serial.determinism_digest(),
                    "spill cluster replay diverged on {}", sc.name);
         report_line("stealing-spill", &m_spill);
@@ -990,6 +1098,10 @@ fn main() {
     section("SCALE: broker policy x scenario");
     let broker_rows = broker_section(quick);
 
+    // Chaos: WAN fault injection overhead, cross-engine asserted.
+    section("SCALE: wan chaos x self-healing");
+    let chaos_rows = chaos_section(quick);
+
     let doc = Json::Object(vec![
         ("bench".into(), Json::Str("scale".into())),
         ("quick".into(), Json::Bool(quick)),
@@ -997,6 +1109,7 @@ fn main() {
         ("stealing".into(), stealing_rows),
         ("cluster".into(), cluster_rows),
         ("broker".into(), broker_rows),
+        ("chaos".into(), chaos_rows),
     ]);
     std::fs::write("BENCH_scale.json", doc.render() + "\n")
         .expect("write BENCH_scale.json");

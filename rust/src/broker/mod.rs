@@ -26,11 +26,17 @@
 //!   zero-instance exclusion, VM/vCPU quota, SLA headroom) is shared by
 //!   every policy and identical to the legacy checks.
 //! * **Scenarios** — [`scenario::ScenarioPlan`] scripts spot-preemption
-//!   waves, whole-site outages and price spikes; the cluster world
-//!   replays them as control-plane events (reclaims touch the LRMS and
-//!   broker, and the control plane owns cross-site effects), so
-//!   scenario runs stay byte-identical across the serial and parallel
-//!   engines of [`crate::sim::shard`].
+//!   waves, whole-site outages, price spikes and WAN partitions; the
+//!   cluster world replays them as control-plane events (reclaims touch
+//!   the LRMS and broker, and the control plane owns cross-site
+//!   effects), so scenario runs stay byte-identical across the serial
+//!   and parallel engines of [`crate::sim::shard`].
+//! * **Quarantine** — the control plane's circuit breaker (see
+//!   `cluster::faults`) marks a silent site quarantined via
+//!   [`ElasticityBroker::set_quarantine`]; the broker then treats it
+//!   exactly like an outage (availability forced to 0) until the
+//!   breaker closes. The flag is separate from the scenario outage
+//!   flag so an `OutageEnd` event cannot clear an active quarantine.
 //!
 //! The front-end placement always uses the SLA ranking (the front end
 //! is the cluster's fixed point — the paper deploys it at the home
@@ -125,6 +131,8 @@ pub struct SiteSignals {
     pub queue_depth: u32,
     /// A scenario outage is in effect.
     pub outage: bool,
+    /// The control plane's circuit breaker has the site quarantined.
+    pub quarantined: bool,
 }
 
 /// The elasticity broker.
@@ -133,6 +141,10 @@ pub struct ElasticityBroker {
     policy: Box<dyn PlacementPolicy>,
     /// Scenario state: outage flag per site.
     outage: Vec<bool>,
+    /// Circuit-breaker state: quarantine flag per site. Kept separate
+    /// from `outage` so scenario `OutageEnd` events cannot clear an
+    /// active quarantine (and vice versa).
+    quarantine: Vec<bool>,
     /// Decision log for reports: (t, chosen site).
     pub decisions: Vec<(SimTime, usize)>,
 }
@@ -189,6 +201,7 @@ impl ElasticityBroker {
             },
             policy: kind.build(),
             outage: vec![false; sites.len()],
+            quarantine: vec![false; sites.len()],
             decisions: Vec::new(),
         }
     }
@@ -229,6 +242,20 @@ impl ElasticityBroker {
         self.outage.get(site).copied().unwrap_or(false)
     }
 
+    /// Circuit-breaker hook: quarantine a silent site (or lift the
+    /// quarantine once the breaker closes). Quarantined sites are
+    /// treated like outages — availability forced to 0 — but on a flag
+    /// scenario events cannot touch.
+    pub fn set_quarantine(&mut self, site: usize, dark: bool) {
+        if let Some(q) = self.quarantine.get_mut(site) {
+            *q = dark;
+        }
+    }
+
+    pub fn quarantine_active(&self, site: usize) -> bool {
+        self.quarantine.get(site).copied().unwrap_or(false)
+    }
+
     /// Sample the live signals for one site. The effective price reads
     /// the site's own launch-time price factor, so scenario price
     /// spikes reach the policies through the same state that bills the
@@ -238,8 +265,13 @@ impl ElasticityBroker {
                                         queue_depth: u32) -> SiteSignals {
         let s = sites[site].as_ref();
         let outage = self.outage[site];
+        let quarantined = self.quarantine[site];
         SiteSignals {
-            availability: if outage { 0.0 } else { s.spec.availability },
+            availability: if outage || quarantined {
+                0.0
+            } else {
+                s.spec.availability
+            },
             free_vms: s.spec.quota.max_vms.saturating_sub(s.used_vms())
                 as u32,
             free_vcpus: s.spec.quota.max_vcpus
@@ -253,6 +285,7 @@ impl ElasticityBroker {
             hazard_per_hour: self.table.hazards[site],
             queue_depth,
             outage,
+            quarantined,
         }
     }
 
@@ -286,10 +319,17 @@ impl ElasticityBroker {
 
     fn pick<S: AsRef<CloudSite>>(&self, policy: &dyn PlacementPolicy,
                                  sites: &[S], used_per_site: &[u32],
-                                 cpus: u32, queue_depth: u32)
+                                 cpus: u32, queue_depth: u32,
+                                 excluded: Option<&[bool]>)
         -> Option<usize> {
         let mut best: Option<(Score, usize)> = None;
         for i in 0..sites.len() {
+            if excluded
+                .map(|e| e.get(i).copied().unwrap_or(false))
+                .unwrap_or(false)
+            {
+                continue;
+            }
             let sig = self.signals(i, sites, used_per_site, queue_depth);
             if !self.eligible(i, sites[i].as_ref(), cpus, &sig) {
                 continue;
@@ -312,7 +352,23 @@ impl ElasticityBroker {
                                        queue_depth: u32, t: SimTime)
         -> Option<usize> {
         let pick = self.pick(self.policy.as_ref(), sites, used_per_site,
-                             cpus, queue_depth);
+                             cpus, queue_depth, None);
+        if let Some(i) = pick {
+            self.decisions.push((t, i));
+        }
+        pick
+    }
+
+    /// Like [`select`](Self::select), with an explicit per-site
+    /// exclusion mask on top of the shared eligibility gate. Used for
+    /// retry failover (skip the site that kept failing) and to avoid
+    /// WAN-partitioned sites while the partition lasts.
+    pub fn select_excluding<S: AsRef<CloudSite>>(
+        &mut self, sites: &[S], used_per_site: &[u32], cpus: u32,
+        queue_depth: u32, t: SimTime, excluded: &[bool])
+        -> Option<usize> {
+        let pick = self.pick(self.policy.as_ref(), sites, used_per_site,
+                             cpus, queue_depth, Some(excluded));
         if let Some(i) = pick {
             self.decisions.push((t, i));
         }
@@ -325,7 +381,8 @@ impl ElasticityBroker {
                                                  used_per_site: &[u32],
                                                  cpus: u32, t: SimTime)
         -> Option<usize> {
-        let pick = self.pick(&SlaRank, sites, used_per_site, cpus, 0);
+        let pick = self.pick(&SlaRank, sites, used_per_site, cpus, 0,
+                             None);
         if let Some(i) = pick {
             self.decisions.push((t, i));
         }
@@ -479,6 +536,41 @@ mod tests {
         assert_eq!(b.select(&sites, &used, 2, 0, t(1.0)), None);
         b.set_outage(0, false);
         assert_eq!(b.select(&sites, &used, 2, 0, t(2.0)), Some(0));
+    }
+
+    #[test]
+    fn quarantine_excludes_site_like_an_outage_on_its_own_flag() {
+        let sites = paper_sites();
+        let slas = paper_slas();
+        let used = vec![0, 0];
+        let mut b = broker(PolicyKind::SlaRank, &sites, &slas);
+        b.set_quarantine(0, true);
+        assert!(b.quarantine_active(0));
+        assert!(!b.outage_active(0));
+        assert_eq!(b.select(&sites, &used, 2, 0, t(0.0)), Some(1));
+        assert!(b.signals(0, &sites, &used, 0).quarantined);
+        assert_eq!(b.signals(0, &sites, &used, 0).availability, 0.0);
+        // A scenario outage ending elsewhere must not lift quarantine.
+        b.set_outage(0, true);
+        b.set_outage(0, false);
+        assert!(b.quarantine_active(0));
+        assert_eq!(b.select(&sites, &used, 2, 0, t(1.0)), Some(1));
+        b.set_quarantine(0, false);
+        assert_eq!(b.select(&sites, &used, 2, 0, t(2.0)), Some(0));
+    }
+
+    #[test]
+    fn select_excluding_masks_sites_on_top_of_eligibility() {
+        let sites = paper_sites();
+        let slas = paper_slas();
+        let used = vec![0, 0];
+        let mut b = broker(PolicyKind::SlaRank, &sites, &slas);
+        assert_eq!(b.select_excluding(&sites, &used, 2, 0, t(0.0),
+                                      &[false, false]), Some(0));
+        assert_eq!(b.select_excluding(&sites, &used, 2, 0, t(1.0),
+                                      &[true, false]), Some(1));
+        assert_eq!(b.select_excluding(&sites, &used, 2, 0, t(2.0),
+                                      &[true, true]), None);
     }
 
     #[test]

@@ -26,6 +26,13 @@ pub enum ScenarioEvent {
     /// `factor` × list price (already-running VMs keep their rate).
     PriceSpike { site: usize, at: SimTime, duration_secs: f64,
                  factor: f64 },
+    /// WAN partition: the control plane loses contact with `site` for
+    /// the window. VMs there keep running, but every report and command
+    /// crossing the boundary is dropped, the site's vRouter goes down
+    /// on the overlay, and the broker avoids the site while it lasts.
+    /// Unlike `SiteOutage`, nothing dies — recovery is a matter of the
+    /// control plane's retransmissions and circuit breaker.
+    WanPartition { site: usize, at: SimTime, duration_secs: f64 },
 }
 
 impl ScenarioEvent {
@@ -34,7 +41,8 @@ impl ScenarioEvent {
         match self {
             ScenarioEvent::SpotWave { site, .. }
             | ScenarioEvent::SiteOutage { site, .. }
-            | ScenarioEvent::PriceSpike { site, .. } => *site,
+            | ScenarioEvent::PriceSpike { site, .. }
+            | ScenarioEvent::WanPartition { site, .. } => *site,
         }
     }
 }
@@ -90,6 +98,55 @@ impl ScenarioPlan {
         });
         self
     }
+
+    /// Builder: cut `site` off from the control plane for
+    /// `duration_secs`, starting `at_secs` after workload t0.
+    pub fn wan_partition(mut self, site: usize, at_secs: f64,
+                         duration_secs: f64) -> ScenarioPlan {
+        self.events.push(ScenarioEvent::WanPartition {
+            site,
+            at: SimTime(at_secs),
+            duration_secs,
+        });
+        self
+    }
+
+    /// Build-time sanity: every event must target an existing site with
+    /// finite, non-negative timing. Front-end targeting of WAN
+    /// partitions is checked later, once the front end is placed.
+    pub fn validate(&self, n_sites: usize) -> anyhow::Result<()> {
+        for (i, ev) in self.events.iter().enumerate() {
+            if ev.site() >= n_sites {
+                anyhow::bail!(
+                    "scenario event {i} targets site {} but the world \
+                     has only {n_sites} sites", ev.site());
+            }
+            let (at, duration) = match ev {
+                ScenarioEvent::SpotWave { at, .. } => (at.0, 0.0),
+                ScenarioEvent::SiteOutage { at, duration_secs, .. }
+                | ScenarioEvent::WanPartition { at, duration_secs, .. } =>
+                    (at.0, *duration_secs),
+                ScenarioEvent::PriceSpike { at, duration_secs, factor, .. }
+                => {
+                    if !factor.is_finite() || *factor <= 0.0 {
+                        anyhow::bail!("scenario event {i}: price factor \
+                                       {factor} must be finite and \
+                                       positive");
+                    }
+                    (at.0, *duration_secs)
+                }
+            };
+            if !at.is_finite() || at < 0.0 {
+                anyhow::bail!("scenario event {i}: start {at} must be a \
+                               finite non-negative offset");
+            }
+            if !duration.is_finite() || duration < 0.0 {
+                anyhow::bail!("scenario event {i}: duration {duration} \
+                               must be finite and non-negative");
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -117,5 +174,27 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         assert!(ScenarioPlan::new().is_empty());
+    }
+
+    #[test]
+    fn wan_partition_builder_and_validation() {
+        let plan = ScenarioPlan::new().wan_partition(2, 900.0, 600.0);
+        assert_eq!(plan.events[0].site(), 2);
+        assert!(plan.validate(3).is_ok());
+        // Out-of-range site, negative start, infinite duration and a
+        // non-positive price factor are all rejected with clear errors.
+        assert!(plan.validate(2).is_err());
+        assert!(ScenarioPlan::new()
+            .spot_wave(0, -1.0, 0)
+            .validate(1)
+            .is_err());
+        assert!(ScenarioPlan::new()
+            .site_outage(0, 10.0, f64::INFINITY)
+            .validate(1)
+            .is_err());
+        assert!(ScenarioPlan::new()
+            .price_spike(0, 10.0, 60.0, 0.0)
+            .validate(1)
+            .is_err());
     }
 }

@@ -21,6 +21,13 @@ pub struct FailureModel {
     /// opportunistic capacity reclaim), events per VM-hour. This is the
     /// hazard signal the broker's `SpotAware` policy weighs a site by.
     pub preempt_rate_per_hour: f64,
+    /// Steady-state probability that one site → control WAN message is
+    /// lost (on top of any scripted `WanFaultPlan` windows). Must stay
+    /// below 1.0; the chaos layer's retransmissions recover the loss.
+    pub message_loss_prob: f64,
+    /// Ack timeout seeding the site's retransmission backoff for
+    /// dropped reliable messages, seconds.
+    pub ack_timeout_s: f64,
 }
 
 impl FailureModel {
@@ -32,6 +39,8 @@ impl FailureModel {
             transient_down_prob: 0.0,
             transient_down_secs: 0.0,
             preempt_rate_per_hour: 0.0,
+            message_loss_prob: 0.0,
+            ack_timeout_s: 120.0,
         }
     }
 
@@ -43,6 +52,8 @@ impl FailureModel {
             transient_down_prob: 0.002,
             transient_down_secs: 240.0,
             preempt_rate_per_hour: 0.0,
+            message_loss_prob: 0.001,
+            ack_timeout_s: 120.0,
         }
     }
 

@@ -30,6 +30,7 @@ use crate::util::prng::Prng;
 use crate::vrouter::Overlay;
 use crate::workload::Workload;
 
+use super::faults::{ResolvedWindow, SiteHealthTracker};
 use super::{Ev, RunConfig, SiteWorld, FE_NAME};
 
 /// Runtime info per deployment node (controller's view).
@@ -42,6 +43,19 @@ pub(crate) struct NodeRt {
     setup_done: bool,
     requested_at: SimTime,
     joined_at: Option<SimTime>,
+}
+
+/// Provisioning-retry record for one node (chaos mode only).
+#[derive(Debug, Clone, Copy)]
+struct RetryRec {
+    /// Failed attempts so far.
+    attempt: u32,
+    /// Site of the first attempt — excluded once `failover_after`
+    /// attempts have failed, so the broker ranks the alternatives.
+    first_site: usize,
+    /// A `RetryProvision` event is already scheduled (guards against
+    /// duplicated `BootFailed` reports double-scheduling retries).
+    pending: bool,
 }
 
 /// One VM incarnation's accounting row (ledger row index at its site).
@@ -109,6 +123,40 @@ pub struct ControlWorld {
     stats_scratch: Vec<NodeStat>,
     n_sites: usize,
     control_latency: f64,
+    /// The WAN chaos layer is live for this run (a fault plan, a
+    /// scenario WAN partition, or a spec-level message loss rate).
+    /// When false every chaos code path is skipped, so pre-chaos runs
+    /// keep their event streams — and digests — bit for bit.
+    chaos: bool,
+    /// Dedicated stream for retry-backoff jitter. Separate from the
+    /// main `rng` so enabling chaos never perturbs boot/job sampling.
+    chaos_rng: Prng,
+    /// Per-site circuit breakers fed by heartbeat outcomes.
+    breakers: Vec<SiteHealthTracker>,
+    /// Heartbeat pings sent to a site and not yet answered.
+    hb_outstanding: Vec<u32>,
+    /// Nesting count of active WAN partitions per site (scripted
+    /// windows and scenario events may overlap).
+    partition_depth: Vec<u32>,
+    /// Circuit breaker open: the site is quarantined.
+    quarantined: Vec<bool>,
+    /// When each open quarantine window started (for `quarantine_secs`
+    /// accounting; still-open windows are closed at the makespan).
+    pub(crate) quarantine_opened_at: Vec<Option<f64>>,
+    /// In-flight provisioning retries, keyed by node.
+    retry_state: HashMap<NodeId, RetryRec>,
+    /// Jobs requeued by a quarantine lease revocation, awaiting
+    /// completion elsewhere.
+    chaos_pending: HashSet<JobId>,
+    /// Fatal configuration error detected at workload start (e.g. a
+    /// fault plan targeting the front-end site). `run()` surfaces it.
+    pub(crate) fatal: Option<String>,
+    pub(crate) provision_retries: u32,
+    pub(crate) provision_failovers: u32,
+    pub(crate) quarantine_windows: u32,
+    pub(crate) quarantine_secs: f64,
+    pub(crate) lease_requeued: u32,
+    pub(crate) lease_recovered: u32,
 }
 
 impl ControlWorld {
@@ -129,6 +177,16 @@ impl ControlWorld {
         n_sites: usize,
         control_latency: f64,
     ) -> ControlWorld {
+        let chaos = !cfg.faults.is_empty()
+            || cfg.scenario.events.iter().any(|e| {
+                matches!(e, ScenarioEvent::WanPartition { .. })
+            })
+            || cfg.sites.iter().any(|s| s.failure.message_loss_prob > 0.0);
+        let chaos_rng = Prng::new(cfg.seed ^ 0xFA57_C8A0);
+        let breakers = vec![
+            SiteHealthTracker::new(cfg.retry.quarantine_after);
+            n_sites
+        ];
         ControlWorld {
             cfg,
             net,
@@ -166,6 +224,22 @@ impl ControlWorld {
             stats_scratch: Vec::new(),
             n_sites,
             control_latency,
+            chaos,
+            chaos_rng,
+            breakers,
+            hb_outstanding: vec![0; n_sites],
+            partition_depth: vec![0; n_sites],
+            quarantined: vec![false; n_sites],
+            quarantine_opened_at: vec![None; n_sites],
+            retry_state: HashMap::new(),
+            chaos_pending: HashSet::new(),
+            fatal: None,
+            provision_retries: 0,
+            provision_failovers: 0,
+            quarantine_windows: 0,
+            quarantine_secs: 0.0,
+            lease_requeued: 0,
+            lease_recovered: 0,
         }
     }
 
@@ -328,7 +402,9 @@ impl ControlWorld {
     }
 
     /// Start adding a worker (one orchestrator update). Returns false if
-    /// no site has capacity.
+    /// no site has capacity. Under chaos, WAN-partitioned sites are
+    /// excluded from broker placement: a command sent into a partition
+    /// would vanish.
     fn start_add_worker(&mut self, q: &mut ShardedQueue<Ev>,
                         sites: &mut [SiteWorld], name: &str,
                         t: SimTime) -> bool {
@@ -336,7 +412,15 @@ impl ControlWorld {
         let cpus = self.cfg.template.worker.num_cpus;
         let queue_depth = self.lrms.pending() as u32;
         let site = if self.cfg.template.hybrid {
-            self.broker.select(sites, &used, cpus, queue_depth, t)
+            if self.chaos {
+                let excluded: Vec<bool> = (0..self.n_sites)
+                    .map(|s| self.partition_depth[s] > 0)
+                    .collect();
+                self.broker.select_excluding(sites, &used, cpus,
+                                             queue_depth, t, &excluded)
+            } else {
+                self.broker.select(sites, &used, cpus, queue_depth, t)
+            }
         } else {
             // Non-hybrid: only the FE's site may host workers.
             let s = self.fe_site;
@@ -350,6 +434,14 @@ impl ControlWorld {
                 "no capacity anywhere for {name}"));
             return false;
         };
+        self.place_worker(q, sites, name, site, t)
+    }
+
+    /// Provision `name` as a worker at the chosen `site` (bringing up a
+    /// site vRouter first when bursting into a router-less site).
+    fn place_worker(&mut self, q: &mut ShardedQueue<Ev>,
+                    sites: &mut [SiteWorld], name: &str, site: usize,
+                    t: SimTime) -> bool {
         // Bursting into a router-less site: vRouter first (plus one more
         // VM of quota), then the worker.
         if site != self.fe_site && !self.site_has_router(site) {
@@ -385,13 +477,216 @@ impl ControlWorld {
     }
 
     // ---------------------------------------------------------------
+    // Chaos self-healing: provisioning retries, heartbeats, quarantine
+    // ---------------------------------------------------------------
+
+    /// A provisioning attempt for `node` failed: schedule a backed-off
+    /// retry. Returns false when the retry budget is exhausted (the
+    /// caller falls back to the legacy give-up path). Duplicate
+    /// `BootFailed` deliveries are absorbed by the `pending` flag.
+    fn schedule_provision_retry(&mut self, q: &mut ShardedQueue<Ev>,
+                                node: NodeId, first_site: usize,
+                                t: SimTime) -> bool {
+        let (attempt, give_up) = {
+            let rec = self.retry_state.entry(node).or_insert(RetryRec {
+                attempt: 0,
+                first_site,
+                pending: false,
+            });
+            if rec.pending {
+                return true; // duplicate report of the same failure
+            }
+            rec.attempt += 1;
+            (rec.attempt, rec.attempt >= self.cfg.retry.max_attempts)
+        };
+        let name = self.names.name(node);
+        if give_up {
+            self.retry_state.remove(&node);
+            self.recorder.milestone(t, format!(
+                "giving up on {name} after {attempt} provisioning \
+                 attempts"));
+            return false;
+        }
+        if let Some(rec) = self.retry_state.get_mut(&node) {
+            rec.pending = true;
+        }
+        let delay = self.cfg.retry.backoff(attempt - 1,
+                                           &mut self.chaos_rng);
+        self.provision_retries += 1;
+        self.recorder.milestone(t, format!(
+            "{name} provisioning attempt {attempt} failed — retrying \
+             in {delay:.0}s"));
+        q.schedule_in(delay, Ev::RetryProvision { node });
+        true
+    }
+
+    /// Any message from `s` proves the WAN path is alive: clear the
+    /// outstanding-heartbeat count and feed the circuit breaker (two
+    /// half-open reports close it and lift the quarantine).
+    fn note_site_alive(&mut self, q: &mut ShardedQueue<Ev>,
+                       sites: &mut [SiteWorld], s: usize, t: SimTime) {
+        if s >= self.n_sites || s == self.fe_site {
+            return;
+        }
+        self.hb_outstanding[s] = 0;
+        if self.breakers[s].report() {
+            self.close_quarantine(q, sites, s, t);
+        }
+    }
+
+    /// Count unanswered heartbeats; trip the breaker into quarantine
+    /// after `quarantine_after` consecutive misses.
+    fn heartbeat_scan(&mut self, q: &mut ShardedQueue<Ev>,
+                      sites: &mut [SiteWorld], t: SimTime) {
+        for s in 0..self.n_sites {
+            if s == self.fe_site || self.hb_outstanding[s] == 0 {
+                continue;
+            }
+            if self.breakers[s].miss() {
+                self.open_quarantine(q, sites, s, t);
+            }
+        }
+    }
+
+    /// Probe every remote site that currently hosts joined nodes. The
+    /// ping rides the site shard (command latency), the reply crosses
+    /// the fault layer — so sustained loss starves the breaker.
+    fn send_heartbeats(&mut self, q: &mut ShardedQueue<Ev>, t: SimTime) {
+        let _ = t;
+        let mut present = vec![false; self.n_sites];
+        for rt in self.nodes.values() {
+            if rt.site < self.n_sites && rt.joined_at.is_some() {
+                present[rt.site] = true;
+            }
+        }
+        for s in 0..self.n_sites {
+            if s == self.fe_site || !present[s] {
+                continue;
+            }
+            self.hb_outstanding[s] += 1;
+            q.schedule_in(self.control_latency,
+                          Ev::HeartbeatPing { site: s });
+        }
+    }
+
+    /// Trip the circuit breaker for `s`: the broker treats the site as
+    /// dark, its leased jobs requeue elsewhere, and its nodes are held
+    /// down until the site reports in again.
+    fn open_quarantine(&mut self, q: &mut ShardedQueue<Ev>,
+                       sites: &mut [SiteWorld], s: usize, t: SimTime) {
+        if self.quarantined[s] {
+            return;
+        }
+        self.quarantined[s] = true;
+        self.broker.set_quarantine(s, true);
+        self.quarantine_windows += 1;
+        self.quarantine_opened_at[s] = Some(t.0);
+        self.recorder.milestone(t, format!(
+            "{} silent for {} heartbeats — quarantined, requeuing its \
+             leased jobs elsewhere", sites[s].cloud.spec.name,
+            self.cfg.retry.quarantine_after));
+        let mut victims: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|(_, rt)| {
+                rt.site == s
+                    && rt.role == NodeRole::WorkerNode
+                    && rt.joined_at.is_some()
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        victims.sort();
+        for id in victims {
+            let name = self.names.name(id);
+            let requeued = self
+                .lrms
+                .set_node_health(&name, NodeHealth::Down, t)
+                .unwrap_or_default();
+            for j in requeued {
+                if self.chaos_pending.insert(j) {
+                    self.lease_requeued += 1;
+                }
+            }
+            self.recorder.node_state_id(t, id, DisplayState::Failed);
+        }
+        self.pump_jobs(q, t);
+    }
+
+    /// The breaker closed (the site answered again): lift the
+    /// quarantine and revive its held-down nodes.
+    fn close_quarantine(&mut self, q: &mut ShardedQueue<Ev>,
+                        sites: &mut [SiteWorld], s: usize, t: SimTime) {
+        if !self.quarantined[s] {
+            return;
+        }
+        self.quarantined[s] = false;
+        self.broker.set_quarantine(s, false);
+        if let Some(opened) = self.quarantine_opened_at[s].take() {
+            self.quarantine_secs += t.0 - opened;
+        }
+        self.recorder.milestone(t, format!(
+            "{} back in contact — quarantine lifted",
+            sites[s].cloud.spec.name));
+        let mut held: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|(_, rt)| {
+                rt.site == s
+                    && rt.role == NodeRole::WorkerNode
+                    && rt.joined_at.is_some()
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        held.sort();
+        for id in held {
+            let name = self.names.name(id);
+            let down = self
+                .lrms
+                .node_stat(id)
+                .map(|st| st.health == NodeHealth::Down)
+                .unwrap_or(false);
+            if down && !self.reported_down(&name, t) {
+                let _ = self.lrms.set_node_health(&name,
+                                                  NodeHealth::Up, t);
+                // Reset the CLUES down-streak so the revived node is
+                // not immediately re-failed by stale counts.
+                self.clues.set_state_id(id, PowerState::On);
+                let idle = self
+                    .lrms
+                    .node_stat(id)
+                    .map(|st| st.is_idle())
+                    .unwrap_or(true);
+                self.recorder.node_state_id(t, id,
+                    if idle { DisplayState::Idle }
+                    else { DisplayState::Used });
+            }
+        }
+        self.pump_jobs(q, t);
+    }
+
+    // ---------------------------------------------------------------
     // Job plumbing
     // ---------------------------------------------------------------
 
     /// The initial cluster is up: anchor the workload timeline here
     /// (the paper's "15:00") and start the CLUES monitor loop.
-    fn begin_workload(&mut self, q: &mut ShardedQueue<Ev>, t: SimTime) {
+    fn begin_workload(&mut self, q: &mut ShardedQueue<Ev>,
+                      sites: &mut [SiteWorld], t: SimTime) {
         self.workload_t0 = t;
+        // The front end is placed by now, so fault plans can finally be
+        // checked against it: a "WAN" fault at the FE site is
+        // meaningless (control and site share a LAN there) and almost
+        // certainly a misconfigured plan. Fail the run loudly instead
+        // of silently misbehaving — no workload is scheduled, the queue
+        // drains, and `run()` returns the error.
+        if self.chaos {
+            if let Some(msg) = self.fe_fault_conflict(sites) {
+                self.recorder.milestone(t, format!("FATAL: {msg}"));
+                self.fatal = Some(msg);
+                return;
+            }
+            self.install_fault_windows(q, sites, t);
+        }
         self.recorder.milestone(t, format!(
             "initial cluster ready ({} workers) — workload timeline t0",
             self.cfg.template.scalable.count));
@@ -404,7 +699,7 @@ impl ControlWorld {
         // LRMS and broker), so they ride the control shard.
         for ev in &self.cfg.scenario.events {
             if ev.site() >= self.n_sites {
-                continue; // plan written for a bigger world: ignore
+                continue; // defensive: validated at construction
             }
             match *ev {
                 ScenarioEvent::SpotWave { site, at, count } => {
@@ -424,11 +719,93 @@ impl ControlWorld {
                     q.schedule_at(SimTime(t.0 + at.0 + duration_secs),
                                   Ev::PriceSpikeEnd { site });
                 }
+                ScenarioEvent::WanPartition { site, at, duration_secs }
+                => {
+                    q.schedule_at(SimTime(t.0 + at.0),
+                                  Ev::WanPartitionStart { site });
+                    q.schedule_at(SimTime(t.0 + at.0 + duration_secs),
+                                  Ev::WanPartitionEnd { site });
+                }
             }
         }
         if !self.clues_ticking {
             self.clues_ticking = true;
             q.schedule_in(self.clues.cfg.poll_interval_s, Ev::CluesTick);
+        }
+    }
+
+    /// Does the fault plan (or a scenario WAN partition) target the
+    /// front-end site? Only answerable after FE placement.
+    fn fe_fault_conflict(&self, sites: &[SiteWorld]) -> Option<String> {
+        let fe = self.fe_site;
+        let fe_name = &sites[fe].cloud.spec.name;
+        if self.cfg.faults.windows.iter().any(|w| w.site == fe) {
+            return Some(format!(
+                "WAN fault plan targets site {fe} ({fe_name}), which \
+                 hosts the front end — the control plane shares its \
+                 LAN, so a WAN fault there is meaningless"));
+        }
+        if self.cfg.scenario.events.iter().any(|ev| matches!(
+            ev, ScenarioEvent::WanPartition { site, .. } if *site == fe))
+        {
+            return Some(format!(
+                "scenario WAN partition targets site {fe} ({fe_name}), \
+                 which hosts the front end"));
+        }
+        None
+    }
+
+    /// Resolve the t0-relative fault plan into absolute-time windows,
+    /// install them into each site's fault layer, and schedule the
+    /// control-side markers for scripted partition windows (broker
+    /// avoidance, vRouter down/up, milestones).
+    fn install_fault_windows(&mut self, q: &mut ShardedQueue<Ev>,
+                             sites: &mut [SiteWorld], t: SimTime) {
+        for s in 0..self.n_sites {
+            let mut windows: Vec<ResolvedWindow> = self
+                .cfg
+                .faults
+                .windows
+                .iter()
+                .filter(|w| w.site == s)
+                .map(|w| ResolvedWindow {
+                    from: t.0 + w.at.0,
+                    to: t.0 + w.at.0 + w.duration_secs,
+                    loss: w.loss,
+                    dup: w.dup,
+                    jitter_s: w.jitter_s,
+                    partition: w.partition,
+                })
+                .collect();
+            // Scenario WAN partitions are total-loss windows on the
+            // site side too, so in-flight reports die on the wire.
+            for ev in &self.cfg.scenario.events {
+                if let ScenarioEvent::WanPartition { site, at,
+                                                     duration_secs } = ev
+                {
+                    if *site == s {
+                        windows.push(ResolvedWindow {
+                            from: t.0 + at.0,
+                            to: t.0 + at.0 + duration_secs,
+                            loss: 1.0,
+                            dup: 0.0,
+                            jitter_s: 0.0,
+                            partition: true,
+                        });
+                    }
+                }
+            }
+            if !windows.is_empty() {
+                sites[s].faults.install(windows);
+            }
+        }
+        for w in &self.cfg.faults.windows {
+            if w.partition {
+                q.schedule_at(SimTime(t.0 + w.at.0),
+                              Ev::WanPartitionStart { site: w.site });
+                q.schedule_at(SimTime(t.0 + w.at.0 + w.duration_secs),
+                              Ev::WanPartitionEnd { site: w.site });
+            }
         }
     }
 
@@ -440,7 +817,8 @@ impl ControlWorld {
     /// per-node entry — a pre-join loss of one must still drain
     /// `initial_pending`.
     fn settle_update_on_loss(&mut self, q: &mut ShardedQueue<Ev>,
-                             node: NodeId, rt: &NodeRt, t: SimTime) {
+                             sites: &mut [SiteWorld], node: NodeId,
+                             rt: &NodeRt, t: SimTime) {
         if let Some(id) = self.update_for_node.remove(&node) {
             let _ = self.engine.complete(id, t);
             q.schedule_in(0.0, Ev::OrchestratorPump);
@@ -452,7 +830,7 @@ impl ControlWorld {
             if self.initial_pending == 0 {
                 if let Some(id) = self.deploy_update.take() {
                     let _ = self.engine.complete(id, t);
-                    self.begin_workload(q, t);
+                    self.begin_workload(q, sites, t);
                     q.schedule_in(0.0, Ev::OrchestratorPump);
                 }
             }
@@ -495,7 +873,7 @@ impl ControlWorld {
                 self.preempted_jobs += 1;
             }
         }
-        self.settle_update_on_loss(q, node, &rt, t);
+        self.settle_update_on_loss(q, sites, node, &rt, t);
         self.nodes.remove(&node);
         self.clues.set_state_id(node, PowerState::Failed);
         self.clues.forget_id(node);
@@ -605,6 +983,9 @@ impl ControlWorld {
             if self.preempt_pending.remove(&run.job) {
                 self.preempt_recovered += 1;
             }
+            if self.chaos_pending.remove(&run.job) {
+                self.lease_recovered += 1;
+            }
             if let Some(stat) = self.lrms.node_stat(run.node) {
                 if stat.used_slots == 0 {
                     self.recorder.node_state_id(t, run.node,
@@ -692,6 +1073,21 @@ impl ControlWorld {
                 }
                 Action::MarkFailed { node } => {
                     let id = self.names.intern(&node);
+                    // Quarantined sites hold their nodes Down on
+                    // purpose: decommissioning them would race the
+                    // heal. CLUES's own Failed marking already freed
+                    // the headroom, so replacements spawn at healthy
+                    // sites (that is the failover); the quarantine
+                    // close revives whatever survived.
+                    if self.chaos {
+                        if let Some(rt) = self.nodes.get(&id) {
+                            if rt.site < self.n_sites
+                                && self.quarantined[rt.site]
+                            {
+                                continue;
+                            }
+                        }
+                    }
                     self.recorder.node_state_id(t, id,
                                                 DisplayState::Failed);
                     self.recorder.milestone(t, format!(
@@ -796,6 +1192,8 @@ impl ControlWorld {
     /// A node finished contextualization and joins the cluster.
     fn node_ready(&mut self, q: &mut ShardedQueue<Ev>,
                   sites: &mut [SiteWorld], node: NodeId, t: SimTime) {
+        // A successful join settles any in-flight provisioning retry.
+        self.retry_state.remove(&node);
         let Some(rt) = self.nodes.get_mut(&node) else { return };
         rt.joined_at = Some(t);
         let (site, role, requested_at) =
@@ -833,7 +1231,7 @@ impl ControlWorld {
                 if self.initial_pending == 0 {
                     if let Some(id) = self.deploy_update.take() {
                         let _ = self.engine.complete(id, t);
-                        self.begin_workload(q, t);
+                        self.begin_workload(q, sites, t);
                         q.schedule_in(0.0, Ev::OrchestratorPump);
                     }
                 }
@@ -898,7 +1296,7 @@ impl ControlWorld {
                     if self.initial_pending == 0 {
                         if let Some(id) = self.deploy_update.take() {
                             let _ = self.engine.complete(id, t);
-                            self.begin_workload(q, t);
+                            self.begin_workload(q, sites, t);
                             q.schedule_in(0.0,
                                           Ev::OrchestratorPump);
                         }
@@ -921,6 +1319,24 @@ impl ControlPlane for ControlWorld {
 
     fn handle(&mut self, sites: &mut [SiteWorld], t: SimTime, ev: Ev,
               q: &mut ShardedQueue<Ev>) {
+        // Any site-originated message is implicit proof of life for its
+        // site: it resets the heartbeat breaker before the event itself
+        // is dispatched (a job report from a "silent" site must lift
+        // the quarantine *before* its jobs are accounted).
+        if self.chaos {
+            match &ev {
+                Ev::NodeReady { site, .. }
+                | Ev::BootFailed { site, .. }
+                | Ev::NodeLost { site, .. }
+                | Ev::NodeOff { site, .. }
+                | Ev::JobBatch { site, .. }
+                | Ev::SiteHeartbeat { site } => {
+                    let s = *site;
+                    self.note_site_alive(q, sites, s, t);
+                }
+                _ => {}
+            }
+        }
         match ev {
             Ev::Deploy => {
                 self.engine.submit(UpdateOp::InitialDeploy, t);
@@ -946,8 +1362,11 @@ impl ControlPlane for ControlWorld {
                 // notification crossed the WAN and the name was reused
                 // for a successor — a successor must not be joined on
                 // the strength of its predecessor's contextualization.
+                // The joined_at guard additionally absorbs duplicated
+                // deliveries of the same join (WAN dup fault).
                 let live = self.nodes.get(&node)
-                    .map(|rt| rt.vm == vm && rt.site == site)
+                    .map(|rt| rt.vm == vm && rt.site == site
+                        && rt.joined_at.is_none())
                     .unwrap_or(false);
                 if !live {
                     return;
@@ -962,9 +1381,17 @@ impl ControlPlane for ControlWorld {
                 if rt.vm != vm || rt.site != site {
                     return; // stale: the name already hosts a successor
                 }
+                if self.chaos
+                    && rt.role == NodeRole::WorkerNode
+                    && self.schedule_provision_retry(q, node, rt.site, t)
+                {
+                    // The retry owns the node record now; the update (if
+                    // any) stays open until the retry resolves.
+                    return;
+                }
                 // Retry through CLUES on the next tick (the node
                 // vanishes; CLUES sees the deficit again).
-                self.settle_update_on_loss(q, node, &rt, t);
+                self.settle_update_on_loss(q, sites, node, &rt, t);
                 self.nodes.remove(&node);
                 self.clues.forget_id(node);
             }
@@ -974,6 +1401,12 @@ impl ControlPlane for ControlWorld {
             }
 
             Ev::CluesTick => {
+                // Heartbeat bookkeeping first: a site whose probes all
+                // vanished since the last tick trips its breaker before
+                // CLUES reacts to the resulting Down nodes.
+                if self.chaos {
+                    self.heartbeat_scan(q, sites, t);
+                }
                 let actions = self.clues_tick(t);
                 self.apply_clues_actions(q, actions, t);
                 // Recovery path for transient flaps: if the monitor reads
@@ -988,6 +1421,18 @@ impl ControlPlane for ControlWorld {
                         continue;
                     }
                     let id = s.id;
+                    // Quarantine holds its site's nodes Down until the
+                    // breaker closes; the flap-revive path must not
+                    // resurrect them early.
+                    if self.chaos {
+                        if let Some(rt) = self.nodes.get(&id) {
+                            if rt.site < self.n_sites
+                                && self.quarantined[rt.site]
+                            {
+                                continue;
+                            }
+                        }
+                    }
                     let name = self.names.name(id);
                     // Only revive if CLUES has not already failed it.
                     if !self.reported_down(&name, t)
@@ -999,6 +1444,9 @@ impl ControlPlane for ControlWorld {
                 }
                 self.stats_scratch = stats;
                 self.pump_jobs(q, t);
+                if self.chaos {
+                    self.send_heartbeats(q, t);
+                }
                 // Keep ticking while there is anything left to manage.
                 let all_workers_off = self
                     .nodes
@@ -1046,7 +1494,7 @@ impl ControlPlane for ControlWorld {
                     }
                     self.preempted_vms += 1;
                 }
-                self.settle_update_on_loss(q, node, &rt, t);
+                self.settle_update_on_loss(q, sites, node, &rt, t);
                 self.nodes.remove(&node);
                 self.clues.set_state_id(node, PowerState::Failed);
                 self.clues.forget_id(node);
@@ -1145,13 +1593,135 @@ impl ControlPlane for ControlWorld {
                 }
             }
 
+            Ev::RetryProvision { node } => {
+                let Some(rt) = self.nodes.get(&node).copied() else {
+                    // The node record is gone (e.g. a CancelPowerOff /
+                    // RemoveWorker raced the retry): nothing to place.
+                    self.retry_state.remove(&node);
+                    return;
+                };
+                let Some(rec) = self.retry_state.get_mut(&node).map(|r| {
+                    r.pending = false;
+                    *r
+                }) else {
+                    return;
+                };
+                let name = self.names.name(node);
+                let used = self.used_workers_per_site();
+                let cpus = self.cfg.template.worker.num_cpus;
+                let queue_depth = self.lrms.pending() as u32;
+                let site = if self.cfg.template.hybrid {
+                    let mut excluded: Vec<bool> = (0..self.n_sites)
+                        .map(|s| self.partition_depth[s] > 0
+                            || self.quarantined[s])
+                        .collect();
+                    // After `failover_after` failed attempts, stop
+                    // hammering the original site and let the broker
+                    // rank the alternatives...
+                    let avoid_first =
+                        rec.attempt >= self.cfg.retry.failover_after;
+                    if avoid_first && rec.first_site < excluded.len() {
+                        excluded[rec.first_site] = true;
+                    }
+                    let mut s = self.broker.select_excluding(
+                        sites, &used, cpus, queue_depth, t, &excluded);
+                    // ...unless nowhere else fits — then the original
+                    // site is still better than stranding the node.
+                    if s.is_none() && avoid_first
+                        && rec.first_site < excluded.len()
+                    {
+                        excluded[rec.first_site] = false;
+                        s = self.broker.select_excluding(
+                            sites, &used, cpus, queue_depth, t,
+                            &excluded);
+                    }
+                    s
+                } else {
+                    let s = self.fe_site;
+                    let cloud = &sites[s].cloud;
+                    let fits = cloud.used_vms() < cloud.spec.quota.max_vms
+                        && cloud.used_vcpus() + cpus
+                            <= cloud.spec.quota.max_vcpus;
+                    fits.then_some(s)
+                };
+                let placed = match site {
+                    Some(s) => {
+                        if s != rec.first_site {
+                            self.provision_failovers += 1;
+                            self.recorder.milestone(t, format!(
+                                "{name} failing over from {} to {}",
+                                sites[rec.first_site].cloud.spec.name,
+                                sites[s].cloud.spec.name));
+                        }
+                        self.place_worker(q, sites, &name, s, t)
+                    }
+                    None => {
+                        self.recorder.milestone(t, format!(
+                            "no eligible site for retry of {name}"));
+                        false
+                    }
+                };
+                if !placed
+                    && !self.schedule_provision_retry(q, node,
+                                                      rec.first_site, t)
+                {
+                    // Retry budget exhausted: settle like a lost node so
+                    // CLUES and the orchestrator move on.
+                    self.settle_update_on_loss(q, sites, node, &rt, t);
+                    self.nodes.remove(&node);
+                    self.clues.set_state_id(node, PowerState::Failed);
+                    self.clues.forget_id(node);
+                    self.recorder.node_state_id(t, node,
+                                                DisplayState::Failed);
+                }
+            }
+
+            Ev::SiteHeartbeat { .. } => {
+                // The liveness proof was consumed by the pre-dispatch
+                // note_site_alive above; the event itself carries no
+                // other payload.
+            }
+
+            Ev::WanPartitionStart { site } => {
+                self.partition_depth[site] += 1;
+                if self.partition_depth[site] == 1 {
+                    self.recorder.milestone(t, format!(
+                        "WAN partition: {} unreachable from the control \
+                         plane", sites[site].cloud.spec.name));
+                    if site != self.fe_site {
+                        let vr = self.vrouter_name(sites, site);
+                        if self.overlay.element(&vr).is_some() {
+                            let _ = self.overlay.fail_site_router(&vr);
+                        }
+                    }
+                }
+            }
+
+            Ev::WanPartitionEnd { site } => {
+                self.partition_depth[site] =
+                    self.partition_depth[site].saturating_sub(1);
+                if self.partition_depth[site] == 0 {
+                    self.recorder.milestone(t, format!(
+                        "WAN partition healed: {} reachable again",
+                        sites[site].cloud.spec.name));
+                    if site != self.fe_site {
+                        let vr = self.vrouter_name(sites, site);
+                        if self.overlay.element(&vr).is_some() {
+                            let _ = self.overlay.restore_site_router(&vr);
+                        }
+                    }
+                }
+            }
+
             // Site-shard events never reach the control handler.
             Ev::BootDone { .. }
             | Ev::CtxTimer { .. }
             | Ev::JobTimer { .. }
             | Ev::FlushTimer { .. }
             | Ev::CrashTimer { .. }
-            | Ev::TerminationDone { .. } => {
+            | Ev::TerminationDone { .. }
+            | Ev::HeartbeatPing { .. }
+            | Ev::Retransmit { .. } => {
                 unreachable!("site event routed to the control shard")
             }
         }

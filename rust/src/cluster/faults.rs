@@ -1,0 +1,643 @@
+//! Deterministic WAN chaos layer for the control ↔ site boundary.
+//!
+//! PR 5 split the cluster world into site shards that talk to the
+//! control plane over a perfectly reliable fixed-latency channel
+//! (`control_latency_s`). Real hybrid clusters do not get that luxury:
+//! the paper's vnode-5 incident — a healthy node falsely reported down
+//! and power-cycled — is a WAN artifact, not a node fault. This module
+//! provides the machinery to reproduce that class of failure *and* the
+//! self-healing that recovers from it, without giving up the bit-exact
+//! replay contract:
+//!
+//! - [`WanFaultPlan`]: a scripted, t0-relative plan (like
+//!   `ScenarioPlan`) of fault windows injecting message **loss**,
+//!   **duplication**, **delay jitter** and full **partitions** onto the
+//!   site → control reporting channel and the heartbeat path.
+//! - [`SiteFaultState`]: the per-site runtime. Every message crossing
+//!   the boundary consumes one sequence number, and the fault decision
+//!   for it is drawn from a dedicated [`Prng`] stream keyed by
+//!   `(site, seq)` — independent of engine interleaving, so Serial,
+//!   Sharded and Stealing replays see *identical* faults.
+//! - [`RetryPolicy`]: bounded-attempt exponential backoff with
+//!   deterministic jitter for provisioning retries and site failover.
+//! - [`SiteHealthTracker`]: the control-side circuit breaker (closed →
+//!   open → half-open) that quarantines a site after K consecutive
+//!   missed heartbeats.
+//!
+//! Droppable messages are modelled as a *reliable* channel with ack
+//! timeouts: when the fault layer drops a report, the sending site
+//! schedules a local retransmission after [`SiteFaultState::retransmit_backoff`]
+//! — exponential in the attempt count, seeded from the spec's
+//! `ack_timeout_s`. Heartbeat responses are deliberately *unreliable*:
+//! their loss is the detection signal the circuit breaker feeds on.
+
+use crate::sim::SimTime;
+use crate::util::prng::Prng;
+
+// ---------------------------------------------------------------------
+// Scripted plan
+// ---------------------------------------------------------------------
+
+/// One scripted fault window over a single site's WAN path. Times are
+/// relative to workload start (t0), like `ScenarioEvent`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultWindow {
+    /// Broker index of the affected site.
+    pub site: usize,
+    /// Window start, seconds after workload t0.
+    pub at: SimTime,
+    /// Window length, seconds (must be finite and > 0).
+    pub duration_secs: f64,
+    /// Per-message loss probability added while the window is active.
+    /// Must stay below 1.0 — use `partition` for total loss.
+    pub loss: f64,
+    /// Per-message duplication probability while active.
+    pub dup: f64,
+    /// Extra one-way delay drawn uniformly from `[0, jitter_s)`.
+    pub jitter_s: f64,
+    /// Total partition: every message in the window is dropped.
+    pub partition: bool,
+}
+
+/// A scripted WAN fault plan: a seed for the per-message decision
+/// streams plus any number of [`FaultWindow`]s. Empty plans are free —
+/// the fault layer stays inert and runs keep their pre-chaos digests.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WanFaultPlan {
+    /// Mixed with the run seed to key the per-`(site, seq)` streams.
+    pub seed: u64,
+    pub windows: Vec<FaultWindow>,
+}
+
+impl WanFaultPlan {
+    pub fn new(seed: u64) -> WanFaultPlan {
+        WanFaultPlan { seed, windows: Vec::new() }
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// Steady loss window: drop each message with probability `loss`.
+    pub fn lossy(mut self, site: usize, at_secs: f64, duration_secs: f64,
+                 loss: f64) -> WanFaultPlan {
+        self.windows.push(FaultWindow {
+            site,
+            at: SimTime(at_secs),
+            duration_secs,
+            loss,
+            dup: 0.0,
+            jitter_s: 0.0,
+            partition: false,
+        });
+        self
+    }
+
+    /// Duplication window: deliver each message, then with probability
+    /// `dup` deliver it a second time.
+    pub fn duplicating(mut self, site: usize, at_secs: f64,
+                       duration_secs: f64, dup: f64) -> WanFaultPlan {
+        self.windows.push(FaultWindow {
+            site,
+            at: SimTime(at_secs),
+            duration_secs,
+            loss: 0.0,
+            dup,
+            jitter_s: 0.0,
+            partition: false,
+        });
+        self
+    }
+
+    /// Jitter window: add a uniform `[0, jitter_s)` delay per message.
+    pub fn jittery(mut self, site: usize, at_secs: f64, duration_secs: f64,
+                   jitter_s: f64) -> WanFaultPlan {
+        self.windows.push(FaultWindow {
+            site,
+            at: SimTime(at_secs),
+            duration_secs,
+            loss: 0.0,
+            dup: 0.0,
+            jitter_s,
+            partition: false,
+        });
+        self
+    }
+
+    /// Total partition window: the site is unreachable for the
+    /// duration. Also fails the site's vRouter on the overlay and is
+    /// reflected in broker placement for the window.
+    pub fn partition(mut self, site: usize, at_secs: f64,
+                     duration_secs: f64) -> WanFaultPlan {
+        self.windows.push(FaultWindow {
+            site,
+            at: SimTime(at_secs),
+            duration_secs,
+            loss: 1.0,
+            dup: 0.0,
+            jitter_s: 0.0,
+            partition: true,
+        });
+        self
+    }
+
+    /// Fully general window.
+    pub fn window(mut self, w: FaultWindow) -> WanFaultPlan {
+        self.windows.push(w);
+        self
+    }
+
+    /// Build-time sanity: every window must target an existing site
+    /// with finite times and sub-total loss (partitions excepted).
+    /// Front-end targeting can only be checked once the front end is
+    /// placed — `ControlWorld::begin_workload` does that part.
+    pub fn validate(&self, n_sites: usize) -> anyhow::Result<()> {
+        for (i, w) in self.windows.iter().enumerate() {
+            if w.site >= n_sites {
+                anyhow::bail!(
+                    "fault window {i} targets site {} but the world has \
+                     only {n_sites} sites", w.site);
+            }
+            if !w.at.0.is_finite() || w.at.0 < 0.0 {
+                anyhow::bail!("fault window {i}: start {} must be a \
+                               finite non-negative offset", w.at.0);
+            }
+            if !w.duration_secs.is_finite() || w.duration_secs <= 0.0 {
+                anyhow::bail!("fault window {i}: duration {} must be \
+                               finite and positive", w.duration_secs);
+            }
+            if !(0.0..=1.0).contains(&w.loss)
+                || (!w.partition && w.loss >= 1.0)
+            {
+                anyhow::bail!(
+                    "fault window {i}: loss {} must be in [0, 1) — use \
+                     a partition window for total loss", w.loss);
+            }
+            if !(0.0..1.0).contains(&w.dup) {
+                anyhow::bail!("fault window {i}: dup {} must be in \
+                               [0, 1)", w.dup);
+            }
+            if !w.jitter_s.is_finite() || w.jitter_s < 0.0 {
+                anyhow::bail!("fault window {i}: jitter {} must be \
+                               finite and non-negative", w.jitter_s);
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Retry policy
+// ---------------------------------------------------------------------
+
+/// Bounded-attempt exponential backoff with deterministic jitter, used
+/// by the control plane to re-provision after `BootFailed` and to pick
+/// when a node fails over to the next broker-ranked site.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Give up on a node after this many provisioning attempts.
+    pub max_attempts: u32,
+    /// First backoff, seconds; doubles per attempt.
+    pub base_backoff_s: f64,
+    /// Backoff ceiling, seconds.
+    pub max_backoff_s: f64,
+    /// Symmetric jitter as a fraction of the capped backoff.
+    pub jitter_frac: f64,
+    /// After this many failed attempts the original site is excluded
+    /// from placement and the broker ranks the remaining sites.
+    pub failover_after: u32,
+    /// Consecutive missed heartbeats before a site is quarantined.
+    pub quarantine_after: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 5,
+            base_backoff_s: 30.0,
+            max_backoff_s: 480.0,
+            jitter_frac: 0.2,
+            failover_after: 2,
+            quarantine_after: 3,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (0-based): capped
+    /// exponential plus `±jitter_frac` deterministic jitter, floored at
+    /// one second so retries never collapse onto the failure instant.
+    pub fn backoff(&self, attempt: u32, rng: &mut Prng) -> f64 {
+        let exp = self.base_backoff_s * (1u64 << attempt.min(16)) as f64;
+        let capped = exp.min(self.max_backoff_s);
+        let jitter = if self.jitter_frac > 0.0 {
+            capped * self.jitter_frac * (2.0 * rng.next_f64() - 1.0)
+        } else {
+            0.0
+        };
+        (capped + jitter).max(1.0)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.max_attempts == 0 {
+            anyhow::bail!("retry policy: max_attempts must be >= 1");
+        }
+        if !self.base_backoff_s.is_finite() || self.base_backoff_s <= 0.0 {
+            anyhow::bail!("retry policy: base_backoff_s must be finite \
+                           and positive");
+        }
+        if !self.max_backoff_s.is_finite()
+            || self.max_backoff_s < self.base_backoff_s
+        {
+            anyhow::bail!("retry policy: max_backoff_s must be finite \
+                           and >= base_backoff_s");
+        }
+        if !(0.0..1.0).contains(&self.jitter_frac) {
+            anyhow::bail!("retry policy: jitter_frac must be in [0, 1)");
+        }
+        if self.quarantine_after == 0 {
+            anyhow::bail!("retry policy: quarantine_after must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Circuit breaker
+// ---------------------------------------------------------------------
+
+/// Circuit-breaker state for one site, driven by heartbeat outcomes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Site healthy; heartbeats answered.
+    Closed,
+    /// Site quarantined after K consecutive misses.
+    Open,
+    /// First post-quarantine report seen; one more confirms recovery.
+    HalfOpen,
+}
+
+/// Per-site missed-heartbeat tracker. `miss()` returns true exactly
+/// when the breaker trips open (quarantine should start); `report()`
+/// returns true exactly when it re-closes (quarantine should lift).
+#[derive(Debug, Clone)]
+pub struct SiteHealthTracker {
+    threshold: u32,
+    missed: u32,
+    state: BreakerState,
+}
+
+impl SiteHealthTracker {
+    pub fn new(threshold: u32) -> SiteHealthTracker {
+        SiteHealthTracker {
+            threshold: threshold.max(1),
+            missed: 0,
+            state: BreakerState::Closed,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// A heartbeat went unanswered for a full poll period.
+    pub fn miss(&mut self) -> bool {
+        match self.state {
+            BreakerState::Closed => {
+                self.missed += 1;
+                if self.missed >= self.threshold {
+                    self.state = BreakerState::Open;
+                    return true;
+                }
+                false
+            }
+            BreakerState::HalfOpen => {
+                // The probe that half-opened us was a fluke; re-open
+                // without starting a new quarantine window.
+                self.state = BreakerState::Open;
+                false
+            }
+            BreakerState::Open => false,
+        }
+    }
+
+    /// Any message from the site arrived at the control plane.
+    pub fn report(&mut self) -> bool {
+        match self.state {
+            BreakerState::Closed => {
+                self.missed = 0;
+                false
+            }
+            BreakerState::Open => {
+                self.state = BreakerState::HalfOpen;
+                false
+            }
+            BreakerState::HalfOpen => {
+                self.state = BreakerState::Closed;
+                self.missed = 0;
+                true
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-site runtime
+// ---------------------------------------------------------------------
+
+/// A fault window resolved to absolute simulation times, installed into
+/// a site shard at workload start.
+#[derive(Debug, Clone)]
+pub struct ResolvedWindow {
+    pub from: f64,
+    pub to: f64,
+    pub loss: f64,
+    pub dup: f64,
+    pub jitter_s: f64,
+    pub partition: bool,
+}
+
+/// Verdict for one site → control message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Delivery {
+    /// The message is lost on the WAN.
+    Drop,
+    /// Delivered after `extra_delay` extra seconds; when `duplicate`
+    /// is set a second copy lands after that delay too.
+    Deliver { extra_delay: f64, duplicate: Option<f64> },
+}
+
+/// Per-site fault runtime owned by the site shard, so sequence numbers
+/// advance in shard-local (deterministic) order regardless of engine.
+#[derive(Debug, Clone)]
+pub struct SiteFaultState {
+    /// Stream key base: run seed mixed with the plan seed and site.
+    stream_seed: u64,
+    /// Messages sent so far — the per-message stream discriminator.
+    seq: u64,
+    /// Spec-level steady loss (`FailureModel::message_loss_prob`).
+    steady_loss: f64,
+    /// Ack timeout seeding the retransmission backoff.
+    ack_timeout_s: f64,
+    /// Absolute-time windows, installed at workload start.
+    windows: Vec<ResolvedWindow>,
+    /// False ⇒ the whole layer is inert (no seq consumption, no RNG).
+    pub enabled: bool,
+    pub dropped: u64,
+    pub duplicated: u64,
+    pub retransmits: u64,
+}
+
+impl SiteFaultState {
+    pub fn new(site: usize, seed: u64, steady_loss: f64,
+               ack_timeout_s: f64, enabled: bool) -> SiteFaultState {
+        SiteFaultState {
+            stream_seed: seed
+                ^ (site as u64).wrapping_mul(0xA24BAED4963EE407),
+            seq: 0,
+            steady_loss,
+            ack_timeout_s: if ack_timeout_s > 0.0 {
+                ack_timeout_s
+            } else {
+                120.0
+            },
+            windows: Vec::new(),
+            enabled,
+            dropped: 0,
+            duplicated: 0,
+            retransmits: 0,
+        }
+    }
+
+    /// Install the absolute-time windows for this site (workload start).
+    pub fn install(&mut self, windows: Vec<ResolvedWindow>) {
+        self.windows = windows;
+    }
+
+    /// Decide the fate of the next outbound message. Consumes one
+    /// sequence number per call (when enabled), so the decision stream
+    /// is a pure function of `(plan seed, site, seq)` — engine
+    /// interleaving cannot perturb it.
+    pub fn decide(&mut self, t: SimTime) -> Delivery {
+        if !self.enabled {
+            return Delivery::Deliver { extra_delay: 0.0, duplicate: None };
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        let mut loss = self.steady_loss;
+        let mut dup = 0.0;
+        let mut jitter = 0.0;
+        let mut partition = false;
+        for w in &self.windows {
+            if t.0 >= w.from && t.0 < w.to {
+                if w.partition {
+                    partition = true;
+                }
+                loss = 1.0 - (1.0 - loss) * (1.0 - w.loss);
+                dup = 1.0 - (1.0 - dup) * (1.0 - w.dup);
+                if w.jitter_s > jitter {
+                    jitter = w.jitter_s;
+                }
+            }
+        }
+        if partition {
+            self.dropped += 1;
+            return Delivery::Drop;
+        }
+        if loss <= 0.0 && dup <= 0.0 && jitter <= 0.0 {
+            return Delivery::Deliver { extra_delay: 0.0, duplicate: None };
+        }
+        let mut rng = Prng::for_stream(
+            self.stream_seed ^ seq.wrapping_mul(0x9E3779B97F4A7C15));
+        if loss > 0.0 && rng.chance(loss) {
+            self.dropped += 1;
+            return Delivery::Drop;
+        }
+        let extra_delay =
+            if jitter > 0.0 { rng.next_f64() * jitter } else { 0.0 };
+        let duplicate = if dup > 0.0 && rng.chance(dup) {
+            self.duplicated += 1;
+            Some(if jitter > 0.0 { rng.next_f64() * jitter } else { 0.0 })
+        } else {
+            None
+        };
+        Delivery::Deliver { extra_delay, duplicate }
+    }
+
+    /// Delay before retransmission number `attempt` (0-based) of a
+    /// dropped reliable message: ack timeout doubling per attempt,
+    /// capped at 8×. Deterministic — no jitter needed, the decision
+    /// stream already decorrelates retransmissions.
+    pub fn retransmit_backoff(&mut self, attempt: u32) -> f64 {
+        self.retransmits += 1;
+        self.ack_timeout_s * (1u64 << attempt.min(3)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_doubles_caps_and_floors() {
+        let p = RetryPolicy { jitter_frac: 0.0, ..RetryPolicy::default() };
+        let mut r = Prng::new(1);
+        assert_eq!(p.backoff(0, &mut r), 30.0);
+        assert_eq!(p.backoff(1, &mut r), 60.0);
+        assert_eq!(p.backoff(2, &mut r), 120.0);
+        assert_eq!(p.backoff(3, &mut r), 240.0);
+        assert_eq!(p.backoff(4, &mut r), 480.0);
+        // Cap holds for arbitrarily late attempts.
+        assert_eq!(p.backoff(40, &mut r), 480.0);
+    }
+
+    #[test]
+    fn backoff_jitter_is_bounded_and_deterministic() {
+        let p = RetryPolicy::default();
+        let a: Vec<f64> = {
+            let mut r = Prng::new(7);
+            (0..6).map(|i| p.backoff(i, &mut r)).collect()
+        };
+        let b: Vec<f64> = {
+            let mut r = Prng::new(7);
+            (0..6).map(|i| p.backoff(i, &mut r)).collect()
+        };
+        assert_eq!(a, b);
+        for (i, v) in a.iter().enumerate() {
+            let base = (30.0 * (1u64 << i) as f64).min(480.0);
+            assert!(*v >= base * (1.0 - p.jitter_frac) - 1e-9
+                    && *v <= base * (1.0 + p.jitter_frac) + 1e-9,
+                    "attempt {i}: {v} vs base {base}");
+        }
+    }
+
+    #[test]
+    fn breaker_closed_open_halfopen_closed() {
+        let mut b = SiteHealthTracker::new(3);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(!b.miss());
+        assert!(!b.miss());
+        // Third consecutive miss trips the breaker open.
+        assert!(b.miss());
+        assert_eq!(b.state(), BreakerState::Open);
+        // Further misses do not re-trip.
+        assert!(!b.miss());
+        // First report half-opens, second closes.
+        assert!(!b.report());
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(b.report());
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_reports_reset_the_miss_count() {
+        let mut b = SiteHealthTracker::new(2);
+        assert!(!b.miss());
+        assert!(!b.report()); // closed: reset
+        assert!(!b.miss());
+        assert!(b.miss()); // needs the full threshold again
+    }
+
+    #[test]
+    fn halfopen_miss_reopens_without_new_window() {
+        let mut b = SiteHealthTracker::new(1);
+        assert!(b.miss());
+        assert!(!b.report());
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // The probe was a fluke — back to open, no second trip signal.
+        assert!(!b.miss());
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn fault_decisions_are_a_function_of_site_and_seq() {
+        let run = || {
+            let mut f = SiteFaultState::new(1, 0xFEED, 0.3, 120.0, true);
+            f.install(vec![ResolvedWindow {
+                from: 50.0,
+                to: 100.0,
+                loss: 0.2,
+                dup: 0.3,
+                jitter_s: 5.0,
+                partition: false,
+            }]);
+            (0..64)
+                .map(|i| f.decide(SimTime(i as f64 * 2.0)))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+        // A different site index produces a different stream.
+        let mut other = SiteFaultState::new(2, 0xFEED, 0.3, 120.0, true);
+        let stream: Vec<Delivery> =
+            (0..64).map(|i| other.decide(SimTime(i as f64 * 2.0))).collect();
+        assert_ne!(run(), stream);
+    }
+
+    #[test]
+    fn partition_windows_drop_everything() {
+        let mut f = SiteFaultState::new(0, 1, 0.0, 120.0, true);
+        f.install(vec![ResolvedWindow {
+            from: 10.0,
+            to: 20.0,
+            loss: 1.0,
+            dup: 0.0,
+            jitter_s: 0.0,
+            partition: true,
+        }]);
+        assert_eq!(f.decide(SimTime(15.0)), Delivery::Drop);
+        assert_eq!(f.decide(SimTime(25.0)),
+                   Delivery::Deliver { extra_delay: 0.0, duplicate: None });
+        assert_eq!(f.dropped, 1);
+    }
+
+    #[test]
+    fn disabled_layer_is_inert_and_free() {
+        let mut f = SiteFaultState::new(0, 1, 0.9, 120.0, false);
+        for _ in 0..32 {
+            assert_eq!(f.decide(SimTime(0.0)),
+                       Delivery::Deliver { extra_delay: 0.0,
+                                           duplicate: None });
+        }
+        assert_eq!(f.seq, 0);
+        assert_eq!(f.dropped, 0);
+    }
+
+    #[test]
+    fn retransmit_backoff_doubles_to_cap() {
+        let mut f = SiteFaultState::new(0, 1, 0.5, 100.0, true);
+        assert_eq!(f.retransmit_backoff(0), 100.0);
+        assert_eq!(f.retransmit_backoff(1), 200.0);
+        assert_eq!(f.retransmit_backoff(2), 400.0);
+        assert_eq!(f.retransmit_backoff(3), 800.0);
+        assert_eq!(f.retransmit_backoff(9), 800.0);
+        assert_eq!(f.retransmits, 5);
+    }
+
+    #[test]
+    fn plan_validation_rejects_bad_windows() {
+        let n = 3;
+        assert!(WanFaultPlan::new(1).validate(n).is_ok());
+        assert!(WanFaultPlan::new(1)
+            .lossy(3, 0.0, 10.0, 0.5)
+            .validate(n)
+            .is_err());
+        assert!(WanFaultPlan::new(1)
+            .lossy(1, 0.0, 10.0, 1.0)
+            .validate(n)
+            .is_err());
+        assert!(WanFaultPlan::new(1)
+            .partition(1, 0.0, f64::INFINITY)
+            .validate(n)
+            .is_err());
+        assert!(WanFaultPlan::new(1)
+            .jittery(1, -5.0, 10.0, 1.0)
+            .validate(n)
+            .is_err());
+        assert!(WanFaultPlan::new(1)
+            .partition(2, 30.0, 60.0)
+            .lossy(0, 0.0, 10.0, 0.25)
+            .validate(n)
+            .is_ok());
+    }
+}

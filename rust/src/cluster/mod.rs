@@ -57,10 +57,46 @@
 //! [`RunConfig::report_interval_s`] grid so a busy site sends one
 //! controller RPC per grid slot instead of one per job.
 //!
+//! **WAN chaos & self-healing.** The control↔site boundary can be
+//! subjected to deterministic fault injection ([`WanFaultPlan`], plus
+//! the per-site steady `message_loss_prob` of
+//! [`crate::cloudsim::FailureModel`]): site→control messages are
+//! dropped, duplicated
+//! or delayed by per-message decisions drawn from a stream keyed by
+//! `(site, seq)`, so all three engines see identical faults. The
+//! recovery contract layered on top:
+//!
+//! * *Retransmission.* Reliable site reports (joins, boot failures,
+//!   losses, power-offs, job batches) that the fault layer drops are
+//!   retransmitted by the site after an ack-timeout backoff
+//!   (`FailureModel::ack_timeout_s`, doubling to a cap); every job
+//!   completes under any sub-total loss rate.
+//! * *Provisioning retries.* A `BootFailed` worker is re-provisioned
+//!   under [`RetryPolicy`]: bounded attempts, exponential backoff with
+//!   deterministic jitter, failover to the next broker-ranked site
+//!   after `failover_after` attempts at the original one.
+//! * *Heartbeats & quarantine.* The control plane probes every remote
+//!   site each CLUES tick; `quarantine_after` consecutive unanswered
+//!   probes trip a per-site circuit breaker ([`SiteHealthTracker`]):
+//!   the broker treats the site as dark, its leased jobs requeue
+//!   elsewhere, and its nodes are held down until the site reports in
+//!   again (half-open → closed on two proofs of life).
+//! * *Partitions.* Scripted WAN partitions (a
+//!   [`crate::broker::ScenarioEvent::WanPartition`] or a
+//!   [`FaultWindow`] with `partition`) drop everything both ways for
+//!   the window, take the site's vRouter down, and exclude the site
+//!   from broker placement until the heal.
+//!
+//! All recovery work is accounted in [`RunReport`]
+//! (`messages_dropped`, `provision_retries`, `quarantine_windows`,
+//! `lease_recovered_jobs`, …) and folded into the determinism digest.
+//! When no fault source is configured, every chaos code path is
+//! skipped and pre-chaos runs keep their digests bit for bit.
+//!
 //! **Engines.** [`RunConfig::engine`] selects the replay engine:
 //! [`Engine::Serial`] (single-queue deterministic merge, the
 //! reference), [`Engine::Sharded`] (parallel site windows between
-//! control barriers) or [`Engine::Stealing`] (work-stealing segment
+//! control barriers) or [`Engine::Stealing`] (work-stealing window
 //! chains). All three produce byte-identical recorders, fig10/fig11
 //! CSV, spill files and `RunReport`s by the sharded-engine equivalence
 //! contract (`tests/broker_policies.rs` proves it on randomized
@@ -71,9 +107,12 @@
 //! [`RunConfig::metrics_spill_dir`] is set.
 
 mod control;
+mod faults;
 mod site;
 
 pub use control::ControlWorld;
+pub use faults::{BreakerState, FaultWindow, RetryPolicy,
+                 SiteHealthTracker, WanFaultPlan};
 pub use site::SiteWorld;
 
 use std::collections::HashMap;
@@ -109,9 +148,9 @@ pub enum Engine {
     /// shard chunks. `threads: 0` = auto (one per site, capped by the
     /// machine).
     Sharded { threads: usize },
-    /// Work-stealing segment chains (hot shards never serialize behind
-    /// cold ones). Zero values = defaults.
-    Stealing { threads: usize, segment_events: usize },
+    /// Work-stealing shard replay (hot shards never serialize behind
+    /// cold ones). `threads: 0` = auto.
+    Stealing { threads: usize },
 }
 
 impl Engine {
@@ -119,7 +158,7 @@ impl Engine {
     pub const ALL: [Engine; 3] = [
         Engine::Serial,
         Engine::Sharded { threads: 0 },
-        Engine::Stealing { threads: 0, segment_events: 0 },
+        Engine::Stealing { threads: 0 },
     ];
 
     pub fn label(self) -> &'static str {
@@ -144,9 +183,16 @@ pub struct RunConfig {
     /// (`SlaRank` reproduces the legacy `select_site` exactly).
     pub policy: PolicyKind,
     /// Scripted elasticity scenario — spot-preemption waves, site
-    /// outages, price spikes — with times relative to the workload t0
-    /// (the same convention as `injections`).
+    /// outages, price spikes, WAN partitions — with times relative to
+    /// the workload t0 (the same convention as `injections`).
     pub scenario: ScenarioPlan,
+    /// Scripted WAN fault plan for the control↔site boundary (loss,
+    /// duplication, jitter, partitions), times relative to the
+    /// workload t0. Empty = no scripted faults.
+    pub faults: WanFaultPlan,
+    /// Retry/backoff/failover/quarantine knobs for the self-healing
+    /// layer (only consulted when any fault source is configured).
+    pub retry: RetryPolicy,
     /// Paper default true; false = parallel-provisioning ablation.
     pub serialized_orchestrator: bool,
     /// Run real PJRT inference for one out of every N jobs
@@ -199,6 +245,8 @@ impl RunConfig {
             injections: crate::cloudsim::InjectionPlan::default(),
             policy: PolicyKind::SlaRank,
             scenario: ScenarioPlan::default(),
+            faults: WanFaultPlan::default(),
+            retry: RetryPolicy::default(),
             serialized_orchestrator: true,
             inference_every: 0,
             horizon: SimTime::from_hms(48, 0, 0),
@@ -286,6 +334,16 @@ pub enum Ev {
     /// Scenario: price spike begins / ends at a site.
     PriceSpikeStart { site: usize, factor: f64 },
     PriceSpikeEnd { site: usize },
+    /// Chaos: a scripted WAN partition of `site` begins / ends
+    /// (control-side marker — broker avoidance, vRouter down/up; the
+    /// site-side total loss is enforced by its installed windows).
+    WanPartitionStart { site: usize },
+    WanPartitionEnd { site: usize },
+    /// Chaos: a backed-off provisioning retry for `node` is due.
+    RetryProvision { node: NodeId },
+    /// Site → control: heartbeat reply (unreliable on purpose — its
+    /// loss is the missed-heartbeat signal the breaker counts).
+    SiteHeartbeat { site: usize },
 
     // ---- site shards ----------------------------------------------
     /// Control → site: a VM finishes booting (failed per the ticket);
@@ -304,6 +362,12 @@ pub enum Ev {
     /// Control → site: the provider finishes a decommission.
     TerminationDone { site: usize, vm: VmId, node: NodeId,
                       update: Option<UpdateId> },
+    /// Control → site: liveness probe (the site answers with an
+    /// unreliable [`Ev::SiteHeartbeat`]).
+    HeartbeatPing { site: usize },
+    /// Site-local: ack timeout for a dropped reliable report expired —
+    /// retransmit it through a fresh fault decision.
+    Retransmit { site: usize, ev: Box<Ev>, attempt: u32 },
 }
 
 impl ShardEvent for Ev {
@@ -322,13 +386,19 @@ impl ShardEvent for Ev {
             | Ev::OutageStart { .. }
             | Ev::OutageEnd { .. }
             | Ev::PriceSpikeStart { .. }
-            | Ev::PriceSpikeEnd { .. } => ShardKey::Control,
+            | Ev::PriceSpikeEnd { .. }
+            | Ev::WanPartitionStart { .. }
+            | Ev::WanPartitionEnd { .. }
+            | Ev::RetryProvision { .. }
+            | Ev::SiteHeartbeat { .. } => ShardKey::Control,
             Ev::BootDone { site, .. }
             | Ev::CtxTimer { site, .. }
             | Ev::JobTimer { site, .. }
             | Ev::FlushTimer { site }
             | Ev::CrashTimer { site, .. }
-            | Ev::TerminationDone { site, .. } => {
+            | Ev::TerminationDone { site, .. }
+            | Ev::HeartbeatPing { site }
+            | Ev::Retransmit { site, .. } => {
                 ShardKey::Site(*site as u32)
             }
         }
@@ -375,6 +445,25 @@ pub struct RunReport {
     pub preempted_jobs: u32,
     /// Of those, jobs that went on to complete (recovery).
     pub preempt_recovered: u32,
+    /// Site→control messages the WAN chaos layer dropped.
+    pub messages_dropped: u64,
+    /// Site→control messages delivered twice (duplication fault).
+    pub messages_duplicated: u64,
+    /// Reliable reports retransmitted after an ack timeout.
+    pub messages_retransmitted: u64,
+    /// Backed-off provisioning retries scheduled after boot failures.
+    pub provision_retries: u32,
+    /// Retries that landed at a different site than the original.
+    pub provision_failovers: u32,
+    /// Circuit-breaker quarantine windows opened.
+    pub quarantine_windows: u32,
+    /// Total time sites spent quarantined (open windows close at the
+    /// makespan), seconds.
+    pub quarantine_secs: f64,
+    /// Jobs requeued when a quarantine revoked their node's lease.
+    pub lease_requeued_jobs: u32,
+    /// Of those, jobs that went on to complete elsewhere.
+    pub lease_recovered_jobs: u32,
 }
 
 /// Canonical bit-exact digest of everything a deterministic replay
@@ -392,6 +481,15 @@ pub struct RunDigest {
     pub preempted_vms: u32,
     pub preempted_jobs: u32,
     pub preempt_recovered: u32,
+    pub messages_dropped: u64,
+    pub messages_duplicated: u64,
+    pub messages_retransmitted: u64,
+    pub provision_retries: u32,
+    pub provision_failovers: u32,
+    pub quarantine_windows: u32,
+    pub quarantine_secs_bits: u64,
+    pub lease_requeued_jobs: u32,
+    pub lease_recovered_jobs: u32,
     pub policy: &'static str,
     /// (name, site, hours, cost, busy hours) per VM incarnation.
     pub per_vm: Vec<(String, String, u64, u64, u64)>,
@@ -414,6 +512,15 @@ impl RunReport {
             preempted_vms: self.preempted_vms,
             preempted_jobs: self.preempted_jobs,
             preempt_recovered: self.preempt_recovered,
+            messages_dropped: self.messages_dropped,
+            messages_duplicated: self.messages_duplicated,
+            messages_retransmitted: self.messages_retransmitted,
+            provision_retries: self.provision_retries,
+            provision_failovers: self.provision_failovers,
+            quarantine_windows: self.quarantine_windows,
+            quarantine_secs_bits: self.quarantine_secs.to_bits(),
+            lease_requeued_jobs: self.lease_requeued_jobs,
+            lease_recovered_jobs: self.lease_recovered_jobs,
             policy: self.policy,
             per_vm: self
                 .per_vm
@@ -468,8 +575,38 @@ pub struct HybridCluster {
 }
 
 impl HybridCluster {
-    /// Build the world (no events run yet).
+    /// Build the world (no events run yet). Scenario plans, fault
+    /// plans and failure-model fields are validated here: a plan
+    /// written for a bigger world (out-of-range site index) or with
+    /// nonsensical probabilities is a configuration error, reported
+    /// before anything runs. (Fault plans targeting the front-end site
+    /// can only be checked once the FE is placed — that check happens
+    /// at workload start and fails the run.)
     pub fn new(cfg: RunConfig) -> anyhow::Result<HybridCluster> {
+        let n = cfg.sites.len();
+        cfg.scenario
+            .validate(n)
+            .context("invalid scenario plan")?;
+        cfg.faults
+            .validate(n)
+            .context("invalid WAN fault plan")?;
+        cfg.retry.validate().context("invalid retry policy")?;
+        for (i, spec) in cfg.sites.iter().enumerate() {
+            let f = &spec.failure;
+            if !f.message_loss_prob.is_finite()
+                || !(0.0..1.0).contains(&f.message_loss_prob)
+            {
+                anyhow::bail!(
+                    "site {i} ({}): message_loss_prob must be in \
+                     [0, 1) (got {}) — total steady loss can never \
+                     deliver anything", spec.name, f.message_loss_prob);
+            }
+            if !f.ack_timeout_s.is_finite() || f.ack_timeout_s <= 0.0 {
+                anyhow::bail!(
+                    "site {i} ({}): ack_timeout_s must be positive \
+                     (got {})", spec.name, f.ack_timeout_s);
+            }
+        }
         let mut net = Network::new();
         let mut clouds = Vec::new();
         for (i, spec) in cfg.sites.iter().enumerate() {
@@ -554,13 +691,34 @@ impl HybridCluster {
             ),
         };
 
+        // The chaos layer is enabled only when some fault source is
+        // configured; otherwise the per-message decision path (and its
+        // seq counter) is skipped entirely, so pre-chaos runs keep
+        // their event streams — and digests — bit for bit.
+        let chaos_enabled = !cfg.faults.is_empty()
+            || cfg.scenario.events.iter().any(|e| {
+                matches!(e,
+                         crate::broker::ScenarioEvent::WanPartition { .. })
+            })
+            || cfg.sites.iter().any(|s| s.failure.message_loss_prob > 0.0);
+        let fault_seed = cfg.seed ^ cfg.faults.seed.rotate_left(17);
+
         let sites: Vec<SiteWorld> = clouds
             .into_iter()
             .zip(site_recs)
             .enumerate()
-            .map(|(i, (cloud, recorder))| SiteWorld::new(
-                i, cloud, recorder, names.clone(), control_latency,
-                report_grid))
+            .map(|(i, (cloud, recorder))| {
+                let faults = faults::SiteFaultState::new(
+                    i,
+                    fault_seed,
+                    cloud.spec.failure.message_loss_prob,
+                    cloud.spec.failure.ack_timeout_s,
+                    chaos_enabled,
+                );
+                SiteWorld::new(
+                    i, cloud, recorder, names.clone(), control_latency,
+                    report_grid, faults)
+            })
             .collect();
 
         let control = ControlWorld::build(
@@ -594,21 +752,27 @@ impl HybridCluster {
                 };
                 run_sharded(&mut control, &mut sites, &mut q, horizon, n);
             }
-            Engine::Stealing { threads, segment_events } => {
+            Engine::Stealing { threads } => {
                 let n = if threads == 0 {
                     default_threads(sites.len())
                 } else {
                     threads
                 };
-                let mut steal = StealConfig::new(n);
-                if segment_events > 0 {
-                    steal.segment_events = segment_events;
-                }
                 run_sharded_stealing(&mut control, &mut sites, &mut q,
-                                     horizon, steal);
+                                     horizon, StealConfig::new(n));
             }
         }
         let makespan = q.now();
+        if let Some(msg) = control.fatal.take() {
+            anyhow::bail!("{msg}");
+        }
+        // A quarantine still open at the drain accounts to the
+        // makespan (the site never came back).
+        for opened in control.quarantine_opened_at.iter_mut() {
+            if let Some(o) = opened.take() {
+                control.quarantine_secs += makespan.0 - o;
+            }
+        }
 
         // Merge the per-shard recorders (control first, then sites in
         // index order — the fixed slice order both merge paths key by).
@@ -660,6 +824,13 @@ impl HybridCluster {
         let deploy_times = control.deploy_log.clone();
         let busy_secs: HashMap<String, f64> =
             recorder.busy_secs_per_node().into_iter().collect();
+        let (mut dropped, mut duplicated, mut retransmitted) =
+            (0u64, 0u64, 0u64);
+        for s in &sites {
+            dropped += s.faults.dropped;
+            duplicated += s.faults.duplicated;
+            retransmitted += s.faults.retransmits;
+        }
         Ok(RunReport {
             recorder,
             makespan,
@@ -676,6 +847,15 @@ impl HybridCluster {
             preempted_vms: control.preempted_vms,
             preempted_jobs: control.preempted_jobs,
             preempt_recovered: control.preempt_recovered,
+            messages_dropped: dropped,
+            messages_duplicated: duplicated,
+            messages_retransmitted: retransmitted,
+            provision_retries: control.provision_retries,
+            provision_failovers: control.provision_failovers,
+            quarantine_windows: control.quarantine_windows,
+            quarantine_secs: control.quarantine_secs,
+            lease_requeued_jobs: control.lease_requeued,
+            lease_recovered_jobs: control.lease_recovered,
         })
     }
 }
@@ -759,7 +939,7 @@ mod tests {
         let dir = std::env::temp_dir().join("evhc_cluster_steal_spill");
         let _ = std::fs::remove_dir_all(&dir);
         let mut cfg = small_cfg(0.02);
-        cfg.engine = Engine::Stealing { threads: 2, segment_events: 4 };
+        cfg.engine = Engine::Stealing { threads: 2 };
         cfg.metrics_spill_dir = Some(dir.clone());
         let spilled = run_cfg(cfg);
         assert_eq!(spilled.makespan.0, mem.makespan.0);

@@ -13,6 +13,17 @@
 //! control-latency delay. That pair of rules is what makes windows of
 //! site events safe to replay in parallel and byte-identical across
 //! the serial/sharded/stealing engines.
+//!
+//! Every site → control message additionally crosses the WAN chaos
+//! layer ([`SiteFaultState`]): the fault decision for each message is
+//! drawn from a stream keyed by `(site, seq)`, where `seq` advances in
+//! shard-local order — so Serial, Sharded and Stealing replays drop,
+//! duplicate and delay exactly the same messages. Reports (boot
+//! failures, joins, losses, power-offs, job batches) are *reliable*:
+//! when the layer drops one, the site schedules a local ack-timeout
+//! retransmission with exponential backoff. Heartbeat responses are
+//! *unreliable* by design — their loss is the control plane's
+//! silent-site detection signal.
 
 use crate::cloudsim::CloudSite;
 use crate::ids::{NodeId, NodeNames};
@@ -20,7 +31,14 @@ use crate::metrics::{DisplayState, Recorder};
 use crate::sim::shard::{SiteCtx, SiteShard};
 use crate::sim::SimTime;
 
+use super::faults::{Delivery, SiteFaultState};
 use super::{Ev, JobRun};
+
+/// Retransmission attempts per message before the site gives up (the
+/// validated fault plans — sub-total steady loss, finite partition
+/// windows — make reaching this bound astronomically unlikely; it only
+/// guards against unbounded event storms).
+const MAX_RETRANSMITS: u32 = 64;
 
 /// Everything site-local, replayed on the site's own shard.
 pub struct SiteWorld {
@@ -40,12 +58,15 @@ pub struct SiteWorld {
     control_latency: f64,
     /// Completed-run report grid, seconds (≤ 0 = report immediately).
     report_grid: f64,
+    /// The WAN chaos layer for this site's control channel.
+    pub(crate) faults: SiteFaultState,
 }
 
 impl SiteWorld {
     pub(crate) fn new(site: usize, cloud: CloudSite, recorder: Recorder,
                       names: NodeNames, control_latency: f64,
-                      report_grid: f64) -> SiteWorld {
+                      report_grid: f64, faults: SiteFaultState)
+        -> SiteWorld {
         SiteWorld {
             site,
             cloud,
@@ -55,6 +76,7 @@ impl SiteWorld {
             flush_scheduled: false,
             control_latency,
             report_grid,
+            faults,
         }
     }
 
@@ -72,6 +94,64 @@ impl SiteWorld {
             return t;
         }
         ((t / self.report_grid).floor() + 1.0) * self.report_grid
+    }
+
+    /// Send a *reliable* report to the control plane through the fault
+    /// layer. Dropped messages are retransmitted after an ack-timeout
+    /// backoff; `attempt` counts prior transmissions of this message.
+    fn send_control(&mut self, ctx: &mut SiteCtx<'_, Ev>, t: SimTime,
+                    ev: Ev, attempt: u32) {
+        match self.faults.decide(t) {
+            Delivery::Drop => {
+                if attempt >= MAX_RETRANSMITS {
+                    self.recorder.milestone(t, format!(
+                        "site {} gave up retransmitting a report after \
+                         {attempt} attempts", self.site));
+                    return;
+                }
+                let delay = self.faults.retransmit_backoff(attempt);
+                ctx.schedule_in(delay, Ev::Retransmit {
+                    site: self.site,
+                    ev: Box::new(ev),
+                    attempt: attempt + 1,
+                });
+            }
+            Delivery::Deliver { extra_delay, duplicate } => {
+                match duplicate {
+                    Some(dup_delay) => {
+                        ctx.emit_control_in(
+                            self.control_latency + extra_delay,
+                            ev.clone());
+                        ctx.emit_control_in(
+                            self.control_latency + dup_delay, ev);
+                    }
+                    None => ctx.emit_control_in(
+                        self.control_latency + extra_delay, ev),
+                }
+            }
+        }
+    }
+
+    /// Send an *unreliable* message (heartbeat responses): a drop is
+    /// simply a drop — no retransmission, the loss is the signal.
+    fn send_control_unreliable(&mut self, ctx: &mut SiteCtx<'_, Ev>,
+                               t: SimTime, ev: Ev) {
+        match self.faults.decide(t) {
+            Delivery::Drop => {}
+            Delivery::Deliver { extra_delay, duplicate } => {
+                match duplicate {
+                    Some(dup_delay) => {
+                        ctx.emit_control_in(
+                            self.control_latency + extra_delay,
+                            ev.clone());
+                        ctx.emit_control_in(
+                            self.control_latency + dup_delay, ev);
+                    }
+                    None => ctx.emit_control_in(
+                        self.control_latency + extra_delay, ev),
+                }
+            }
+        }
     }
 }
 
@@ -98,12 +178,12 @@ impl SiteShard for SiteWorld {
                                                 DisplayState::Failed);
                     self.recorder.milestone(t, format!(
                         "{} failed to boot", self.names.name(node)));
-                    ctx.emit_control_in(self.control_latency,
-                                        Ev::BootFailed {
-                                            site: self.site,
-                                            vm,
-                                            node,
-                                        });
+                    let site = self.site;
+                    self.send_control(ctx, t, Ev::BootFailed {
+                        site,
+                        vm,
+                        node,
+                    }, 0);
                     return;
                 }
                 // Contextualization starts now (Ansible over the SSH
@@ -118,11 +198,12 @@ impl SiteShard for SiteWorld {
             Ev::CtxTimer { vm, node, .. } => {
                 // The node is configured; the controller hears about
                 // the join one WAN notification later.
-                ctx.emit_control_in(self.control_latency, Ev::NodeReady {
-                    site: self.site,
+                let site = self.site;
+                self.send_control(ctx, t, Ev::NodeReady {
+                    site,
                     vm,
                     node,
-                });
+                }, 0);
             }
 
             Ev::JobTimer { job, node, gen, .. } => {
@@ -140,10 +221,11 @@ impl SiteShard for SiteWorld {
                     return;
                 }
                 let done = std::mem::take(&mut self.done_buf);
-                ctx.emit_control_in(self.control_latency, Ev::JobBatch {
-                    site: self.site,
+                let site = self.site;
+                self.send_control(ctx, t, Ev::JobBatch {
+                    site,
                     done,
-                });
+                }, 0);
             }
 
             Ev::CrashTimer { vm, node, preempt, .. } => {
@@ -161,12 +243,13 @@ impl SiteShard for SiteWorld {
                 } else {
                     format!("{name} crashed (provider-side failure)")
                 });
-                ctx.emit_control_in(self.control_latency, Ev::NodeLost {
-                    site: self.site,
+                let site = self.site;
+                self.send_control(ctx, t, Ev::NodeLost {
+                    site,
                     vm,
                     node,
                     preempted: preempt,
-                });
+                }, 0);
             }
 
             Ev::TerminationDone { vm, node, update, .. } => {
@@ -174,12 +257,34 @@ impl SiteShard for SiteWorld {
                 self.recorder.node_state_id(t, node, DisplayState::Off);
                 self.recorder.milestone(t, format!(
                     "{} powered off", self.names.name(node)));
-                ctx.emit_control_in(self.control_latency, Ev::NodeOff {
-                    site: self.site,
+                let site = self.site;
+                self.send_control(ctx, t, Ev::NodeOff {
+                    site,
                     vm,
                     node,
                     update,
-                });
+                }, 0);
+            }
+
+            Ev::HeartbeatPing { .. } => {
+                // Answer the control plane's liveness probe. The reply
+                // is unreliable on purpose: a lost answer is exactly
+                // the missed-heartbeat signal the circuit breaker
+                // counts. (The inbound ping itself crossed the same
+                // WAN; the control plane models its loss through the
+                // reply's fault decision — one draw covers the round
+                // trip.)
+                let site = self.site;
+                self.send_control_unreliable(
+                    ctx, t, Ev::SiteHeartbeat { site });
+            }
+
+            Ev::Retransmit { ev, attempt, .. } => {
+                // Ack timeout expired for a dropped report: try again.
+                // The retransmission consumes a fresh `(site, seq)`
+                // fault decision, so its fate is decorrelated from the
+                // original's.
+                self.send_control(ctx, t, *ev, attempt);
             }
 
             // Control-shard events never reach a site handler.

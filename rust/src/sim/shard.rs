@@ -44,26 +44,19 @@
 //! of the workload on one site) serializes behind the cold shards that
 //! share its chunk while other workers idle. [`run_sharded_stealing`]
 //! fixes that: each busy shard's window `[T, barrier)` becomes one
-//! sequential *chain* (of one or more segments), all chains go onto a
-//! shared injector (a mutex-protected deque), and every worker thread
-//! steals the next ready chain — from any shard — the moment it
-//! finishes its previous one. A hot shard therefore never waits behind
-//! cold shards, and cold shards spread across the remaining workers.
+//! sequential *chain*, all chains go onto a shared injector (a
+//! mutex-protected deque), and every worker thread steals the next
+//! ready chain — from any shard — the moment it finishes its previous
+//! one. A hot shard therefore never waits behind cold shards, and cold
+//! shards spread across the remaining workers.
 //!
-//! **Segment-boundary determinism.** Segment cuts are computed from the
-//! shard heap's *initially pending* dispatch times at window start
-//! (every `segment_events`-th sorted time becomes a cut), i.e. purely
-//! from queue state that is itself deterministic — never from thread
-//! timing. A segment with end-cut `c` drains exactly the events with
-//! `t < c`, so all events at one timestamp land in one segment and
-//! events a handler schedules mid-window fall into whichever later
-//! segment covers their time. Because (a) shards share no state, (b)
-//! each chain is executed strictly in segment order by at most one
-//! worker at a time, and (c) cross-shard control emissions are buffered
-//! and flushed in origin `(time, shard)` dispatch order at the barrier,
+//! **Determinism.** Because (a) shards share no state, (b) each chain
+//! is held by at most one worker at a time and drained strictly in
+//! time order, and (c) cross-shard control emissions are buffered and
+//! flushed in origin `(time, shard)` dispatch order at the barrier,
 //! the per-shard event sequences — and thus the merged stream — are
 //! byte-identical to [`run_sharded_serial`] no matter which worker
-//! steals which segment. `tests/shard_equivalence.rs` proves it on
+//! steals which chain. `tests/shard_equivalence.rs` proves it on
 //! skew-heavy randomized worlds with stealing on and off.
 //!
 //! **Worker↔chain affinity.** The worker that holds a chain drains its
@@ -237,26 +230,6 @@ impl<E> ShardHeap<E> {
             return Some((entry.at, entry.seq));
         }
         None
-    }
-
-    /// Dispatch times of live pending entries with `t < below` and
-    /// `t <= horizon`, appended to `out` in no particular order. This
-    /// snapshot of queue state — not thread timing — is what segment
-    /// cuts are computed from, which is why cutting cannot perturb the
-    /// merge order. Currently exercised by the unit tests only: with
-    /// worker↔chain affinity the stealing engine drains whole windows,
-    /// and a conditional-handoff policy would call this again.
-    #[cfg_attr(not(test), allow(dead_code))]
-    pub(crate) fn pending_times(&self, below: f64, horizon: f64,
-                                out: &mut Vec<f64>) {
-        for e in self.heap.iter() {
-            if self.gens[e.slot as usize] == e.gen
-                && e.at.0 < below
-                && e.at.0 <= horizon
-            {
-                out.push(e.at.0);
-            }
-        }
     }
 
     pub(crate) fn pop(&mut self) -> Option<(SimTime, u64, E)> {
@@ -774,53 +747,13 @@ where
 pub struct StealConfig {
     /// Worker threads (clamped per window to the number of busy shards).
     pub threads: usize,
-    /// Target number of initially-pending events per chain segment.
-    /// With worker↔chain affinity the holder drains its whole window
-    /// back-to-back, so the engine currently computes no cuts and this
-    /// knob does not influence replay (output is identical at any
-    /// granularity by the determinism argument anyway). Retained as
-    /// the granularity a conditional-handoff policy would cut
-    /// ([`segment_bounds`]) and release chains at.
-    pub segment_events: usize,
 }
 
 impl StealConfig {
-    /// `threads` workers with the default segment granularity.
+    /// `threads` worker threads.
     pub fn new(threads: usize) -> StealConfig {
-        StealConfig { threads, segment_events: 1024 }
+        StealConfig { threads }
     }
-}
-
-/// Deterministic segment end-cuts for one shard's window ending at
-/// `barrier`. `times` holds the shard's initially-pending dispatch
-/// times inside the window (any order; sorted in place): every
-/// `per_seg`-th sorted time becomes a cut, so each segment starts with
-/// roughly `per_seg` of the initially-pending events. Cuts are strictly
-/// ascending, never split a timestamp across segments (a drain up to
-/// cut `c` takes exactly the events with `t < c`), and the final bound
-/// is always `barrier`. With worker↔chain affinity the engine drains
-/// whole windows, so this is currently exercised by the unit tests
-/// only — it is the cut algorithm a conditional-handoff policy plugs
-/// back in.
-#[cfg_attr(not(test), allow(dead_code))]
-fn segment_bounds(times: &mut [f64], barrier: f64, per_seg: usize)
-    -> Vec<f64> {
-    let mut bounds = Vec::new();
-    if times.len() > per_seg {
-        times.sort_unstable_by(|a, b| a.total_cmp(b));
-        let mut i = per_seg;
-        while i < times.len() {
-            let cut = times[i];
-            // Skip duplicate cuts (runs of equal timestamps) and a cut
-            // that would leave the first segment empty.
-            if cut > times[0] && bounds.last().map_or(true, |&b| cut > b) {
-                bounds.push(cut);
-            }
-            i += per_seg;
-        }
-    }
-    bounds.push(barrier);
-    bounds
 }
 
 /// One shard's window as a sequential chain of segments. At most one
@@ -934,7 +867,6 @@ where
 {
     assert_eq!(sites.len() + 1, q.shards.len(),
                "one site state per site shard");
-    let _ = cfg.segment_events; // see StealConfig: cuts are future API
     loop {
         let Some((at, shard)) = q.peek() else { break };
         if at.0 > horizon.0 {
@@ -965,15 +897,9 @@ where
         let mut max_t = f64::NEG_INFINITY;
         {
             let (_control_shard, site_heaps) = q.shards.split_at_mut(1);
-            // One chain per shard with work in this window. Under
-            // worker↔chain affinity the holder drains consecutive
-            // segments back-to-back anyway, so cutting the window
-            // would only pay an O(pending) scan + sort per hot shard
-            // without changing which thread runs anything — each
-            // chain is one segment ending at the barrier.
-            // (`ShardHeap::pending_times` + `segment_bounds` remain
-            // the cut algorithm a conditional-handoff policy would
-            // plug back in here.)
+            // One chain per shard with work in this window, each
+            // covering the whole window up to the barrier (under
+            // worker↔chain affinity the holder drains it back-to-back).
             let mut chains: VecDeque<Chain<'_, S>> = VecDeque::new();
             for (i, (site, heap)) in sites
                 .iter_mut()
@@ -1226,19 +1152,19 @@ mod tests {
 
     #[test]
     fn stealing_replay_matches_serial() {
-        // Finest possible segmentation (1 event per segment) stresses
-        // the chain/injector machinery hardest.
-        for seg in [1usize, 2, 1024] {
+        for threads in [1usize, 2, 3] {
             for lookahead in [0.0, 10.0] {
                 let ((c1, s1, d1), _) = run_both(lookahead);
-                let cfg = StealConfig { threads: 3, segment_events: seg };
+                let cfg = StealConfig { threads };
                 let (c2, s2, d2) = run_stealing_toy(lookahead, cfg);
                 assert_eq!(c1.log, c2.log,
-                           "control log (seg={seg}, la={lookahead})");
+                           "control log (threads={threads}, \
+                            la={lookahead})");
                 assert_eq!(d1, d2);
                 for (a, b) in s1.iter().zip(&s2) {
                     assert_eq!(a.log, b.log,
-                               "site {} (seg={seg}, la={lookahead})",
+                               "site {} (threads={threads}, \
+                                la={lookahead})",
                                a.site);
                 }
             }
@@ -1257,41 +1183,13 @@ mod tests {
         q2.schedule_at(SimTime(0.0), TEv::Ctl(99));
         let end2 = run_sharded_stealing(
             &mut c2, &mut s2, &mut q2, SimTime(4.0),
-            StealConfig { threads: 2, segment_events: 1 });
+            StealConfig { threads: 2 });
         assert_eq!(end1.0, end2.0);
         assert_eq!(c1.log, c2.log);
         for (a, b) in s1.iter().zip(&s2) {
             assert_eq!(a.log, b.log);
         }
         assert!(!q2.is_empty(), "horizon left events queued");
-    }
-
-    #[test]
-    fn segment_bounds_are_ascending_and_end_at_barrier() {
-        let mut times = vec![5.0, 1.0, 3.0, 3.0, 2.0, 4.0, 1.0];
-        let bounds = segment_bounds(&mut times, 10.0, 2);
-        assert_eq!(*bounds.last().unwrap(), 10.0);
-        for w in bounds.windows(2) {
-            assert!(w[0] < w[1], "bounds not ascending: {bounds:?}");
-        }
-        // Cuts come from the sorted pending times, never below the
-        // first (the first segment is never empty).
-        assert!(bounds[..bounds.len() - 1]
-                    .iter()
-                    .all(|&b| b > 1.0 && b < 10.0));
-    }
-
-    #[test]
-    fn segment_bounds_degenerate_cases() {
-        // Few events: single segment.
-        let mut times = vec![2.0, 1.0];
-        assert_eq!(segment_bounds(&mut times, 9.0, 4), vec![9.0]);
-        // All events at one timestamp: a cut would empty the first
-        // segment, so the window stays whole.
-        let mut same = vec![3.0; 10];
-        assert_eq!(segment_bounds(&mut same, 9.0, 2), vec![9.0]);
-        // Empty window.
-        assert_eq!(segment_bounds(&mut [], 9.0, 2), vec![9.0]);
     }
 
     #[test]

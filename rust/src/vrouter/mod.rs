@@ -212,6 +212,36 @@ impl Overlay {
         Ok(())
     }
 
+    /// WAN partition: a site router drops off the overlay (its tunnel
+    /// to the CP is down) until restored. The router keeps its
+    /// certificate and subnet — nothing is revoked, traffic just stops
+    /// flowing while the element is down.
+    pub fn fail_site_router(&mut self, name: &str) -> anyhow::Result<()> {
+        let el = self
+            .elements
+            .get_mut(name)
+            .with_context(|| format!("no element {name:?}"))?;
+        if el.role != Role::SiteRouter {
+            bail!("{name:?} is not a site router");
+        }
+        el.up = false;
+        Ok(())
+    }
+
+    /// The partition healed: the site router's tunnel is back.
+    pub fn restore_site_router(&mut self, name: &str)
+        -> anyhow::Result<()> {
+        let el = self
+            .elements
+            .get_mut(name)
+            .with_context(|| format!("no element {name:?}"))?;
+        if el.role != Role::SiteRouter {
+            bail!("{name:?} is not a site router");
+        }
+        el.up = true;
+        Ok(())
+    }
+
     fn rehome_clients_of(&mut self, cp_name: &str) -> Vec<String> {
         let failed_idx = match self.cps.iter().position(|c| c == cp_name) {
             Some(i) => i,
@@ -437,6 +467,22 @@ mod tests {
         // Restore: clients stay on the backup (hot-backup semantics).
         o.restore_central_point("cp1").unwrap();
         assert_eq!(o.element("vr-3").unwrap().via_cp, Some(1));
+    }
+
+    #[test]
+    fn site_router_partition_and_heal() {
+        let (_, a, b, _) = net3();
+        let mut o = star(a, b);
+        o.fail_site_router("vr-aws").unwrap();
+        assert!(!o.is_connected("vr-aws", "fe"));
+        assert!(!o.element("vr-aws").unwrap().up);
+        o.restore_site_router("vr-aws").unwrap();
+        assert!(o.is_connected("vr-aws", "fe"));
+        // Certificate survived the partition — no re-enrolment needed.
+        assert!(o.ca.verify("vr-aws"));
+        // Role checks: the CP is not a site router.
+        assert!(o.fail_site_router("fe").is_err());
+        assert!(o.restore_site_router("missing").is_err());
     }
 
     #[test]

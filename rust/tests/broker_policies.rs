@@ -7,12 +7,18 @@
 //! 2. A scripted spot-preemption + site-outage scenario replays
 //!    **byte-identically** across two full cluster runs: same figures,
 //!    same milestones, same preemption accounting.
+//! 3. The WAN chaos layer keeps both promises at once: randomized
+//!    fault plans (loss, duplication, jitter, partitions) replay
+//!    byte-identically across all three engines, and the self-healing
+//!    paths (retransmission, provisioning retries, quarantine) still
+//!    finish every job under sub-total faults.
 
 use evhc::broker::{ElasticityBroker, PolicyKind, ScenarioPlan};
 use evhc::cloudsim::{CloudSite, FailureModel, Granularity, InstanceType,
                      OpLatency, Price, Provider, Quota, SiteSpec,
                      VmRequest};
-use evhc::cluster::{Engine, HybridCluster, RunConfig, RunReport};
+use evhc::cluster::{Engine, HybridCluster, RunConfig, RunReport,
+                    WanFaultPlan};
 use evhc::netsim::NetId;
 use evhc::orchestrator::{select_site, Sla};
 use evhc::sim::SimTime;
@@ -305,8 +311,7 @@ fn scenario_replays_byte_identically_on_all_engines() {
         let f10 = reference.recorder.fig10_usage(120.0, until).to_csv();
         let f11 = reference.recorder.fig11_states(120.0, until).to_csv();
         for engine in [Engine::Sharded { threads: 0 },
-                       Engine::Stealing { threads: 0,
-                                          segment_events: 8 }] {
+                       Engine::Stealing { threads: 0 }] {
             let r = run(engine)?;
             if r.determinism_digest() != ref_digest {
                 return Err(format!("{} run diverged from serial",
@@ -336,7 +341,7 @@ fn scenario_spill_replays_match_across_engines() {
     let mem = HybridCluster::new(scenario_cfg()).unwrap().run().unwrap();
     let until = mem.makespan;
     for (i, engine) in [Engine::Sharded { threads: 0 },
-                        Engine::Stealing { threads: 0, segment_events: 16 }]
+                        Engine::Stealing { threads: 0 }]
         .into_iter()
         .enumerate()
     {
@@ -367,4 +372,180 @@ fn every_policy_survives_the_scenario_suite() {
         assert_eq!(report.preempt_recovered, report.preempted_jobs,
                    "{kind:?}");
     }
+}
+
+// ---------------------------------------------------------------------
+// WAN chaos: fault plans replay byte-identically and never lose work
+// ---------------------------------------------------------------------
+
+/// Plain-data description of one randomized chaos run. Fault windows
+/// never target site 0 — the paper configurations place the front end
+/// there, and FE-targeting plans are rejected (tested separately).
+#[derive(Debug, Clone)]
+struct ChaosCase {
+    scale: f64,
+    seed: u64,
+    fault_seed: u64,
+    n_sites: usize,
+    /// Also give site 1 a steady 2% message-loss floor.
+    steady_loss: bool,
+    /// `(kind, site, at, duration, magnitude)` with kind 0 = loss,
+    /// 1 = duplication, 2 = jitter, 3 = partition.
+    windows: Vec<(u8, usize, f64, f64, f64)>,
+}
+
+fn chaos_case(r: &mut Prng) -> ChaosCase {
+    let n_sites = 2 + r.next_below(2) as usize; // 2..=3
+    let windows = (0..1 + r.next_below(3) as usize)
+        .map(|_| {
+            let kind = r.next_below(4) as u8;
+            let site = 1 + r.next_below(n_sites as u64 - 1) as usize;
+            let at = r.uniform(120.0, 2400.0);
+            let duration = r.uniform(120.0, 900.0);
+            let magnitude = match kind {
+                0 => r.uniform(0.05, 0.6), // loss probability
+                1 => r.uniform(0.1, 0.5),  // duplication probability
+                2 => r.uniform(1.0, 60.0), // jitter seconds
+                _ => 0.0,                  // partition needs none
+            };
+            (kind, site, at, duration, magnitude)
+        })
+        .collect();
+    ChaosCase {
+        scale: r.uniform(0.02, 0.05),
+        seed: r.next_u64(),
+        fault_seed: r.next_u64(),
+        n_sites,
+        steady_loss: r.chance(0.5),
+        windows,
+    }
+}
+
+fn chaos_cfg(case: &ChaosCase, engine: Engine) -> RunConfig {
+    let mut cfg = RunConfig::paper_usecase_sites(case.scale, case.seed,
+                                                 case.n_sites);
+    cfg.inference_every = 0;
+    cfg.engine = engine;
+    let mut plan = WanFaultPlan::new(case.fault_seed);
+    for &(kind, site, at, duration, magnitude) in &case.windows {
+        plan = match kind {
+            0 => plan.lossy(site, at, duration, magnitude),
+            1 => plan.duplicating(site, at, duration, magnitude),
+            2 => plan.jittery(site, at, duration, magnitude),
+            _ => plan.partition(site, at, duration),
+        };
+    }
+    cfg.faults = plan;
+    if case.steady_loss {
+        cfg.sites[1].failure.message_loss_prob = 0.02;
+    }
+    cfg
+}
+
+/// The chaos acceptance property: randomized WAN fault plans replay
+/// byte-identically across the serial, sharded and stealing engines —
+/// the per-message `(site, seq)` fault streams make all three replays
+/// drop, duplicate and delay exactly the same messages — and the run
+/// still completes every job, because sub-total loss plus bounded
+/// partitions can delay work but never lose it.
+#[test]
+fn chaos_plans_replay_byte_identically_on_all_engines() {
+    check_n("wan chaos (serial ≡ sharded ≡ stealing)", cases(6),
+            chaos_case, |case| {
+        let run = |engine: Engine| -> Result<RunReport, String> {
+            HybridCluster::new(chaos_cfg(case, engine))
+                .map_err(|e| e.to_string())?
+                .run()
+                .map_err(|e| e.to_string())
+        };
+        let reference = run(Engine::Serial)?;
+        let total = chaos_cfg(case, Engine::Serial)
+            .workload
+            .total_jobs();
+        if reference.jobs_completed != total {
+            return Err(format!("serial completed {}/{total} under chaos",
+                               reference.jobs_completed));
+        }
+        let ref_digest = reference.determinism_digest();
+        for engine in [Engine::Sharded { threads: 0 },
+                       Engine::Stealing { threads: 0 }] {
+            let r = run(engine)?;
+            if r.determinism_digest() != ref_digest {
+                return Err(format!("{} diverged under chaos",
+                                   engine.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Sustained sub-total loss on the busy site: every dropped report is
+/// retransmitted until it lands, so the cluster still finishes the
+/// full workload — and the chaos accounting proves the faults
+/// actually fired rather than the plan being silently inert.
+#[test]
+fn cluster_completes_under_sustained_message_loss() {
+    let cfg = || {
+        let mut cfg = RunConfig::paper_usecase(0.05, 11);
+        cfg.inference_every = 0;
+        cfg.faults = WanFaultPlan::new(0xC4A0)
+            .lossy(1, 0.0, 20_000.0, 0.25)
+            .duplicating(1, 0.0, 20_000.0, 0.15);
+        cfg
+    };
+    let total = cfg().workload.total_jobs();
+    let r1 = HybridCluster::new(cfg()).unwrap().run().unwrap();
+    assert_eq!(r1.jobs_completed, total);
+    assert!(r1.messages_dropped > 0, "loss window never fired");
+    assert!(r1.messages_retransmitted > 0, "no retransmissions");
+    assert!(r1.messages_duplicated > 0, "dup window never fired");
+    // The chaos accounting is part of the replay contract too.
+    let r2 = HybridCluster::new(cfg()).unwrap().run().unwrap();
+    assert_eq!(digest(&r1), digest(&r2));
+}
+
+/// A scripted WAN partition long enough to trip the missed-heartbeat
+/// circuit breaker: the silent site is quarantined, its leased jobs
+/// are requeued, and once the partition heals the quarantine closes
+/// and every requeued job recovers.
+#[test]
+fn partition_trips_quarantine_and_recovers() {
+    let cfg = || {
+        let mut cfg = RunConfig::paper_usecase(0.1, 7);
+        cfg.inference_every = 0;
+        // 900 s of silence = 15 missed 60 s CLUES heartbeat scans,
+        // far past the default quarantine threshold of 3.
+        cfg.faults = WanFaultPlan::new(9).partition(1, 1500.0, 900.0);
+        cfg
+    };
+    let total = cfg().workload.total_jobs();
+    let r = HybridCluster::new(cfg()).unwrap().run().unwrap();
+    assert_eq!(r.jobs_completed, total);
+    assert!(r.quarantine_windows >= 1, "breaker never tripped");
+    assert!(r.quarantine_secs > 0.0);
+    assert_eq!(r.lease_recovered_jobs, r.lease_requeued_jobs,
+               "a requeued lease never recovered");
+    assert!(r.messages_dropped > 0);
+}
+
+/// Malformed fault plans fail fast with a clear error instead of
+/// silently misbehaving mid-run: out-of-range site indices are
+/// rejected at construction, front-end targeting when the workload
+/// begins (the FE site is only known once the front end is placed).
+#[test]
+fn fault_plan_validation_rejects_bad_targets() {
+    let mut cfg = RunConfig::paper_usecase(0.05, 1);
+    cfg.faults = WanFaultPlan::new(1).lossy(7, 0.0, 100.0, 0.1);
+    let err = HybridCluster::new(cfg).err().expect("must reject");
+    assert!(err.to_string().contains("site 7"), "{err}");
+
+    let mut cfg = RunConfig::paper_usecase(0.05, 1);
+    cfg.inference_every = 0;
+    cfg.faults = WanFaultPlan::new(1).lossy(0, 0.0, 100.0, 0.1);
+    let err = HybridCluster::new(cfg)
+        .unwrap()
+        .run()
+        .err()
+        .expect("must reject");
+    assert!(err.to_string().contains("front end"), "{err}");
 }

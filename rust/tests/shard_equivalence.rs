@@ -187,9 +187,6 @@ struct Scn {
     lookahead: f64,
     report_every: u32,
     threads: usize,
-    /// Steal-segment granularity: tiny values force many segments per
-    /// window, stressing the chain/injector machinery.
-    segment_events: usize,
     seed: u64,
 }
 
@@ -199,10 +196,7 @@ impl Scn {
     }
 
     fn steal_cfg(&self) -> StealConfig {
-        StealConfig {
-            threads: self.threads,
-            segment_events: self.segment_events,
-        }
+        StealConfig { threads: self.threads }
     }
 }
 
@@ -217,7 +211,6 @@ fn gen_scn(r: &mut Prng) -> Scn {
         lookahead: if r.chance(0.5) { 3.0 } else { 47.0 },
         report_every: 1 + r.next_below(4) as u32,
         threads: 2 + r.next_below(3) as usize,
-        segment_events: 1 + r.next_below(8) as usize,
         seed: r.next_u64(),
     }
 }
@@ -236,7 +229,6 @@ fn gen_skew(r: &mut Prng) -> Scn {
         lookahead: if r.chance(0.5) { 3.0 } else { 47.0 },
         report_every: 1 + r.next_below(4) as u32,
         threads: 2 + r.next_below(3) as usize,
-        segment_events: 1 + r.next_below(8) as usize,
         seed: r.next_u64(),
     }
 }
