@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Staged CI pipeline.
 #
-#   ./ci.sh                 # full pipeline: fmt lint build test chaos bench compare
+#   ./ci.sh                 # full pipeline: fmt lint build test chaos chaos-sweep bench compare
 #   ./ci.sh <stage> [...]   # run the named stage(s) in the given order
 #
 # Stages:
@@ -11,10 +11,19 @@
 #   test           cargo test -q, plus quick re-drives of the broker
 #                  scenario suite and the shard-equivalence properties
 #                  with a reduced EVHC_PROPTEST_CASES budget
-#   chaos          WAN chaos suite: the randomized fault-plan
-#                  cross-engine replay property plus the scripted
-#                  loss/quarantine tests, bounded by EVHC_PROPTEST_CASES
-#   bench          scale bench in quick mode -> BENCH_scale.json
+#   chaos          WAN chaos suite: the randomized fault-plan and
+#                  regional-outage cross-engine replay properties, the
+#                  health-aware placement equivalence properties and the
+#                  scripted loss/quarantine tests, bounded by
+#                  EVHC_PROPTEST_CASES
+#   chaos-sweep    recovery-overhead frontier only (the scale bench's
+#                  chaos_sweep section with its in-bench asserts, no
+#                  BENCH_scale.json write), bounded by
+#                  EVHC_SWEEP_POINTS (default 2 grid points here)
+#   bench          scale bench in quick mode -> BENCH_scale.json; the
+#                  recovery-overhead frontier (chaos sweep) section is
+#                  bounded by EVHC_SWEEP_POINTS (default 4 grid points
+#                  here; set 8 for the full frontier)
 #   compare        diff BENCH_scale.json against the committed
 #                  BENCH_baseline.json with the events/sec regression
 #                  gate active (EVHC_BENCH_GATE=1: >15% fails)
@@ -69,12 +78,25 @@ stage_chaos() {
     EVHC_PROPTEST_CASES=${EVHC_PROPTEST_CASES:-4} \
         cargo test -q --test broker_policies \
             chaos partition_trips_quarantine fault_plan_validation \
-            cluster_completes_under
+            cluster_completes_under regional_outage health_aware
+}
+
+stage_chaos_sweep() {
+    # The frontier's health-aware-beats-sla-rank assert and per-point
+    # cross-engine digest asserts run in-bench, so this doubles as the
+    # adaptive-placement smoke stage; a tiny grid prefix keeps it
+    # cheap in the default pipeline (the full bench stage re-walks it
+    # with the larger default).
+    echo "== chaos-sweep: recovery-overhead frontier (bounded) =="
+    EVHC_SCALE_BENCH_QUICK=1 EVHC_SWEEP_ONLY=1 \
+        EVHC_SWEEP_POINTS="${EVHC_SWEEP_POINTS:-2}" \
+        cargo bench --bench scale
 }
 
 stage_bench() {
     echo "== bench: scale bench (quick mode) =="
-    EVHC_SCALE_BENCH_QUICK=1 cargo bench --bench scale
+    EVHC_SCALE_BENCH_QUICK=1 EVHC_SWEEP_POINTS="${EVHC_SWEEP_POINTS:-4}" \
+        cargo bench --bench scale
 }
 
 # Refuse to invent a baseline where it cannot be committed: on an
@@ -133,20 +155,21 @@ run_stage() {
         build)         stage_build ;;
         test)          stage_test ;;
         chaos)         stage_chaos ;;
+        chaos-sweep)   stage_chaos_sweep ;;
         bench)         stage_bench ;;
         compare)       stage_compare ;;
         seed-baseline) stage_seed_baseline ;;
         *)
             echo "unknown stage: $1" >&2
-            echo "stages: fmt lint build test chaos bench compare" \
-                 "seed-baseline" >&2
+            echo "stages: fmt lint build test chaos chaos-sweep bench" \
+                 "compare seed-baseline" >&2
             return 2
             ;;
     esac
 }
 
 if [ "$#" -eq 0 ]; then
-    set -- fmt lint build test chaos bench compare
+    set -- fmt lint build test chaos chaos-sweep bench compare
 fi
 for stage in "$@"; do
     run_stage "$stage"

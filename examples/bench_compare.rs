@@ -1,7 +1,8 @@
 //! Compare a fresh `BENCH_scale.json` against the committed
 //! `BENCH_baseline.json`, printing an events/sec and ms/tick table per
 //! scenario/stealing/cluster section plus the broker cost/makespan
-//! diff and the WAN-chaos recovery-overhead diff.
+//! diff and the WAN-chaos recovery-overhead diff (both the fixed
+//! `chaos` variants and the `chaos_sweep` retry-knob frontier).
 //!
 //! Regression policy:
 //! * events/sec drops beyond 10% are warned about; beyond 15% they are
@@ -210,19 +211,20 @@ fn compare_broker(baseline: &Json, fresh: &Json) -> u32 {
     regressions
 }
 
-/// Diff the WAN-chaos rows: recovery overhead (chaos makespan over
-/// the fault-free reference) and completed-jobs/sec. Always warn-only
-/// — the rows mix simulated recovery behaviour with wall-clock
-/// throughput, so they chart the self-healing trajectory without ever
-/// gating CI.
-fn compare_chaos(baseline: &Json, fresh: &Json) -> u32 {
-    let base_rows = rows_of(baseline, "chaos");
-    let fresh_rows = rows_of(fresh, "chaos");
+/// Diff the WAN-chaos rows (`key` is `"chaos"` or `"chaos_sweep"` —
+/// both sections share the row shape): recovery overhead (chaos
+/// makespan over the fault-free reference) and completed-jobs/sec.
+/// Always warn-only — the rows mix simulated recovery behaviour with
+/// wall-clock throughput, so they chart the self-healing trajectory
+/// without ever gating CI.
+fn compare_chaos(baseline: &Json, fresh: &Json, key: &str) -> u32 {
+    let base_rows = rows_of(baseline, key);
+    let fresh_rows = rows_of(fresh, key);
     if fresh_rows.is_empty() {
         return 0;
     }
-    println!("\n{:<28} {:>12} {:>12} {:>8}", "chaos row", "base", "fresh",
-             "delta");
+    println!("\n{:<28} {:>12} {:>12} {:>8}", format!("{key} row"),
+             "base", "fresh", "delta");
     println!("{}", "-".repeat(64));
     let mut regressions = 0u32;
     for (name, row) in fresh_rows {
@@ -304,7 +306,8 @@ fn main() {
     let cluster =
         compare_measured(&baseline, &fresh, "cluster", CLUSTER_SECTIONS);
     let broker_regressions = compare_broker(&baseline, &fresh);
-    let chaos_regressions = compare_chaos(&baseline, &fresh);
+    let chaos_regressions = compare_chaos(&baseline, &fresh, "chaos")
+        + compare_chaos(&baseline, &fresh, "chaos_sweep");
 
     let warned = scen.warned + steal.warned + cluster.warned;
     let gated = scen.gated + steal.gated + cluster.gated;

@@ -108,7 +108,34 @@ fn main() -> anyhow::Result<()> {
               jobs requeued, {} recovered",
              report.quarantine_windows, report.quarantine_secs,
              report.lease_requeued_jobs, report.lease_recovered_jobs);
+    println!("health trajectory (final / floor / first de-rank / first \
+              quarantine):");
+    let site_names = ["CESNET-MCC", "AWS"];
+    for s in 0..report.site_health.len() {
+        let fmt_t = |t: Option<f64>| match t {
+            Some(v) => format!("{v:.0}s"),
+            None => "never".to_string(),
+        };
+        println!("  {:<12} {:.3} / {:.3} / {} / {}",
+                 site_names.get(s).copied().unwrap_or("?"),
+                 report.site_health[s], report.site_health_min[s],
+                 fmt_t(report.site_deranked_at[s]),
+                 fmt_t(report.site_first_quarantine_at[s]));
+    }
     assert_eq!(report.jobs_completed, total,
                "chaos must delay work, never lose it");
+    // Adaptive placement contract: the degraded site (AWS, site 1)
+    // must have decayed past the de-rank threshold strictly before the
+    // missed-heartbeat breaker quarantined it — telemetry steers
+    // capacity away while the reactive path is still counting misses.
+    let deranked = report.site_deranked_at[1]
+        .expect("the lossy site must cross the de-rank threshold");
+    let quarantined = report.site_first_quarantine_at[1]
+        .expect("the partition must trip the breaker");
+    assert!(deranked < quarantined,
+            "de-rank at {deranked:.0}s must precede the breaker at \
+             {quarantined:.0}s");
+    assert!(report.site_health_min[1] < report.site_health_min[0],
+            "the faulted site must have the lower health floor");
     Ok(())
 }

@@ -31,7 +31,12 @@
 //!   message loss, a mid-run 900 s partition): recovery overhead vs a
 //!   fault-free reference and completed-jobs/sec, with cross-engine
 //!   digest equality asserted in-bench (diffed warn-only by
-//!   `bench_compare` — the rows are wall-clock sensitive).
+//!   `bench_compare` — the rows are wall-clock sensitive),
+//! * `chaos_sweep` — the recovery-overhead frontier: `RetryPolicy`
+//!   knobs (backoff base, failover threshold, breaker threshold) ×
+//!   WAN loss severity, bounded by `EVHC_SWEEP_POINTS`, plus the
+//!   adaptive-placement headline — health-aware placement must beat
+//!   static SLA ranking under sustained loss (asserted in-bench).
 //!
 //! Results are written to `BENCH_scale.json` at the repo root so future
 //! PRs accumulate a perf trajectory (`ci.sh` diffs it against the
@@ -46,9 +51,10 @@ use std::time::Instant;
 
 use evhc::api::json::Json;
 use evhc::broker::{PolicyKind, ScenarioPlan};
-use evhc::cluster::{Engine, HybridCluster, RunConfig, RunReport,
-                    WanFaultPlan};
+use evhc::cluster::{Engine, HybridCluster, RetryPolicy, RunConfig,
+                    RunReport, WanFaultPlan};
 use evhc::ids::NodeNames;
+use evhc::orchestrator::Sla;
 use evhc::lrms::core::{BatchCore, Placement};
 use evhc::lrms::JobId;
 use evhc::metrics::{DisplayState, Recorder, ShardSink, SpillFiles};
@@ -784,6 +790,210 @@ fn chaos_section(quick: bool) -> Json {
 }
 
 // ---------------------------------------------------------------------
+// Chaos sweep: the recovery-overhead frontier
+// ---------------------------------------------------------------------
+
+/// How many grid points the sweep visits, bounded by
+/// `EVHC_SWEEP_POINTS` (CI keeps the sweep small; unset full mode walks
+/// the whole frontier).
+fn sweep_points(quick: bool) -> usize {
+    std::env::var("EVHC_SWEEP_POINTS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(if quick { 4 } else { 8 })
+        .max(1)
+}
+
+/// One frontier row, shaped like the `chaos` rows plus the swept knobs
+/// so `bench_compare` can diff both sections with the same code.
+fn sweep_row(name: String, policy: &'static str, loss: f64,
+             retry: &RetryPolicy, r: &RunReport, clean: &RunReport,
+             wall_s: f64) -> Json {
+    let overhead = r.makespan.0 / clean.makespan.0.max(1e-9);
+    let jobs_per_sec = r.jobs_completed as f64 / wall_s.max(1e-9);
+    Json::Object(vec![
+        ("name".into(), Json::Str(name)),
+        ("policy".into(), Json::Str(policy.into())),
+        ("loss".into(), Json::Num(loss)),
+        ("base_backoff_s".into(), Json::Num(retry.base_backoff_s)),
+        ("failover_after".into(), Json::Num(retry.failover_after as f64)),
+        ("quarantine_after".into(),
+         Json::Num(retry.quarantine_after as f64)),
+        ("sites".into(), Json::Num(r.site_health.len() as f64)),
+        ("jobs".into(), Json::Num(r.jobs_completed as f64)),
+        ("makespan_s".into(), Json::Num(r.makespan.0)),
+        ("makespan_clean_s".into(), Json::Num(clean.makespan.0)),
+        ("recovery_overhead".into(), Json::Num(overhead)),
+        ("completed_jobs_per_sec".into(), Json::Num(jobs_per_sec)),
+        ("wall_s".into(), Json::Num(wall_s)),
+        ("events".into(), Json::Num(r.events as f64)),
+        ("messages_dropped".into(), Json::Num(r.messages_dropped as f64)),
+        ("messages_retransmitted".into(),
+         Json::Num(r.messages_retransmitted as f64)),
+        ("provision_retries".into(),
+         Json::Num(r.provision_retries as f64)),
+        ("quarantine_windows".into(),
+         Json::Num(r.quarantine_windows as f64)),
+        ("quarantine_secs".into(), Json::Num(r.quarantine_secs)),
+        ("lease_requeued_jobs".into(),
+         Json::Num(r.lease_requeued_jobs as f64)),
+        ("lease_recovered_jobs".into(),
+         Json::Num(r.lease_recovered_jobs as f64)),
+    ])
+}
+
+/// The recovery-overhead frontier: sweep the self-healing
+/// [`RetryPolicy`] knobs (backoff base, provisioning-failover
+/// threshold, heartbeat-breaker threshold) × WAN loss severity on the
+/// paper ladder and record where every point lands on the
+/// recovery-overhead / completed-jobs-per-sec plane.
+/// `EVHC_SWEEP_POINTS` bounds the grid walk (CI visits a prefix).
+///
+/// The section closes with the adaptive-placement headline pair: under
+/// sustained severe loss at the SLA-preferred burst site,
+/// [`PolicyKind::HealthAware`] must land at a strictly lower recovery
+/// overhead than the static [`PolicyKind::SlaRank`] it extends —
+/// asserted in-bench, alongside the usual cross-engine digest
+/// equality. Like `chaos`, these rows are wall-clock sensitive and are
+/// diffed warn-only by `bench_compare`.
+fn chaos_sweep_section(quick: bool) -> Json {
+    let scale = if quick { 0.05 } else { 0.1 };
+    let n_sites = 3;
+    let points = sweep_points(quick);
+
+    // (name, base_backoff_s, failover_after, quarantine_after, loss) —
+    // a fixed walk order so a bounded run always visits a stable
+    // prefix and baseline rows keep their names.
+    let grid: [(&str, f64, u32, u32, f64); 8] = [
+        ("retry-default-loss5", 30.0, 2, 3, 0.05),
+        ("fast-backoff-loss5", 10.0, 2, 3, 0.05),
+        ("eager-failover-loss5", 30.0, 1, 2, 0.05),
+        ("patient-breaker-loss5", 60.0, 3, 6, 0.05),
+        ("retry-default-loss25", 30.0, 2, 3, 0.25),
+        ("fast-backoff-loss25", 10.0, 2, 3, 0.25),
+        ("eager-failover-loss25", 30.0, 1, 2, 0.25),
+        ("patient-breaker-loss25", 60.0, 3, 6, 0.25),
+    ];
+    if points < grid.len() {
+        println!("  (EVHC_SWEEP_POINTS: visiting {points} of {} grid \
+                  points)", grid.len());
+    }
+
+    // One fault-free reference shared by every point: the swept knobs
+    // only matter once faults fire, so the denominator is common.
+    let clean = HybridCluster::new(chaos_run_cfg(
+            scale, n_sites, Engine::Serial, &WanFaultPlan::default()))
+        .expect("sweep baseline world")
+        .run()
+        .expect("sweep baseline run");
+    println!("  {:<24} {:>9.1}s makespan (fault-free reference)",
+             "clean", clean.makespan.0);
+
+    let mut rows = Vec::new();
+    for &(name, backoff, failover, breaker, loss)
+        in grid.iter().take(points)
+    {
+        // Same stream seed per loss level, so points at one loss level
+        // see identical drop streams and isolate the retry knobs.
+        let plan = WanFaultPlan::new(0xC4B0)
+            .lossy(1, 0.0, 50_000.0, loss)
+            .lossy(2, 0.0, 50_000.0, loss);
+        let build = |engine: Engine| {
+            let mut cfg = chaos_run_cfg(scale, n_sites, engine, &plan);
+            cfg.retry.base_backoff_s = backoff;
+            cfg.retry.failover_after = failover;
+            cfg.retry.quarantine_after = breaker;
+            cfg
+        };
+        let wall = Instant::now();
+        let r = HybridCluster::new(build(Engine::Serial))
+            .expect("sweep world")
+            .run()
+            .expect("sweep run");
+        let wall_s = wall.elapsed().as_secs_f64();
+        assert_eq!(r.jobs_completed, clean.jobs_completed,
+                   "sweep point lost jobs: {name}");
+        let rp = HybridCluster::new(build(Engine::Sharded { threads: 0 }))
+            .expect("sweep world")
+            .run()
+            .expect("sweep run");
+        assert_eq!(rp.determinism_digest(), r.determinism_digest(),
+                   "sweep replay diverged: {name} under sharded");
+        let overhead = r.makespan.0 / clean.makespan.0.max(1e-9);
+        println!("  {name:<24} {:>9.1}s makespan ({overhead:.3}x clean)  \
+                  {:>5} dropped {:>5} retx {:>2} quarantines",
+                 r.makespan.0, r.messages_dropped,
+                 r.messages_retransmitted, r.quarantine_windows);
+        let retry = RetryPolicy {
+            base_backoff_s: backoff,
+            failover_after: failover,
+            quarantine_after: breaker,
+            ..RetryPolicy::default()
+        };
+        rows.push(sweep_row(name.into(), PolicyKind::SlaRank.label(),
+                            loss, &retry, &r, &clean, wall_s));
+    }
+
+    // Adaptive-placement headline: sustained severe loss at the
+    // SLA-preferred burst site (AWS). The spot market gets a backup
+    // SLA so de-ranking has an SLA-ranked site to steer to — without
+    // one, no-SLA sites score +inf and no finite health demotion can
+    // reach them. Identical configs either side, policy excepted.
+    let severe = WanFaultPlan::new(0xC4B1).lossy(1, 0.0, 50_000.0, 0.35);
+    let build_adaptive = |policy: PolicyKind, engine: Engine| {
+        let mut cfg = chaos_run_cfg(scale, n_sites, engine, &severe);
+        cfg.policy = policy;
+        cfg.slas.push(Sla { site_name: "AWS-spot".into(), priority: 2,
+                            max_instances: None });
+        cfg
+    };
+    let mut overheads = Vec::new();
+    for policy in [PolicyKind::SlaRank, PolicyKind::HealthAware] {
+        let wall = Instant::now();
+        let r = HybridCluster::new(build_adaptive(policy, Engine::Serial))
+            .expect("adaptive world")
+            .run()
+            .expect("adaptive run");
+        let wall_s = wall.elapsed().as_secs_f64();
+        assert_eq!(r.jobs_completed, clean.jobs_completed,
+                   "adaptive run lost jobs: {}", policy.label());
+        for engine in [Engine::Sharded { threads: 0 },
+                       Engine::Stealing { threads: 0 }] {
+            let rp = HybridCluster::new(build_adaptive(policy, engine))
+                .expect("adaptive world")
+                .run()
+                .expect("adaptive run");
+            assert_eq!(rp.determinism_digest(), r.determinism_digest(),
+                       "adaptive replay diverged: {} under {}",
+                       policy.label(), engine.label());
+        }
+        let overhead = r.makespan.0 / clean.makespan.0.max(1e-9);
+        let name = format!("adaptive-{}-loss35", policy.label());
+        println!("  {name:<24} {:>9.1}s makespan ({overhead:.3}x clean)  \
+                  site1 health floor {:.3}, de-ranked {}",
+                 r.makespan.0, r.site_health_min[1],
+                 match r.site_deranked_at[1] {
+                     Some(t) => format!("at {t:.0}s"),
+                     None => "never".into(),
+                 });
+        if policy == PolicyKind::HealthAware {
+            assert!(r.site_deranked_at[1].is_some(),
+                    "sustained 35% loss must de-rank the lossy site");
+        }
+        rows.push(sweep_row(name, policy.label(), 0.35,
+                            &RetryPolicy::default(), &r, &clean, wall_s));
+        overheads.push(overhead);
+    }
+    assert!(overheads[1] < overheads[0],
+            "health-aware placement must beat static sla-rank under \
+             sustained loss: {:.3}x vs {:.3}x clean",
+            overheads[1], overheads[0]);
+    println!("  health-aware wins the frontier: {:.3}x vs {:.3}x clean \
+              recovery overhead", overheads[1], overheads[0]);
+    Json::Array(rows)
+}
+
+// ---------------------------------------------------------------------
 // Cluster: the real paper use case across the three replay engines
 // ---------------------------------------------------------------------
 
@@ -955,6 +1165,18 @@ fn cluster_section(quick: bool) -> Json {
 
 fn main() {
     let quick = std::env::var("EVHC_SCALE_BENCH_QUICK").is_ok();
+
+    // Sweep-only mode (`./ci.sh chaos-sweep`): just the
+    // recovery-overhead frontier with its in-bench asserts, as a
+    // smoke stage — BENCH_scale.json is left untouched so a partial
+    // run never clobbers a full trajectory.
+    if std::env::var("EVHC_SWEEP_ONLY").is_ok() {
+        section("SCALE: recovery-overhead frontier (chaos sweep)");
+        let _ = chaos_sweep_section(quick);
+        println!("\nsweep-only mode: BENCH_scale.json left untouched");
+        return;
+    }
+
     let scenarios: Vec<Scenario> = if quick {
         vec![
             Scenario { name: "1k-nodes-20k-jobs", nodes: 1000, sites: 2,
@@ -1102,6 +1324,12 @@ fn main() {
     section("SCALE: wan chaos x self-healing");
     let chaos_rows = chaos_section(quick);
 
+    // Chaos sweep: the recovery-overhead frontier over the RetryPolicy
+    // knobs × loss severity, closing with the health-aware vs sla-rank
+    // adaptive-placement headline assert.
+    section("SCALE: recovery-overhead frontier (chaos sweep)");
+    let chaos_sweep_rows = chaos_sweep_section(quick);
+
     let doc = Json::Object(vec![
         ("bench".into(), Json::Str("scale".into())),
         ("quick".into(), Json::Bool(quick)),
@@ -1110,6 +1338,7 @@ fn main() {
         ("cluster".into(), cluster_rows),
         ("broker".into(), broker_rows),
         ("chaos".into(), chaos_rows),
+        ("chaos_sweep".into(), chaos_sweep_rows),
     ]);
     std::fs::write("BENCH_scale.json", doc.render() + "\n")
         .expect("write BENCH_scale.json");

@@ -37,6 +37,16 @@
 //!   exactly like an outage (availability forced to 0) until the
 //!   breaker closes. The flag is separate from the scenario outage
 //!   flag so an `OutageEnd` event cannot clear an active quarantine.
+//! * **Health** — the control plane distills each site's live chaos
+//!   telemetry (retransmission rate, provisioning retries, recent
+//!   quarantine time) into an exponentially-decayed health score in
+//!   `[0, 1]` and publishes it via
+//!   [`ElasticityBroker::set_health`]; [`SiteSignals::health`] carries
+//!   it to the policies. [`policy::HealthAware`] demotes degrading
+//!   sites by whole SLA-priority steps *before* the breaker trips;
+//!   the score defaults to exactly 1.0 (and every health penalty to
+//!   exactly 0.0), so fault-free decisions are bit-identical to the
+//!   health-blind policies.
 //!
 //! The front-end placement always uses the SLA ranking (the front end
 //! is the cluster's fixed point — the paper deploys it at the home
@@ -45,8 +55,8 @@
 pub mod policy;
 pub mod scenario;
 
-pub use policy::{CostMin, LatencyMin, PlacementPolicy, PolicyKind, Score,
-                 SlaRank, SpotAware};
+pub use policy::{CostMin, HealthAware, LatencyMin, PlacementPolicy,
+                 PolicyKind, Score, SlaRank, SpotAware};
 pub use scenario::{ScenarioEvent, ScenarioPlan};
 
 use crate::cloudsim::CloudSite;
@@ -133,6 +143,11 @@ pub struct SiteSignals {
     pub outage: bool,
     /// The control plane's circuit breaker has the site quarantined.
     pub quarantined: bool,
+    /// Exponentially-decayed health score in `[0, 1]` distilled by the
+    /// control plane from the site's chaos telemetry (retransmission
+    /// rate, provisioning retries, recent quarantine time). Exactly
+    /// 1.0 when the site is healthy or chaos is disabled.
+    pub health: f64,
 }
 
 /// The elasticity broker.
@@ -145,6 +160,9 @@ pub struct ElasticityBroker {
     /// from `outage` so scenario `OutageEnd` events cannot clear an
     /// active quarantine (and vice versa).
     quarantine: Vec<bool>,
+    /// Health score per site, published by the control plane's
+    /// telemetry distiller; 1.0 (exactly) until told otherwise.
+    health: Vec<f64>,
     /// Decision log for reports: (t, chosen site).
     pub decisions: Vec<(SimTime, usize)>,
 }
@@ -202,6 +220,7 @@ impl ElasticityBroker {
             policy: kind.build(),
             outage: vec![false; sites.len()],
             quarantine: vec![false; sites.len()],
+            health: vec![1.0; sites.len()],
             decisions: Vec::new(),
         }
     }
@@ -256,6 +275,19 @@ impl ElasticityBroker {
         self.quarantine.get(site).copied().unwrap_or(false)
     }
 
+    /// Telemetry hook: publish the control plane's health score for a
+    /// site (clamped to `[0, 1]`; NaN is treated as fully degraded —
+    /// a poisoned score must never *promote* a site).
+    pub fn set_health(&mut self, site: usize, score: f64) {
+        if let Some(h) = self.health.get_mut(site) {
+            *h = if score.is_nan() { 0.0 } else { score.clamp(0.0, 1.0) };
+        }
+    }
+
+    pub fn health_of(&self, site: usize) -> f64 {
+        self.health.get(site).copied().unwrap_or(1.0)
+    }
+
     /// Sample the live signals for one site. The effective price reads
     /// the site's own launch-time price factor, so scenario price
     /// spikes reach the policies through the same state that bills the
@@ -286,6 +318,7 @@ impl ElasticityBroker {
             queue_depth,
             outage,
             quarantined,
+            health: self.health[site],
         }
     }
 
@@ -557,6 +590,40 @@ mod tests {
         assert_eq!(b.select(&sites, &used, 2, 0, t(1.0)), Some(1));
         b.set_quarantine(0, false);
         assert_eq!(b.select(&sites, &used, 2, 0, t(2.0)), Some(0));
+    }
+
+    #[test]
+    fn health_score_deranks_site_before_any_breaker_opens() {
+        let sites = paper_sites();
+        let slas = paper_slas();
+        let used = vec![0, 0];
+        let mut b = broker(PolicyKind::HealthAware, &sites, &slas);
+        // Full health: identical to SlaRank — the SLA home wins.
+        assert_eq!(b.select(&sites, &used, 2, 0, t(0.0)), Some(0));
+        assert_eq!(b.signals(0, &sites, &used, 0).health, 1.0);
+        // Degradation inside the deadband changes nothing.
+        b.set_health(0, 0.95);
+        assert_eq!(b.select(&sites, &used, 2, 0, t(1.0)), Some(0));
+        // Past the deadband the flaky SLA home loses a priority step
+        // and the healthy priority-1 site takes placements — no
+        // outage, no quarantine, availability untouched.
+        b.set_health(0, 0.8);
+        assert!(!b.quarantine_active(0));
+        assert!(!b.outage_active(0));
+        assert!(b.signals(0, &sites, &used, 0).availability > 0.0);
+        assert_eq!(b.select(&sites, &used, 2, 0, t(2.0)), Some(1));
+        // Recovery restores the original ranking.
+        b.set_health(0, 1.0);
+        assert_eq!(b.select(&sites, &used, 2, 0, t(3.0)), Some(0));
+        // SlaRank itself ignores the score entirely.
+        let mut s = broker(PolicyKind::SlaRank, &sites, &slas);
+        s.set_health(0, 0.1);
+        assert_eq!(s.select(&sites, &used, 2, 0, t(0.0)), Some(0));
+        // NaN and out-of-range scores are sanitized, never promoted.
+        b.set_health(0, f64::NAN);
+        assert_eq!(b.health_of(0), 0.0);
+        b.set_health(0, 42.0);
+        assert_eq!(b.health_of(0), 1.0);
     }
 
     #[test]

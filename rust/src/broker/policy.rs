@@ -55,6 +55,45 @@ fn avail_key(sig: &SiteSignals) -> f64 {
     (1e6 - sig.availability * 1e6) as i64 as f64
 }
 
+/// How many SLA-priority steps a fully dead health score (0.0) demotes
+/// a site by. With `floor` quantization a site must lose more than
+/// `1/HEALTH_RANK_SPAN` (~6%) of its health before it is re-ranked at
+/// all — a deadband that keeps sub-noise telemetry jitter from
+/// flapping placement decisions.
+pub const HEALTH_RANK_SPAN: f64 = 16.0;
+
+/// Whole SLA-priority steps of demotion earned by a degraded health
+/// score. Exactly `0.0` at `health == 1.0` (IEEE: `1.0 - 1.0 == 0.0`),
+/// so a fault-free run adds nothing to any ranking key — the
+/// [`HealthAware`] ≡ [`SlaRank`] equivalence contract rests on this.
+pub fn health_rank_penalty(health: f64) -> f64 {
+    ((1.0 - health.clamp(0.0, 1.0)) * HEALTH_RANK_SPAN).floor()
+}
+
+/// True once the health score is degraded enough to demote the site by
+/// at least one SLA-priority step — the broker's "de-ranked" predicate,
+/// also used by the control plane to timestamp when adaptive placement
+/// started steering away from a site.
+pub fn health_deranked(health: f64) -> bool {
+    health_rank_penalty(health) > 0.0
+}
+
+/// Multiplicative health decay for magnitude-keyed policies (price,
+/// latency, hazard): `1.0` at full health — exactly, so fault-free
+/// decisions are untouched — rising linearly to `2.0` at health 0, so
+/// a half-dead site's price/latency/hazard counts double. Exposed for
+/// policies that rank on continuous costs rather than SLA steps.
+pub fn health_decay(health: f64) -> f64 {
+    2.0 - health.clamp(0.0, 1.0)
+}
+
+/// Fine-grained (sub-priority-step) health penalty for secondary keys,
+/// quantized to whole units like [`avail_key`] so comparisons never
+/// hinge on float noise. Exactly `0.0` at full health.
+fn health_tiebreak_penalty(health: f64) -> f64 {
+    ((1.0 - health.clamp(0.0, 1.0)) * 1e9).round()
+}
+
 /// A site-selection policy: scores one eligible site.
 pub trait PlacementPolicy: Send {
     fn name(&self) -> &'static str;
@@ -164,6 +203,38 @@ impl PlacementPolicy for SpotAware {
     }
 }
 
+/// Fault-telemetry-aware SLA ranking: [`SlaRank`]'s keys plus the
+/// health score the control plane distills from each site's chaos
+/// counters (retransmission rate, provisioning retries, recent
+/// quarantine time — see `cluster::control`). A degrading site is
+/// demoted by whole SLA-priority steps ([`health_rank_penalty`]), so a
+/// flaky priority-0 site starts losing placements to a healthy
+/// priority-1 site *before* its circuit breaker ever opens; within a
+/// priority band the fine-grained penalty breaks availability ties
+/// toward the healthier site. Under a fault-free run every health
+/// score is exactly 1.0, every penalty is exactly 0.0, and the score
+/// tuple — including tie behaviour — is identical to [`SlaRank`]'s
+/// (property-proven in `tests/broker_policies.rs`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HealthAware;
+
+impl PlacementPolicy for HealthAware {
+    fn name(&self) -> &'static str {
+        "health-aware"
+    }
+
+    fn score(&self, site: usize, table: &SiteTable, sig: &SiteSignals)
+        -> Score {
+        Score {
+            primary: sla_key(table, site)
+                + health_rank_penalty(sig.health),
+            secondary: avail_key(sig)
+                + health_tiebreak_penalty(sig.health),
+            tiebreak: table.name_rank(site),
+        }
+    }
+}
+
 /// Config-friendly policy selector (what [`crate::cluster::RunConfig`]
 /// carries; `build` yields the boxed trait object the broker drives).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -172,14 +243,16 @@ pub enum PolicyKind {
     CostMin,
     LatencyMin,
     SpotAware,
+    HealthAware,
 }
 
 impl PolicyKind {
-    pub const ALL: [PolicyKind; 4] = [
+    pub const ALL: [PolicyKind; 5] = [
         PolicyKind::SlaRank,
         PolicyKind::CostMin,
         PolicyKind::LatencyMin,
         PolicyKind::SpotAware,
+        PolicyKind::HealthAware,
     ];
 
     pub fn label(self) -> &'static str {
@@ -188,6 +261,7 @@ impl PolicyKind {
             PolicyKind::CostMin => "cost-min",
             PolicyKind::LatencyMin => "latency-min",
             PolicyKind::SpotAware => "spot-aware",
+            PolicyKind::HealthAware => "health-aware",
         }
     }
 
@@ -197,6 +271,7 @@ impl PolicyKind {
             PolicyKind::CostMin => Box::new(CostMin),
             PolicyKind::LatencyMin => Box::new(LatencyMin),
             PolicyKind::SpotAware => Box::new(SpotAware),
+            PolicyKind::HealthAware => Box::new(HealthAware),
         }
     }
 }
@@ -229,5 +304,26 @@ mod tests {
         for kind in PolicyKind::ALL {
             assert_eq!(kind.build().name(), kind.label());
         }
+    }
+
+    #[test]
+    fn health_penalties_vanish_exactly_at_full_health() {
+        assert_eq!(health_rank_penalty(1.0), 0.0);
+        assert_eq!(health_tiebreak_penalty(1.0), 0.0);
+        assert_eq!(health_decay(1.0), 1.0);
+        assert!(!health_deranked(1.0));
+        // The deadband: small degradation re-ranks nothing...
+        assert_eq!(health_rank_penalty(0.95), 0.0);
+        assert!(!health_deranked(0.95));
+        // ...but it still nudges the fine-grained tie-break key.
+        assert!(health_tiebreak_penalty(0.95) > 0.0);
+        // Past the deadband the site loses whole SLA-priority steps.
+        assert_eq!(health_rank_penalty(0.9), 1.0);
+        assert!(health_deranked(0.9));
+        assert_eq!(health_rank_penalty(0.0), HEALTH_RANK_SPAN);
+        // Out-of-range scores clamp instead of exploding.
+        assert_eq!(health_rank_penalty(-3.0), HEALTH_RANK_SPAN);
+        assert_eq!(health_rank_penalty(7.0), 0.0);
+        assert_eq!(health_decay(0.0), 2.0);
     }
 }

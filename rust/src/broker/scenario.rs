@@ -33,16 +33,27 @@ pub enum ScenarioEvent {
     /// Unlike `SiteOutage`, nothing dies — recovery is a matter of the
     /// control plane's retransmissions and circuit breaker.
     WanPartition { site: usize, at: SimTime, duration_secs: f64 },
+    /// Correlated regional outage: one backbone failure partitions
+    /// every listed site at once for the window. Semantically a
+    /// [`ScenarioEvent::WanPartition`] per member site sharing one
+    /// clock — the cluster world resolves it exactly that way, so
+    /// cross-engine byte-identity is untouched by the correlation.
+    RegionalOutage { sites: Vec<usize>, at: SimTime,
+                     duration_secs: f64 },
 }
 
 impl ScenarioEvent {
-    /// Site the event targets.
-    pub fn site(&self) -> usize {
+    /// Every site the event targets (a single-element slice for the
+    /// per-site variants).
+    pub fn target_sites(&self) -> &[usize] {
         match self {
             ScenarioEvent::SpotWave { site, .. }
             | ScenarioEvent::SiteOutage { site, .. }
             | ScenarioEvent::PriceSpike { site, .. }
-            | ScenarioEvent::WanPartition { site, .. } => *site,
+            | ScenarioEvent::WanPartition { site, .. } => {
+                std::slice::from_ref(site)
+            }
+            ScenarioEvent::RegionalOutage { sites, .. } => sites,
         }
     }
 }
@@ -111,21 +122,45 @@ impl ScenarioPlan {
         self
     }
 
-    /// Build-time sanity: every event must target an existing site with
-    /// finite, non-negative timing. Front-end targeting of WAN
-    /// partitions is checked later, once the front end is placed.
+    /// Builder: one regional backbone failure cuts every listed site
+    /// off from the control plane for `duration_secs`, starting
+    /// `at_secs` after workload t0.
+    pub fn regional_outage(mut self, sites: &[usize], at_secs: f64,
+                           duration_secs: f64) -> ScenarioPlan {
+        self.events.push(ScenarioEvent::RegionalOutage {
+            sites: sites.to_vec(),
+            at: SimTime(at_secs),
+            duration_secs,
+        });
+        self
+    }
+
+    /// Build-time sanity: every event must target existing sites with
+    /// finite, non-negative timing, and regional outages must list at
+    /// least one distinct site. Front-end targeting of WAN partitions
+    /// (regional or not) is checked later, once the front end is
+    /// placed.
     pub fn validate(&self, n_sites: usize) -> anyhow::Result<()> {
         for (i, ev) in self.events.iter().enumerate() {
-            if ev.site() >= n_sites {
-                anyhow::bail!(
-                    "scenario event {i} targets site {} but the world \
-                     has only {n_sites} sites", ev.site());
+            let targets = ev.target_sites();
+            for (j, &s) in targets.iter().enumerate() {
+                if s >= n_sites {
+                    anyhow::bail!(
+                        "scenario event {i} targets site {s} but the \
+                         world has only {n_sites} sites");
+                }
+                if targets[..j].contains(&s) {
+                    anyhow::bail!(
+                        "scenario event {i}: regional outage lists site \
+                         {s} twice");
+                }
             }
             let (at, duration) = match ev {
                 ScenarioEvent::SpotWave { at, .. } => (at.0, 0.0),
                 ScenarioEvent::SiteOutage { at, duration_secs, .. }
-                | ScenarioEvent::WanPartition { at, duration_secs, .. } =>
-                    (at.0, *duration_secs),
+                | ScenarioEvent::WanPartition { at, duration_secs, .. }
+                | ScenarioEvent::RegionalOutage { at, duration_secs, .. }
+                => (at.0, *duration_secs),
                 ScenarioEvent::PriceSpike { at, duration_secs, factor, .. }
                 => {
                     if !factor.is_finite() || *factor <= 0.0 {
@@ -136,6 +171,12 @@ impl ScenarioPlan {
                     (at.0, *duration_secs)
                 }
             };
+            if let ScenarioEvent::RegionalOutage { sites, .. } = ev {
+                if sites.is_empty() {
+                    anyhow::bail!("scenario event {i}: regional outage \
+                                   lists no member sites");
+                }
+            }
             if !at.is_finite() || at < 0.0 {
                 anyhow::bail!("scenario event {i}: start {at} must be a \
                                finite non-negative offset");
@@ -161,8 +202,8 @@ mod tests {
             .price_spike(1, 300.0, 600.0, 4.0);
         assert_eq!(plan.events.len(), 3);
         assert!(!plan.is_empty());
-        assert_eq!(plan.events[0].site(), 1);
-        assert_eq!(plan.events[1].site(), 2);
+        assert_eq!(plan.events[0].target_sites(), &[1]);
+        assert_eq!(plan.events[1].target_sites(), &[2]);
         match &plan.events[2] {
             ScenarioEvent::PriceSpike { site, at, duration_secs, factor }
             => {
@@ -179,7 +220,7 @@ mod tests {
     #[test]
     fn wan_partition_builder_and_validation() {
         let plan = ScenarioPlan::new().wan_partition(2, 900.0, 600.0);
-        assert_eq!(plan.events[0].site(), 2);
+        assert_eq!(plan.events[0].target_sites(), &[2]);
         assert!(plan.validate(3).is_ok());
         // Out-of-range site, negative start, infinite duration and a
         // non-positive price factor are all rejected with clear errors.
@@ -195,6 +236,33 @@ mod tests {
         assert!(ScenarioPlan::new()
             .price_spike(0, 10.0, 60.0, 0.0)
             .validate(1)
+            .is_err());
+    }
+
+    #[test]
+    fn regional_outage_builder_and_validation() {
+        let plan = ScenarioPlan::new().regional_outage(&[1, 2], 900.0,
+                                                       600.0);
+        assert_eq!(plan.events[0].target_sites(), &[1, 2]);
+        assert!(plan.validate(3).is_ok());
+        // Any out-of-range member fails the whole plan.
+        assert!(plan.validate(2).is_err());
+        // Empty and duplicate member lists are plan bugs.
+        assert!(ScenarioPlan::new()
+            .regional_outage(&[], 0.0, 60.0)
+            .validate(3)
+            .is_err());
+        assert!(ScenarioPlan::new()
+            .regional_outage(&[1, 1], 0.0, 60.0)
+            .validate(3)
+            .is_err());
+        assert!(ScenarioPlan::new()
+            .regional_outage(&[1], -1.0, 60.0)
+            .validate(3)
+            .is_err());
+        assert!(ScenarioPlan::new()
+            .regional_outage(&[1], 0.0, f64::INFINITY)
+            .validate(3)
             .is_err());
     }
 }

@@ -68,6 +68,38 @@ pub(crate) struct VmRec {
     pub(crate) busy_secs: f64,
 }
 
+/// Weight of one tick's observation in the health EWMA (the
+/// complement stays on the previous score).
+const HEALTH_GAIN: f64 = 0.3;
+/// Stress contributed per site→control message dropped since the
+/// previous tick.
+const HEALTH_DROP_WEIGHT: f64 = 0.2;
+/// Stress per retransmission (a drop the reliable layer had to repair).
+const HEALTH_RETRANSMIT_WEIGHT: f64 = 0.1;
+/// Stress per backed-off provisioning retry attributed to the site.
+const HEALTH_RETRY_WEIGHT: f64 = 0.5;
+/// Stress of sitting in quarantine for the whole tick.
+const HEALTH_QUARANTINE_STRESS: f64 = 3.0;
+
+/// One deterministic health-EWMA step: fold the fault telemetry a site
+/// accumulated since the previous CLUES tick into its score. The
+/// instantaneous observation is `1 / (1 + stress)` (exactly 1.0 on a
+/// calm tick), blended as `prev + HEALTH_GAIN * (instant - prev)` — a
+/// fully healthy site stays at exactly 1.0 (no drift), a faulty one
+/// decays geometrically toward the observation, and a recovering one
+/// climbs back the same way. Pure `f64` arithmetic on deterministic
+/// counters, so the trajectory is byte-identical across engines.
+pub(crate) fn ewma_health(prev: f64, drops: u64, retransmits: u64,
+                          retries: u64, quarantined: bool) -> f64 {
+    let stress = drops as f64 * HEALTH_DROP_WEIGHT
+        + retransmits as f64 * HEALTH_RETRANSMIT_WEIGHT
+        + retries as f64 * HEALTH_RETRY_WEIGHT
+        + if quarantined { HEALTH_QUARANTINE_STRESS } else { 0.0 };
+    let instant = 1.0 / (1.0 + stress);
+    let prev = prev.clamp(0.0, 1.0);
+    (prev + HEALTH_GAIN * (instant - prev)).clamp(0.0, 1.0)
+}
+
 /// The cross-site control plane.
 pub struct ControlWorld {
     pub cfg: RunConfig,
@@ -143,6 +175,28 @@ pub struct ControlWorld {
     /// When each open quarantine window started (for `quarantine_secs`
     /// accounting; still-open windows are closed at the makespan).
     pub(crate) quarantine_opened_at: Vec<Option<f64>>,
+    /// Per-site exponentially-decayed health score in `[0, 1]` (1.0 =
+    /// fully healthy), refreshed each CLUES tick from the fault
+    /// telemetry observed since the previous tick and published to the
+    /// broker ([`crate::broker::SiteSignals::health`]).
+    pub(crate) health: Vec<f64>,
+    /// Fault-counter snapshots from the previous health refresh:
+    /// (messages dropped, retransmissions, provisioning retries).
+    health_seen: Vec<(u64, u64, u64)>,
+    /// Provisioning retries attributed per site (the site of the first
+    /// failed attempt).
+    site_retries: Vec<u64>,
+    /// Lowest health each site ever reached (trajectory floor).
+    pub(crate) health_min: Vec<f64>,
+    /// When each site's health first crossed the de-rank threshold
+    /// ([`crate::broker::policy::health_deranked`]), if ever.
+    pub(crate) health_deranked_at: Vec<Option<f64>>,
+    /// When each site's circuit breaker first opened, if ever (the
+    /// de-rank must beat this for adaptive placement to matter).
+    pub(crate) first_quarantine_at: Vec<Option<f64>>,
+    /// Correlated per-site partition windows installed (plan region
+    /// groups + scenario regional outages, one per member site).
+    pub(crate) regional_windows: u32,
     /// In-flight provisioning retries, keyed by node.
     retry_state: HashMap<NodeId, RetryRec>,
     /// Jobs requeued by a quarantine lease revocation, awaiting
@@ -179,7 +233,8 @@ impl ControlWorld {
     ) -> ControlWorld {
         let chaos = !cfg.faults.is_empty()
             || cfg.scenario.events.iter().any(|e| {
-                matches!(e, ScenarioEvent::WanPartition { .. })
+                matches!(e, ScenarioEvent::WanPartition { .. }
+                         | ScenarioEvent::RegionalOutage { .. })
             })
             || cfg.sites.iter().any(|s| s.failure.message_loss_prob > 0.0);
         let chaos_rng = Prng::new(cfg.seed ^ 0xFA57_C8A0);
@@ -231,6 +286,13 @@ impl ControlWorld {
             partition_depth: vec![0; n_sites],
             quarantined: vec![false; n_sites],
             quarantine_opened_at: vec![None; n_sites],
+            health: vec![1.0; n_sites],
+            health_seen: vec![(0, 0, 0); n_sites],
+            site_retries: vec![0; n_sites],
+            health_min: vec![1.0; n_sites],
+            health_deranked_at: vec![None; n_sites],
+            first_quarantine_at: vec![None; n_sites],
+            regional_windows: 0,
             retry_state: HashMap::new(),
             chaos_pending: HashSet::new(),
             fatal: None,
@@ -513,6 +575,9 @@ impl ControlWorld {
         let delay = self.cfg.retry.backoff(attempt - 1,
                                            &mut self.chaos_rng);
         self.provision_retries += 1;
+        if first_site < self.n_sites {
+            self.site_retries[first_site] += 1;
+        }
         self.recorder.milestone(t, format!(
             "{name} provisioning attempt {attempt} failed — retrying \
              in {delay:.0}s"));
@@ -569,6 +634,41 @@ impl ControlWorld {
         }
     }
 
+    /// One health refresh (each CLUES tick under chaos): fold the
+    /// fault telemetry every site accumulated since the previous tick
+    /// into its EWMA score ([`ewma_health`]) and publish the result to
+    /// the broker, so `HealthAware` placement sees a degrading site
+    /// decay in ranking before its breaker ever opens. Reading the
+    /// site-shard fault counters here is safe: CLUES ticks are control
+    /// events, which dispatch at barrier points of every engine.
+    fn update_health(&mut self, sites: &[SiteWorld], t: SimTime) {
+        for s in 0..self.n_sites {
+            let drops = sites[s].faults.dropped;
+            let rts = sites[s].faults.retransmits;
+            let retries = self.site_retries[s];
+            let (d0, r0, p0) = self.health_seen[s];
+            self.health_seen[s] = (drops, rts, retries);
+            let h = ewma_health(self.health[s],
+                                drops - d0,
+                                rts - r0,
+                                retries - p0,
+                                self.quarantined[s]);
+            self.health[s] = h;
+            if h < self.health_min[s] {
+                self.health_min[s] = h;
+            }
+            if self.health_deranked_at[s].is_none()
+                && crate::broker::policy::health_deranked(h)
+            {
+                self.health_deranked_at[s] = Some(t.0);
+                self.recorder.milestone(t, format!(
+                    "{} health down to {h:.3} — de-ranked for \
+                     placement", sites[s].cloud.spec.name));
+            }
+            self.broker.set_health(s, h);
+        }
+    }
+
     /// Trip the circuit breaker for `s`: the broker treats the site as
     /// dark, its leased jobs requeue elsewhere, and its nodes are held
     /// down until the site reports in again.
@@ -581,6 +681,9 @@ impl ControlWorld {
         self.broker.set_quarantine(s, true);
         self.quarantine_windows += 1;
         self.quarantine_opened_at[s] = Some(t.0);
+        if self.first_quarantine_at[s].is_none() {
+            self.first_quarantine_at[s] = Some(t.0);
+        }
         self.recorder.milestone(t, format!(
             "{} silent for {} heartbeats — quarantined, requeuing its \
              leased jobs elsewhere", sites[s].cloud.spec.name,
@@ -698,33 +801,50 @@ impl ControlWorld {
         // operator actions on the control plane (reclaims touch the
         // LRMS and broker), so they ride the control shard.
         for ev in &self.cfg.scenario.events {
-            if ev.site() >= self.n_sites {
+            if ev.target_sites().iter().any(|&s| s >= self.n_sites) {
                 continue; // defensive: validated at construction
             }
-            match *ev {
+            match ev {
                 ScenarioEvent::SpotWave { site, at, count } => {
-                    q.schedule_at(SimTime(t.0 + at.0),
-                                  Ev::SpotWave { site, count });
+                    q.schedule_at(SimTime(t.0 + at.0), Ev::SpotWave {
+                        site: *site,
+                        count: *count,
+                    });
                 }
-                ScenarioEvent::SiteOutage { site, at, duration_secs } => {
+                &ScenarioEvent::SiteOutage { site, at, duration_secs }
+                => {
                     q.schedule_at(SimTime(t.0 + at.0),
                                   Ev::OutageStart { site });
                     q.schedule_at(SimTime(t.0 + at.0 + duration_secs),
                                   Ev::OutageEnd { site });
                 }
-                ScenarioEvent::PriceSpike { site, at, duration_secs,
-                                            factor } => {
+                &ScenarioEvent::PriceSpike { site, at, duration_secs,
+                                             factor } => {
                     q.schedule_at(SimTime(t.0 + at.0),
                                   Ev::PriceSpikeStart { site, factor });
                     q.schedule_at(SimTime(t.0 + at.0 + duration_secs),
                                   Ev::PriceSpikeEnd { site });
                 }
-                ScenarioEvent::WanPartition { site, at, duration_secs }
+                &ScenarioEvent::WanPartition { site, at, duration_secs }
                 => {
                     q.schedule_at(SimTime(t.0 + at.0),
                                   Ev::WanPartitionStart { site });
                     q.schedule_at(SimTime(t.0 + at.0 + duration_secs),
                                   Ev::WanPartitionEnd { site });
+                }
+                ScenarioEvent::RegionalOutage { sites: members, at,
+                                                duration_secs } => {
+                    // One correlated backbone failure = one partition
+                    // marker pair per member, all sharing the same
+                    // clock. The existing per-site nesting depth
+                    // composes overlapping windows.
+                    for &site in members {
+                        q.schedule_at(SimTime(t.0 + at.0),
+                                      Ev::WanPartitionStart { site });
+                        q.schedule_at(
+                            SimTime(t.0 + at.0 + duration_secs),
+                            Ev::WanPartitionEnd { site });
+                    }
                 }
             }
         }
@@ -745,12 +865,26 @@ impl ControlWorld {
                  hosts the front end — the control plane shares its \
                  LAN, so a WAN fault there is meaningless"));
         }
+        if self.cfg.faults.regions.iter().any(|g| g.sites.contains(&fe))
+        {
+            return Some(format!(
+                "WAN fault plan regional outage includes site {fe} \
+                 ({fe_name}), which hosts the front end"));
+        }
         if self.cfg.scenario.events.iter().any(|ev| matches!(
             ev, ScenarioEvent::WanPartition { site, .. } if *site == fe))
         {
             return Some(format!(
                 "scenario WAN partition targets site {fe} ({fe_name}), \
                  which hosts the front end"));
+        }
+        if self.cfg.scenario.events.iter().any(|ev| matches!(
+            ev, ScenarioEvent::RegionalOutage { sites, .. }
+                if sites.contains(&fe)))
+        {
+            return Some(format!(
+                "scenario regional outage includes site {fe} \
+                 ({fe_name}), which hosts the front end"));
         }
         None
     }
@@ -761,11 +895,15 @@ impl ControlWorld {
     /// avoidance, vRouter down/up, milestones).
     fn install_fault_windows(&mut self, q: &mut ShardedQueue<Ev>,
                              sites: &mut [SiteWorld], t: SimTime) {
+        // Region groups resolve into ordinary per-site partition
+        // windows here — downstream of this point the fault layer sees
+        // only `(site, seq)`-keyed streams, so correlation costs
+        // nothing in cross-engine byte-identity.
+        let expanded = self.cfg.faults.expanded_windows();
+        self.regional_windows +=
+            (expanded.len() - self.cfg.faults.windows.len()) as u32;
         for s in 0..self.n_sites {
-            let mut windows: Vec<ResolvedWindow> = self
-                .cfg
-                .faults
-                .windows
+            let mut windows: Vec<ResolvedWindow> = expanded
                 .iter()
                 .filter(|w| w.site == s)
                 .map(|w| ResolvedWindow {
@@ -777,29 +915,42 @@ impl ControlWorld {
                     partition: w.partition,
                 })
                 .collect();
-            // Scenario WAN partitions are total-loss windows on the
-            // site side too, so in-flight reports die on the wire.
+            // Scenario WAN partitions (regional or not) are total-loss
+            // windows on the site side too, so in-flight reports die
+            // on the wire.
             for ev in &self.cfg.scenario.events {
-                if let ScenarioEvent::WanPartition { site, at,
-                                                     duration_secs } = ev
-                {
-                    if *site == s {
-                        windows.push(ResolvedWindow {
-                            from: t.0 + at.0,
-                            to: t.0 + at.0 + duration_secs,
-                            loss: 1.0,
-                            dup: 0.0,
-                            jitter_s: 0.0,
-                            partition: true,
-                        });
+                let (members, at, duration_secs) = match ev {
+                    ScenarioEvent::WanPartition { site, at,
+                                                  duration_secs } => {
+                        (std::slice::from_ref(site), at, duration_secs)
                     }
+                    ScenarioEvent::RegionalOutage { sites, at,
+                                                    duration_secs } => {
+                        (sites.as_slice(), at, duration_secs)
+                    }
+                    _ => continue,
+                };
+                if members.contains(&s) {
+                    if matches!(ev,
+                                ScenarioEvent::RegionalOutage { .. })
+                    {
+                        self.regional_windows += 1;
+                    }
+                    windows.push(ResolvedWindow {
+                        from: t.0 + at.0,
+                        to: t.0 + at.0 + duration_secs,
+                        loss: 1.0,
+                        dup: 0.0,
+                        jitter_s: 0.0,
+                        partition: true,
+                    });
                 }
             }
             if !windows.is_empty() {
                 sites[s].faults.install(windows);
             }
         }
-        for w in &self.cfg.faults.windows {
+        for w in &expanded {
             if w.partition {
                 q.schedule_at(SimTime(t.0 + w.at.0),
                               Ev::WanPartitionStart { site: w.site });
@@ -1406,6 +1557,11 @@ impl ControlPlane for ControlWorld {
                 // CLUES reacts to the resulting Down nodes.
                 if self.chaos {
                     self.heartbeat_scan(q, sites, t);
+                    // Fold the telemetry of the elapsed tick into each
+                    // site's health score before CLUES provisions
+                    // anything, so this tick's placements already see
+                    // the refreshed ranking.
+                    self.update_health(sites, t);
                 }
                 let actions = self.clues_tick(t);
                 self.apply_clues_actions(q, actions, t);
@@ -1725,5 +1881,80 @@ impl ControlPlane for ControlWorld {
                 unreachable!("site event routed to the control shard")
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ewma_health;
+    use crate::broker::policy::health_deranked;
+
+    #[test]
+    fn calm_site_holds_exactly_full_health() {
+        // No drift: a fault-free site must stay at exactly 1.0 so
+        // HealthAware remains decision-identical to SlaRank.
+        let mut h = 1.0;
+        for _ in 0..1000 {
+            h = ewma_health(h, 0, 0, 0, false);
+            assert_eq!(h, 1.0);
+        }
+    }
+
+    #[test]
+    fn sustained_faults_decay_health_below_the_derank_threshold() {
+        // One dropped message per tick: the score decays toward the
+        // observation and crosses the placement de-rank threshold
+        // within a couple of ticks.
+        let mut h = 1.0;
+        let mut crossed_at = None;
+        for tick in 0..10 {
+            h = ewma_health(h, 1, 0, 0, false);
+            if crossed_at.is_none() && health_deranked(h) {
+                crossed_at = Some(tick);
+            }
+        }
+        assert_eq!(crossed_at, Some(1), "h after sustained loss: {h}");
+        // Quarantine is far more stressful than a lone drop.
+        let hq = ewma_health(1.0, 0, 0, 0, true);
+        assert!(hq < ewma_health(1.0, 1, 0, 0, false));
+    }
+
+    #[test]
+    fn single_blip_stays_inside_the_deadband_and_recovers() {
+        // One isolated drop dips the score but not past the de-rank
+        // threshold; calm ticks then climb it back toward 1.0
+        // monotonically.
+        let dipped = ewma_health(1.0, 1, 0, 0, false);
+        assert!(dipped < 1.0 && !health_deranked(dipped), "{dipped}");
+        let mut h = ewma_health(0.5, 0, 0, 0, false);
+        assert!(h > 0.5);
+        let mut prev = h;
+        for _ in 0..40 {
+            h = ewma_health(h, 0, 0, 0, false);
+            assert!(h >= prev);
+            prev = h;
+        }
+        assert!(h > 0.99, "recovery stalled at {h}");
+    }
+
+    #[test]
+    fn health_trajectory_is_deterministic_and_clamped() {
+        // Same inputs, same trajectory — bit for bit (the score is in
+        // the determinism digest).
+        let trace = |seed: u64| -> Vec<u64> {
+            let mut h = 1.0;
+            (0..50)
+                .map(|i| {
+                    h = ewma_health(h, (i + seed) % 3, i % 2, 0,
+                                    i % 7 == 0);
+                    h.to_bits()
+                })
+                .collect()
+        };
+        assert_eq!(trace(1), trace(1));
+        assert_ne!(trace(1), trace(2));
+        // Out-of-range priors are clamped back into [0, 1].
+        assert!(ewma_health(5.0, 0, 0, 0, false) <= 1.0);
+        assert!(ewma_health(-3.0, 1000, 0, 0, true) >= 0.0);
     }
 }

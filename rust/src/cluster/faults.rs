@@ -12,7 +12,12 @@
 //! - [`WanFaultPlan`]: a scripted, t0-relative plan (like
 //!   `ScenarioPlan`) of fault windows injecting message **loss**,
 //!   **duplication**, **delay jitter** and full **partitions** onto the
-//!   site → control reporting channel and the heartbeat path.
+//!   site → control reporting channel and the heartbeat path. Plans
+//!   also carry correlated [`RegionGroup`]s — one regional-backbone
+//!   outage window cutting several sites off at once — which expand
+//!   into ordinary per-site partition windows at resolution time, so
+//!   the per-`(site, seq)` decision streams (and with them cross-engine
+//!   byte-identity) are untouched by correlation.
 //! - [`SiteFaultState`]: the per-site runtime. Every message crossing
 //!   the boundary consumes one sequence number, and the fault decision
 //!   for it is drawn from a dedicated [`Prng`] stream keyed by
@@ -31,6 +36,7 @@
 //! `ack_timeout_s`. Heartbeat responses are deliberately *unreliable*:
 //! their loss is the detection signal the circuit breaker feeds on.
 
+use crate::ids::SiteNames;
 use crate::sim::SimTime;
 use crate::util::prng::Prng;
 
@@ -59,24 +65,43 @@ pub struct FaultWindow {
     pub partition: bool,
 }
 
+/// A correlated regional fault: one scripted backbone-outage window
+/// that partitions several sites at once (times t0-relative, like
+/// [`FaultWindow`]). Region groups are pure plan-level sugar — at
+/// resolution time each member site gets an ordinary partition window,
+/// so the per-`(site, seq)` fault streams never see the correlation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionGroup {
+    /// Broker indices of every site behind the failing backbone.
+    pub sites: Vec<usize>,
+    /// Outage start, seconds after workload t0.
+    pub at: SimTime,
+    /// Outage length, seconds (must be finite and > 0).
+    pub duration_secs: f64,
+}
+
 /// A scripted WAN fault plan: a seed for the per-message decision
-/// streams plus any number of [`FaultWindow`]s. Empty plans are free —
-/// the fault layer stays inert and runs keep their pre-chaos digests.
+/// streams plus any number of [`FaultWindow`]s and correlated
+/// [`RegionGroup`]s. Empty plans are free — the fault layer stays
+/// inert and runs keep their pre-chaos digests.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct WanFaultPlan {
     /// Mixed with the run seed to key the per-`(site, seq)` streams.
     pub seed: u64,
     pub windows: Vec<FaultWindow>,
+    /// Correlated regional outages, expanded into per-site partition
+    /// windows by [`WanFaultPlan::expanded_windows`].
+    pub regions: Vec<RegionGroup>,
 }
 
 impl WanFaultPlan {
     pub fn new(seed: u64) -> WanFaultPlan {
-        WanFaultPlan { seed, windows: Vec::new() }
+        WanFaultPlan { seed, windows: Vec::new(), regions: Vec::new() }
     }
 
     /// True when the plan injects nothing.
     pub fn is_empty(&self) -> bool {
-        self.windows.is_empty()
+        self.windows.is_empty() && self.regions.is_empty()
     }
 
     /// Steady loss window: drop each message with probability `loss`.
@@ -148,42 +173,128 @@ impl WanFaultPlan {
         self
     }
 
+    /// Correlated regional outage: one backbone-failure window cutting
+    /// every listed site off for the duration.
+    pub fn regional_outage(mut self, sites: &[usize], at_secs: f64,
+                           duration_secs: f64) -> WanFaultPlan {
+        self.regions.push(RegionGroup {
+            sites: sites.to_vec(),
+            at: SimTime(at_secs),
+            duration_secs,
+        });
+        self
+    }
+
+    /// Every scripted window with the correlated region groups expanded
+    /// into one partition window per member site — plan windows first,
+    /// then groups in plan order with member sites in listed order, so
+    /// the expansion is deterministic and per-site resolution (hence the
+    /// `(site, seq)` stream keying) never sees the correlation.
+    pub fn expanded_windows(&self) -> Vec<FaultWindow> {
+        let mut out = self.windows.clone();
+        for g in &self.regions {
+            for &site in &g.sites {
+                out.push(FaultWindow {
+                    site,
+                    at: g.at,
+                    duration_secs: g.duration_secs,
+                    loss: 1.0,
+                    dup: 0.0,
+                    jitter_s: 0.0,
+                    partition: true,
+                });
+            }
+        }
+        out
+    }
+
     /// Build-time sanity: every window must target an existing site
-    /// with finite times and sub-total loss (partitions excepted).
-    /// Front-end targeting can only be checked once the front end is
-    /// placed — `ControlWorld::begin_workload` does that part.
-    pub fn validate(&self, n_sites: usize) -> anyhow::Result<()> {
+    /// with finite times and sub-total loss (partitions excepted), and
+    /// every region group must list at least one distinct in-range
+    /// site. Front-end targeting can only be checked once the front
+    /// end is placed — `ControlWorld::begin_workload` does that part.
+    /// Errors name the offending site through the provided interner
+    /// (ids in site-vector order; unknown ids render as `site#N`).
+    pub fn validate_named(&self, n_sites: usize, names: &SiteNames)
+        -> anyhow::Result<()> {
+        let site_name = |s: usize| names.name(crate::ids::SiteId(s as u32));
+        let roster = || -> String {
+            (0..n_sites)
+                .map(&site_name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
         for (i, w) in self.windows.iter().enumerate() {
             if w.site >= n_sites {
                 anyhow::bail!(
                     "fault window {i} targets site {} but the world has \
-                     only {n_sites} sites", w.site);
+                     only {n_sites} sites ({})", w.site, roster());
             }
+            let name = site_name(w.site);
             if !w.at.0.is_finite() || w.at.0 < 0.0 {
-                anyhow::bail!("fault window {i}: start {} must be a \
-                               finite non-negative offset", w.at.0);
+                anyhow::bail!(
+                    "fault window {i} on site {} ({name}): start {} must \
+                     be a finite non-negative offset", w.site, w.at.0);
             }
             if !w.duration_secs.is_finite() || w.duration_secs <= 0.0 {
-                anyhow::bail!("fault window {i}: duration {} must be \
-                               finite and positive", w.duration_secs);
+                anyhow::bail!(
+                    "fault window {i} on site {} ({name}): duration {} \
+                     must be finite and positive", w.site, w.duration_secs);
             }
             if !(0.0..=1.0).contains(&w.loss)
                 || (!w.partition && w.loss >= 1.0)
             {
                 anyhow::bail!(
-                    "fault window {i}: loss {} must be in [0, 1) — use \
-                     a partition window for total loss", w.loss);
+                    "fault window {i} on site {} ({name}): loss {} must \
+                     be in [0, 1) — use a partition window for total \
+                     loss", w.site, w.loss);
             }
             if !(0.0..1.0).contains(&w.dup) {
-                anyhow::bail!("fault window {i}: dup {} must be in \
-                               [0, 1)", w.dup);
+                anyhow::bail!(
+                    "fault window {i} on site {} ({name}): dup {} must \
+                     be in [0, 1)", w.site, w.dup);
             }
             if !w.jitter_s.is_finite() || w.jitter_s < 0.0 {
-                anyhow::bail!("fault window {i}: jitter {} must be \
-                               finite and non-negative", w.jitter_s);
+                anyhow::bail!(
+                    "fault window {i} on site {} ({name}): jitter {} \
+                     must be finite and non-negative", w.site, w.jitter_s);
+            }
+        }
+        for (i, g) in self.regions.iter().enumerate() {
+            if g.sites.is_empty() {
+                anyhow::bail!(
+                    "regional outage {i} lists no member sites");
+            }
+            for (j, &s) in g.sites.iter().enumerate() {
+                if s >= n_sites {
+                    anyhow::bail!(
+                        "regional outage {i} targets site {s} but the \
+                         world has only {n_sites} sites ({})", roster());
+                }
+                if g.sites[..j].contains(&s) {
+                    anyhow::bail!(
+                        "regional outage {i} lists site {s} ({}) twice",
+                        site_name(s));
+                }
+            }
+            if !g.at.0.is_finite() || g.at.0 < 0.0 {
+                anyhow::bail!(
+                    "regional outage {i}: start {} must be a finite \
+                     non-negative offset", g.at.0);
+            }
+            if !g.duration_secs.is_finite() || g.duration_secs <= 0.0 {
+                anyhow::bail!(
+                    "regional outage {i}: duration {} must be finite \
+                     and positive", g.duration_secs);
             }
         }
         Ok(())
+    }
+
+    /// [`validate_named`](Self::validate_named) with no interner: site
+    /// names render as the `site#N` placeholder.
+    pub fn validate(&self, n_sites: usize) -> anyhow::Result<()> {
+        self.validate_named(n_sites, &SiteNames::new())
     }
 }
 
@@ -639,5 +750,81 @@ mod tests {
             .lossy(0, 0.0, 10.0, 0.25)
             .validate(n)
             .is_ok());
+    }
+
+    #[test]
+    fn validation_errors_name_the_site() {
+        let names = SiteNames::new();
+        names.intern("CESNET-MCC");
+        names.intern("AWS");
+        let err = WanFaultPlan::new(1)
+            .lossy(1, 0.0, 10.0, 1.0)
+            .validate_named(2, &names)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("AWS"), "{err}");
+        assert!(err.contains("loss"), "{err}");
+        // Out-of-range targets have no name to resolve; the roster of
+        // known sites is listed instead.
+        let err = WanFaultPlan::new(1)
+            .lossy(7, 0.0, 10.0, 0.5)
+            .validate_named(2, &names)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("site 7"), "{err}");
+        assert!(err.contains("CESNET-MCC, AWS"), "{err}");
+        // Without an interner the placeholder names appear.
+        let err = WanFaultPlan::new(1)
+            .jittery(0, -5.0, 10.0, 1.0)
+            .validate(2)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("site#0"), "{err}");
+    }
+
+    #[test]
+    fn regional_outages_validate_and_expand_per_site() {
+        let plan = WanFaultPlan::new(3)
+            .lossy(0, 0.0, 10.0, 0.2)
+            .regional_outage(&[1, 2], 100.0, 600.0);
+        assert!(!plan.is_empty());
+        assert!(plan.validate(3).is_ok());
+        // One ordinary partition window per member site, appended
+        // after the plan windows in listed order.
+        let exp = plan.expanded_windows();
+        assert_eq!(exp.len(), 3);
+        assert_eq!(exp[0], plan.windows[0]);
+        for (w, site) in exp[1..].iter().zip([1usize, 2]) {
+            assert_eq!(w.site, site);
+            assert_eq!(w.at, SimTime(100.0));
+            assert_eq!(w.duration_secs, 600.0);
+            assert!(w.partition);
+            assert_eq!(w.loss, 1.0);
+        }
+        // A regions-only plan still arms the chaos layer.
+        let only = WanFaultPlan::new(1).regional_outage(&[0], 0.0, 60.0);
+        assert!(!only.is_empty());
+        // Rejections: out-of-range member, duplicate member, empty
+        // group, bad times.
+        assert!(WanFaultPlan::new(1)
+            .regional_outage(&[0, 3], 0.0, 60.0)
+            .validate(3)
+            .is_err());
+        assert!(WanFaultPlan::new(1)
+            .regional_outage(&[1, 1], 0.0, 60.0)
+            .validate(3)
+            .is_err());
+        assert!(WanFaultPlan::new(1)
+            .regional_outage(&[], 0.0, 60.0)
+            .validate(3)
+            .is_err());
+        assert!(WanFaultPlan::new(1)
+            .regional_outage(&[1], -1.0, 60.0)
+            .validate(3)
+            .is_err());
+        assert!(WanFaultPlan::new(1)
+            .regional_outage(&[1], 0.0, 0.0)
+            .validate(3)
+            .is_err());
     }
 }

@@ -85,7 +85,29 @@
 //!   [`crate::broker::ScenarioEvent::WanPartition`] or a
 //!   [`FaultWindow`] with `partition`) drop everything both ways for
 //!   the window, take the site's vRouter down, and exclude the site
-//!   from broker placement until the heal.
+//!   from broker placement until the heal. Correlated *regional*
+//!   outages — a [`WanFaultPlan`] region group or a
+//!   [`crate::broker::ScenarioEvent::RegionalOutage`] — are one
+//!   backbone failure hitting several sites at once; they resolve
+//!   into ordinary per-site partition windows before the fault layer
+//!   sees them, so the `(site, seq)` fault streams (and with them
+//!   cross-engine byte-identity) are untouched by the correlation.
+//! * *Health-scored placement.* Each CLUES tick under chaos folds the
+//!   fault telemetry a site accumulated since the previous tick —
+//!   messages dropped, retransmissions, provisioning retries, open
+//!   quarantine — into an exponentially-decayed health score in
+//!   `[0, 1]` (see `cluster::control::ewma_health`), published to the
+//!   broker via [`crate::broker::SiteSignals::health`]. A fault-free
+//!   site holds exactly 1.0, so every policy that ignores health is
+//!   bit-identical to its pre-health behavior, and the
+//!   [`crate::broker::HealthAware`] policy is decision-identical to
+//!   `SlaRank` on fault-free runs (property-proven). Under faults,
+//!   `HealthAware` charges one SLA-priority step per 1/16th of lost
+//!   health (a ~6% deadband absorbs isolated blips), de-ranking a
+//!   degrading site *before* its circuit breaker opens; calm ticks
+//!   decay the score geometrically back toward 1.0. Per-site health
+//!   floors and first-de-rank times land in [`RunReport`] and the
+//!   determinism digest.
 //!
 //! All recovery work is accounted in [`RunReport`]
 //! (`messages_dropped`, `provision_retries`, `quarantine_windows`,
@@ -464,6 +486,21 @@ pub struct RunReport {
     pub lease_requeued_jobs: u32,
     /// Of those, jobs that went on to complete elsewhere.
     pub lease_recovered_jobs: u32,
+    /// Final health score per site (exactly 1.0 when chaos is off or
+    /// the site never degraded).
+    pub site_health: Vec<f64>,
+    /// Lowest health each site reached (trajectory floor).
+    pub site_health_min: Vec<f64>,
+    /// When each site's health first crossed the placement de-rank
+    /// threshold (seconds), if ever.
+    pub site_deranked_at: Vec<Option<f64>>,
+    /// When each site's circuit breaker first opened (seconds), if
+    /// ever. Adaptive placement is working when the de-rank time beats
+    /// this.
+    pub site_first_quarantine_at: Vec<Option<f64>>,
+    /// Correlated per-site partition windows installed (fault-plan
+    /// region groups + scenario regional outages, one per member).
+    pub regional_windows: u32,
 }
 
 /// Canonical bit-exact digest of everything a deterministic replay
@@ -490,6 +527,10 @@ pub struct RunDigest {
     pub quarantine_secs_bits: u64,
     pub lease_requeued_jobs: u32,
     pub lease_recovered_jobs: u32,
+    /// Per-site (final health, floor, first de-rank, first quarantine)
+    /// trajectories, bit-exact.
+    pub site_health: Vec<(u64, u64, Option<u64>, Option<u64>)>,
+    pub regional_windows: u32,
     pub policy: &'static str,
     /// (name, site, hours, cost, busy hours) per VM incarnation.
     pub per_vm: Vec<(String, String, u64, u64, u64)>,
@@ -521,6 +562,14 @@ impl RunReport {
             quarantine_secs_bits: self.quarantine_secs.to_bits(),
             lease_requeued_jobs: self.lease_requeued_jobs,
             lease_recovered_jobs: self.lease_recovered_jobs,
+            site_health: (0..self.site_health.len())
+                .map(|s| (self.site_health[s].to_bits(),
+                          self.site_health_min[s].to_bits(),
+                          self.site_deranked_at[s].map(f64::to_bits),
+                          self.site_first_quarantine_at[s]
+                              .map(f64::to_bits)))
+                .collect(),
+            regional_windows: self.regional_windows,
             policy: self.policy,
             per_vm: self
                 .per_vm
@@ -587,8 +636,14 @@ impl HybridCluster {
         cfg.scenario
             .validate(n)
             .context("invalid scenario plan")?;
+        // Fault-plan rejections name the offending site, so the
+        // interner is fed the roster before validation runs.
+        let site_names = crate::ids::SiteNames::new();
+        for spec in &cfg.sites {
+            site_names.intern(&spec.name);
+        }
         cfg.faults
-            .validate(n)
+            .validate_named(n, &site_names)
             .context("invalid WAN fault plan")?;
         cfg.retry.validate().context("invalid retry policy")?;
         for (i, spec) in cfg.sites.iter().enumerate() {
@@ -697,8 +752,10 @@ impl HybridCluster {
         // their event streams — and digests — bit for bit.
         let chaos_enabled = !cfg.faults.is_empty()
             || cfg.scenario.events.iter().any(|e| {
-                matches!(e,
-                         crate::broker::ScenarioEvent::WanPartition { .. })
+                matches!(
+                    e,
+                    crate::broker::ScenarioEvent::WanPartition { .. }
+                    | crate::broker::ScenarioEvent::RegionalOutage { .. })
             })
             || cfg.sites.iter().any(|s| s.failure.message_loss_prob > 0.0);
         let fault_seed = cfg.seed ^ cfg.faults.seed.rotate_left(17);
@@ -856,6 +913,11 @@ impl HybridCluster {
             quarantine_secs: control.quarantine_secs,
             lease_requeued_jobs: control.lease_requeued,
             lease_recovered_jobs: control.lease_recovered,
+            site_health: control.health.clone(),
+            site_health_min: control.health_min.clone(),
+            site_deranked_at: control.health_deranked_at.clone(),
+            site_first_quarantine_at: control.first_quarantine_at.clone(),
+            regional_windows: control.regional_windows,
         })
     }
 }

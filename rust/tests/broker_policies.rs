@@ -12,6 +12,15 @@
 //!    byte-identically across all three engines, and the self-healing
 //!    paths (retransmission, provisioning retries, quarantine) still
 //!    finish every job under sub-total faults.
+//! 4. Correlated regional outages (fault-plan region groups and
+//!    scenario `RegionalOutage` events) inherit both chaos promises:
+//!    randomized regional plans replay byte-identically across all
+//!    three engines and never lose a job.
+//! 5. The `HealthAware` policy is **decision-identical** to `SlaRank`
+//!    whenever every site's health is 1.0 — i.e. on any fault-free
+//!    run — proven the same way `SlaRank` was proven against the
+//!    legacy `select_site`, and again over whole fault-free cluster
+//!    runs.
 
 use evhc::broker::{ElasticityBroker, PolicyKind, ScenarioPlan};
 use evhc::cloudsim::{CloudSite, FailureModel, Granularity, InstanceType,
@@ -198,6 +207,71 @@ fn sla_rank_equivalence_holds_as_occupancy_evolves() {
             used[i] += 1;
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Property: HealthAware ≡ SlaRank when every site is fully healthy
+// ---------------------------------------------------------------------
+
+#[test]
+fn health_aware_is_decision_identical_to_sla_rank_when_fault_free() {
+    // A fresh broker starts every site at health 1.0, where the
+    // health penalties vanish exactly — so on the same randomized
+    // worlds that proved SlaRank against the legacy selector, the two
+    // policies must agree decision for decision, including as
+    // occupancy evolves.
+    check("health-aware ≡ sla-rank (fault-free)", gen_case, |case| {
+        let mut sites_a = build_sites(case);
+        let mut sites_b = build_sites(case);
+        let mut sla = ElasticityBroker::new(
+            PolicyKind::SlaRank, &sites_a, &case.slas, 2, 4.0);
+        let mut hw = ElasticityBroker::new(
+            PolicyKind::HealthAware, &sites_b, &case.slas, 2, 4.0);
+        let mut used = case.used_per_site.clone();
+        for step in 0..10 {
+            let t = SimTime(step as f64);
+            let a = sla.select(&sites_a, &used, case.cpus, 0, t);
+            let b = hw.select(&sites_b, &used, case.cpus, 0, t);
+            if a != b {
+                return Err(format!(
+                    "step {step}: sla={a:?} health-aware={b:?}"));
+            }
+            let Some(i) = a else { break };
+            for sites in [&mut sites_a, &mut sites_b] {
+                let _ = sites[i].request_vm(&VmRequest {
+                    name: format!("wn-{step}"),
+                    instance_type: "m".into(),
+                    network: None,
+                    public_ip: false,
+                }, t);
+            }
+            used[i] += 1;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn health_aware_matches_sla_rank_over_a_fault_free_cluster_run() {
+    // Whole-run equivalence: with no fault source configured the
+    // health score never leaves 1.0, so a HealthAware run is the
+    // SlaRank run — byte for byte, policy label aside.
+    let run = |policy: PolicyKind| {
+        let mut cfg = RunConfig::paper_usecase(0.05, 5);
+        cfg.inference_every = 0;
+        cfg.policy = policy;
+        HybridCluster::new(cfg).unwrap().run().unwrap()
+    };
+    let a = run(PolicyKind::SlaRank);
+    let b = run(PolicyKind::HealthAware);
+    assert!(a.site_health.iter().all(|&h| h == 1.0));
+    let mut da = a.determinism_digest();
+    let mut db = b.determinism_digest();
+    assert_eq!(da.policy, "sla-rank");
+    assert_eq!(db.policy, "health-aware");
+    da.policy = "";
+    db.policy = "";
+    assert_eq!(da, db);
 }
 
 // ---------------------------------------------------------------------
@@ -473,6 +547,114 @@ fn chaos_plans_replay_byte_identically_on_all_engines() {
             if r.determinism_digest() != ref_digest {
                 return Err(format!("{} diverged under chaos",
                                    engine.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Plain-data description of one randomized correlated-outage run.
+/// Members never include site 0 — the paper configurations place the
+/// front end there, and FE-targeting plans are rejected (tested
+/// separately).
+#[derive(Debug, Clone)]
+struct RegionalCase {
+    scale: f64,
+    seed: u64,
+    fault_seed: u64,
+    n_sites: usize,
+    /// true = scenario `RegionalOutage`, false = fault-plan region
+    /// group — the two spellings of the same correlated failure.
+    via_scenario: bool,
+    /// Deduplicated non-FE member sites (≥ 1).
+    members: Vec<usize>,
+    at: f64,
+    duration: f64,
+    /// Also run a loss window on site 1, so the regional window has to
+    /// compose with ordinary per-site faults.
+    extra_loss: bool,
+}
+
+fn regional_case(r: &mut Prng) -> RegionalCase {
+    let n_sites = 3 + r.next_below(2) as usize; // 3..=4
+    let mut members: Vec<usize> = (1..n_sites)
+        .filter(|_| r.chance(0.7))
+        .collect();
+    if members.is_empty() {
+        members.push(1 + r.next_below(n_sites as u64 - 1) as usize);
+    }
+    RegionalCase {
+        scale: r.uniform(0.02, 0.05),
+        seed: r.next_u64(),
+        fault_seed: r.next_u64(),
+        n_sites,
+        via_scenario: r.chance(0.5),
+        members,
+        at: r.uniform(300.0, 1500.0),
+        duration: r.uniform(300.0, 1200.0),
+        extra_loss: r.chance(0.5),
+    }
+}
+
+fn regional_cfg(case: &RegionalCase, engine: Engine) -> RunConfig {
+    let mut cfg = RunConfig::paper_usecase_sites(case.scale, case.seed,
+                                                 case.n_sites);
+    cfg.inference_every = 0;
+    cfg.engine = engine;
+    let mut plan = WanFaultPlan::new(case.fault_seed);
+    if case.extra_loss {
+        plan = plan.lossy(1, 0.0, 1000.0, 0.1);
+    }
+    if case.via_scenario {
+        cfg.scenario = ScenarioPlan::new()
+            .regional_outage(&case.members, case.at, case.duration);
+    } else {
+        plan = plan.regional_outage(&case.members, case.at,
+                                    case.duration);
+    }
+    cfg.faults = plan;
+    cfg
+}
+
+/// The correlated-outage acceptance property: a randomized regional
+/// outage — one backbone failure partitioning several sites at once,
+/// spelled either as a fault-plan region group or as a scenario
+/// `RegionalOutage` — resolves into the same per-site `(site, seq)`
+/// fault streams on every engine, so the replay stays byte-identical,
+/// the per-member window accounting agrees with the plan, and every
+/// job still completes.
+#[test]
+fn regional_outage_plans_replay_byte_identically_on_all_engines() {
+    check_n("regional outage (serial ≡ sharded ≡ stealing)", cases(4),
+            regional_case, |case| {
+        let run = |engine: Engine| -> Result<RunReport, String> {
+            HybridCluster::new(regional_cfg(case, engine))
+                .map_err(|e| e.to_string())?
+                .run()
+                .map_err(|e| e.to_string())
+        };
+        let reference = run(Engine::Serial)?;
+        let total = regional_cfg(case, Engine::Serial)
+            .workload
+            .total_jobs();
+        if reference.jobs_completed != total {
+            return Err(format!(
+                "serial completed {}/{total} under a regional outage",
+                reference.jobs_completed));
+        }
+        if reference.regional_windows as usize != case.members.len() {
+            return Err(format!(
+                "{} regional windows installed for {} members",
+                reference.regional_windows, case.members.len()));
+        }
+        let ref_digest = reference.determinism_digest();
+        for engine in [Engine::Sharded { threads: 0 },
+                       Engine::Stealing { threads: 0 }] {
+            let r = run(engine)?;
+            if r.determinism_digest() != ref_digest {
+                return Err(format!(
+                    "{} diverged under a regional outage",
+                    engine.label()));
             }
         }
         Ok(())
