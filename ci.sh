@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Staged CI pipeline.
 #
-#   ./ci.sh                 # full pipeline: fmt lint build test chaos chaos-sweep bench compare
+#   ./ci.sh                 # full pipeline: fmt lint build test chaos chaos-sweep obs bench compare
 #   ./ci.sh <stage> [...]   # run the named stage(s) in the given order
 #
 # Stages:
@@ -20,6 +20,10 @@
 #                  chaos_sweep section with its in-bench asserts, no
 #                  BENCH_scale.json write), bounded by
 #                  EVHC_SWEEP_POINTS (default 2 grid points here)
+#   obs            observability suite: the trace/metrics byte-identity
+#                  and digest-neutrality properties plus the in-crate
+#                  observability unit test, bounded by
+#                  EVHC_PROPTEST_CASES
 #   bench          scale bench in quick mode -> BENCH_scale.json; the
 #                  recovery-overhead frontier (chaos sweep) section is
 #                  bounded by EVHC_SWEEP_POINTS (default 4 grid points
@@ -93,6 +97,19 @@ stage_chaos_sweep() {
         cargo bench --bench scale
 }
 
+stage_obs() {
+    # The observability contract: trace/metrics streams byte-identical
+    # across engines, digests untouched by recording. The properties
+    # also run in tier 1; this bounded re-drive makes the contract its
+    # own iterable stage.
+    echo "== obs: trace/metrics determinism suite (quick mode) =="
+    EVHC_PROPTEST_CASES=${EVHC_PROPTEST_CASES:-2} \
+        cargo test -q --test broker_policies trace_
+    EVHC_PROPTEST_CASES=${EVHC_PROPTEST_CASES:-2} \
+        cargo test -q --release \
+            observability_is_digest_neutral_and_engine_identical
+}
+
 stage_bench() {
     echo "== bench: scale bench (quick mode) =="
     EVHC_SCALE_BENCH_QUICK=1 EVHC_SWEEP_POINTS="${EVHC_SWEEP_POINTS:-4}" \
@@ -156,20 +173,21 @@ run_stage() {
         test)          stage_test ;;
         chaos)         stage_chaos ;;
         chaos-sweep)   stage_chaos_sweep ;;
+        obs)           stage_obs ;;
         bench)         stage_bench ;;
         compare)       stage_compare ;;
         seed-baseline) stage_seed_baseline ;;
         *)
             echo "unknown stage: $1" >&2
-            echo "stages: fmt lint build test chaos chaos-sweep bench" \
-                 "compare seed-baseline" >&2
+            echo "stages: fmt lint build test chaos chaos-sweep obs" \
+                 "bench compare seed-baseline" >&2
             return 2
             ;;
     esac
 }
 
 if [ "$#" -eq 0 ]; then
-    set -- fmt lint build test chaos chaos-sweep bench compare
+    set -- fmt lint build test chaos chaos-sweep obs bench compare
 fi
 for stage in "$@"; do
     run_stage "$stage"

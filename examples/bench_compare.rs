@@ -1,15 +1,22 @@
 //! Compare a fresh `BENCH_scale.json` against the committed
 //! `BENCH_baseline.json`, printing an events/sec and ms/tick table per
 //! scenario/stealing/cluster section plus the broker cost/makespan
-//! diff and the WAN-chaos recovery-overhead diff (both the fixed
-//! `chaos` variants and the `chaos_sweep` retry-knob frontier).
+//! diff, the WAN-chaos recovery-overhead diff (both the fixed
+//! `chaos` variants and the `chaos_sweep` retry-knob frontier) and the
+//! `perf_profile` engine-profiler / tracing-overhead diff.
 //!
 //! Regression policy:
 //! * events/sec drops beyond 10% are warned about; beyond 15% they are
 //!   *gating* — with `EVHC_BENCH_GATE=1` (set by `ci.sh`) the process
 //!   exits non-zero. Cost/makespan (broker), recovery overhead and
-//!   completed-jobs/sec (chaos) and recorder-bytes (stealing) drifts
-//!   stay warn-only in every mode.
+//!   completed-jobs/sec (chaos), recorder-bytes (stealing) and the
+//!   engine-profiler breakdown (perf_profile) drifts stay warn-only
+//!   in every mode — the profiler numbers are pure wall-clock.
+//! * the one absolute gate: the fresh run's tracing throughput ratio
+//!   (events/sec with tracing on over tracing off, measured within a
+//!   single bench run so machine noise cancels) must stay >= 0.9 —
+//!   an observability layer costing more than 10% has broken its own
+//!   contract.
 //! * without `EVHC_BENCH_GATE=1` everything is warn-only (exit 0).
 //!
 //!     cargo run --release --example bench_compare -- \
@@ -21,6 +28,9 @@ use evhc::api::json::{parse, Json};
 const WARN_PCT: f64 = 10.0;
 /// events/sec regression beyond this fails the gate.
 const GATE_PCT: f64 = 15.0;
+/// The fresh run's tracing-on/tracing-off events/sec ratio below this
+/// fails the gate: tracing may cost at most 10% of throughput.
+const TRACE_RATIO_GATE: f64 = 0.9;
 
 /// Sections of a `scenarios` row that carry Measured-shaped objects.
 const SECTIONS: &[(&str, &[&str])] = &[
@@ -272,6 +282,105 @@ fn compare_chaos(baseline: &Json, fresh: &Json, key: &str) -> u32 {
     regressions
 }
 
+/// Diff the `perf_profile` section: the per-engine profiler breakdown
+/// and the serial tracing-overhead probe. Profile numbers are pure
+/// wall-clock and therefore warn-only; the tracing throughput ratio is
+/// the one absolute check — it compares the fresh run against itself
+/// (tracing on vs off within one bench invocation), so machine noise
+/// largely cancels and a ratio below [`TRACE_RATIO_GATE`] gates.
+fn compare_perf_profile(baseline: &Json, fresh: &Json) -> Tally {
+    let mut tally = Tally::default();
+    let Some(fresh_pp) = fresh.get("perf_profile") else {
+        return tally; // fresh bench predates the profiler section
+    };
+    println!("\n[perf_profile]");
+    let base_pp = baseline.get("perf_profile");
+    // Quick and full bench runs profile different scales; only diff
+    // against the baseline when both measured the same workload.
+    let comparable = match (
+        base_pp.and_then(|b| b.get("name")).and_then(|n| n.as_str()),
+        fresh_pp.get("name").and_then(|n| n.as_str()),
+    ) {
+        (Some(b), Some(f)) if b == f => true,
+        (Some(b), Some(f)) => {
+            println!("(scale changed {b} -> {f}; baseline diff skipped)");
+            false
+        }
+        (None, _) => {
+            println!("(baseline predates perf_profile; fresh-only \
+                      checks)");
+            false
+        }
+        _ => false,
+    };
+
+    for engine in ["sharded", "stealing"] {
+        let Some(fresh_eng) = fresh_pp.get(engine) else {
+            continue;
+        };
+        let ev = metric(fresh_eng, &["measured"], "events_per_sec");
+        let bf = metric(fresh_eng, &["profile"], "barrier_fraction");
+        let pe = metric(fresh_eng, &["profile"], "parallel_efficiency");
+        if let (Some(ev), Some(bf), Some(pe)) = (ev, bf, pe) {
+            println!("{engine:<14} {ev:>10.0} ev/s  \
+                      barrier={:.1}%  par-eff={pe:.2}", bf * 100.0);
+        }
+        if !comparable {
+            continue;
+        }
+        let base_eng = base_pp.and_then(|b| b.get(engine));
+        for (label, path, name) in [
+            ("events_per_sec", &["measured"][..], "events_per_sec"),
+            ("parallel_efficiency", &["profile"][..],
+             "parallel_efficiency"),
+        ] {
+            let (Some(b), Some(f)) = (
+                base_eng.and_then(|r| metric(r, path, name)),
+                metric(fresh_eng, path, name),
+            ) else {
+                continue;
+            };
+            let delta = if b > 0.0 { (f - b) / b * 100.0 } else { 0.0 };
+            let mark = if delta < -WARN_PCT {
+                tally.warned += 1;
+                "  <-- REGRESSION (warn-only)"
+            } else {
+                ""
+            };
+            println!("{engine:<14} {label:<22} {b:>12.2} {f:>12.2} \
+                      {delta:>+7.1}%{mark}");
+        }
+    }
+
+    // The tracing-overhead gate, always evaluated on the fresh run
+    // alone: ratio_on_vs_off is (events/sec traced) / (untraced).
+    if let Some(ratio) = fresh_pp
+        .get("tracing")
+        .and_then(|t| t.get("ratio_on_vs_off"))
+        .and_then(|v| v.as_f64())
+    {
+        let mark = if ratio < TRACE_RATIO_GATE {
+            tally.warned += 1;
+            tally.gated += 1;
+            "  <-- TRACING OVERHEAD (gate)"
+        } else {
+            ""
+        };
+        println!("tracing        on/off ratio {ratio:>12.3} (gate at \
+                  {TRACE_RATIO_GATE:.2}){mark}");
+        if comparable {
+            if let Some(b) = base_pp
+                .and_then(|b| b.get("tracing"))
+                .and_then(|t| t.get("ratio_on_vs_off"))
+                .and_then(|v| v.as_f64())
+            {
+                println!("tracing        baseline ratio {b:>10.3}");
+            }
+        }
+    }
+    tally
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     if args.len() != 3 {
@@ -308,13 +417,15 @@ fn main() {
     let broker_regressions = compare_broker(&baseline, &fresh);
     let chaos_regressions = compare_chaos(&baseline, &fresh, "chaos")
         + compare_chaos(&baseline, &fresh, "chaos_sweep");
+    let profile = compare_perf_profile(&baseline, &fresh);
 
-    let warned = scen.warned + steal.warned + cluster.warned;
-    let gated = scen.gated + steal.gated + cluster.gated;
+    let warned =
+        scen.warned + steal.warned + cluster.warned + profile.warned;
+    let gated = scen.gated + steal.gated + cluster.gated + profile.gated;
     if warned > 0 || broker_regressions > 0 || chaos_regressions > 0 {
         println!("\nWARNING: {warned} section(s) regressed by more than \
-                  {WARN_PCT}% events/sec ({gated} beyond the {GATE_PCT}% \
-                  gate), {broker_regressions} broker row(s) by more \
+                  {WARN_PCT}% events/sec ({gated} gating), \
+                  {broker_regressions} broker row(s) by more \
                   than {WARN_PCT}% cost/makespan and \
                   {chaos_regressions} chaos row(s) by more than \
                   {WARN_PCT}% recovery overhead (both warn-only).");
@@ -322,11 +433,13 @@ fn main() {
         println!("\nno regressions beyond {WARN_PCT}%.");
     }
     if gate_on && gated > 0 {
-        eprintln!("FAIL: {gated} section(s) regressed beyond {GATE_PCT}% \
-                   events/sec with EVHC_BENCH_GATE=1.");
+        eprintln!("FAIL: {gated} section(s) regressed beyond the gate \
+                   ({GATE_PCT}% events/sec, or tracing overhead past \
+                   {TRACE_RATIO_GATE:.2}) with EVHC_BENCH_GATE=1.");
         std::process::exit(1);
     }
     if gate_on {
-        println!("gate: no events/sec regression beyond {GATE_PCT}%.");
+        println!("gate: no events/sec regression beyond {GATE_PCT}% and \
+                  tracing overhead within budget.");
     }
 }

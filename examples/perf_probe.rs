@@ -1,27 +1,61 @@
-//! Perf probe: wall-clock of the full-scale DES replay and the figure
-//! exporters — the measurements behind EXPERIMENTS.md §Perf (L3).
+//! Perf probe: wall-clock of the full-scale DES replay on every engine,
+//! broken down by the engine profiler — where does a parallel replay
+//! actually spend its time (shard windows vs the control barrier vs
+//! injector waiting)? The measurements behind EXPERIMENTS.md §Perf.
 //!
 //!     cargo run --release --example perf_probe
 
-use evhc::cluster::{HybridCluster, RunConfig};
+use evhc::cluster::{Engine, HybridCluster, RunConfig};
 
 fn main() {
-    let mut cfg = RunConfig::paper_usecase(1.0, 42);
-    cfg.inference_every = 0;
-    let t0 = std::time::Instant::now();
-    let report = HybridCluster::new(cfg).unwrap().run().unwrap();
-    let run_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let t1 = std::time::Instant::now();
-    let f10 = report.recorder.fig10_usage(120.0, report.makespan);
-    let fig10_ms = t1.elapsed().as_secs_f64() * 1e3;
-    let t2 = std::time::Instant::now();
-    let f11 = report.recorder.fig11_states(120.0, report.makespan);
-    let fig11_ms = t2.elapsed().as_secs_f64() * 1e3;
-    println!(
-        "run={run_ms:.1}ms ({:.0}x real time) fig10={fig10_ms:.1}ms \
-         ({} rows) fig11={fig11_ms:.1}ms ({} rows)",
-        report.makespan.0 / (run_ms / 1e3),
-        f10.len(),
-        f11.len()
-    );
+    for engine in Engine::ALL {
+        let mut cfg = RunConfig::paper_usecase(1.0, 42);
+        cfg.inference_every = 0;
+        cfg.engine = engine;
+        let t0 = std::time::Instant::now();
+        let report = HybridCluster::new(cfg).unwrap().run().unwrap();
+        let run_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = std::time::Instant::now();
+        let f10 = report.recorder.fig10_usage(120.0, report.makespan);
+        let fig10_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let t2 = std::time::Instant::now();
+        let f11 = report.recorder.fig11_states(120.0, report.makespan);
+        let fig11_ms = t2.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "{:<16} run={run_ms:.1}ms ({:.0}x real time) \
+             fig10={fig10_ms:.1}ms ({} rows) fig11={fig11_ms:.1}ms \
+             ({} rows)",
+            engine.label(),
+            report.makespan.0 / (run_ms / 1e3),
+            f10.len(),
+            f11.len()
+        );
+        match report.profile {
+            None => {
+                assert!(matches!(engine, Engine::Serial),
+                        "parallel engines must carry a profile");
+            }
+            Some(p) => {
+                assert!(!matches!(engine, Engine::Serial),
+                        "serial runs must not carry a profile");
+                assert!(p.windows > 0, "profiled run saw no windows");
+                println!(
+                    "                 windows={} serial_steps={} \
+                     window={:.1}ms busiest-shard={:.1}ms \
+                     barrier={:.1}ms ({:.0}% of run) \
+                     injector-wait={:.1}ms chains={} \
+                     parallel-efficiency={:.2}",
+                    p.windows,
+                    p.serial_steps,
+                    p.window_wall_s * 1e3,
+                    p.busiest_shard_wall_s * 1e3,
+                    p.barrier_wall_s * 1e3,
+                    p.barrier_fraction() * 100.0,
+                    p.injector_wait_s * 1e3,
+                    p.chains_executed,
+                    p.parallel_efficiency()
+                );
+            }
+        }
+    }
 }

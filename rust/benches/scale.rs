@@ -36,7 +36,12 @@
 //!   knobs (backoff base, failover threshold, breaker threshold) ×
 //!   WAN loss severity, bounded by `EVHC_SWEEP_POINTS`, plus the
 //!   adaptive-placement headline — health-aware placement must beat
-//!   static SLA ranking under sustained loss (asserted in-bench).
+//!   static SLA ranking under sustained loss (asserted in-bench),
+//! * `perf_profile` — the engine profiler on the paper use case: how
+//!   the parallel engines split wall time between shard windows, the
+//!   control barrier and injector waiting, plus the tracing-overhead
+//!   ratio (events/sec with observability on vs off) with in-bench
+//!   digest-neutrality and trace-validity asserts.
 //!
 //! Results are written to `BENCH_scale.json` at the repo root so future
 //! PRs accumulate a perf trajectory (`ci.sh` diffs it against the
@@ -58,6 +63,7 @@ use evhc::orchestrator::Sla;
 use evhc::lrms::core::{BatchCore, Placement};
 use evhc::lrms::JobId;
 use evhc::metrics::{DisplayState, Recorder, ShardSink, SpillFiles};
+use evhc::obs::{EngineProfile, ObsConfig};
 use evhc::sim::shard::{default_threads, run_sharded, run_sharded_serial,
                        run_sharded_stealing, ControlPlane, SiteCtx,
                        SiteShard, StealConfig};
@@ -1163,6 +1169,137 @@ fn cluster_section(quick: bool) -> Json {
     Json::Array(rows)
 }
 
+// ---------------------------------------------------------------------
+// Engine profiler + tracing overhead (the paper use case)
+// ---------------------------------------------------------------------
+
+fn profile_json(p: &EngineProfile) -> Json {
+    Json::Object(vec![
+        ("windows".into(), Json::Num(p.windows as f64)),
+        ("serial_steps".into(), Json::Num(p.serial_steps as f64)),
+        ("barrier_events".into(), Json::Num(p.barrier_events as f64)),
+        ("barrier_wall_s".into(), Json::Num(p.barrier_wall_s)),
+        ("window_wall_s".into(), Json::Num(p.window_wall_s)),
+        ("busiest_shard_wall_s".into(),
+         Json::Num(p.busiest_shard_wall_s)),
+        ("worker_wall_s".into(), Json::Num(p.worker_wall_s)),
+        ("chains_executed".into(), Json::Num(p.chains_executed as f64)),
+        ("injector_wait_s".into(), Json::Num(p.injector_wait_s)),
+        ("workers".into(), Json::Num(p.workers as f64)),
+        ("barrier_fraction".into(), Json::Num(p.barrier_fraction())),
+        ("parallel_efficiency".into(),
+         Json::Num(p.parallel_efficiency())),
+    ])
+}
+
+/// One paper-use-case run with an optional observability payload.
+fn profiled_run(sc: &ClusterScale, engine: Engine, obs: bool)
+    -> (RunReport, Measured) {
+    let mut cfg = cluster_cfg(sc, engine, None);
+    if obs {
+        cfg.obs = ObsConfig::enabled();
+    }
+    let wall = Instant::now();
+    let report = HybridCluster::new(cfg)
+        .expect("profile world")
+        .run()
+        .expect("profile run");
+    let wall_s = wall.elapsed().as_secs_f64();
+    assert_eq!(report.jobs_completed, sc.jobs(),
+               "profiled run must drain the workload ({})", sc.name);
+    let m = Measured {
+        events: report.events,
+        wall_s,
+        events_per_sec: report.events as f64 / wall_s.max(1e-9),
+        ms_per_tick: 0.0,
+        completed: report.jobs_completed,
+    };
+    (report, m)
+}
+
+/// The engine-profiler section: wall-time attribution for the parallel
+/// engines (shard windows vs the control barrier vs injector waiting)
+/// and the tracing-overhead ratio on the serial engine — with the
+/// observability contract asserted in-bench (digest unchanged, Chrome
+/// trace JSON parses, streams non-empty).
+fn perf_profile_section(quick: bool) -> Json {
+    let sc = if quick {
+        ClusterScale { name: "paper-200n-4s", nodes: 200, sites: 4,
+                       jobs_per_node: 8 }
+    } else {
+        ClusterScale { name: "paper-1k-4s", nodes: 1000, sites: 4,
+                       jobs_per_node: 12 }
+    };
+    println!("\n--- {} ({} nodes, {} sites, {} jobs) ---",
+             sc.name, sc.nodes, sc.sites, sc.jobs());
+
+    let mut fields = vec![
+        ("name".into(), Json::Str(sc.name.into())),
+        ("nodes".into(), Json::Num(sc.nodes as f64)),
+        ("sites".into(), Json::Num(sc.sites as f64)),
+        ("jobs".into(), Json::Num(sc.jobs() as f64)),
+    ];
+
+    for engine in [Engine::Sharded { threads: 0 },
+                   Engine::Stealing { threads: 0 }] {
+        let (r, m) = profiled_run(&sc, engine, false);
+        let p = r.profile
+            .expect("parallel engines must carry a profile");
+        assert!(p.windows > 0, "{} profile saw no windows",
+                engine.label());
+        println!(
+            "  {:<14} {:>9.0} ev/s  windows={} window={:.0}ms \
+             busiest-shard={:.0}ms barrier={:.0}ms ({:.0}%) \
+             injector-wait={:.0}ms chains={} par-eff={:.2}",
+            engine.label(),
+            m.events_per_sec,
+            p.windows,
+            p.window_wall_s * 1e3,
+            p.busiest_shard_wall_s * 1e3,
+            p.barrier_wall_s * 1e3,
+            p.barrier_fraction() * 100.0,
+            p.injector_wait_s * 1e3,
+            p.chains_executed,
+            p.parallel_efficiency()
+        );
+        fields.push((engine.label().into(), Json::Object(vec![
+            ("measured".into(), measured_json(&m)),
+            ("profile".into(), profile_json(&p)),
+        ])));
+    }
+
+    // Tracing overhead on the serial engine: the observability
+    // contract, asserted where the overhead is measured.
+    let (r_off, m_off) = profiled_run(&sc, Engine::Serial, false);
+    let (r_on, m_on) = profiled_run(&sc, Engine::Serial, true);
+    assert_eq!(r_on.determinism_digest(), r_off.determinism_digest(),
+               "tracing must be digest-neutral");
+    assert!(r_off.trace.is_none() && r_off.profile.is_none(),
+            "an untraced serial run must carry no obs payload");
+    let trace = r_on.trace.as_ref().expect("traced run carries a trace");
+    let metrics = r_on.metrics.as_ref().expect("traced run has metrics");
+    assert!(!trace.is_empty() && !metrics.is_empty(),
+            "observability streams must not be empty");
+    evhc::api::json::parse(&trace.to_chrome_json())
+        .expect("chrome trace JSON must parse");
+    let ratio = m_on.events_per_sec / m_off.events_per_sec.max(1e-9);
+    println!(
+        "  tracing        {:>9.0} -> {:.0} ev/s (x{ratio:.2}) — {} \
+         trace events, {} metric samples",
+        m_off.events_per_sec, m_on.events_per_sec, trace.len(),
+        metrics.len()
+    );
+    fields.push(("tracing".into(), Json::Object(vec![
+        ("events_per_sec_off".into(), Json::Num(m_off.events_per_sec)),
+        ("events_per_sec_on".into(), Json::Num(m_on.events_per_sec)),
+        ("ratio_on_vs_off".into(), Json::Num(ratio)),
+        ("trace_events".into(), Json::Num(trace.len() as f64)),
+        ("metric_samples".into(), Json::Num(metrics.len() as f64)),
+    ])));
+
+    Json::Object(fields)
+}
+
 fn main() {
     let quick = std::env::var("EVHC_SCALE_BENCH_QUICK").is_ok();
 
@@ -1330,6 +1467,11 @@ fn main() {
     section("SCALE: recovery-overhead frontier (chaos sweep)");
     let chaos_sweep_rows = chaos_sweep_section(quick);
 
+    // Engine profiler + tracing overhead, with the observability
+    // contract asserted in-bench.
+    section("SCALE: engine profiler x tracing overhead");
+    let perf_profile_rows = perf_profile_section(quick);
+
     let doc = Json::Object(vec![
         ("bench".into(), Json::Str("scale".into())),
         ("quick".into(), Json::Bool(quick)),
@@ -1339,6 +1481,7 @@ fn main() {
         ("broker".into(), broker_rows),
         ("chaos".into(), chaos_rows),
         ("chaos_sweep".into(), chaos_sweep_rows),
+        ("perf_profile".into(), perf_profile_rows),
     ]);
     std::fs::write("BENCH_scale.json", doc.render() + "\n")
         .expect("write BENCH_scale.json");

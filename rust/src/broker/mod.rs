@@ -379,6 +379,41 @@ impl ElasticityBroker {
         best.map(|(_, i)| i)
     }
 
+    /// Score every eligible site under the configured policy, best
+    /// first — the ranked candidate list a broker-decision trace event
+    /// is annotated with. Read-only (the decision log is untouched) and
+    /// re-scores independently of [`select`](Self::select), so calling
+    /// it — the tracing layer only does so when enabled — cannot
+    /// perturb any placement. Sorting uses the same lexicographic
+    /// order as [`Score::better_than`], so index 0 is exactly what
+    /// `select` with the same inputs would pick.
+    pub fn ranked_candidates<S: AsRef<CloudSite>>(
+        &self, sites: &[S], used_per_site: &[u32], cpus: u32,
+        queue_depth: u32, excluded: Option<&[bool]>)
+        -> Vec<(usize, Score)> {
+        let mut ranked: Vec<(usize, Score)> = Vec::new();
+        for i in 0..sites.len() {
+            if excluded
+                .map(|e| e.get(i).copied().unwrap_or(false))
+                .unwrap_or(false)
+            {
+                continue;
+            }
+            let sig = self.signals(i, sites, used_per_site, queue_depth);
+            if !self.eligible(i, sites[i].as_ref(), cpus, &sig) {
+                continue;
+            }
+            ranked.push((i, self.policy.score(i, &self.table, &sig)));
+        }
+        ranked.sort_by(|a, b| {
+            a.1.primary
+                .total_cmp(&b.1.primary)
+                .then(a.1.secondary.total_cmp(&b.1.secondary))
+                .then(a.1.tiebreak.cmp(&b.1.tiebreak))
+        });
+        ranked
+    }
+
     /// Pick the site for one new worker under the configured policy.
     pub fn select<S: AsRef<CloudSite>>(&mut self, sites: &[S],
                                        used_per_site: &[u32], cpus: u32,

@@ -13,8 +13,9 @@
 //! emitted with the configured WAN latency, never as direct mutation.
 
 use std::collections::{HashMap, HashSet};
+use std::fmt::Write as _;
 
-use crate::broker::{ElasticityBroker, ScenarioEvent};
+use crate::broker::{ElasticityBroker, ScenarioEvent, Score};
 use crate::clues::{Action, Clues, PowerState};
 use crate::cloudsim::VmId;
 use crate::ids::{NodeId, NodeNames};
@@ -22,6 +23,7 @@ use crate::im::{Im, NodeRole};
 use crate::lrms::{JobId, Lrms, NodeHealth, NodeStat};
 use crate::metrics::{DisplayState, Recorder};
 use crate::netsim::Network;
+use crate::obs::{MetricsRegistry, TraceShard};
 use crate::orchestrator::{UpdateId, UpdateOp, WorkflowEngine};
 use crate::runtime::ModelRuntime;
 use crate::sim::shard::ControlPlane;
@@ -100,6 +102,20 @@ pub(crate) fn ewma_health(prev: f64, drops: u64, retransmits: u64,
     (prev + HEALTH_GAIN * (instant - prev)).clamp(0.0, 1.0)
 }
 
+/// Render a broker candidate ranking as `site:primary-score` pairs,
+/// best first, for a `broker.decision` trace annotation.
+fn fmt_ranked(ranked: &[(usize, Score)]) -> String {
+    let mut s = String::from("[");
+    for (k, (site, sc)) in ranked.iter().enumerate() {
+        if k > 0 {
+            s.push(' ');
+        }
+        let _ = write!(s, "{site}:{:.6}", sc.primary);
+    }
+    s.push(']');
+    s
+}
+
 /// The cross-site control plane.
 pub struct ControlWorld {
     pub cfg: RunConfig,
@@ -113,6 +129,13 @@ pub struct ControlWorld {
     pub broker: ElasticityBroker,
     /// The control shard's metrics stream.
     pub(crate) recorder: Recorder,
+    /// The control shard's causal-trace sink (shard 0). Off — and
+    /// free — unless `cfg.obs.trace`; see `crate::obs` for the
+    /// digest-neutrality contract.
+    pub(crate) trace: TraceShard,
+    /// On-clock gauge sampler, driven from the CluesTick handler only.
+    /// Off unless `cfg.obs.metrics`.
+    pub(crate) metrics: MetricsRegistry,
     /// Cluster-wide name⇄id interner (shared with lrms/clues/recorders).
     pub(crate) names: NodeNames,
     pub(crate) nodes: HashMap<NodeId, NodeRt>,
@@ -238,6 +261,8 @@ impl ControlWorld {
             })
             || cfg.sites.iter().any(|s| s.failure.message_loss_prob > 0.0);
         let chaos_rng = Prng::new(cfg.seed ^ 0xFA57_C8A0);
+        let trace = TraceShard::new(0, cfg.obs.trace);
+        let metrics = MetricsRegistry::new(cfg.obs.metrics);
         let breakers = vec![
             SiteHealthTracker::new(cfg.retry.quarantine_after);
             n_sites
@@ -252,6 +277,8 @@ impl ControlWorld {
             im,
             broker,
             recorder,
+            trace,
+            metrics,
             names,
             nodes: HashMap::new(),
             update_for_node: HashMap::new(),
@@ -303,6 +330,17 @@ impl ControlWorld {
             lease_requeued: 0,
             lease_recovered: 0,
         }
+    }
+
+    /// Hand the control shard's trace buffer to the run assembler
+    /// (leaves a permanently-off sink behind).
+    pub(crate) fn take_trace(&mut self) -> TraceShard {
+        std::mem::replace(&mut self.trace, TraceShard::off(0))
+    }
+
+    /// Hand the gauge samples to the run assembler.
+    pub(crate) fn take_metrics(&mut self) -> MetricsRegistry {
+        std::mem::take(&mut self.metrics)
     }
 
     // ---------------------------------------------------------------
@@ -385,6 +423,10 @@ impl ControlWorld {
             busy_secs: 0.0,
         });
         self.recorder.node_state_id(t, id, DisplayState::PoweringOn);
+        if self.trace.enabled() {
+            self.trace.instant(t, "node", "node.requested", format!(
+                "node={name} site={site} role={role:?}"));
+        }
         let boot_at = t.0 + net_secs + p.boot_secs;
         q.schedule_at(SimTime(boot_at), Ev::BootDone {
             site,
@@ -473,16 +515,32 @@ impl ControlWorld {
         let used = self.used_workers_per_site();
         let cpus = self.cfg.template.worker.num_cpus;
         let queue_depth = self.lrms.pending() as u32;
-        let site = if self.cfg.template.hybrid {
-            if self.chaos {
-                let excluded: Vec<bool> = (0..self.n_sites)
+        // Under chaos, WAN-partitioned sites are masked out: a command
+        // sent into a partition would vanish.
+        let excluded: Option<Vec<bool>> = (self.cfg.template.hybrid
+            && self.chaos)
+            .then(|| {
+                (0..self.n_sites)
                     .map(|s| self.partition_depth[s] > 0)
-                    .collect();
-                self.broker.select_excluding(sites, &used, cpus,
-                                             queue_depth, t, &excluded)
-            } else {
-                self.broker.select(sites, &used, cpus, queue_depth, t)
+                    .collect()
+            });
+        let site = if self.cfg.template.hybrid {
+            let picked = match &excluded {
+                Some(e) => self.broker.select_excluding(
+                    sites, &used, cpus, queue_depth, t, e),
+                None => {
+                    self.broker.select(sites, &used, cpus, queue_depth, t)
+                }
+            };
+            if self.trace.enabled() {
+                let ranked = self.broker.ranked_candidates(
+                    sites, &used, cpus, queue_depth, excluded.as_deref());
+                self.trace.instant(t, "broker", "broker.decision",
+                    format!("node={name} picked={picked:?} \
+                             queue={queue_depth} ranked={}",
+                            fmt_ranked(&ranked)));
             }
+            picked
         } else {
             // Non-hybrid: only the FE's site may host workers.
             let s = self.fe_site;
@@ -581,6 +639,10 @@ impl ControlWorld {
         self.recorder.milestone(t, format!(
             "{name} provisioning attempt {attempt} failed — retrying \
              in {delay:.0}s"));
+        if self.trace.enabled() {
+            self.trace.instant(t, "node", "node.retry", format!(
+                "node={name} attempt={attempt} backoff_s={delay:.3}"));
+        }
         q.schedule_in(delay, Ev::RetryProvision { node });
         true
     }
@@ -664,8 +726,52 @@ impl ControlWorld {
                 self.recorder.milestone(t, format!(
                     "{} health down to {h:.3} — de-ranked for \
                      placement", sites[s].cloud.spec.name));
+                if self.trace.enabled() {
+                    self.trace.instant(t, "broker", "health.deranked",
+                        format!("site={s} health={h:.6}"));
+                }
             }
             self.broker.set_health(s, h);
+        }
+    }
+
+    /// Sample the on-clock gauge grid (once per CLUES tick): the
+    /// cluster-wide queue depth and completion count plus, per site,
+    /// worker counts, the health score, the open-ledger burn rate and
+    /// the cumulative WAN chaos counters. Runs in the CluesTick handler
+    /// — a control event, dispatched at a global barrier of every
+    /// engine — so the cross-shard reads are race-free and the series
+    /// is byte-identical however the run was parallelized. Purely
+    /// passive: reads only, so digests are untouched.
+    fn sample_metrics(&mut self, sites: &[SiteWorld], t: SimTime) {
+        self.metrics.sample_cluster(t, "queue_depth",
+                                    self.lrms.pending() as f64);
+        self.metrics.sample_cluster(t, "jobs_completed",
+                                    self.jobs_completed as f64);
+        let mut joined = vec![0u32; self.n_sites];
+        let mut booting = vec![0u32; self.n_sites];
+        for rt in self.nodes.values() {
+            if rt.role != NodeRole::WorkerNode || rt.site >= self.n_sites
+            {
+                continue;
+            }
+            if rt.joined_at.is_some() {
+                joined[rt.site] += 1;
+            } else {
+                booting[rt.site] += 1;
+            }
+        }
+        for s in 0..self.n_sites {
+            let m = &mut self.metrics;
+            m.sample(t, s as u32, "workers_joined", joined[s] as f64);
+            m.sample(t, s as u32, "workers_booting", booting[s] as f64);
+            m.sample(t, s as u32, "health", self.health[s]);
+            m.sample(t, s as u32, "burn_usd_per_hour",
+                     sites[s].cloud.ledger.open_rate_usd_per_hour());
+            let (d, du, r) = sites[s].faults.counters();
+            m.sample(t, s as u32, "wan_dropped", d as f64);
+            m.sample(t, s as u32, "wan_duplicated", du as f64);
+            m.sample(t, s as u32, "wan_retransmits", r as f64);
         }
     }
 
@@ -688,6 +794,10 @@ impl ControlWorld {
             "{} silent for {} heartbeats — quarantined, requeuing its \
              leased jobs elsewhere", sites[s].cloud.spec.name,
             self.cfg.retry.quarantine_after));
+        if self.trace.enabled() {
+            self.trace.instant(t, "chaos", "breaker.open", format!(
+                "site={s} ({})", sites[s].cloud.spec.name));
+        }
         let mut victims: Vec<NodeId> = self
             .nodes
             .iter()
@@ -730,6 +840,10 @@ impl ControlWorld {
         self.recorder.milestone(t, format!(
             "{} back in contact — quarantine lifted",
             sites[s].cloud.spec.name));
+        if self.trace.enabled() {
+            self.trace.instant(t, "chaos", "breaker.close", format!(
+                "site={s} ({})", sites[s].cloud.spec.name));
+        }
         let mut held: Vec<NodeId> = self
             .nodes
             .iter()
@@ -1030,6 +1144,10 @@ impl ControlWorld {
         self.clues.forget_id(node);
         self.recorder.node_state_id(t, node, DisplayState::Failed);
         self.recorder.milestone(t, format!("{name} {reason}"));
+        if self.trace.enabled() {
+            self.trace.instant(t, "node", "node.preempted", format!(
+                "node={name} site={} reason={reason}", rt.site));
+        }
         self.preempted_vms += 1;
         true
     }
@@ -1150,6 +1268,20 @@ impl ControlWorld {
                     self.recorder.job_run_id(run.node, s, e);
                     if let Some(&ri) = self.live_record.get(&run.node) {
                         self.vm_records[ri].busy_secs += e.0 - s.0;
+                    }
+                    // The job's full causal chain, emitted now that its
+                    // completion report has crossed the WAN: queue wait
+                    // (submit→start), execution (start→finish), report
+                    // lag (finish→batch arrival).
+                    if self.trace.enabled() {
+                        let d = format!("job={} node={}", run.job,
+                                        self.names.name(run.node));
+                        self.trace.span(t, "job", "job.queue",
+                                        j.submitted_at, s, d.clone());
+                        self.trace.span(t, "job", "job.run", s, e,
+                                        d.clone());
+                        self.trace.span(t, "job", "job.report-lag", e, t,
+                                        d);
                     }
                 }
             }
@@ -1351,6 +1483,11 @@ impl ControlWorld {
             (rt.site, rt.role, rt.requested_at);
         let name = self.names.name(node);
         self.deploy_log.push((name.clone(), requested_at, t));
+        if self.trace.enabled() {
+            self.trace.span(t, "node", "node.boot", requested_at, t,
+                            format!("node={name} site={site} \
+                                     role={role:?}"));
+        }
         // Non-FE nodes keep a reverse tunnel to the Ansible master so
         // the control node can reach them without a public IP.
         if role != NodeRole::FrontEnd {
@@ -1502,6 +1639,10 @@ impl ControlPlane for ControlWorld {
                 self.jobs_submitted += jobs;
                 self.recorder.milestone(t, format!(
                     "block {} submitted: {jobs} jobs", i + 1));
+                if self.trace.enabled() {
+                    self.trace.instant(t, "job", "job.submit-block",
+                        format!("block={} jobs={jobs}", i + 1));
+                }
                 self.pump_jobs(q, t);
                 // Immediate CLUES reaction on new work.
                 let actions = self.clues_tick(t);
@@ -1532,6 +1673,11 @@ impl ControlPlane for ControlWorld {
                 if rt.vm != vm || rt.site != site {
                     return; // stale: the name already hosts a successor
                 }
+                if self.trace.enabled() {
+                    self.trace.instant(t, "node", "node.boot-failed",
+                        format!("node={} site={site}",
+                                self.names.name(node)));
+                }
                 if self.chaos
                     && rt.role == NodeRole::WorkerNode
                     && self.schedule_provision_retry(q, node, rt.site, t)
@@ -1552,6 +1698,11 @@ impl ControlPlane for ControlWorld {
             }
 
             Ev::CluesTick => {
+                // Sample the gauge grid before any reaction: the series
+                // reads the state each tick found, not what it did.
+                if self.metrics.enabled() {
+                    self.sample_metrics(sites, t);
+                }
                 // Heartbeat bookkeeping first: a site whose probes all
                 // vanished since the last tick trips its breaker before
                 // CLUES reacts to the resulting Down nodes.
@@ -1635,6 +1786,12 @@ impl ControlPlane for ControlWorld {
                 // ledger row); the controller's side is the LRMS
                 // requeue + elasticity bookkeeping.
                 let name = self.names.name(node);
+                if self.trace.enabled() {
+                    self.trace.instant(t, "node",
+                        if preempted { "node.preempted" }
+                        else { "node.lost" },
+                        format!("node={name} site={site}"));
+                }
                 let mut requeued = self
                     .lrms
                     .set_node_health(&name, NodeHealth::Down, t)
@@ -1690,6 +1847,11 @@ impl ControlPlane for ControlWorld {
                     "spot-preemption wave at {}: reclaiming {n} of {} \
                      workers", sites[site].cloud.spec.name,
                     victims.len()));
+                if self.trace.enabled() {
+                    self.trace.instant(t, "scenario",
+                        "scenario.spot-wave",
+                        format!("site={site} reclaimed={n}"));
+                }
                 for id in victims.into_iter().take(n) {
                     self.preempt_node(q, sites, id, t,
                                       "preempted (spot wave)");
@@ -1705,6 +1867,10 @@ impl ControlPlane for ControlWorld {
                 self.broker.set_outage(site, true);
                 self.recorder.milestone(t, format!(
                     "site outage: {} dark", sites[site].cloud.spec.name));
+                if self.trace.enabled() {
+                    self.trace.instant(t, "scenario",
+                        "scenario.outage-open", format!("site={site}"));
+                }
                 for id in self.reclaim_victims(site, false) {
                     self.preempt_node(q, sites, id, t,
                                       "lost to site outage");
@@ -1719,6 +1885,10 @@ impl ControlPlane for ControlWorld {
                 self.recorder.milestone(t, format!(
                     "site outage over: {} eligible again",
                     sites[site].cloud.spec.name));
+                if self.trace.enabled() {
+                    self.trace.instant(t, "scenario",
+                        "scenario.outage-close", format!("site={site}"));
+                }
             }
 
             Ev::PriceSpikeStart { site, factor } => {
@@ -1732,11 +1902,21 @@ impl ControlPlane for ControlWorld {
                 self.recorder.milestone(t, format!(
                     "price spike at {}: {factor}x list for new launches",
                     sites[site].cloud.spec.name));
+                if self.trace.enabled() {
+                    self.trace.instant(t, "scenario",
+                        "scenario.price-spike-open",
+                        format!("site={site} factor={factor}"));
+                }
             }
 
             Ev::PriceSpikeEnd { site } => {
                 self.price_spikes_active[site] =
                     self.price_spikes_active[site].saturating_sub(1);
+                if self.trace.enabled() {
+                    self.trace.instant(t, "scenario",
+                        "scenario.price-spike-close",
+                        format!("site={site}"));
+                }
                 if self.price_spikes_active[site] == 0 {
                     sites[site].cloud.set_price_factor(1.0);
                     self.recorder.milestone(t, format!(
@@ -1791,6 +1971,17 @@ impl ControlPlane for ControlWorld {
                             sites, &used, cpus, queue_depth, t,
                             &excluded);
                     }
+                    if self.trace.enabled() {
+                        let ranked = self.broker.ranked_candidates(
+                            sites, &used, cpus, queue_depth,
+                            Some(&excluded));
+                        self.trace.instant(t, "broker",
+                            "broker.decision", format!(
+                                "node={name} retry attempt={} \
+                                 picked={s:?} queue={queue_depth} \
+                                 ranked={}", rec.attempt,
+                                fmt_ranked(&ranked)));
+                    }
                     s
                 } else {
                     let s = self.fe_site;
@@ -1844,6 +2035,11 @@ impl ControlPlane for ControlWorld {
                     self.recorder.milestone(t, format!(
                         "WAN partition: {} unreachable from the control \
                          plane", sites[site].cloud.spec.name));
+                    if self.trace.enabled() {
+                        self.trace.instant(t, "chaos",
+                            "wan.partition-open",
+                            format!("site={site}"));
+                    }
                     if site != self.fe_site {
                         let vr = self.vrouter_name(sites, site);
                         if self.overlay.element(&vr).is_some() {
@@ -1860,6 +2056,11 @@ impl ControlPlane for ControlWorld {
                     self.recorder.milestone(t, format!(
                         "WAN partition healed: {} reachable again",
                         sites[site].cloud.spec.name));
+                    if self.trace.enabled() {
+                        self.trace.instant(t, "chaos",
+                            "wan.partition-close",
+                            format!("site={site}"));
+                    }
                     if site != self.fe_site {
                         let vr = self.vrouter_name(sites, site);
                         if self.overlay.element(&vr).is_some() {

@@ -584,6 +584,13 @@ impl SiteFaultState {
         self.retransmits += 1;
         self.ack_timeout_s * (1u64 << attempt.min(3)) as f64
     }
+
+    /// Cumulative `(dropped, duplicated, retransmitted)` counters —
+    /// the per-site chaos breakdown the report and the on-clock
+    /// metrics series read.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (self.dropped, self.duplicated, self.retransmits)
+    }
 }
 
 #[cfg(test)]

@@ -127,6 +127,18 @@
 //! shard 0, site *i* = shard *i+1*), merged deterministically at run
 //! end — or streamed to per-shard spill files when
 //! [`RunConfig::metrics_spill_dir`] is set.
+//!
+//! **Observability contract.** [`RunConfig::obs`] turns on the
+//! [`crate::obs`] layer: causal job/node/chaos/broker spans buffered
+//! per shard ([`crate::obs::TraceShard`], merged like the recorders)
+//! and on-clock gauges sampled each CluesTick
+//! ([`crate::obs::MetricsRegistry`]). Both are *sim-clock* data:
+//! recording is purely passive (no randomness, no scheduled events, no
+//! feedback into any decision), so enabling them leaves
+//! [`RunReport::determinism_digest`] bit-identical and their exported
+//! streams are byte-identical across all three engines. The *wall
+//! clock* half — [`RunReport::profile`], from the sharded engines'
+//! profiler — is nondeterministic by nature and never enters a digest.
 
 mod control;
 mod faults;
@@ -149,10 +161,13 @@ use crate::im::{Im, NodeRole};
 use crate::lrms::{HtCondor, JobId, Lrms, Slurm};
 use crate::metrics::{Recorder, ShardSink};
 use crate::netsim::{LinkSpec, Network};
+use crate::obs::{EngineProfile, MetricsSeries, ObsConfig, Trace,
+                 TraceShard};
 use crate::orchestrator::{Sla, UpdateId, WorkflowEngine};
 use crate::runtime::ModelRuntime;
-use crate::sim::shard::{default_threads, run_sharded, run_sharded_serial,
-                        run_sharded_stealing, StealConfig};
+use crate::sim::shard::{default_threads, run_sharded_profiled,
+                        run_sharded_serial,
+                        run_sharded_stealing_profiled, StealConfig};
 use crate::sim::{ShardEvent, ShardKey, ShardedQueue, SimTime};
 use crate::tosca::{ClusterTemplate, LrmsKind};
 use crate::util::prng::Prng;
@@ -246,6 +261,11 @@ pub struct RunConfig {
     /// control_latency_s` after it happens, just like a real remote
     /// LRMS node talking to its controller.
     pub report_interval_s: f64,
+    /// Observability switches (causal tracing + on-clock metrics).
+    /// Both off by default; turning them on records sim-clock streams
+    /// that are byte-identical across engines and digest-neutral (the
+    /// [`crate::obs`] contract).
+    pub obs: ObsConfig,
 }
 
 impl RunConfig {
@@ -276,6 +296,7 @@ impl RunConfig {
             engine: Engine::Serial,
             control_latency_s: 0.1,
             report_interval_s: 1.0,
+            obs: ObsConfig::default(),
         }
     }
 
@@ -473,6 +494,13 @@ pub struct RunReport {
     pub messages_duplicated: u64,
     /// Reliable reports retransmitted after an ack timeout.
     pub messages_retransmitted: u64,
+    /// Per-site breakdown of [`RunReport::messages_dropped`]
+    /// (index = site index).
+    pub site_messages_dropped: Vec<u64>,
+    /// Per-site breakdown of [`RunReport::messages_duplicated`].
+    pub site_messages_duplicated: Vec<u64>,
+    /// Per-site breakdown of [`RunReport::messages_retransmitted`].
+    pub site_messages_retransmitted: Vec<u64>,
     /// Backed-off provisioning retries scheduled after boot failures.
     pub provision_retries: u32,
     /// Retries that landed at a different site than the original.
@@ -501,6 +529,17 @@ pub struct RunReport {
     /// Correlated per-site partition windows installed (fault-plan
     /// region groups + scenario regional outages, one per member).
     pub regional_windows: u32,
+    /// Merged causal trace — `Some` iff [`RunConfig::obs`] enabled
+    /// tracing. Sim-clock data: byte-identical across engines, never
+    /// part of the digest (passive recording cannot perturb the run).
+    pub trace: Option<Trace>,
+    /// On-clock metrics series — `Some` iff [`RunConfig::obs`] enabled
+    /// metrics. Same sim-clock contract as `trace`.
+    pub metrics: Option<MetricsSeries>,
+    /// Wall-clock engine profile — `Some` for the parallel engines,
+    /// `None` for [`Engine::Serial`]. Nondeterministic by nature and
+    /// therefore excluded from [`RunReport::determinism_digest`].
+    pub profile: Option<EngineProfile>,
 }
 
 /// Canonical bit-exact digest of everything a deterministic replay
@@ -521,6 +560,8 @@ pub struct RunDigest {
     pub messages_dropped: u64,
     pub messages_duplicated: u64,
     pub messages_retransmitted: u64,
+    /// Per-site (dropped, duplicated, retransmitted) chaos counters.
+    pub site_messages: Vec<(u64, u64, u64)>,
     pub provision_retries: u32,
     pub provision_failovers: u32,
     pub quarantine_windows: u32,
@@ -556,6 +597,11 @@ impl RunReport {
             messages_dropped: self.messages_dropped,
             messages_duplicated: self.messages_duplicated,
             messages_retransmitted: self.messages_retransmitted,
+            site_messages: (0..self.site_messages_dropped.len())
+                .map(|s| (self.site_messages_dropped[s],
+                          self.site_messages_duplicated[s],
+                          self.site_messages_retransmitted[s]))
+                .collect(),
             provision_retries: self.provision_retries,
             provision_failovers: self.provision_failovers,
             quarantine_windows: self.quarantine_windows,
@@ -772,9 +818,13 @@ impl HybridCluster {
                     cloud.spec.failure.ack_timeout_s,
                     chaos_enabled,
                 );
+                // Trace shard i + 1 (the control plane owns shard 0),
+                // mirroring the recorder layout.
+                let trace =
+                    TraceShard::new((i + 1) as u32, cfg.obs.trace);
                 SiteWorld::new(
                     i, cloud, recorder, names.clone(), control_latency,
-                    report_grid, faults)
+                    report_grid, faults, trace)
             })
             .collect();
 
@@ -796,10 +846,13 @@ impl HybridCluster {
         // InitialDeploy update completes.
         q.schedule_at(SimTime::ZERO, Ev::Deploy);
         let horizon = control.cfg.horizon;
-        match control.cfg.engine {
+        // Parallel engines run through their profiled variants; the
+        // wall-clock profile is engine telemetry only (never digested).
+        let profile = match control.cfg.engine {
             Engine::Serial => {
                 run_sharded_serial(&mut control, &mut sites, &mut q,
                                    horizon);
+                None
             }
             Engine::Sharded { threads } => {
                 let n = if threads == 0 {
@@ -807,7 +860,9 @@ impl HybridCluster {
                 } else {
                     threads
                 };
-                run_sharded(&mut control, &mut sites, &mut q, horizon, n);
+                let (_, prof) = run_sharded_profiled(
+                    &mut control, &mut sites, &mut q, horizon, n);
+                Some(prof)
             }
             Engine::Stealing { threads } => {
                 let n = if threads == 0 {
@@ -815,10 +870,12 @@ impl HybridCluster {
                 } else {
                     threads
                 };
-                run_sharded_stealing(&mut control, &mut sites, &mut q,
-                                     horizon, StealConfig::new(n));
+                let (_, prof) = run_sharded_stealing_profiled(
+                    &mut control, &mut sites, &mut q, horizon,
+                    StealConfig::new(n));
+                Some(prof)
             }
-        }
+        };
         let makespan = q.now();
         if let Some(msg) = control.fatal.take() {
             anyhow::bail!("{msg}");
@@ -883,11 +940,39 @@ impl HybridCluster {
             recorder.busy_secs_per_node().into_iter().collect();
         let (mut dropped, mut duplicated, mut retransmitted) =
             (0u64, 0u64, 0u64);
+        let mut site_dropped = Vec::with_capacity(sites.len());
+        let mut site_duplicated = Vec::with_capacity(sites.len());
+        let mut site_retransmitted = Vec::with_capacity(sites.len());
         for s in &sites {
-            dropped += s.faults.dropped;
-            duplicated += s.faults.duplicated;
-            retransmitted += s.faults.retransmits;
+            let (d, du, r) = s.faults.counters();
+            dropped += d;
+            duplicated += du;
+            retransmitted += r;
+            site_dropped.push(d);
+            site_duplicated.push(du);
+            site_retransmitted.push(r);
         }
+        // Merge the per-shard trace buffers under the same
+        // (time, shard, seq) order the recorder merge uses.
+        let trace = if control.cfg.obs.trace {
+            let mut tshards = Vec::with_capacity(1 + sites.len());
+            tshards.push(control.take_trace());
+            for s in &mut sites {
+                tshards.push(s.take_trace());
+            }
+            Some(Trace::merge_shards(tshards))
+        } else {
+            None
+        };
+        let metrics = if control.cfg.obs.metrics {
+            let site_names: Vec<String> = sites
+                .iter()
+                .map(|s| s.cloud.spec.name.clone())
+                .collect();
+            Some(control.take_metrics().into_series(site_names))
+        } else {
+            None
+        };
         Ok(RunReport {
             recorder,
             makespan,
@@ -907,6 +992,9 @@ impl HybridCluster {
             messages_dropped: dropped,
             messages_duplicated: duplicated,
             messages_retransmitted: retransmitted,
+            site_messages_dropped: site_dropped,
+            site_messages_duplicated: site_duplicated,
+            site_messages_retransmitted: site_retransmitted,
             provision_retries: control.provision_retries,
             provision_failovers: control.provision_failovers,
             quarantine_windows: control.quarantine_windows,
@@ -918,6 +1006,9 @@ impl HybridCluster {
             site_deranked_at: control.health_deranked_at.clone(),
             site_first_quarantine_at: control.first_quarantine_at.clone(),
             regional_windows: control.regional_windows,
+            trace,
+            metrics,
+            profile,
         })
     }
 }
@@ -969,6 +1060,44 @@ mod tests {
             assert_eq!(r.determinism_digest(), reference);
             assert_eq!(r.recorder.fig10_usage(60.0, until).to_csv(), f10);
             assert_eq!(r.recorder.fig11_states(60.0, until).to_csv(), f11);
+        }
+    }
+
+    #[test]
+    fn observability_is_digest_neutral_and_engine_identical() {
+        // Tracing/metrics on must not perturb the digest of an
+        // otherwise identical run...
+        let plain = run_cfg(small_cfg(0.02));
+        let mut cfg = small_cfg(0.02);
+        cfg.obs = crate::obs::ObsConfig::enabled();
+        let traced = run_cfg(cfg);
+        assert_eq!(traced.determinism_digest(),
+                   plain.determinism_digest());
+        assert!(plain.trace.is_none() && plain.metrics.is_none());
+        let trace = traced.trace.as_ref().expect("trace recorded");
+        let metrics = traced.metrics.as_ref().expect("metrics sampled");
+        assert!(!trace.is_empty());
+        assert!(!metrics.is_empty());
+        // ...and the sim-clock streams are byte-identical across the
+        // parallel engines (wall-clock profile excepted: it only
+        // exists there, and is never compared).
+        assert!(traced.profile.is_none(), "serial runs have no profile");
+        let json = trace.to_chrome_json();
+        let csv = trace.to_csv();
+        let mcsv = metrics.to_csv();
+        for engine in [Engine::Sharded { threads: 2 },
+                       Engine::Stealing { threads: 2 }] {
+            let mut cfg = small_cfg(0.02);
+            cfg.obs = crate::obs::ObsConfig::enabled();
+            cfg.engine = engine;
+            let r = run_cfg(cfg);
+            assert_eq!(r.determinism_digest(),
+                       plain.determinism_digest());
+            assert_eq!(r.trace.as_ref().unwrap().to_chrome_json(), json);
+            assert_eq!(r.trace.as_ref().unwrap().to_csv(), csv);
+            assert_eq!(r.metrics.as_ref().unwrap().to_csv(), mcsv);
+            let prof = r.profile.expect("parallel engines profile");
+            assert!(prof.windows > 0);
         }
     }
 

@@ -28,11 +28,25 @@
 use crate::cloudsim::CloudSite;
 use crate::ids::{NodeId, NodeNames};
 use crate::metrics::{DisplayState, Recorder};
+use crate::obs::TraceShard;
 use crate::sim::shard::{SiteCtx, SiteShard};
 use crate::sim::SimTime;
 
 use super::faults::{Delivery, SiteFaultState};
 use super::{Ev, JobRun};
+
+/// Short label of a reliable report for chaos trace instants.
+fn report_kind(ev: &Ev) -> &'static str {
+    match ev {
+        Ev::NodeReady { .. } => "node-ready",
+        Ev::BootFailed { .. } => "boot-failed",
+        Ev::NodeLost { .. } => "node-lost",
+        Ev::NodeOff { .. } => "node-off",
+        Ev::JobBatch { .. } => "job-batch",
+        Ev::SiteHeartbeat { .. } => "heartbeat",
+        _ => "other",
+    }
+}
 
 /// Retransmission attempts per message before the site gives up (the
 /// validated fault plans — sub-total steady loss, finite partition
@@ -60,12 +74,17 @@ pub struct SiteWorld {
     report_grid: f64,
     /// The WAN chaos layer for this site's control channel.
     pub(crate) faults: SiteFaultState,
+    /// This shard's causal trace buffer (shard `site + 1`; merged with
+    /// the control shard's at run end). Passive — see `crate::obs`.
+    pub(crate) trace: TraceShard,
 }
 
 impl SiteWorld {
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn new(site: usize, cloud: CloudSite, recorder: Recorder,
                       names: NodeNames, control_latency: f64,
-                      report_grid: f64, faults: SiteFaultState)
+                      report_grid: f64, faults: SiteFaultState,
+                      trace: TraceShard)
         -> SiteWorld {
         SiteWorld {
             site,
@@ -77,12 +96,19 @@ impl SiteWorld {
             control_latency,
             report_grid,
             faults,
+            trace,
         }
     }
 
     /// Take the shard recorder out for merging (report assembly).
     pub(crate) fn take_recorder(&mut self) -> Recorder {
         std::mem::take(&mut self.recorder)
+    }
+
+    /// Take the trace shard out for merging (report assembly).
+    pub(crate) fn take_trace(&mut self) -> TraceShard {
+        std::mem::replace(&mut self.trace,
+                          TraceShard::off((self.site + 1) as u32))
     }
 
     /// The next completed-run flush instant for a completion at `t`:
@@ -103,6 +129,11 @@ impl SiteWorld {
                     ev: Ev, attempt: u32) {
         match self.faults.decide(t) {
             Delivery::Drop => {
+                if self.trace.enabled() {
+                    self.trace.instant(t, "chaos", "wan.drop", format!(
+                        "site={} report={} attempt={attempt}",
+                        self.site, report_kind(&ev)));
+                }
                 if attempt >= MAX_RETRANSMITS {
                     self.recorder.milestone(t, format!(
                         "site {} gave up retransmitting a report after \
@@ -110,6 +141,13 @@ impl SiteWorld {
                     return;
                 }
                 let delay = self.faults.retransmit_backoff(attempt);
+                if self.trace.enabled() {
+                    self.trace.instant(
+                        t, "chaos", "wan.retransmit", format!(
+                            "site={} report={} attempt={} backoff_s={}",
+                            self.site, report_kind(&ev), attempt + 1,
+                            delay));
+                }
                 ctx.schedule_in(delay, Ev::Retransmit {
                     site: self.site,
                     ev: Box::new(ev),
@@ -117,6 +155,14 @@ impl SiteWorld {
                 });
             }
             Delivery::Deliver { extra_delay, duplicate } => {
+                if self.trace.enabled() {
+                    if let Some(dup_delay) = duplicate {
+                        self.trace.instant(
+                            t, "chaos", "wan.duplicate", format!(
+                                "site={} report={} dup_delay_s={}",
+                                self.site, report_kind(&ev), dup_delay));
+                    }
+                }
                 match duplicate {
                     Some(dup_delay) => {
                         ctx.emit_control_in(
@@ -137,8 +183,22 @@ impl SiteWorld {
     fn send_control_unreliable(&mut self, ctx: &mut SiteCtx<'_, Ev>,
                                t: SimTime, ev: Ev) {
         match self.faults.decide(t) {
-            Delivery::Drop => {}
+            Delivery::Drop => {
+                if self.trace.enabled() {
+                    self.trace.instant(t, "chaos", "wan.drop", format!(
+                        "site={} report={} unreliable",
+                        self.site, report_kind(&ev)));
+                }
+            }
             Delivery::Deliver { extra_delay, duplicate } => {
+                if self.trace.enabled() {
+                    if let Some(dup_delay) = duplicate {
+                        self.trace.instant(
+                            t, "chaos", "wan.duplicate", format!(
+                                "site={} report={} dup_delay_s={}",
+                                self.site, report_kind(&ev), dup_delay));
+                    }
+                }
                 match duplicate {
                     Some(dup_delay) => {
                         ctx.emit_control_in(

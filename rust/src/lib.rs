@@ -28,6 +28,8 @@
 //! * [`runtime`] — PJRT executor for the AOT-compiled L2/L1 model.
 //! * [`cluster`] — the public façade tying everything together.
 //! * [`metrics`] — time-series recording + figure/table regeneration.
+//! * [`obs`] — deterministic trace/telemetry layer: causal spans,
+//!   on-clock metrics and the wall-clock engine profiler.
 //! * [`api`] — the Orchestrator's REST API (+ orchent-style client).
 //! * [`util`] — in-tree substrates for crates unavailable offline
 //!   (CLI parsing, YAML subset, CSV, PRNG, stats, property testing).
@@ -52,6 +54,7 @@ pub mod orchestrator;
 pub mod workload;
 pub mod runtime;
 pub mod metrics;
+pub mod obs;
 pub mod cluster;
 
 /// Crate-wide result type.

@@ -1,0 +1,493 @@
+//! Deterministic observability: causal spans, on-clock metrics and the
+//! wall-clock engine profiler.
+//!
+//! The layer has three parts with one contract between them:
+//!
+//! * **Causal spans on the simulation clock** — [`TraceShard`] buffers
+//!   job/node lifecycle spans and chaos/broker instant events per
+//!   shard, exactly like the metrics `Recorder`: the control plane
+//!   owns shard 0, every `SiteWorld` owns shard `site + 1`, and
+//!   [`Trace::merge_shards`] restores the global causal order by the
+//!   same `(time, shard, seq)` key the engines themselves merge by.
+//!   The merged stream exports as Chrome trace-event JSON
+//!   ([`Trace::to_chrome_json`], loadable in Perfetto / `chrome://
+//!   tracing`) and as CSV ([`Trace::to_csv`]).
+//! * **On-clock time-series metrics** — [`MetricsRegistry`] samples
+//!   per-site gauges (queue depth, running/idle nodes, health score,
+//!   open-ledger $/h burn, cumulative chaos counters) on the existing
+//!   CluesTick grid, from the control shard only, and exports a
+//!   long-format CSV ([`MetricsSeries::to_csv`]).
+//! * **Wall-clock engine profiler** — [`EngineProfile`] (defined with
+//!   the engines in `sim::shard`, re-exported here) attributes
+//!   parallel-engine wall time to shard work vs control-barrier
+//!   dispatch vs injector waiting.
+//!
+//! # The observability contract
+//!
+//! Sim-clock data (traces, metrics) is **purely passive**: recording
+//! never draws randomness, never schedules an event and never feeds
+//! back into a simulation decision, so enabling it cannot perturb
+//! `RunReport::determinism_digest()` — and because every emission
+//! point runs at a deterministic `(time, shard, seq)` position, the
+//! merged trace and metrics streams are **byte-identical across the
+//! Serial/Sharded/Stealing engines** (property-proven in
+//! `tests/broker_policies.rs`). Wall-clock data (the profiler) is the
+//! exact opposite — nondeterministic by nature — and therefore **never
+//! enters a digest**; it lives only in `RunReport::profile` and the
+//! `perf_profile` section of `BENCH_scale.json`.
+
+use std::fmt::Write as _;
+
+use crate::sim::SimTime;
+use crate::util::csv::Table;
+
+pub use crate::sim::shard::EngineProfile;
+
+/// Observability knobs carried by `RunConfig`. Both default to off:
+/// a default run records nothing and allocates nothing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Record causal spans and instant events (sim-clock,
+    /// deterministic, digest-neutral).
+    pub trace: bool,
+    /// Sample the CluesTick metrics grid (sim-clock, deterministic,
+    /// digest-neutral).
+    pub metrics: bool,
+}
+
+impl ObsConfig {
+    /// Everything on — what the examples and property tests use.
+    pub fn enabled() -> ObsConfig {
+        ObsConfig { trace: true, metrics: true }
+    }
+
+    /// True if any sim-clock stream is recording.
+    pub fn any(&self) -> bool {
+        self.trace || self.metrics
+    }
+}
+
+/// Chrome trace-event phase of one recorded event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TracePhase {
+    /// A complete span (`ph: "X"`): `start`..`start + dur_s`.
+    Span,
+    /// An instant (`ph: "i"`): a point at `at`.
+    Instant,
+}
+
+/// One recorded trace event. `at` is the sim time the emitting handler
+/// observed — the merge key; a span emitted retrospectively (e.g. a
+/// job's queue wait, recorded when its completion report lands) keeps
+/// its true `start` while merging at its emission time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Emission time (merge key).
+    pub at: SimTime,
+    /// Span start (equals `at` for instants).
+    pub start: SimTime,
+    /// Span duration in sim seconds (0 for instants).
+    pub dur_s: f64,
+    pub phase: TracePhase,
+    /// Category lane: `"job"`, `"node"`, `"chaos"`, `"broker"`,
+    /// `"scenario"`.
+    pub cat: &'static str,
+    /// Event name, e.g. `"job.run"` or `"wan.drop"`.
+    pub name: String,
+    /// Preformatted detail (rendered under `args.detail`).
+    pub detail: String,
+}
+
+/// Per-shard trace buffer. Mirrors the metrics `Recorder`: the control
+/// plane records into shard 0, site `i` into shard `i + 1`, each from
+/// its own event handlers only, so no lock is ever needed and the
+/// per-shard push order is the shard's deterministic dispatch order.
+///
+/// Recording is passive by construction — the sink only ever appends
+/// to its own buffer. Callers must guard detail-string formatting with
+/// [`TraceShard::enabled`] so a disabled sink costs nothing.
+#[derive(Debug)]
+pub struct TraceShard {
+    shard: u32,
+    enabled: bool,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceShard {
+    pub fn new(shard: u32, enabled: bool) -> TraceShard {
+        TraceShard { shard, enabled, events: Vec::new() }
+    }
+
+    /// A permanently-off sink (what default runs carry).
+    pub fn off(shard: u32) -> TraceShard {
+        TraceShard::new(shard, false)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn shard(&self) -> u32 {
+        self.shard
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Record a complete span `[start, end]` emitted at `at`.
+    pub fn span(&mut self, at: SimTime, cat: &'static str,
+                name: impl Into<String>, start: SimTime, end: SimTime,
+                detail: String) {
+        if !self.enabled {
+            return;
+        }
+        self.events.push(TraceEvent {
+            at,
+            start,
+            dur_s: (end.0 - start.0).max(0.0),
+            phase: TracePhase::Span,
+            cat,
+            name: name.into(),
+            detail,
+        });
+    }
+
+    /// Record an instant event at `at`.
+    pub fn instant(&mut self, at: SimTime, cat: &'static str,
+                   name: impl Into<String>, detail: String) {
+        if !self.enabled {
+            return;
+        }
+        self.events.push(TraceEvent {
+            at,
+            start: at,
+            dur_s: 0.0,
+            phase: TracePhase::Instant,
+            cat,
+            name: name.into(),
+            detail,
+        });
+    }
+}
+
+/// The merged causal trace of one run: every shard's events restored
+/// to the global `(time, shard, seq)` order — the same key the
+/// engines merge events by, so the merged stream is identical however
+/// the run was parallelized.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Trace {
+    /// `(source shard, event)` in merged order.
+    pub events: Vec<(u32, TraceEvent)>,
+}
+
+impl Trace {
+    /// Merge per-shard buffers exactly like `Recorder::merge_shards`:
+    /// stable on `(emission time, shard index, per-shard seq)` with
+    /// `total_cmp` on time, so the order never depends on float noise
+    /// or map iteration.
+    pub fn merge_shards(shards: Vec<TraceShard>) -> Trace {
+        let mut keyed: Vec<(f64, u32, usize, TraceEvent)> = Vec::new();
+        for sh in shards {
+            let shard = sh.shard;
+            for (k, ev) in sh.events.into_iter().enumerate() {
+                keyed.push((ev.at.0, shard, k, ev));
+            }
+        }
+        keyed.sort_by(|a, b| {
+            a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+        });
+        Trace {
+            events: keyed.into_iter().map(|(_, s, _, e)| (s, e)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Export as Chrome trace-event JSON (the plain array format —
+    /// loadable in Perfetto and `chrome://tracing`). Sim seconds map
+    /// to trace microseconds; `pid` is the run, `tid` the shard
+    /// (0 = control plane, `i + 1` = site `i`).
+    pub fn to_chrome_json(&self) -> String {
+        let mut s = String::from("[");
+        for (i, (shard, ev)) in self.events.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str("\n  ");
+            let ts = ev.start.0 * 1e6;
+            match ev.phase {
+                TracePhase::Span => {
+                    let _ = write!(
+                        s,
+                        "{{\"name\":{},\"cat\":\"{}\",\"ph\":\"X\",\
+                         \"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\
+                         \"args\":{{\"detail\":{}}}}}",
+                        json_str(&ev.name), ev.cat, ts, ev.dur_s * 1e6,
+                        shard, json_str(&ev.detail)
+                    );
+                }
+                TracePhase::Instant => {
+                    let _ = write!(
+                        s,
+                        "{{\"name\":{},\"cat\":\"{}\",\"ph\":\"i\",\
+                         \"ts\":{},\"pid\":0,\"tid\":{},\"s\":\"t\",\
+                         \"args\":{{\"detail\":{}}}}}",
+                        json_str(&ev.name), ev.cat, ts, shard,
+                        json_str(&ev.detail)
+                    );
+                }
+            }
+        }
+        s.push_str("\n]\n");
+        s
+    }
+
+    /// Export as CSV, one row per event in merged order.
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(vec![
+            "time_s", "shard", "phase", "cat", "name", "start_s",
+            "dur_s", "detail",
+        ]);
+        for (shard, ev) in &self.events {
+            t.push(vec![
+                format!("{}", ev.at.0),
+                format!("{shard}"),
+                match ev.phase {
+                    TracePhase::Span => "span".to_string(),
+                    TracePhase::Instant => "instant".to_string(),
+                },
+                ev.cat.to_string(),
+                ev.name.clone(),
+                format!("{}", ev.start.0),
+                format!("{}", ev.dur_s),
+                ev.detail.clone(),
+            ]);
+        }
+        t.to_csv()
+    }
+}
+
+/// Escape a string as a JSON string literal.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Site index of cluster-wide metric rows (rendered as `"cluster"`).
+pub const METRIC_SITE_CLUSTER: u32 = u32::MAX;
+
+/// One long-format metric sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricSample {
+    pub t: SimTime,
+    /// Site index, or [`METRIC_SITE_CLUSTER`] for cluster-wide series.
+    pub site: u32,
+    pub metric: &'static str,
+    pub value: f64,
+}
+
+/// On-clock gauge sampler. Owned and driven by the control plane only
+/// (the CluesTick handler runs on the control shard, a global barrier,
+/// so cross-site reads there are race-free and deterministic) — no
+/// per-shard merge is needed.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    enabled: bool,
+    samples: Vec<MetricSample>,
+}
+
+impl MetricsRegistry {
+    pub fn new(enabled: bool) -> MetricsRegistry {
+        MetricsRegistry { enabled, samples: Vec::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Record one per-site sample (no-op while disabled).
+    pub fn sample(&mut self, t: SimTime, site: u32, metric: &'static str,
+                  value: f64) {
+        if self.enabled {
+            self.samples.push(MetricSample { t, site, metric, value });
+        }
+    }
+
+    /// Record one cluster-wide sample (no-op while disabled).
+    pub fn sample_cluster(&mut self, t: SimTime, metric: &'static str,
+                          value: f64) {
+        self.sample(t, METRIC_SITE_CLUSTER, metric, value);
+    }
+
+    /// Freeze into the exportable series, naming sites for the CSV.
+    pub fn into_series(self, site_names: Vec<String>) -> MetricsSeries {
+        MetricsSeries { site_names, samples: self.samples }
+    }
+}
+
+/// The frozen time-series of one run, exportable as long-format CSV.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsSeries {
+    pub site_names: Vec<String>,
+    pub samples: Vec<MetricSample>,
+}
+
+impl MetricsSeries {
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Long-format CSV: `time_s,site,metric,value` — one gauge sample
+    /// per row, ready for a dataframe or gnuplot without reshaping.
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(vec!["time_s", "site", "metric", "value"]);
+        for s in &self.samples {
+            let site = if s.site == METRIC_SITE_CLUSTER {
+                "cluster".to_string()
+            } else {
+                self.site_names
+                    .get(s.site as usize)
+                    .cloned()
+                    .unwrap_or_else(|| format!("site-{}", s.site))
+            };
+            t.push(vec![
+                format!("{}", s.t.0),
+                site,
+                s.metric.to_string(),
+                format!("{}", s.value),
+            ]);
+        }
+        t.to_csv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime(s)
+    }
+
+    #[test]
+    fn disabled_sinks_record_nothing() {
+        let mut tr = TraceShard::off(0);
+        tr.span(t(1.0), "job", "job.run", t(0.0), t(1.0), String::new());
+        tr.instant(t(2.0), "chaos", "wan.drop", String::new());
+        assert!(tr.is_empty());
+        let mut m = MetricsRegistry::new(false);
+        m.sample(t(1.0), 0, "queue_depth", 3.0);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn merge_restores_time_shard_seq_order() {
+        let mut control = TraceShard::new(0, true);
+        let mut site = TraceShard::new(1, true);
+        site.instant(t(1.0), "chaos", "wan.drop", "a".into());
+        site.instant(t(1.0), "chaos", "wan.drop", "b".into());
+        control.instant(t(1.0), "broker", "decision", String::new());
+        control.instant(t(0.5), "node", "requested", String::new());
+        let merged = Trace::merge_shards(vec![site, control]);
+        let names: Vec<&str> =
+            merged.events.iter().map(|(_, e)| e.name.as_str()).collect();
+        // Time first, then shard (control=0 before site=1), then the
+        // per-shard push order.
+        assert_eq!(names,
+                   vec!["requested", "decision", "wan.drop", "wan.drop"]);
+        assert_eq!(merged.events[2].1.detail, "a");
+        assert_eq!(merged.events[3].1.detail, "b");
+    }
+
+    #[test]
+    fn chrome_json_is_well_formed_and_escaped() {
+        let mut tr = TraceShard::new(2, true);
+        tr.span(t(3.0), "job", "job.run", t(1.0), t(3.0),
+                "job \"7\"\nnode n1".into());
+        tr.instant(t(3.5), "chaos", "wan.drop", String::new());
+        let json = Trace::merge_shards(vec![tr]).to_chrome_json();
+        assert!(json.starts_with('['));
+        assert!(json.trim_end().ends_with(']'));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ph\":\"i\""));
+        assert!(json.contains("\"tid\":2"));
+        assert!(json.contains("\\\"7\\\"\\nnode"));
+        // µs mapping: the span starts at 1 s = 1e6 µs, lasts 2e6 µs.
+        assert!(json.contains("\"ts\":1000000"));
+        assert!(json.contains("\"dur\":2000000"));
+        // Parses under the crate's own JSON reader.
+        let parsed = crate::api::json::parse(&json).expect("valid json");
+        match parsed {
+            crate::api::json::Json::Array(rows) => {
+                assert_eq!(rows.len(), 2)
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_csv_has_one_row_per_event() {
+        let mut tr = TraceShard::new(0, true);
+        tr.instant(t(1.0), "broker", "decision", "ranked=[0,1]".into());
+        tr.span(t(2.0), "node", "node.boot", t(0.0), t(2.0),
+                "wn-1".into());
+        let csv = Trace::merge_shards(vec![tr]).to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("time_s,shard,phase,cat,name"));
+        assert!(csv.contains("instant"));
+        assert!(csv.contains("span"));
+    }
+
+    #[test]
+    fn metrics_series_renders_long_format() {
+        let mut m = MetricsRegistry::new(true);
+        m.sample(t(60.0), 0, "queue_depth", 12.0);
+        m.sample(t(60.0), 1, "health", 0.5);
+        m.sample_cluster(t(60.0), "jobs_pending", 40.0);
+        let series =
+            m.into_series(vec!["CESNET".to_string(), "AWS".to_string()]);
+        let csv = series.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.contains("60,CESNET,queue_depth,12"));
+        assert!(csv.contains("60,AWS,health,0.5"));
+        assert!(csv.contains("60,cluster,jobs_pending,40"));
+    }
+}

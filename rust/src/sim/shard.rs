@@ -605,6 +605,63 @@ fn flush_control<E: ShardEvent>(
     }
 }
 
+// ---------------------------------------------------------------------
+// Wall-clock engine profiler
+// ---------------------------------------------------------------------
+
+/// Wall-clock timing breakdown of one parallel replay: how much real
+/// time went to the serial control barrier versus the parallel site
+/// windows, how well the windows filled their worker budget, and (for
+/// the stealing engine) how long workers sat on the injector.
+///
+/// Everything here is measured with [`std::time::Instant`] and varies
+/// run to run — it is *observability about the engine*, not simulation
+/// state, and must never be folded into a determinism digest (the
+/// crate-wide contract lives in `rust/src/obs/mod.rs`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EngineProfile {
+    /// Parallel site windows executed (spawn/join or chain rounds).
+    pub windows: u64,
+    /// Zero-lookahead fallbacks to exact single-queue stepping.
+    pub serial_steps: u64,
+    /// Control-shard events handled — each one is a global barrier.
+    pub barrier_events: u64,
+    /// Wall time inside control-shard handlers (the serial barrier).
+    pub barrier_wall_s: f64,
+    /// Wall time inside parallel site windows, spawn→join inclusive.
+    pub window_wall_s: f64,
+    /// Sum over windows of the busiest worker's drain time — the
+    /// critical path through the parallel sections.
+    pub busiest_shard_wall_s: f64,
+    /// Total worker drain time summed across all workers and windows.
+    pub worker_wall_s: f64,
+    /// Chains drained by the stealing engine (0 for the chunked engine).
+    pub chains_executed: u64,
+    /// Wall time stealing workers spent blocked on the shared injector
+    /// (lock + condvar), including the tail wait for the last chain.
+    pub injector_wait_s: f64,
+    /// Worker-thread budget actually used (max across windows).
+    pub workers: usize,
+}
+
+impl EngineProfile {
+    /// Fraction of measured engine wall time spent in the serial
+    /// control barrier — the control-coupling stall. 0 when nothing
+    /// was measured.
+    pub fn barrier_fraction(&self) -> f64 {
+        let total = self.barrier_wall_s + self.window_wall_s;
+        if total > 0.0 { self.barrier_wall_s / total } else { 0.0 }
+    }
+
+    /// Worker-busy time divided by the worker budget's window
+    /// occupancy — 1.0 means every worker drained events for the whole
+    /// of every window, lower means idle workers. 0 when unmeasured.
+    pub fn parallel_efficiency(&self) -> f64 {
+        let budget = self.window_wall_s * self.workers.max(1) as f64;
+        if budget > 0.0 { self.worker_wall_s / budget } else { 0.0 }
+    }
+}
+
 /// The single-queue engine: serial replay of a sharded world, one
 /// globally-minimal event at a time. Reference semantics for
 /// [`run_sharded`] — the equivalence suite holds the two byte-identical.
@@ -652,8 +709,27 @@ where
     S: SiteShard<Event = E>,
     E: ShardEvent + Send,
 {
+    run_sharded_profiled(control, sites, q, horizon, threads).0
+}
+
+/// [`run_sharded`] with a wall-clock [`EngineProfile`]: same event
+/// stream, same return time, plus the barrier/window timing breakdown.
+/// The profile never feeds back into the simulation.
+pub fn run_sharded_profiled<C, S, E>(
+    control: &mut C,
+    sites: &mut [S],
+    q: &mut ShardedQueue<E>,
+    horizon: SimTime,
+    threads: usize,
+) -> (SimTime, EngineProfile)
+where
+    C: ControlPlane<Site = S>,
+    S: SiteShard<Event = E>,
+    E: ShardEvent + Send,
+{
     assert_eq!(sites.len() + 1, q.shards.len(),
                "one site state per site shard");
+    let mut prof = EngineProfile::default();
     loop {
         let Some((at, shard)) = q.peek() else { break };
         if at.0 > horizon.0 {
@@ -661,7 +737,10 @@ where
         }
         if shard == 0 {
             let (t, ev) = q.pop_from(0).expect("peeked event vanished");
+            let b0 = std::time::Instant::now();
             control.handle(sites, t, ev, q);
+            prof.barrier_wall_s += b0.elapsed().as_secs_f64();
+            prof.barrier_events += 1;
             continue;
         }
         let lookahead = control.lookahead().max(0.0);
@@ -678,14 +757,20 @@ where
             // Zero lookahead: the window is empty — fall back to exact
             // single-queue stepping of the front event.
             step_site(sites, q, shard, lookahead);
+            prof.serial_steps += 1;
             continue;
         }
         // Parallel site window [t_start, barrier).
         let workers = threads.max(1).min(sites.len());
+        if workers > prof.workers {
+            prof.workers = workers;
+        }
         let chunk = sites.len().div_ceil(workers);
         let horizon_t = horizon.0;
         let mut emissions: Vec<ControlEmission<E>> = Vec::new();
         let mut max_t = f64::NEG_INFINITY;
+        let mut busiest = 0.0f64;
+        let w0 = std::time::Instant::now();
         {
             let (_control_shard, site_heaps) = q.shards.split_at_mut(1);
             std::thread::scope(|scope| {
@@ -697,6 +782,7 @@ where
                 {
                     let base = ci * chunk;
                     handles.push(scope.spawn(move || {
+                        let d0 = std::time::Instant::now();
                         let mut out: Vec<ControlEmission<E>> = Vec::new();
                         let mut last = f64::NEG_INFINITY;
                         for (k, (site, heap)) in site_chunk
@@ -717,25 +803,32 @@ where
                                 last = l;
                             }
                         }
-                        (last, out)
+                        (last, out, d0.elapsed().as_secs_f64())
                     }));
                 }
                 for h in handles {
-                    let (last, out) =
+                    let (last, out, drain_s) =
                         h.join().expect("site shard worker panicked");
                     if last > max_t {
                         max_t = last;
                     }
+                    if drain_s > busiest {
+                        busiest = drain_s;
+                    }
+                    prof.worker_wall_s += drain_s;
                     emissions.extend(out);
                 }
             });
         }
+        prof.window_wall_s += w0.elapsed().as_secs_f64();
+        prof.busiest_shard_wall_s += busiest;
+        prof.windows += 1;
         if max_t > q.now.0 {
             q.now = SimTime(max_t);
         }
         flush_control(q, emissions);
     }
-    q.now()
+    (q.now(), prof)
 }
 
 // ---------------------------------------------------------------------
@@ -820,14 +913,23 @@ fn steal_worker<'a, S, E>(
     cv: &Condvar,
     horizon: f64,
     lookahead: f64,
-) -> (f64, Vec<ControlEmission<E>>)
+) -> (f64, Vec<ControlEmission<E>>, StealWorkerStats)
 where
     S: SiteShard<Event = E>,
     E: ShardEvent + Send,
 {
     let mut out: Vec<ControlEmission<E>> = Vec::new();
     let mut last = f64::NEG_INFINITY;
-    while let Some(mut chain) = steal_next(state, cv) {
+    let mut stats = StealWorkerStats::default();
+    loop {
+        let w0 = std::time::Instant::now();
+        let Some(mut chain) = steal_next(state, cv) else {
+            stats.wait_s += w0.elapsed().as_secs_f64();
+            break;
+        };
+        stats.wait_s += w0.elapsed().as_secs_f64();
+        stats.chains += 1;
+        let b0 = std::time::Instant::now();
         while chain.next < chain.bounds.len() {
             let end = chain.bounds[chain.next];
             let l = drain_window(chain.site, chain.heap, chain.shard, end,
@@ -837,6 +939,7 @@ where
             }
             chain.next += 1;
         }
+        stats.busy_s += b0.elapsed().as_secs_f64();
         let mut g = state.lock().expect("steal state poisoned");
         g.active -= 1;
         if g.active == 0 {
@@ -844,7 +947,17 @@ where
             cv.notify_all();
         }
     }
-    (last, out)
+    (last, out, stats)
+}
+
+/// Per-worker wall-clock tallies from one stealing window: time spent
+/// draining chains, time blocked on the injector, chains stolen.
+/// Profiler-only — never read by the simulation.
+#[derive(Debug, Clone, Copy, Default)]
+struct StealWorkerStats {
+    busy_s: f64,
+    wait_s: f64,
+    chains: u64,
 }
 
 /// The work-stealing parallel engine: identical window/barrier
@@ -865,8 +978,28 @@ where
     S: SiteShard<Event = E>,
     E: ShardEvent + Send,
 {
+    run_sharded_stealing_profiled(control, sites, q, horizon, cfg).0
+}
+
+/// [`run_sharded_stealing`] with a wall-clock [`EngineProfile`]: same
+/// event stream, same return time, plus chain counts and injector-wait
+/// timing on top of the barrier/window breakdown. The profile never
+/// feeds back into the simulation.
+pub fn run_sharded_stealing_profiled<C, S, E>(
+    control: &mut C,
+    sites: &mut [S],
+    q: &mut ShardedQueue<E>,
+    horizon: SimTime,
+    cfg: StealConfig,
+) -> (SimTime, EngineProfile)
+where
+    C: ControlPlane<Site = S>,
+    S: SiteShard<Event = E>,
+    E: ShardEvent + Send,
+{
     assert_eq!(sites.len() + 1, q.shards.len(),
                "one site state per site shard");
+    let mut prof = EngineProfile::default();
     loop {
         let Some((at, shard)) = q.peek() else { break };
         if at.0 > horizon.0 {
@@ -874,7 +1007,10 @@ where
         }
         if shard == 0 {
             let (t, ev) = q.pop_from(0).expect("peeked event vanished");
+            let b0 = std::time::Instant::now();
             control.handle(sites, t, ev, q);
+            prof.barrier_wall_s += b0.elapsed().as_secs_f64();
+            prof.barrier_events += 1;
             continue;
         }
         let lookahead = control.lookahead().max(0.0);
@@ -890,11 +1026,14 @@ where
         if barrier <= t_start {
             // Zero lookahead: fall back to exact single-queue stepping.
             step_site(sites, q, shard, lookahead);
+            prof.serial_steps += 1;
             continue;
         }
         let horizon_t = horizon.0;
         let mut emissions: Vec<ControlEmission<E>> = Vec::new();
         let mut max_t = f64::NEG_INFINITY;
+        let mut busiest = 0.0f64;
+        let w0 = std::time::Instant::now();
         {
             let (_control_shard, site_heaps) = q.shards.split_at_mut(1);
             // One chain per shard with work in this window, each
@@ -919,8 +1058,13 @@ where
                 });
             }
             let workers = cfg.threads.max(1).min(chains.len());
+            if workers > prof.workers {
+                prof.workers = workers;
+            }
             if workers <= 1 {
                 // One worker: drain each chain's whole window in place.
+                let n_chains = chains.len() as u64;
+                let d0 = std::time::Instant::now();
                 for c in chains {
                     let l = drain_window(c.site, c.heap, c.shard, barrier,
                                          horizon_t, lookahead,
@@ -929,6 +1073,10 @@ where
                         max_t = l;
                     }
                 }
+                let drain_s = d0.elapsed().as_secs_f64();
+                prof.chains_executed += n_chains;
+                prof.worker_wall_s += drain_s;
+                busiest = drain_s;
             } else {
                 let active = chains.len();
                 let state = Mutex::new(StealState { ready: chains, active });
@@ -941,22 +1089,31 @@ where
                         }));
                     }
                     for h in handles {
-                        let (last, out) =
+                        let (last, out, stats) =
                             h.join().expect("steal worker panicked");
                         if last > max_t {
                             max_t = last;
                         }
+                        if stats.busy_s > busiest {
+                            busiest = stats.busy_s;
+                        }
+                        prof.worker_wall_s += stats.busy_s;
+                        prof.injector_wait_s += stats.wait_s;
+                        prof.chains_executed += stats.chains;
                         emissions.extend(out);
                     }
                 });
             }
         }
+        prof.window_wall_s += w0.elapsed().as_secs_f64();
+        prof.busiest_shard_wall_s += busiest;
+        prof.windows += 1;
         if max_t > q.now.0 {
             q.now = SimTime(max_t);
         }
         flush_control(q, emissions);
     }
-    q.now()
+    (q.now(), prof)
 }
 
 /// A sensible worker count: one thread per site shard, capped by the

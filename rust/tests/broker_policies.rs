@@ -21,6 +21,10 @@
 //!    run — proven the same way `SlaRank` was proven against the
 //!    legacy `select_site`, and again over whole fault-free cluster
 //!    runs.
+//! 6. The observability layer is **invisible** to all of the above:
+//!    on randomized chaos runs the merged trace and metrics streams
+//!    are byte-identical across all three engines, and enabling them
+//!    never changes a determinism digest.
 
 use evhc::broker::{ElasticityBroker, PolicyKind, ScenarioPlan};
 use evhc::cloudsim::{CloudSite, FailureModel, Granularity, InstanceType,
@@ -29,6 +33,7 @@ use evhc::cloudsim::{CloudSite, FailureModel, Granularity, InstanceType,
 use evhc::cluster::{Engine, HybridCluster, RunConfig, RunReport,
                     WanFaultPlan};
 use evhc::netsim::NetId;
+use evhc::obs::ObsConfig;
 use evhc::orchestrator::{select_site, Sla};
 use evhc::sim::SimTime;
 use evhc::util::proptest::{check, check_n};
@@ -730,4 +735,92 @@ fn fault_plan_validation_rejects_bad_targets() {
         .err()
         .expect("must reject");
     assert!(err.to_string().contains("front end"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Property: deterministic observability (trace/metrics streams)
+// ---------------------------------------------------------------------
+
+/// Tracing and metrics on a randomized chaos run export byte-identical
+/// streams from all three engines: every span and instant is emitted
+/// at a deterministic `(time, shard, seq)` position, so the merged
+/// Chrome trace JSON, the trace CSV and the metrics CSV never depend
+/// on how the run was parallelized. The JSON must also parse.
+#[test]
+fn trace_streams_are_byte_identical_across_engines() {
+    check_n("obs streams (serial ≡ sharded ≡ stealing)", cases(5),
+            chaos_case, |case| {
+        let run = |engine: Engine| -> Result<RunReport, String> {
+            let mut cfg = chaos_cfg(case, engine);
+            cfg.obs = ObsConfig::enabled();
+            HybridCluster::new(cfg)
+                .map_err(|e| e.to_string())?
+                .run()
+                .map_err(|e| e.to_string())
+        };
+        let reference = run(Engine::Serial)?;
+        let trace = reference
+            .trace
+            .as_ref()
+            .ok_or("serial run recorded no trace")?;
+        let metrics = reference
+            .metrics
+            .as_ref()
+            .ok_or("serial run sampled no metrics")?;
+        if trace.is_empty() || metrics.is_empty() {
+            return Err("empty observability streams".to_string());
+        }
+        let json = trace.to_chrome_json();
+        evhc::api::json::parse(&json)
+            .map_err(|e| format!("invalid chrome trace JSON: {e:?}"))?;
+        let csv = trace.to_csv();
+        let mcsv = metrics.to_csv();
+        for engine in [Engine::Sharded { threads: 0 },
+                       Engine::Stealing { threads: 0 }] {
+            let r = run(engine)?;
+            let tr = r.trace.as_ref().ok_or("missing trace")?;
+            let m = r.metrics.as_ref().ok_or("missing metrics")?;
+            if tr.to_chrome_json() != json || tr.to_csv() != csv {
+                return Err(format!("{} trace diverged",
+                                   engine.label()));
+            }
+            if m.to_csv() != mcsv {
+                return Err(format!("{} metrics diverged",
+                                   engine.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Enabling observability cannot perturb the simulation: on every
+/// engine, the determinism digest of a traced chaos run equals the
+/// digest of the identical run with recording off.
+#[test]
+fn trace_recording_is_digest_neutral() {
+    check_n("obs digest-neutrality", cases(3), chaos_case, |case| {
+        for engine in [Engine::Serial, Engine::Sharded { threads: 0 },
+                       Engine::Stealing { threads: 0 }] {
+            let run = |obs: bool| -> Result<RunReport, String> {
+                let mut cfg = chaos_cfg(case, engine);
+                if obs {
+                    cfg.obs = ObsConfig::enabled();
+                }
+                HybridCluster::new(cfg)
+                    .map_err(|e| e.to_string())?
+                    .run()
+                    .map_err(|e| e.to_string())
+            };
+            let off = run(false)?;
+            let on = run(true)?;
+            if on.determinism_digest() != off.determinism_digest() {
+                return Err(format!("tracing perturbed the {} digest",
+                                   engine.label()));
+            }
+            if on.trace.is_none() || on.metrics.is_none() {
+                return Err("traced run returned no streams".to_string());
+            }
+        }
+        Ok(())
+    });
 }
