@@ -1,13 +1,15 @@
 #!/usr/bin/env bash
 # Staged CI pipeline.
 #
-#   ./ci.sh                 # full pipeline: fmt lint build test chaos chaos-sweep obs bench compare
+#   ./ci.sh                 # full pipeline: fmt lint build doc test chaos chaos-sweep obs bench compare
 #   ./ci.sh <stage> [...]   # run the named stage(s) in the given order
 #
 # Stages:
 #   fmt            cargo fmt --all -- --check   (skips if rustfmt missing)
 #   lint           cargo clippy -D warnings     (skips if clippy missing)
 #   build          cargo build --release
+#   doc            cargo doc --no-deps with RUSTDOCFLAGS="-D warnings"
+#                  (skips if the toolchain is missing)
 #   test           cargo test -q, plus quick re-drives of the broker
 #                  scenario suite and the shard-equivalence properties
 #                  with a reduced EVHC_PROPTEST_CASES budget
@@ -60,6 +62,18 @@ stage_build() {
     cargo build --release
 }
 
+stage_doc() {
+    # The public-API rustdoc is part of the deliverable (the
+    # architecture layer links into it); broken intra-doc links or
+    # malformed doc comments fail the pipeline, not just look ugly.
+    echo "== doc: cargo doc --no-deps (rustdoc warnings are errors) =="
+    if ! cargo --version >/dev/null 2>&1; then
+        echo "SKIP: cargo not installed"
+        return 0
+    fi
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+}
+
 stage_test() {
     echo "== test: cargo test -q =="
     cargo test -q
@@ -71,6 +85,8 @@ stage_test() {
     EVHC_PROPTEST_CASES=24 cargo test -q --test broker_policies scenario
     echo "== test: shard equivalence properties (quick mode) =="
     EVHC_PROPTEST_CASES=12 cargo test -q --test shard_equivalence prop_
+    echo "== test: partitioned dispatch properties (quick mode) =="
+    EVHC_PROPTEST_CASES=4 cargo test -q --test partitioned_dispatch prop_
 }
 
 stage_chaos() {
@@ -170,6 +186,7 @@ run_stage() {
         fmt)           stage_fmt ;;
         lint)          stage_lint ;;
         build)         stage_build ;;
+        doc)           stage_doc ;;
         test)          stage_test ;;
         chaos)         stage_chaos ;;
         chaos-sweep)   stage_chaos_sweep ;;
@@ -179,15 +196,15 @@ run_stage() {
         seed-baseline) stage_seed_baseline ;;
         *)
             echo "unknown stage: $1" >&2
-            echo "stages: fmt lint build test chaos chaos-sweep obs" \
-                 "bench compare seed-baseline" >&2
+            echo "stages: fmt lint build doc test chaos chaos-sweep" \
+                 "obs bench compare seed-baseline" >&2
             return 2
             ;;
     esac
 }
 
 if [ "$#" -eq 0 ]; then
-    set -- fmt lint build test chaos chaos-sweep obs bench compare
+    set -- fmt lint build doc test chaos chaos-sweep obs bench compare
 fi
 for stage in "$@"; do
     run_stage "$stage"

@@ -56,8 +56,8 @@ use std::time::Instant;
 
 use evhc::api::json::Json;
 use evhc::broker::{PolicyKind, ScenarioPlan};
-use evhc::cluster::{Engine, HybridCluster, RetryPolicy, RunConfig,
-                    RunReport, WanFaultPlan};
+use evhc::cluster::{DispatchMode, Engine, HybridCluster, RetryPolicy,
+                    RunConfig, RunReport, WanFaultPlan};
 use evhc::ids::NodeNames;
 use evhc::orchestrator::Sla;
 use evhc::lrms::core::{BatchCore, Placement};
@@ -492,7 +492,7 @@ fn stealing_section(quick: bool) -> Json {
         // Fewer workers than sites: exactly the regime where the hot
         // shard serializes behind its static chunk without stealing.
         let threads = (sc.sites() as usize / 2).max(2);
-        let cfg = StealConfig { threads };
+        let cfg = StealConfig::new(threads);
         println!("\n--- {} ({} sites, hot x{}, {} jobs, {threads} \
                   threads) ---",
                  sc.name, sc.sites(), sc.hot_mul, sc.total_jobs());
@@ -1079,6 +1079,32 @@ fn cluster_run(sc: &ClusterScale, engine: Engine,
     (report, m)
 }
 
+/// [`cluster_run`] under [`DispatchMode::Partitioned`]: scheduling
+/// inside the site shards, the control plane reduced to block routing
+/// and spillover arbitration.
+fn cluster_run_partitioned(sc: &ClusterScale, engine: Engine)
+    -> (RunReport, Measured) {
+    let wall = Instant::now();
+    let mut cfg = cluster_cfg(sc, engine, None);
+    cfg.dispatch = DispatchMode::Partitioned;
+    let report = HybridCluster::new(cfg)
+        .expect("cluster world")
+        .run()
+        .expect("cluster run");
+    let wall_s = wall.elapsed().as_secs_f64();
+    assert_eq!(report.jobs_completed, sc.jobs(),
+               "partitioned cluster run must drain the workload ({})",
+               sc.name);
+    let m = Measured {
+        events: report.events,
+        wall_s,
+        events_per_sec: report.events as f64 / wall_s.max(1e-9),
+        ms_per_tick: 0.0,
+        completed: report.jobs_completed,
+    };
+    (report, m)
+}
+
 fn cluster_section(quick: bool) -> Json {
     let scales: Vec<ClusterScale> = if quick {
         vec![ClusterScale { name: "paper-200n-4s", nodes: 200, sites: 4,
@@ -1144,12 +1170,42 @@ fn cluster_section(quick: bool) -> Json {
                    f11, "streamed fig11 diverged on {}", sc.name);
         let _ = std::fs::remove_dir_all(&dir);
 
+        // Partitioned dispatch: scheduling inside the site shards, the
+        // control plane reduced to routing + spill arbitration. The
+        // three engines must replay byte-identically *within* the
+        // mode; the two modes' timelines legitimately differ (block
+        // routing, WAN report lag), so there is no cross-mode digest
+        // compare — completion-set equivalence lives in
+        // `tests/partitioned_dispatch.rs`.
+        let (rp_serial, mp_serial) =
+            cluster_run_partitioned(sc, Engine::Serial);
+        report_line("part-serial", &mp_serial);
+        let (rp_sharded, mp_sharded) =
+            cluster_run_partitioned(sc, Engine::Sharded { threads: 0 });
+        assert_eq!(rp_sharded.determinism_digest(),
+                   rp_serial.determinism_digest(),
+                   "partitioned sharded replay diverged on {}", sc.name);
+        report_line("part-sharded", &mp_sharded);
+        let (rp_steal, mp_steal) =
+            cluster_run_partitioned(sc, Engine::Stealing { threads: 0 });
+        assert_eq!(rp_steal.determinism_digest(),
+                   rp_serial.determinism_digest(),
+                   "partitioned stealing replay diverged on {}",
+                   sc.name);
+        report_line("part-stealing", &mp_steal);
+
         let sharded_speedup = m_sharded.events_per_sec
             / m_serial.events_per_sec.max(1e-9);
         let steal_speedup = m_steal.events_per_sec
             / m_serial.events_per_sec.max(1e-9);
         println!("  engine speedup     sharded {sharded_speedup:.2}x  \
                   stealing {steal_speedup:.2}x (vs serial)");
+        let part_sharded_speedup = mp_sharded.events_per_sec
+            / mp_serial.events_per_sec.max(1e-9);
+        let part_steal_speedup = mp_steal.events_per_sec
+            / mp_serial.events_per_sec.max(1e-9);
+        println!("  partitioned        sharded {part_sharded_speedup:.2}x  \
+                  stealing {part_steal_speedup:.2}x (vs part-serial)");
 
         rows.push(Json::Object(vec![
             ("name".into(), Json::Str(sc.name.into())),
@@ -1160,10 +1216,17 @@ fn cluster_section(quick: bool) -> Json {
             ("sharded".into(), measured_json(&m_sharded)),
             ("stealing".into(), measured_json(&m_steal)),
             ("stealing_spill".into(), measured_json(&m_spill)),
+            ("partitioned_serial".into(), measured_json(&mp_serial)),
+            ("partitioned_sharded".into(), measured_json(&mp_sharded)),
+            ("partitioned_stealing".into(), measured_json(&mp_steal)),
             ("speedup_sharded_vs_serial".into(),
              Json::Num(sharded_speedup)),
             ("speedup_stealing_vs_serial".into(),
              Json::Num(steal_speedup)),
+            ("speedup_partitioned_sharded_vs_serial".into(),
+             Json::Num(part_sharded_speedup)),
+            ("speedup_partitioned_stealing_vs_serial".into(),
+             Json::Num(part_steal_speedup)),
         ]));
     }
     Json::Array(rows)

@@ -48,6 +48,14 @@
 //!   exactly 0.0), so fault-free decisions are bit-identical to the
 //!   health-blind policies.
 //!
+//! * **Workload routing** — under partitioned dispatch (see
+//!   `cluster::dispatch`) the broker also ranks sites for *job-block*
+//!   routing via [`ElasticityBroker::route_candidates`]: the same
+//!   policy scoring and the same availability gate (outages and
+//!   quarantines force availability to 0), but without the
+//!   VM-provisioning eligibility checks — routing places queue blocks
+//!   on capacity that already exists.
+//!
 //! The front-end placement always uses the SLA ranking (the front end
 //! is the cluster's fixed point — the paper deploys it at the home
 //! site); the configured policy governs the elastic workers.
@@ -414,6 +422,34 @@ impl ElasticityBroker {
         ranked
     }
 
+    /// Rank sites as *job-block routing* targets for the partitioned
+    /// dispatcher, best first. Unlike
+    /// [`ranked_candidates`](Self::ranked_candidates) — which gates on
+    /// the per-VM provisioning limits (VM/vCPU quota, SLA headroom) —
+    /// routing a job to capacity a site already has only requires the
+    /// site to be reachable: the sole gate is the availability floor,
+    /// which folds in scenario outages and circuit-breaker quarantines.
+    /// Read-only and deterministic for fixed inputs.
+    pub fn route_candidates<S: AsRef<CloudSite>>(
+        &self, sites: &[S], used_per_site: &[u32], queue_depth: u32)
+        -> Vec<usize> {
+        let mut ranked: Vec<(usize, Score)> = Vec::new();
+        for i in 0..sites.len() {
+            let sig = self.signals(i, sites, used_per_site, queue_depth);
+            if sig.availability < MIN_AVAILABILITY {
+                continue;
+            }
+            ranked.push((i, self.policy.score(i, &self.table, &sig)));
+        }
+        ranked.sort_by(|a, b| {
+            a.1.primary
+                .total_cmp(&b.1.primary)
+                .then(a.1.secondary.total_cmp(&b.1.secondary))
+                .then(a.1.tiebreak.cmp(&b.1.tiebreak))
+        });
+        ranked.into_iter().map(|(i, _)| i).collect()
+    }
+
     /// Pick the site for one new worker under the configured policy.
     pub fn select<S: AsRef<CloudSite>>(&mut self, sites: &[S],
                                        used_per_site: &[u32], cpus: u32,
@@ -673,6 +709,31 @@ mod tests {
                                       &[true, false]), Some(1));
         assert_eq!(b.select_excluding(&sites, &used, 2, 0, t(2.0),
                                       &[true, true]), None);
+    }
+
+    #[test]
+    fn route_candidates_gate_on_reachability_only() {
+        let sites = paper_sites();
+        let slas = vec![
+            Sla { site_name: "CESNET-MCC".into(), priority: 0,
+                  max_instances: Some(2) },
+            Sla { site_name: "AWS".into(), priority: 1,
+                  max_instances: None },
+        ];
+        let mut b = broker(PolicyKind::SlaRank, &sites, &slas);
+        // SLA headroom exhausted at the home site: provisioning skips
+        // it, but job blocks still route to the capacity it has — and
+        // it still ranks first.
+        assert_eq!(b.select(&sites, &[2, 0], 2, 0, t(0.0)), Some(1));
+        assert_eq!(b.route_candidates(&sites, &[2, 0], 0), vec![0, 1]);
+        // Quarantine and outage are the only gates.
+        b.set_quarantine(0, true);
+        assert_eq!(b.route_candidates(&sites, &[2, 0], 0), vec![1]);
+        b.set_outage(1, true);
+        assert!(b.route_candidates(&sites, &[2, 0], 0).is_empty());
+        b.set_quarantine(0, false);
+        b.set_outage(1, false);
+        assert_eq!(b.route_candidates(&sites, &[2, 0], 0), vec![0, 1]);
     }
 
     #[test]

@@ -32,6 +32,9 @@ use crate::util::prng::Prng;
 use crate::vrouter::Overlay;
 use crate::workload::Workload;
 
+use super::dispatch::{DispatchJob, DispatchLrmsView, DispatchMode,
+                      DispatchRun, Dispatcher, DoneOutcome,
+                      StartOutcome};
 use super::faults::{ResolvedWindow, SiteHealthTracker};
 use super::{Ev, RunConfig, SiteWorld, FE_NAME};
 
@@ -127,6 +130,12 @@ pub struct ControlWorld {
     pub im: Im,
     /// Multi-site elasticity broker (owns grow-to-which-site).
     pub broker: ElasticityBroker,
+    /// Partitioned-dispatch route queue + lease table (`Some` iff
+    /// `cfg.dispatch == DispatchMode::Partitioned`). When present,
+    /// sites schedule their own jobs and the central `lrms` tracks
+    /// only node membership and health; every queue-depth read goes
+    /// through [`Dispatcher::unplaced`] / [`DispatchLrmsView`].
+    pub(crate) dispatch: Option<Dispatcher>,
     /// The control shard's metrics stream.
     pub(crate) recorder: Recorder,
     /// The control shard's causal-trace sink (shard 0). Off — and
@@ -267,6 +276,8 @@ impl ControlWorld {
             SiteHealthTracker::new(cfg.retry.quarantine_after);
             n_sites
         ];
+        let dispatch = (cfg.dispatch == DispatchMode::Partitioned)
+            .then(|| Dispatcher::new(n_sites));
         ControlWorld {
             cfg,
             net,
@@ -276,6 +287,7 @@ impl ControlWorld {
             engine,
             im,
             broker,
+            dispatch,
             recorder,
             trace,
             metrics,
@@ -514,7 +526,7 @@ impl ControlWorld {
                         t: SimTime) -> bool {
         let used = self.used_workers_per_site();
         let cpus = self.cfg.template.worker.num_cpus;
-        let queue_depth = self.lrms.pending() as u32;
+        let queue_depth = self.pending_depth() as u32;
         // Under chaos, WAN-partitioned sites are masked out: a command
         // sent into a partition would vanish.
         let excluded: Option<Vec<bool>> = (self.cfg.template.hybrid
@@ -745,7 +757,7 @@ impl ControlWorld {
     /// passive: reads only, so digests are untouched.
     fn sample_metrics(&mut self, sites: &[SiteWorld], t: SimTime) {
         self.metrics.sample_cluster(t, "queue_depth",
-                                    self.lrms.pending() as f64);
+                                    self.pending_depth() as f64);
         self.metrics.sample_cluster(t, "jobs_completed",
                                     self.jobs_completed as f64);
         let mut joined = vec![0u32; self.n_sites];
@@ -821,6 +833,19 @@ impl ControlWorld {
                 }
             }
             self.recorder.node_state_id(t, id, DisplayState::Failed);
+        }
+        if let Some(d) = self.dispatch.as_mut() {
+            // Partitioned: revoke every lease the quarantined site
+            // holds. The jobs re-route elsewhere under a fresh epoch
+            // (at this event's barrier tail), so everything the dark
+            // site still reports about them — including a zombie
+            // completion — is stale on arrival.
+            let revoked = d.reroute_site(s, t.0);
+            for j in revoked {
+                if self.chaos_pending.insert(j) {
+                    self.lease_requeued += 1;
+                }
+            }
         }
         self.pump_jobs(q, t);
     }
@@ -1120,6 +1145,23 @@ impl ControlWorld {
         if rt.site >= sites.len() {
             return false; // placeholder: no site chosen, no VM yet
         }
+        if self.dispatch.is_some() {
+            // Partitioned: the site owns the node's scheduler slice,
+            // so the reclaim rides its shard as an immediate forced
+            // crash. The site crashes the VM, requeues or spills its
+            // local jobs, and reports `NodeLost { preempted: true }`,
+            // whose handler does the central teardown and the
+            // preemption accounting exactly once.
+            let name = self.names.name(node);
+            self.recorder.milestone(t, format!("{name} {reason}"));
+            q.schedule_in(0.0, Ev::CrashTimer {
+                site: rt.site,
+                vm: rt.vm,
+                node,
+                preempt: true,
+            });
+            return true;
+        }
         if sites[rt.site].cloud.crash_vm(rt.vm, t).is_err() {
             // Already Terminating/Terminated: the in-flight
             // decommission owns the ledger close and update.
@@ -1179,19 +1221,48 @@ impl ControlWorld {
             node, SimTime(t.0 - self.workload_t0.0))
     }
 
+    /// Cluster-wide pending depth: the central LRMS queue, or the
+    /// dispatcher's unplaced count in partitioned mode (queued at the
+    /// control plane or leased but not yet started at a site).
+    fn pending_depth(&self) -> usize {
+        match self.dispatch.as_ref() {
+            None => self.lrms.pending(),
+            Some(d) => d.unplaced(),
+        }
+    }
+
     /// One CLUES monitor pass (no `InjectionPlan` clone: the closure
-    /// borrows the plan for the duration of the tick).
+    /// borrows the plan for the duration of the tick). In partitioned
+    /// mode CLUES polls through the [`DispatchLrmsView`]: membership
+    /// and health from the central LRMS, occupancy and pending depth
+    /// from the dispatcher's lease table.
     fn clues_tick(&mut self, t: SimTime) -> Vec<Action> {
         let w0 = self.workload_t0;
         let inj = &self.cfg.injections;
-        self.clues.tick(t, self.lrms.as_ref(), &|n| {
-            inj.node_reported_down(n, SimTime(t.0 - w0.0))
-        })
+        let down =
+            |n: &str| inj.node_reported_down(n, SimTime(t.0 - w0.0));
+        match self.dispatch.as_ref() {
+            None => self.clues.tick(t, self.lrms.as_ref(), &down),
+            Some(d) => {
+                let view = DispatchLrmsView {
+                    inner: self.lrms.as_ref(),
+                    disp: d,
+                };
+                self.clues.tick(t, &view, &down)
+            }
+        }
     }
 
     /// Run LRMS scheduling and materialize job executions as
     /// site-shard timers.
     fn pump_jobs(&mut self, q: &mut ShardedQueue<Ev>, t: SimTime) {
+        if self.dispatch.is_some() {
+            // Partitioned mode: sites place their own jobs during
+            // their parallel windows; the control plane only routes
+            // blocks ([`Self::dispatch_route`], at the tail of every
+            // control event).
+            return;
+        }
         for (job, node) in self.lrms.schedule(t) {
             let mut secs = Workload::sample_job_secs(&mut self.rng);
             // Scheduled jobs always run on a joined node, whose site is
@@ -1287,6 +1358,169 @@ impl ControlWorld {
             }
         }
         self.pump_jobs(q, t);
+    }
+
+    // ---------------------------------------------------------------
+    // Partitioned dispatch (see `super::dispatch`)
+    // ---------------------------------------------------------------
+
+    /// Process one site's partitioned-dispatch barrier report: accept
+    /// lease-valid execution starts into the occupancy overlay,
+    /// account lease-valid completions exactly once (counters,
+    /// recorder, accounting, trace — the same bookkeeping
+    /// [`Self::apply_job_batch`] does for the central scheduler), and
+    /// requeue accepted spills in report order. Stale entries — zombie
+    /// executions from a lease the dispatcher has since revoked — are
+    /// dropped by the epoch/seq checks inside the dispatcher.
+    fn apply_site_report(&mut self, sites: &mut [SiteWorld],
+                         site: usize, started: Vec<DispatchRun>,
+                         done: Vec<DispatchRun>,
+                         spilled: Vec<DispatchJob>, t: SimTime) {
+        for run in &started {
+            let outcome = self
+                .dispatch
+                .as_mut()
+                .expect("SiteJobReport only exists in partitioned mode")
+                .on_started(site, run);
+            if matches!(outcome, StartOutcome::Fresh { .. })
+                && self.nodes.contains_key(&run.node)
+            {
+                self.recorder.node_state_id(t, run.node,
+                                            DisplayState::Used);
+            }
+        }
+        for run in &done {
+            let outcome = self
+                .dispatch
+                .as_mut()
+                .expect("SiteJobReport only exists in partitioned mode")
+                .on_done(site, run);
+            let DoneOutcome::Completed {
+                started: s0,
+                submitted_at,
+                became_idle,
+            } = outcome else {
+                continue;
+            };
+            self.jobs_completed += 1;
+            if self.preempt_pending.remove(&run.job) {
+                self.preempt_recovered += 1;
+            }
+            if self.chaos_pending.remove(&run.job) {
+                self.lease_recovered += 1;
+            }
+            if became_idle && self.nodes.contains_key(&run.node) {
+                self.recorder.node_state_id(t, run.node,
+                                            DisplayState::Idle);
+            }
+            self.recorder.job_run_id(run.node, s0, run.at);
+            if let Some(&ri) = self.live_record.get(&run.node) {
+                self.vm_records[ri].busy_secs += run.secs;
+            }
+            // The job's full causal chain, emitted now that its
+            // completion has crossed the WAN: queue wait
+            // (submit→start), execution (start→finish), report lag
+            // (finish→report arrival).
+            if self.trace.enabled() {
+                let d = format!("job={} node={}", run.job,
+                                self.names.name(run.node));
+                self.trace.span(t, "job", "job.queue", submitted_at,
+                                s0, d.clone());
+                self.trace.span(t, "job", "job.run", s0, run.at,
+                                d.clone());
+                self.trace.span(t, "job", "job.report-lag", run.at, t,
+                                d);
+            }
+        }
+        // Spills re-enter at the queue front; feeding them in reverse
+        // preserves the report's (submission) order there.
+        let mut accepted = 0usize;
+        for dj in spilled.iter().rev() {
+            let ok = self
+                .dispatch
+                .as_mut()
+                .expect("SiteJobReport only exists in partitioned mode")
+                .on_spilled(site, dj, t.0);
+            if ok {
+                accepted += 1;
+            }
+        }
+        if accepted > 0 {
+            self.recorder.milestone(t, format!(
+                "{} returned {accepted} jobs it cannot hold — \
+                 re-routing", sites[site].cloud.spec.name));
+            if self.trace.enabled() {
+                self.trace.instant(t, "job", "job.spill", format!(
+                    "site={site} jobs={accepted}"));
+            }
+        }
+    }
+
+    /// Route queued jobs to sites (the partitioned dispatcher's only
+    /// placement decision): greedy from the queue front, each job to
+    /// the best-ranked reachable site
+    /// ([`ElasticityBroker::route_candidates`]) with spare *credit* —
+    /// its registered Up-worker slots (central membership view) minus
+    /// the slots already leased to it and not completed — so a site is
+    /// never sent more work than it can plausibly hold. Runs at the
+    /// tail of every control event; one [`Ev::JobBlock`] per receiving
+    /// site, emitted in site-index order.
+    fn dispatch_route(&mut self, q: &mut ShardedQueue<Ev>,
+                      sites: &mut [SiteWorld], t: SimTime,
+                      exclude: Option<usize>) {
+        if !self.dispatch.as_ref().is_some_and(|d| d.queued() > 0) {
+            return;
+        }
+        let mut credit = vec![0i64; self.n_sites];
+        for (&id, rt) in &self.nodes {
+            // Order-insensitive sum over the node map: deterministic.
+            if rt.role != NodeRole::WorkerNode
+                || rt.site >= self.n_sites
+                || rt.joined_at.is_none()
+            {
+                continue;
+            }
+            if let Some(st) = self.lrms.node_stat(id) {
+                if st.health == NodeHealth::Up {
+                    credit[rt.site] += st.slots as i64;
+                }
+            }
+        }
+        let mut d = self.dispatch.take().expect("checked above");
+        for (s, c) in credit.iter_mut().enumerate() {
+            *c -= d.inflight(s) as i64;
+        }
+        let used = self.used_workers_per_site();
+        let order = self.broker.route_candidates(sites, &used,
+                                                 d.queued() as u32);
+        let mut blocks: Vec<Vec<DispatchJob>> =
+            vec![Vec::new(); self.n_sites];
+        while let Some((_, slots)) = d.front() {
+            // Under chaos, WAN-partitioned sites are skipped even
+            // before their breaker opens: a block sent into a
+            // partition would only feed zombie executions.
+            let Some(&s) = order.iter().find(|&&s| {
+                Some(s) != exclude
+                    && !(self.chaos && self.partition_depth[s] > 0)
+                    && credit[s] >= slots as i64
+            }) else {
+                break;
+            };
+            let dj = d.route_front(s);
+            credit[s] -= dj.slots as i64;
+            blocks[s].push(dj);
+        }
+        self.dispatch = Some(d);
+        for (s, jobs) in blocks.into_iter().enumerate() {
+            if jobs.is_empty() {
+                continue;
+            }
+            if self.trace.enabled() {
+                self.trace.instant(t, "job", "job.route", format!(
+                    "site={s} jobs={}", jobs.len()));
+            }
+            q.schedule_in(0.0, Ev::JobBlock { site: s, jobs });
+        }
     }
 
     // ---------------------------------------------------------------
@@ -1429,6 +1663,12 @@ impl ControlWorld {
                         continue;
                     }
                     let _ = self.lrms.deregister_node(name, t);
+                    if let Some(d) = self.dispatch.as_mut() {
+                        // The site slice deregisters it on
+                        // TerminationDone; drop the overlay entry now
+                        // so CLUES stops seeing the node as headroom.
+                        d.drop_node(id);
+                    }
                     match self.im.decommission_node(
                         &mut sites[rt.site].cloud, rt.vm, name, t) {
                         Ok(secs) => {
@@ -1568,6 +1808,21 @@ impl ControlWorld {
                 // Join the LRMS; node becomes schedulable.
                 self.lrms.register_node(
                     &name, self.clues.cfg.slots_per_worker, t);
+                if self.dispatch.is_some() {
+                    // Partitioned: grant the node to its site's
+                    // scheduler slice. The overlay starts idle; the
+                    // grant rides the site shard like any other
+                    // control command.
+                    let slots = self.clues.cfg.slots_per_worker;
+                    if let Some(d) = self.dispatch.as_mut() {
+                        d.grant_node(node, t.0);
+                    }
+                    q.schedule_in(0.0, Ev::SiteNodeUp {
+                        site,
+                        node,
+                        slots,
+                    });
+                }
                 self.clues.track_id(node, PowerState::On);
                 self.clues.set_state_id(node, PowerState::On);
                 self.recorder.node_state_id(t, node,
@@ -1618,6 +1873,7 @@ impl ControlPlane for ControlWorld {
                 | Ev::NodeLost { site, .. }
                 | Ev::NodeOff { site, .. }
                 | Ev::JobBatch { site, .. }
+                | Ev::SiteJobReport { site, .. }
                 | Ev::SiteHeartbeat { site } => {
                     let s = *site;
                     self.note_site_alive(q, sites, s, t);
@@ -1625,6 +1881,15 @@ impl ControlPlane for ControlWorld {
                 _ => {}
             }
         }
+        // Partitioned dispatch: a site whose report spilled work is
+        // excluded from the re-route its own report triggers — it just
+        // proved it cannot hold the jobs (captured here, before the
+        // match consumes `ev`).
+        let route_exclude = match &ev {
+            Ev::SiteJobReport { site, spilled, .. }
+                if !spilled.is_empty() => Some(*site),
+            _ => None,
+        };
         match ev {
             Ev::Deploy => {
                 self.engine.submit(UpdateOp::InitialDeploy, t);
@@ -1635,7 +1900,12 @@ impl ControlPlane for ControlWorld {
                 let jobs = self.cfg.workload.blocks[i].jobs;
                 // One bulk core call per block (a 100k-job block is a
                 // single submit), not one trait dispatch per job.
-                self.lrms.submit_batch(jobs, 1, t);
+                match self.dispatch.as_mut() {
+                    None => self.lrms.submit_batch(jobs, 1, t),
+                    // Partitioned: the block enters the route queue and
+                    // is leased out at this event's barrier tail.
+                    Some(d) => d.submit(jobs, 1, t),
+                }
                 self.jobs_submitted += jobs;
                 self.recorder.milestone(t, format!(
                     "block {} submitted: {jobs} jobs", i + 1));
@@ -1695,6 +1965,11 @@ impl ControlPlane for ControlWorld {
 
             Ev::JobBatch { done, .. } => {
                 self.apply_job_batch(q, done, t);
+            }
+
+            Ev::SiteJobReport { site, started, done, spilled } => {
+                self.apply_site_report(sites, site, started, done,
+                                       spilled, t);
             }
 
             Ev::CluesTick => {
@@ -1798,6 +2073,15 @@ impl ControlPlane for ControlWorld {
                     .unwrap_or_default();
                 if let Ok(more) = self.lrms.deregister_node(&name, t) {
                     requeued.extend(more);
+                }
+                if let Some(d) = self.dispatch.as_mut() {
+                    // Partitioned: the site already requeued the
+                    // node's jobs into its local queue (the restart
+                    // rebinds under a higher seq) or spilled them; the
+                    // control side only tracks them for the recovery
+                    // metric and drops the occupancy overlay.
+                    requeued.extend(d.jobs_bound_to(node));
+                    d.drop_node(node);
                 }
                 if preempted {
                     for j in requeued {
@@ -1945,7 +2229,7 @@ impl ControlPlane for ControlWorld {
                 let name = self.names.name(node);
                 let used = self.used_workers_per_site();
                 let cpus = self.cfg.template.worker.num_cpus;
-                let queue_depth = self.lrms.pending() as u32;
+                let queue_depth = self.pending_depth() as u32;
                 let site = if self.cfg.template.hybrid {
                     let mut excluded: Vec<bool> = (0..self.n_sites)
                         .map(|s| self.partition_depth[s] > 0
@@ -2078,9 +2362,18 @@ impl ControlPlane for ControlWorld {
             | Ev::CrashTimer { .. }
             | Ev::TerminationDone { .. }
             | Ev::HeartbeatPing { .. }
-            | Ev::Retransmit { .. } => {
+            | Ev::Retransmit { .. }
+            | Ev::JobBlock { .. }
+            | Ev::SiteNodeUp { .. } => {
                 unreachable!("site event routed to the control shard")
             }
+        }
+        // Partitioned dispatch: any control event may have queued work
+        // (block submission, spillover, lease revocation) or freed
+        // credit (completions, node joins), so route at the barrier
+        // tail — the one place leases are ever granted.
+        if self.dispatch.is_some() {
+            self.dispatch_route(q, sites, t, route_exclude);
         }
     }
 }

@@ -1,0 +1,988 @@
+//! Partitioned LRMS dispatch: site-sharded scheduling behind a thin
+//! control-plane arbiter.
+//!
+//! The paper's cluster distributes *nodes* across cloud sites but keeps
+//! one central LRMS placing every job, and the centralized
+//! [`crate::cluster::ControlWorld`] reproduces that faithfully — at the
+//! cost of control-coupling the whole workload: every placement is a
+//! control-shard decision, so the parallel engines run at window
+//! overhead parity with serial. This module is the partitioned
+//! alternative ([`DispatchMode::Partitioned`]): each
+//! [`crate::cluster::SiteWorld`] owns a [`SiteSched`] — a private
+//! [`BatchCore`] slice over its local nodes that places jobs during the
+//! site's parallel window — and the control plane shrinks to a
+//! [`Dispatcher`] that only
+//!
+//! 1. routes workload-queue blocks to sites (broker-ranked,
+//!    health/quarantine-aware, credit-bounded so a site is never sent
+//!    more work than its registered capacity), and
+//! 2. arbitrates cross-site spillover at barriers: jobs a site cannot
+//!    hold are returned in its barrier emission
+//!    (`Ev::SiteJobReport::spilled`) and re-routed.
+//!
+//! ## Two-phase leases — no job is ever double-placed
+//!
+//! The dispatcher tracks one lease per job. Routing a job to a site
+//! bumps its *epoch*; every site report (start, completion, spill)
+//! echoes the epoch it was leased under, and the dispatcher accepts a
+//! report only if it matches the job's current lease. Re-routing a job
+//! away (quarantine, preemption) therefore makes every in-flight report
+//! from the old site *stale*: a quarantined site can keep executing its
+//! zombie copy to the end, and the completion is simply dropped — the
+//! job counts exactly once, at the site that holds the current lease.
+//! Within one lease, executions are ordered by a site-local *seq*
+//! (crash → local requeue → restart produces a higher seq), so a
+//! duplicated or reordered WAN delivery can never rewind the binding:
+//! starts are accepted only with `seq > last_seq`, completions only
+//! with `seq >= last_seq`.
+//!
+//! Determinism: the dispatcher runs only at control barriers, the site
+//! slices only inside their own shard windows, and every map iteration
+//! either folds an order-insensitive sum or walks the dense job table
+//! in id order — so Serial/Sharded/Stealing replays stay byte-identical
+//! (`tests/partitioned_dispatch.rs` proves it the same way
+//! `placement_equivalence.rs` proved the indexed scheduler).
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use crate::ids::{NodeId, NodeNames};
+use crate::lrms::core::{BatchCore, Placement};
+use crate::lrms::{Assignment, Job, JobId, JobState, Lrms, NodeHealth,
+                  NodeInfo, NodeStat};
+use crate::sim::SimTime;
+use crate::util::prng::Prng;
+use crate::workload::Workload;
+
+/// Who places jobs onto nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// The paper's shape (and the default): one central LRMS on the
+    /// control shard schedules every job.
+    Centralized,
+    /// Site-sharded scheduling: each site's [`SiteSched`] places jobs
+    /// locally; the control plane only routes blocks and arbitrates
+    /// spillover.
+    Partitioned,
+}
+
+/// One job leased to a site in an `Ev::JobBlock` (and echoed back in
+/// spill reports). `epoch` is the lease generation — see the module
+/// doc's two-phase contract.
+#[derive(Debug, Clone)]
+pub struct DispatchJob {
+    pub job: JobId,
+    pub slots: u32,
+    pub epoch: u32,
+}
+
+/// One site-local execution event (start or completion) reported to
+/// the dispatcher in an `Ev::SiteJobReport`.
+///
+/// For a start, `at` is the start instant and `secs` the sampled total
+/// duration; for a completion, `at` is the completion instant and
+/// `secs` the duration actually executed (so `at - secs` recovers the
+/// start without trusting report ordering).
+#[derive(Debug, Clone)]
+pub struct DispatchRun {
+    pub job: JobId,
+    pub node: NodeId,
+    /// Lease epoch the site held when this execution ran.
+    pub epoch: u32,
+    /// Site-local monotone execution counter (requeue → higher seq).
+    pub seq: u32,
+    pub at: SimTime,
+    pub secs: f64,
+}
+
+/// Current lease of one dispatched job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Lease {
+    /// In the control-plane queue, waiting for a route.
+    Queued,
+    /// Leased to `site`; `on` is the last accepted execution binding
+    /// (node, seq), `None` until a start report lands.
+    Routed { site: usize, on: Option<(NodeId, u32)> },
+    /// Completed (exactly once).
+    Done,
+}
+
+#[derive(Debug)]
+struct DJob {
+    slots: u32,
+    submitted_at: SimTime,
+    /// Lease generation, bumped on every route.
+    epoch: u32,
+    /// Highest accepted execution seq under the current lease.
+    last_seq: u32,
+    lease: Lease,
+}
+
+/// Outcome of a start report (see [`Dispatcher::on_started`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StartOutcome {
+    /// Accepted; if the job was already bound to another node under
+    /// this lease (crash → local requeue → restart), that node.
+    Fresh { rebound_from: Option<NodeId> },
+    /// Stale lease/epoch/seq — dropped.
+    Stale,
+}
+
+/// Outcome of a completion report (see [`Dispatcher::on_done`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DoneOutcome {
+    /// Accepted: the job is Done. `started` is the execution start
+    /// (`at - secs`), `submitted_at` the original submission, and
+    /// `became_idle` whether this completion drained its node's last
+    /// busy slot (occupancy-overlay signal for the recorder).
+    Completed {
+        started: SimTime,
+        submitted_at: SimTime,
+        became_idle: bool,
+    },
+    /// Stale lease/epoch/seq or duplicate — dropped.
+    Stale,
+}
+
+/// The control-plane half of partitioned dispatch: the workload queue,
+/// the per-job lease table, and the occupancy overlay that stands in
+/// for the central LRMS's per-node view (CLUES reads it through
+/// [`DispatchLrmsView`]).
+#[derive(Debug)]
+pub struct Dispatcher {
+    jobs: Vec<DJob>,
+    /// Route queue in submission order (spills return to the front).
+    queue: VecDeque<JobId>,
+    /// Leased-but-not-Done slots per site (the credit counterweight).
+    inflight: Vec<u64>,
+    /// Busy slots per granted node, from accepted start/done reports.
+    busy: HashMap<NodeId, u32>,
+    /// When each currently-idle granted node last became idle.
+    idle_since: HashMap<NodeId, f64>,
+    done: u32,
+}
+
+impl Dispatcher {
+    pub fn new(n_sites: usize) -> Dispatcher {
+        Dispatcher {
+            jobs: Vec::new(),
+            queue: VecDeque::new(),
+            inflight: vec![0; n_sites],
+            busy: HashMap::new(),
+            idle_since: HashMap::new(),
+            done: 0,
+        }
+    }
+
+    /// Enqueue `count` identical `slots`-wide jobs (a workload block).
+    pub fn submit(&mut self, count: u32, slots: u32, t: SimTime) {
+        let slots = slots.max(1);
+        self.jobs.reserve(count as usize);
+        self.queue.reserve(count as usize);
+        for _ in 0..count {
+            let id = JobId(self.jobs.len() as u64);
+            self.jobs.push(DJob {
+                slots,
+                submitted_at: t,
+                epoch: 0,
+                last_seq: 0,
+                lease: Lease::Queued,
+            });
+            self.queue.push_back(id);
+        }
+    }
+
+    /// Jobs waiting for a route right now.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Jobs ever submitted.
+    pub fn submitted(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Jobs completed (exactly-once, lease-validated).
+    pub fn completed(&self) -> u32 {
+        self.done
+    }
+
+    /// Jobs not yet bound to a node anywhere: queued at the control
+    /// plane or leased to a site but not started. This is the pending
+    /// depth CLUES polls for elasticity.
+    pub fn unplaced(&self) -> usize {
+        self.jobs
+            .iter()
+            .filter(|j| match j.lease {
+                Lease::Queued => true,
+                Lease::Routed { on, .. } => on.is_none(),
+                Lease::Done => false,
+            })
+            .count()
+    }
+
+    /// Jobs with an accepted start binding and no completion yet.
+    pub fn running(&self) -> usize {
+        self.jobs
+            .iter()
+            .filter(|j| matches!(j.lease,
+                                 Lease::Routed { on: Some(_), .. }))
+            .count()
+    }
+
+    /// Slots leased to `site` and not yet completed.
+    pub fn inflight(&self, site: usize) -> u64 {
+        self.inflight[site]
+    }
+
+    /// Peek the next job to route: (id, slots).
+    pub fn front(&self) -> Option<(JobId, u32)> {
+        self.queue
+            .front()
+            .map(|&j| (j, self.jobs[j.0 as usize].slots))
+    }
+
+    /// Lease the queue-front job to `site` under a fresh epoch.
+    pub fn route_front(&mut self, site: usize) -> DispatchJob {
+        let id = self.queue.pop_front().expect("route_front: empty queue");
+        let j = &mut self.jobs[id.0 as usize];
+        debug_assert_eq!(j.lease, Lease::Queued, "routing a leased job");
+        j.epoch += 1;
+        j.last_seq = 0;
+        j.lease = Lease::Routed { site, on: None };
+        self.inflight[site] += j.slots as u64;
+        DispatchJob { job: id, slots: j.slots, epoch: j.epoch }
+    }
+
+    fn unbind(&mut self, node: NodeId, slots: u32, t: f64) {
+        if let Some(b) = self.busy.get_mut(&node) {
+            *b = b.saturating_sub(slots);
+            if *b == 0 {
+                self.idle_since.insert(node, t);
+            }
+        }
+    }
+
+    /// A site reports an execution start.
+    pub fn on_started(&mut self, site: usize, run: &DispatchRun)
+        -> StartOutcome {
+        let Some(j) = self.jobs.get_mut(run.job.0 as usize) else {
+            return StartOutcome::Stale;
+        };
+        let Lease::Routed { site: s, on } = j.lease else {
+            return StartOutcome::Stale;
+        };
+        if s != site || j.epoch != run.epoch || run.seq <= j.last_seq {
+            return StartOutcome::Stale;
+        }
+        let slots = j.slots;
+        j.last_seq = run.seq;
+        j.lease = Lease::Routed { site, on: Some((run.node, run.seq)) };
+        let rebound_from = on.map(|(n, _)| n);
+        if let Some(old) = rebound_from {
+            self.unbind(old, slots, run.at.0);
+        }
+        *self.busy.entry(run.node).or_insert(0) += slots;
+        self.idle_since.remove(&run.node);
+        StartOutcome::Fresh { rebound_from }
+    }
+
+    /// A site reports an execution completion.
+    pub fn on_done(&mut self, site: usize, run: &DispatchRun)
+        -> DoneOutcome {
+        let Some(j) = self.jobs.get_mut(run.job.0 as usize) else {
+            return DoneOutcome::Stale;
+        };
+        let Lease::Routed { site: s, on } = j.lease else {
+            return DoneOutcome::Stale;
+        };
+        // `>=`, not `>`: a completion may overtake its own (dropped and
+        // retransmitted) start report; it is still the newest execution.
+        if s != site || j.epoch != run.epoch || run.seq < j.last_seq {
+            return DoneOutcome::Stale;
+        }
+        let slots = j.slots;
+        let submitted_at = j.submitted_at;
+        j.lease = Lease::Done;
+        self.inflight[site] =
+            self.inflight[site].saturating_sub(slots as u64);
+        self.done += 1;
+        // Release the binding only if this completion is the bound
+        // execution; a completion that raced ahead of its start never
+        // occupied the overlay.
+        let became_idle = match on {
+            Some((n, seq)) if n == run.node && seq == run.seq => {
+                self.unbind(n, slots, run.at.0);
+                self.busy.get(&n).is_some_and(|&b| b == 0)
+            }
+            _ => false,
+        };
+        DoneOutcome::Completed {
+            started: SimTime(run.at.0 - run.secs),
+            submitted_at,
+            became_idle,
+        }
+    }
+
+    /// A site returns a job it cannot hold (spillover). Accepted spills
+    /// go back to the *front* of the route queue (they are older than
+    /// anything still queued). When accepting several spills from one
+    /// report, feed them in reverse so the report order is preserved.
+    pub fn on_spilled(&mut self, site: usize, dj: &DispatchJob, t: f64)
+        -> bool {
+        let Some(j) = self.jobs.get_mut(dj.job.0 as usize) else {
+            return false;
+        };
+        let Lease::Routed { site: s, on } = j.lease else { return false };
+        if s != site || j.epoch != dj.epoch {
+            return false;
+        }
+        let slots = j.slots;
+        j.lease = Lease::Queued;
+        j.last_seq = 0;
+        self.inflight[site] =
+            self.inflight[site].saturating_sub(slots as u64);
+        if let Some((n, _)) = on {
+            self.unbind(n, slots, t);
+        }
+        self.queue.push_front(dj.job);
+        true
+    }
+
+    /// Revoke every lease held by `site` (its circuit breaker opened):
+    /// the jobs return to the route queue front in id order and their
+    /// next route bumps the epoch, so everything the site still reports
+    /// about them is stale. Returns the revoked ids.
+    pub fn reroute_site(&mut self, site: usize, t: f64) -> Vec<JobId> {
+        let mut revoked = Vec::new();
+        for i in 0..self.jobs.len() {
+            let j = &mut self.jobs[i];
+            let Lease::Routed { site: s, on } = j.lease else { continue };
+            if s != site {
+                continue;
+            }
+            let slots = j.slots;
+            j.lease = Lease::Queued;
+            j.last_seq = 0;
+            self.inflight[site] =
+                self.inflight[site].saturating_sub(slots as u64);
+            revoked.push(JobId(i as u64));
+            if let Some((n, _)) = on {
+                self.unbind(n, slots, t);
+            }
+        }
+        for &id in revoked.iter().rev() {
+            self.queue.push_front(id);
+        }
+        revoked
+    }
+
+    /// Jobs currently bound to `node`, in id order.
+    pub fn jobs_bound_to(&self, node: NodeId) -> Vec<JobId> {
+        self.jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| matches!(j.lease,
+                Lease::Routed { on: Some((n, _)), .. } if n == node))
+            .map(|(i, _)| JobId(i as u64))
+            .collect()
+    }
+
+    /// A worker node joined (fresh incarnation): start its occupancy
+    /// overlay at idle.
+    pub fn grant_node(&mut self, node: NodeId, t: f64) {
+        self.busy.insert(node, 0);
+        self.idle_since.insert(node, t);
+    }
+
+    /// A worker node left (terminated/preempted): drop its overlay.
+    pub fn drop_node(&mut self, node: NodeId) {
+        self.busy.remove(&node);
+        self.idle_since.remove(&node);
+    }
+
+    fn patch_stat(&self, s: &mut NodeStat) {
+        if let Some(&b) = self.busy.get(&s.id) {
+            s.used_slots = b.min(s.slots);
+            s.idle_since = if b > 0 {
+                None
+            } else {
+                self.idle_since.get(&s.id).map(|&t| SimTime(t))
+            };
+        }
+    }
+}
+
+/// Read-only [`Lrms`] view CLUES polls in partitioned mode: node
+/// *membership* comes from the central LRMS (which still tracks
+/// registration and health), while per-node occupancy and the pending
+/// depth come from the dispatcher's lease table — the central core
+/// never sees a job. Every `&mut` scheduling entry point is
+/// unreachable by construction.
+pub struct DispatchLrmsView<'a> {
+    pub inner: &'a dyn Lrms,
+    pub disp: &'a Dispatcher,
+}
+
+impl Lrms for DispatchLrmsView<'_> {
+    fn kind(&self) -> &'static str {
+        self.inner.kind()
+    }
+
+    fn register_node(&mut self, _: &str, _: u32, _: SimTime) {
+        unreachable!("partitioned dispatch view is read-only");
+    }
+
+    fn deregister_node(&mut self, _: &str, _: SimTime)
+        -> anyhow::Result<Vec<JobId>> {
+        unreachable!("partitioned dispatch view is read-only");
+    }
+
+    fn set_node_health(&mut self, _: &str, _: NodeHealth, _: SimTime)
+        -> anyhow::Result<Vec<JobId>> {
+        unreachable!("partitioned dispatch view is read-only");
+    }
+
+    fn submit(&mut self, _: &str, _: u32, _: SimTime) -> JobId {
+        unreachable!("partitioned dispatch view is read-only");
+    }
+
+    fn cancel(&mut self, _: JobId, _: SimTime) -> anyhow::Result<()> {
+        unreachable!("partitioned dispatch view is read-only");
+    }
+
+    fn schedule(&mut self, _: SimTime) -> Vec<Assignment> {
+        unreachable!("partitioned dispatch view is read-only");
+    }
+
+    fn on_job_finished(&mut self, _: JobId, _: bool, _: SimTime)
+        -> anyhow::Result<()> {
+        unreachable!("partitioned dispatch view is read-only");
+    }
+
+    fn job(&self, _: JobId) -> Option<&Job> {
+        // Jobs live in the dispatcher's lease table, not the central
+        // core; nothing on the monitoring path resolves them.
+        None
+    }
+
+    fn jobs(&self) -> Vec<&Job> {
+        Vec::new()
+    }
+
+    fn nodes(&self) -> Vec<NodeInfo> {
+        let mut out = self.inner.nodes();
+        for n in &mut out {
+            let mut s = NodeStat {
+                id: n.id,
+                slots: n.slots,
+                used_slots: n.used_slots,
+                health: n.health,
+                registered_at: n.registered_at,
+                idle_since: n.idle_since,
+            };
+            self.disp.patch_stat(&mut s);
+            n.used_slots = s.used_slots;
+            n.idle_since = s.idle_since;
+        }
+        out
+    }
+
+    fn node_id(&self, name: &str) -> Option<NodeId> {
+        self.inner.node_id(name)
+    }
+
+    fn node_name(&self, id: NodeId) -> Option<String> {
+        self.inner.node_name(id)
+    }
+
+    fn node_stat(&self, id: NodeId) -> Option<NodeStat> {
+        let mut s = self.inner.node_stat(id)?;
+        self.disp.patch_stat(&mut s);
+        Some(s)
+    }
+
+    fn node_stats(&self) -> Vec<NodeStat> {
+        let mut out = Vec::new();
+        self.node_stats_into(&mut out);
+        out
+    }
+
+    fn node_stats_into(&self, out: &mut Vec<NodeStat>) {
+        self.inner.node_stats_into(out);
+        for s in out.iter_mut() {
+            self.disp.patch_stat(s);
+        }
+    }
+
+    fn pending(&self) -> usize {
+        self.disp.unplaced()
+    }
+
+    fn running(&self) -> usize {
+        self.disp.running()
+    }
+}
+
+/// The site-shard half of partitioned dispatch: a private [`BatchCore`]
+/// over the site's own nodes. Jobs arrive as leased [`DispatchJob`]s,
+/// are placed during the site's parallel window, and every start /
+/// completion / spill is buffered for the next report-grid flush.
+/// Local ids are private to the slice; only global ids cross the WAN.
+#[derive(Debug)]
+pub struct SiteSched {
+    core: BatchCore,
+    names: NodeNames,
+    /// Per-local-job lease info, dense by local [`JobId`].
+    meta: Vec<LocalJob>,
+    /// Site-local monotone execution counter (JobTimer generation).
+    seq: u32,
+    /// Site-local stream for job/setup durations: advanced in site
+    /// event order, so all engines sample identically.
+    rng: Prng,
+    setup_mean: f64,
+    /// Node incarnations that already paid the one-time setup.
+    setup_paid: HashSet<NodeId>,
+    pub started_buf: Vec<DispatchRun>,
+    pub done_buf: Vec<DispatchRun>,
+    pub spill_buf: Vec<DispatchJob>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct LocalJob {
+    global: JobId,
+    epoch: u32,
+    slots: u32,
+    /// Seq of the current execution (0 = never started).
+    cur_seq: u32,
+    /// Sampled duration of the current execution.
+    cur_secs: f64,
+}
+
+impl SiteSched {
+    pub fn new(placement: Placement, names: NodeNames, seed: u64,
+               setup_mean: f64) -> SiteSched {
+        SiteSched {
+            core: BatchCore::with_names(placement, names.clone()),
+            names,
+            meta: Vec::new(),
+            seq: 0,
+            rng: Prng::new(seed),
+            setup_mean,
+            setup_paid: HashSet::new(),
+            started_buf: Vec::new(),
+            done_buf: Vec::new(),
+            spill_buf: Vec::new(),
+        }
+    }
+
+    /// The control plane granted this site a worker node (fresh VM
+    /// incarnation — it pays the one-time setup again).
+    pub fn grant(&mut self, node: NodeId, slots: u32, t: SimTime) {
+        let name = self.names.name(node);
+        self.core.register_node(&name, slots, t);
+        self.setup_paid.remove(&node);
+    }
+
+    /// A local node died or was decommissioned: remove it from the
+    /// slice. Its running jobs requeue to the local queue front (the
+    /// next sweep re-places or spills them).
+    pub fn deregister(&mut self, node: NodeId, t: SimTime) {
+        let name = self.names.name(node);
+        if self.core.node_id(&name).is_some() {
+            let _ = self.core.deregister_node(&name, t);
+        }
+        self.setup_paid.remove(&node);
+    }
+
+    /// Accept a routed block into the local queue.
+    pub fn submit_block(&mut self, jobs: &[DispatchJob], t: SimTime) {
+        for dj in jobs {
+            let lid = self.core.submit("", dj.slots, t);
+            debug_assert_eq!(lid.0 as usize, self.meta.len());
+            self.meta.push(LocalJob {
+                global: dj.job,
+                epoch: dj.epoch,
+                slots: dj.slots.max(1),
+                cur_seq: 0,
+                cur_secs: 0.0,
+            });
+        }
+    }
+
+    /// One local scheduling sweep: place what fits, sample durations,
+    /// buffer start reports. Returns `(node, local job, seq, secs)`
+    /// per start so the caller can schedule the completion timers.
+    pub fn sweep(&mut self, t: SimTime)
+        -> Vec<(NodeId, JobId, u32, f64)> {
+        let placed = self.core.schedule(t);
+        let mut out = Vec::with_capacity(placed.len());
+        for (lid, node) in placed {
+            let mut secs = Workload::sample_job_secs(&mut self.rng);
+            if self.setup_paid.insert(node) {
+                // First job on a fresh incarnation pays the one-time
+                // udocker/image setup (the paper's 4 min 30 s ± 15%).
+                secs += self.rng.uniform(self.setup_mean * 0.85,
+                                         self.setup_mean * 1.15);
+            }
+            self.seq += 1;
+            let m = &mut self.meta[lid.0 as usize];
+            m.cur_seq = self.seq;
+            m.cur_secs = secs;
+            self.started_buf.push(DispatchRun {
+                job: m.global,
+                node,
+                epoch: m.epoch,
+                seq: self.seq,
+                at: t,
+                secs,
+            });
+            out.push((node, lid, self.seq, secs));
+        }
+        out
+    }
+
+    /// A completion timer fired. Returns true if it was the *current*
+    /// execution of a still-running local job (stale timers from
+    /// requeued-away executions are dropped here, before any state
+    /// changes).
+    pub fn finish(&mut self, lid: JobId, node: NodeId, gen: u32,
+                  t: SimTime) -> bool {
+        let Some(m) = self.meta.get(lid.0 as usize).copied() else {
+            return false;
+        };
+        if m.cur_seq != gen {
+            return false;
+        }
+        match self.core.job(lid) {
+            Some(j) if j.state == JobState::Running
+                && j.node == Some(node) => {}
+            _ => return false,
+        }
+        self.core
+            .on_job_finished(lid, true, t)
+            .expect("validated Running above");
+        self.done_buf.push(DispatchRun {
+            job: m.global,
+            node,
+            epoch: m.epoch,
+            seq: m.cur_seq,
+            at: t,
+            secs: m.cur_secs,
+        });
+        true
+    }
+
+    /// Spill the local backlog the site can no longer hold: the local
+    /// queue may back up to one full round of the site's Up capacity
+    /// (those jobs start within one job length); anything beyond that —
+    /// in particular the *whole* queue when capacity dropped to zero —
+    /// is returned to the dispatcher. Returns the number spilled.
+    pub fn spill_excess(&mut self, t: SimTime) -> usize {
+        let cap = self.core.up_slots();
+        let pending = self.core.pending() as u64;
+        // Jobs here are 1-slot (the paper's workload), so the count
+        // check is exact; the keep loop below is slot-accurate anyway.
+        if pending == 0 || pending <= cap {
+            return 0;
+        }
+        let drained = self.core.drain_pending(t);
+        let mut kept: u64 = 0;
+        let mut spilled = 0;
+        for lid in drained {
+            let m = self.meta[lid.0 as usize];
+            if kept + m.slots as u64 <= cap {
+                kept += m.slots as u64;
+                let nlid = self.core.submit("", m.slots, t);
+                debug_assert_eq!(nlid.0 as usize, self.meta.len());
+                self.meta.push(LocalJob { cur_seq: 0, cur_secs: 0.0, ..m });
+            } else {
+                self.spill_buf.push(DispatchJob {
+                    job: m.global,
+                    slots: m.slots,
+                    epoch: m.epoch,
+                });
+                spilled += 1;
+            }
+        }
+        spilled
+    }
+
+    /// Anything buffered for the next report flush?
+    pub fn has_reports(&self) -> bool {
+        !self.started_buf.is_empty()
+            || !self.done_buf.is_empty()
+            || !self.spill_buf.is_empty()
+    }
+
+    /// Drain the report buffers: (started, done, spilled).
+    pub fn take_reports(&mut self)
+        -> (Vec<DispatchRun>, Vec<DispatchRun>, Vec<DispatchJob>) {
+        (std::mem::take(&mut self.started_buf),
+         std::mem::take(&mut self.done_buf),
+         std::mem::take(&mut self.spill_buf))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime(s)
+    }
+
+    fn started(job: u64, node: NodeId, epoch: u32, seq: u32, at: f64,
+               secs: f64) -> DispatchRun {
+        DispatchRun { job: JobId(job), node, epoch, seq, at: t(at), secs }
+    }
+
+    #[test]
+    fn lease_lifecycle_exactly_once() {
+        let mut d = Dispatcher::new(2);
+        d.submit(2, 1, t(0.0));
+        assert_eq!(d.queued(), 2);
+        assert_eq!(d.unplaced(), 2);
+        let a = d.route_front(0);
+        let b = d.route_front(1);
+        assert_eq!(a.epoch, 1);
+        assert_eq!(d.inflight(0), 1);
+        assert_eq!(d.inflight(1), 1);
+        let n = NodeId(0);
+        d.grant_node(n, 0.0);
+        let r = started(a.job.0, n, a.epoch, 1, 5.0, 17.0);
+        assert_eq!(d.on_started(0, &r),
+                   StartOutcome::Fresh { rebound_from: None });
+        assert_eq!(d.unplaced(), 1); // b leased but unbound
+        assert_eq!(d.running(), 1);
+        // Duplicate start (same seq) is stale.
+        assert_eq!(d.on_started(0, &r), StartOutcome::Stale);
+        // Wrong-site completion is stale.
+        let done = started(a.job.0, n, a.epoch, 1, 22.0, 17.0);
+        assert_eq!(d.on_done(1, &done), DoneOutcome::Stale);
+        match d.on_done(0, &done) {
+            DoneOutcome::Completed { started, became_idle, .. } => {
+                assert_eq!(started, t(5.0));
+                assert!(became_idle);
+            }
+            o => panic!("{o:?}"),
+        }
+        assert_eq!(d.completed(), 1);
+        assert_eq!(d.inflight(0), 0);
+        // Second completion of the same job: dropped.
+        assert_eq!(d.on_done(0, &done), DoneOutcome::Stale);
+        assert_eq!(d.completed(), 1);
+        let _ = b;
+    }
+
+    #[test]
+    fn crash_requeue_rebinds_with_higher_seq() {
+        let mut d = Dispatcher::new(1);
+        d.submit(1, 1, t(0.0));
+        let dj = d.route_front(0);
+        let (n1, n2) = (NodeId(0), NodeId(1));
+        d.grant_node(n1, 0.0);
+        d.grant_node(n2, 0.0);
+        d.on_started(0, &started(0, n1, dj.epoch, 1, 1.0, 10.0));
+        // The node died; the site requeued and restarted on n2.
+        let r2 = started(0, n2, dj.epoch, 3, 4.0, 10.0);
+        assert_eq!(d.on_started(0, &r2),
+                   StartOutcome::Fresh { rebound_from: Some(n1) });
+        // A delayed duplicate of the first start cannot rewind.
+        assert_eq!(d.on_started(0, &started(0, n1, dj.epoch, 1, 1.0, 10.0)),
+                   StartOutcome::Stale);
+        // The stale execution's node is free again in the overlay.
+        let view_busy = d.jobs_bound_to(n1);
+        assert!(view_busy.is_empty());
+        assert_eq!(d.jobs_bound_to(n2), vec![JobId(0)]);
+    }
+
+    #[test]
+    fn completion_may_overtake_lost_start() {
+        let mut d = Dispatcher::new(1);
+        d.submit(1, 1, t(0.0));
+        let dj = d.route_front(0);
+        let n = NodeId(0);
+        d.grant_node(n, 0.0);
+        // Start report dropped by the WAN; completion arrives first.
+        let done = started(0, n, dj.epoch, 1, 20.0, 15.0);
+        match d.on_done(0, &done) {
+            DoneOutcome::Completed { started, became_idle, .. } => {
+                assert_eq!(started, t(5.0));
+                assert!(!became_idle); // never occupied the overlay
+            }
+            o => panic!("{o:?}"),
+        }
+        // The retransmitted start finally lands: job already Done.
+        assert_eq!(d.on_started(0, &started(0, n, dj.epoch, 1, 5.0, 15.0)),
+                   StartOutcome::Stale);
+    }
+
+    #[test]
+    fn spill_returns_to_queue_front_in_report_order() {
+        let mut d = Dispatcher::new(2);
+        d.submit(4, 1, t(0.0));
+        let a = d.route_front(0);
+        let b = d.route_front(0);
+        // Site 0 spills both (zero capacity): feed in reverse to keep
+        // report order at the queue front, ahead of jobs 2 and 3.
+        for dj in [&b, &a] {
+            assert!(d.on_spilled(0, dj, 1.0));
+        }
+        assert_eq!(d.inflight(0), 0);
+        assert_eq!(d.front().map(|(j, _)| j), Some(a.job));
+        let ra = d.route_front(1);
+        assert_eq!(ra.job, a.job);
+        assert_eq!(ra.epoch, 2); // re-route bumped the epoch
+        // The old site's late report about `a` is now stale.
+        assert!(!d.on_spilled(0, &a, 2.0));
+        assert_eq!(d.on_started(0, &started(a.job.0, NodeId(0), a.epoch,
+                                            1, 2.0, 10.0)),
+                   StartOutcome::Stale);
+    }
+
+    #[test]
+    fn reroute_site_revokes_all_leases_and_stales_zombies() {
+        let mut d = Dispatcher::new(2);
+        d.submit(3, 1, t(0.0));
+        let a = d.route_front(0);
+        let b = d.route_front(0);
+        let c = d.route_front(1);
+        let n = NodeId(0);
+        d.grant_node(n, 0.0);
+        d.on_started(0, &started(a.job.0, n, a.epoch, 1, 1.0, 10.0));
+        let revoked = d.reroute_site(0, 2.0);
+        assert_eq!(revoked, vec![a.job, b.job]);
+        assert_eq!(d.inflight(0), 0);
+        assert_eq!(d.inflight(1), 1); // site 1's lease untouched
+        assert_eq!(d.front().map(|(j, _)| j), Some(a.job));
+        // The quarantined site's zombie completion is dropped even
+        // before the re-route happens (lease is Queued) ...
+        assert_eq!(d.on_done(0, &started(a.job.0, n, a.epoch, 1, 11.0,
+                                         10.0)),
+                   DoneOutcome::Stale);
+        // ... and after the re-route the epoch no longer matches.
+        let ra = d.route_front(1);
+        assert_eq!(ra.epoch, a.epoch + 1);
+        assert_eq!(d.on_done(0, &started(a.job.0, n, a.epoch, 1, 11.0,
+                                         10.0)),
+                   DoneOutcome::Stale);
+        let _ = c;
+    }
+
+    #[test]
+    fn occupancy_overlay_tracks_grant_bind_idle_drop() {
+        let mut d = Dispatcher::new(1);
+        d.submit(1, 1, t(0.0));
+        let dj = d.route_front(0);
+        let n = NodeId(3);
+        d.grant_node(n, 1.0);
+        let mut s = NodeStat {
+            id: n,
+            slots: 2,
+            used_slots: 0,
+            health: NodeHealth::Up,
+            registered_at: t(1.0),
+            idle_since: Some(t(1.0)),
+        };
+        d.patch_stat(&mut s);
+        assert_eq!(s.used_slots, 0);
+        assert_eq!(s.idle_since, Some(t(1.0)));
+        d.on_started(0, &started(0, n, dj.epoch, 1, 2.0, 10.0));
+        d.patch_stat(&mut s);
+        assert_eq!(s.used_slots, 1);
+        assert_eq!(s.idle_since, None);
+        d.on_done(0, &started(0, n, dj.epoch, 1, 12.0, 10.0));
+        d.patch_stat(&mut s);
+        assert_eq!(s.used_slots, 0);
+        assert_eq!(s.idle_since, Some(t(12.0)));
+        d.drop_node(n);
+        let before = s;
+        d.patch_stat(&mut s);
+        assert_eq!(s, before); // no overlay entry -> stat untouched
+    }
+
+    #[test]
+    fn site_sched_places_reports_and_finishes() {
+        let names = NodeNames::new();
+        let mut s = SiteSched::new(Placement::PackFirstFit, names.clone(),
+                                   7, 270.0);
+        let n = names.intern("vnode-1");
+        s.grant(n, 1, t(0.0));
+        s.submit_block(&[DispatchJob { job: JobId(40), slots: 1,
+                                       epoch: 1 }],
+                       t(1.0));
+        let starts = s.sweep(t(1.0));
+        assert_eq!(starts.len(), 1);
+        let (node, lid, seq, secs) = starts[0];
+        assert_eq!(node, n);
+        assert_eq!(seq, 1);
+        // First job on the node pays setup: 15–20s + 270s ± 15%.
+        assert!(secs > 240.0, "{secs}");
+        assert_eq!(s.started_buf.len(), 1);
+        assert_eq!(s.started_buf[0].job, JobId(40));
+        // Stale generation is dropped; the real one completes.
+        assert!(!s.finish(lid, node, seq + 1, t(2.0)));
+        assert!(s.finish(lid, node, seq, t(1.0 + secs)));
+        assert!(!s.finish(lid, node, seq, t(2.0))); // not Running anymore
+        assert_eq!(s.done_buf.len(), 1);
+        assert_eq!(s.done_buf[0].secs, secs);
+        let (st, dn, sp) = s.take_reports();
+        assert_eq!((st.len(), dn.len(), sp.len()), (1, 1, 0));
+        assert!(!s.has_reports());
+        // Second job on the same node pays no setup.
+        s.submit_block(&[DispatchJob { job: JobId(41), slots: 1,
+                                       epoch: 1 }],
+                       t(400.0));
+        let starts = s.sweep(t(400.0));
+        assert!(starts[0].3 < 21.0, "{}", starts[0].3);
+    }
+
+    #[test]
+    fn zero_capacity_site_spills_its_whole_block() {
+        // Edge case (a): a site with no Up capacity returns everything.
+        let names = NodeNames::new();
+        let mut s = SiteSched::new(Placement::PackFirstFit, names.clone(),
+                                   7, 270.0);
+        let jobs: Vec<DispatchJob> = (0..3)
+            .map(|i| DispatchJob { job: JobId(i), slots: 1, epoch: 1 })
+            .collect();
+        s.submit_block(&jobs, t(0.0));
+        assert!(s.sweep(t(0.0)).is_empty());
+        assert_eq!(s.spill_excess(t(0.0)), 3);
+        let spilled: Vec<u64> =
+            s.spill_buf.iter().map(|d| d.job.0).collect();
+        assert_eq!(spilled, vec![0, 1, 2]); // submission order preserved
+    }
+
+    #[test]
+    fn capacity_loss_spills_only_the_excess_backlog() {
+        let names = NodeNames::new();
+        let mut s = SiteSched::new(Placement::PackFirstFit, names.clone(),
+                                   7, 270.0);
+        let n1 = names.intern("vnode-1");
+        let n2 = names.intern("vnode-2");
+        s.grant(n1, 1, t(0.0));
+        s.grant(n2, 1, t(0.0));
+        let jobs: Vec<DispatchJob> = (0..4)
+            .map(|i| DispatchJob { job: JobId(i), slots: 1, epoch: 1 })
+            .collect();
+        s.submit_block(&jobs, t(0.0));
+        let starts = s.sweep(t(0.0));
+        assert_eq!(starts.len(), 2); // 0 and 1 running, 2 and 3 queued
+        assert_eq!(s.spill_excess(t(0.0)), 0); // backlog == capacity
+        // One node dies: its job requeues locally, capacity halves, and
+        // the backlog (3 pending vs capacity 1) spills the two newest.
+        s.deregister(n1, t(1.0));
+        assert_eq!(s.spill_excess(t(1.0)), 2);
+        let spilled: Vec<u64> =
+            s.spill_buf.iter().map(|d| d.job.0).collect();
+        assert_eq!(spilled, vec![2, 3]);
+        // The requeued job restarts with a fresh seq on the survivor
+        // once its slot frees.
+        let (_, lid1, seq1, secs1) = starts[1];
+        assert!(s.finish(lid1, n2, seq1, t(secs1)));
+        let restarted = s.sweep(t(secs1 + 1.0));
+        assert_eq!(restarted.len(), 1);
+        assert!(restarted[0].2 > seq1);
+    }
+}

@@ -128,6 +128,26 @@
 //! end — or streamed to per-shard spill files when
 //! [`RunConfig::metrics_spill_dir`] is set.
 //!
+//! **Partitioned dispatch.** [`RunConfig::dispatch`] selects who
+//! schedules. The default ([`DispatchMode::Centralized`]) keeps the
+//! paper's shape — one control-shard LRMS placing every job — which
+//! control-couples the workload: every placement is a barrier-side
+//! decision, so the parallel engines run at window-overhead parity
+//! with serial. [`DispatchMode::Partitioned`] moves scheduling inside
+//! the site shards: each [`SiteWorld`] owns a [`SiteSched`] — a
+//! private `BatchCore` slice over its local nodes, placing jobs during
+//! the site's parallel window — and the control side shrinks to a
+//! [`Dispatcher`] that routes workload blocks to sites (broker-ranked
+//! via `route_candidates`, credit-bounded by registered capacity,
+//! outage/quarantine-aware) and arbitrates cross-site spillover at
+//! barriers. Integrity is a two-phase lease: every route bumps the
+//! job's epoch, every site report echoes it, and stale epochs/seqs are
+//! dropped — so re-routing (spill, quarantine) can never double-place
+//! or double-count a job, even against zombie executions on a
+//! quarantined site. `tests/partitioned_dispatch.rs` holds the
+//! equivalence suite: three-engine byte-identity in partitioned mode
+//! and completion-set equivalence against the centralized reference.
+//!
 //! **Observability contract.** [`RunConfig::obs`] turns on the
 //! [`crate::obs`] layer: causal job/node/chaos/broker spans buffered
 //! per shard ([`crate::obs::TraceShard`], merged like the recorders)
@@ -141,10 +161,14 @@
 //! profiler — is nondeterministic by nature and never enters a digest.
 
 mod control;
+mod dispatch;
 mod faults;
 mod site;
 
 pub use control::ControlWorld;
+pub use dispatch::{DispatchJob, DispatchLrmsView, DispatchMode,
+                   DispatchRun, Dispatcher, DoneOutcome, SiteSched,
+                   StartOutcome};
 pub use faults::{BreakerState, FaultWindow, RetryPolicy,
                  SiteHealthTracker, WanFaultPlan};
 pub use site::SiteWorld;
@@ -158,6 +182,7 @@ use crate::clues::{Clues, CluesConfig};
 use crate::cloudsim::{CloudSite, SiteSpec, VmId};
 use crate::ids::{NodeId, NodeNames};
 use crate::im::{Im, NodeRole};
+use crate::lrms::core::Placement;
 use crate::lrms::{HtCondor, JobId, Lrms, Slurm};
 use crate::metrics::{Recorder, ShardSink};
 use crate::netsim::{LinkSpec, Network};
@@ -266,6 +291,18 @@ pub struct RunConfig {
     /// that are byte-identical across engines and digest-neutral (the
     /// [`crate::obs`] contract).
     pub obs: ObsConfig,
+    /// Who places jobs onto nodes. `Centralized` (the default) is the
+    /// paper's shape — one control-shard LRMS scheduling everything.
+    /// `Partitioned` moves scheduling into the site shards: each
+    /// [`SiteWorld`] places jobs locally with its own [`SiteSched`]
+    /// slice, and the control plane shrinks to a [`Dispatcher`] that
+    /// routes queue blocks (broker-ranked, credit-bounded) and
+    /// arbitrates cross-site spillover at barriers under a two-phase
+    /// lease, so no job is ever double-placed. Either mode is
+    /// byte-identical across the three engines; the two modes'
+    /// timelines legitimately differ (block routing and WAN report
+    /// lag), so digests are compared within a mode, not across modes.
+    pub dispatch: DispatchMode,
 }
 
 impl RunConfig {
@@ -297,6 +334,7 @@ impl RunConfig {
             control_latency_s: 0.1,
             report_interval_s: 1.0,
             obs: ObsConfig::default(),
+            dispatch: DispatchMode::Centralized,
         }
     }
 
@@ -387,6 +425,13 @@ pub enum Ev {
     /// Site → control: heartbeat reply (unreliable on purpose — its
     /// loss is the missed-heartbeat signal the breaker counts).
     SiteHeartbeat { site: usize },
+    /// Site → control (partitioned dispatch): batched barrier emission
+    /// of local execution starts, completions, and spillover — jobs the
+    /// site cannot hold, returned for re-routing under the two-phase
+    /// lease (every entry echoes its lease epoch; see
+    /// [`DispatchRun`]/[`DispatchJob`]).
+    SiteJobReport { site: usize, started: Vec<DispatchRun>,
+                    done: Vec<DispatchRun>, spilled: Vec<DispatchJob> },
 
     // ---- site shards ----------------------------------------------
     /// Control → site: a VM finishes booting (failed per the ticket);
@@ -411,6 +456,12 @@ pub enum Ev {
     /// Site-local: ack timeout for a dropped reliable report expired —
     /// retransmit it through a fresh fault decision.
     Retransmit { site: usize, ev: Box<Ev>, attempt: u32 },
+    /// Control → site (partitioned dispatch): a routed block of leased
+    /// jobs for the site's local scheduler slice.
+    JobBlock { site: usize, jobs: Vec<DispatchJob> },
+    /// Control → site (partitioned dispatch): a worker node joined and
+    /// is granted to the site's scheduler slice.
+    SiteNodeUp { site: usize, node: NodeId, slots: u32 },
 }
 
 impl ShardEvent for Ev {
@@ -433,7 +484,8 @@ impl ShardEvent for Ev {
             | Ev::WanPartitionStart { .. }
             | Ev::WanPartitionEnd { .. }
             | Ev::RetryProvision { .. }
-            | Ev::SiteHeartbeat { .. } => ShardKey::Control,
+            | Ev::SiteHeartbeat { .. }
+            | Ev::SiteJobReport { .. } => ShardKey::Control,
             Ev::BootDone { site, .. }
             | Ev::CtxTimer { site, .. }
             | Ev::JobTimer { site, .. }
@@ -441,7 +493,9 @@ impl ShardEvent for Ev {
             | Ev::CrashTimer { site, .. }
             | Ev::TerminationDone { site, .. }
             | Ev::HeartbeatPing { site }
-            | Ev::Retransmit { site, .. } => {
+            | Ev::Retransmit { site, .. }
+            | Ev::JobBlock { site, .. }
+            | Ev::SiteNodeUp { site, .. } => {
                 ShardKey::Site(*site as u32)
             }
         }
@@ -806,6 +860,15 @@ impl HybridCluster {
             || cfg.sites.iter().any(|s| s.failure.message_loss_prob > 0.0);
         let fault_seed = cfg.seed ^ cfg.faults.seed.rotate_left(17);
 
+        // Partitioned dispatch: each site owns a scheduler slice with
+        // the template's placement policy and its own duration stream
+        // (advanced in site event order, so engines sample identically).
+        let placement = match cfg.template.lrms {
+            LrmsKind::Slurm => Placement::PackFirstFit,
+            LrmsKind::HtCondor => Placement::SpreadMostFree,
+        };
+        let setup_mean = cfg.workload.setup_secs;
+        let partitioned = cfg.dispatch == DispatchMode::Partitioned;
         let sites: Vec<SiteWorld> = clouds
             .into_iter()
             .zip(site_recs)
@@ -822,9 +885,20 @@ impl HybridCluster {
                 // mirroring the recorder layout.
                 let trace =
                     TraceShard::new((i + 1) as u32, cfg.obs.trace);
+                let sched = partitioned.then(|| {
+                    SiteSched::new(
+                        placement,
+                        names.clone(),
+                        cfg.seed
+                            ^ 0xD15B
+                            ^ (i as u64 + 1)
+                                .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                        setup_mean,
+                    )
+                });
                 SiteWorld::new(
                     i, cloud, recorder, names.clone(), control_latency,
-                    report_grid, faults, trace)
+                    report_grid, faults, trace, sched)
             })
             .collect();
 

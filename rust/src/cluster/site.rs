@@ -32,6 +32,7 @@ use crate::obs::TraceShard;
 use crate::sim::shard::{SiteCtx, SiteShard};
 use crate::sim::SimTime;
 
+use super::dispatch::SiteSched;
 use super::faults::{Delivery, SiteFaultState};
 use super::{Ev, JobRun};
 
@@ -44,6 +45,7 @@ fn report_kind(ev: &Ev) -> &'static str {
         Ev::NodeOff { .. } => "node-off",
         Ev::JobBatch { .. } => "job-batch",
         Ev::SiteHeartbeat { .. } => "heartbeat",
+        Ev::SiteJobReport { .. } => "job-report",
         _ => "other",
     }
 }
@@ -77,6 +79,12 @@ pub struct SiteWorld {
     /// This shard's causal trace buffer (shard `site + 1`; merged with
     /// the control shard's at run end). Passive — see `crate::obs`.
     pub(crate) trace: TraceShard,
+    /// Partitioned dispatch only: this site's local scheduler slice
+    /// (`None` in centralized mode). It places leased jobs onto local
+    /// nodes during the site's parallel window; starts, completions
+    /// and spillover reach the control plane exclusively through the
+    /// batched [`Ev::SiteJobReport`] barrier emission.
+    pub(crate) sched: Option<SiteSched>,
 }
 
 impl SiteWorld {
@@ -84,7 +92,7 @@ impl SiteWorld {
     pub(crate) fn new(site: usize, cloud: CloudSite, recorder: Recorder,
                       names: NodeNames, control_latency: f64,
                       report_grid: f64, faults: SiteFaultState,
-                      trace: TraceShard)
+                      trace: TraceShard, sched: Option<SiteSched>)
         -> SiteWorld {
         SiteWorld {
             site,
@@ -97,6 +105,7 @@ impl SiteWorld {
             report_grid,
             faults,
             trace,
+            sched,
         }
     }
 
@@ -120,6 +129,35 @@ impl SiteWorld {
             return t;
         }
         ((t / self.report_grid).floor() + 1.0) * self.report_grid
+    }
+
+    /// Make sure a [`Ev::FlushTimer`] is pending to carry whatever the
+    /// site has buffered (completed-run batches, partitioned job
+    /// reports) at the next report-grid slot.
+    fn ensure_flush(&mut self, t: SimTime, ctx: &mut SiteCtx<'_, Ev>) {
+        if !self.flush_scheduled {
+            self.flush_scheduled = true;
+            ctx.schedule_at(SimTime(self.next_flush_at(t.0)),
+                            Ev::FlushTimer { site: self.site });
+        }
+    }
+
+    /// Partitioned dispatch: one local scheduling sweep. Places what
+    /// fits (starting the completion timers), spills the backlog the
+    /// site can no longer hold, and makes sure a flush will carry the
+    /// buffered start/completion/spill reports to the control plane.
+    fn sweep_local(&mut self, t: SimTime, ctx: &mut SiteCtx<'_, Ev>) {
+        let site = self.site;
+        let Some(sched) = self.sched.as_mut() else { return };
+        let starts = sched.sweep(t);
+        let _ = sched.spill_excess(t);
+        let has_reports = sched.has_reports();
+        for (node, job, gen, secs) in starts {
+            ctx.schedule_in(secs, Ev::JobTimer { site, job, node, gen });
+        }
+        if has_reports {
+            self.ensure_flush(t, ctx);
+        }
     }
 
     /// Send a *reliable* report to the control plane through the fault
@@ -267,16 +305,38 @@ impl SiteShard for SiteWorld {
             }
 
             Ev::JobTimer { job, node, gen, .. } => {
-                self.done_buf.push(JobRun { job, node, gen });
-                if !self.flush_scheduled {
-                    self.flush_scheduled = true;
-                    ctx.schedule_at(SimTime(self.next_flush_at(t.0)),
-                                    Ev::FlushTimer { site: self.site });
+                // Partitioned: `job`/`gen` are the local slice's id and
+                // execution seq. A stale timer (the execution was
+                // requeued away by a node loss) is dropped inside
+                // `finish`; a real completion buffers its report and
+                // frees a slot, so sweep immediately.
+                if let Some(sched) = self.sched.as_mut() {
+                    if sched.finish(job, node, gen, t) {
+                        self.sweep_local(t, ctx);
+                        self.ensure_flush(t, ctx);
+                    }
+                    return;
                 }
+                self.done_buf.push(JobRun { job, node, gen });
+                self.ensure_flush(t, ctx);
             }
 
             Ev::FlushTimer { .. } => {
                 self.flush_scheduled = false;
+                if let Some(sched) = self.sched.as_mut() {
+                    if sched.has_reports() {
+                        let (started, done, spilled) =
+                            sched.take_reports();
+                        let site = self.site;
+                        self.send_control(ctx, t, Ev::SiteJobReport {
+                            site,
+                            started,
+                            done,
+                            spilled,
+                        }, 0);
+                    }
+                    return;
+                }
                 if self.done_buf.is_empty() {
                     return;
                 }
@@ -310,6 +370,13 @@ impl SiteShard for SiteWorld {
                     node,
                     preempted: preempt,
                 }, 0);
+                // Partitioned: the slice loses the node now — running
+                // jobs requeue locally (fresh seq on restart) and the
+                // shrunken capacity spills its excess backlog.
+                if let Some(sched) = self.sched.as_mut() {
+                    sched.deregister(node, t);
+                    self.sweep_local(t, ctx);
+                }
             }
 
             Ev::TerminationDone { vm, node, update, .. } => {
@@ -324,6 +391,13 @@ impl SiteShard for SiteWorld {
                     node,
                     update,
                 }, 0);
+                // Partitioned: jobs placed on the node between the
+                // power-off decision and the termination requeue
+                // locally, then re-place or spill.
+                if let Some(sched) = self.sched.as_mut() {
+                    sched.deregister(node, t);
+                    self.sweep_local(t, ctx);
+                }
             }
 
             Ev::HeartbeatPing { .. } => {
@@ -345,6 +419,25 @@ impl SiteShard for SiteWorld {
                 // fault decision, so its fate is decorrelated from the
                 // original's.
                 self.send_control(ctx, t, *ev, attempt);
+            }
+
+            Ev::JobBlock { jobs, .. } => {
+                // Partitioned dispatch: a routed block of leased jobs
+                // joins the local queue; place what fits right away.
+                if let Some(sched) = self.sched.as_mut() {
+                    sched.submit_block(&jobs, t);
+                }
+                self.sweep_local(t, ctx);
+            }
+
+            Ev::SiteNodeUp { node, slots, .. } => {
+                // Partitioned dispatch: a freshly joined worker is
+                // granted to the local slice (a new incarnation — it
+                // pays the one-time setup again).
+                if let Some(sched) = self.sched.as_mut() {
+                    sched.grant(node, slots, t);
+                }
+                self.sweep_local(t, ctx);
             }
 
             // Control-shard events never reach a site handler.

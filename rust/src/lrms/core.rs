@@ -370,6 +370,36 @@ impl BatchCore {
         Ok(())
     }
 
+    /// Drain the entire pending queue in submission order, marking each
+    /// job Cancelled, and return the drained ids. This is the bulk
+    /// primitive behind partitioned spillover: a site slice that lost
+    /// capacity empties its backlog with one call, keeps what still
+    /// fits locally (resubmitted under fresh ids), and returns the rest
+    /// to the dispatcher.
+    pub fn drain_pending(&mut self, t: SimTime) -> Vec<JobId> {
+        let mut out = Vec::with_capacity(self.queue.len());
+        while let Some(id) = self.queue.pop_front() {
+            let job = &mut self.jobs[id.0 as usize];
+            if job.state == JobState::Pending {
+                job.state = JobState::Cancelled;
+                job.finished_at = Some(t);
+                out.push(id);
+            }
+        }
+        out
+    }
+
+    /// Total slots on Up nodes — the capacity ceiling a site slice can
+    /// hold work against, independent of current occupancy.
+    pub fn up_slots(&self) -> u64 {
+        self.nodes
+            .iter()
+            .flatten()
+            .filter(|n| n.health == NodeHealth::Up)
+            .map(|n| n.slots as u64)
+            .sum()
+    }
+
     /// One scheduling sweep. Pops placed jobs off the queue front and
     /// stops the moment the cluster has no free slot left, so a
     /// saturated cluster costs O(1) per sweep and a completion event
@@ -881,5 +911,32 @@ mod tests {
         c.deregister_node("n1", t(1.0)).unwrap();
         assert!(c.node_id("n1").is_none());
         assert!(c.node_stat(id).is_none());
+    }
+
+    #[test]
+    fn drain_pending_empties_queue_in_order() {
+        let mut c = BatchCore::new(Placement::PackFirstFit);
+        c.register_node("n1", 1, t(0.0));
+        c.submit_batch(4, 1, t(1.0));
+        assert_eq!(c.up_slots(), 1);
+        let placed = c.schedule(t(1.0));
+        assert_eq!(placed.len(), 1);
+        let drained = c.drain_pending(t(2.0));
+        assert_eq!(drained, vec![JobId(1), JobId(2), JobId(3)]);
+        assert_eq!(c.pending(), 0);
+        for id in drained {
+            assert_eq!(c.job(id).unwrap().state, JobState::Cancelled);
+            assert_eq!(c.job(id).unwrap().finished_at, Some(t(2.0)));
+        }
+        // The running job is untouched, and the drained queue does not
+        // disturb subsequent scheduling.
+        assert_eq!(c.running(), 1);
+        assert!(c.drain_pending(t(3.0)).is_empty());
+        c.on_job_finished(placed[0].0, true, t(4.0)).unwrap();
+        let next = c.submit("", 1, t(5.0));
+        assert_eq!(c.schedule(t(5.0)), vec![(next, placed[0].1)]);
+        // Down capacity leaves up_slots.
+        c.set_node_health("n1", NodeHealth::Down, t(6.0)).unwrap();
+        assert_eq!(c.up_slots(), 0);
     }
 }

@@ -67,6 +67,16 @@
 //! Determinism is untouched — the affinity only changes *which thread*
 //! executes a segment, never the segment order.
 //!
+//! **Core pinning.** `StealConfig::pin_cores` (off by default, Linux
+//! only) pins worker `w` to CPU `w mod cores` via `sched_setaffinity`
+//! on thread startup, trading the kernel's freedom to migrate workers
+//! for stable cache residency on dedicated bench boxes. Pinning is
+//! wall-clock-only by the same argument as chain affinity: it decides
+//! where a worker runs, never what it drains, so every observable
+//! stream is byte-identical with the flag on or off (unit-proven by
+//! `pinning_is_determinism_neutral`). Pin failures are ignored —
+//! affinity is an optimization, not a correctness input.
+//!
 //! Worlds whose handlers genuinely need global state on every event
 //! implement [`MergedWorld`] instead and replay through
 //! [`run_merged_until`] — same queue, same deterministic order, serial
@@ -840,14 +850,52 @@ where
 pub struct StealConfig {
     /// Worker threads (clamped per window to the number of busy shards).
     pub threads: usize,
+    /// Pin worker `i` to CPU `i % cores` (Linux, best-effort; off by
+    /// default). A wall-clock affinity hint only: pinning changes
+    /// which core runs a worker, never which chains it drains or in
+    /// what order, so event streams and digests are byte-identical
+    /// with it on or off (the `pinning_is_determinism_neutral` test).
+    pub pin_cores: bool,
 }
 
 impl StealConfig {
-    /// `threads` worker threads.
+    /// `threads` worker threads, no core pinning.
     pub fn new(threads: usize) -> StealConfig {
-        StealConfig { threads }
+        StealConfig { threads, pin_cores: false }
+    }
+
+    /// `threads` worker threads pinned to CPUs round-robin.
+    pub fn pinned(threads: usize) -> StealConfig {
+        StealConfig { threads, pin_cores: true }
     }
 }
+
+/// Best-effort pin of the calling thread to CPU `worker % cores`
+/// (Linux only; a no-op elsewhere and on any syscall failure). Purely
+/// a wall-clock affinity hint — it never touches the event stream.
+#[cfg(target_os = "linux")]
+fn pin_current_thread(worker: usize) {
+    // Raw prototype instead of a libc dependency: the symbol is in
+    // every glibc/musl, and the kernel accepts any mask size that
+    // covers the CPUs actually set.
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize,
+                             mask: *const u64) -> i32;
+    }
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(64);
+    let mask: u64 = 1u64 << (worker % cores);
+    // pid 0 = the calling thread; failure is ignored (it is a hint).
+    unsafe {
+        let _ = sched_setaffinity(0, std::mem::size_of::<u64>(),
+                                  &mask);
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_worker: usize) {}
 
 /// One shard's window as a sequential chain of segments. At most one
 /// worker holds a chain at a time; the holder drains the segments in
@@ -1083,9 +1131,14 @@ where
                 let cv = Condvar::new();
                 std::thread::scope(|scope| {
                     let mut handles = Vec::new();
-                    for _ in 0..workers {
-                        handles.push(scope.spawn(|| {
-                            steal_worker(&state, &cv, horizon_t, lookahead)
+                    for w in 0..workers {
+                        let (state, cv) = (&state, &cv);
+                        let pin = cfg.pin_cores;
+                        handles.push(scope.spawn(move || {
+                            if pin {
+                                pin_current_thread(w);
+                            }
+                            steal_worker(state, cv, horizon_t, lookahead)
                         }));
                     }
                     for h in handles {
@@ -1312,7 +1365,7 @@ mod tests {
         for threads in [1usize, 2, 3] {
             for lookahead in [0.0, 10.0] {
                 let ((c1, s1, d1), _) = run_both(lookahead);
-                let cfg = StealConfig { threads };
+                let cfg = StealConfig::new(threads);
                 let (c2, s2, d2) = run_stealing_toy(lookahead, cfg);
                 assert_eq!(c1.log, c2.log,
                            "control log (threads={threads}, \
@@ -1340,13 +1393,31 @@ mod tests {
         q2.schedule_at(SimTime(0.0), TEv::Ctl(99));
         let end2 = run_sharded_stealing(
             &mut c2, &mut s2, &mut q2, SimTime(4.0),
-            StealConfig { threads: 2 });
+            StealConfig::new(2));
         assert_eq!(end1.0, end2.0);
         assert_eq!(c1.log, c2.log);
         for (a, b) in s1.iter().zip(&s2) {
             assert_eq!(a.log, b.log);
         }
         assert!(!q2.is_empty(), "horizon left events queued");
+    }
+
+    #[test]
+    fn pinning_is_determinism_neutral() {
+        // Core pinning is a wall-clock affinity hint: the event
+        // stream with pinning on must be byte-for-byte the stream
+        // with it off (and the serial reference).
+        for lookahead in [0.0, 10.0] {
+            let (c0, s0, d0) = run_stealing_toy(
+                lookahead, StealConfig::new(3));
+            let (c1, s1, d1) = run_stealing_toy(
+                lookahead, StealConfig::pinned(3));
+            assert_eq!(d0, d1);
+            assert_eq!(c0.log, c1.log);
+            for (a, b) in s0.iter().zip(&s1) {
+                assert_eq!(a.log, b.log);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,340 @@
+//! Partitioned dispatch acceptance suite.
+//!
+//! 1. With `RunConfig::dispatch = Partitioned` the run replays
+//!    byte-identically across the serial, sharded and stealing
+//!    engines — `RunReport::determinism_digest()`, recorder streams
+//!    and figure CSVs — on randomized multi-site paper workloads,
+//!    with and without WAN chaos.
+//! 2. The partitioned dispatcher places the same workload the
+//!    centralized reference places: every submitted job completes
+//!    exactly once in both modes (the two-phase lease protocol never
+//!    double-places and never loses a job), on randomized configs.
+//! 3. Spillover arbitration edge cases: a site returning a whole
+//!    block after losing its capacity, every worker site quarantined
+//!    at once, and spillover re-routed towards a site that goes dark
+//!    in the same window — each drained to completion and
+//!    byte-compared across all three engines.
+//!
+//! `EVHC_PROPTEST_CASES` bounds every property's case count (the CI
+//! quick mode sets it low; unset, each property uses its own default).
+
+use evhc::broker::ScenarioPlan;
+use evhc::cluster::{DispatchMode, Engine, HybridCluster, RunConfig,
+                    RunReport, WanFaultPlan};
+use evhc::util::proptest::check_n;
+use evhc::util::prng::Prng;
+
+/// Per-property case budget, bounded by `EVHC_PROPTEST_CASES` when set
+/// (the CI quick mode caps the full-cluster properties this way).
+fn cases(default: u32) -> u32 {
+    std::env::var("EVHC_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn run(cfg: RunConfig) -> Result<RunReport, String> {
+    HybridCluster::new(cfg)
+        .map_err(|e| e.to_string())?
+        .run()
+        .map_err(|e| e.to_string())
+}
+
+/// Serial reference vs sharded and stealing replays of `mk(engine)`:
+/// digests, recorder transition streams and figure CSVs must all be
+/// byte-identical, and the serial run must drain the whole workload.
+fn three_engine_identity(
+    mk: &dyn Fn(Engine) -> RunConfig,
+    what: &str,
+) -> Result<RunReport, String> {
+    let reference = run(mk(Engine::Serial))?;
+    let total = mk(Engine::Serial).workload.total_jobs();
+    if reference.jobs_completed != total {
+        return Err(format!("{what}: serial completed {}/{total}",
+                           reference.jobs_completed));
+    }
+    if reference.recorder.job_runs.len() != total as usize {
+        return Err(format!(
+            "{what}: serial recorded {} job runs for {total} jobs",
+            reference.recorder.job_runs.len()));
+    }
+    let ref_digest = reference.determinism_digest();
+    let until = reference.makespan;
+    let f10 = reference.recorder.fig10_usage(120.0, until).to_csv();
+    let f11 = reference.recorder.fig11_states(120.0, until).to_csv();
+    for engine in [Engine::Sharded { threads: 0 },
+                   Engine::Stealing { threads: 0 }] {
+        let r = run(mk(engine))?;
+        if r.determinism_digest() != ref_digest {
+            return Err(format!("{what}: {} diverged from serial",
+                               engine.label()));
+        }
+        if r.recorder.transitions_named()
+            != reference.recorder.transitions_named()
+        {
+            return Err(format!("{what}: {} transitions diverged",
+                               engine.label()));
+        }
+        if r.recorder.fig10_usage(120.0, until).to_csv() != f10 {
+            return Err(format!("{what}: {} fig10 diverged",
+                               engine.label()));
+        }
+        if r.recorder.fig11_states(120.0, until).to_csv() != f11 {
+            return Err(format!("{what}: {} fig11 diverged",
+                               engine.label()));
+        }
+    }
+    Ok(reference)
+}
+
+// ---------------------------------------------------------------------
+// Property: Serial ≡ Sharded ≡ Stealing under partitioned dispatch
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct PartCase {
+    scale: f64,
+    seed: u64,
+    n_sites: usize,
+    serialized: bool,
+    /// 0 = clean, 1 = spot wave, 2 = site outage, 3 = both.
+    scenario_kind: u8,
+    outage_site: usize,
+}
+
+fn part_case(r: &mut Prng) -> PartCase {
+    let n_sites = 2 + r.next_below(3) as usize; // 2..=4
+    PartCase {
+        scale: r.uniform(0.02, 0.06),
+        seed: r.next_u64(),
+        n_sites,
+        serialized: r.chance(0.5),
+        scenario_kind: r.next_below(4) as u8,
+        outage_site: r.next_below(n_sites as u64) as usize,
+    }
+}
+
+fn part_cfg(case: &PartCase, engine: Engine) -> RunConfig {
+    let mut cfg = RunConfig::paper_usecase_sites(case.scale, case.seed,
+                                                 case.n_sites);
+    cfg.inference_every = 0;
+    cfg.serialized_orchestrator = case.serialized;
+    cfg.engine = engine;
+    cfg.dispatch = DispatchMode::Partitioned;
+    let mut plan = ScenarioPlan::new();
+    if case.scenario_kind == 1 || case.scenario_kind == 3 {
+        plan = plan.spot_wave(0, 600.0, 0);
+    }
+    if case.scenario_kind == 2 || case.scenario_kind == 3 {
+        plan = plan.site_outage(case.outage_site, 900.0, 1800.0);
+    }
+    cfg.scenario = plan;
+    cfg
+}
+
+/// The tentpole acceptance property: partitioned dispatch replays
+/// byte-identically across all three engines on randomized paper
+/// configs, scenario failures included, and drains every job.
+#[test]
+fn prop_partitioned_replays_byte_identically_on_all_engines() {
+    check_n("partitioned (serial ≡ sharded ≡ stealing)", cases(8),
+            part_case, |case| {
+        three_engine_identity(&|engine| part_cfg(case, engine),
+                              "partitioned")
+            .map(|_| ())
+    });
+}
+
+/// Same property under randomized WAN chaos: fault windows (loss,
+/// duplication, jitter, partitions that trip the heartbeat breaker)
+/// target worker sites while blocks are in flight, and the three
+/// replays must still not differ in a single byte — the lease
+/// protocol drops every stale zombie report identically.
+#[test]
+fn prop_partitioned_chaos_replays_byte_identically() {
+    #[derive(Debug, Clone)]
+    struct ChaosCase {
+        part: PartCase,
+        fault_seed: u64,
+        /// `(kind, site, at, duration, magnitude)`, kind 0 = loss,
+        /// 1 = duplication, 2 = jitter, 3 = partition.
+        windows: Vec<(u8, usize, f64, f64, f64)>,
+    }
+    let gen = |r: &mut Prng| {
+        let mut part = part_case(r);
+        part.n_sites = 2 + r.next_below(2) as usize; // 2..=3
+        part.scenario_kind = 0;
+        let windows = (0..1 + r.next_below(3) as usize)
+            .map(|_| {
+                let kind = r.next_below(4) as u8;
+                let site = 1
+                    + r.next_below(part.n_sites as u64 - 1) as usize;
+                let at = r.uniform(120.0, 2400.0);
+                let duration = r.uniform(120.0, 900.0);
+                let magnitude = match kind {
+                    0 => r.uniform(0.05, 0.5),
+                    1 => r.uniform(0.1, 0.5),
+                    2 => r.uniform(1.0, 60.0),
+                    _ => 0.0,
+                };
+                (kind, site, at, duration, magnitude)
+            })
+            .collect();
+        ChaosCase { part, fault_seed: r.next_u64(), windows }
+    };
+    check_n("partitioned wan chaos", cases(4), gen, |case| {
+        let mk = |engine: Engine| {
+            let mut cfg = part_cfg(&case.part, engine);
+            let mut plan = WanFaultPlan::new(case.fault_seed);
+            for &(kind, site, at, dur, mag) in &case.windows {
+                plan = match kind {
+                    0 => plan.lossy(site, at, dur, mag),
+                    1 => plan.duplicating(site, at, dur, mag),
+                    2 => plan.jittery(site, at, dur, mag),
+                    _ => plan.partition(site, at, dur),
+                };
+            }
+            cfg.faults = plan;
+            cfg
+        };
+        let r = three_engine_identity(&mk, "partitioned-chaos")?;
+        // Revoked leases all recovered: nothing double-placed, nothing
+        // lost to a zombie site.
+        if r.lease_recovered_jobs != r.lease_requeued_jobs {
+            return Err(format!(
+                "lease recovery leaked: {} revoked, {} recovered",
+                r.lease_requeued_jobs, r.lease_recovered_jobs));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Property: partitioned ≡ centralized on the workload it places
+// ---------------------------------------------------------------------
+
+/// The partitioned dispatcher is placement-equivalent to the
+/// centralized reference in the sense that matters for the paper
+/// figures: both modes place and complete *every* submitted job
+/// exactly once (`jobs_completed` and the recorder's job-run stream
+/// agree with the workload total), and each mode is individually
+/// deterministic. The event timelines legitimately differ — blocks
+/// ride the WAN and site-local rngs draw durations — so the digest is
+/// compared within each mode (re-run) rather than across modes.
+#[test]
+fn prop_partitioned_places_the_same_workload_as_centralized() {
+    check_n("partitioned ≡ centralized workload", cases(8), part_case,
+            |case| {
+        let total = part_cfg(case, Engine::Serial).workload.total_jobs();
+        for mode in [DispatchMode::Centralized,
+                     DispatchMode::Partitioned] {
+            let mk = || {
+                let mut cfg = part_cfg(case, Engine::Serial);
+                cfg.dispatch = mode;
+                cfg
+            };
+            let r = run(mk())?;
+            if r.jobs_completed != total {
+                return Err(format!("{mode:?} completed {}/{total}",
+                                   r.jobs_completed));
+            }
+            if r.recorder.job_runs.len() != total as usize {
+                return Err(format!(
+                    "{mode:?} recorded {} runs for {total} jobs \
+                     (double placement or loss)",
+                    r.recorder.job_runs.len()));
+            }
+            if r.preempt_recovered != r.preempted_jobs {
+                return Err(format!(
+                    "{mode:?} preemption leaked: {} requeued, {} \
+                     recovered", r.preempted_jobs,
+                    r.preempt_recovered));
+            }
+            let again = run(mk())?;
+            if again.determinism_digest() != r.determinism_digest() {
+                return Err(format!("{mode:?} replay diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Spillover arbitration edge cases (three engines byte-compared)
+// ---------------------------------------------------------------------
+
+/// Edge (a): a spot wave reclaims a site's workers right after blocks
+/// were routed there — the site cannot place them locally, returns
+/// the jobs in its barrier emission, and the dispatcher re-routes
+/// them elsewhere. The wave must really have fired, every preempted
+/// job must recover, and all three engines must agree byte-for-byte.
+#[test]
+fn whole_block_returned_when_a_spot_wave_empties_the_site() {
+    let mk = |engine: Engine| {
+        let mut cfg = RunConfig::paper_usecase_sites(0.08, 11, 3);
+        cfg.inference_every = 0;
+        cfg.engine = engine;
+        cfg.dispatch = DispatchMode::Partitioned;
+        // count = 0 reclaims the site's entire spot allocation.
+        cfg.scenario = ScenarioPlan::new().spot_wave(0, 600.0, 0);
+        cfg
+    };
+    let r = three_engine_identity(&mk, "spot-wave-spill")
+        .expect("edge (a)");
+    assert!(r.preempted_vms >= 1, "wave never reclaimed a VM");
+    assert_eq!(r.preempt_recovered, r.preempted_jobs);
+}
+
+/// Edge (b): every worker site that can be partitioned goes dark at
+/// once and stays dark past the heartbeat-breaker threshold. The
+/// dispatcher must fall back — routing only to what remains, holding
+/// the rest queued — and drain the full workload once the partitions
+/// heal and the quarantines close. Byte-identical on all engines.
+#[test]
+fn all_sites_quarantined_falls_back_and_recovers() {
+    let n_sites = 3;
+    let mk = |engine: Engine| {
+        let mut cfg = RunConfig::paper_usecase_sites(0.05, 23, n_sites);
+        cfg.inference_every = 0;
+        cfg.engine = engine;
+        cfg.dispatch = DispatchMode::Partitioned;
+        // Fault plans may not target site 0 (the front end), so "all
+        // sites" is every remote worker site, simultaneously, for
+        // long enough to blow the default breaker threshold.
+        let mut plan = WanFaultPlan::new(17);
+        for site in 1..n_sites {
+            plan = plan.partition(site, 1200.0, 900.0);
+        }
+        cfg.faults = plan;
+        cfg
+    };
+    let r = three_engine_identity(&mk, "all-quarantined")
+        .expect("edge (b)");
+    assert!(r.quarantine_windows >= 1, "breaker never tripped");
+    assert!(r.quarantine_secs > 0.0);
+    assert_eq!(r.lease_recovered_jobs, r.lease_requeued_jobs,
+               "a revoked lease never recovered");
+}
+
+/// Edge (c): a spot wave forces site 1 to return its block, and the
+/// natural re-route target (site 2) is partitioned in the same
+/// window — the spilled jobs' second home goes dark while they are in
+/// flight, its quarantine revokes them again, and they must still
+/// complete exactly once. Byte-identical on all engines.
+#[test]
+fn spillover_rerouted_when_target_site_goes_dark_same_window() {
+    let mk = |engine: Engine| {
+        let mut cfg = RunConfig::paper_usecase_sites(0.06, 31, 3);
+        cfg.inference_every = 0;
+        cfg.engine = engine;
+        cfg.dispatch = DispatchMode::Partitioned;
+        cfg.scenario = ScenarioPlan::new().spot_wave(1, 600.0, 0);
+        // Dark just after the spills are re-routed.
+        cfg.faults = WanFaultPlan::new(5).partition(2, 620.0, 700.0);
+        cfg
+    };
+    let r = three_engine_identity(&mk, "spill-into-dark-site")
+        .expect("edge (c)");
+    assert_eq!(r.preempt_recovered, r.preempted_jobs);
+    assert_eq!(r.lease_recovered_jobs, r.lease_requeued_jobs);
+}

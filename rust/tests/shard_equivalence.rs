@@ -196,7 +196,7 @@ impl Scn {
     }
 
     fn steal_cfg(&self) -> StealConfig {
-        StealConfig { threads: self.threads }
+        StealConfig::new(self.threads)
     }
 }
 
