@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Staged CI pipeline.
 #
-#   ./ci.sh                 # full pipeline: fmt lint build doc test chaos chaos-sweep obs bench compare
+#   ./ci.sh                 # full pipeline: fmt lint build doc test chaos chaos-sweep obs trace bench compare
 #   ./ci.sh <stage> [...]   # run the named stage(s) in the given order
 #
 # Stages:
@@ -26,6 +26,10 @@
 #                  and digest-neutrality properties plus the in-crate
 #                  observability unit test, bounded by
 #                  EVHC_PROPTEST_CASES
+#   trace          streaming-ingestion suite: SynthSource ≡ Workload
+#                  digest identity, bounded-watermark cross-engine
+#                  replays, trace-parser edge cases and the headroom
+#                  batching knob, bounded by EVHC_PROPTEST_CASES
 #   bench          scale bench in quick mode -> BENCH_scale.json; the
 #                  recovery-overhead frontier (chaos sweep) section is
 #                  bounded by EVHC_SWEEP_POINTS (default 4 grid points
@@ -126,6 +130,16 @@ stage_obs() {
             observability_is_digest_neutral_and_engine_identical
 }
 
+stage_trace() {
+    # The streaming-ingestion contract: every run feeds through the
+    # TraceSource layer, so SynthSource ≡ Workload identity, bounded
+    # watermarks and the parser edge cases are their own iterable
+    # stage. The full suite also runs under `cargo test` in tier 1.
+    echo "== trace: streaming ingestion suite (quick mode) =="
+    EVHC_PROPTEST_CASES=${EVHC_PROPTEST_CASES:-2} \
+        cargo test -q --test trace_equivalence
+}
+
 stage_bench() {
     echo "== bench: scale bench (quick mode) =="
     EVHC_SCALE_BENCH_QUICK=1 EVHC_SWEEP_POINTS="${EVHC_SWEEP_POINTS:-4}" \
@@ -191,20 +205,21 @@ run_stage() {
         chaos)         stage_chaos ;;
         chaos-sweep)   stage_chaos_sweep ;;
         obs)           stage_obs ;;
+        trace)         stage_trace ;;
         bench)         stage_bench ;;
         compare)       stage_compare ;;
         seed-baseline) stage_seed_baseline ;;
         *)
             echo "unknown stage: $1" >&2
             echo "stages: fmt lint build doc test chaos chaos-sweep" \
-                 "obs bench compare seed-baseline" >&2
+                 "obs trace bench compare seed-baseline" >&2
             return 2
             ;;
     esac
 }
 
 if [ "$#" -eq 0 ]; then
-    set -- fmt lint build doc test chaos chaos-sweep obs bench compare
+    set -- fmt lint build doc test chaos chaos-sweep obs trace bench compare
 fi
 for stage in "$@"; do
     run_stage "$stage"

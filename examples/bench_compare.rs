@@ -1,9 +1,10 @@
 //! Compare a fresh `BENCH_scale.json` against the committed
 //! `BENCH_baseline.json`, printing an events/sec and ms/tick table per
-//! scenario/stealing/cluster section plus the broker cost/makespan
-//! diff, the WAN-chaos recovery-overhead diff (both the fixed
-//! `chaos` variants and the `chaos_sweep` retry-knob frontier) and the
-//! `perf_profile` engine-profiler / tracing-overhead diff.
+//! scenario/stealing/cluster section, the streaming-`trace` jobs/sec
+//! diff (RSS warn-only), plus the broker cost/makespan diff, the
+//! WAN-chaos recovery-overhead diff (both the fixed `chaos` variants
+//! and the `chaos_sweep` retry-knob frontier) and the `perf_profile`
+//! engine-profiler / tracing-overhead diff.
 //!
 //! Regression policy:
 //! * events/sec drops beyond 10% are warned about; beyond 15% they are
@@ -160,6 +161,71 @@ fn compare_measured(baseline: &Json, fresh: &Json, key: &str,
                        else { "" };
             println!("{name:<22} {bytes_metric:<22} {b:>14.0} {f:>14.0} \
                       {delta:>+7.1}%{mark}");
+        }
+    }
+    tally
+}
+
+/// Diff the `trace` rows (streaming replay): per-engine jobs/sec is
+/// regression-tracked exactly like events/sec elsewhere (>10% warns,
+/// >15% gates under `EVHC_BENCH_GATE=1`); RSS is machine-dependent
+/// wall-state and stays warn-only, like the recorder-bytes trajectory.
+fn compare_trace(baseline: &Json, fresh: &Json) -> Tally {
+    let base_rows = rows_of(baseline, "trace");
+    let fresh_rows = rows_of(fresh, "trace");
+    let mut tally = Tally::default();
+    if fresh_rows.is_empty() {
+        return tally;
+    }
+    println!("\n[trace]");
+    println!("{:<22} {:<22} {:>14} {:>14} {:>8}", "row", "engine",
+             "base jobs/s", "fresh jobs/s", "delta");
+    println!("{}", "-".repeat(84));
+    for (name, fresh_row) in fresh_rows {
+        let Some((_, base_row)) =
+            base_rows.iter().find(|(n, _)| *n == name)
+        else {
+            println!("{name:<22} (new row, no baseline)");
+            continue;
+        };
+        for engine in ["serial", "sharded", "stealing"] {
+            let (Some(b), Some(f)) = (
+                metric(base_row, &[engine], "jobs_per_sec"),
+                metric(fresh_row, &[engine], "jobs_per_sec"),
+            ) else {
+                continue;
+            };
+            let delta = if b > 0.0 { (f - b) / b * 100.0 } else { 0.0 };
+            let mark = if delta < -GATE_PCT {
+                tally.warned += 1;
+                tally.gated += 1;
+                "  <-- REGRESSION (gate)"
+            } else if delta < -WARN_PCT {
+                tally.warned += 1;
+                "  <-- REGRESSION"
+            } else {
+                ""
+            };
+            println!("{name:<22} {engine:<22} {b:>14.0} {f:>14.0} \
+                      {delta:>+7.1}%{mark}");
+            // RSS trajectory: warn-only (machine- and allocator-
+            // dependent; the deterministic memory bound is asserted
+            // in-bench via peak_buffered_jobs).
+            if let (Some(bm), Some(fm)) = (
+                metric(base_row, &[engine], "rss_mb"),
+                metric(fresh_row, &[engine], "rss_mb"),
+            ) {
+                if bm != fm && bm > 0.0 {
+                    let dm = (fm - bm) / bm * 100.0;
+                    let mark = if dm > WARN_PCT {
+                        "  <-- GREW (warn-only)"
+                    } else {
+                        ""
+                    };
+                    println!("{:<22} {:<22} {bm:>11.0} MB {fm:>11.0} MB \
+                              {dm:>+7.1}%{mark}", "", "  rss");
+                }
+            }
         }
     }
     tally
@@ -414,14 +480,16 @@ fn main() {
         compare_measured(&baseline, &fresh, "stealing", STEAL_SECTIONS);
     let cluster =
         compare_measured(&baseline, &fresh, "cluster", CLUSTER_SECTIONS);
+    let trace = compare_trace(&baseline, &fresh);
     let broker_regressions = compare_broker(&baseline, &fresh);
     let chaos_regressions = compare_chaos(&baseline, &fresh, "chaos")
         + compare_chaos(&baseline, &fresh, "chaos_sweep");
     let profile = compare_perf_profile(&baseline, &fresh);
 
-    let warned =
-        scen.warned + steal.warned + cluster.warned + profile.warned;
-    let gated = scen.gated + steal.gated + cluster.gated + profile.gated;
+    let warned = scen.warned + steal.warned + cluster.warned
+        + trace.warned + profile.warned;
+    let gated = scen.gated + steal.gated + cluster.gated + trace.gated
+        + profile.gated;
     if warned > 0 || broker_regressions > 0 || chaos_regressions > 0 {
         println!("\nWARNING: {warned} section(s) regressed by more than \
                   {WARN_PCT}% events/sec ({gated} gating), \

@@ -23,6 +23,14 @@
 //!   through all three engines (`Serial`/`Sharded`/`Stealing`) with
 //!   cross-engine digest + figure byte-equality asserts, plus the
 //!   spill path with figures rendered straight from the spill streams,
+//! * `trace` — the streaming trace frontend: a generated
+//!   burst/diurnal arrival process (`EVHC_TRACE_JOBS` jobs; 20k quick,
+//!   1M full, 10M if you ask) replayed through a bounded ingest
+//!   watermark and spill-mode recorders on all three engines —
+//!   jobs/sec and RSS per engine, with cross-engine digest equality,
+//!   100% completion, the `peak_buffered_jobs ≤ watermark + block`
+//!   memory bound and a `SynthSource ≡ Workload` digest compare
+//!   asserted in-bench,
 //! * `broker` — full-cluster elasticity runs over 2–8 sites, policy ×
 //!   scenario (spot-preemption waves, site outages, price spikes):
 //!   cost, makespan and preempted-job recovery per combination, each
@@ -70,6 +78,7 @@ use evhc::sim::shard::{default_threads, run_sharded, run_sharded_serial,
 use evhc::sim::{EventQueue, ShardEvent, ShardKey, ShardedQueue, SimTime};
 use evhc::util::bench::section;
 use evhc::util::prng::Prng;
+use evhc::workload::trace::{ArrivalGen, ArrivalProfile, SynthSource};
 
 struct Scenario {
     name: &'static str,
@@ -1233,6 +1242,194 @@ fn cluster_section(quick: bool) -> Json {
 }
 
 // ---------------------------------------------------------------------
+// Trace: streaming multi-million-job replay in bounded memory
+// ---------------------------------------------------------------------
+
+/// The trace-bench topology: the paper ladder with a carved 200-node
+/// fleet (the quota shaping of [`cluster_cfg`]) but no workload
+/// override — arrivals come from the streaming source instead.
+fn trace_cluster_cfg(nodes: u32, sites: usize, engine: Engine)
+    -> RunConfig {
+    let mut cfg = RunConfig::paper_usecase_sites(1.0, 7, sites);
+    cfg.inference_every = 0;
+    cfg.engine = engine;
+    cfg.template.scalable.count = nodes;
+    cfg.template.scalable.min_instances = 0;
+    cfg.template.scalable.max_instances = nodes;
+    let share = nodes / sites as u32 + 4;
+    let cpus = cfg.template.worker.num_cpus;
+    for site in &mut cfg.sites {
+        site.quota.max_vms = share as usize + 4;
+        site.quota.max_vcpus = (share + 4) * cpus;
+        site.quota.max_public_ips = 8;
+    }
+    cfg
+}
+
+/// Mean arrival rate for the generated trace, jobs per simulated
+/// second — ~0.9× the 200-node fleet's drain rate, so the backlog (and
+/// with it broker pressure and RSS) stays bounded while CLUES still
+/// breathes with the bursts.
+const TRACE_RATE: f64 = 18.0;
+
+fn trace_profile() -> ArrivalProfile {
+    ArrivalProfile {
+        base_rate: TRACE_RATE,
+        diurnal_amplitude: 0.2,
+        diurnal_period_s: 86_400.0,
+        burst_prob: 0.02,
+        burst_multiplier: 2.0,
+        window_s: 60.0,
+    }
+}
+
+fn trace_engine_json(jobs_per_sec: f64, wall_s: f64, events: u64,
+                     rss_mb: f64) -> Json {
+    Json::Object(vec![
+        ("jobs_per_sec".into(), Json::Num(jobs_per_sec)),
+        ("wall_s".into(), Json::Num(wall_s)),
+        ("events".into(), Json::Num(events as f64)),
+        ("rss_mb".into(), Json::Num(rss_mb)),
+    ])
+}
+
+/// Streamed replay throughput: a generated burst/diurnal trace
+/// (`EVHC_TRACE_JOBS` jobs; 20k quick, 1M full — point it at 10M for
+/// the long-haul run) streamed through a bounded ingest watermark and
+/// spill-mode recorders on all three engines. Asserts, in-bench:
+/// cross-engine digest equality, 100% completion, the deterministic
+/// frontend-memory bound (`peak_buffered_jobs` ≤ watermark + one
+/// block), and `SynthSource ≡ Workload` digest identity. Jobs/sec is
+/// the gated metric; RSS (via `util::rss`, warn-only) records the
+/// constant-memory story.
+fn trace_section(quick: bool) -> Json {
+    let jobs: u64 = std::env::var("EVHC_TRACE_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 20_000 } else { 1_000_000 });
+    let (nodes, sites) = (200u32, 4usize);
+    let watermark: u32 = if quick { 5_000 } else { 50_000 };
+    // One block is one arrival window; bursts and the sampling jitter
+    // cap the worst case (rate × window × diurnal × burst × jitter).
+    let max_block = (TRACE_RATE * 60.0 * 1.2 * 2.0 * 1.4) as u64;
+    println!("\n--- stream-{jobs}j ({nodes} nodes, {sites} sites, \
+              watermark {watermark} jobs) ---");
+
+    let mk = |engine: Engine, spill: Option<std::path::PathBuf>| {
+        let mut cfg = trace_cluster_cfg(nodes, sites, engine);
+        cfg.source = Some(Box::new(
+            ArrivalGen::new(7, jobs, trace_profile())
+                .expect("trace profile")));
+        cfg.ingest_watermark_jobs = watermark;
+        cfg.metrics_spill_dir = spill;
+        // The arrival span scales with the trace, so the safety stop
+        // must too (1.5× span + drain slack).
+        cfg.horizon = SimTime(jobs as f64 / TRACE_RATE * 1.5 + 30_000.0);
+        cfg
+    };
+
+    let mut engines_json = Vec::new();
+    let mut ref_digest = None;
+    let mut peak_buffered = 0u64;
+    let mut events = 0u64;
+    for engine in [Engine::Serial, Engine::Sharded { threads: 0 },
+                   Engine::Stealing { threads: 0 }] {
+        let dir = std::env::temp_dir()
+            .join(format!("evhc_bench_trace_{}", engine.label()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("trace spill dir");
+        let wall = Instant::now();
+        let r = HybridCluster::new(mk(engine, Some(dir.clone())))
+            .expect("trace world")
+            .run()
+            .expect("trace run");
+        let wall_s = wall.elapsed().as_secs_f64();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(r.jobs_completed as u64, jobs,
+                   "streamed trace must drain every job ({})",
+                   engine.label());
+        match &ref_digest {
+            None => ref_digest = Some(r.determinism_digest()),
+            Some(d) => assert_eq!(&r.determinism_digest(), d,
+                "streamed replay diverged on {}", engine.label()),
+        }
+        assert!(r.peak_buffered_jobs <= watermark as u64 + max_block,
+                "frontend peak {} exceeds watermark {watermark} + one \
+                 block {max_block}", r.peak_buffered_jobs);
+        if jobs > watermark as u64 + max_block {
+            assert!(r.peak_buffered_jobs < jobs,
+                    "a bounded feed must never hold the whole trace");
+        }
+        peak_buffered = r.peak_buffered_jobs;
+        events = r.events;
+        let jobs_per_sec = jobs as f64 / wall_s.max(1e-9);
+        let rss_mb = evhc::util::rss::current_rss_kb()
+            .map(|kb| kb as f64 / 1024.0)
+            .unwrap_or(0.0);
+        println!("  {:<18} {jobs_per_sec:>12.0} jobs/s  \
+                  ({} events, {wall_s:.2}s wall, rss {rss_mb:.0} MB)",
+                 engine.label(), r.events);
+        engines_json.push((engine.label().to_string(),
+                           trace_engine_json(jobs_per_sec, wall_s,
+                                             r.events, rss_mb)));
+    }
+    println!("  frontend peak      {peak_buffered} buffered jobs \
+              (bound: watermark {watermark} + block <= {max_block})");
+
+    // SynthSource ≡ Workload: a four-block materialized workload of
+    // the same shape replays digest-identically whether it streams
+    // through the implicit default wrapper or an explicitly
+    // constructed SynthSource. Capped — this compare is about the
+    // submission path, not throughput.
+    let synth_jobs = jobs.min(100_000) as u32;
+    let mk_synth = |explicit: bool| {
+        let mut cfg = trace_cluster_cfg(nodes, sites, Engine::Serial);
+        let per = synth_jobs / 4;
+        cfg.workload = evhc::workload::Workload {
+            blocks: [0.0f64, 900.0, 1800.0, 2700.0]
+                .iter()
+                .zip([per, per, per, synth_jobs - 3 * per])
+                .map(|(&at, jobs)| evhc::workload::Block {
+                    at: SimTime(at),
+                    jobs,
+                })
+                .collect(),
+            setup_secs: evhc::workload::SETUP_SECS_MEAN,
+        };
+        if explicit {
+            cfg.source = Some(Box::new(
+                SynthSource::new(cfg.workload.clone())));
+        }
+        cfg
+    };
+    let implicit = HybridCluster::new(mk_synth(false))
+        .expect("synth world").run().expect("synth run");
+    let explicit = HybridCluster::new(mk_synth(true))
+        .expect("synth world").run().expect("synth run");
+    assert_eq!(explicit.determinism_digest(),
+               implicit.determinism_digest(),
+               "SynthSource diverged from the materialized Workload");
+    assert_eq!(implicit.jobs_completed, synth_jobs);
+    println!("  synth == workload  digest-identical at {synth_jobs} \
+              jobs");
+
+    let mut fields = vec![
+        ("name".into(), Json::Str(format!("stream-{jobs}j"))),
+        ("jobs".into(), Json::Num(jobs as f64)),
+        ("nodes".into(), Json::Num(nodes as f64)),
+        ("sites".into(), Json::Num(sites as f64)),
+        ("watermark_jobs".into(), Json::Num(watermark as f64)),
+        ("events".into(), Json::Num(events as f64)),
+        ("peak_buffered_jobs".into(),
+         Json::Num(peak_buffered as f64)),
+    ];
+    for (label, j) in engines_json {
+        fields.push((label, j));
+    }
+    Json::Array(vec![Json::Object(fields)])
+}
+
+// ---------------------------------------------------------------------
 // Engine profiler + tracing overhead (the paper use case)
 // ---------------------------------------------------------------------
 
@@ -1515,6 +1712,13 @@ fn main() {
     section("SCALE: paper use case x engines");
     let cluster_rows = cluster_section(quick);
 
+    // Streaming trace frontend: a generated multi-(hundred-)thousand
+    // job arrival process replayed in bounded frontend memory, with
+    // cross-engine digest, completion, memory-bound and
+    // SynthSource ≡ Workload asserts in-bench.
+    section("SCALE: streaming trace replay");
+    let trace_rows = trace_section(quick);
+
     // Broker: policy × scenario × multi-site elasticity runs, each
     // replayed twice with an in-bench determinism assert.
     section("SCALE: broker policy x scenario");
@@ -1541,6 +1745,7 @@ fn main() {
         ("scenarios".into(), Json::Array(rows)),
         ("stealing".into(), stealing_rows),
         ("cluster".into(), cluster_rows),
+        ("trace".into(), trace_rows),
         ("broker".into(), broker_rows),
         ("chaos".into(), chaos_rows),
         ("chaos_sweep".into(), chaos_sweep_rows),

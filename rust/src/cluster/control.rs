@@ -30,6 +30,7 @@ use crate::sim::shard::ControlPlane;
 use crate::sim::{ShardedQueue, SimTime};
 use crate::util::prng::Prng;
 use crate::vrouter::Overlay;
+use crate::workload::trace::{SynthSource, TraceFeed};
 use crate::workload::Workload;
 
 use super::dispatch::{DispatchJob, DispatchLrmsView, DispatchMode,
@@ -157,6 +158,13 @@ pub struct ControlWorld {
     pub(crate) vm_records: Vec<VmRec>,
     /// node → index into vm_records for the live incarnation.
     live_record: HashMap<NodeId, usize>,
+    /// Streaming arrival frontend: blocks are pulled from the trace
+    /// source up to `cfg.ingest_watermark_jobs` ahead of the clock and
+    /// scheduled as `Ev::SubmitBlock` control events, so the workload
+    /// never materializes beyond the watermark. All pulls happen in
+    /// control handlers, stamped on the sim clock — byte-identical
+    /// across engines.
+    pub(crate) feed: TraceFeed,
     /// jobs submitted so far / completed.
     jobs_submitted: u32,
     pub(crate) jobs_completed: u32,
@@ -263,6 +271,14 @@ impl ControlWorld {
         n_sites: usize,
         control_latency: f64,
     ) -> ControlWorld {
+        let mut cfg = cfg;
+        // Arrival frontend: an explicit trace source, or the materialized
+        // workload wrapped in `SynthSource` (block-for-block identical by
+        // construction). The streaming path is the only submission path.
+        let source = cfg.source.take().unwrap_or_else(|| {
+            Box::new(SynthSource::new(cfg.workload.clone()))
+        });
+        let feed = TraceFeed::new(source, cfg.ingest_watermark_jobs);
         let chaos = !cfg.faults.is_empty()
             || cfg.scenario.events.iter().any(|e| {
                 matches!(e, ScenarioEvent::WanPartition { .. }
@@ -297,6 +313,7 @@ impl ControlWorld {
             deploy_log: Vec::new(),
             vm_records: Vec::new(),
             live_record: HashMap::new(),
+            feed,
             jobs_submitted: 0,
             jobs_completed: 0,
             next_file_id: 0,
@@ -932,9 +949,24 @@ impl ControlWorld {
         self.recorder.milestone(t, format!(
             "initial cluster ready ({} workers) — workload timeline t0",
             self.cfg.template.scalable.count));
-        for i in 0..self.cfg.workload.blocks.len() {
-            let at = self.cfg.workload.blocks[i].at;
-            q.schedule_at(SimTime(t.0 + at.0), Ev::SubmitBlock(i));
+        // Pull the trace up to the ingest watermark and schedule one
+        // SubmitBlock per buffered block; each submission refills the
+        // buffer in turn (see the Ev::SubmitBlock handler). Under the
+        // unbounded default every block is scheduled right here, which
+        // reproduces the pre-streaming schedule bit for bit.
+        match self.feed.refill() {
+            Ok(scheduled) => {
+                for (i, at) in scheduled {
+                    q.schedule_at(SimTime(t.0 + at.0),
+                                  Ev::SubmitBlock(i as usize));
+                }
+            }
+            Err(e) => {
+                let msg = format!("trace source failed: {e:#}");
+                self.recorder.milestone(t, format!("FATAL: {msg}"));
+                self.fatal = Some(msg);
+                return;
+            }
         }
         // Scenario events ride the same relative timeline. They are
         // operator actions on the control plane (reclaims touch the
@@ -1299,8 +1331,13 @@ impl ControlWorld {
     }
 
     fn workload_done(&self) -> bool {
-        let total: u32 = self.cfg.workload.total_jobs();
-        self.jobs_completed >= total
+        // The trace is fully drained (no block left to pull or pop)
+        // and every job that was ever submitted has completed. With a
+        // streaming source the total is unknown until the source
+        // reports end-of-trace, so "done" is defined by the feed, not
+        // by a precomputed job count.
+        self.feed.drained()
+            && self.jobs_completed >= self.jobs_submitted
     }
 
     /// Process one site's batched completed-run report: validate each
@@ -1485,6 +1522,16 @@ impl ControlWorld {
                     credit[rt.site] += st.slots as i64;
                 }
             }
+        }
+        // Headroom batching: with `max_blocks_per_barrier = k`, each
+        // site may hold up to k barriers' worth of leased work (the
+        // site-side spill cap scales to match), so large traces need
+        // ~k× fewer route round-trips. k = 1 is the classic one-pass
+        // greedy route, byte-identical to the pre-knob behaviour.
+        let rounds = self.cfg.dispatch_cfg.max_blocks_per_barrier
+            .max(1) as i64;
+        for c in credit.iter_mut() {
+            *c *= rounds;
         }
         let mut d = self.dispatch.take().expect("checked above");
         for (s, c) in credit.iter_mut().enumerate() {
@@ -1897,7 +1944,15 @@ impl ControlPlane for ControlWorld {
             }
 
             Ev::SubmitBlock(i) => {
-                let jobs = self.cfg.workload.blocks[i].jobs;
+                // The feed pops in the same global index order the
+                // SubmitBlock events were scheduled in — arrival times
+                // are validated non-decreasing, so event order matches
+                // buffer order.
+                debug_assert_eq!(self.feed.next_pop_index(), i as u64);
+                let Some(block) = self.feed.pop_front() else {
+                    return; // unreachable unless the feed misbehaved
+                };
+                let jobs = block.jobs;
                 // One bulk core call per block (a 100k-job block is a
                 // single submit), not one trait dispatch per job.
                 match self.dispatch.as_mut() {
@@ -1912,6 +1967,26 @@ impl ControlPlane for ControlWorld {
                 if self.trace.enabled() {
                     self.trace.instant(t, "job", "job.submit-block",
                         format!("block={} jobs={jobs}", i + 1));
+                }
+                // Popping freed watermark room: pull the next blocks
+                // from the source and schedule them on the workload
+                // timeline. Under the unbounded default everything was
+                // already scheduled at t0 and this is a no-op.
+                match self.feed.refill() {
+                    Ok(scheduled) => {
+                        for (j, at) in scheduled {
+                            q.schedule_at(
+                                SimTime(self.workload_t0.0 + at.0),
+                                Ev::SubmitBlock(j as usize));
+                        }
+                    }
+                    Err(e) => {
+                        let msg =
+                            format!("trace source failed: {e:#}");
+                        self.recorder.milestone(
+                            t, format!("FATAL: {msg}"));
+                        self.fatal = Some(msg);
+                    }
                 }
                 self.pump_jobs(q, t);
                 // Immediate CLUES reaction on new work.

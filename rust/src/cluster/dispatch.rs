@@ -65,6 +65,29 @@ pub enum DispatchMode {
     Partitioned,
 }
 
+/// Partitioned-dispatch tuning knobs ([`crate::cluster::RunConfig`]
+/// carries one; the value used is echoed in
+/// [`crate::cluster::RunReport::max_blocks_per_barrier`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DispatchConfig {
+    /// Routing headroom per barrier, in whole rounds of each site's Up
+    /// capacity: the credit extended to a site is
+    /// `max_blocks_per_barrier × up-slots − inflight`, and a site's
+    /// local backlog may hold the same multiple before
+    /// [`SiteSched::spill_excess`] returns the overflow. `1` (the
+    /// default) is the classic one-greedy-pass route — byte-identical
+    /// to the pre-knob behaviour; larger values keep sites fed for
+    /// several rounds per barrier, cutting control traffic on large
+    /// streamed traces at the cost of coarser rebalancing.
+    pub max_blocks_per_barrier: u32,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        DispatchConfig { max_blocks_per_barrier: 1 }
+    }
+}
+
 /// One job leased to a site in an `Ev::JobBlock` (and echoed back in
 /// spill reports). `epoch` is the lease generation — see the module
 /// doc's two-phase contract.
@@ -159,6 +182,11 @@ pub struct Dispatcher {
     /// When each currently-idle granted node last became idle.
     idle_since: HashMap<NodeId, f64>,
     done: u32,
+    /// Jobs queued or leased-but-unbound, maintained incrementally so
+    /// the CLUES pending-depth poll is O(1) at millions of jobs.
+    n_unplaced: usize,
+    /// Jobs with an accepted start binding, maintained incrementally.
+    n_running: usize,
 }
 
 impl Dispatcher {
@@ -170,12 +198,15 @@ impl Dispatcher {
             busy: HashMap::new(),
             idle_since: HashMap::new(),
             done: 0,
+            n_unplaced: 0,
+            n_running: 0,
         }
     }
 
     /// Enqueue `count` identical `slots`-wide jobs (a workload block).
     pub fn submit(&mut self, count: u32, slots: u32, t: SimTime) {
         let slots = slots.max(1);
+        self.n_unplaced += count as usize;
         self.jobs.reserve(count as usize);
         self.queue.reserve(count as usize);
         for _ in 0..count {
@@ -208,25 +239,35 @@ impl Dispatcher {
 
     /// Jobs not yet bound to a node anywhere: queued at the control
     /// plane or leased to a site but not started. This is the pending
-    /// depth CLUES polls for elasticity.
+    /// depth CLUES polls for elasticity — an incrementally-maintained
+    /// counter, not a job-table scan, so the poll stays O(1) on
+    /// multi-million-job streamed traces.
     pub fn unplaced(&self) -> usize {
-        self.jobs
-            .iter()
-            .filter(|j| match j.lease {
-                Lease::Queued => true,
-                Lease::Routed { on, .. } => on.is_none(),
-                Lease::Done => false,
-            })
-            .count()
+        debug_assert_eq!(
+            self.n_unplaced,
+            self.jobs
+                .iter()
+                .filter(|j| match j.lease {
+                    Lease::Queued => true,
+                    Lease::Routed { on, .. } => on.is_none(),
+                    Lease::Done => false,
+                })
+                .count()
+        );
+        self.n_unplaced
     }
 
     /// Jobs with an accepted start binding and no completion yet.
     pub fn running(&self) -> usize {
-        self.jobs
-            .iter()
-            .filter(|j| matches!(j.lease,
-                                 Lease::Routed { on: Some(_), .. }))
-            .count()
+        debug_assert_eq!(
+            self.n_running,
+            self.jobs
+                .iter()
+                .filter(|j| matches!(j.lease,
+                                     Lease::Routed { on: Some(_), .. }))
+                .count()
+        );
+        self.n_running
     }
 
     /// Slots leased to `site` and not yet completed.
@@ -278,8 +319,14 @@ impl Dispatcher {
         j.last_seq = run.seq;
         j.lease = Lease::Routed { site, on: Some((run.node, run.seq)) };
         let rebound_from = on.map(|(n, _)| n);
-        if let Some(old) = rebound_from {
-            self.unbind(old, slots, run.at.0);
+        match rebound_from {
+            // First accepted binding under this lease: unplaced→running.
+            None => {
+                self.n_unplaced -= 1;
+                self.n_running += 1;
+            }
+            // A rebind was already running; counts are unchanged.
+            Some(old) => self.unbind(old, slots, run.at.0),
         }
         *self.busy.entry(run.node).or_insert(0) += slots;
         self.idle_since.remove(&run.node);
@@ -303,6 +350,13 @@ impl Dispatcher {
         let slots = j.slots;
         let submitted_at = j.submitted_at;
         j.lease = Lease::Done;
+        // A bound job leaves `running`; one that completed ahead of its
+        // lost start report was still counted unplaced.
+        if on.is_some() {
+            self.n_running -= 1;
+        } else {
+            self.n_unplaced -= 1;
+        }
         self.inflight[site] =
             self.inflight[site].saturating_sub(slots as u64);
         self.done += 1;
@@ -339,6 +393,10 @@ impl Dispatcher {
         let slots = j.slots;
         j.lease = Lease::Queued;
         j.last_seq = 0;
+        if on.is_some() {
+            self.n_running -= 1;
+            self.n_unplaced += 1;
+        }
         self.inflight[site] =
             self.inflight[site].saturating_sub(slots as u64);
         if let Some((n, _)) = on {
@@ -363,6 +421,10 @@ impl Dispatcher {
             let slots = j.slots;
             j.lease = Lease::Queued;
             j.last_seq = 0;
+            if on.is_some() {
+                self.n_running -= 1;
+                self.n_unplaced += 1;
+            }
             self.inflight[site] =
                 self.inflight[site].saturating_sub(slots as u64);
             revoked.push(JobId(i as u64));
@@ -540,6 +602,11 @@ pub struct SiteSched {
     /// event order, so all engines sample identically.
     rng: Prng,
     setup_mean: f64,
+    /// Local-backlog allowance in rounds of Up capacity
+    /// ([`DispatchConfig::max_blocks_per_barrier`]): the spill
+    /// threshold scales with the routing credit, or k-round credit
+    /// would immediately bounce as spill storms.
+    backlog_rounds: u64,
     /// Node incarnations that already paid the one-time setup.
     setup_paid: HashSet<NodeId>,
     pub started_buf: Vec<DispatchRun>,
@@ -560,7 +627,7 @@ struct LocalJob {
 
 impl SiteSched {
     pub fn new(placement: Placement, names: NodeNames, seed: u64,
-               setup_mean: f64) -> SiteSched {
+               setup_mean: f64, max_blocks_per_barrier: u32) -> SiteSched {
         SiteSched {
             core: BatchCore::with_names(placement, names.clone()),
             names,
@@ -568,6 +635,7 @@ impl SiteSched {
             seq: 0,
             rng: Prng::new(seed),
             setup_mean,
+            backlog_rounds: max_blocks_per_barrier.max(1) as u64,
             setup_paid: HashSet::new(),
             started_buf: Vec::new(),
             done_buf: Vec::new(),
@@ -673,12 +741,13 @@ impl SiteSched {
     }
 
     /// Spill the local backlog the site can no longer hold: the local
-    /// queue may back up to one full round of the site's Up capacity
-    /// (those jobs start within one job length); anything beyond that —
-    /// in particular the *whole* queue when capacity dropped to zero —
-    /// is returned to the dispatcher. Returns the number spilled.
+    /// queue may back up to `backlog_rounds` full rounds of the site's
+    /// Up capacity (one round's jobs start within one job length);
+    /// anything beyond that — in particular the *whole* queue when
+    /// capacity dropped to zero — is returned to the dispatcher.
+    /// Returns the number spilled.
     pub fn spill_excess(&mut self, t: SimTime) -> usize {
-        let cap = self.core.up_slots();
+        let cap = self.core.up_slots().saturating_mul(self.backlog_rounds);
         let pending = self.core.pending() as u64;
         // Jobs here are 1-slot (the paper's workload), so the count
         // check is exact; the keep loop below is slot-accurate anyway.
@@ -905,7 +974,7 @@ mod tests {
     fn site_sched_places_reports_and_finishes() {
         let names = NodeNames::new();
         let mut s = SiteSched::new(Placement::PackFirstFit, names.clone(),
-                                   7, 270.0);
+                                   7, 270.0, 1);
         let n = names.intern("vnode-1");
         s.grant(n, 1, t(0.0));
         s.submit_block(&[DispatchJob { job: JobId(40), slots: 1,
@@ -942,7 +1011,7 @@ mod tests {
         // Edge case (a): a site with no Up capacity returns everything.
         let names = NodeNames::new();
         let mut s = SiteSched::new(Placement::PackFirstFit, names.clone(),
-                                   7, 270.0);
+                                   7, 270.0, 1);
         let jobs: Vec<DispatchJob> = (0..3)
             .map(|i| DispatchJob { job: JobId(i), slots: 1, epoch: 1 })
             .collect();
@@ -958,7 +1027,7 @@ mod tests {
     fn capacity_loss_spills_only_the_excess_backlog() {
         let names = NodeNames::new();
         let mut s = SiteSched::new(Placement::PackFirstFit, names.clone(),
-                                   7, 270.0);
+                                   7, 270.0, 1);
         let n1 = names.intern("vnode-1");
         let n2 = names.intern("vnode-2");
         s.grant(n1, 1, t(0.0));

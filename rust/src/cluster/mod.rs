@@ -166,9 +166,9 @@ mod faults;
 mod site;
 
 pub use control::ControlWorld;
-pub use dispatch::{DispatchJob, DispatchLrmsView, DispatchMode,
-                   DispatchRun, Dispatcher, DoneOutcome, SiteSched,
-                   StartOutcome};
+pub use dispatch::{DispatchConfig, DispatchJob, DispatchLrmsView,
+                   DispatchMode, DispatchRun, Dispatcher, DoneOutcome,
+                   SiteSched, StartOutcome};
 pub use faults::{BreakerState, FaultWindow, RetryPolicy,
                  SiteHealthTracker, WanFaultPlan};
 pub use site::SiteWorld;
@@ -197,6 +197,7 @@ use crate::sim::{ShardEvent, ShardKey, ShardedQueue, SimTime};
 use crate::tosca::{ClusterTemplate, LrmsKind};
 use crate::util::prng::Prng;
 use crate::vrouter::Overlay;
+use crate::workload::trace::{TraceSource, WATERMARK_UNBOUNDED};
 use crate::workload::Workload;
 
 /// Which replay engine drives [`HybridCluster::run`]. All three produce
@@ -303,6 +304,28 @@ pub struct RunConfig {
     /// timelines legitimately differ (block routing and WAN report
     /// lag), so digests are compared within a mode, not across modes.
     pub dispatch: DispatchMode,
+    /// Partitioned-dispatch tuning (headroom batching); ignored under
+    /// `Centralized`. The knob used is echoed in
+    /// [`RunReport::max_blocks_per_barrier`].
+    pub dispatch_cfg: DispatchConfig,
+    /// Streaming workload source. `None` (the default) streams
+    /// `workload` through a
+    /// [`crate::workload::trace::SynthSource`], so the streaming path
+    /// is the *only* submission path and synthetic vs trace-driven
+    /// runs are byte-identical by construction. Set a boxed
+    /// [`TraceSource`] (CSV parser, arrival generator) to replay a
+    /// trace instead; `workload` then only contributes the per-node
+    /// setup-time model.
+    pub source: Option<Box<dyn TraceSource>>,
+    /// Arrival look-ahead watermark, in jobs: the control plane keeps
+    /// pulling blocks from the source until at least this many jobs are
+    /// buffered ahead of the clock, and tops back up as submission
+    /// events drain the buffer — frontend memory is O(watermark + one
+    /// block) regardless of trace length.
+    /// [`WATERMARK_UNBOUNDED`] (the default) buffers the whole trace up
+    /// front, which reproduces the pre-streaming event schedule
+    /// bit-for-bit; large streamed runs set a finite watermark.
+    pub ingest_watermark_jobs: u32,
 }
 
 impl RunConfig {
@@ -335,6 +358,9 @@ impl RunConfig {
             report_interval_s: 1.0,
             obs: ObsConfig::default(),
             dispatch: DispatchMode::Centralized,
+            dispatch_cfg: DispatchConfig::default(),
+            source: None,
+            ingest_watermark_jobs: WATERMARK_UNBOUNDED,
         }
     }
 
@@ -583,6 +609,18 @@ pub struct RunReport {
     /// Correlated per-site partition windows installed (fault-plan
     /// region groups + scenario regional outages, one per member).
     pub regional_windows: u32,
+    /// High-water mark of arrival jobs buffered ahead of the clock by
+    /// the streaming frontend — the constant-memory bound the trace
+    /// tests assert (≤ watermark + one block). Deterministic, but a
+    /// function of [`RunConfig::ingest_watermark_jobs`] rather than of
+    /// the replay outcome, so it stays out of the digest: the same
+    /// trace replayed under different watermarks digests identically
+    /// in everything the cluster *did*.
+    pub peak_buffered_jobs: u64,
+    /// Echo of [`DispatchConfig::max_blocks_per_barrier`] (1 under
+    /// centralized dispatch or the default knob). Pure configuration,
+    /// not a replay outcome — excluded from the digest.
+    pub max_blocks_per_barrier: u32,
     /// Merged causal trace — `Some` iff [`RunConfig::obs`] enabled
     /// tracing. Sim-clock data: byte-identical across engines, never
     /// part of the digest (passive recording cannot perturb the run).
@@ -894,6 +932,7 @@ impl HybridCluster {
                             ^ (i as u64 + 1)
                                 .wrapping_mul(0x9E37_79B9_7F4A_7C15),
                         setup_mean,
+                        cfg.dispatch_cfg.max_blocks_per_barrier,
                     )
                 });
                 SiteWorld::new(
@@ -1080,6 +1119,9 @@ impl HybridCluster {
             site_deranked_at: control.health_deranked_at.clone(),
             site_first_quarantine_at: control.first_quarantine_at.clone(),
             regional_windows: control.regional_windows,
+            peak_buffered_jobs: control.feed.peak_buffered_jobs(),
+            max_blocks_per_barrier:
+                control.cfg.dispatch_cfg.max_blocks_per_barrier,
             trace,
             metrics,
             profile,

@@ -12,5 +12,6 @@ pub mod logging;
 pub mod plot;
 pub mod prng;
 pub mod proptest;
+pub mod rss;
 pub mod stats;
 pub mod yaml;

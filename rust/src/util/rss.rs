@@ -1,0 +1,60 @@
+//! Resident-set-size probe for the scale benches: reads
+//! `/proc/self/status` (Linux). Memory telemetry is strictly
+//! wall-clock-class data — reported, never digested, and the bench
+//! gate treats it as warn-only — so `None` on non-Linux hosts (or a
+//! procfs hiccup) degrades to "no RSS column", never to a failure.
+
+use std::fs;
+
+/// Parse a `/proc/self/status` line like `VmRSS:\t  123456 kB`.
+fn field_kb(status: &str, key: &str) -> Option<u64> {
+    for line in status.lines() {
+        let Some(rest) = line.strip_prefix(key) else {
+            continue;
+        };
+        let rest = rest.trim_start_matches(':').trim();
+        let num = rest.split_whitespace().next()?;
+        return num.parse::<u64>().ok();
+    }
+    None
+}
+
+/// Current resident set size in kB (`VmRSS`), if the platform exposes
+/// procfs.
+pub fn current_rss_kb() -> Option<u64> {
+    let status = fs::read_to_string("/proc/self/status").ok()?;
+    field_kb(&status, "VmRSS")
+}
+
+/// Peak resident set size in kB (`VmHWM` — the high-water mark the
+/// kernel tracked for the whole process lifetime), if available.
+pub fn peak_rss_kb() -> Option<u64> {
+    let status = fs::read_to_string("/proc/self/status").ok()?;
+    field_kb(&status, "VmHWM")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_status_fields() {
+        let status = "Name:\tevhc\nVmPeak:\t  200000 kB\n\
+                      VmRSS:\t   12345 kB\nVmHWM:\t   23456 kB\n";
+        assert_eq!(field_kb(status, "VmRSS"), Some(12345));
+        assert_eq!(field_kb(status, "VmHWM"), Some(23456));
+        assert_eq!(field_kb(status, "VmSwap"), None);
+    }
+
+    #[test]
+    fn live_probe_is_sane_when_present() {
+        // On Linux both gauges exist and peak >= current > 0; elsewhere
+        // the probe must simply return None rather than panic.
+        if let (Some(cur), Some(peak)) =
+            (current_rss_kb(), peak_rss_kb())
+        {
+            assert!(cur > 0);
+            assert!(peak >= cur / 2, "peak={peak} cur={cur}");
+        }
+    }
+}

@@ -13,6 +13,7 @@
 //! the values the JAX build path recorded in the artifact manifest.
 
 pub mod staging;
+pub mod trace;
 
 pub use staging::StagingPath;
 
@@ -51,8 +52,11 @@ impl Workload {
     /// for fast tests (1.0 = full paper run).
     pub fn paper(scale: f64) -> Workload {
         let total = ((TOTAL_FILES as f64 * scale).round() as u32).max(4);
-        let per = total / 4;
-        let sizes = [per, per, per, total - 3 * per];
+        // Clamp every block to at least one job: integer rounding at
+        // extreme scales must never produce a zero-job (empty) block.
+        let per = (total / 4).max(1);
+        let last = total.saturating_sub(3 * per).max(1);
+        let sizes = [per, per, per, last];
         // Block spacing: the first block lands at t=0 (the paper's
         // 15:00); later blocks arrive after roughly an hour of work plus
         // a short gap — early enough to catch nodes in power-off grace.
@@ -143,6 +147,17 @@ mod tests {
                 "{}", w.total_jobs());
         // Block spacing shrinks with scale.
         assert!(w.blocks[1].at.0 < 200.0);
+    }
+
+    #[test]
+    fn tiny_scale_never_yields_a_zero_job_block() {
+        for scale in [1e-9, 1e-6, 0.0001, 0.0005, 0.001, 0.01, 1.0] {
+            let w = Workload::paper(scale);
+            assert!(w.blocks.iter().all(|b| b.jobs >= 1),
+                    "scale {scale}: {:?}",
+                    w.blocks.iter().map(|b| b.jobs).collect::<Vec<_>>());
+            assert!(w.total_jobs() >= 4, "scale {scale}");
+        }
     }
 
     #[test]

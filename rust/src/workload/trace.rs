@@ -1,0 +1,705 @@
+//! Streaming workload ingestion: arrival blocks pulled on demand.
+//!
+//! The materialized [`Workload`](super::Workload) allocates every
+//! submission block up front, which caps a run at whatever arrival
+//! process fits in memory. This module inverts that: a [`TraceSource`]
+//! yields blocks one at a time, and the control plane buffers at most a
+//! watermark's worth of look-ahead in a [`TraceFeed`], so a
+//! multi-million-job trace is replayed with the frontend holding O(
+//! watermark) jobs regardless of trace length.
+//!
+//! Three sources cover the spectrum the evaluation needs:
+//!
+//! * [`SynthSource`] wraps an existing [`Workload`] — the default. Every
+//!   run streams through it, so synthetic and trace-driven replays share
+//!   one submission path and are byte-identical by construction.
+//! * [`CsvTrace`] parses an Azure-VM-style arrival CSV (`arrival_secs,
+//!   jobs` rows, non-decreasing timestamps) incrementally off any
+//!   `BufRead`, never holding more than one line.
+//! * [`ArrivalGen`] synthesizes a Google-cluster-style arrival process —
+//!   diurnal rate modulation plus random bursts — from an
+//!   [`ArrivalProfile`] and a seed, deterministically.
+//!
+//! All pulls happen in control-shard handlers and every block is stamped
+//! on the simulation clock, so the three replay engines see identical
+//! event streams (the engine byte-identity contract).
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::sim::SimTime;
+use crate::util::prng::Prng;
+
+use super::{Block, Workload};
+
+/// A pull-based arrival stream: the control plane asks for the next
+/// submission block only when its look-ahead buffer drains below the
+/// watermark, so implementations must never need the whole trace in
+/// memory at once.
+///
+/// Contract: arrival times are finite, non-negative and non-decreasing
+/// across successive blocks ([`TraceFeed`] re-validates centrally);
+/// errors are reported through `anyhow` — a malformed trace must never
+/// panic the simulation.
+pub trait TraceSource: Send {
+    /// Short human label for reports and milestones.
+    fn label(&self) -> &str;
+
+    /// Pull the next arrival block; `Ok(None)` means the trace is
+    /// exhausted.
+    fn next_block(&mut self) -> anyhow::Result<Option<Block>>;
+
+    /// Total job count if the source knows it up front (cheap metadata,
+    /// not a license to materialize).
+    fn total_jobs_hint(&self) -> Option<u64> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// SynthSource: the materialized Workload, streamed.
+// ---------------------------------------------------------------------
+
+/// Streams an existing [`Workload`] block by block. This is the default
+/// source for every run: wrapping the synthetic workload keeps one
+/// single submission path, so `SynthSource ≡ Workload` holds by
+/// construction (and is re-proven by digest compare in
+/// `tests/trace_equivalence.rs`).
+pub struct SynthSource {
+    workload: Workload,
+    next: usize,
+}
+
+impl SynthSource {
+    pub fn new(workload: Workload) -> SynthSource {
+        SynthSource { workload, next: 0 }
+    }
+}
+
+impl TraceSource for SynthSource {
+    fn label(&self) -> &str {
+        "synth"
+    }
+
+    fn next_block(&mut self) -> anyhow::Result<Option<Block>> {
+        let b = self.workload.blocks.get(self.next).cloned();
+        if b.is_some() {
+            self.next += 1;
+        }
+        Ok(b)
+    }
+
+    fn total_jobs_hint(&self) -> Option<u64> {
+        Some(self.workload.total_jobs() as u64)
+    }
+}
+
+// ---------------------------------------------------------------------
+// CsvTrace: Azure-VM-style arrival CSV, parsed incrementally.
+// ---------------------------------------------------------------------
+
+/// Incremental parser for an Azure-VM-style arrival trace:
+///
+/// ```text
+/// arrival_secs,jobs
+/// 0,40
+/// 30,25
+/// # comments and blank lines are skipped
+/// 60,31
+/// ```
+///
+/// One `arrival_secs,jobs` row per submission block, timestamps
+/// non-decreasing. The reader is consumed line by line, so a 10M-row
+/// file streams in constant memory. Every malformed shape — wrong
+/// column count, unparsable numbers, negative or non-finite times,
+/// out-of-order rows, zero-job rows, a trace with no data rows at all —
+/// surfaces as a clean `anyhow` error naming the line, never a panic.
+pub struct CsvTrace<R: BufRead + Send> {
+    reader: R,
+    label: String,
+    line_no: u64,
+    rows: u64,
+    last_at: f64,
+    done: bool,
+}
+
+impl CsvTrace<BufReader<File>> {
+    /// Open an arrival CSV on disk.
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let file = File::open(path)
+            .with_context(|| format!("opening trace {}", path.display()))?;
+        Ok(CsvTrace::from_reader(
+            BufReader::new(file),
+            path.display().to_string(),
+        ))
+    }
+}
+
+impl<R: BufRead + Send> CsvTrace<R> {
+    /// Wrap any buffered reader (a file, an in-memory cursor in tests).
+    pub fn from_reader(reader: R, label: String) -> Self {
+        CsvTrace {
+            reader,
+            label,
+            line_no: 0,
+            rows: 0,
+            last_at: 0.0,
+            done: false,
+        }
+    }
+
+    fn parse_row(&self, line: &str) -> anyhow::Result<Block> {
+        let mut cols = line.split(',');
+        let (Some(at_s), Some(jobs_s), None) =
+            (cols.next(), cols.next(), cols.next())
+        else {
+            bail!(
+                "{} line {}: expected `arrival_secs,jobs`, got {:?}",
+                self.label, self.line_no, line
+            );
+        };
+        let at: f64 = at_s.trim().parse().with_context(|| {
+            format!(
+                "{} line {}: bad arrival_secs {:?}",
+                self.label, self.line_no, at_s.trim()
+            )
+        })?;
+        let jobs: u32 = jobs_s.trim().parse().with_context(|| {
+            format!(
+                "{} line {}: bad job count {:?}",
+                self.label, self.line_no, jobs_s.trim()
+            )
+        })?;
+        if !at.is_finite() || at < 0.0 {
+            bail!(
+                "{} line {}: arrival_secs must be finite and >= 0, got {at}",
+                self.label, self.line_no
+            );
+        }
+        if at < self.last_at {
+            bail!(
+                "{} line {}: out-of-order arrival {at} after {}",
+                self.label, self.line_no, self.last_at
+            );
+        }
+        if jobs == 0 {
+            bail!(
+                "{} line {}: zero-job block (drop the row instead)",
+                self.label, self.line_no
+            );
+        }
+        Ok(Block { at: SimTime(at), jobs })
+    }
+}
+
+impl<R: BufRead + Send> TraceSource for CsvTrace<R> {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn next_block(&mut self) -> anyhow::Result<Option<Block>> {
+        if self.done {
+            return Ok(None);
+        }
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self
+                .reader
+                .read_line(&mut line)
+                .with_context(|| format!("reading trace {}", self.label))?;
+            if n == 0 {
+                self.done = true;
+                if self.rows == 0 {
+                    bail!("{}: empty trace (no arrival rows)", self.label);
+                }
+                return Ok(None);
+            }
+            self.line_no += 1;
+            let trimmed = line.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            // An optional header row is tolerated once, before any data.
+            if self.rows == 0
+                && trimmed
+                    .chars()
+                    .next()
+                    .is_some_and(|c| c.is_ascii_alphabetic())
+            {
+                continue;
+            }
+            let block = self.parse_row(trimmed)?;
+            self.rows += 1;
+            self.last_at = block.at.0;
+            return Ok(Some(block));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// ArrivalGen: Google-cluster-style burst/diurnal arrival process.
+// ---------------------------------------------------------------------
+
+/// Shape of a generated arrival process: a base rate modulated by a
+/// diurnal sinusoid, with random multiplicative bursts — the
+/// bursty/heterogeneous profile of public cluster traces, without
+/// shipping gigabytes of trace data.
+#[derive(Debug, Clone, Copy)]
+pub struct ArrivalProfile {
+    /// Mean arrival rate, jobs per simulated second.
+    pub base_rate: f64,
+    /// Diurnal modulation amplitude in `[0, 1)`: the rate swings between
+    /// `base_rate * (1 - amp)` and `base_rate * (1 + amp)`.
+    pub diurnal_amplitude: f64,
+    /// Diurnal period in seconds (86400 for a literal day).
+    pub diurnal_period_s: f64,
+    /// Per-window probability of a burst window.
+    pub burst_prob: f64,
+    /// Rate multiplier during a burst window.
+    pub burst_multiplier: f64,
+    /// Arrival-window granularity: one block per window, in seconds.
+    pub window_s: f64,
+}
+
+impl Default for ArrivalProfile {
+    fn default() -> Self {
+        ArrivalProfile {
+            base_rate: 10.0,
+            diurnal_amplitude: 0.5,
+            diurnal_period_s: 86_400.0,
+            burst_prob: 0.05,
+            burst_multiplier: 3.0,
+            window_s: 60.0,
+        }
+    }
+}
+
+impl ArrivalProfile {
+    fn validate(&self) -> anyhow::Result<()> {
+        if !(self.base_rate.is_finite() && self.base_rate > 0.0) {
+            bail!("arrival profile: base_rate must be > 0, got {}",
+                  self.base_rate);
+        }
+        if !(0.0..1.0).contains(&self.diurnal_amplitude) {
+            bail!("arrival profile: diurnal_amplitude must be in [0,1), \
+                   got {}", self.diurnal_amplitude);
+        }
+        if !(self.diurnal_period_s.is_finite()
+            && self.diurnal_period_s > 0.0)
+        {
+            bail!("arrival profile: diurnal_period_s must be > 0, got {}",
+                  self.diurnal_period_s);
+        }
+        if !(0.0..=1.0).contains(&self.burst_prob) {
+            bail!("arrival profile: burst_prob must be in [0,1], got {}",
+                  self.burst_prob);
+        }
+        if !(self.burst_multiplier.is_finite()
+            && self.burst_multiplier >= 1.0)
+        {
+            bail!("arrival profile: burst_multiplier must be >= 1, got {}",
+                  self.burst_multiplier);
+        }
+        if !(self.window_s.is_finite() && self.window_s > 0.0) {
+            bail!("arrival profile: window_s must be > 0, got {}",
+                  self.window_s);
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic generated trace: emits one block per arrival window
+/// until exactly `total_jobs` jobs have been produced. Same seed and
+/// profile → identical block stream, independent of engine or pull
+/// cadence.
+pub struct ArrivalGen {
+    profile: ArrivalProfile,
+    rng: Prng,
+    t: f64,
+    carry: f64,
+    emitted: u64,
+    total_jobs: u64,
+    label: String,
+}
+
+impl ArrivalGen {
+    pub fn new(seed: u64, total_jobs: u64, profile: ArrivalProfile)
+        -> anyhow::Result<ArrivalGen> {
+        profile.validate()?;
+        if total_jobs == 0 {
+            bail!("arrival generator: total_jobs must be > 0");
+        }
+        Ok(ArrivalGen {
+            profile,
+            rng: Prng::new(seed ^ 0x7ACE),
+            t: 0.0,
+            carry: 0.0,
+            emitted: 0,
+            total_jobs,
+            label: format!("gen-{total_jobs}j"),
+        })
+    }
+}
+
+impl TraceSource for ArrivalGen {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn next_block(&mut self) -> anyhow::Result<Option<Block>> {
+        let p = self.profile;
+        while self.emitted < self.total_jobs {
+            let phase =
+                std::f64::consts::TAU * self.t / p.diurnal_period_s;
+            let mut rate =
+                p.base_rate * (1.0 + p.diurnal_amplitude * phase.sin());
+            if self.rng.chance(p.burst_prob) {
+                rate *= p.burst_multiplier;
+            }
+            // Fractional arrivals carry over, so thin windows still
+            // accumulate into jobs instead of rounding to nothing.
+            self.carry += rate * p.window_s * self.rng.uniform(0.6, 1.4);
+            let at = self.t;
+            self.t += p.window_s;
+            let due = (self.carry.floor() as u64)
+                .min(self.total_jobs - self.emitted);
+            if due == 0 {
+                continue;
+            }
+            self.carry -= due as f64;
+            self.emitted += due;
+            return Ok(Some(Block { at: SimTime(at), jobs: due as u32 }));
+        }
+        Ok(None)
+    }
+
+    fn total_jobs_hint(&self) -> Option<u64> {
+        Some(self.total_jobs)
+    }
+}
+
+// ---------------------------------------------------------------------
+// TraceFeed: the control plane's bounded look-ahead buffer.
+// ---------------------------------------------------------------------
+
+/// The watermark value meaning "buffer the whole trace up front" — the
+/// pre-streaming behaviour, and the default so existing configurations
+/// replay bit-for-bit.
+pub const WATERMARK_UNBOUNDED: u32 = u32::MAX;
+
+/// Bounded look-ahead between a [`TraceSource`] and the control plane.
+///
+/// The pull protocol: [`TraceFeed::refill`] draws blocks from the
+/// source until at least `watermark_jobs` jobs are buffered (or the
+/// source is exhausted) and hands back their global indexes and arrival
+/// offsets for the caller to schedule; each [`TraceFeed::pop_front`]
+/// consumes the oldest buffered block at its submission event. Control
+/// calls `refill` once at workload start and again after every pop, so
+/// the buffer breathes between `watermark_jobs` and zero while the
+/// trace drains — frontend memory is O(watermark + one block),
+/// independent of trace length, which [`TraceFeed::peak_buffered_jobs`]
+/// records deterministically.
+pub struct TraceFeed {
+    source: Box<dyn TraceSource>,
+    buf: VecDeque<Block>,
+    watermark_jobs: u64,
+    buffered_jobs: u64,
+    peak_buffered: u64,
+    pulled_blocks: u64,
+    popped_blocks: u64,
+    last_at: f64,
+    exhausted: bool,
+}
+
+impl TraceFeed {
+    pub fn new(source: Box<dyn TraceSource>, watermark_jobs: u32)
+        -> TraceFeed {
+        TraceFeed {
+            source,
+            buf: VecDeque::new(),
+            watermark_jobs: watermark_jobs.max(1) as u64,
+            buffered_jobs: 0,
+            peak_buffered: 0,
+            pulled_blocks: 0,
+            popped_blocks: 0,
+            last_at: 0.0,
+            exhausted: false,
+        }
+    }
+
+    pub fn label(&self) -> &str {
+        self.source.label()
+    }
+
+    /// Pull blocks until the look-ahead holds at least the watermark,
+    /// returning `(global_block_index, arrival_offset)` for each newly
+    /// buffered block so the caller can schedule its submission event.
+    ///
+    /// On a source or validation error the feed marks itself exhausted
+    /// and rolls back the blocks this call buffered (their events were
+    /// never scheduled), so the run drains exactly what was already
+    /// scheduled and the error surfaces as the run's fatal diagnosis.
+    pub fn refill(&mut self)
+        -> anyhow::Result<Vec<(u64, SimTime)>> {
+        let mut newly: Vec<(u64, SimTime)> = Vec::new();
+        let fail = |feed: &mut TraceFeed, n: usize, e: anyhow::Error| {
+            feed.exhausted = true;
+            for _ in 0..n {
+                let b = feed.buf.pop_back().expect("rollback underflow");
+                feed.buffered_jobs -= b.jobs as u64;
+                feed.pulled_blocks -= 1;
+            }
+            Err(e)
+        };
+        while !self.exhausted && self.buffered_jobs < self.watermark_jobs {
+            match self.source.next_block() {
+                Ok(Some(b)) => {
+                    if !b.at.0.is_finite() || b.at.0 < 0.0 {
+                        let e = anyhow::anyhow!(
+                            "trace {}: block {} arrival {} is not a \
+                             finite non-negative offset",
+                            self.source.label(), self.pulled_blocks,
+                            b.at.0);
+                        return fail(self, newly.len(), e);
+                    }
+                    if b.at.0 < self.last_at {
+                        let e = anyhow::anyhow!(
+                            "trace {}: block {} arrives at {} after {}",
+                            self.source.label(), self.pulled_blocks,
+                            b.at.0, self.last_at);
+                        return fail(self, newly.len(), e);
+                    }
+                    self.last_at = b.at.0;
+                    self.buffered_jobs += b.jobs as u64;
+                    self.peak_buffered =
+                        self.peak_buffered.max(self.buffered_jobs);
+                    newly.push((self.pulled_blocks, b.at));
+                    self.pulled_blocks += 1;
+                    self.buf.push_back(b);
+                }
+                Ok(None) => self.exhausted = true,
+                Err(e) => return fail(self, newly.len(), e),
+            }
+        }
+        Ok(newly)
+    }
+
+    /// Consume the oldest buffered block (its submission event fired).
+    pub fn pop_front(&mut self) -> Option<Block> {
+        let b = self.buf.pop_front()?;
+        self.buffered_jobs -= b.jobs as u64;
+        self.popped_blocks += 1;
+        Some(b)
+    }
+
+    /// Global index of the block [`TraceFeed::pop_front`] returns next.
+    pub fn next_pop_index(&self) -> u64 {
+        self.popped_blocks
+    }
+
+    /// True once the source has no further blocks *and* every buffered
+    /// block's submission event has fired.
+    pub fn drained(&self) -> bool {
+        self.exhausted && self.buf.is_empty()
+    }
+
+    /// High-water mark of buffered (pulled, not yet submitted) jobs —
+    /// the deterministic frontend-memory bound: at most the watermark
+    /// plus the one block that crossed it.
+    pub fn peak_buffered_jobs(&self) -> u64 {
+        self.peak_buffered
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn csv(text: &'static str) -> CsvTrace<Cursor<&'static [u8]>> {
+        CsvTrace::from_reader(Cursor::new(text.as_bytes()),
+                              "test.csv".into())
+    }
+
+    fn drain(src: &mut dyn TraceSource) -> anyhow::Result<Vec<Block>> {
+        let mut out = Vec::new();
+        while let Some(b) = src.next_block()? {
+            out.push(b);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn synth_source_streams_the_workload_verbatim() {
+        let w = Workload::paper(0.05);
+        let mut s = SynthSource::new(w.clone());
+        let blocks = drain(&mut s).unwrap();
+        assert_eq!(blocks.len(), w.blocks.len());
+        for (a, b) in blocks.iter().zip(&w.blocks) {
+            assert_eq!(a.at.0, b.at.0);
+            assert_eq!(a.jobs, b.jobs);
+        }
+        assert_eq!(s.total_jobs_hint(), Some(w.total_jobs() as u64));
+        // Exhausted stays exhausted.
+        assert!(s.next_block().unwrap().is_none());
+    }
+
+    #[test]
+    fn csv_parses_header_comments_and_blanks() {
+        let mut t = csv("arrival_secs,jobs\n# warmup\n\n0,40\n 30 , 25 \n\
+                         60,31\n");
+        let blocks = drain(&mut t).unwrap();
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks[0].jobs, 40);
+        assert_eq!(blocks[1].at.0, 30.0);
+        assert_eq!(blocks[2].jobs, 31);
+    }
+
+    #[test]
+    fn csv_rejects_malformed_shapes_without_panicking() {
+        for (bad, why) in [
+            ("0,10\n30\n", "missing column"),
+            ("0,10\n30,5,9\n", "extra column"),
+            ("0,ten\n", "non-numeric jobs"),
+            ("zero,10\n5,1\n", "non-numeric time after header slot"),
+            ("0,10\n-5,4\n", "negative time"),
+            ("0,10\nNaN,4\n", "non-finite time"),
+            ("60,10\n30,4\n", "out-of-order time"),
+            ("0,0\n", "zero jobs"),
+            ("", "empty trace"),
+            ("# only comments\n\n", "comment-only trace"),
+            ("arrival_secs,jobs\n", "header-only trace"),
+        ] {
+            let err = drain(&mut csv(bad))
+                .expect_err(&format!("{why}: {bad:?} must not parse"));
+            assert!(!err.to_string().is_empty(), "{why}");
+        }
+    }
+
+    #[test]
+    fn csv_errors_name_the_line() {
+        let err = drain(&mut csv("0,10\n30,bogus\n")).unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"),
+                "error should name line 2: {err:#}");
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_exact() {
+        let profile = ArrivalProfile {
+            base_rate: 5.0,
+            window_s: 30.0,
+            ..ArrivalProfile::default()
+        };
+        let a = drain(&mut ArrivalGen::new(9, 2000, profile).unwrap())
+            .unwrap();
+        let b = drain(&mut ArrivalGen::new(9, 2000, profile).unwrap())
+            .unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.at.0, x.jobs), (y.at.0, y.jobs));
+        }
+        assert_eq!(a.iter().map(|x| x.jobs as u64).sum::<u64>(), 2000);
+        assert!(a.windows(2).all(|w| w[0].at.0 <= w[1].at.0),
+                "arrivals must be non-decreasing");
+        assert!(a.iter().all(|x| x.jobs > 0));
+        let c = drain(&mut ArrivalGen::new(10, 2000, profile).unwrap())
+            .unwrap();
+        assert!(a.len() != c.len()
+                    || a.iter().zip(&c).any(|(x, y)| x.jobs != y.jobs),
+                "different seeds should differ");
+    }
+
+    #[test]
+    fn generator_rejects_bad_profiles() {
+        let bad = [
+            ArrivalProfile { base_rate: 0.0, ..Default::default() },
+            ArrivalProfile { diurnal_amplitude: 1.5, ..Default::default() },
+            ArrivalProfile { burst_prob: 2.0, ..Default::default() },
+            ArrivalProfile { burst_multiplier: 0.5, ..Default::default() },
+            ArrivalProfile { window_s: -1.0, ..Default::default() },
+            ArrivalProfile { diurnal_period_s: 0.0, ..Default::default() },
+        ];
+        for p in bad {
+            assert!(ArrivalGen::new(1, 10, p).is_err(), "{p:?}");
+        }
+        assert!(ArrivalGen::new(1, 0, ArrivalProfile::default()).is_err());
+    }
+
+    #[test]
+    fn feed_bounds_lookahead_by_the_watermark() {
+        let w = Workload::paper(1.0); // 4 blocks of ~919 jobs
+        let max_block =
+            w.blocks.iter().map(|b| b.jobs as u64).max().unwrap();
+        let mut feed =
+            TraceFeed::new(Box::new(SynthSource::new(w.clone())), 100);
+        let newly = feed.refill().unwrap();
+        // 100-job watermark: one ~919-job block crosses it.
+        assert_eq!(newly.len(), 1);
+        assert!(!feed.drained());
+        let mut popped = 0u64;
+        loop {
+            let Some(b) = feed.pop_front() else { break };
+            popped += b.jobs as u64;
+            for (i, _) in feed.refill().unwrap() {
+                assert!(i < w.blocks.len() as u64);
+            }
+        }
+        assert!(feed.drained());
+        assert_eq!(popped, w.total_jobs() as u64);
+        assert!(feed.peak_buffered_jobs() <= 100 + max_block,
+                "peak {} must stay within watermark + one block",
+                feed.peak_buffered_jobs());
+        assert!(feed.peak_buffered_jobs() < w.total_jobs() as u64);
+    }
+
+    #[test]
+    fn unbounded_feed_buffers_everything_up_front() {
+        let w = Workload::paper(0.1);
+        let mut feed = TraceFeed::new(
+            Box::new(SynthSource::new(w.clone())), WATERMARK_UNBOUNDED);
+        let newly = feed.refill().unwrap();
+        assert_eq!(newly.len(), w.blocks.len());
+        assert!(feed.refill().unwrap().is_empty());
+        assert_eq!(feed.peak_buffered_jobs(), w.total_jobs() as u64);
+        for (want, (got, _)) in newly.iter().enumerate() {
+            assert_eq!(want as u64, *got);
+        }
+    }
+
+    #[test]
+    fn feed_rolls_back_and_stops_on_a_source_error() {
+        let mut feed = TraceFeed::new(
+            Box::new(CsvTrace::from_reader(
+                Cursor::new(&b"0,5\nbroken\n"[..]), "bad.csv".into())),
+            WATERMARK_UNBOUNDED);
+        // The whole refill fails: the 0,5 block it pulled alongside the
+        // broken row is rolled back (its event was never scheduled), so
+        // the buffer only ever holds scheduled blocks.
+        assert!(feed.refill().is_err());
+        assert!(feed.pop_front().is_none());
+        assert!(feed.drained());
+        assert!(feed.refill().unwrap().is_empty());
+        assert_eq!(feed.next_pop_index(), 0);
+    }
+
+    #[test]
+    fn feed_keeps_blocks_scheduled_before_a_later_error() {
+        // Watermark 3: the first refill succeeds with the 0,5 block;
+        // the second hits the broken row and rolls back nothing extra.
+        let mut feed = TraceFeed::new(
+            Box::new(CsvTrace::from_reader(
+                Cursor::new(&b"0,5\nbroken\n"[..]), "bad.csv".into())),
+            3);
+        let newly = feed.refill().unwrap();
+        assert_eq!(newly.len(), 1);
+        assert_eq!(feed.pop_front().map(|b| b.jobs), Some(5));
+        assert!(feed.refill().is_err());
+        assert!(feed.drained());
+    }
+}

@@ -1,0 +1,375 @@
+//! Streaming-ingestion acceptance suite.
+//!
+//! 1. `SynthSource ≡ Workload`: the default run (no explicit source)
+//!    streams the materialized workload through `SynthSource`, and an
+//!    explicitly wrapped source replays digest-identically — one
+//!    submission path, proven, not assumed.
+//! 2. Watermark invariance of outcomes: a bounded look-ahead replays
+//!    byte-identically across all three engines, completes the same
+//!    workload as the unbounded default, and its frontend peak stays
+//!    within watermark + one block (the constant-memory contract).
+//! 3. Trace-driven runs (CSV and generated arrivals) replay
+//!    byte-identically across engines and drain every streamed job.
+//! 4. A malformed trace fails the run with a clean `anyhow` error —
+//!    before or mid-replay — never a panic or a hang.
+//! 5. Dispatcher headroom batching (`max_blocks_per_barrier`) keeps
+//!    per-mode byte-identity and is echoed in the report.
+//!
+//! `EVHC_PROPTEST_CASES` bounds the property case counts as in the
+//! other suites.
+
+use std::io::Cursor;
+
+use evhc::cluster::{DispatchMode, Engine, HybridCluster, RunConfig,
+                    RunReport};
+use evhc::util::proptest::check_n;
+use evhc::util::prng::Prng;
+use evhc::workload::trace::{ArrivalGen, ArrivalProfile, CsvTrace,
+                            SynthSource, WATERMARK_UNBOUNDED};
+
+fn cases(default: u32) -> u32 {
+    std::env::var("EVHC_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn run(cfg: RunConfig) -> Result<RunReport, String> {
+    HybridCluster::new(cfg)
+        .map_err(|e| e.to_string())?
+        .run()
+        .map_err(|e| e.to_string())
+}
+
+fn base_cfg(scale: f64, seed: u64, n_sites: usize,
+            engine: Engine) -> RunConfig {
+    let mut cfg = RunConfig::paper_usecase_sites(scale, seed, n_sites);
+    cfg.inference_every = 0;
+    cfg.engine = engine;
+    cfg
+}
+
+/// Serial reference vs sharded and stealing replays: digests, recorder
+/// transition streams and completion totals must agree, and the serial
+/// run must complete exactly `total` jobs.
+fn three_engine_identity(
+    mk: &dyn Fn(Engine) -> RunConfig,
+    total: u32,
+    what: &str,
+) -> Result<RunReport, String> {
+    let reference = run(mk(Engine::Serial))?;
+    if reference.jobs_completed != total {
+        return Err(format!("{what}: serial completed {}/{total}",
+                           reference.jobs_completed));
+    }
+    if reference.recorder.job_runs.len() != total as usize {
+        return Err(format!(
+            "{what}: serial recorded {} job runs for {total} jobs",
+            reference.recorder.job_runs.len()));
+    }
+    let ref_digest = reference.determinism_digest();
+    for engine in [Engine::Sharded { threads: 0 },
+                   Engine::Stealing { threads: 0 }] {
+        let r = run(mk(engine))?;
+        if r.determinism_digest() != ref_digest {
+            return Err(format!("{what}: {} diverged from serial",
+                               engine.label()));
+        }
+        if r.recorder.transitions_named()
+            != reference.recorder.transitions_named()
+        {
+            return Err(format!("{what}: {} transitions diverged",
+                               engine.label()));
+        }
+    }
+    Ok(reference)
+}
+
+// ---------------------------------------------------------------------
+// SynthSource ≡ Workload
+// ---------------------------------------------------------------------
+
+/// The tentpole equivalence: a run with an explicit
+/// `SynthSource::new(workload)` digests identically to the default run
+/// that streams the same workload implicitly — and, because every run
+/// now goes through the streaming frontend, identically to the
+/// pre-streaming schedule.
+#[test]
+fn synth_source_is_digest_identical_to_the_default_run() {
+    let implicit = run(base_cfg(0.02, 42, 3, Engine::Serial)).unwrap();
+    let mut cfg = base_cfg(0.02, 42, 3, Engine::Serial);
+    let total = cfg.workload.total_jobs();
+    cfg.source = Some(Box::new(SynthSource::new(cfg.workload.clone())));
+    let explicit = run(cfg).unwrap();
+    assert_eq!(explicit.determinism_digest(),
+               implicit.determinism_digest(),
+               "explicit SynthSource diverged from the default run");
+    assert_eq!(implicit.jobs_completed, total);
+    // The unbounded default buffers the whole trace at workload start.
+    assert_eq!(implicit.peak_buffered_jobs, total as u64);
+    assert_eq!(implicit.max_blocks_per_barrier, 1);
+}
+
+/// Randomized SynthSource ≡ default across all three engines, both
+/// dispatch modes.
+#[test]
+fn prop_synth_replay_matches_workload_on_all_engines() {
+    #[derive(Debug)]
+    struct Case {
+        scale: f64,
+        seed: u64,
+        n_sites: usize,
+        partitioned: bool,
+    }
+    let gen = |r: &mut Prng| Case {
+        scale: r.uniform(0.015, 0.04),
+        seed: r.next_u64(),
+        n_sites: 2 + r.next_below(3) as usize,
+        partitioned: r.chance(0.5),
+    };
+    check_n("synth-source ≡ workload", cases(4), gen, |case| {
+        let mk = |engine: Engine, explicit: bool| {
+            let mut cfg = base_cfg(case.scale, case.seed, case.n_sites,
+                                   engine);
+            if case.partitioned {
+                cfg.dispatch = DispatchMode::Partitioned;
+            }
+            if explicit {
+                cfg.source = Some(Box::new(
+                    SynthSource::new(cfg.workload.clone())));
+            }
+            cfg
+        };
+        let total = mk(Engine::Serial, false).workload.total_jobs();
+        let implicit = three_engine_identity(
+            &|e| mk(e, false), total, "implicit")?;
+        let explicit = three_engine_identity(
+            &|e| mk(e, true), total, "explicit synth")?;
+        if explicit.determinism_digest()
+            != implicit.determinism_digest()
+        {
+            return Err("explicit synth diverged from default".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Bounded watermark: identity, completion, memory bound
+// ---------------------------------------------------------------------
+
+/// A small ingest watermark — blocks pulled a few at a time, each pop
+/// triggering the next pull — must stay byte-identical across all
+/// three engines, complete the same workload as the unbounded run, and
+/// keep the frontend's peak within watermark + one block.
+#[test]
+fn bounded_watermark_replays_identically_and_bounds_memory() {
+    let scale = 0.02;
+    let mk = |engine: Engine, watermark: u32| {
+        let mut cfg = base_cfg(scale, 7, 3, engine);
+        cfg.ingest_watermark_jobs = watermark;
+        cfg
+    };
+    let workload = mk(Engine::Serial, 1).workload.clone();
+    let total = workload.total_jobs();
+    let max_block =
+        workload.blocks.iter().map(|b| b.jobs as u64).max().unwrap();
+    let watermark = (total / 8).max(1);
+    let bounded = three_engine_identity(
+        &|e| mk(e, watermark), total, "bounded watermark").unwrap();
+    assert!(bounded.peak_buffered_jobs
+                <= watermark as u64 + max_block,
+            "peak {} exceeds watermark {watermark} + block {max_block}",
+            bounded.peak_buffered_jobs);
+    assert!(bounded.peak_buffered_jobs < total as u64,
+            "a bounded feed must never buffer the whole workload");
+    // Same outcome as the unbounded default (timelines may differ in
+    // event seq numbers, so totals — not digests — are compared).
+    let unbounded = run(mk(Engine::Serial, WATERMARK_UNBOUNDED))
+        .unwrap();
+    assert_eq!(bounded.jobs_completed, unbounded.jobs_completed);
+    assert_eq!(unbounded.peak_buffered_jobs, total as u64);
+}
+
+/// Same property under partitioned dispatch, randomized.
+#[test]
+fn prop_bounded_watermark_partitioned_identity() {
+    #[derive(Debug)]
+    struct Case {
+        scale: f64,
+        seed: u64,
+        n_sites: usize,
+        watermark: u32,
+    }
+    let gen = |r: &mut Prng| Case {
+        scale: r.uniform(0.015, 0.04),
+        seed: r.next_u64(),
+        n_sites: 2 + r.next_below(3) as usize,
+        watermark: 1 + r.next_below(64) as u32,
+    };
+    check_n("bounded watermark (partitioned)", cases(4), gen, |case| {
+        let mk = |engine: Engine| {
+            let mut cfg = base_cfg(case.scale, case.seed, case.n_sites,
+                                   engine);
+            cfg.dispatch = DispatchMode::Partitioned;
+            cfg.ingest_watermark_jobs = case.watermark;
+            cfg
+        };
+        let total = mk(Engine::Serial).workload.total_jobs();
+        let r = three_engine_identity(&mk, total, "bounded-part")?;
+        let workload = mk(Engine::Serial).workload.clone();
+        let max_block =
+            workload.blocks.iter().map(|b| b.jobs as u64).max()
+                .unwrap();
+        if r.peak_buffered_jobs > case.watermark as u64 + max_block {
+            return Err(format!(
+                "peak {} exceeds watermark {} + block {max_block}",
+                r.peak_buffered_jobs, case.watermark));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Trace-driven runs: CSV and generated arrivals
+// ---------------------------------------------------------------------
+
+const SAMPLE_CSV: &str = "arrival_secs,jobs\n\
+    0,30\n30,10\n# mid-trace comment\n60,25\n240,40\n600,45\n";
+const SAMPLE_CSV_JOBS: u32 = 150;
+
+fn csv_source() -> CsvTrace<Cursor<&'static [u8]>> {
+    CsvTrace::from_reader(Cursor::new(SAMPLE_CSV.as_bytes()),
+                          "sample.csv".into())
+}
+
+/// A CSV trace replaces the synthetic workload: all three engines
+/// replay it byte-identically and complete exactly the streamed jobs.
+#[test]
+fn csv_trace_replays_byte_identically_on_all_engines() {
+    for watermark in [WATERMARK_UNBOUNDED, 32] {
+        let mk = |engine: Engine| {
+            let mut cfg = base_cfg(0.02, 11, 3, engine);
+            cfg.source = Some(Box::new(csv_source()));
+            cfg.ingest_watermark_jobs = watermark;
+            cfg
+        };
+        let r = three_engine_identity(&mk, SAMPLE_CSV_JOBS,
+                                      "csv trace").unwrap();
+        assert_eq!(r.jobs_completed, SAMPLE_CSV_JOBS);
+    }
+}
+
+/// A generated burst/diurnal arrival process streams deterministically:
+/// three-engine identity, exact completion, bounded look-ahead.
+#[test]
+fn generated_arrivals_replay_byte_identically_on_all_engines() {
+    let total = 200u32;
+    let profile = ArrivalProfile {
+        base_rate: 2.0,
+        window_s: 30.0,
+        ..ArrivalProfile::default()
+    };
+    let mk = |engine: Engine| {
+        let mut cfg = base_cfg(0.02, 13, 3, engine);
+        cfg.dispatch = DispatchMode::Partitioned;
+        cfg.source = Some(Box::new(
+            ArrivalGen::new(13, total as u64, profile).unwrap()));
+        cfg.ingest_watermark_jobs = 48;
+        cfg
+    };
+    let r = three_engine_identity(&mk, total, "generated arrivals")
+        .unwrap();
+    assert_eq!(r.jobs_completed, total);
+    assert!(r.peak_buffered_jobs < total as u64,
+            "look-ahead must stay bounded below the trace total");
+}
+
+// ---------------------------------------------------------------------
+// Malformed traces fail the run cleanly
+// ---------------------------------------------------------------------
+
+fn bad_csv(text: &'static str) -> CsvTrace<Cursor<&'static [u8]>> {
+    CsvTrace::from_reader(Cursor::new(text.as_bytes()),
+                          "broken.csv".into())
+}
+
+/// A trace that fails on the very first pull (empty / malformed head)
+/// surfaces as a clean error from `run()` — never a panic.
+#[test]
+fn malformed_trace_fails_the_run_before_submission() {
+    for text in ["", "# comments only\n", "not,a,row\n",
+                 "60,10\n30,4\n"] {
+        let mut cfg = base_cfg(0.02, 17, 2, Engine::Serial);
+        cfg.source = Some(Box::new(bad_csv(text)));
+        let Err(err) = run(cfg) else {
+            panic!("malformed trace {text:?} must fail the run");
+        };
+        assert!(err.contains("trace source failed"),
+                "unexpected error for {text:?}: {err}");
+    }
+}
+
+/// A trace that breaks *mid-replay* (first block parsed and submitted,
+/// second row malformed under a small watermark) still fails the run
+/// cleanly after draining what was already scheduled.
+#[test]
+fn mid_replay_trace_error_fails_the_run_cleanly() {
+    let mut cfg = base_cfg(0.02, 19, 2, Engine::Serial);
+    cfg.source = Some(Box::new(bad_csv("0,5\n30,bogus\n")));
+    cfg.ingest_watermark_jobs = 4; // first refill stops after row 1
+    let Err(err) = run(cfg) else {
+        panic!("mid-replay trace error must fail the run");
+    };
+    assert!(err.contains("trace source failed"), "{err}");
+    assert!(err.contains("line 2"),
+            "error should name the broken row: {err}");
+}
+
+// ---------------------------------------------------------------------
+// Headroom batching
+// ---------------------------------------------------------------------
+
+/// `max_blocks_per_barrier > 1` keeps three-engine byte-identity under
+/// partitioned dispatch and is echoed in the report; the centralized
+/// mode ignores (but still echoes) the knob.
+#[test]
+fn headroom_batching_keeps_identity_and_is_reported() {
+    let mk = |engine: Engine, k: u32| {
+        let mut cfg = base_cfg(0.03, 29, 3, engine);
+        cfg.dispatch = DispatchMode::Partitioned;
+        cfg.dispatch_cfg.max_blocks_per_barrier = k;
+        cfg
+    };
+    let total = mk(Engine::Serial, 4).workload.total_jobs();
+    let r = three_engine_identity(&|e| mk(e, 4), total,
+                                  "headroom k=4").unwrap();
+    assert_eq!(r.max_blocks_per_barrier, 4);
+    assert_eq!(r.jobs_completed, total);
+    // Each k is individually deterministic (replay check).
+    let again = run(mk(Engine::Serial, 4)).unwrap();
+    assert_eq!(again.determinism_digest(), r.determinism_digest());
+    // k = 1 is the classic route and the default echo.
+    let classic = run(mk(Engine::Serial, 1)).unwrap();
+    assert_eq!(classic.max_blocks_per_barrier, 1);
+    assert_eq!(classic.jobs_completed, total);
+}
+
+/// Batched routing composes with a bounded streaming watermark: the
+/// full stack (trace feed + batched leases) stays byte-identical on
+/// all engines and drains every job.
+#[test]
+fn batched_routing_with_bounded_watermark_drains_everything() {
+    let mk = |engine: Engine| {
+        let mut cfg = base_cfg(0.025, 37, 3, engine);
+        cfg.dispatch = DispatchMode::Partitioned;
+        cfg.dispatch_cfg.max_blocks_per_barrier = 3;
+        cfg.ingest_watermark_jobs = 16;
+        cfg
+    };
+    let total = mk(Engine::Serial).workload.total_jobs();
+    let r = three_engine_identity(&mk, total, "batched+bounded")
+        .unwrap();
+    assert_eq!(r.jobs_completed, total);
+    assert_eq!(r.max_blocks_per_barrier, 3);
+}
